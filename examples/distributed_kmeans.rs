@@ -1,0 +1,44 @@
+//! Distributed Lloyd's algorithm with quantized uplink — the paper's
+//! Figure 2 scenario on the MNIST-like dataset (d = 1024, 10 clients,
+//! 10 centers), comparing uniform / rotated / variable-length protocols.
+//!
+//! ```bash
+//! cargo run --release --offline --example distributed_kmeans
+//! ```
+
+use dme::apps::kmeans::{self, KMeansConfig};
+use dme::bench::print_table;
+use dme::data::synthetic;
+use dme::protocol::config::ProtocolConfig;
+
+fn main() -> anyhow::Result<()> {
+    let data = synthetic::mnist_like(600, 7);
+    let d = data.dim;
+    let cfg = KMeansConfig { n_centers: 10, n_clients: 10, iters: 8, seed: 17 };
+    println!(
+        "distributed k-means on {} ({} points, {} clients, {} centers, {} iters)",
+        data.name, data.len(), cfg.n_clients, cfg.n_centers, cfg.iters
+    );
+
+    let mut rows = Vec::new();
+    for spec in ["float32", "klevel:k=16", "rotated:k=16", "varlen:k=16"] {
+        let proto = ProtocolConfig::parse(spec, d)?.build()?;
+        let name = proto.name();
+        let result = kmeans::run(&data.rows, proto, &cfg)?;
+        let last = result.rounds.last().unwrap();
+        rows.push(vec![
+            name,
+            format!("{:.2}", last.objective),
+            format!("{:.2}", result.bits_per_dim_per_iter),
+            format!("{:.1}", last.cum_bits as f64 / 1e3),
+        ]);
+    }
+    print_table(
+        "k-means objective vs communication (Figure 2 scenario)",
+        &["protocol", "final objective", "bits/dim/iter", "total kbits"],
+        &rows,
+    );
+    println!("\nSame objective at a fraction of float32's bits — and rotated/");
+    println!("varlen beat plain k-level at equal (or lower) communication.");
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Quickstart: estimate a distributed mean with every protocol and compare
+//! measured MSE against the paper's analytic bounds.
+//!
+//! ```bash
+//! cargo run --release --offline --example quickstart
+//! ```
+
+use dme::bench::print_table;
+use dme::data::synthetic;
+use dme::protocol::config::ProtocolConfig;
+use dme::protocol::{run_round, RoundCtx};
+use dme::stats;
+
+fn main() -> anyhow::Result<()> {
+    let d = 256;
+    let n = 100;
+    let trials = 20;
+    let seed = 42;
+
+    let data = synthetic::gaussian(n, d, seed);
+    let truth = stats::true_mean(&data.rows);
+    let avg_sq = stats::avg_norm_sq(&data.rows);
+    println!("distributed mean estimation: n={n} clients, d={d}, {trials} trials");
+    println!("data: {} (avg ||x||^2 = {avg_sq:.1})", data.name);
+
+    let specs = [
+        "float32",
+        "binary",
+        "klevel:k=16",
+        "rotated:k=16",
+        "varlen:k=17",
+        "varlen:k=17,coder=huffman",
+        "rotated:k=16,p=0.25",
+    ];
+
+    let mut rows = Vec::new();
+    for spec in specs {
+        let proto = ProtocolConfig::parse(spec, d)?.build()?;
+        let mut err = stats::Running::new();
+        let mut bits = stats::Running::new();
+        for t in 0..trials {
+            let ctx = RoundCtx::new(t, seed);
+            let (est, b) = run_round(proto.as_ref(), &ctx, &data.rows)?;
+            err.push(stats::sq_error(&est, &truth));
+            bits.push(b as f64);
+        }
+        let bound = proto
+            .mse_bound(n, avg_sq)
+            .map(|b| format!("{b:.3e}"))
+            .unwrap_or_else(|| "--".into());
+        rows.push(vec![
+            proto.name(),
+            format!("{:.3e}", err.mean()),
+            bound,
+            format!("{:.2}", bits.mean() / (n * d) as f64),
+        ]);
+    }
+    print_table(
+        "quickstart: MSE vs communication",
+        &["protocol", "measured MSE", "paper bound", "bits/dim/client"],
+        &rows,
+    );
+    println!("\nNote how rotated & varlen reach far lower MSE than binary at");
+    println!("comparable bits/dim — the paper's headline result (Thms 2-4).");
+    Ok(())
+}

@@ -1,0 +1,149 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> HLO text artifacts for Rust.
+
+Emits HLO *text*, NOT a serialized HloModuleProto: jax >= 0.5 writes protos
+with 64-bit instruction ids which the xla crate's xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/load_hlo/).
+
+Run as `python -m compile.aot --out-dir ../artifacts` (the Makefile's
+`artifacts` target). Python runs ONCE here, at build time; the Rust binary
+is self-contained afterwards.
+
+Artifact naming: <entry>_d<d>.hlo.txt, plus manifest.tsv (machine-read by
+rust/src/runtime/artifacts.rs) and manifest.json (for humans).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Dimension variants compiled into artifacts. 16/64 are for fast unit /
+# integration tests; 256 = Figure 1, 512 = CIFAR-like, 1024 = MNIST-like.
+DIMS = (16, 64, 256, 512, 1024)
+# Server-side decode batch: rows per decode_sum execution; the Rust side
+# zero-pads the final partial batch (zero rows dequantize to xmin=s=0 -> 0).
+DECODE_B = 8
+F32 = jnp.float32
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def entries_for_dim(d):
+    """(name, fn, arg_specs) for every entry point at dimension d."""
+    scal = _spec(1, 1)
+    return [
+        (
+            f"rotate_fwd_d{d}",
+            lambda x, sign: (model.rotate_fwd(x, sign),),
+            (_spec(1, d), _spec(d)),
+        ),
+        (
+            f"rotate_inv_d{d}",
+            lambda z, sign: (model.rotate_inv(z, sign),),
+            (_spec(1, d), _spec(d)),
+        ),
+        (
+            f"quantize_minmax_d{d}",
+            lambda x, u, km1: model.quantize_minmax(x, u, km1),
+            (_spec(1, d), _spec(1, d), scal),
+        ),
+        (
+            f"quantize_norm_d{d}",
+            lambda x, u, km1: model.quantize_norm(x, u, km1),
+            (_spec(1, d), _spec(1, d), scal),
+        ),
+        (
+            f"encode_rotated_d{d}",
+            lambda x, sign, u, km1: model.encode_rotated(x, sign, u, km1),
+            (_spec(1, d), _spec(d), _spec(1, d), scal),
+        ),
+        (
+            f"decode_sum_d{d}",
+            lambda bins, xmin, s, km1: (model.decode_sum(bins, xmin, s, km1),),
+            (_spec(DECODE_B, d), _spec(DECODE_B, 1), _spec(DECODE_B, 1), scal),
+        ),
+        (
+            f"decode_rotated_mean_d{d}",
+            lambda bins, xmin, s, km1, sign, inv_n: (
+                model.decode_rotated_mean(bins, xmin, s, km1, sign, inv_n),
+            ),
+            (
+                _spec(DECODE_B, d),
+                _spec(DECODE_B, 1),
+                _spec(DECODE_B, 1),
+                scal,
+                _spec(d),
+                scal,
+            ),
+        ),
+    ]
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(out_dir, dims=DIMS, verbose=True):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+    for d in dims:
+        for name, fn, specs in entries_for_dim(d):
+            lowered = jax.jit(fn).lower(*specs)
+            text = to_hlo_text(lowered)
+            fname = f"{name}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            n_out = len(jax.eval_shape(fn, *specs))
+            manifest.append(
+                {
+                    "name": name,
+                    "file": fname,
+                    "dim": d,
+                    "inputs": [list(s.shape) for s in specs],
+                    "num_outputs": n_out,
+                }
+            )
+            if verbose:
+                print(f"lowered {name}: {len(text)} chars, {n_out} outputs")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    # TSV twin for the Rust loader (no JSON parser dependency):
+    # name \t file \t dim \t num_outputs \t shape;shape;...
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        for m in manifest:
+            shapes = ";".join(",".join(str(x) for x in s) for s in m["inputs"])
+            f.write(f"{m['name']}\t{m['file']}\t{m['dim']}\t{m['num_outputs']}\t{shapes}\n")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--dims", default=",".join(str(d) for d in DIMS),
+        help="comma-separated power-of-two dims to compile",
+    )
+    args = ap.parse_args()
+    dims = tuple(int(x) for x in args.dims.split(","))
+    manifest = lower_all(args.out_dir, dims)
+    # Stamp file is the Makefile's freshness witness.
+    with open(os.path.join(args.out_dir, ".stamp"), "w") as f:
+        f.write(f"{len(manifest)} artifacts\n")
+    print(f"wrote {len(manifest)} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""L1: Pallas kernels for the paper's compute hot-spots.
+
+- hadamard: blocked fast Walsh-Hadamard transform (the R = HD rotation).
+- quantize: stochastic k-level quantization / dequantization.
+- ref: pure-jnp oracles the kernels are tested against.
+"""
+
+from . import hadamard, quantize, ref  # noqa: F401

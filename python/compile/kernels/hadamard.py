@@ -1,0 +1,74 @@
+"""L1 Pallas kernel: blocked fast Walsh-Hadamard transform (FWHT).
+
+The paper's structured rotation is R = HD (Section 3): a Rademacher
+diagonal followed by a Walsh-Hadamard transform, applied in O(d log d).
+This kernel performs the *unnormalized* FWHT over the last axis of a
+(batch, d) block; the caller multiplies by 1/sqrt(d) to make it
+orthonormal (see model.rotate_fwd / rotate_inv).
+
+TPU mapping (DESIGN.md "Hardware adaptation"): each (block_b, d) tile is
+loaded into VMEM once, all log2(d) butterfly stages run on the tile while
+resident, and the tile is written back once -- a single HBM round trip per
+vector instead of one per stage. There is no matmul in this op, so the MXU
+is idle by design; the kernel is memory-bandwidth bound and its roofline is
+estimated from the VMEM footprint in DESIGN.md.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, and all artifacts in this repo target the CPU client.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fwht_tile(x):
+    """Unnormalized FWHT of a (b, d) tile, d a power of two.
+
+    The python loop unrolls the log2(d) butterfly stages at trace time;
+    each stage pairs lanes h apart: (a, b) -> (a + b, a - b).
+    """
+    b, d = x.shape
+    h = 1
+    while h < d:
+        x = x.reshape(b, d // (2 * h), 2, h)
+        lo = x[:, :, 0, :]
+        hi = x[:, :, 1, :]
+        x = jnp.stack([lo + hi, lo - hi], axis=2)
+        h *= 2
+    return x.reshape(b, d)
+
+
+def _fwht_kernel(x_ref, o_ref):
+    o_ref[...] = _fwht_tile(x_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def fwht(x, block_b=None):
+    """Unnormalized fast Walsh-Hadamard transform over the last axis.
+
+    Args:
+      x: (batch, d) float array; d must be a power of two.
+      block_b: rows per VMEM tile (defaults to the whole batch; the
+        batch sizes used by the AOT entry points are small).
+
+    Returns:
+      (batch, d) array, H @ x[i] for each row i (H entries are +-1).
+    """
+    batch, d = x.shape
+    if d & (d - 1) != 0:
+        raise ValueError(f"FWHT needs power-of-two d, got {d}")
+    if block_b is None:
+        block_b = batch
+    if batch % block_b != 0:
+        raise ValueError(f"batch {batch} not divisible by block_b {block_b}")
+    return pl.pallas_call(
+        _fwht_kernel,
+        grid=(batch // block_b,),
+        in_specs=[pl.BlockSpec((block_b, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, d), x.dtype),
+        interpret=True,
+    )(x)

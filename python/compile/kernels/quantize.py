@@ -1,0 +1,97 @@
+"""L1 Pallas kernels: stochastic k-level quantization and dequantization.
+
+Section 2.2 of the paper: coordinate j of client i is rounded onto the
+uniform grid B_i(r) = X_i^min + r * s_i / (k - 1), r in [0, k), landing on
+the upper neighbour with probability proportional to the within-bin offset,
+so that E[Y_i(j)] = X_i(j) (unbiased).
+
+Randomness is an *input* (a (batch, d) tensor of uniforms in [0, 1)):
+the Rust coordinator generates it from its private per-client streams, so
+runs are reproducible end-to-end and Python never owns RNG state on the
+request path.
+
+k arrives as a runtime scalar (shape (1, 1)) so one artifact serves every
+quantization level; only the dimension d is baked into the HLO.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quantize_kernel(x_ref, u_ref, xmin_ref, s_ref, km1_ref, bins_ref):
+    x = x_ref[...]
+    u = u_ref[...]
+    xmin = xmin_ref[...]  # (b, 1), broadcasts over d
+    s = s_ref[...]  # (b, 1)
+    km1 = km1_ref[0, 0]  # scalar: k - 1 as float
+    # Guard s == 0 (constant vector): every coordinate sits on bin 0.
+    inv = jnp.where(s > 0, km1 / jnp.where(s > 0, s, 1.0), 0.0)
+    t = (x - xmin) * inv
+    lo = jnp.clip(jnp.floor(t), 0.0, km1 - 1.0)
+    frac = t - lo
+    b = lo + (u < frac).astype(x.dtype)
+    bins_ref[...] = jnp.clip(b, 0.0, km1)
+
+
+def _dequantize_kernel(bins_ref, xmin_ref, s_ref, km1_ref, y_ref):
+    bins = bins_ref[...]
+    xmin = xmin_ref[...]
+    s = s_ref[...]
+    km1 = km1_ref[0, 0]
+    y_ref[...] = xmin + bins * (s / km1)
+
+
+def _call_rowwise(kernel, outs_dtype, x_like, args, block_b=None):
+    batch, d = x_like.shape
+    if block_b is None:
+        block_b = batch
+    row_spec = pl.BlockSpec((block_b, d), lambda i: (i, 0))
+    par_spec = pl.BlockSpec((block_b, 1), lambda i: (i, 0))
+    scal_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    specs = []
+    for a in args:
+        if a.shape == x_like.shape:
+            specs.append(row_spec)
+        elif a.shape == (batch, 1):
+            specs.append(par_spec)
+        elif a.shape == (1, 1):
+            specs.append(scal_spec)
+        else:
+            raise ValueError(f"unexpected operand shape {a.shape}")
+    return pl.pallas_call(
+        kernel,
+        grid=(batch // block_b,),
+        in_specs=specs,
+        out_specs=row_spec,
+        out_shape=jax.ShapeDtypeStruct((batch, d), outs_dtype),
+        interpret=True,
+    )(*args)
+
+
+@jax.jit
+def quantize_bins(x, u, xmin, s, km1):
+    """Stochastic k-level bin assignment.
+
+    Args:
+      x: (batch, d) values to quantize.
+      u: (batch, d) iid uniforms in [0, 1) (private randomness).
+      xmin: (batch, 1) grid origin per row (usually row min).
+      s: (batch, 1) grid span per row; the grid covers [xmin, xmin + s].
+        Must satisfy xmin + s >= row max (Theorem 2's condition).
+      km1: (1, 1) float, k - 1 (number of grid cells).
+
+    Returns:
+      (batch, d) float array of integral bin indices in [0, k-1].
+      (float-typed: d <= 2^23 and k <= 2^23 keep them exact; the Rust
+      side casts to integers for entropy coding.)
+    """
+    return _call_rowwise(_quantize_kernel, x.dtype, x, (x, u, xmin, s, km1))
+
+
+@jax.jit
+def dequantize(bins, xmin, s, km1):
+    """Inverse of quantize_bins: Y(j) = xmin + bins(j) * s / (k - 1)."""
+    return _call_rowwise(_dequantize_kernel, bins.dtype, bins, (bins, xmin, s, km1))

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness references: every Pallas kernel is checked
+against the function of the same name here (pytest + hypothesis sweeps in
+python/tests/). They are written in the most literal style possible --
+no fusion tricks, no reshape butterflies -- so bugs do not co-vary.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def hadamard_matrix(d):
+    """Dense Walsh-Hadamard matrix (Sylvester construction), entries +-1."""
+    if d & (d - 1) != 0:
+        raise ValueError(f"d must be a power of two, got {d}")
+    h = np.array([[1.0]])
+    while h.shape[0] < d:
+        h = np.block([[h, h], [h, -h]])
+    return jnp.asarray(h, dtype=jnp.float32)
+
+
+def fwht(x):
+    """Unnormalized Walsh-Hadamard transform via the dense matrix."""
+    d = x.shape[-1]
+    return x @ hadamard_matrix(d).T
+
+
+def rotate_fwd(x, sign):
+    """z = (1/sqrt(d)) H (D x) -- the paper's R = HD, orthonormal."""
+    d = x.shape[-1]
+    return fwht(x * sign) / jnp.sqrt(float(d))
+
+
+def rotate_inv(z, sign):
+    """x = D^-1 H^-1 z = D (1/sqrt(d)) H z (H symmetric, D = D^-1)."""
+    d = z.shape[-1]
+    return sign * (fwht(z) / jnp.sqrt(float(d)))
+
+
+def quantize_bins(x, u, xmin, s, km1):
+    """Literal transcription of Section 2.2's stochastic rounding."""
+    km1 = jnp.asarray(km1).reshape(())
+    safe_s = jnp.where(s > 0, s, 1.0)
+    t = jnp.where(s > 0, (x - xmin) / safe_s * km1, 0.0)
+    lo = jnp.clip(jnp.floor(t), 0.0, km1 - 1.0)
+    frac = t - lo
+    b = lo + (u < frac).astype(x.dtype)
+    return jnp.clip(b, 0.0, km1)
+
+
+def dequantize(bins, xmin, s, km1):
+    km1 = jnp.asarray(km1).reshape(())
+    return xmin + bins * (s / km1)
+
+
+def decode_sum(bins, xmin, s, km1):
+    """Sum of dequantized rows: the server-side accumulation primitive."""
+    return jnp.sum(dequantize(bins, xmin, s, km1), axis=0)

@@ -1,0 +1,199 @@
+"""Kernel-vs-oracle tests: the CORE correctness signal for L1.
+
+Every Pallas kernel is checked against the literal pure-jnp oracle in
+kernels/ref.py, both on fixed cases and under hypothesis sweeps over
+shapes, dtypes-compatible value ranges, and RNG seeds.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import hadamard, quantize, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+DIMS = [2, 4, 16, 64, 256]
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# FWHT kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d", DIMS)
+@pytest.mark.parametrize("batch", [1, 3, 8])
+def test_fwht_matches_dense_reference(d, batch):
+    rng = np.random.default_rng(42 + d + batch)
+    x = _rand(rng, batch, d)
+    got = hadamard.fwht(x)
+    want = ref.fwht(x)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("block_b", [1, 2, 4])
+def test_fwht_blocked_grid_matches_unblocked(block_b):
+    rng = np.random.default_rng(7)
+    x = _rand(rng, 8, 64)
+    got = hadamard.fwht(x, block_b=block_b)
+    want = hadamard.fwht(x)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_fwht_is_self_inverse_up_to_d():
+    """H H = d I for the unnormalized transform."""
+    rng = np.random.default_rng(0)
+    x = _rand(rng, 4, 128)
+    twice = hadamard.fwht(hadamard.fwht(x))
+    np.testing.assert_allclose(twice, 128.0 * x, rtol=1e-4, atol=1e-3)
+
+
+def test_fwht_preserves_norm_when_normalized():
+    rng = np.random.default_rng(1)
+    x = _rand(rng, 4, 256)
+    z = hadamard.fwht(x) / jnp.sqrt(256.0)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(z, axis=1), jnp.linalg.norm(x, axis=1), rtol=1e-5
+    )
+
+
+def test_fwht_rejects_non_power_of_two():
+    with pytest.raises(ValueError, match="power-of-two"):
+        hadamard.fwht(jnp.zeros((1, 24)))
+
+
+def test_fwht_rejects_bad_block():
+    with pytest.raises(ValueError, match="divisible"):
+        hadamard.fwht(jnp.zeros((3, 16)), block_b=2)
+
+
+@hypothesis.given(
+    log_d=st.integers(min_value=1, max_value=8),
+    batch=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    scale=st.floats(min_value=1e-3, max_value=1e3),
+)
+@hypothesis.settings(max_examples=30, deadline=None)
+def test_fwht_hypothesis_sweep(log_d, batch, seed, scale):
+    d = 2**log_d
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, batch, d) * scale
+    got = hadamard.fwht(x)
+    want = ref.fwht(x)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3 * scale)
+
+
+# ---------------------------------------------------------------------------
+# Quantization kernels
+# ---------------------------------------------------------------------------
+
+
+def _quant_args(rng, batch, d, k, span="minmax"):
+    x = _rand(rng, batch, d)
+    u = jnp.asarray(rng.uniform(size=(batch, d)), dtype=jnp.float32)
+    xmin = jnp.min(x, axis=1, keepdims=True)
+    if span == "minmax":
+        s = jnp.max(x, axis=1, keepdims=True) - xmin
+    else:
+        s = jnp.sqrt(2.0) * jnp.linalg.norm(x, axis=1, keepdims=True)
+    km1 = jnp.full((1, 1), float(k - 1), dtype=jnp.float32)
+    return x, u, xmin, s, km1
+
+
+@pytest.mark.parametrize("k", [2, 3, 16, 33])
+@pytest.mark.parametrize("span", ["minmax", "norm"])
+def test_quantize_matches_reference(k, span):
+    rng = np.random.default_rng(5 + k)
+    x, u, xmin, s, km1 = _quant_args(rng, 4, 64, k, span)
+    got = quantize.quantize_bins(x, u, xmin, s, km1)
+    want = ref.quantize_bins(x, u, xmin, s, km1)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("k", [2, 16])
+def test_quantize_bins_are_integral_in_range(k):
+    rng = np.random.default_rng(11)
+    x, u, xmin, s, km1 = _quant_args(rng, 8, 128, k)
+    bins = np.asarray(quantize.quantize_bins(x, u, xmin, s, km1))
+    assert np.all(bins == np.round(bins))
+    assert bins.min() >= 0.0
+    assert bins.max() <= k - 1
+
+
+def test_quantize_constant_vector_is_safe():
+    """s == 0 (constant row) must not divide by zero; bins are all 0."""
+    x = jnp.full((2, 16), 3.25, dtype=jnp.float32)
+    u = jnp.full((2, 16), 0.5, dtype=jnp.float32)
+    xmin = jnp.full((2, 1), 3.25, dtype=jnp.float32)
+    s = jnp.zeros((2, 1), dtype=jnp.float32)
+    km1 = jnp.full((1, 1), 15.0, dtype=jnp.float32)
+    bins = np.asarray(quantize.quantize_bins(x, u, xmin, s, km1))
+    assert np.all(np.isfinite(bins))
+    assert np.all(bins == 0.0)
+
+
+def test_dequantize_matches_reference():
+    rng = np.random.default_rng(3)
+    x, u, xmin, s, km1 = _quant_args(rng, 4, 64, 16)
+    bins = quantize.quantize_bins(x, u, xmin, s, km1)
+    got = quantize.dequantize(bins, xmin, s, km1)
+    want = ref.dequantize(bins, xmin, s, km1)
+    # rtol loose enough for f32 multiply-order differences between the
+    # pallas interpreter and plain jnp (observed ~4e-6 relative).
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+
+def test_dequantize_error_bounded_by_bin_width():
+    """|Y - X| <= s/(k-1) per coordinate (the rounding never leaves its bin)."""
+    rng = np.random.default_rng(13)
+    k = 8
+    x, u, xmin, s, km1 = _quant_args(rng, 8, 256, k)
+    bins = quantize.quantize_bins(x, u, xmin, s, km1)
+    y = quantize.dequantize(bins, xmin, s, km1)
+    width = np.asarray(s) / (k - 1)
+    assert np.all(np.abs(np.asarray(y - x)) <= width + 1e-5)
+
+
+def test_quantize_is_unbiased_monte_carlo():
+    """E[Y] = X (Section 2.2): Monte-Carlo over the private uniforms."""
+    rng = np.random.default_rng(17)
+    d, k, trials = 32, 4, 4000
+    x = _rand(rng, 1, d)
+    xmin = jnp.min(x, axis=1, keepdims=True)
+    s = jnp.max(x, axis=1, keepdims=True) - xmin
+    km1 = jnp.full((1, 1), float(k - 1), dtype=jnp.float32)
+    xt = jnp.tile(x, (trials, 1))
+    u = jnp.asarray(rng.uniform(size=(trials, d)), dtype=jnp.float32)
+    bins = quantize.quantize_bins(xt, u, jnp.tile(xmin, (trials, 1)), jnp.tile(s, (trials, 1)), km1)
+    y = quantize.dequantize(bins, jnp.tile(xmin, (trials, 1)), jnp.tile(s, (trials, 1)), km1)
+    mean = np.asarray(jnp.mean(y, axis=0))
+    width = float(s[0, 0]) / (k - 1)
+    # std of mean <= width/2/sqrt(trials); 5 sigma margin
+    tol = 5 * width / 2 / np.sqrt(trials)
+    np.testing.assert_allclose(mean, np.asarray(x)[0], atol=tol)
+
+
+@hypothesis.given(
+    log_d=st.integers(min_value=1, max_value=7),
+    batch=st.integers(min_value=1, max_value=4),
+    k=st.integers(min_value=2, max_value=64),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    span=st.sampled_from(["minmax", "norm"]),
+)
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_quantize_hypothesis_sweep(log_d, batch, k, seed, span):
+    d = 2**log_d
+    rng = np.random.default_rng(seed)
+    x, u, xmin, s, km1 = _quant_args(rng, batch, d, k, span)
+    got = quantize.quantize_bins(x, u, xmin, s, km1)
+    want = ref.quantize_bins(x, u, xmin, s, km1)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    y = np.asarray(quantize.dequantize(got, xmin, s, km1))
+    assert np.all(np.isfinite(y))

@@ -1,0 +1,157 @@
+"""L2 model-graph tests: rotation algebra, protocol-level invariants,
+and the paper's analytic bounds checked end-to-end in JAX."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def _sign(rng, d):
+    return jnp.asarray(rng.choice([-1.0, 1.0], size=d), dtype=jnp.float32)
+
+
+def _x(rng, b, d, scale=1.0):
+    return jnp.asarray(rng.standard_normal((b, d)) * scale, dtype=jnp.float32)
+
+
+@pytest.mark.parametrize("d", [4, 64, 256])
+def test_rotation_roundtrip_is_identity(d):
+    rng = np.random.default_rng(d)
+    x = _x(rng, 3, d)
+    sign = _sign(rng, d)
+    back = model.rotate_inv(model.rotate_fwd(x, sign), sign)
+    np.testing.assert_allclose(back, x, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("d", [16, 256])
+def test_rotation_preserves_norm(d):
+    rng = np.random.default_rng(d + 1)
+    x = _x(rng, 4, d)
+    sign = _sign(rng, d)
+    z = model.rotate_fwd(x, sign)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(z, axis=1), jnp.linalg.norm(x, axis=1), rtol=1e-5
+    )
+
+
+def test_rotation_matches_reference():
+    rng = np.random.default_rng(9)
+    x = _x(rng, 2, 128)
+    sign = _sign(rng, 128)
+    np.testing.assert_allclose(
+        model.rotate_fwd(x, sign), ref.rotate_fwd(x, sign), rtol=1e-4, atol=1e-5
+    )
+    np.testing.assert_allclose(
+        model.rotate_inv(x, sign), ref.rotate_inv(x, sign), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_rotation_shrinks_dynamic_range_on_spiky_input():
+    """Lemma 7's point: after HD, max-min ~ O(sqrt(log d / d)) * ||x||.
+
+    A one-hot vector is the worst case for direct quantization; its
+    rotation is perfectly flat (|z_j| = 1/sqrt(d) for all j)."""
+    d = 1024
+    x = jnp.zeros((1, d), dtype=jnp.float32).at[0, 3].set(1.0)
+    rng = np.random.default_rng(2)
+    sign = _sign(rng, d)
+    z = np.asarray(model.rotate_fwd(x, sign))
+    assert z.max() - z.min() <= 2.0 / np.sqrt(d) + 1e-6
+    assert 1.0 - 1e-4 <= (z.max() - z.min()) * np.sqrt(d) / 2.0 + 1e-4
+
+
+@pytest.mark.parametrize("k", [2, 16])
+def test_quantize_minmax_params(k):
+    rng = np.random.default_rng(k)
+    x = _x(rng, 4, 64)
+    u = jnp.asarray(rng.uniform(size=(4, 64)), dtype=jnp.float32)
+    km1 = jnp.full((1, 1), float(k - 1), dtype=jnp.float32)
+    bins, xmin, s = model.quantize_minmax(x, u, km1)
+    np.testing.assert_allclose(xmin[:, 0], jnp.min(x, axis=1), rtol=1e-6)
+    np.testing.assert_allclose(
+        (xmin + s)[:, 0], jnp.max(x, axis=1), rtol=1e-5, atol=1e-6
+    )
+    assert np.asarray(bins).max() <= k - 1
+
+
+def test_quantize_norm_span_satisfies_theorem2_condition():
+    """xmax - xmin <= s = sqrt(2)||x|| (Eq. 4), so Theorem 2 applies."""
+    rng = np.random.default_rng(21)
+    x = _x(rng, 8, 128)
+    u = jnp.asarray(rng.uniform(size=(8, 128)), dtype=jnp.float32)
+    km1 = jnp.full((1, 1), 15.0, dtype=jnp.float32)
+    _, xmin, s = model.quantize_norm(x, u, km1)
+    rng_span = np.asarray(jnp.max(x, axis=1) - jnp.min(x, axis=1))
+    assert np.all(np.asarray(s)[:, 0] >= rng_span - 1e-5)
+
+
+def test_decode_sum_matches_manual():
+    rng = np.random.default_rng(31)
+    b, d, k = 8, 64, 16
+    bins = jnp.asarray(rng.integers(0, k, size=(b, d)), dtype=jnp.float32)
+    xmin = _x(rng, b, 1)
+    s = jnp.abs(_x(rng, b, 1)) + 0.1
+    km1 = jnp.full((1, 1), float(k - 1), dtype=jnp.float32)
+    got = model.decode_sum(bins, xmin, s, km1)
+    want = jnp.sum(xmin + bins * s / (k - 1), axis=0)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_decode_sum_zero_rows_are_neutral():
+    """Zero-padded rows (bins=xmin=s=0) contribute exactly 0 to the sum --
+    the Rust accumulator relies on this when n is not a multiple of B."""
+    d, k = 32, 8
+    bins = jnp.zeros((4, d), dtype=jnp.float32)
+    xmin = jnp.zeros((4, 1), dtype=jnp.float32)
+    s = jnp.zeros((4, 1), dtype=jnp.float32)
+    km1 = jnp.full((1, 1), float(k - 1), dtype=jnp.float32)
+    out = np.asarray(model.decode_sum(bins, xmin, s, km1))
+    assert np.all(out == 0.0)
+
+
+def test_encode_decode_roundtrip_mse_within_theorem3_bound():
+    """Full pi_srk round trip at d=256, n=8: measured MSE of the mean must
+    satisfy Theorem 3: E <= (2 ln d + 2) / (n (k-1)^2) * avg ||x||^2."""
+    rng = np.random.default_rng(77)
+    n, d, k, trials = 8, 256, 16, 20
+    xs = _x(rng, n, d)
+    avg_sq = float(jnp.mean(jnp.sum(xs * xs, axis=1)))
+    bound = (2 * np.log(d) + 2) / (n * (k - 1) ** 2) * avg_sq
+    km1 = jnp.full((1, 1), float(k - 1), dtype=jnp.float32)
+    errs = []
+    for t in range(trials):
+        sign = _sign(rng, d)
+        ys = []
+        for i in range(n):
+            u = jnp.asarray(rng.uniform(size=(1, d)), dtype=jnp.float32)
+            bins, xmin, s = model.encode_rotated(xs[i : i + 1], sign, u, km1)
+            ys.append(model.decode_sum(bins, xmin, s, km1))
+        zbar = jnp.stack(ys).mean(axis=0)[None, :]
+        est = model.rotate_inv(zbar, sign)[0]
+        err = jnp.sum((est - jnp.mean(xs, axis=0)) ** 2)
+        errs.append(float(err))
+    assert np.mean(errs) <= bound * 1.5  # bound + MC slack
+
+
+def test_decode_rotated_mean_matches_composition():
+    rng = np.random.default_rng(55)
+    b, d, k = 8, 64, 16
+    sign = _sign(rng, d)
+    xs = _x(rng, b, d)
+    u = jnp.asarray(rng.uniform(size=(b, d)), dtype=jnp.float32)
+    km1 = jnp.full((1, 1), float(k - 1), dtype=jnp.float32)
+    z = model.rotate_fwd(xs, sign)
+    xmin = jnp.min(z, axis=1, keepdims=True)
+    s = jnp.max(z, axis=1, keepdims=True) - xmin
+    from compile.kernels import quantize as q
+
+    bins = q.quantize_bins(z, u, xmin, s, km1)
+    inv_n = jnp.full((1, 1), 1.0 / b, dtype=jnp.float32)
+    fused = model.decode_rotated_mean(bins, xmin, s, km1, sign, inv_n)
+    manual = model.rotate_inv(
+        (model.decode_sum(bins, xmin, s, km1) / b)[None, :], sign
+    )[0]
+    np.testing.assert_allclose(fused, manual, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,147 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! 1. Arithmetic vs Huffman coding in π_svk (bits & MSE identical bins).
+//! 2. Span rule s_i = X^max−X^min vs √2‖X‖ in π_sk / π_svk.
+//! 3. Rotation + variable-length combined — §6 argues it cannot help
+//!    (rotation flattens the histogram, killing the entropy gain);
+//!    we measure it.
+//! 4. Histogram header mode: enumerative vs Elias-δ cost on real frames.
+//! 5. Native vs PJRT backend: identical statistics (and the perf gap).
+//!
+//! ```bash
+//! cargo bench --offline --bench ablations
+//! ```
+
+use dme::bench::print_table;
+use dme::coding::{histogram, histogram_entropy_bits};
+use dme::data::synthetic;
+use dme::protocol::config::ProtocolConfig;
+use dme::protocol::quantizer::Span;
+use dme::protocol::varlen::{Coder, VarlenProtocol};
+use dme::protocol::{run_round, Protocol, RoundCtx};
+use dme::report::Report;
+use dme::stats;
+
+fn measure(proto: &dyn Protocol, xs: &[Vec<f32>], trials: u64) -> (f64, f64) {
+    let truth = stats::true_mean(xs);
+    let mut err = stats::Running::new();
+    let mut bits = stats::Running::new();
+    for t in 0..trials {
+        let ctx = RoundCtx::new(t, 3);
+        let (est, b) = run_round(proto, &ctx, xs).unwrap();
+        err.push(stats::sq_error(&est, &truth));
+        bits.push(b as f64 / xs.len() as f64);
+    }
+    (err.mean(), bits.mean())
+}
+
+fn main() -> anyhow::Result<()> {
+    let trials: u64 = std::env::var("DME_TRIALS").ok().and_then(|s| s.parse().ok()).unwrap_or(15);
+    let d = 256;
+    let n = 64;
+    let data = synthetic::gaussian(n, d, 7);
+    let mut report = Report::new("ablations", &["ablation", "variant", "mse", "bits_per_client"]);
+    let mut push = |report: &mut Report, ab: &str, variant: String, mse: f64, bits: f64| {
+        report.push(vec![ab.into(), variant.clone().into(), mse.into(), bits.into()]);
+        vec![ab.to_string(), variant, format!("{mse:.3e}"), format!("{bits:.1}")]
+    };
+    let mut rows = Vec::new();
+
+    // 1. coder
+    for coder in [Coder::Arithmetic, Coder::Huffman] {
+        let p = VarlenProtocol::new(d, 17).with_coder(coder);
+        let (mse, bits) = measure(&p, &data.rows, trials);
+        rows.push(push(&mut report, "coder", p.name(), mse, bits));
+    }
+
+    // 2. span rule
+    for span in [Span::MinMax, Span::Norm] {
+        let p = VarlenProtocol::new(d, 17).with_span(span);
+        let (mse, bits) = measure(&p, &data.rows, trials);
+        rows.push(push(&mut report, "span", format!("varlen {span:?}"), mse, bits));
+    }
+
+    // 3. rotation + varlen combined (the §6 "cannot help" claim): compare
+    //    varlen bits on raw vs rotated vectors via bin entropy.
+    {
+        let raw = VarlenProtocol::new(d, 17);
+        let (mse_raw, bits_raw) = measure(&raw, &data.rows, trials);
+        rows.push(push(&mut report, "rot+varlen", "varlen on raw".into(), mse_raw, bits_raw));
+        // Pre-rotate the data, then varlen (what combining would do).
+        let rot = dme::rotation::Rotation::sample(d, &mut dme::rng::public_stream(5, 0));
+        let rotated: Vec<Vec<f32>> = data.rows.iter().map(|x| rot.forward(x)).collect();
+        let (mse_rot, bits_rot) = measure(&raw, &rotated, trials);
+        rows.push(push(&mut report, "rot+varlen", "varlen on rotated".into(), mse_rot, bits_rot));
+        println!(
+            "Sec.6 check: varlen on rotated data costs {:.1} bits vs {:.1} raw — no gain",
+            bits_rot, bits_raw
+        );
+    }
+
+    // 4. histogram header modes on a representative frame
+    {
+        let k = 17u32;
+        let x = &data.rows[0];
+        let mut u = vec![0.0f32; d];
+        dme::rng::private_stream(1, 0, 0).fill_uniform_f32(&mut u);
+        let q = dme::protocol::quantizer::quantize(x, &u, Span::Norm, k);
+        let mut hist = vec![0u64; k as usize];
+        for &b in &q.bins {
+            hist[b as usize] += 1;
+        }
+        let mut w = dme::coding::BitWriter::new();
+        let hdr_bits = histogram::encode(&mut w, &hist, d as u64)?;
+        let enum_bits = histogram::enumerative_bits(d as u64, k as u64);
+        let entropy = histogram_entropy_bits(&hist) * d as f64;
+        rows.push(vec![
+            "hist header".into(),
+            "picked mode".into(),
+            format!("{hdr_bits} bits"),
+            format!("enum={enum_bits}"),
+        ]);
+        println!(
+            "histogram header: picked {hdr_bits} bits (enumerative {enum_bits}, payload entropy {entropy:.0})"
+        );
+    }
+
+    // 5b. cross-paper comparator: QSGD-style Elias coding (ref [2]) vs
+    //     pi_svk at matched k.
+    for spec in ["qsgd:k=17", "varlen:k=17", "klevel:k=17"] {
+        let proto = ProtocolConfig::parse(spec, d)?.build()?;
+        let (mse, bits) = measure(proto.as_ref(), &data.rows, trials);
+        rows.push(push(&mut report, "vs QSGD", proto.name(), mse, bits));
+    }
+
+    // 5c. coordinate sampling (§5 remark): varlen inner, sweep q.
+    for q in [1.0f64, 0.5, 0.25] {
+        let proto = ProtocolConfig::parse(&format!("varlen:k=17,q={q}"), d)?.build()?;
+        let (mse, bits) = measure(proto.as_ref(), &data.rows, trials);
+        rows.push(push(&mut report, "coord q", proto.name(), mse, bits));
+    }
+
+    // 5. native vs PJRT backend (statistics must match; timing in micro).
+    if dme::runtime::artifacts::Manifest::default_dir().join("manifest.tsv").exists() {
+        if let Ok(pjrt) = dme::runtime::PjrtBackend::new() {
+            let pjrt = std::sync::Arc::new(pjrt) as std::sync::Arc<dyn dme::runtime::ComputeBackend>;
+            for (label, cfg) in [
+                ("native", ProtocolConfig::parse("rotated:k=16", d)?),
+                ("pjrt", ProtocolConfig::parse("rotated:k=16", d)?.with_backend(pjrt)),
+            ] {
+                let proto = cfg.build()?;
+                let (mse, bits) = measure(proto.as_ref(), &data.rows, trials.min(5));
+                rows.push(push(&mut report, "backend", format!("rotated {label}"), mse, bits));
+            }
+        }
+    } else {
+        println!("(skipping backend ablation: run `make artifacts`)");
+    }
+
+    print_table(
+        "Ablations",
+        &["ablation", "variant", "MSE", "bits/client"],
+        &rows,
+    );
+    report.write(dme::report::default_dir())?;
+    println!("\nseries in reports/ablations.{{csv,json}}");
+    Ok(())
+}

@@ -1,0 +1,179 @@
+//! Microbenchmarks of the hot paths (the §Perf numbers in EXPERIMENTS.md):
+//! FWHT, quantization, entropy coders, full protocol encode/decode, PJRT
+//! executable dispatch, and a full coordinator round.
+//!
+//! ```bash
+//! cargo bench --offline --bench micro
+//! ```
+
+use std::sync::Arc;
+
+use dme::bench::Bench;
+use dme::coordinator::leader::spawn_local_cluster;
+use dme::coordinator::worker::mean_update;
+use dme::protocol::config::ProtocolConfig;
+use dme::protocol::quantizer::Span;
+use dme::protocol::{Protocol, RoundCtx};
+use dme::rng::Pcg64;
+use dme::rotation::hadamard;
+use dme::runtime::{ComputeBackend, NativeBackend};
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::new();
+
+    // ---- FWHT (the L1/L3 hot kernel) ----
+    for d in [256usize, 1024, 4096, 16384] {
+        let mut rng = Pcg64::new(d as u64);
+        let mut x = vec![0.0f32; d];
+        rng.fill_gaussian_f32(&mut x);
+        b.run(&format!("fwht d={d}"), Some(d as f64 * 4.0), || {
+            hadamard::fwht(std::hint::black_box(&mut x));
+        });
+    }
+
+    // ---- quantizer ----
+    for d in [1024usize, 16384] {
+        let mut rng = Pcg64::new(1);
+        let mut x = vec![0.0f32; d];
+        let mut u = vec![0.0f32; d];
+        rng.fill_gaussian_f32(&mut x);
+        rng.fill_uniform_f32(&mut u);
+        let mut bins = Vec::new();
+        let (xmin, s) = dme::protocol::quantizer::grid_params(&x, Span::MinMax);
+        b.run(&format!("quantize k=16 d={d}"), Some(d as f64), || {
+            dme::protocol::quantizer::quantize_into(
+                std::hint::black_box(&x),
+                &u,
+                xmin,
+                s,
+                16,
+                &mut bins,
+            );
+        });
+    }
+
+    // ---- entropy coders (bytes/s over the bin payload) ----
+    {
+        let d = 4096;
+        let k = 65u32;
+        let mut rng = Pcg64::new(2);
+        let bins: Vec<u32> = (0..d)
+            .map(|_| {
+                let x = rng.next_f32();
+                ((x * x * k as f32) as u32).min(k - 1)
+            })
+            .collect();
+        let mut hist = vec![0u64; k as usize];
+        for &s in &bins {
+            hist[s as usize] += 1;
+        }
+        let model = dme::coding::arithmetic::CumTable::from_histogram(&hist)?;
+        b.run("arith encode d=4096 k=65", Some(d as f64), || {
+            let mut w = dme::coding::BitWriter::new();
+            dme::coding::arithmetic::encode(&mut w, &model, std::hint::black_box(&bins)).unwrap();
+            std::hint::black_box(w.finish());
+        });
+        let mut w = dme::coding::BitWriter::new();
+        dme::coding::arithmetic::encode(&mut w, &model, &bins)?;
+        let (bytes, bits) = w.finish();
+        let mut out = Vec::new();
+        b.run("arith decode d=4096 k=65", Some(d as f64), || {
+            out.clear();
+            let mut r = dme::coding::BitReader::with_bit_len(&bytes, bits);
+            dme::coding::arithmetic::decode(&mut r, &model, d, &mut out).unwrap();
+        });
+        let code = dme::coding::huffman::HuffmanCode::from_histogram(&hist)?;
+        b.run("huffman encode d=4096 k=65", Some(d as f64), || {
+            let mut w = dme::coding::BitWriter::new();
+            code.encode(&mut w, std::hint::black_box(&bins)).unwrap();
+            std::hint::black_box(w.finish());
+        });
+        let mut w2 = dme::coding::BitWriter::new();
+        code.encode(&mut w2, &bins)?;
+        let (hbytes, hbits) = w2.finish();
+        b.run("huffman decode d=4096 k=65", Some(d as f64), || {
+            out.clear();
+            let mut r = dme::coding::BitReader::with_bit_len(&hbytes, hbits);
+            code.decode(&mut r, d, &mut out).unwrap();
+        });
+    }
+
+    // ---- full protocol encode+decode (client+server cost per vector) ----
+    {
+        let d = 1024;
+        let mut rng = Pcg64::new(3);
+        let mut x = vec![0.0f32; d];
+        rng.fill_gaussian_f32(&mut x);
+        for spec in ["binary", "klevel:k=16", "rotated:k=16", "varlen:k=33"] {
+            let proto = ProtocolConfig::parse(spec, d)?.build()?;
+            let ctx = RoundCtx::new(0, 1);
+            b.run(&format!("{spec} encode d={d}"), Some(d as f64), || {
+                std::hint::black_box(proto.encode(&ctx, 0, std::hint::black_box(&x)));
+            });
+            let frame = proto.encode(&ctx, 0, &x).unwrap();
+            b.run(&format!("{spec} decode d={d}"), Some(d as f64), || {
+                let mut acc = proto.new_accumulator();
+                proto.accumulate(&ctx, std::hint::black_box(&frame), &mut acc).unwrap();
+                std::hint::black_box(acc);
+            });
+        }
+    }
+
+    // ---- backends: native vs PJRT dispatch ----
+    {
+        let d = 1024;
+        let mut rng = Pcg64::new(4);
+        let mut x = vec![0.0f32; d];
+        let mut sign = vec![0.0f32; d];
+        let mut u = vec![0.0f32; d];
+        rng.fill_gaussian_f32(&mut x);
+        rng.fill_rademacher(&mut sign);
+        rng.fill_uniform_f32(&mut u);
+        let native = NativeBackend;
+        b.run("native encode_rotated d=1024 k=16", Some(d as f64), || {
+            std::hint::black_box(native.encode_rotated(&x, &sign, &u, 16).unwrap());
+        });
+        if dme::runtime::artifacts::Manifest::default_dir().join("manifest.tsv").exists() {
+            if let Ok(pjrt) = dme::runtime::PjrtBackend::new() {
+                // warm the executable cache first
+                pjrt.encode_rotated(&x, &sign, &u, 16)?;
+                b.run("pjrt encode_rotated d=1024 k=16", Some(d as f64), || {
+                    std::hint::black_box(pjrt.encode_rotated(&x, &sign, &u, 16).unwrap());
+                });
+            }
+        }
+    }
+
+    // ---- coordinator round throughput (L3 end to end) ----
+    {
+        let d = 1024;
+        let n = 16;
+        let mut rng = Pcg64::new(5);
+        let shards: Vec<Vec<Vec<f32>>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0.0f32; d];
+                rng.fill_gaussian_f32(&mut v);
+                vec![v]
+            })
+            .collect();
+        let proto: Arc<dyn Protocol> =
+            ProtocolConfig::parse("rotated:k=16", d)?.build()?;
+        let (mut leader, handles) = spawn_local_cluster(proto, shards, mean_update(), 9);
+        let mut round = 0u64;
+        b.run(
+            &format!("coordinator round d={d} n={n} rotated"),
+            Some((n * d) as f64),
+            || {
+                leader.round(round, d as u32, &[]).unwrap();
+                round += 1;
+            },
+        );
+        leader.shutdown()?;
+        for h in handles {
+            h.join().unwrap()?;
+        }
+    }
+
+    b.report("microbenchmarks (units/s are elements/s; fwht is bytes/s)");
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Theorem 1 / Corollary 1: the minimax communication–MSE trade-off.
+//!
+//! Protocol: π_svk at k = √d + 1 wrapped with client sampling π_p. For a
+//! communication budget c (set via p), Corollary 1 promises
+//! MSE = O(min(1, d/c)) on the unit ball. We sweep p over two decades and
+//! report the product `MSE · c / d` (× avg‖X‖²⁻¹ normalization), which
+//! Theorem 1 says is Θ(1) — the paper's "product of communication cost and
+//! MSE scales linearly in d".
+//!
+//! ```bash
+//! cargo bench --offline --bench minimax_tradeoff
+//! ```
+
+use std::sync::Arc;
+
+use dme::bench::print_table;
+use dme::data::synthetic;
+use dme::protocol::config::ProtocolConfig;
+use dme::protocol::sampling::SampledProtocol;
+use dme::protocol::{run_round, RoundCtx};
+use dme::report::Report;
+use dme::stats;
+
+fn main() -> anyhow::Result<()> {
+    let d = 256;
+    let n = 256;
+    let trials: u64 = std::env::var("DME_TRIALS").ok().and_then(|s| s.parse().ok()).unwrap_or(30);
+    // Unit-ball data (the minimax setting): uniform on the sphere.
+    let data = synthetic::unit_sphere(n, d, 11);
+    let truth = stats::true_mean(&data.rows);
+    let avg = stats::avg_norm_sq(&data.rows); // = 1
+
+    let mut report = Report::new("minimax_tradeoff", &["p", "c_bits", "mse", "mse_c_over_d"]);
+    let mut rows = Vec::new();
+    let mut products = Vec::new();
+    for p in [1.0f64, 0.5, 0.25, 0.125, 0.0625, 0.03125] {
+        let k = (d as f64).sqrt() as u32 + 1;
+        // Theorem 1's construction: pi_svk with the Theorem-4 span.
+        let inner = ProtocolConfig::parse(&format!("varlen:k={k},span=norm"), d)?.build()?;
+        let proto: Arc<dyn dme::Protocol> = if p < 1.0 {
+            Arc::new(SampledProtocol::new(inner, p))
+        } else {
+            inner
+        };
+        let mut err = stats::Running::new();
+        let mut bits = stats::Running::new();
+        for t in 0..trials {
+            let ctx = RoundCtx::new(t, 21);
+            let (est, b) = run_round(proto.as_ref(), &ctx, &data.rows)?;
+            err.push(stats::sq_error(&est, &truth));
+            bits.push(b as f64);
+        }
+        let c = bits.mean();
+        let product = err.mean() * c / (d as f64 * avg);
+        products.push(product);
+        report.push(vec![p.into(), c.into(), err.mean().into(), product.into()]);
+        rows.push(vec![
+            format!("{p}"),
+            format!("{:.0}", c),
+            format!("{:.3e}", err.mean()),
+            format!("{product:.3}"),
+        ]);
+    }
+    print_table(
+        "Theorem 1: MSE * c / d should be ~constant across budgets",
+        &["p", "c (bits)", "MSE", "MSE*c/d"],
+        &rows,
+    );
+    let max = products.iter().cloned().fold(f64::MIN, f64::max);
+    let min = products.iter().cloned().fold(f64::MAX, f64::min);
+    println!("\nproduct spread: max/min = {:.2} (Theta(1) up to constants)", max / min);
+    assert!(max / min < 6.0, "minimax product drifts: {products:?}");
+    report.write(dme::report::default_dir())?;
+    println!("series in reports/minimax_tradeoff.{{csv,json}}");
+    Ok(())
+}

@@ -1,0 +1,107 @@
+//! Theory check (Lemmas 1 & 5, Theorem 4): measured communication cost per
+//! client versus the paper's analytic budgets.
+//!
+//! * π_sb: exactly d + 2·32 bits (Lemma 1 with 32-bit headers).
+//! * π_sk: exactly d⌈log₂k⌉ + 2·32 bits (Lemma 5).
+//! * π_svk: measured ≤ Theorem 4's bound; at k = √d + 1 the rate stays
+//!   O(1) bits/dim while naive coding needs ⌈log₂k⌉ ≈ ½log₂d.
+//!
+//! ```bash
+//! cargo bench --offline --bench theory_bits
+//! ```
+
+use dme::bench::print_table;
+use dme::data::synthetic;
+use dme::protocol::config::ProtocolConfig;
+use dme::protocol::varlen::VarlenProtocol;
+use dme::protocol::{run_round, RoundCtx};
+use dme::report::Report;
+use dme::stats;
+
+fn main() -> anyhow::Result<()> {
+    let trials: u64 = std::env::var("DME_TRIALS").ok().and_then(|s| s.parse().ok()).unwrap_or(10);
+    let mut report = Report::new(
+        "theory_bits",
+        &["protocol", "d", "k", "bits_per_client", "analytic", "ratio"],
+    );
+    let mut rows = Vec::new();
+
+    for d in [64usize, 256, 1024] {
+        let n = 16;
+        let data = synthetic::gaussian(n, d, d as u64);
+        let mut run_case = |spec: String, analytic: f64| -> anyhow::Result<()> {
+            let proto = ProtocolConfig::parse(&spec, d).unwrap().build().unwrap();
+            let mut bits = stats::Running::new();
+            for t in 0..trials {
+                let ctx = RoundCtx::new(t, 5);
+                let (_, b) = run_round(proto.as_ref(), &ctx, &data.rows)?;
+                bits.push(b as f64 / n as f64);
+            }
+            let measured = bits.mean();
+            let ratio = measured / analytic;
+            report.push(vec![
+                proto.name().into(),
+                d.into(),
+                0u64.into(),
+                measured.into(),
+                analytic.into(),
+                ratio.into(),
+            ]);
+            rows.push(vec![
+                proto.name(),
+                format!("{d}"),
+                format!("{measured:.1}"),
+                format!("{analytic:.1}"),
+                format!("{ratio:.3}"),
+            ]);
+            assert!(ratio <= 1.0 + 1e-9, "{spec} d={d}: bits exceed analytic bound");
+            Ok(())
+        };
+
+        // Lemma 1: binary = d + 64 exactly.
+        run_case("binary".into(), (d + 64) as f64)?;
+        // Lemma 5: k-level = d ceil(log2 k) + 64 exactly.
+        for k in [4u32, 16, 32] {
+            let bpc = 32 - (k - 1).leading_zeros();
+            run_case(format!("klevel:k={k}"), (d as u32 * bpc + 64) as f64)?;
+        }
+        // Theorem 4: varlen at k = sqrt(d)+1 stays within the bound (the
+        // bound is derived for the s = sqrt(2)||x|| span, so use it here).
+        let k = (d as f64).sqrt() as u32 + 1;
+        let bound = VarlenProtocol::new(d, k).theorem4_bits() + 64.0;
+        run_case(format!("varlen:k={k},span=norm"), bound)?;
+    }
+
+    // The headline contrast: at k=sqrt(d)+1, varlen bits/dim stays flat in
+    // d while fixed-width grows like log d.
+    let mut contrast = Vec::new();
+    for d in [64usize, 256, 1024, 4096] {
+        let n = 8;
+        let k = (d as f64).sqrt() as u32 + 1;
+        let data = synthetic::gaussian(n, d, 3 + d as u64);
+        let varlen = ProtocolConfig::parse(&format!("varlen:k={k}"), d)?.build()?;
+        let ctx = RoundCtx::new(0, 9);
+        let (_, bits) = run_round(varlen.as_ref(), &ctx, &data.rows)?;
+        let bpd_var = bits as f64 / (n * d) as f64;
+        let bpd_fixed = (32 - (k - 1).leading_zeros()) as f64;
+        contrast.push(vec![
+            format!("{d}"),
+            format!("{k}"),
+            format!("{bpd_var:.2}"),
+            format!("{bpd_fixed:.0}"),
+        ]);
+    }
+    print_table(
+        "Theory: measured bits/client vs analytic (Lemmas 1, 5; Thm 4)",
+        &["protocol", "d", "measured", "analytic", "ratio"],
+        &rows,
+    );
+    print_table(
+        "Theorem 4 headline: bits/dim at k=sqrt(d)+1 (varlen flat, fixed grows)",
+        &["d", "k", "varlen bits/dim", "fixed bits/dim"],
+        &contrast,
+    );
+    report.write(dme::report::default_dir())?;
+    println!("\nAll budgets hold. Series in reports/theory_bits.{{csv,json}}");
+    Ok(())
+}

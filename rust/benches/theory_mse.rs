@@ -1,0 +1,130 @@
+//! Theory check (Lemmas 2–4, Theorems 2–3): measured MSE versus the
+//! paper's analytic forms across a (d, n, k) sweep.
+//!
+//! Reported per row: measured MSE, the analytic bound, and their ratio.
+//! Every ratio must be ≤ 1 (bounds hold); π_sb is additionally compared
+//! against the *exact* Lemma 2 expression, and the Lemma 4 worst case is
+//! exercised to show the binary bound is tight (ratio ≈ 1 − 2/d).
+//!
+//! ```bash
+//! cargo bench --offline --bench theory_mse
+//! ```
+
+use dme::bench::print_table;
+use dme::data::synthetic;
+use dme::linalg;
+use dme::protocol::config::ProtocolConfig;
+use dme::protocol::{run_round, RoundCtx};
+use dme::report::Report;
+use dme::stats;
+
+fn measure(proto: &dyn dme::Protocol, xs: &[Vec<f32>], trials: u64) -> f64 {
+    let truth = stats::true_mean(xs);
+    let mut err = stats::Running::new();
+    for t in 0..trials {
+        let ctx = RoundCtx::new(t, 77);
+        let (est, _) = run_round(proto, &ctx, xs).unwrap();
+        err.push(stats::sq_error(&est, &truth));
+    }
+    err.mean()
+}
+
+fn main() -> anyhow::Result<()> {
+    let trials: u64 = std::env::var("DME_TRIALS").ok().and_then(|s| s.parse().ok()).unwrap_or(60);
+    let mut report = Report::new("theory_mse", &["protocol", "d", "n", "k", "mse", "bound", "ratio"]);
+    let mut rows = Vec::new();
+
+    for (d, n) in [(64usize, 4usize), (256, 16), (1024, 16)] {
+        let data = synthetic::gaussian(n, d, d as u64 + n as u64);
+        let avg = stats::avg_norm_sq(&data.rows);
+        for spec in [
+            "binary".to_string(),
+            "klevel:k=4".into(),
+            "klevel:k=16".into(),
+            "rotated:k=4".into(),
+            "rotated:k=16".into(),
+            "varlen:k=16".into(),
+        ] {
+            let proto = ProtocolConfig::parse(&spec, d)?.build()?;
+            let mse = measure(proto.as_ref(), &data.rows, trials);
+            let bound = proto.mse_bound(n, avg).unwrap();
+            let ratio = mse / bound;
+            report.push(vec![
+                proto.name().into(),
+                d.into(),
+                n.into(),
+                spec.split("k=").nth(1).and_then(|s| s.parse::<u64>().ok()).unwrap_or(2).into(),
+                mse.into(),
+                bound.into(),
+                ratio.into(),
+            ]);
+            rows.push(vec![
+                proto.name(),
+                format!("{d}"),
+                format!("{n}"),
+                format!("{mse:.3e}"),
+                format!("{bound:.3e}"),
+                format!("{ratio:.3}"),
+            ]);
+            assert!(ratio <= 1.05, "{spec} d={d} n={n}: bound violated ({ratio:.3})");
+        }
+    }
+
+    // Lemma 4 worst case: binary MSE >= (d-2)/(2n) avg -- bound is tight.
+    {
+        let (d, n) = (128usize, 4usize);
+        let mut x = vec![0.0f32; d];
+        x[0] = 1.0 / 2.0f32.sqrt();
+        x[1] = -1.0 / 2.0f32.sqrt();
+        let xs = vec![x; n];
+        let proto = ProtocolConfig::parse("binary", d)?.build()?;
+        let mse = measure(proto.as_ref(), &xs, trials);
+        let avg = stats::avg_norm_sq(&xs);
+        let lower = (d as f64 - 2.0) / (2.0 * n as f64) * avg;
+        let upper = d as f64 / (2.0 * n as f64) * avg;
+        rows.push(vec![
+            "binary (Lemma 4 worst case)".into(),
+            format!("{d}"),
+            format!("{n}"),
+            format!("{mse:.3e}"),
+            format!("[{lower:.3e}, {upper:.3e}]"),
+            format!("{:.3}", mse / upper),
+        ]);
+        assert!(mse >= lower * 0.9 && mse <= upper * 1.1, "Lemma 4 tightness failed");
+    }
+
+    // Exact Lemma 2 check on one configuration.
+    {
+        let (d, n) = (64usize, 8usize);
+        let data = synthetic::gaussian(n, d, 3);
+        let exact: f64 = data
+            .rows
+            .iter()
+            .map(|x| {
+                let (lo, hi) = linalg::min_max(x);
+                x.iter().map(|&v| (hi as f64 - v as f64) * (v as f64 - lo as f64)).sum::<f64>()
+            })
+            .sum::<f64>()
+            / (n * n) as f64;
+        let proto = ProtocolConfig::parse("binary", d)?.build()?;
+        let mse = measure(proto.as_ref(), &data.rows, trials * 4);
+        rows.push(vec![
+            "binary vs exact Lemma 2".into(),
+            format!("{d}"),
+            format!("{n}"),
+            format!("{mse:.3e}"),
+            format!("{exact:.3e}"),
+            format!("{:.3}", mse / exact),
+        ]);
+        assert!((mse / exact - 1.0).abs() < 0.15, "Lemma 2 exactness failed: {}", mse / exact);
+    }
+
+    print_table(
+        "Theory: measured MSE vs analytic bounds (all ratios must be <= 1)",
+        &["protocol", "d", "n", "measured", "bound", "ratio"],
+        &rows,
+    );
+    report.write(dme::report::default_dir())?;
+    println!("\nAll bounds hold. Series in reports/theory_mse.{{csv,json}}");
+    Ok(())
+}

@@ -1,0 +1,13 @@
+//! Application drivers — the paper's §7 experiments.
+//!
+//! * [`kmeans`] — distributed Lloyd's algorithm with quantized center
+//!   uplink (Figure 2).
+//! * [`power_iteration`] — distributed power iteration with quantized
+//!   eigenvector uplink (Figure 3).
+//!
+//! Both run on the [`coordinator`](crate::coordinator) (leader + loopback
+//! workers) so every experiment exercises the full stack: update function
+//! → protocol encode (native or PJRT) → transport → decode → aggregate.
+
+pub mod kmeans;
+pub mod power_iteration;

@@ -1,0 +1,213 @@
+//! A small benchmarking harness (criterion is not in the offline crate
+//! set): warmup + timed iterations with mean/p50/p99 and throughput, plus
+//! the table printer every figure-bench uses for its output rows.
+
+use std::time::{Duration, Instant};
+
+use crate::stats;
+
+/// Timing result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    /// Optional work units per iteration (bytes, elements…) for throughput.
+    pub units_per_iter: Option<f64>,
+}
+
+impl Timing {
+    /// Units per second, if units were declared.
+    pub fn throughput(&self) -> Option<f64> {
+        self.units_per_iter.map(|u| u / self.mean.as_secs_f64())
+    }
+
+    pub fn row(&self) -> String {
+        let tput = match self.throughput() {
+            Some(t) if t >= 1e9 => format!("{:8.2} G/s", t / 1e9),
+            Some(t) if t >= 1e6 => format!("{:8.2} M/s", t / 1e6),
+            Some(t) if t >= 1e3 => format!("{:8.2} k/s", t / 1e3),
+            Some(t) => format!("{t:8.2}  /s"),
+            None => "         --".into(),
+        };
+        format!(
+            "{:<44} {:>10} {:>10} {:>10} {}",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.p50),
+            fmt_dur(self.p99),
+            tput
+        )
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner: measures each case with warmup, auto-scaling the
+/// iteration count to the time budget.
+pub struct Bench {
+    /// Target measurement time per case.
+    pub budget: Duration,
+    /// Warmup time per case.
+    pub warmup: Duration,
+    timings: Vec<Timing>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // DME_BENCH_BUDGET_MS lets CI shrink runs.
+        let ms = std::env::var("DME_BENCH_BUDGET_MS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(500u64);
+        Bench {
+            budget: Duration::from_millis(ms),
+            warmup: Duration::from_millis((ms / 5).max(1)),
+            timings: Vec::new(),
+        }
+    }
+
+    /// Time `f`, labeling the case; `units_per_iter` enables throughput.
+    pub fn run(&mut self, name: &str, units_per_iter: Option<f64>, mut f: impl FnMut()) -> &Timing {
+        // Warmup and calibration.
+        let t0 = Instant::now();
+        let mut calib_iters = 0usize;
+        while t0.elapsed() < self.warmup || calib_iters == 0 {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = t0.elapsed() / calib_iters as u32;
+        let iters = (self.budget.as_secs_f64() / per_iter.as_secs_f64().max(1e-9))
+            .ceil()
+            .clamp(5.0, 1e7) as usize;
+
+        let mut samples = Vec::with_capacity(iters.min(10_000));
+        // Group iterations so per-sample clock overhead stays < ~1%.
+        let group = (iters / 1000).max(1);
+        let mut done = 0usize;
+        while done < iters {
+            let g0 = Instant::now();
+            for _ in 0..group {
+                f();
+            }
+            let dt = g0.elapsed() / group as u32;
+            samples.push(dt.as_secs_f64());
+            done += group;
+        }
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let timing = Timing {
+            name: name.to_string(),
+            iters,
+            mean: Duration::from_secs_f64(mean),
+            p50: Duration::from_secs_f64(stats::percentile(&samples, 50.0)),
+            p99: Duration::from_secs_f64(stats::percentile(&samples, 99.0)),
+            units_per_iter,
+        };
+        self.timings.push(timing);
+        self.timings.last().unwrap()
+    }
+
+    /// Print all rows with a header.
+    pub fn report(&self, title: &str) {
+        println!("\n== {title} ==");
+        println!(
+            "{:<44} {:>10} {:>10} {:>10} {:>12}",
+            "case", "mean", "p50", "p99", "throughput"
+        );
+        for t in &self.timings {
+            println!("{}", t.row());
+        }
+    }
+
+    pub fn timings(&self) -> &[Timing] {
+        &self.timings
+    }
+}
+
+/// Print a generic results table (the figure benches' row format).
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let widths: Vec<usize> = header
+        .iter()
+        .enumerate()
+        .map(|(i, h)| {
+            rows.iter()
+                .map(|r| r.get(i).map(|c| c.len()).unwrap_or(0))
+                .chain(std::iter::once(h.len()))
+                .max()
+                .unwrap_or(0)
+        })
+        .collect();
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let head: Vec<String> = header.iter().map(|s| s.to_string()).collect();
+    println!("{}", fmt_row(&head));
+    println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len().saturating_sub(1))));
+    for r in rows {
+        println!("{}", fmt_row(r));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bench::new();
+        b.budget = Duration::from_millis(20);
+        b.warmup = Duration::from_millis(4);
+        let mut x = 0u64;
+        let t = b.run("spin", Some(1000.0), || {
+            // black_box keeps the loop alive under -O3
+            for i in 0..1000 {
+                x = x.wrapping_add(std::hint::black_box(i));
+            }
+        });
+        assert!(t.mean.as_secs_f64() > 0.0);
+        assert!(t.throughput().unwrap() > 0.0);
+        assert!(t.row().contains("spin"));
+        std::hint::black_box(x);
+        b.report("test");
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500 ns");
+        assert_eq!(fmt_dur(Duration::from_micros(1500)), "1.50 ms");
+    }
+
+    #[test]
+    fn table_printer_does_not_panic() {
+        print_table(
+            "t",
+            &["a", "bb"],
+            &[vec!["1".into(), "2".into()], vec!["333".into(), "4".into()]],
+        );
+    }
+}

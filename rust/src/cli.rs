@@ -1,0 +1,138 @@
+//! Tiny CLI argument parser (clap is not in the offline crate set):
+//! `--key value`, `--key=value`, boolean `--flag`, and positionals.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command-line arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    /// Flags we were asked for (to report unknown leftovers).
+    consumed: std::cell::RefCell<std::collections::HashSet<String>>,
+}
+
+impl Args {
+    /// Parse from raw args (excluding argv[0]).
+    pub fn parse(raw: impl IntoIterator<Item = String>) -> Result<Self> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if rest.is_empty() {
+                    bail!("stray `--`");
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.flags.insert(rest.to_string(), v);
+                } else {
+                    args.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// First positional (the subcommand), if any.
+    pub fn command(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    /// Typed flag with default.
+    pub fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.consumed.borrow_mut().insert(key.to_string());
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{key} {v}: {e}")),
+        }
+    }
+
+    /// Required string flag.
+    pub fn require(&self, key: &str) -> Result<String> {
+        self.consumed.borrow_mut().insert(key.to_string());
+        self.flags
+            .get(key)
+            .cloned()
+            .with_context(|| format!("missing required --{key}"))
+    }
+
+    /// Optional string flag.
+    pub fn opt(&self, key: &str) -> Option<String> {
+        self.consumed.borrow_mut().insert(key.to_string());
+        self.flags.get(key).cloned()
+    }
+
+    /// Boolean flag (present or `--key true/false`).
+    pub fn bool(&self, key: &str) -> Result<bool> {
+        self.get(key, false)
+    }
+
+    /// Error on any flag nobody asked about (catches typos).
+    pub fn reject_unknown(&self) -> Result<()> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<&String> =
+            self.flags.keys().filter(|k| !consumed.contains(*k)).collect();
+        if !unknown.is_empty() {
+            bail!("unknown flags: {unknown:?}");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse(&["kmeans", "--clients", "10", "--protocol=rotated:k=16", "--verbose"]);
+        assert_eq!(a.command(), Some("kmeans"));
+        assert_eq!(a.get("clients", 0usize).unwrap(), 10);
+        assert_eq!(a.require("protocol").unwrap(), "rotated:k=16");
+        assert!(a.bool("verbose").unwrap());
+        assert!(!a.bool("quiet").unwrap());
+        assert_eq!(a.get("iters", 7u32).unwrap(), 7);
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = parse(&["--clients", "ten"]);
+        assert!(a.get("clients", 0usize).is_err());
+        assert!(a.require("nope").is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = parse(&["--known", "1", "--typo", "2"]);
+        a.get("known", 0usize).unwrap();
+        assert!(a.reject_unknown().is_err());
+        a.get("typo", 0usize).unwrap();
+        assert!(a.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_boolean() {
+        let a = parse(&["--a", "--b", "3"]);
+        assert!(a.bool("a").unwrap());
+        assert_eq!(a.get("b", 0u32).unwrap(), 3);
+    }
+}

@@ -1,0 +1,329 @@
+//! Static arithmetic coding w.r.t. the bin distribution `p_r = h_r / d`
+//! (paper §4, following MacKay [19]: payload ≤ d·H(p) + 2 bits).
+//!
+//! Classic 32-bit integer arithmetic coder (CACM-87 style) with pending-bit
+//! underflow handling. The model is *static*: both sides build the same
+//! cumulative-frequency table from the histogram carried in the frame
+//! header, so the coder itself transmits nothing but the payload.
+
+use anyhow::{bail, ensure, Result};
+
+use super::bitio::{BitReader, BitWriter};
+
+const PRECISION: u32 = 32;
+const TOP: u64 = 1 << PRECISION; // exclusive upper bound of the interval
+const HALF: u64 = TOP / 2;
+const QUARTER: u64 = TOP / 4;
+const THREE_QUARTERS: u64 = 3 * (TOP / 4);
+const MASK: u64 = TOP - 1;
+
+/// Cumulative-frequency model shared by encoder and decoder.
+#[derive(Clone, Debug)]
+pub struct CumTable {
+    /// cum[s]..cum[s+1] is symbol s's slice of [0, total).
+    cum: Vec<u64>,
+    total: u64,
+    /// Direct scaled→symbol map (built when total is small, i.e. always
+    /// for per-vector histograms where total = d): turns the per-symbol
+    /// binary search into one indexed load on the decode hot path.
+    lut: Vec<u32>,
+    /// floor(2^64 / total): reciprocal for exact division-by-total via
+    /// multiply + fixup (two u64 divides per symbol otherwise).
+    magic: u64,
+}
+
+/// Exact `x / total` using the precomputed reciprocal: the multiply gives
+/// an underestimate by at most 2; fix up with subtractions.
+#[inline]
+fn div_by_total(x: u64, total: u64, magic: u64) -> u64 {
+    let mut q = ((x as u128 * magic as u128) >> 64) as u64;
+    let mut r = x - q * total;
+    while r >= total {
+        q += 1;
+        r -= total;
+    }
+    q
+}
+
+impl CumTable {
+    pub fn from_histogram(hist: &[u64]) -> Result<Self> {
+        ensure!(!hist.is_empty(), "empty histogram");
+        let mut cum = Vec::with_capacity(hist.len() + 1);
+        let mut acc = 0u64;
+        cum.push(0);
+        for &h in hist {
+            acc += h;
+            cum.push(acc);
+        }
+        ensure!(acc > 0, "histogram has no mass");
+        // total must fit the coder's precision headroom: range/total >= 1.
+        ensure!(acc < (1 << 30), "histogram total too large for 32-bit coder");
+        let mut lut = Vec::new();
+        if acc <= (1 << 20) {
+            lut.reserve(acc as usize);
+            for (s, &h) in hist.iter().enumerate() {
+                lut.extend(std::iter::repeat_n(s as u32, h as usize));
+            }
+        }
+        // magic = floor(2^64 / total) (saturated to u64::MAX for total=1,
+        // where the fixup loop still lands on the exact quotient).
+        let magic = ((1u128 << 64) / acc as u128).min(u64::MAX as u128) as u64;
+        Ok(CumTable { cum, total: acc, lut, magic })
+    }
+
+    #[inline]
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    #[inline]
+    fn span(&self, s: u32) -> (u64, u64) {
+        (self.cum[s as usize], self.cum[s as usize + 1])
+    }
+
+    /// Symbol whose slice contains `scaled`.
+    #[inline]
+    fn find(&self, scaled: u64) -> u32 {
+        if !self.lut.is_empty() {
+            return self.lut[scaled as usize];
+        }
+        self.find_bsearch(scaled)
+    }
+
+    /// Binary-search fallback for very large totals (no LUT).
+    #[inline]
+    fn find_bsearch(&self, scaled: u64) -> u32 {
+        // partition_point: first index with cum[i+1] > scaled
+        let mut lo = 0usize;
+        let mut hi = self.cum.len() - 2;
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if self.cum[mid + 1] <= scaled {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        lo as u32
+    }
+}
+
+/// Encode `data` under the static model; appends to `w`.
+pub fn encode(w: &mut BitWriter, model: &CumTable, data: &[u32]) -> Result<()> {
+    let mut low: u64 = 0;
+    let mut high: u64 = MASK;
+    let mut pending: u64 = 0;
+
+    let put = |w: &mut BitWriter, bit: bool, pending: &mut u64| {
+        w.put_bit(bit);
+        // batch the pending run (all !bit) in <=64-bit strokes
+        let fill = if bit { 0u64 } else { u64::MAX };
+        while *pending > 0 {
+            let n = (*pending).min(64) as u32;
+            w.put_bits(fill, n);
+            *pending -= n as u64;
+        }
+    };
+
+    for &s in data {
+        ensure!((s as usize) < model.cum.len() - 1, "symbol {s} out of alphabet");
+        let (c_lo, c_hi) = model.span(s);
+        ensure!(c_hi > c_lo, "symbol {s} has zero frequency");
+        let range = high - low + 1;
+        high = low + div_by_total(range * c_hi, model.total, model.magic) - 1;
+        low += div_by_total(range * c_lo, model.total, model.magic);
+        loop {
+            if high < HALF {
+                put(w, false, &mut pending);
+            } else if low >= HALF {
+                put(w, true, &mut pending);
+                low -= HALF;
+                high -= HALF;
+            } else if low >= QUARTER && high < THREE_QUARTERS {
+                pending += 1;
+                low -= QUARTER;
+                high -= QUARTER;
+            } else {
+                break;
+            }
+            low <<= 1;
+            high = (high << 1) | 1;
+            debug_assert!(high <= MASK && low <= MASK);
+        }
+    }
+    // Flush: two disambiguating bits (plus pendings).
+    pending += 1;
+    if low < QUARTER {
+        put(w, false, &mut pending);
+    } else {
+        put(w, true, &mut pending);
+    }
+    Ok(())
+}
+
+/// Decode exactly `count` symbols from `r` under the static model.
+///
+/// The reader may be a shared frame buffer: the decoder consumes the
+/// payload bits plus up to `PRECISION` lookahead bits that the encoder
+/// never wrote (it reads zeros past end-of-frame, matching the encoder's
+/// implicit trailing zeros). Callers placing data *after* an arithmetic
+/// payload in the same frame must delimit it by position, not adjacency —
+/// in this crate the arithmetic payload is always last in the frame.
+pub fn decode(r: &mut BitReader, model: &CumTable, count: usize, out: &mut Vec<u32>) -> Result<()> {
+    let mut low: u64 = 0;
+    let mut high: u64 = MASK;
+    let mut value: u64 = 0;
+    for _ in 0..PRECISION {
+        value = (value << 1) | r.get_bit_or_zero() as u64;
+    }
+    out.reserve(count);
+    for _ in 0..count {
+        let range = high - low + 1;
+        let scaled = ((value - low + 1) * model.total - 1) / range;
+        if scaled >= model.total {
+            bail!("arithmetic decode: scaled value out of range (corrupt frame)");
+        }
+        let s = model.find(scaled);
+        let (c_lo, c_hi) = model.span(s);
+        high = low + div_by_total(range * c_hi, model.total, model.magic) - 1;
+        low += div_by_total(range * c_lo, model.total, model.magic);
+        loop {
+            if high < HALF {
+                // nothing
+            } else if low >= HALF {
+                low -= HALF;
+                high -= HALF;
+                value -= HALF;
+            } else if low >= QUARTER && high < THREE_QUARTERS {
+                low -= QUARTER;
+                high -= QUARTER;
+                value -= QUARTER;
+            } else {
+                break;
+            }
+            low <<= 1;
+            high = (high << 1) | 1;
+            value = (value << 1) | r.get_bit_or_zero() as u64;
+        }
+        out.push(s);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::histogram_entropy_bits;
+    use crate::testkit::{check, run_prop};
+
+    fn hist_of(data: &[u32], k: usize) -> Vec<u64> {
+        let mut h = vec![0u64; k];
+        for &s in data {
+            h[s as usize] += 1;
+        }
+        h
+    }
+
+    fn roundtrip(data: &[u32], k: usize) -> u64 {
+        let hist = hist_of(data, k);
+        let model = CumTable::from_histogram(&hist).unwrap();
+        let mut w = BitWriter::new();
+        encode(&mut w, &model, data).unwrap();
+        let (bytes, bits) = w.finish();
+        let mut r = BitReader::with_bit_len(&bytes, bits);
+        let mut out = Vec::new();
+        decode(&mut r, &model, data.len(), &mut out).unwrap();
+        assert_eq!(out, data, "roundtrip mismatch");
+        bits
+    }
+
+    #[test]
+    fn simple_roundtrip() {
+        roundtrip(&[0, 1, 2, 1, 0, 2, 2, 2], 3);
+    }
+
+    #[test]
+    fn single_symbol_stream_costs_almost_nothing() {
+        let data = vec![3u32; 1000];
+        let bits = roundtrip(&data, 8);
+        assert!(bits <= 2, "bits={bits}");
+    }
+
+    #[test]
+    fn payload_close_to_entropy_bound() {
+        // Theorem-4 accounting: payload <= d*H + 2 bits.
+        let mut data = Vec::new();
+        for (s, c) in [(0u32, 900usize), (1, 50), (2, 25), (3, 25)] {
+            data.extend(std::iter::repeat_n(s, c));
+        }
+        let hist = hist_of(&data, 4);
+        let h = histogram_entropy_bits(&hist);
+        let bits = roundtrip(&data, 4);
+        assert!(
+            (bits as f64) <= h * data.len() as f64 + 2.0 + 1e-6,
+            "bits={bits} entropy bound={}",
+            h * data.len() as f64 + 2.0
+        );
+    }
+
+    #[test]
+    fn beats_huffman_on_very_skewed_data() {
+        let mut data = vec![0u32; 5000];
+        data.push(1);
+        let hist = hist_of(&data, 2);
+        let bits_arith = roundtrip(&data, 2);
+        let code = super::super::huffman::HuffmanCode::from_histogram(&hist).unwrap();
+        let bits_huff = code.payload_bits(&data);
+        assert!(bits_arith < bits_huff / 50, "arith={bits_arith} huff={bits_huff}");
+    }
+
+    #[test]
+    fn unseen_symbol_rejected() {
+        let model = CumTable::from_histogram(&[5, 0, 3]).unwrap();
+        let mut w = BitWriter::new();
+        assert!(encode(&mut w, &model, &[1]).is_err());
+        assert!(encode(&mut w, &model, &[7]).is_err());
+    }
+
+    #[test]
+    fn corrupt_frame_detected_or_differs() {
+        let data = vec![0u32, 1, 2, 2, 1, 0, 1, 2, 2, 2];
+        let hist = hist_of(&data, 3);
+        let model = CumTable::from_histogram(&hist).unwrap();
+        let mut w = BitWriter::new();
+        encode(&mut w, &model, &data).unwrap();
+        let (mut bytes, bits) = w.finish();
+        bytes[0] ^= 0x80; // flip the first payload bit
+        let mut r = BitReader::with_bit_len(&bytes, bits);
+        let mut out = Vec::new();
+        let res = decode(&mut r, &model, data.len(), &mut out);
+        assert!(res.is_err() || out != data);
+    }
+
+    #[test]
+    fn prop_roundtrip_and_entropy_bound() {
+        run_prop("arith_roundtrip", 120, |g| {
+            let k = g.usize_in(1..=64);
+            let n = g.usize_in(1..=600);
+            let data: Vec<u32> = (0..n)
+                .map(|_| {
+                    let x = g.rng().next_f32();
+                    ((x * x * x * k as f32) as u32).min(k as u32 - 1)
+                })
+                .collect();
+            let hist = hist_of(&data, k);
+            let model = CumTable::from_histogram(&hist).map_err(|e| e.to_string())?;
+            let mut w = BitWriter::new();
+            encode(&mut w, &model, &data).map_err(|e| e.to_string())?;
+            let (bytes, bits) = w.finish();
+            let mut r = BitReader::with_bit_len(&bytes, bits);
+            let mut out = Vec::new();
+            decode(&mut r, &model, n, &mut out).map_err(|e| e.to_string())?;
+            check(out == data, "decode mismatch")?;
+            let h = histogram_entropy_bits(&hist);
+            // d*H + 2 plus a little slack for integer-division model error
+            let bound = h * n as f64 + 2.0 + 0.01 * n as f64 + 8.0;
+            check((bits as f64) <= bound, format!("bits={bits} > bound={bound}"))
+        });
+    }
+}

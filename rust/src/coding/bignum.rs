@@ -1,0 +1,274 @@
+//! Minimal arbitrary-precision unsigned integer, just big enough for the
+//! enumerative histogram code: `C(d+k-1, k-1)` at d=4096, k=65 is ~2^300,
+//! far past u128. Little-endian u64 limbs; only the operations the
+//! combinatorial ranking needs (add, sub, cmp, mul/div by small, bit I/O).
+
+use anyhow::Result;
+
+use super::bitio::{BitReader, BitWriter};
+
+/// Little-endian multi-limb unsigned integer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BigUint {
+    /// Invariant: no trailing zero limbs (canonical form); empty = 0.
+    limbs: Vec<u64>,
+}
+
+impl BigUint {
+    pub fn zero() -> Self {
+        BigUint { limbs: Vec::new() }
+    }
+
+    pub fn one() -> Self {
+        BigUint { limbs: vec![1] }
+    }
+
+    pub fn from_u64(v: u64) -> Self {
+        if v == 0 {
+            Self::zero()
+        } else {
+            BigUint { limbs: vec![v] }
+        }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.limbs.is_empty()
+    }
+
+    fn trim(&mut self) {
+        while self.limbs.last() == Some(&0) {
+            self.limbs.pop();
+        }
+    }
+
+    /// Number of significant bits (0 for zero).
+    pub fn bits(&self) -> u32 {
+        match self.limbs.last() {
+            None => 0,
+            Some(&top) => (self.limbs.len() as u32 - 1) * 64 + (64 - top.leading_zeros()),
+        }
+    }
+
+    pub fn cmp_big(&self, other: &BigUint) -> std::cmp::Ordering {
+        use std::cmp::Ordering;
+        match self.limbs.len().cmp(&other.limbs.len()) {
+            Ordering::Equal => {}
+            ord => return ord,
+        }
+        for i in (0..self.limbs.len()).rev() {
+            match self.limbs[i].cmp(&other.limbs[i]) {
+                Ordering::Equal => {}
+                ord => return ord,
+            }
+        }
+        std::cmp::Ordering::Equal
+    }
+
+    pub fn add_assign(&mut self, other: &BigUint) {
+        let mut carry = 0u64;
+        for i in 0..other.limbs.len().max(self.limbs.len()) {
+            if i >= self.limbs.len() {
+                self.limbs.push(0);
+            }
+            let b = other.limbs.get(i).copied().unwrap_or(0);
+            let (s1, c1) = self.limbs[i].overflowing_add(b);
+            let (s2, c2) = s1.overflowing_add(carry);
+            self.limbs[i] = s2;
+            carry = (c1 as u64) + (c2 as u64);
+        }
+        if carry > 0 {
+            self.limbs.push(carry);
+        }
+    }
+
+    /// `self -= other`; panics if other > self (caller guarantees order).
+    pub fn sub_assign(&mut self, other: &BigUint) {
+        debug_assert!(self.cmp_big(other) != std::cmp::Ordering::Less, "bignum underflow");
+        let mut borrow = 0u64;
+        for i in 0..self.limbs.len() {
+            let b = other.limbs.get(i).copied().unwrap_or(0);
+            let (d1, b1) = self.limbs[i].overflowing_sub(b);
+            let (d2, b2) = d1.overflowing_sub(borrow);
+            self.limbs[i] = d2;
+            borrow = (b1 as u64) + (b2 as u64);
+        }
+        assert_eq!(borrow, 0, "bignum underflow");
+        self.trim();
+    }
+
+    pub fn mul_small(&mut self, m: u64) {
+        if m == 0 {
+            self.limbs.clear();
+            return;
+        }
+        let mut carry = 0u128;
+        for limb in &mut self.limbs {
+            let prod = *limb as u128 * m as u128 + carry;
+            *limb = prod as u64;
+            carry = prod >> 64;
+        }
+        while carry > 0 {
+            self.limbs.push(carry as u64);
+            carry >>= 64;
+        }
+    }
+
+    /// `self /= q`, returning the remainder.
+    pub fn div_small(&mut self, q: u64) -> u64 {
+        assert!(q > 0, "division by zero");
+        let mut rem = 0u128;
+        for limb in self.limbs.iter_mut().rev() {
+            let cur = (rem << 64) | *limb as u128;
+            *limb = (cur / q as u128) as u64;
+            rem = cur % q as u128;
+        }
+        self.trim();
+        rem as u64
+    }
+
+    /// Write exactly `width` bits of the value, MSB-first. Requires
+    /// `self.bits() <= width`.
+    pub fn put_bits(&self, w: &mut BitWriter, width: u32) {
+        debug_assert!(self.bits() <= width, "value does not fit width");
+        for i in (0..width).rev() {
+            let limb = (i / 64) as usize;
+            let bit = self
+                .limbs
+                .get(limb)
+                .map(|&l| (l >> (i % 64)) & 1 == 1)
+                .unwrap_or(false);
+            w.put_bit(bit);
+        }
+    }
+
+    /// Read a `width`-bit MSB-first value.
+    pub fn get_bits(r: &mut BitReader, width: u32) -> Result<Self> {
+        let mut v = BigUint::zero();
+        let n_limbs = width.div_ceil(64) as usize;
+        v.limbs.resize(n_limbs, 0);
+        for i in (0..width).rev() {
+            if r.get_bit()? {
+                v.limbs[(i / 64) as usize] |= 1 << (i % 64);
+            }
+        }
+        v.trim();
+        Ok(v)
+    }
+
+    /// Lossy conversion for display/tests.
+    pub fn to_f64(&self) -> f64 {
+        self.limbs
+            .iter()
+            .rev()
+            .fold(0.0f64, |acc, &l| acc * 2.0f64.powi(64) + l as f64)
+    }
+}
+
+/// Number of compositions of `m` into `q` non-negative parts:
+/// `C(m + q - 1, q - 1)`; for q = 0 it is 1 iff m == 0.
+pub fn comp_count(m: u64, q: u64) -> BigUint {
+    if q == 0 {
+        return if m == 0 { BigUint::one() } else { BigUint::zero() };
+    }
+    // C(m + q - 1, q - 1) built multiplicatively: prod_{i=1..q-1} (m+i)/i —
+    // each prefix is itself a binomial, so the division is exact.
+    let mut c = BigUint::one();
+    for i in 1..q {
+        c.mul_small(m + i);
+        let rem = c.div_small(i);
+        debug_assert_eq!(rem, 0, "binomial division must be exact");
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{check, run_prop};
+
+    #[test]
+    fn small_arithmetic() {
+        let mut a = BigUint::from_u64(u64::MAX);
+        a.add_assign(&BigUint::one());
+        assert_eq!(a.limbs, vec![0, 1]);
+        assert_eq!(a.bits(), 65);
+        a.sub_assign(&BigUint::one());
+        assert_eq!(a, BigUint::from_u64(u64::MAX));
+    }
+
+    #[test]
+    fn mul_div_roundtrip_across_limbs() {
+        let mut a = BigUint::from_u64(0x1234_5678_9abc_def0);
+        for m in [3u64, 1 << 40, 999_999_937] {
+            a.mul_small(m);
+        }
+        let mut b = a.clone();
+        assert_eq!(b.div_small(999_999_937), 0);
+        assert_eq!(b.div_small(1 << 40), 0);
+        assert_eq!(b.div_small(3), 0);
+        assert_eq!(b, BigUint::from_u64(0x1234_5678_9abc_def0));
+        assert!(a.cmp_big(&b) == std::cmp::Ordering::Greater);
+    }
+
+    #[test]
+    fn comp_count_known_values() {
+        // C(m+q-1, q-1): compositions of 4 into 3 parts = C(6,2) = 15
+        assert_eq!(comp_count(4, 3).to_f64(), 15.0);
+        assert_eq!(comp_count(0, 3).to_f64(), 1.0);
+        assert_eq!(comp_count(5, 1).to_f64(), 1.0);
+        assert_eq!(comp_count(0, 0).to_f64(), 1.0);
+        assert!(comp_count(3, 0).is_zero());
+        // C(1056, 32) ~ 6.3e61: check bit-length ballpark (205 bits)
+        let big = comp_count(1024, 33);
+        assert!((200..=210).contains(&big.bits()), "bits={}", big.bits());
+    }
+
+    #[test]
+    fn bit_io_roundtrip() {
+        let mut v = BigUint::one();
+        for i in 1..40u64 {
+            v.mul_small(i * 7 + 1);
+        }
+        let width = v.bits() + 3;
+        let mut w = BitWriter::new();
+        v.put_bits(&mut w, width);
+        let (bytes, bits) = w.finish();
+        assert_eq!(bits, width as u64);
+        let mut r = BitReader::with_bit_len(&bytes, bits);
+        let got = BigUint::get_bits(&mut r, width).unwrap();
+        assert_eq!(got, v);
+    }
+
+    #[test]
+    fn zero_io() {
+        let z = BigUint::zero();
+        let mut w = BitWriter::new();
+        z.put_bits(&mut w, 10);
+        let (bytes, bits) = w.finish();
+        let mut r = BitReader::with_bit_len(&bytes, bits);
+        assert!(BigUint::get_bits(&mut r, 10).unwrap().is_zero());
+    }
+
+    #[test]
+    fn prop_add_sub_mul_div_consistency() {
+        run_prop("bignum_ops", 200, |g| {
+            let mut a = BigUint::from_u64(g.rng().next_u64());
+            let mut ops: Vec<u64> = Vec::new();
+            for _ in 0..g.usize_in(1..=12) {
+                let m = g.rng().next_u64() >> 33 | 1; // odd-ish, nonzero
+                ops.push(m);
+                a.mul_small(m);
+            }
+            let mut b = a.clone();
+            for &m in ops.iter().rev() {
+                let rem = b.div_small(m);
+                check(rem == 0, format!("rem={rem}"))?;
+            }
+            // b should equal the original seed value
+            let mut c = b.clone();
+            c.add_assign(&BigUint::from_u64(5));
+            c.sub_assign(&BigUint::from_u64(5));
+            check(c == b, "add/sub inverse failed")
+        });
+    }
+}

@@ -1,0 +1,330 @@
+//! MSB-first bit-level I/O.
+//!
+//! Every protocol frame in this crate is produced through [`BitWriter`] so
+//! the communication cost we report is the cost of the bits we actually
+//! emit (plus the final byte padding, which we track separately: MSE/cost
+//! experiments use `bit_len`, the transport uses `bytes`).
+
+use anyhow::{bail, Result};
+
+/// Accumulates bits MSB-first into a byte buffer.
+#[derive(Clone, Debug, Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Bits still FREE in the final byte (0 = byte complete), 0..8.
+    free: u8,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(bits: usize) -> Self {
+        BitWriter { buf: Vec::with_capacity(bits.div_ceil(8)), free: 0 }
+    }
+
+    /// Total bits written so far.
+    #[inline]
+    pub fn bit_len(&self) -> u64 {
+        self.buf.len() as u64 * 8 - self.free as u64
+    }
+
+    /// Append a single bit.
+    #[inline]
+    pub fn put_bit(&mut self, bit: bool) {
+        if self.free == 0 {
+            self.buf.push(0);
+            self.free = 8;
+        }
+        // Bits fill from the MSB of the current byte downward; free==0
+        // means the byte is complete and the next bit opens a fresh one.
+        self.free -= 1;
+        if bit {
+            *self.buf.last_mut().unwrap() |= 1 << self.free;
+        }
+    }
+
+    /// Append the low `n` bits of `value`, MSB-first. `n <= 64`.
+    ///
+    /// Word-wise fast path: fills the current partial byte, then emits
+    /// whole bytes directly (the fixed-width protocols write millions of
+    /// 1–6-bit fields; bit-by-bit was the encode bottleneck).
+    pub fn put_bits(&mut self, value: u64, mut n: u32) {
+        debug_assert!(n <= 64);
+        if n == 0 {
+            return;
+        }
+        let value = if n == 64 { value } else { value & ((1u64 << n) - 1) };
+        // 1. top up the current partial byte
+        if self.free > 0 {
+            let take = n.min(self.free as u32);
+            let chunk = (value >> (n - take)) as u8;
+            self.free -= take as u8;
+            *self.buf.last_mut().unwrap() |= chunk << self.free;
+            n -= take;
+            if n == 0 {
+                return;
+            }
+        }
+        // 2. whole bytes
+        while n >= 8 {
+            n -= 8;
+            self.buf.push((value >> n) as u8);
+        }
+        // 3. tail bits open a fresh byte
+        if n > 0 {
+            self.free = 8 - n as u8;
+            self.buf.push(((value & ((1 << n) - 1)) as u8) << self.free);
+        }
+    }
+
+    /// Append a full byte (fast path when aligned).
+    pub fn put_u8(&mut self, v: u8) {
+        if self.free == 0 {
+            self.buf.push(v);
+        } else {
+            self.put_bits(v as u64, 8);
+        }
+    }
+
+    /// Append an f32 as its 32 raw bits (headers store full-precision
+    /// floats by default, like the 32-bit-float convention in Lemma 1).
+    pub fn put_f32(&mut self, v: f32) {
+        self.put_bits(v.to_bits() as u64, 32);
+    }
+
+    /// Finish, returning (bytes, exact bit length).
+    pub fn finish(self) -> (Vec<u8>, u64) {
+        let bits = self.bit_len();
+        (self.buf, bits)
+    }
+}
+
+/// Reads bits MSB-first from a byte slice.
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    /// Next bit position.
+    pos: u64,
+    /// Total valid bits (callers may pass the writer's exact `bit_len`).
+    len: u64,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, pos: 0, len: buf.len() as u64 * 8 }
+    }
+
+    /// Reader over an exact number of valid bits.
+    pub fn with_bit_len(buf: &'a [u8], bits: u64) -> Self {
+        debug_assert!(bits <= buf.len() as u64 * 8);
+        BitReader { buf, pos: 0, len: bits }
+    }
+
+    #[inline]
+    pub fn bits_remaining(&self) -> u64 {
+        self.len - self.pos
+    }
+
+    #[inline]
+    pub fn position(&self) -> u64 {
+        self.pos
+    }
+
+    /// Read one bit.
+    #[inline]
+    pub fn get_bit(&mut self) -> Result<bool> {
+        if self.pos >= self.len {
+            bail!("BitReader: out of bits at {}", self.pos);
+        }
+        let byte = self.buf[(self.pos / 8) as usize];
+        let bit = (byte >> (7 - (self.pos % 8))) & 1 == 1;
+        self.pos += 1;
+        Ok(bit)
+    }
+
+    /// Read one bit, returning 0 past end-of-stream. The arithmetic decoder
+    /// needs this: its final state legitimately drains past the last
+    /// written bit (the encoder's implicit trailing zeros).
+    #[inline]
+    pub fn get_bit_or_zero(&mut self) -> bool {
+        if self.pos >= self.len {
+            self.pos += 1;
+            return false;
+        }
+        let byte = self.buf[(self.pos / 8) as usize];
+        let bit = (byte >> (7 - (self.pos % 8))) & 1 == 1;
+        self.pos += 1;
+        bit
+    }
+
+    /// Read `n` bits MSB-first into the low bits of a u64. `n <= 64`.
+    ///
+    /// Word-wise fast path mirroring [`BitWriter::put_bits`].
+    pub fn get_bits(&mut self, mut n: u32) -> Result<u64> {
+        debug_assert!(n <= 64);
+        if n == 0 {
+            return Ok(0);
+        }
+        if self.pos + n as u64 > self.len {
+            bail!("BitReader: out of bits reading {n} at {}", self.pos);
+        }
+        let mut v = 0u64;
+        // 1. finish the current partial byte
+        let offset = (self.pos % 8) as u32;
+        if offset != 0 {
+            let avail = 8 - offset;
+            let byte = self.buf[(self.pos / 8) as usize];
+            let take = n.min(avail);
+            let chunk = (byte >> (avail - take)) & ((1u16 << take) - 1) as u8;
+            v = chunk as u64;
+            self.pos += take as u64;
+            n -= take;
+        }
+        // 2. whole bytes
+        while n >= 8 {
+            v = (v << 8) | self.buf[(self.pos / 8) as usize] as u64;
+            self.pos += 8;
+            n -= 8;
+        }
+        // 3. leading bits of the next byte
+        if n > 0 {
+            let byte = self.buf[(self.pos / 8) as usize];
+            v = (v << n) | (byte >> (8 - n)) as u64;
+            self.pos += n as u64;
+        }
+        Ok(v)
+    }
+
+    pub fn get_f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.get_bits(32)? as u32))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{check, run_prop};
+
+    #[test]
+    fn single_bits_roundtrip() {
+        let mut w = BitWriter::new();
+        let pattern = [true, false, true, true, false, false, true, false, true];
+        for &b in &pattern {
+            w.put_bit(b);
+        }
+        assert_eq!(w.bit_len(), 9);
+        let (bytes, bits) = w.finish();
+        assert_eq!(bytes.len(), 2);
+        let mut r = BitReader::with_bit_len(&bytes, bits);
+        for &b in &pattern {
+            assert_eq!(r.get_bit().unwrap(), b);
+        }
+        assert!(r.get_bit().is_err());
+    }
+
+    #[test]
+    fn msb_first_layout() {
+        let mut w = BitWriter::new();
+        w.put_bits(0b101, 3);
+        let (bytes, _) = w.finish();
+        assert_eq!(bytes, vec![0b1010_0000]);
+    }
+
+    #[test]
+    fn put_bits_get_bits_various_widths() {
+        let mut w = BitWriter::new();
+        w.put_bits(0x3, 2);
+        w.put_bits(0xdead_beef, 32);
+        w.put_bits(0x1_ffff_ffff, 33);
+        w.put_bits(u64::MAX, 64);
+        let (bytes, bits) = w.finish();
+        let mut r = BitReader::with_bit_len(&bytes, bits);
+        assert_eq!(r.get_bits(2).unwrap(), 0x3);
+        assert_eq!(r.get_bits(32).unwrap(), 0xdead_beef);
+        assert_eq!(r.get_bits(33).unwrap(), 0x1_ffff_ffff);
+        assert_eq!(r.get_bits(64).unwrap(), u64::MAX);
+    }
+
+    #[test]
+    fn f32_roundtrip_exact() {
+        let vals = [0.0f32, -0.0, 1.5, -3.25e7, f32::MIN_POSITIVE, f32::MAX];
+        let mut w = BitWriter::new();
+        w.put_bit(true); // misalign on purpose
+        for &v in &vals {
+            w.put_f32(v);
+        }
+        let (bytes, bits) = w.finish();
+        let mut r = BitReader::with_bit_len(&bytes, bits);
+        r.get_bit().unwrap();
+        for &v in &vals {
+            assert_eq!(r.get_f32().unwrap().to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn aligned_byte_fast_path() {
+        let mut w = BitWriter::new();
+        w.put_u8(0xab);
+        w.put_u8(0xcd);
+        let (bytes, bits) = w.finish();
+        assert_eq!(bytes, vec![0xab, 0xcd]);
+        assert_eq!(bits, 16);
+    }
+
+    #[test]
+    fn get_bit_or_zero_past_end() {
+        let mut w = BitWriter::new();
+        w.put_bit(true);
+        let (bytes, bits) = w.finish();
+        let mut r = BitReader::with_bit_len(&bytes, bits);
+        assert!(r.get_bit_or_zero());
+        assert!(!r.get_bit_or_zero());
+        assert!(!r.get_bit_or_zero());
+    }
+
+    #[test]
+    fn prop_random_bit_sequences_roundtrip() {
+        run_prop("bitio_roundtrip", 200, |g| {
+            let n = g.usize_in(0..=512);
+            let mut bits_in = Vec::with_capacity(n);
+            let mut w = BitWriter::new();
+            for _ in 0..n {
+                let b = g.rng().next_u32() & 1 == 1;
+                bits_in.push(b);
+                w.put_bit(b);
+            }
+            let (bytes, bits) = w.finish();
+            check(bits == n as u64, format!("bit_len {bits} != {n}"))?;
+            let mut r = BitReader::with_bit_len(&bytes, bits);
+            for (i, &b) in bits_in.iter().enumerate() {
+                if r.get_bit().map_err(|e| e.to_string())? != b {
+                    return Err(format!("bit {i} mismatch"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_mixed_width_writes_roundtrip() {
+        run_prop("bitio_mixed_widths", 200, |g| {
+            let m = g.usize_in(1..=64);
+            let mut vals = Vec::new();
+            let mut w = BitWriter::new();
+            for _ in 0..m {
+                let width = g.u32_in(1..=64);
+                let v = g.rng().next_u64() & (u64::MAX >> (64 - width));
+                vals.push((v, width));
+                w.put_bits(v, width);
+            }
+            let (bytes, bits) = w.finish();
+            let mut r = BitReader::with_bit_len(&bytes, bits);
+            for &(v, width) in &vals {
+                let got = r.get_bits(width).map_err(|e| e.to_string())?;
+                check(got == v, format!("width={width}: {got:#x} != {v:#x}"))?;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,157 @@
+//! Elias γ and δ universal integer codes (Elias 1975, the paper's
+//! reference [11] — the coding QSGD builds on).
+//!
+//! Used here (a) as one of the histogram-header modes in [`super::histogram`]
+//! and (b) as a standalone comparator coder in the ablation benches.
+//! Both code positive integers `n >= 1`; helpers for `u64 >= 0` shift by one.
+
+use anyhow::Result;
+
+use super::bitio::{BitReader, BitWriter};
+
+/// Number of bits in the γ code of `n` (n >= 1): `2⌊log₂n⌋ + 1`.
+pub fn gamma_len(n: u64) -> u32 {
+    debug_assert!(n >= 1);
+    2 * (63 - n.leading_zeros()) + 1
+}
+
+/// Encode `n >= 1` in Elias γ.
+pub fn put_gamma(w: &mut BitWriter, n: u64) {
+    assert!(n >= 1, "elias gamma encodes n >= 1");
+    let bits = 64 - n.leading_zeros(); // position of MSB + 1
+    for _ in 0..bits - 1 {
+        w.put_bit(false);
+    }
+    w.put_bits(n, bits);
+}
+
+/// Decode one Elias γ value.
+pub fn get_gamma(r: &mut BitReader) -> Result<u64> {
+    let mut zeros = 0u32;
+    while !r.get_bit()? {
+        zeros += 1;
+        anyhow::ensure!(zeros < 64, "malformed gamma code (>= 64 leading zeros)");
+    }
+    let rest = if zeros == 0 { 0 } else { r.get_bits(zeros)? };
+    Ok((1u64 << zeros) | rest)
+}
+
+/// Number of bits in the δ code of `n` (n >= 1).
+pub fn delta_len(n: u64) -> u32 {
+    debug_assert!(n >= 1);
+    let nb = 63 - n.leading_zeros(); // ⌊log₂ n⌋
+    gamma_len(nb as u64 + 1) + nb
+}
+
+/// Encode `n >= 1` in Elias δ (γ-coded bit-length, then the mantissa).
+pub fn put_delta(w: &mut BitWriter, n: u64) {
+    assert!(n >= 1, "elias delta encodes n >= 1");
+    let nb = 63 - n.leading_zeros(); // ⌊log₂ n⌋
+    put_gamma(w, nb as u64 + 1);
+    if nb > 0 {
+        w.put_bits(n & !(1u64 << nb), nb); // mantissa without leading 1
+    }
+}
+
+/// Decode one Elias δ value.
+pub fn get_delta(r: &mut BitReader) -> Result<u64> {
+    let nb = get_gamma(r)? - 1;
+    anyhow::ensure!(nb < 64, "malformed delta code");
+    let mantissa = if nb == 0 { 0 } else { r.get_bits(nb as u32)? };
+    Ok((1u64 << nb) | mantissa)
+}
+
+/// δ-encode a non-negative integer (shifts by one).
+pub fn put_delta_u64(w: &mut BitWriter, n: u64) {
+    put_delta(w, n + 1);
+}
+
+/// Decode the non-negative-integer variant.
+pub fn get_delta_u64(r: &mut BitReader) -> Result<u64> {
+    Ok(get_delta(r)? - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{check, run_prop};
+
+    #[test]
+    fn gamma_known_codewords() {
+        // classic table: 1->"1", 2->"010", 3->"011", 4->"00100"
+        for (n, expect_bits, expect_len) in
+            [(1u64, 0b1u64, 1u32), (2, 0b010, 3), (3, 0b011, 3), (4, 0b00100, 5)]
+        {
+            let mut w = BitWriter::new();
+            put_gamma(&mut w, n);
+            let (bytes, bits) = w.finish();
+            assert_eq!(bits, expect_len as u64, "n={n}");
+            assert_eq!(gamma_len(n), expect_len);
+            let mut r = BitReader::with_bit_len(&bytes, bits);
+            assert_eq!(r.get_bits(expect_len).unwrap(), expect_bits, "n={n}");
+        }
+    }
+
+    #[test]
+    fn delta_known_lengths() {
+        // delta lengths: 1->1, 2->4, 3->4, 4->5, 8->8, 16->9
+        for (n, len) in [(1u64, 1u32), (2, 4), (3, 4), (4, 5), (8, 8), (16, 9)] {
+            assert_eq!(delta_len(n), len, "n={n}");
+            let mut w = BitWriter::new();
+            put_delta(&mut w, n);
+            assert_eq!(w.bit_len(), len as u64, "n={n}");
+        }
+    }
+
+    #[test]
+    fn gamma_rejects_zero() {
+        let result = std::panic::catch_unwind(|| {
+            let mut w = BitWriter::new();
+            put_gamma(&mut w, 0);
+        });
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn boundary_values_roundtrip() {
+        let vals = [1u64, 2, 3, 4, 7, 8, 255, 256, u32::MAX as u64, 1 << 62];
+        for &v in &vals {
+            let mut w = BitWriter::new();
+            put_gamma(&mut w, v);
+            put_delta(&mut w, v);
+            let (bytes, bits) = w.finish();
+            let mut r = BitReader::with_bit_len(&bytes, bits);
+            assert_eq!(get_gamma(&mut r).unwrap(), v);
+            assert_eq!(get_delta(&mut r).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn prop_gamma_delta_roundtrip_with_reported_len() {
+        run_prop("elias_roundtrip", 300, |g| {
+            let n = g.usize_in(1..=40);
+            let mut vals = Vec::new();
+            let mut w = BitWriter::new();
+            let mut expect_bits = 0u64;
+            for _ in 0..n {
+                // bias toward small values but cover the whole range
+                let shift = g.u32_in(0..=62);
+                let v = (g.rng().next_u64() >> shift).max(1);
+                vals.push(v);
+                put_gamma(&mut w, v);
+                put_delta_u64(&mut w, v - 1);
+                expect_bits += gamma_len(v) as u64 + delta_len(v) as u64;
+            }
+            let (bytes, bits) = w.finish();
+            check(bits == expect_bits, format!("len {bits} != predicted {expect_bits}"))?;
+            let mut r = BitReader::with_bit_len(&bytes, bits);
+            for &v in &vals {
+                let a = get_gamma(&mut r).map_err(|e| e.to_string())?;
+                let b = get_delta_u64(&mut r).map_err(|e| e.to_string())?;
+                check(a == v, format!("gamma {a} != {v}"))?;
+                check(b == v - 1, format!("delta {b} != {}", v - 1))?;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,252 @@
+//! The `h_r` histogram header of the variable-length protocol (§4).
+//!
+//! A frame must tell the server how many coordinates landed in each of the
+//! k bins before the entropy-coded payload can be decoded. Theorem 4 budgets
+//! `⌈log₂ C(d+k−1, k−1)⌉ ≤ k log₂((d+k)e/k)` bits for this. We implement:
+//!
+//! * **Enumerative mode** — the exact information-theoretic code: rank the
+//!   composition `(h_0, …, h_{k−1})` of d in lexicographic order and send
+//!   the rank in exactly `⌈log₂ C(d+k−1, k−1)⌉` bits (bignum ranking).
+//! * **Elias-δ mode** — each count as δ(h_r + 1); shorter when the
+//!   histogram is very skewed (most bins empty).
+//!
+//! The encoder computes both, sends a 1-bit selector, then the cheaper one.
+//! Both sides know (d, k) from the protocol config; they are not resent.
+
+use anyhow::{ensure, Result};
+
+use super::bignum::{comp_count, BigUint};
+use super::bitio::{BitReader, BitWriter};
+use super::elias;
+
+/// Bits the enumerative code uses for a (d, k) histogram (excl. selector):
+/// exactly `⌈log₂ C(d+k−1, k−1)⌉`.
+pub fn enumerative_bits(d: u64, k: u64) -> u32 {
+    rank_width(d, k)
+}
+
+fn rank_width(d: u64, k: u64) -> u32 {
+    // Width = ceil(log2 N) where N = number of compositions: the rank is in
+    // [0, N), so (N-1).bits() is exactly the needed width.
+    let mut n = comp_count(d, k);
+    if n.is_zero() {
+        return 0;
+    }
+    n.sub_assign(&BigUint::one());
+    n.bits()
+}
+
+/// Lexicographic rank of the composition `hist` (sum d, k parts).
+fn rank(hist: &[u64], d: u64) -> BigUint {
+    let k = hist.len() as u64;
+    let mut rank = BigUint::zero();
+    let mut rem = d;
+    for (r, &h) in hist.iter().enumerate().take(hist.len() - 1) {
+        let parts_after = k - r as u64 - 1;
+        // term(v) = comp_count(rem - v, parts_after), added for v < h.
+        let mut term = comp_count(rem, parts_after);
+        for v in 0..h {
+            rank.add_assign(&term);
+            // term(v+1) = term(v) * (rem - v) / (rem - v + parts_after - 1)
+            let m = rem - v;
+            term.mul_small(m);
+            let q = m + parts_after - 1;
+            let r0 = term.div_small(q);
+            debug_assert_eq!(r0, 0, "ratio update must be exact");
+        }
+        rem -= h;
+    }
+    rank
+}
+
+/// Inverse of [`rank`]: reconstruct the composition from its rank.
+fn unrank(mut rank: BigUint, d: u64, k: usize) -> Vec<u64> {
+    let mut hist = vec![0u64; k];
+    let mut rem = d;
+    for r in 0..k - 1 {
+        let parts_after = (k - r - 1) as u64;
+        let mut term = comp_count(rem, parts_after);
+        let mut v = 0u64;
+        while !term.is_zero() && rank.cmp_big(&term) != std::cmp::Ordering::Less {
+            rank.sub_assign(&term);
+            let m = rem - v;
+            term.mul_small(m);
+            let q = m + parts_after - 1;
+            let r0 = term.div_small(q);
+            debug_assert_eq!(r0, 0);
+            v += 1;
+        }
+        hist[r] = v;
+        rem -= v;
+    }
+    hist[k - 1] = rem;
+    hist
+}
+
+/// Encode `hist` (must sum to `d`). Returns bits written.
+pub fn encode(w: &mut BitWriter, hist: &[u64], d: u64) -> Result<u64> {
+    ensure!(!hist.is_empty(), "empty histogram");
+    let sum: u64 = hist.iter().sum();
+    ensure!(sum == d, "histogram sums to {sum}, expected {d}");
+    let k = hist.len() as u64;
+
+    let enum_bits = rank_width(d, k) as u64;
+    let delta_bits: u64 = hist.iter().map(|&h| elias::delta_len(h + 1) as u64).sum();
+
+    let before = w.bit_len();
+    if enum_bits <= delta_bits {
+        w.put_bit(false); // selector 0: enumerative
+        rank(hist, d).put_bits(w, enum_bits as u32);
+    } else {
+        w.put_bit(true); // selector 1: elias-delta
+        for &h in hist {
+            elias::put_delta(w, h + 1);
+        }
+    }
+    Ok(w.bit_len() - before)
+}
+
+/// Decode a histogram with known (d, k).
+pub fn decode(r: &mut BitReader, d: u64, k: usize) -> Result<Vec<u64>> {
+    ensure!(k >= 1, "k must be >= 1");
+    let selector = r.get_bit()?;
+    let hist = if !selector {
+        let width = rank_width(d, k as u64);
+        let rank = BigUint::get_bits(r, width)?;
+        unrank(rank, d, k)
+    } else {
+        let mut hist = Vec::with_capacity(k);
+        for _ in 0..k {
+            let v = elias::get_delta(r)?;
+            ensure!(v >= 1, "malformed histogram count");
+            hist.push(v - 1);
+        }
+        hist
+    };
+    let sum: u64 = hist.iter().sum();
+    ensure!(sum == d, "decoded histogram sums to {sum}, expected {d}");
+    Ok(hist)
+}
+
+/// The paper's analytic header bound: `k log₂((d+k)e/k)` bits (Theorem 4).
+pub fn paper_bound_bits(d: u64, k: u64) -> f64 {
+    k as f64 * (((d + k) as f64 * std::f64::consts::E) / k as f64).log2()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{check, run_prop};
+
+    fn roundtrip(hist: &[u64]) -> u64 {
+        let d: u64 = hist.iter().sum();
+        let mut w = BitWriter::new();
+        let bits = encode(&mut w, hist, d).unwrap();
+        let (bytes, blen) = w.finish();
+        assert_eq!(bits, blen);
+        let mut r = BitReader::with_bit_len(&bytes, blen);
+        let got = decode(&mut r, d, hist.len()).unwrap();
+        assert_eq!(got, hist, "roundtrip mismatch");
+        bits
+    }
+
+    #[test]
+    fn small_exhaustive_compositions_roundtrip() {
+        // all compositions of 5 into 3 parts
+        for a in 0..=5u64 {
+            for b in 0..=(5 - a) {
+                let c = 5 - a - b;
+                roundtrip(&[a, b, c]);
+            }
+        }
+    }
+
+    #[test]
+    fn ranks_are_unique_and_dense() {
+        // d=4, k=3: C(6,2)=15 compositions; ranks must be a permutation of 0..15
+        let mut seen = std::collections::HashSet::new();
+        for a in 0..=4u64 {
+            for b in 0..=(4 - a) {
+                let h = [a, b, 4 - a - b];
+                let r = rank(&h, 4);
+                let as_u = r.to_f64() as u64;
+                assert!(seen.insert(as_u), "duplicate rank {as_u} for {h:?}");
+                assert!(as_u < 15);
+                assert_eq!(unrank(rank(&h, 4), 4, 3), h.to_vec());
+            }
+        }
+        assert_eq!(seen.len(), 15);
+    }
+
+    #[test]
+    fn header_cost_within_paper_bound() {
+        // uniform-ish histogram at the paper's scales
+        for (d, k) in [(1024u64, 33usize), (512, 17), (256, 16)] {
+            let base = d / k as u64;
+            let mut hist = vec![base; k];
+            let mut left = d - base * k as u64;
+            let mut i = 0;
+            while left > 0 {
+                hist[i] += 1;
+                left -= 1;
+                i += 1;
+            }
+            let bits = roundtrip(&hist);
+            let bound = paper_bound_bits(d, k as u64) + 1.0; // +1 selector
+            assert!(
+                (bits as f64) <= bound,
+                "d={d} k={k}: bits={bits} > bound={bound:.1}"
+            );
+        }
+    }
+
+    #[test]
+    fn skewed_histogram_picks_delta_mode() {
+        // everything in one bin out of many: delta mode should win and be tiny
+        let mut hist = vec![0u64; 64];
+        hist[0] = 4096;
+        let bits = roundtrip(&hist);
+        // delta: delta(4097) + 63 * delta(1) = ~25 + 63 = ~88 bits
+        assert!(bits < 120, "bits={bits}");
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        roundtrip(&[7]); // k=1: zero information
+        assert_eq!(roundtrip(&[7]), 1); // selector bit only
+        roundtrip(&[0, 0]); // d=0
+        roundtrip(&[3, 0, 0, 0]);
+        roundtrip(&[0, 0, 0, 3]);
+    }
+
+    #[test]
+    fn sum_mismatch_rejected() {
+        let mut w = BitWriter::new();
+        assert!(encode(&mut w, &[1, 2], 5).is_err());
+    }
+
+    #[test]
+    fn prop_random_histograms_roundtrip_under_bound() {
+        run_prop("histogram_roundtrip", 100, |g| {
+            let k = g.usize_in(1..=40);
+            let d = g.usize_in(0..=2000) as u64;
+            // random composition of d into k parts
+            let mut hist = vec![0u64; k];
+            for _ in 0..d {
+                let i = g.rng().next_below(k as u32) as usize;
+                hist[i] += 1;
+            }
+            let mut w = BitWriter::new();
+            let bits = encode(&mut w, &hist, d).map_err(|e| e.to_string())?;
+            let (bytes, blen) = w.finish();
+            let mut r = BitReader::with_bit_len(&bytes, blen);
+            let got = decode(&mut r, d, k).map_err(|e| e.to_string())?;
+            check(got == hist, format!("mismatch {got:?} != {hist:?}"))?;
+            let bound = paper_bound_bits(d, k as u64) + 1.0;
+            check(
+                (bits as f64) <= bound.max(2.0),
+                format!("d={d} k={k} bits={bits} bound={bound:.1}"),
+            )
+        });
+    }
+}

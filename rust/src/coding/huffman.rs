@@ -1,0 +1,349 @@
+//! Canonical Huffman coding over a known symbol histogram.
+//!
+//! The paper (§4) proposes "arithmetic or Huffman coding corresponding to
+//! the distribution p_r = h_r/d". The decoder rebuilds the identical code
+//! from the histogram transmitted in the frame header, so no code table is
+//! ever sent. Codes are *canonical* (sorted by (length, symbol)) which
+//! makes encoder/decoder agreement trivial and decoding table-driven.
+
+use anyhow::{bail, ensure, Result};
+
+use super::bitio::{BitReader, BitWriter};
+
+/// Maximum supported code length. With d ≤ 2²⁰ coordinates per vector a
+/// Huffman code cannot be deeper than ~fib⁻¹(d) ≈ 30; 48 is safely above
+/// anything reachable and keeps the decode accelerations simple.
+const MAX_LEN: usize = 48;
+
+/// A canonical Huffman code built from symbol counts.
+#[derive(Clone, Debug)]
+pub struct HuffmanCode {
+    /// Code length per symbol (0 = symbol absent).
+    lens: Vec<u8>,
+    /// Codeword per symbol (valid when lens[s] > 0), MSB-aligned to len.
+    codes: Vec<u64>,
+    /// Symbols sorted by (len, symbol) — canonical decode order.
+    sorted_syms: Vec<u32>,
+    /// first_code[l] = first canonical codeword of length l.
+    first_code: [u64; MAX_LEN + 1],
+    /// first_idx[l] = index into sorted_syms of the first length-l symbol.
+    first_idx: [u32; MAX_LEN + 1],
+    /// Number of distinct symbols with nonzero count.
+    distinct: usize,
+}
+
+impl HuffmanCode {
+    /// Build from a histogram (`hist[s]` = occurrences of symbol `s`).
+    ///
+    /// Degenerate cases: an empty histogram is rejected; a single distinct
+    /// symbol gets a zero-length code (encoding emits no bits — the count
+    /// and histogram fully determine the payload).
+    pub fn from_histogram(hist: &[u64]) -> Result<Self> {
+        let k = hist.len();
+        ensure!(k >= 1, "empty histogram");
+        ensure!(k <= u32::MAX as usize, "histogram too large");
+        let distinct = hist.iter().filter(|&&h| h > 0).count();
+        ensure!(distinct >= 1, "histogram has no symbols");
+
+        let mut lens = vec![0u8; k];
+        if distinct == 1 {
+            // Zero-bit code: nothing to emit; decoder replays the symbol.
+            let s = hist.iter().position(|&h| h > 0).unwrap();
+            let mut code = HuffmanCode {
+                lens,
+                codes: vec![0; k],
+                sorted_syms: vec![s as u32],
+                first_code: [0; MAX_LEN + 1],
+                first_idx: [0; MAX_LEN + 1],
+                distinct,
+            };
+            code.lens[s] = 0;
+            return Ok(code);
+        }
+
+        // --- Huffman tree via two-queue merge over count-sorted leaves ---
+        // nodes: (count, node_id); children recorded for length assignment.
+        let mut leaves: Vec<(u64, u32)> = hist
+            .iter()
+            .enumerate()
+            .filter(|(_, &h)| h > 0)
+            .map(|(s, &h)| (h, s as u32))
+            .collect();
+        leaves.sort_unstable();
+        let n_leaves = leaves.len();
+        // parent[i] for node i; leaves are 0..n_leaves, internal follow.
+        let mut parent = vec![u32::MAX; 2 * n_leaves - 1];
+        let mut leaf_q: std::collections::VecDeque<(u64, u32)> =
+            leaves.iter().cloned().map(|(c, _)| (c, 0u32)).collect();
+        // assign node ids to leaves in sorted order
+        for (i, item) in leaf_q.iter_mut().enumerate() {
+            item.1 = i as u32;
+        }
+        let mut merge_q: std::collections::VecDeque<(u64, u32)> = Default::default();
+        let mut next_id = n_leaves as u32;
+        let pop_min =
+            |a: &mut std::collections::VecDeque<(u64, u32)>,
+             b: &mut std::collections::VecDeque<(u64, u32)>| {
+                match (a.front(), b.front()) {
+                    (Some(&x), Some(&y)) => {
+                        if x.0 <= y.0 {
+                            a.pop_front().unwrap()
+                        } else {
+                            b.pop_front().unwrap()
+                        }
+                    }
+                    (Some(_), None) => a.pop_front().unwrap(),
+                    (None, Some(_)) => b.pop_front().unwrap(),
+                    (None, None) => unreachable!("both queues empty"),
+                }
+            };
+        while leaf_q.len() + merge_q.len() > 1 {
+            let x = pop_min(&mut leaf_q, &mut merge_q);
+            let y = pop_min(&mut leaf_q, &mut merge_q);
+            parent[x.1 as usize] = next_id;
+            parent[y.1 as usize] = next_id;
+            merge_q.push_back((x.0 + y.0, next_id));
+            next_id += 1;
+        }
+        // depth of each leaf = code length
+        for (i, &(_, sym)) in leaves.iter().enumerate() {
+            let mut depth = 0u8;
+            let mut node = i as u32;
+            while parent[node as usize] != u32::MAX {
+                node = parent[node as usize];
+                depth += 1;
+            }
+            ensure!((depth as usize) <= MAX_LEN, "huffman code too deep: {depth}");
+            lens[sym as usize] = depth;
+        }
+
+        Self::from_lengths(lens)
+    }
+
+    /// Build the canonical code tables from per-symbol lengths.
+    fn from_lengths(lens: Vec<u8>) -> Result<Self> {
+        let k = lens.len();
+        let distinct = lens.iter().filter(|&&l| l > 0).count();
+        let mut sorted_syms: Vec<u32> = (0..k as u32).filter(|&s| lens[s as usize] > 0).collect();
+        sorted_syms.sort_by_key(|&s| (lens[s as usize], s));
+
+        let mut bl_count = [0u64; MAX_LEN + 1];
+        for &l in &lens {
+            if l > 0 {
+                bl_count[l as usize] += 1;
+            }
+        }
+        let mut first_code = [0u64; MAX_LEN + 1];
+        let mut code = 0u64;
+        for l in 1..=MAX_LEN {
+            code = (code + bl_count[l - 1]) << 1;
+            first_code[l] = code;
+        }
+        let mut first_idx = [0u32; MAX_LEN + 1];
+        let mut idx = 0u32;
+        for l in 1..=MAX_LEN {
+            first_idx[l] = idx;
+            idx += bl_count[l] as u32;
+        }
+        let mut codes = vec![0u64; k];
+        let mut next = first_code;
+        for &s in &sorted_syms {
+            let l = lens[s as usize] as usize;
+            codes[s as usize] = next[l];
+            next[l] += 1;
+        }
+        Ok(HuffmanCode { lens, codes, sorted_syms, first_code, first_idx, distinct })
+    }
+
+    /// Code length (bits) of `symbol`; 0 if absent from the histogram.
+    pub fn len_of(&self, symbol: u32) -> u8 {
+        self.lens[symbol as usize]
+    }
+
+    /// Total payload bits to encode `data` under this code.
+    pub fn payload_bits(&self, data: &[u32]) -> u64 {
+        data.iter().map(|&s| self.lens[s as usize] as u64).sum()
+    }
+
+    /// Encode a symbol stream.
+    pub fn encode(&self, w: &mut BitWriter, data: &[u32]) -> Result<()> {
+        if self.distinct == 1 {
+            // zero bits per symbol
+            for &s in data {
+                ensure!(
+                    self.sorted_syms[0] == s,
+                    "symbol {s} not in single-symbol histogram"
+                );
+            }
+            return Ok(());
+        }
+        for &s in data {
+            let l = self.lens[s as usize];
+            ensure!(l > 0, "symbol {s} has zero frequency in histogram");
+            w.put_bits(self.codes[s as usize], l as u32);
+        }
+        Ok(())
+    }
+
+    /// Decode exactly `count` symbols.
+    pub fn decode(&self, r: &mut BitReader, count: usize, out: &mut Vec<u32>) -> Result<()> {
+        out.reserve(count);
+        if self.distinct == 1 {
+            let s = self.sorted_syms[0];
+            out.extend(std::iter::repeat_n(s, count));
+            return Ok(());
+        }
+        for _ in 0..count {
+            let mut code = 0u64;
+            let mut l = 0usize;
+            loop {
+                code = (code << 1) | r.get_bit()? as u64;
+                l += 1;
+                if l > MAX_LEN {
+                    bail!("huffman decode: code longer than MAX_LEN");
+                }
+                // Canonical property: codes of length l occupy
+                // [first_code[l], first_code[l] + bl_count[l]). We can test
+                // membership via the next length's first_code shifted down.
+                let count_l = self.count_at(l);
+                if count_l > 0 && code < self.first_code[l] + count_l {
+                    let off = (code - self.first_code[l]) as u32;
+                    out.push(self.sorted_syms[(self.first_idx[l] + off) as usize]);
+                    break;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    #[inline]
+    fn count_at(&self, l: usize) -> u64 {
+        let hi = if l == MAX_LEN {
+            self.sorted_syms.len() as u32
+        } else {
+            self.first_idx[l + 1]
+        };
+        (hi - self.first_idx[l]) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::histogram_entropy_bits;
+    use crate::testkit::{check, run_prop};
+
+    fn hist_of(data: &[u32], k: usize) -> Vec<u64> {
+        let mut h = vec![0u64; k];
+        for &s in data {
+            h[s as usize] += 1;
+        }
+        h
+    }
+
+    fn roundtrip(data: &[u32], k: usize) -> (Vec<u32>, u64) {
+        let hist = hist_of(data, k);
+        let code = HuffmanCode::from_histogram(&hist).unwrap();
+        let mut w = BitWriter::new();
+        code.encode(&mut w, data).unwrap();
+        let (bytes, bits) = w.finish();
+        assert_eq!(bits, code.payload_bits(data));
+        let mut r = BitReader::with_bit_len(&bytes, bits);
+        let mut out = Vec::new();
+        code.decode(&mut r, data.len(), &mut out).unwrap();
+        (out, bits)
+    }
+
+    #[test]
+    fn simple_roundtrip() {
+        let data = vec![0, 1, 1, 2, 2, 2, 2, 3];
+        let (out, _) = roundtrip(&data, 4);
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn single_symbol_uses_zero_bits() {
+        let data = vec![5u32; 100];
+        let (out, bits) = roundtrip(&data, 8);
+        assert_eq!(out, data);
+        assert_eq!(bits, 0);
+    }
+
+    #[test]
+    fn two_symbols_one_bit_each() {
+        let data = vec![0, 1, 0, 1, 1];
+        let (out, bits) = roundtrip(&data, 2);
+        assert_eq!(out, data);
+        assert_eq!(bits, 5);
+    }
+
+    #[test]
+    fn skewed_distribution_beats_fixed_width() {
+        // 97% zeros over k=16: fixed width is 4 bits/sym; huffman ~1.
+        let mut data = vec![0u32; 970];
+        data.extend((0..30).map(|i| 1 + (i % 15) as u32));
+        let (out, bits) = roundtrip(&data, 16);
+        assert_eq!(out, data);
+        assert!(bits < 2 * data.len() as u64, "bits={bits}");
+    }
+
+    #[test]
+    fn encode_rejects_unseen_symbol() {
+        let hist = vec![3, 0, 1];
+        let code = HuffmanCode::from_histogram(&hist).unwrap();
+        let mut w = BitWriter::new();
+        assert!(code.encode(&mut w, &[1]).is_err());
+    }
+
+    #[test]
+    fn empty_histogram_rejected() {
+        assert!(HuffmanCode::from_histogram(&[]).is_err());
+        assert!(HuffmanCode::from_histogram(&[0, 0]).is_err());
+    }
+
+    #[test]
+    fn within_one_bit_of_entropy_per_symbol() {
+        // Huffman optimality: payload <= (H + 1) * n.
+        let mut data = Vec::new();
+        for (s, c) in [(0u32, 500usize), (1, 250), (2, 125), (3, 125)] {
+            data.extend(std::iter::repeat_n(s, c));
+        }
+        let hist = hist_of(&data, 4);
+        let code = HuffmanCode::from_histogram(&hist).unwrap();
+        let h = histogram_entropy_bits(&hist);
+        let bits = code.payload_bits(&data) as f64;
+        assert!(bits <= (h + 1.0) * data.len() as f64 + 1e-9);
+        // this distribution is dyadic: huffman == entropy exactly
+        assert!((bits - h * data.len() as f64).abs() < 1e-6);
+    }
+
+    #[test]
+    fn prop_roundtrip_random_streams() {
+        run_prop("huffman_roundtrip", 150, |g| {
+            let k = g.usize_in(1..=64);
+            let n = g.usize_in(1..=800);
+            // random skew: draw symbols from a squared distribution
+            let data: Vec<u32> = (0..n)
+                .map(|_| {
+                    let x = g.rng().next_f32();
+                    ((x * x * k as f32) as u32).min(k as u32 - 1)
+                })
+                .collect();
+            let hist = hist_of(&data, k);
+            let code = HuffmanCode::from_histogram(&hist).map_err(|e| e.to_string())?;
+            let mut w = BitWriter::new();
+            code.encode(&mut w, &data).map_err(|e| e.to_string())?;
+            let (bytes, bits) = w.finish();
+            let mut r = BitReader::with_bit_len(&bytes, bits);
+            let mut out = Vec::new();
+            code.decode(&mut r, data.len(), &mut out).map_err(|e| e.to_string())?;
+            check(out == data, "decode mismatch")?;
+            // optimality sanity: within 1 bit/symbol of entropy
+            let h = histogram_entropy_bits(&hist);
+            check(
+                bits as f64 <= (h + 1.0) * n as f64 + 1e-9,
+                format!("bits={bits} entropy={h} n={n}"),
+            )
+        });
+    }
+}

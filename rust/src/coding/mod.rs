@@ -1,0 +1,59 @@
+//! Bit-exact entropy-coding substrates for the variable-length protocol
+//! (paper §4) and the wire frames of every protocol.
+//!
+//! * [`bitio`] — MSB-first bit-level writer/reader.
+//! * [`float`] — r-bit scalar quantizer for frame headers (`X_min`, `s_i`),
+//!   the `Õ(1)` part of each client's cost (Lemma 1).
+//! * [`elias`] — Elias γ/δ universal integer codes (reference [11]; used as
+//!   a histogram-header mode and as a QSGD-style comparator).
+//! * [`huffman`] — canonical Huffman coding over the bin histogram.
+//! * [`arithmetic`] — static arithmetic (range) coding w.r.t. `p_r = h_r/d`,
+//!   the coder Theorem 4's analysis assumes.
+//! * [`histogram`] — the `h_r` header: enumerative code achieving exactly
+//!   `⌈log₂ C(d+k−1, k−1)⌉` bits (the bound used in Theorem 4), plus
+//!   cheaper practical modes.
+
+pub mod arithmetic;
+pub mod bignum;
+pub mod bitio;
+pub mod elias;
+pub mod float;
+pub mod histogram;
+pub mod huffman;
+
+pub use bitio::{BitReader, BitWriter};
+
+/// Entropy of a histogram in bits per symbol: `Σ (h/d) log2(d/h)`.
+/// This is the payload rate arithmetic coding approaches (MacKay [19]).
+pub fn histogram_entropy_bits(hist: &[u64]) -> f64 {
+    let total: u64 = hist.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let d = total as f64;
+    hist.iter()
+        .filter(|&&h| h > 0)
+        .map(|&h| {
+            let p = h as f64 / d;
+            -p * p.log2()
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entropy_uniform_is_log_k() {
+        let h = vec![8u64; 4];
+        assert!((histogram_entropy_bits(&h) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn entropy_degenerate_is_zero() {
+        assert_eq!(histogram_entropy_bits(&[32, 0, 0]), 0.0);
+        assert_eq!(histogram_entropy_bits(&[]), 0.0);
+        assert_eq!(histogram_entropy_bits(&[0, 0]), 0.0);
+    }
+}

@@ -1,0 +1,284 @@
+//! The leader (server) side of the coordinator: drives rounds, enforces
+//! the barrier, decodes uploads, and aggregates per-slot weighted means.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Result};
+
+use super::metrics::{ExperimentMetrics, RoundMetrics};
+use super::transport::{Message, TransportHub, WeightedFrame};
+use crate::protocol::{Protocol, RoundCtx};
+
+/// Result of one coordinated round.
+#[derive(Clone, Debug)]
+pub struct RoundOutcome {
+    /// Aggregated mean per slot (slot = position in each worker's upload,
+    /// e.g. cluster index for Lloyd's; one slot for plain mean estimation).
+    pub means: Vec<Vec<f32>>,
+    /// Total weight per slot.
+    pub weights: Vec<f64>,
+    /// Exact uplink payload bits this round (sum of frame bit lengths).
+    pub uplink_bits: u64,
+    /// Number of non-silent frames received.
+    pub n_frames: usize,
+}
+
+/// The coordinator leader.
+pub struct Leader {
+    protocol: Arc<dyn Protocol>,
+    hub: Box<dyn TransportHub>,
+    seed: u64,
+    metrics: ExperimentMetrics,
+}
+
+impl Leader {
+    pub fn new(protocol: Arc<dyn Protocol>, hub: Box<dyn TransportHub>, seed: u64) -> Self {
+        Leader { protocol, hub, seed, metrics: ExperimentMetrics::default() }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.hub.n_workers()
+    }
+
+    pub fn metrics(&self) -> &ExperimentMetrics {
+        &self.metrics
+    }
+
+    /// Run one synchronous round: broadcast `state` (`n_slots × dim`
+    /// flattened — what the workers need to compute their updates), wait
+    /// for every worker's upload, decode and aggregate.
+    pub fn round(&mut self, round: u64, dim: u32, state: &[f32]) -> Result<RoundOutcome> {
+        let t0 = Instant::now();
+        let n_workers = self.hub.n_workers();
+        ensure!(n_workers > 0, "no workers connected");
+        self.hub.broadcast(&Message::RoundStart {
+            round,
+            dim,
+            payload: state.to_vec(),
+        })?;
+
+        // Barrier: exactly one upload per worker.
+        let mut uploads: Vec<(u64, Vec<WeightedFrame>)> = Vec::with_capacity(n_workers);
+        let mut seen = std::collections::HashSet::new();
+        while uploads.len() < n_workers {
+            match self.hub.recv()? {
+                Message::Upload { client, round: r, frames } => {
+                    ensure!(r == round, "worker {client} answered round {r}, expected {round}");
+                    ensure!(seen.insert(client), "duplicate upload from worker {client}");
+                    uploads.push((client, frames));
+                }
+                Message::RoundStart { .. } | Message::Shutdown => {
+                    bail!("unexpected message at the leader")
+                }
+            }
+        }
+
+        // Deterministic aggregation: decode in client-id order regardless
+        // of arrival order (f32 addition is not associative; without this
+        // the same round could produce different bit patterns run-to-run).
+        uploads.sort_by_key(|(client, _)| *client);
+
+        // Slot count: max over workers (workers with empty shards send 0).
+        let n_slots = uploads.iter().map(|(_, f)| f.len()).max().unwrap_or(0);
+        let ctx = RoundCtx::new(round, self.seed);
+
+        let mut means = Vec::with_capacity(n_slots);
+        let mut weights = Vec::with_capacity(n_slots);
+        let mut uplink_bits = 0u64;
+        let mut n_frames = 0usize;
+
+        for slot in 0..n_slots {
+            // Plain-mean fast path: every present frame has weight 1.0 —
+            // a single accumulator and one finish() (one inverse rotation).
+            let slot_frames: Vec<&WeightedFrame> = uploads
+                .iter()
+                .filter_map(|(_, f)| f.get(slot))
+                .filter(|wf| wf.frame.bit_len > 0)
+                .collect();
+            uplink_bits += slot_frames.iter().map(|wf| wf.frame.bit_len).sum::<u64>();
+            n_frames += slot_frames.len();
+            let holders = uploads.iter().filter(|(_, f)| f.get(slot).is_some()).count();
+
+            let uniform = slot_frames.iter().all(|wf| wf.weight == 1.0);
+            if uniform {
+                let mut acc = self.protocol.new_accumulator();
+                for wf in &slot_frames {
+                    self.protocol.accumulate(&ctx, &wf.frame, &mut acc)?;
+                }
+                means.push(self.protocol.finish(&ctx, acc, holders));
+                weights.push(slot_frames.len() as f64);
+            } else {
+                // Weighted average: decode each frame alone, then combine.
+                let mut sum = vec![0.0f64; self.protocol.dim()];
+                let mut total_w = 0.0f64;
+                for wf in &slot_frames {
+                    let mut acc = self.protocol.new_accumulator();
+                    self.protocol.accumulate(&ctx, &wf.frame, &mut acc)?;
+                    let y = self.protocol.finish_scaled(&ctx, acc, 1.0);
+                    for (s, &v) in sum.iter_mut().zip(&y) {
+                        *s += wf.weight as f64 * v as f64;
+                    }
+                    total_w += wf.weight as f64;
+                }
+                let inv = if total_w > 0.0 { 1.0 / total_w } else { 0.0 };
+                means.push(sum.iter().map(|&v| (v * inv) as f32).collect());
+                weights.push(total_w);
+            }
+        }
+
+        let (down, up) = self.hub.bytes_moved();
+        self.metrics.push(RoundMetrics {
+            round,
+            uplink_bits,
+            n_frames,
+            wall: t0.elapsed(),
+            cum_down_bytes: down,
+            cum_up_bytes: up,
+        });
+        Ok(RoundOutcome { means, weights, uplink_bits, n_frames })
+    }
+
+    /// Broadcast shutdown to all workers.
+    pub fn shutdown(&mut self) -> Result<()> {
+        self.hub.broadcast(&Message::Shutdown)
+    }
+}
+
+/// Spawn `shards.len()` loopback worker threads plus a leader — the
+/// single-process cluster used by examples, tests, and benches.
+pub fn spawn_local_cluster(
+    protocol: Arc<dyn Protocol>,
+    shards: Vec<Vec<Vec<f32>>>,
+    update: super::worker::UpdateFn,
+    seed: u64,
+) -> (Leader, Vec<std::thread::JoinHandle<Result<()>>>) {
+    let n = shards.len();
+    let (hub, endpoints) = super::transport::LoopbackHub::new(n);
+    let mut handles = Vec::with_capacity(n);
+    for (i, (shard, ep)) in shards.into_iter().zip(endpoints).enumerate() {
+        let worker = super::worker::Worker {
+            client_id: i as u64,
+            shard,
+            protocol: protocol.clone(),
+            update: update.clone(),
+            seed,
+        };
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("dme-worker-{i}"))
+                .spawn(move || worker.run_loopback(ep))
+                .expect("spawning worker thread"),
+        );
+    }
+    (Leader::new(protocol, Box::new(hub), seed), handles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::worker::mean_update;
+    use crate::protocol::config::ProtocolConfig;
+    use crate::stats;
+
+    fn cluster(
+        spec: &str,
+        d: usize,
+        shards: Vec<Vec<Vec<f32>>>,
+    ) -> (Leader, Vec<std::thread::JoinHandle<Result<()>>>) {
+        let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+        spawn_local_cluster(proto, shards, mean_update(), 42)
+    }
+
+    #[test]
+    fn mean_estimation_round_over_loopback() {
+        let d = 32;
+        let shards: Vec<Vec<Vec<f32>>> =
+            (0..5).map(|i| vec![vec![i as f32 * 0.1; d]]).collect();
+        let client_means: Vec<Vec<f32>> =
+            shards.iter().map(|s| s[0].clone()).collect();
+        let truth = stats::true_mean(&client_means);
+        let (mut leader, handles) = cluster("klevel:k=64", d, shards);
+        let out = leader.round(0, d as u32, &[]).unwrap();
+        assert_eq!(out.means.len(), 1);
+        assert_eq!(out.n_frames, 5);
+        assert!(out.uplink_bits > 0);
+        let err = stats::sq_error(&out.means[0], &truth);
+        assert!(err < 1e-3, "err={err}");
+        leader.shutdown().unwrap();
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+    }
+
+    #[test]
+    fn multiple_rounds_and_metrics() {
+        let d = 16;
+        let shards: Vec<Vec<Vec<f32>>> = (0..3).map(|_| vec![vec![1.0; d]]).collect();
+        let (mut leader, handles) = cluster("binary", d, shards);
+        for r in 0..4 {
+            leader.round(r, d as u32, &[]).unwrap();
+        }
+        assert_eq!(leader.metrics().rounds.len(), 4);
+        let m = &leader.metrics().rounds[3];
+        assert_eq!(m.round, 3);
+        assert!(m.cum_up_bytes >= m.uplink_bits / 8);
+        leader.shutdown().unwrap();
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+    }
+
+    #[test]
+    fn weighted_slots_aggregate_correctly() {
+        // Two workers, one slot, weights 1 and 3: mean = (1*a + 3*b)/4.
+        let d = 8;
+        let proto = ProtocolConfig::parse("float32", d).unwrap().build().unwrap();
+        let update: super::super::worker::UpdateFn = Arc::new(move |_b, _dim, shard| {
+            let w = shard[0][0]; // smuggle the weight via the shard
+            vec![(vec![w; 8], w)]
+        });
+        let shards = vec![vec![vec![1.0f32; d]], vec![vec![3.0f32; d]]];
+        let (mut leader, handles) =
+            spawn_local_cluster(proto, shards, update, 7);
+        let out = leader.round(0, d as u32, &[]).unwrap();
+        let expect = (1.0 * 1.0 + 3.0 * 3.0) / 4.0;
+        for &v in &out.means[0] {
+            assert!((v - expect).abs() < 1e-6, "{v} vs {expect}");
+        }
+        assert_eq!(out.weights[0], 4.0);
+        leader.shutdown().unwrap();
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+    }
+
+    #[test]
+    fn sampling_protocol_keeps_barrier() {
+        // With p=0.5 some workers stay silent; the round must still finish
+        // and remain unbiased thanks to Lemma 8 scaling.
+        let d = 16;
+        let n = 40;
+        let shards: Vec<Vec<Vec<f32>>> = (0..n).map(|_| vec![vec![2.0; d]]).collect();
+        let (mut leader, handles) = cluster("klevel:k=32,p=0.5", d, shards);
+        let mut est_sum = vec![0.0f64; d];
+        let rounds = 60;
+        for r in 0..rounds {
+            let out = leader.round(r, d as u32, &[]).unwrap();
+            assert!(out.n_frames < n); // some silenced (overwhelmingly likely)
+            for (s, &v) in est_sum.iter_mut().zip(&out.means[0]) {
+                *s += v as f64;
+            }
+        }
+        // Per-round std of each coordinate is 2·√((1−p)/(np)) ≈ 0.32;
+        // over 60 rounds the mean's std is ≈ 0.041 — allow ~6σ.
+        for &s in &est_sum {
+            let mean = s / rounds as f64;
+            assert!((mean - 2.0).abs() < 0.25, "mean {mean} vs 2.0");
+        }
+        leader.shutdown().unwrap();
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+    }
+}

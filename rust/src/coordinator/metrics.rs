@@ -1,0 +1,121 @@
+//! Coordinator metrics: per-round and cumulative communication/latency
+//! accounting, printed by the CLI and consumed by the bench harness.
+
+use std::time::Duration;
+
+/// One round's numbers.
+#[derive(Clone, Debug)]
+pub struct RoundMetrics {
+    pub round: u64,
+    /// Exact protocol payload bits this round (excludes transport framing).
+    pub uplink_bits: u64,
+    /// Non-silent frames decoded.
+    pub n_frames: usize,
+    /// Leader-observed wall time for the round.
+    pub wall: Duration,
+    /// Cumulative transport-level bytes after this round.
+    pub cum_down_bytes: u64,
+    pub cum_up_bytes: u64,
+}
+
+/// Whole-experiment metrics.
+#[derive(Clone, Debug, Default)]
+pub struct ExperimentMetrics {
+    pub rounds: Vec<RoundMetrics>,
+}
+
+impl ExperimentMetrics {
+    pub fn push(&mut self, m: RoundMetrics) {
+        self.rounds.push(m);
+    }
+
+    /// Total protocol payload bits across all rounds.
+    pub fn total_uplink_bits(&self) -> u64 {
+        self.rounds.iter().map(|m| m.uplink_bits).sum()
+    }
+
+    /// Total wall time across rounds.
+    pub fn total_wall(&self) -> Duration {
+        self.rounds.iter().map(|m| m.wall).sum()
+    }
+
+    /// Average bits per round.
+    pub fn avg_bits_per_round(&self) -> f64 {
+        if self.rounds.is_empty() {
+            0.0
+        } else {
+            self.total_uplink_bits() as f64 / self.rounds.len() as f64
+        }
+    }
+
+    /// Rounds per second over the whole run.
+    pub fn rounds_per_sec(&self) -> f64 {
+        let secs = self.total_wall().as_secs_f64();
+        if secs > 0.0 {
+            self.rounds.len() as f64 / secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Transport overhead ratio: transport bytes vs payload bytes on the
+    /// uplink (framing, weights, headers).
+    pub fn uplink_overhead(&self) -> f64 {
+        let payload = self.total_uplink_bits() as f64 / 8.0;
+        let wire = self.rounds.last().map(|m| m.cum_up_bytes).unwrap_or(0) as f64;
+        if payload > 0.0 {
+            wire / payload
+        } else {
+            0.0
+        }
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} rounds, {:.2} Mbit uplink ({:.1} kbit/round), {:.1} rounds/s, transport overhead {:.2}x",
+            self.rounds.len(),
+            self.total_uplink_bits() as f64 / 1e6,
+            self.avg_bits_per_round() / 1e3,
+            self.rounds_per_sec(),
+            self.uplink_overhead(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(round: u64, bits: u64, up: u64) -> RoundMetrics {
+        RoundMetrics {
+            round,
+            uplink_bits: bits,
+            n_frames: 2,
+            wall: Duration::from_millis(10),
+            cum_down_bytes: 100,
+            cum_up_bytes: up,
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let mut em = ExperimentMetrics::default();
+        em.push(m(0, 800, 150));
+        em.push(m(1, 1200, 350));
+        assert_eq!(em.total_uplink_bits(), 2000);
+        assert_eq!(em.avg_bits_per_round(), 1000.0);
+        assert!(em.rounds_per_sec() > 0.0);
+        // payload = 250 bytes, wire = 350
+        assert!((em.uplink_overhead() - 1.4).abs() < 1e-9);
+        assert!(em.summary().contains("2 rounds"));
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let em = ExperimentMetrics::default();
+        assert_eq!(em.avg_bits_per_round(), 0.0);
+        assert_eq!(em.uplink_overhead(), 0.0);
+        assert_eq!(em.rounds_per_sec(), 0.0);
+    }
+}

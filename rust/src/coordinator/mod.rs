@@ -1,0 +1,31 @@
+//! The leader/worker coordinator: the deployment shell around the
+//! protocols.
+//!
+//! The paper's communication model is synchronous and round-based: the
+//! leader broadcasts the current model state (cluster centers, eigenvector
+//! estimate, …), every worker computes a local update from its data shard,
+//! encodes it with the configured [`Protocol`](crate::protocol::Protocol),
+//! and uploads the frame; the leader decodes, aggregates, and advances to
+//! the next round.
+//!
+//! * [`transport`] — the wire: an in-process loopback with exact byte
+//!   accounting, and a TCP transport for running workers as separate
+//!   processes. One message format for both.
+//! * [`worker`] — the client side: shard + update function + encoder.
+//! * [`leader`] — the server side: round barrier, decode, aggregate.
+//! * [`metrics`] — per-round and cumulative communication/latency metrics.
+//!
+//! Threading: plain `std::thread` + channels. The round barrier is the
+//! natural synchronization point of the paper's model (all clients answer
+//! every round — or stay silent under sampling, which the protocol layer
+//! decides); an async runtime would buy nothing here.
+
+pub mod leader;
+pub mod metrics;
+pub mod transport;
+pub mod worker;
+
+pub use leader::{Leader, RoundOutcome};
+pub use metrics::{ExperimentMetrics, RoundMetrics};
+pub use transport::{LoopbackHub, Message, TcpHub, TransportHub};
+pub use worker::{UpdateFn, Worker};

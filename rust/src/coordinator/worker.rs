@@ -1,0 +1,170 @@
+//! The worker (client) side of the coordinator: holds a data shard,
+//! computes a local update from each broadcast state, and uploads the
+//! protocol-encoded frames.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::transport::{LoopbackEndpoint, Message, WeightedFrame};
+use crate::protocol::{Protocol, RoundCtx};
+
+/// The application hook: given the broadcast state (`n_vecs × dim`,
+/// flattened) and the worker's local shard, produce the update vectors to
+/// transmit, each with a weight (e.g. cluster sizes in Lloyd's; 1.0 for
+/// plain mean estimation).
+pub type UpdateFn =
+    Arc<dyn Fn(&[f32], u32, &[Vec<f32>]) -> Vec<(Vec<f32>, f32)> + Send + Sync>;
+
+/// A worker: one simulated client.
+pub struct Worker {
+    pub client_id: u64,
+    pub shard: Vec<Vec<f32>>,
+    pub protocol: Arc<dyn Protocol>,
+    pub update: UpdateFn,
+    /// Experiment seed (must match the leader's so public randomness —
+    /// the rotation — agrees).
+    pub seed: u64,
+}
+
+impl Worker {
+    /// Compute and encode this round's upload.
+    pub fn step(&self, round: u64, dim: u32, broadcast: &[f32]) -> Message {
+        let ctx = RoundCtx::new(round, self.seed);
+        let updates = (self.update)(broadcast, dim, &self.shard);
+        let mut frames = Vec::with_capacity(updates.len());
+        for (slot, (vec, weight)) in updates.into_iter().enumerate() {
+            debug_assert_eq!(vec.len(), self.protocol.dim(), "update has wrong dim");
+            // Each slot (e.g. cluster index) gets its own private stream so
+            // rounding noise is independent across slots: fold the slot
+            // into the client id (ids are dense and < 2^32 in practice).
+            let stream_id = self.client_id | ((slot as u64) << 40);
+            if let Some(frame) = self.protocol.encode(&ctx, stream_id, &vec) {
+                frames.push(WeightedFrame { frame, weight });
+            } else {
+                // Sampling silenced this slot: an empty frame keeps slot
+                // alignment (weight 0 contributes nothing server-side).
+                frames.push(WeightedFrame {
+                    frame: crate::protocol::Frame::new(Vec::new(), 0),
+                    weight: 0.0,
+                });
+            }
+        }
+        Message::Upload { client: self.client_id, round, frames }
+    }
+
+    /// Run the worker loop over a loopback endpoint until Shutdown.
+    pub fn run_loopback(&self, ep: LoopbackEndpoint) -> Result<()> {
+        loop {
+            match ep.recv()? {
+                Message::RoundStart { round, dim, payload } => {
+                    ep.send(self.step(round, dim, &payload))?;
+                }
+                Message::Shutdown => return Ok(()),
+                Message::Upload { .. } => bail!("worker received an Upload message"),
+            }
+        }
+    }
+
+    /// Run the worker loop over TCP (the `dme worker` subcommand).
+    pub fn run_tcp(&self, addr: &str) -> Result<()> {
+        let mut ep = super::transport::TcpEndpoint::connect(addr)?;
+        loop {
+            match ep.recv()? {
+                Message::RoundStart { round, dim, payload } => {
+                    let reply = self.step(round, dim, &payload);
+                    ep.send(&reply)?;
+                }
+                Message::Shutdown => return Ok(()),
+                Message::Upload { .. } => bail!("worker received an Upload message"),
+            }
+        }
+    }
+}
+
+/// The identity update: ignore the broadcast and transmit the shard mean
+/// (plain distributed mean estimation of per-client vectors).
+pub fn mean_update() -> UpdateFn {
+    Arc::new(|_broadcast, _dim, shard| {
+        if shard.is_empty() {
+            return Vec::new();
+        }
+        let refs: Vec<&[f32]> = shard.iter().map(|v| v.as_slice()).collect();
+        vec![(crate::linalg::mean_of(&refs), 1.0)]
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::config::ProtocolConfig;
+
+    #[test]
+    fn step_produces_one_frame_per_update() {
+        let proto = ProtocolConfig::parse("klevel:k=4", 8).unwrap().build().unwrap();
+        let w = Worker {
+            client_id: 3,
+            shard: vec![vec![1.0; 8], vec![3.0; 8]],
+            protocol: proto,
+            update: mean_update(),
+            seed: 1,
+        };
+        match w.step(0, 8, &[]) {
+            Message::Upload { client, round, frames } => {
+                assert_eq!(client, 3);
+                assert_eq!(round, 0);
+                assert_eq!(frames.len(), 1);
+                assert!(frames[0].frame.bit_len > 0);
+                assert_eq!(frames[0].weight, 1.0);
+            }
+            _ => panic!("expected Upload"),
+        }
+    }
+
+    #[test]
+    fn empty_shard_uploads_nothing() {
+        let proto = ProtocolConfig::parse("binary", 4).unwrap().build().unwrap();
+        let w = Worker {
+            client_id: 0,
+            shard: vec![],
+            protocol: proto,
+            update: mean_update(),
+            seed: 1,
+        };
+        match w.step(0, 4, &[]) {
+            Message::Upload { frames, .. } => assert!(frames.is_empty()),
+            _ => panic!("expected Upload"),
+        }
+    }
+
+    #[test]
+    fn slots_use_distinct_private_streams() {
+        // Two identical update vectors in different slots must encode with
+        // different rounding noise.
+        let proto = ProtocolConfig::parse("klevel:k=4", 8).unwrap().build().unwrap();
+        let update: UpdateFn = Arc::new(|_, _, _| {
+            vec![(vec![0.3; 8], 1.0), (vec![0.3; 8], 1.0)]
+        });
+        let w = Worker { client_id: 1, shard: vec![vec![0.0; 8]], protocol: proto, update, seed: 5 };
+        match w.step(0, 8, &[]) {
+            Message::Upload { frames, .. } => {
+                assert_eq!(frames.len(), 2);
+                // constant vectors quantize exactly -> frames equal; use a
+                // non-constant vector instead for the real assertion below
+            }
+            _ => panic!(),
+        }
+        let proto2 = ProtocolConfig::parse("klevel:k=4", 8).unwrap().build().unwrap();
+        let update2: UpdateFn = Arc::new(|_, _, _| {
+            let v: Vec<f32> = (0..8).map(|i| i as f32 * 0.17).collect();
+            vec![(v.clone(), 1.0), (v, 1.0)]
+        });
+        let w2 = Worker { client_id: 1, shard: vec![], protocol: proto2, update: update2, seed: 5 };
+        match w2.step(0, 8, &[]) {
+            Message::Upload { frames, .. } => {
+                assert_ne!(frames[0].frame.bytes, frames[1].frame.bytes);
+            }
+            _ => panic!(),
+        }
+    }
+}

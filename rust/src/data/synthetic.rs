@@ -1,0 +1,190 @@
+//! Synthetic dataset generators (all deterministic in the seed).
+//!
+//! * [`gaussian`] — iid N(0, 1) rows: the generic benchmark data.
+//! * [`unbalanced`] — Figure 1's dataset: 1000 points, d = 256, first 255
+//!   dims N(0,1), last dim N(100,1).
+//! * [`unit_sphere`] — uniform on the unit sphere (the §3 motivating case
+//!   where max−min is already O(√(log d / d))).
+//! * [`mnist_like`] / [`cifar_like`] — stand-ins for the paper's MNIST
+//!   (d=1024) and CIFAR (d=512): mixtures of class prototypes with
+//!   structured (smooth) correlations and per-class noise, matching the
+//!   dimension and the clustered geometry that Lloyd's / power iteration
+//!   experiments exercise. See DESIGN.md §3 for the substitution rationale.
+
+use super::{data_rng, Dataset};
+use crate::linalg;
+
+/// `n` iid standard-Gaussian rows of dimension `d`.
+pub fn gaussian(n: usize, d: usize, seed: u64) -> Dataset {
+    let mut rng = data_rng(seed);
+    let rows = (0..n)
+        .map(|_| {
+            let mut x = vec![0.0f32; d];
+            rng.fill_gaussian_f32(&mut x);
+            x
+        })
+        .collect();
+    Dataset::new(format!("gaussian(n={n},d={d})"), rows)
+}
+
+/// Figure 1's unbalanced data: dims 0..d−1 ~ N(0,1), last dim ~ N(μ,1).
+pub fn unbalanced(n: usize, d: usize, mu: f32, seed: u64) -> Dataset {
+    let mut rng = data_rng(seed ^ 0x1);
+    let rows = (0..n)
+        .map(|_| {
+            let mut x = vec![0.0f32; d];
+            rng.fill_gaussian_f32(&mut x);
+            x[d - 1] += mu;
+            x
+        })
+        .collect();
+    Dataset::new(format!("unbalanced(n={n},d={d},mu={mu})"), rows)
+}
+
+/// Uniform on the unit sphere.
+pub fn unit_sphere(n: usize, d: usize, seed: u64) -> Dataset {
+    let mut rng = data_rng(seed ^ 0x2);
+    let rows = (0..n)
+        .map(|_| {
+            let mut x = vec![0.0f32; d];
+            rng.fill_gaussian_f32(&mut x);
+            linalg::normalize(&mut x);
+            x
+        })
+        .collect();
+    Dataset::new(format!("sphere(n={n},d={d})"), rows)
+}
+
+/// Shared engine for the image-like generators: `classes` smooth
+/// prototypes on a `side × side` grid, plus correlated noise, clipped to
+/// [0, 1] like pixel intensities, with a small fraction of near-zero
+/// background pixels (images are sparse at the margins).
+fn image_like(
+    name: &str,
+    n: usize,
+    side: usize,
+    classes: usize,
+    noise: f32,
+    seed: u64,
+) -> Dataset {
+    let d = side * side;
+    let mut rng = data_rng(seed ^ 0x3);
+    // Class prototypes: sums of random smooth 2-D bumps.
+    let mut protos = Vec::with_capacity(classes);
+    for _ in 0..classes {
+        let mut proto = vec![0.0f32; d];
+        let bumps = 3 + rng.next_below(4) as usize;
+        for _ in 0..bumps {
+            let cx = rng.next_f32() * side as f32;
+            let cy = rng.next_f32() * side as f32;
+            let sigma = 1.5 + rng.next_f32() * (side as f32 / 4.0);
+            let amp = 0.4 + rng.next_f32() * 0.6;
+            for yy in 0..side {
+                for xx in 0..side {
+                    let dx = xx as f32 - cx;
+                    let dy = yy as f32 - cy;
+                    let g = (-(dx * dx + dy * dy) / (2.0 * sigma * sigma)).exp();
+                    proto[yy * side + xx] += amp * g;
+                }
+            }
+        }
+        for v in proto.iter_mut() {
+            *v = v.clamp(0.0, 1.0);
+        }
+        protos.push(proto);
+    }
+    // Rows: prototype + smooth jitter + pixel noise, clipped to [0, 1].
+    let rows = (0..n)
+        .map(|i| {
+            let c = i % classes;
+            let shift = (rng.next_f32() - 0.5) * 2.0; // per-sample brightness
+            let mut x = protos[c].clone();
+            for v in x.iter_mut() {
+                let eps = rng.gaussian() as f32 * noise;
+                *v = (*v * (1.0 + 0.1 * shift) + eps).clamp(0.0, 1.0);
+            }
+            x
+        })
+        .collect();
+    Dataset::new(format!("{name}(n={n},d={d})"), rows)
+}
+
+/// MNIST stand-in: 32×32 = 1024 dims (the paper pads MNIST to d = 1024),
+/// 10 classes, sparse smooth strokes.
+pub fn mnist_like(n: usize, seed: u64) -> Dataset {
+    image_like("mnist_like", n, 32, 10, 0.08, seed)
+}
+
+/// CIFAR stand-in: 512 dims (the paper uses d = 512 features), 10 classes,
+/// denser textures. 512 is not a square; generate 32×16 grid.
+pub fn cifar_like(n: usize, seed: u64) -> Dataset {
+    let mut ds = image_like("cifar_like", n, 32, 10, 0.15, seed ^ 0x9);
+    // Crop each 1024-dim image to its top half -> d = 512.
+    for r in ds.rows.iter_mut() {
+        r.truncate(512);
+    }
+    Dataset::new(format!("cifar_like(n={n},d=512)"), ds.rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats;
+
+    #[test]
+    fn gaussian_moments_sane() {
+        let ds = gaussian(200, 64, 1);
+        assert_eq!(ds.dim, 64);
+        let avg = stats::avg_norm_sq(&ds.rows);
+        // E||x||^2 = d
+        assert!((avg - 64.0).abs() < 8.0, "avg={avg}");
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        assert_eq!(gaussian(5, 8, 42).rows, gaussian(5, 8, 42).rows);
+        assert_ne!(gaussian(5, 8, 42).rows, gaussian(5, 8, 43).rows);
+    }
+
+    #[test]
+    fn unbalanced_last_dim_dominates() {
+        let ds = unbalanced(100, 256, 100.0, 7);
+        let mean_last: f64 =
+            ds.rows.iter().map(|r| r[255] as f64).sum::<f64>() / ds.len() as f64;
+        assert!((mean_last - 100.0).abs() < 1.0, "mean_last={mean_last}");
+        let mean_first: f64 =
+            ds.rows.iter().map(|r| r[0] as f64).sum::<f64>() / ds.len() as f64;
+        assert!(mean_first.abs() < 1.0);
+    }
+
+    #[test]
+    fn sphere_rows_unit_norm() {
+        let ds = unit_sphere(50, 128, 3);
+        for r in &ds.rows {
+            assert!((crate::linalg::norm(r) - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn image_like_in_pixel_range_and_clustered() {
+        let ds = mnist_like(100, 5);
+        assert_eq!(ds.dim, 1024);
+        for r in &ds.rows {
+            assert!(r.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        }
+        // Same-class rows must be closer than cross-class rows on average.
+        let d_same = crate::linalg::dist_sq(&ds.rows[0], &ds.rows[10]);
+        let d_cross = crate::linalg::dist_sq(&ds.rows[0], &ds.rows[5]);
+        assert!(
+            d_same < d_cross,
+            "same-class {d_same} should be < cross-class {d_cross}"
+        );
+    }
+
+    #[test]
+    fn cifar_like_dimension() {
+        let ds = cifar_like(20, 1);
+        assert_eq!(ds.dim, 512);
+        assert_eq!(ds.len(), 20);
+    }
+}

@@ -1,0 +1,64 @@
+//! # dme — Distributed Mean Estimation with Limited Communication
+//!
+//! A production-grade reproduction of Suresh, Yu, Kumar, McMahan,
+//! *Distributed Mean Estimation with Limited Communication* (ICML 2017),
+//! as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the communication protocols with bit-exact
+//!   encoders/decoders, a leader/worker coordinator, the application
+//!   drivers (distributed Lloyd's, distributed power iteration), and the
+//!   bench harness that regenerates every figure in the paper.
+//! * **L2/L1 (python/, build-time only)** — JAX graphs + Pallas kernels
+//!   for the numeric hot-spots (Hadamard rotation, stochastic k-level
+//!   quantization), AOT-lowered to HLO text in `artifacts/` and executed
+//!   from Rust via PJRT ([`runtime`]). Python never runs on the request
+//!   path.
+//!
+//! ## Protocols (paper section → module)
+//!
+//! | π | paper | module |
+//! |---|-------|--------|
+//! | `π_sb` stochastic binary | §2.1 | [`protocol::binary`] |
+//! | `π_sk` stochastic k-level | §2.2 | [`protocol::klevel`] |
+//! | `π_srk` stochastic rotated | §3 | [`protocol::rotated`] |
+//! | `π_svk` variable-length coded | §4 | [`protocol::varlen`] |
+//! | `π_p` client sampling | §5 | [`protocol::sampling`] |
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use dme::protocol::{Protocol, RoundCtx, config::ProtocolConfig};
+//!
+//! let d = 256;
+//! let cfg = ProtocolConfig::rotated(d, 16);
+//! let proto = cfg.build().unwrap();
+//! let ctx = RoundCtx::new(/*round=*/ 0, /*seed=*/ 42);
+//!
+//! // clients encode...
+//! let xs: Vec<Vec<f32>> = (0..10).map(|_| vec![0.1; d]).collect();
+//! let frames: Vec<_> = xs.iter().enumerate()
+//!     .filter_map(|(i, x)| proto.encode(&ctx, i as u64, x))
+//!     .collect();
+//!
+//! // ...server decodes and averages
+//! let mut acc = proto.new_accumulator();
+//! for f in &frames { proto.accumulate(&ctx, f, &mut acc).unwrap(); }
+//! let mean = proto.finish(&ctx, acc, xs.len());
+//! ```
+
+pub mod apps;
+pub mod bench;
+pub mod cli;
+pub mod coding;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod protocol;
+pub mod report;
+pub mod rng;
+pub mod rotation;
+pub mod runtime;
+pub mod stats;
+pub mod testkit;
+
+pub use protocol::{Accumulator, Frame, Protocol, RoundCtx};

@@ -1,0 +1,180 @@
+//! Small dense linear-algebra helpers used by the protocols and the
+//! application drivers (no external BLAS; everything here is `f32` slices).
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+/// Squared ℓ₂ norm (accumulated in f64 for stability).
+#[inline]
+pub fn norm_sq(x: &[f32]) -> f64 {
+    x.iter().map(|&v| v as f64 * v as f64).sum()
+}
+
+/// ℓ₂ norm.
+#[inline]
+pub fn norm(x: &[f32]) -> f64 {
+    norm_sq(x).sqrt()
+}
+
+/// Squared ℓ₂ distance between two vectors.
+#[inline]
+pub fn dist_sq(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = x as f64 - y as f64;
+            d * d
+        })
+        .sum()
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `x *= alpha`.
+#[inline]
+pub fn scale(x: &mut [f32], alpha: f32) {
+    for v in x {
+        *v *= alpha;
+    }
+}
+
+/// Normalize `x` to unit ℓ₂ norm in place; returns the original norm.
+/// A zero vector is left untouched.
+pub fn normalize(x: &mut [f32]) -> f64 {
+    let n = norm(x);
+    if n > 0.0 {
+        scale(x, (1.0 / n) as f32);
+    }
+    n
+}
+
+/// (min, max) of a slice. Panics on empty input.
+#[inline]
+pub fn min_max(x: &[f32]) -> (f32, f32) {
+    assert!(!x.is_empty(), "min_max of empty slice");
+    let mut lo = x[0];
+    let mut hi = x[0];
+    for &v in &x[1..] {
+        if v < lo {
+            lo = v;
+        }
+        if v > hi {
+            hi = v;
+        }
+    }
+    (lo, hi)
+}
+
+/// Index of the minimum value (first occurrence). Panics on empty input.
+pub fn argmin(x: &[f64]) -> usize {
+    assert!(!x.is_empty(), "argmin of empty slice");
+    let mut best = 0;
+    for i in 1..x.len() {
+        if x[i] < x[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Mean of `rows` (each a d-vector) → d-vector. Panics if rows is empty.
+pub fn mean_of(rows: &[&[f32]]) -> Vec<f32> {
+    assert!(!rows.is_empty());
+    let d = rows[0].len();
+    let mut acc = vec![0.0f64; d];
+    for r in rows {
+        debug_assert_eq!(r.len(), d);
+        for (a, &v) in acc.iter_mut().zip(r.iter()) {
+            *a += v as f64;
+        }
+    }
+    let inv = 1.0 / rows.len() as f64;
+    acc.iter().map(|&v| (v * inv) as f32).collect()
+}
+
+/// Dense symmetric matvec `y = (Aᵀ A / n) v` given data rows of A — the
+/// covariance-style operator used by power iteration. `rows` are the data
+/// points; computes `(1/rows.len()) Σ_i x_i (x_i · v)`.
+pub fn cov_matvec(rows: &[Vec<f32>], v: &[f32]) -> Vec<f32> {
+    let d = v.len();
+    let mut y = vec![0.0f32; d];
+    for x in rows {
+        let c = dot(x, v) as f32;
+        axpy(c, x, &mut y);
+    }
+    let inv = 1.0 / rows.len().max(1) as f32;
+    scale(&mut y, inv);
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_and_norms() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [4.0, -5.0, 6.0];
+        assert_eq!(dot(&a, &b), 12.0);
+        assert_eq!(norm_sq(&a), 14.0);
+        assert!((norm(&a) - 14.0f64.sqrt()).abs() < 1e-12);
+        assert_eq!(dist_sq(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn axpy_scale_normalize() {
+        let x = [1.0f32, 0.0, -1.0];
+        let mut y = [1.0f32, 1.0, 1.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [3.0, 1.0, -1.0]);
+        scale(&mut y, 0.5);
+        assert_eq!(y, [1.5, 0.5, -0.5]);
+        let mut v = [3.0f32, 4.0];
+        let n = normalize(&mut v);
+        assert!((n - 5.0).abs() < 1e-12);
+        assert!((norm(&v) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn normalize_zero_vector_is_noop() {
+        let mut z = [0.0f32; 4];
+        assert_eq!(normalize(&mut z), 0.0);
+        assert_eq!(z, [0.0; 4]);
+    }
+
+    #[test]
+    fn min_max_and_argmin() {
+        assert_eq!(min_max(&[3.0, -1.0, 2.0]), (-1.0, 3.0));
+        assert_eq!(argmin(&[3.0, -1.0, 2.0]), 1);
+        assert_eq!(argmin(&[1.0, 1.0]), 0);
+    }
+
+    #[test]
+    fn mean_of_rows() {
+        let r1 = [0.0f32, 2.0];
+        let r2 = [4.0f32, 6.0];
+        let m = mean_of(&[&r1, &r2]);
+        assert_eq!(m, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn cov_matvec_matches_manual() {
+        let rows = vec![vec![1.0f32, 0.0], vec![0.0f32, 2.0]];
+        let v = [1.0f32, 1.0];
+        let y = cov_matvec(&rows, &v);
+        // (x1 (x1·v) + x2 (x2·v)) / 2 = ([1,0]*1 + [0,2]*2) / 2 = [0.5, 2.0]
+        assert_eq!(y, vec![0.5, 2.0]);
+    }
+}

@@ -1,0 +1,257 @@
+//! `dme` — the coordinator CLI.
+//!
+//! ```text
+//! dme estimate --dim 256 --clients 100 --protocol rotated:k=16 [--trials 20]
+//!              [--data gaussian|unbalanced|sphere|mnist|cifar] [--backend pjrt]
+//! dme kmeans   --data mnist --clients 10 --centers 10 --iters 10 --protocol varlen
+//! dme power    --data cifar --clients 100 --iters 10 --protocol rotated:k=32
+//! dme serve    --addr 0.0.0.0:7070 --workers 4 --dim 256 --protocol varlen --rounds 10
+//! dme worker   --connect host:7070 --dim 256 --protocol varlen [--points 100]
+//! dme info
+//! ```
+//!
+//! `--protocol` specs: `float32 | binary | klevel:k=16 | rotated:k=16 |
+//! varlen[:k=17][,coder=huffman] | <any>:p=0.25` (client sampling).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use dme::apps::{kmeans, power_iteration};
+use dme::cli::Args;
+use dme::coordinator::leader::Leader;
+use dme::coordinator::transport::TcpHub;
+use dme::coordinator::worker::{mean_update, Worker};
+use dme::data::{synthetic, Dataset};
+use dme::protocol::config::ProtocolConfig;
+use dme::protocol::{run_round, RoundCtx};
+use dme::runtime::{artifacts::Manifest, ComputeBackend, PjrtBackend};
+use dme::stats;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.command() {
+        Some("estimate") => cmd_estimate(&args),
+        Some("kmeans") => cmd_kmeans(&args),
+        Some("power") => cmd_power(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("worker") => cmd_worker(&args),
+        Some("info") => cmd_info(&args),
+        Some(other) => bail!("unknown command `{other}` (try: estimate kmeans power serve worker info)"),
+        None => {
+            println!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "dme — Distributed Mean Estimation with Limited Communication (ICML 2017)
+
+commands:
+  estimate   one-shot distributed mean estimation; reports MSE & bits
+  kmeans     distributed Lloyd's with quantized uplink (paper Fig. 2)
+  power      distributed power iteration with quantized uplink (paper Fig. 3)
+  serve      TCP leader (workers connect with `dme worker`)
+  worker     TCP worker process
+  info       show compiled artifacts and available backends
+
+see README.md for all flags.";
+
+fn build_protocol(args: &Args, dim: usize) -> Result<Arc<dyn dme::Protocol>> {
+    let spec = args.get("protocol", "rotated:k=16".to_string())?;
+    let mut cfg = ProtocolConfig::parse(&spec, dim)?;
+    if args.get("backend", "native".to_string())?.as_str() == "pjrt" {
+        let backend: Arc<dyn ComputeBackend> =
+            Arc::new(PjrtBackend::new().context("starting PJRT backend")?);
+        cfg = cfg.with_backend(backend);
+    }
+    cfg.build()
+}
+
+fn load_data(args: &Args, n: usize, dim: usize, seed: u64) -> Result<Dataset> {
+    let name = args.get("data", "gaussian".to_string())?;
+    Ok(match name.as_str() {
+        "gaussian" => synthetic::gaussian(n, dim, seed),
+        "unbalanced" => synthetic::unbalanced(n, dim, 100.0, seed),
+        "sphere" => synthetic::unit_sphere(n, dim, seed),
+        "mnist" => synthetic::mnist_like(n, seed),
+        "cifar" => synthetic::cifar_like(n, seed),
+        path => Dataset::from_f32_file(path, dim)
+            .with_context(|| format!("loading `{path}` as raw f32 rows of dim {dim}"))?,
+    })
+}
+
+fn cmd_estimate(args: &Args) -> Result<()> {
+    let dim = args.get("dim", 256usize)?;
+    let n = args.get("clients", 100usize)?;
+    let trials = args.get("trials", 20u64)?;
+    let seed = args.get("seed", 42u64)?;
+    let data = load_data(args, n, dim, seed)?;
+    let dim = data.dim; // mnist/cifar override --dim
+    let proto = build_protocol(args, dim)?;
+    args.reject_unknown()?;
+
+    let truth = stats::true_mean(&data.rows);
+    let avg_sq = stats::avg_norm_sq(&data.rows);
+    let mut err = stats::Running::new();
+    let mut bits = stats::Running::new();
+    for t in 0..trials {
+        let ctx = RoundCtx::new(t, seed);
+        let (est, b) = run_round(proto.as_ref(), &ctx, &data.rows)?;
+        err.push(stats::sq_error(&est, &truth));
+        bits.push(b as f64);
+    }
+    println!("protocol       : {}", proto.name());
+    println!("data           : {} (n={n}, d={dim})", data.name);
+    println!("trials         : {trials}");
+    println!("MSE            : {:.6e} ± {:.1e}", err.mean(), err.ci95());
+    if let Some(bound) = proto.mse_bound(n, avg_sq) {
+        println!(
+            "analytic bound : {:.6e}  (measured/bound = {:.3})",
+            bound,
+            err.mean() / bound.max(1e-300)
+        );
+    }
+    println!("bits/client    : {:.1}", bits.mean() / n as f64);
+    println!("bits/dim/client: {:.3}", bits.mean() / (n * dim) as f64);
+    Ok(())
+}
+
+fn cmd_kmeans(args: &Args) -> Result<()> {
+    let n_points = args.get("points", 1000usize)?;
+    let dim = args.get("dim", 1024usize)?;
+    let seed = args.get("seed", 17u64)?;
+    let data = load_data(args, n_points, dim, seed)?;
+    let proto = build_protocol(args, data.dim)?;
+    let cfg = kmeans::KMeansConfig {
+        n_centers: args.get("centers", 10usize)?,
+        n_clients: args.get("clients", 10usize)?,
+        iters: args.get("iters", 10usize)?,
+        seed,
+    };
+    args.reject_unknown()?;
+    println!(
+        "distributed Lloyd's: {} on {} ({} clients, {} centers)",
+        proto.name(),
+        data.name,
+        cfg.n_clients,
+        cfg.n_centers
+    );
+    let result = kmeans::run(&data.rows, proto, &cfg)?;
+    println!("{:>5} {:>16} {:>14} {:>12}", "iter", "objective", "cum kbits", "bits/dim");
+    for r in &result.rounds {
+        println!(
+            "{:>5} {:>16.4} {:>14.1} {:>12.2}",
+            r.iter,
+            r.objective,
+            r.cum_bits as f64 / 1e3,
+            r.cum_bits as f64 / data.dim as f64
+        );
+    }
+    println!("avg bits/dim/iter: {:.3}", result.bits_per_dim_per_iter);
+    Ok(())
+}
+
+fn cmd_power(args: &Args) -> Result<()> {
+    let n_points = args.get("points", 1000usize)?;
+    let dim = args.get("dim", 512usize)?;
+    let seed = args.get("seed", 29u64)?;
+    let data = load_data(args, n_points, dim, seed)?;
+    let proto = build_protocol(args, data.dim)?;
+    let cfg = power_iteration::PowerConfig {
+        n_clients: args.get("clients", 100usize)?,
+        iters: args.get("iters", 10usize)?,
+        seed,
+    };
+    args.reject_unknown()?;
+    println!(
+        "distributed power iteration: {} on {} ({} clients)",
+        proto.name(),
+        data.name,
+        cfg.n_clients
+    );
+    let result = power_iteration::run(&data.rows, proto, &cfg)?;
+    println!("{:>5} {:>16} {:>14} {:>12}", "iter", "eig distance", "cum kbits", "bits/dim");
+    for r in &result.rounds {
+        println!(
+            "{:>5} {:>16.6} {:>14.1} {:>12.2}",
+            r.iter,
+            r.eig_dist,
+            r.cum_bits as f64 / 1e3,
+            r.cum_bits as f64 / data.dim as f64
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let addr = args.get("addr", "127.0.0.1:7070".to_string())?;
+    let n_workers = args.get("workers", 2usize)?;
+    let dim = args.get("dim", 256usize)?;
+    let rounds = args.get("rounds", 10u64)?;
+    let seed = args.get("seed", 42u64)?;
+    let proto = build_protocol(args, dim)?;
+    args.reject_unknown()?;
+    println!("leader: listening on {addr} for {n_workers} workers ({})", proto.name());
+    let hub = TcpHub::listen(&addr, n_workers)?;
+    let mut leader = Leader::new(proto, Box::new(hub), seed);
+    for r in 0..rounds {
+        let out = leader.round(r, dim as u32, &[])?;
+        println!(
+            "round {r}: {} frames, {:.1} kbit uplink, mean[0..4] = {:?}",
+            out.n_frames,
+            out.uplink_bits as f64 / 1e3,
+            &out.means.first().map(|m| m[..m.len().min(4)].to_vec()).unwrap_or_default()
+        );
+    }
+    leader.shutdown()?;
+    println!("{}", leader.metrics().summary());
+    Ok(())
+}
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    let addr = args.require("connect")?;
+    let dim = args.get("dim", 256usize)?;
+    let n_points = args.get("points", 100usize)?;
+    let client_id = args.get("id", std::process::id() as u64)?;
+    let seed = args.get("seed", 42u64)?;
+    let proto = build_protocol(args, dim)?;
+    let data = load_data(args, n_points, dim, seed ^ client_id)?;
+    args.reject_unknown()?;
+    println!("worker {client_id}: connecting to {addr} ({})", proto.name());
+    let worker = Worker {
+        client_id,
+        shard: data.rows,
+        protocol: proto,
+        update: mean_update(),
+        seed,
+    };
+    worker.run_tcp(&addr)
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    args.reject_unknown()?;
+    println!("dme {} — Distributed Mean Estimation (ICML 2017)", env!("CARGO_PKG_VERSION"));
+    let dir = Manifest::default_dir();
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts      : {} entries in {}", m.len(), dir.display());
+            println!("compiled dims  : {:?}", m.dims());
+            match PjrtBackend::new() {
+                Ok(_) => println!("pjrt backend   : available (CPU)"),
+                Err(e) => println!("pjrt backend   : UNAVAILABLE ({e})"),
+            }
+        }
+        Err(e) => println!("artifacts      : none ({e})"),
+    }
+    println!("native backend : available");
+    println!("protocols      : float32 binary klevel rotated varlen qsgd (+wrappers p= q=)");
+    Ok(())
+}

@@ -1,0 +1,199 @@
+//! π_sb — stochastic binary quantization (paper §2.1).
+//!
+//! Each coordinate is rounded to `X_i^max` w.p. `(X_i(j) − X_i^min)/range`
+//! and to `X_i^min` otherwise (unbiased). The frame is two header scalars
+//! plus exactly one bit per coordinate: `d + Õ(1)` bits (Lemma 1). The MSE
+//! is `Θ(d/n)` × average squared norm (Lemmas 2–4) — the warm-up the
+//! rotated and variable-length protocols improve on.
+
+use anyhow::{ensure, Result};
+
+use super::{Accumulator, Frame, Protocol, RoundCtx};
+use crate::coding::bitio::{BitReader, BitWriter};
+use crate::coding::float::ScalarCodec;
+use crate::linalg;
+
+/// Stochastic binary quantization protocol.
+#[derive(Clone, Debug)]
+pub struct BinaryProtocol {
+    dim: usize,
+    /// Codec for the two header scalars (default exact f32).
+    pub header: ScalarCodec,
+}
+
+impl BinaryProtocol {
+    pub fn new(dim: usize) -> Self {
+        BinaryProtocol { dim, header: ScalarCodec::Exact32 }
+    }
+
+    pub fn with_header(mut self, header: ScalarCodec) -> Self {
+        self.header = header;
+        self
+    }
+
+    /// Exact per-client frame size in bits.
+    pub fn frame_bits(&self) -> u64 {
+        self.dim as u64 + 2 * self.header.bits() as u64
+    }
+}
+
+impl Protocol for BinaryProtocol {
+    fn name(&self) -> String {
+        "binary".into()
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn encode(&self, ctx: &RoundCtx, client_id: u64, x: &[f32]) -> Option<Frame> {
+        assert_eq!(x.len(), self.dim, "dimension mismatch");
+        let mut private = ctx.private(client_id);
+        let (lo, hi) = linalg::min_max(x);
+        let mut w = BitWriter::with_capacity(self.frame_bits() as usize);
+        // Header first: quantize against the *decoded* scalars so client
+        // and server use identical grid endpoints.
+        let lo_t = self.header.put(&mut w, lo);
+        let hi_t = self.header.put(&mut w, hi);
+        let range = hi_t - lo_t;
+        for &xj in x {
+            let p = if range > 0.0 { ((xj - lo_t) / range).clamp(0.0, 1.0) } else { 0.0 };
+            w.put_bit(private.next_f32() < p);
+        }
+        let (bytes, bits) = w.finish();
+        Some(Frame::new(bytes, bits))
+    }
+
+    fn new_accumulator(&self) -> Accumulator {
+        Accumulator::new(self.dim)
+    }
+
+    fn accumulate(&self, _ctx: &RoundCtx, frame: &Frame, acc: &mut Accumulator) -> Result<()> {
+        ensure!(acc.sum.len() == self.dim, "accumulator dimension mismatch");
+        let mut r = BitReader::with_bit_len(&frame.bytes, frame.bit_len);
+        let lo = self.header.get(&mut r)?;
+        let hi = self.header.get(&mut r)?;
+        ensure!(r.bits_remaining() >= self.dim as u64, "frame too short");
+        for a in acc.sum.iter_mut() {
+            *a += if r.get_bit()? { hi } else { lo };
+        }
+        acc.frames += 1;
+        Ok(())
+    }
+
+    fn finish_scaled(&self, _ctx: &RoundCtx, acc: Accumulator, divisor: f64) -> Vec<f32> {
+        let inv = if divisor > 0.0 { (1.0 / divisor) as f32 } else { 0.0 };
+        acc.sum.iter().map(|&v| v * inv).collect()
+    }
+
+    fn mse_bound(&self, n: usize, avg_norm_sq: f64) -> Option<f64> {
+        // Lemma 3: E <= d/(2n) * avg ||X||^2.
+        Some(self.dim as f64 / (2.0 * n as f64) * avg_norm_sq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::test_support::{gaussian_clients, measure_mse};
+    use crate::protocol::run_round;
+    use crate::stats;
+
+    #[test]
+    fn frame_cost_is_d_plus_header() {
+        let proto = BinaryProtocol::new(64);
+        let ctx = RoundCtx::new(0, 1);
+        let x = vec![1.0f32; 64];
+        let f = proto.encode(&ctx, 0, &x).unwrap();
+        assert_eq!(f.bit_len, 64 + 2 * 32);
+        assert_eq!(f.bit_len, proto.frame_bits());
+    }
+
+    #[test]
+    fn constant_vector_decodes_exactly() {
+        let proto = BinaryProtocol::new(16);
+        let ctx = RoundCtx::new(0, 2);
+        let xs = vec![vec![3.5f32; 16]; 4];
+        let (est, _) = run_round(&proto, &ctx, &xs).unwrap();
+        for v in est {
+            assert_eq!(v, 3.5);
+        }
+    }
+
+    #[test]
+    fn estimate_is_unbiased_across_rounds() {
+        let proto = BinaryProtocol::new(8);
+        let xs = gaussian_clients(4, 8, 3);
+        let truth = stats::true_mean(&xs);
+        let mut acc_est = vec![0.0f64; 8];
+        let trials = 3000;
+        for t in 0..trials {
+            let ctx = RoundCtx::new(t, 77);
+            let (est, _) = run_round(&proto, &ctx, &xs).unwrap();
+            for (a, &e) in acc_est.iter_mut().zip(&est) {
+                *a += e as f64;
+            }
+        }
+        for (j, &a) in acc_est.iter().enumerate() {
+            let mean = a / trials as f64;
+            assert!(
+                (mean - truth[j] as f64).abs() < 0.05,
+                "coord {j}: {mean} vs {}",
+                truth[j]
+            );
+        }
+    }
+
+    #[test]
+    fn mse_within_lemma3_bound_and_near_lemma2_exact() {
+        let d = 32;
+        let xs = gaussian_clients(8, d, 5);
+        let proto = BinaryProtocol::new(d);
+        let (mse, _) = measure_mse(&proto, &xs, 300, 11);
+        let bound = proto.mse_bound(xs.len(), stats::avg_norm_sq(&xs)).unwrap();
+        assert!(mse <= bound, "mse {mse} > bound {bound}");
+        // Lemma 2 exact MSE:
+        let exact: f64 = xs
+            .iter()
+            .map(|x| {
+                let (lo, hi) = crate::linalg::min_max(x);
+                x.iter()
+                    .map(|&v| (hi as f64 - v as f64) * (v as f64 - lo as f64))
+                    .sum::<f64>()
+            })
+            .sum::<f64>()
+            / (xs.len() * xs.len()) as f64;
+        assert!(
+            (mse - exact).abs() / exact < 0.25,
+            "measured {mse} vs exact lemma2 {exact}"
+        );
+    }
+
+    #[test]
+    fn lemma4_worst_case_is_near_tight() {
+        // X_i = (1/√2, −1/√2, 0, …, 0): Lemma 4 says E >= (d−2)/(2n)·avg‖X‖².
+        let d = 32;
+        let n = 4;
+        let mut x = vec![0.0f32; d];
+        x[0] = 1.0 / 2.0f32.sqrt();
+        x[1] = -1.0 / 2.0f32.sqrt();
+        let xs = vec![x; n];
+        let proto = BinaryProtocol::new(d);
+        let (mse, _) = measure_mse(&proto, &xs, 400, 13);
+        let avg = stats::avg_norm_sq(&xs); // = 1
+        let lower = (d as f64 - 2.0) / (2.0 * n as f64) * avg;
+        let upper = d as f64 / (2.0 * n as f64) * avg;
+        assert!(mse >= lower * 0.85, "mse {mse} << lemma4 lower {lower}");
+        assert!(mse <= upper * 1.15, "mse {mse} >> lemma3 upper {upper}");
+    }
+
+    #[test]
+    fn truncated_frame_is_an_error() {
+        let proto = BinaryProtocol::new(16);
+        let ctx = RoundCtx::new(0, 1);
+        let f = proto.encode(&ctx, 0, &vec![1.0f32, -1.0].repeat(8)).unwrap();
+        let cut = Frame::new(f.bytes[..8].to_vec(), 64);
+        let mut acc = proto.new_accumulator();
+        assert!(proto.accumulate(&ctx, &cut, &mut acc).is_err());
+    }
+}

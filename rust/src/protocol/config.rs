@@ -1,0 +1,298 @@
+//! Protocol configuration and registry: a declarative description of a
+//! protocol stack (kind + k + coder + span + sampling + backend) that can
+//! be built from code or parsed from a CLI spec string.
+//!
+//! Spec grammar (used by the `dme` CLI and the bench harness):
+//!
+//! ```text
+//! float32
+//! binary
+//! klevel:k=16
+//! rotated:k=32
+//! varlen:k=33,coder=huffman
+//! varlen                      # k defaults to sqrt(d)+1
+//! klevel:k=16,p=0.25          # any protocol + client sampling
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::binary::BinaryProtocol;
+use super::coordsample::CoordSampledProtocol;
+use super::float32::Float32Protocol;
+use super::klevel::KLevelProtocol;
+use super::quantizer::Span;
+use super::rotated::RotatedProtocol;
+use super::qsgd::QsgdProtocol;
+use super::sampling::SampledProtocol;
+use super::varlen::{Coder, VarlenProtocol};
+use super::Protocol;
+use crate::runtime::engine::ComputeBackend;
+
+/// Which base protocol to build.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Float32,
+    Binary,
+    KLevel,
+    Rotated,
+    Varlen,
+    Qsgd,
+}
+
+/// Declarative protocol description.
+#[derive(Clone)]
+pub struct ProtocolConfig {
+    pub kind: Kind,
+    pub dim: usize,
+    /// Quantization levels (ignored by float32/binary). 0 = sqrt(d)+1.
+    pub k: u32,
+    /// Entropy coder for varlen.
+    pub coder: Coder,
+    /// Span rule for klevel/varlen.
+    pub span: Span,
+    /// Client sampling probability (1.0 = no sampling wrapper).
+    pub p: f64,
+    /// Coordinate sampling probability (1.0 = no wrapper). Incompatible
+    /// with `rotated` (the rotation mixes coordinates before quantization).
+    pub q: f64,
+    /// Numeric backend (None = native).
+    pub backend: Option<Arc<dyn ComputeBackend>>,
+}
+
+impl ProtocolConfig {
+    pub fn new(kind: Kind, dim: usize) -> Self {
+        ProtocolConfig {
+            kind,
+            dim,
+            k: 16,
+            coder: Coder::Arithmetic,
+            span: Span::MinMax,
+            p: 1.0,
+            q: 1.0,
+            backend: None,
+        }
+    }
+
+    pub fn float32(dim: usize) -> Self {
+        Self::new(Kind::Float32, dim)
+    }
+
+    pub fn binary(dim: usize) -> Self {
+        Self::new(Kind::Binary, dim)
+    }
+
+    pub fn klevel(dim: usize, k: u32) -> Self {
+        Self::new(Kind::KLevel, dim).with_k(k)
+    }
+
+    pub fn rotated(dim: usize, k: u32) -> Self {
+        Self::new(Kind::Rotated, dim).with_k(k)
+    }
+
+    pub fn varlen(dim: usize, k: u32) -> Self {
+        Self::new(Kind::Varlen, dim).with_k(k)
+    }
+
+    pub fn with_k(mut self, k: u32) -> Self {
+        self.k = k;
+        self
+    }
+
+    pub fn with_sampling(mut self, p: f64) -> Self {
+        self.p = p;
+        self
+    }
+
+    pub fn with_coder(mut self, coder: Coder) -> Self {
+        self.coder = coder;
+        self
+    }
+
+    pub fn with_span(mut self, span: Span) -> Self {
+        self.span = span;
+        self
+    }
+
+    pub fn with_backend(mut self, backend: Arc<dyn ComputeBackend>) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// Effective k (resolving the `0 = sqrt(d)+1` default).
+    pub fn effective_k(&self) -> u32 {
+        if self.k == 0 {
+            (self.dim as f64).sqrt() as u32 + 1
+        } else {
+            self.k
+        }
+    }
+
+    /// Parse a CLI spec like `rotated:k=16,p=0.5` for dimension `dim`.
+    pub fn parse(spec: &str, dim: usize) -> Result<Self> {
+        let (name, args) = match spec.split_once(':') {
+            Some((n, a)) => (n, a),
+            None => (spec, ""),
+        };
+        let kind = match name {
+            "float32" | "raw" => Kind::Float32,
+            "binary" | "sb" => Kind::Binary,
+            "klevel" | "uniform" | "sk" => Kind::KLevel,
+            "rotated" | "rotation" | "srk" => Kind::Rotated,
+            "varlen" | "variable" | "svk" => Kind::Varlen,
+            "qsgd" | "elias" => Kind::Qsgd,
+            other => bail!("unknown protocol `{other}` (try float32|binary|klevel|rotated|varlen)"),
+        };
+        let mut cfg = Self::new(kind, dim);
+        if kind == Kind::Varlen {
+            cfg.k = 0; // default sqrt(d)+1 unless overridden
+        }
+        for kv in args.split(',').filter(|s| !s.is_empty()) {
+            let (key, val) = kv
+                .split_once('=')
+                .with_context(|| format!("bad protocol arg `{kv}` (expected key=value)"))?;
+            match key {
+                "k" => cfg.k = val.parse().context("bad k")?,
+                "p" => cfg.p = val.parse().context("bad p")?,
+                "q" => cfg.q = val.parse().context("bad q")?,
+                "coder" => {
+                    cfg.coder = match val {
+                        "arith" | "arithmetic" => Coder::Arithmetic,
+                        "huff" | "huffman" => Coder::Huffman,
+                        other => bail!("unknown coder `{other}`"),
+                    }
+                }
+                "span" => {
+                    cfg.span = match val {
+                        "minmax" => Span::MinMax,
+                        "norm" => Span::Norm,
+                        other => bail!("unknown span `{other}`"),
+                    }
+                }
+                other => bail!("unknown protocol arg `{other}`"),
+            }
+        }
+        ensure!(cfg.p > 0.0 && cfg.p <= 1.0, "p must be in (0, 1]");
+        ensure!(cfg.q > 0.0 && cfg.q <= 1.0, "q must be in (0, 1]");
+        Ok(cfg)
+    }
+
+    /// Build the protocol stack.
+    pub fn build(&self) -> Result<Arc<dyn Protocol>> {
+        let k = self.effective_k();
+        ensure!(self.dim >= 1, "dim must be >= 1");
+        if !matches!(self.kind, Kind::Float32 | Kind::Binary) {
+            ensure!(k >= 2, "k must be >= 2");
+        }
+        let base: Arc<dyn Protocol> = match self.kind {
+            Kind::Float32 => Arc::new(Float32Protocol::new(self.dim)),
+            Kind::Binary => Arc::new(BinaryProtocol::new(self.dim)),
+            Kind::KLevel => {
+                let mut p = KLevelProtocol::new(self.dim, k).with_span(self.span);
+                if let Some(b) = &self.backend {
+                    p = p.with_backend(b.clone());
+                }
+                Arc::new(p)
+            }
+            Kind::Rotated => {
+                let mut p = RotatedProtocol::new(self.dim, k);
+                if let Some(b) = &self.backend {
+                    p = p.with_backend(b.clone());
+                }
+                Arc::new(p)
+            }
+            Kind::Varlen => {
+                let mut p = VarlenProtocol::new(self.dim, k)
+                    .with_span(self.span)
+                    .with_coder(self.coder);
+                if let Some(b) = &self.backend {
+                    p = p.with_backend(b.clone());
+                }
+                Arc::new(p)
+            }
+            Kind::Qsgd => Arc::new(QsgdProtocol::new(self.dim, k)),
+        };
+        let base = if self.q < 1.0 {
+            ensure!(
+                self.kind != Kind::Rotated,
+                "coordinate sampling (q<1) is incompatible with `rotated`: \
+                 the rotation mixes coordinates before quantization"
+            );
+            Arc::new(CoordSampledProtocol::new(base, self.q)) as Arc<dyn Protocol>
+        } else {
+            base
+        };
+        Ok(if self.p < 1.0 {
+            Arc::new(SampledProtocol::new(base, self.p))
+        } else {
+            base
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic_specs() {
+        for (spec, want_name) in [
+            ("float32", "float32"),
+            ("binary", "binary"),
+            ("klevel:k=8", "klevel(k=8)"),
+            ("rotated:k=32", "rotated(k=32)"),
+            ("varlen:k=12,coder=huffman", "varlen(k=12, huff)"),
+        ] {
+            let proto = ProtocolConfig::parse(spec, 64).unwrap().build().unwrap();
+            assert_eq!(proto.name(), want_name, "spec={spec}");
+        }
+    }
+
+    #[test]
+    fn varlen_defaults_to_sqrt_d() {
+        let cfg = ProtocolConfig::parse("varlen", 256).unwrap();
+        assert_eq!(cfg.effective_k(), 17);
+        assert_eq!(cfg.build().unwrap().name(), "varlen(k=17, arith)");
+    }
+
+    #[test]
+    fn sampling_wrapper_applied() {
+        let proto = ProtocolConfig::parse("klevel:k=4,p=0.5", 16).unwrap().build().unwrap();
+        assert!(proto.name().starts_with("sampled(p=0.5"));
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        assert!(ProtocolConfig::parse("nonsense", 8).is_err());
+        assert!(ProtocolConfig::parse("klevel:k", 8).is_err());
+        assert!(ProtocolConfig::parse("klevel:q=3", 8).is_err());
+        assert!(ProtocolConfig::parse("klevel:p=0", 8).is_err());
+        assert!(ProtocolConfig::parse("varlen:coder=zip", 8).is_err());
+        assert!(ProtocolConfig::klevel(8, 1).build().is_err());
+    }
+
+    #[test]
+    fn coordinate_sampling_specs() {
+        let proto = ProtocolConfig::parse("klevel:k=4,q=0.5", 16).unwrap().build().unwrap();
+        assert!(proto.name().starts_with("coordsampled(q=0.5"));
+        // stacked: coord sampling inside, client sampling outside
+        let proto = ProtocolConfig::parse("klevel:k=4,q=0.5,p=0.5", 16).unwrap().build().unwrap();
+        assert!(proto.name().starts_with("sampled(p=0.5, coordsampled"));
+        assert!(ProtocolConfig::parse("rotated:k=4,q=0.5", 16).unwrap().build().is_err());
+        assert!(ProtocolConfig::parse("klevel:q=0", 16).is_err());
+    }
+
+    #[test]
+    fn all_kinds_build_and_run() {
+        use crate::protocol::{run_round, RoundCtx};
+        let xs: Vec<Vec<f32>> = (0..4).map(|i| vec![i as f32 * 0.1; 32]).collect();
+        for spec in ["float32", "binary", "klevel:k=4", "rotated:k=4", "varlen:k=6", "qsgd:k=8"] {
+            let proto = ProtocolConfig::parse(spec, 32).unwrap().build().unwrap();
+            let ctx = RoundCtx::new(0, 7);
+            let (est, bits) = run_round(proto.as_ref(), &ctx, &xs).unwrap();
+            assert_eq!(est.len(), 32, "spec={spec}");
+            assert!(bits > 0, "spec={spec}");
+        }
+    }
+}

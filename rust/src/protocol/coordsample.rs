@@ -1,0 +1,181 @@
+//! Coordinate-sampling wrapper — §5's closing remark: "similar analysis
+//! also holds for sampling the coordinates."
+//!
+//! Each client transmits a random fraction `q` of its coordinates (chosen
+//! from its private randomness; the indices are *not* transmitted — the
+//! server regenerates them from the same stream context is impossible
+//! since the stream is private, so the frame carries a seed-free bitmap
+//! alternative: we derive the coordinate mask from the client's *auxiliary
+//! private stream*, whose seed inputs (seed, round, client id) the server
+//! also knows — the paper's footnote-1 shared-seed trick applied per
+//! client). The estimator scales surviving coordinates by `1/q`, keeping
+//! the estimate unbiased with MSE
+//! `E/q + (1−q)/(nq) · avg‖X‖²`-style degradation, mirroring Lemma 8
+//! coordinate-wise.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::{Accumulator, Frame, Protocol, RoundCtx};
+
+/// Coordinate-sampling wrapper: transmit each coordinate w.p. `q` through
+/// the inner protocol (silenced coordinates are zeroed before encoding and
+/// revived as zero contributions server-side).
+pub struct CoordSampledProtocol {
+    inner: Arc<dyn Protocol>,
+    q: f64,
+}
+
+impl CoordSampledProtocol {
+    pub fn new(inner: Arc<dyn Protocol>, q: f64) -> Self {
+        assert!(q > 0.0 && q <= 1.0, "coordinate probability must be in (0, 1]");
+        CoordSampledProtocol { inner, q }
+    }
+
+    pub fn q(&self) -> f64 {
+        self.q
+    }
+
+    /// The coordinate mask of `client` this round. Derived from the
+    /// auxiliary private stream (server and client both derive it; the
+    /// mask itself never crosses the wire).
+    fn mask(&self, ctx: &RoundCtx, client_id: u64) -> Vec<bool> {
+        let mut coin = ctx.private_aux(client_id ^ 0xc00d);
+        (0..self.inner.dim()).map(|_| coin.bernoulli(self.q)).collect()
+    }
+}
+
+impl Protocol for CoordSampledProtocol {
+    fn name(&self) -> String {
+        format!("coordsampled(q={}, {})", self.q, self.inner.name())
+    }
+
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn encode(&self, ctx: &RoundCtx, client_id: u64, x: &[f32]) -> Option<Frame> {
+        let mask = self.mask(ctx, client_id);
+        // Zero the dropped coordinates; the inner quantizer then encodes a
+        // sparser vector (varlen inner protocols get real bit savings, and
+        // the zeros shrink the min-max span on one side).
+        let sparse: Vec<f32> = x
+            .iter()
+            .zip(&mask)
+            .map(|(&v, &keep)| if keep { v } else { 0.0 })
+            .collect();
+        self.inner.encode(ctx, client_id, &sparse)
+    }
+
+    fn new_accumulator(&self) -> Accumulator {
+        self.inner.new_accumulator()
+    }
+
+    fn accumulate(&self, ctx: &RoundCtx, frame: &Frame, acc: &mut Accumulator) -> Result<()> {
+        self.inner.accumulate(ctx, frame, acc)
+    }
+
+    fn finish_scaled(&self, ctx: &RoundCtx, acc: Accumulator, divisor: f64) -> Vec<f32> {
+        // Inner finish divides by n; surviving coordinates then need the
+        // 1/q inflation. NOTE this is only unbiased when the inner
+        // protocol is coordinate-separable (all of ours are except the
+        // rotated one, which mixes coordinates before quantization —
+        // config::build rejects that combination).
+        let mut est = self.inner.finish_scaled(ctx, acc, divisor);
+        let inv_q = (1.0 / self.q) as f32;
+        for v in est.iter_mut() {
+            *v *= inv_q;
+        }
+        est
+    }
+
+    fn mse_bound(&self, n: usize, avg_norm_sq: f64) -> Option<f64> {
+        // Mirror of Lemma 8 coordinate-wise: inner error inflated by 1/q²
+        // on a q-fraction of mass (=> /q), plus Bernoulli sampling variance
+        // of the data itself.
+        let inner = self.inner.mse_bound(n, avg_norm_sq)?;
+        Some(inner / self.q + (1.0 - self.q) / (n as f64 * self.q) * avg_norm_sq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::klevel::KLevelProtocol;
+    use crate::protocol::run_round;
+    use crate::protocol::test_support::{gaussian_clients, measure_mse};
+    use crate::stats;
+
+    fn wrapped(d: usize, k: u32, q: f64) -> CoordSampledProtocol {
+        CoordSampledProtocol::new(Arc::new(KLevelProtocol::new(d, k)), q)
+    }
+
+    #[test]
+    fn q_one_is_identity() {
+        let xs = gaussian_clients(4, 32, 1);
+        let ctx = RoundCtx::new(0, 5);
+        let (est_w, _) = run_round(&wrapped(32, 16, 1.0), &ctx, &xs).unwrap();
+        let (est_i, _) = run_round(&KLevelProtocol::new(32, 16), &ctx, &xs).unwrap();
+        for (a, b) in est_w.iter().zip(&est_i) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn unbiased_under_coordinate_sampling() {
+        let xs = gaussian_clients(10, 16, 3);
+        let truth = stats::true_mean(&xs);
+        let proto = wrapped(16, 64, 0.5);
+        let trials = 3000;
+        let mut sums = vec![0.0f64; 16];
+        for t in 0..trials {
+            let ctx = RoundCtx::new(t, 7);
+            let (est, _) = run_round(&proto, &ctx, &xs).unwrap();
+            for (s, &e) in sums.iter_mut().zip(&est) {
+                *s += e as f64;
+            }
+        }
+        for (j, &s) in sums.iter().enumerate() {
+            let mean = s / trials as f64;
+            assert!(
+                (mean - truth[j] as f64).abs() < 0.08,
+                "coord {j}: {mean} vs {}",
+                truth[j]
+            );
+        }
+    }
+
+    #[test]
+    fn mse_within_bound() {
+        let xs = gaussian_clients(32, 32, 11);
+        let avg = stats::avg_norm_sq(&xs);
+        for q in [0.25, 0.5, 1.0] {
+            let proto = wrapped(32, 16, q);
+            let (mse, _) = measure_mse(&proto, &xs, 200, 13);
+            let bound = proto.mse_bound(xs.len(), avg).unwrap();
+            assert!(mse <= bound * 1.1, "q={q}: {mse} > {bound}");
+        }
+    }
+
+    #[test]
+    fn varlen_inner_saves_bits_on_sparsified_vectors() {
+        // Dropped coordinates become zeros -> one bin dominates -> the
+        // entropy coder's payload shrinks with q.
+        let d = 256;
+        let xs = gaussian_clients(4, d, 17);
+        let inner = || Arc::new(crate::protocol::varlen::VarlenProtocol::new(d, 17));
+        let (_, bits_full) = measure_mse(&CoordSampledProtocol::new(inner(), 1.0), &xs, 10, 3);
+        let (_, bits_q25) = measure_mse(&CoordSampledProtocol::new(inner(), 0.25), &xs, 10, 3);
+        assert!(
+            bits_q25 < bits_full * 0.7,
+            "q=0.25 bits {bits_q25} vs full {bits_full}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "coordinate probability")]
+    fn zero_q_rejected() {
+        wrapped(8, 2, 0.0);
+    }
+}

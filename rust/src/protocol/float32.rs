@@ -1,0 +1,96 @@
+//! Uncompressed float32 baseline: each client sends its raw vector
+//! (32 d bits). Zero quantization error — the reference point every figure
+//! plots the quantized protocols against.
+
+use anyhow::{ensure, Result};
+
+use super::{Accumulator, Frame, Protocol, RoundCtx};
+use crate::coding::bitio::{BitReader, BitWriter};
+
+/// Raw f32 transmission (no compression).
+#[derive(Clone, Debug)]
+pub struct Float32Protocol {
+    dim: usize,
+}
+
+impl Float32Protocol {
+    pub fn new(dim: usize) -> Self {
+        Float32Protocol { dim }
+    }
+
+    pub fn frame_bits(&self) -> u64 {
+        self.dim as u64 * 32
+    }
+}
+
+impl Protocol for Float32Protocol {
+    fn name(&self) -> String {
+        "float32".into()
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn encode(&self, _ctx: &RoundCtx, _client_id: u64, x: &[f32]) -> Option<Frame> {
+        assert_eq!(x.len(), self.dim, "dimension mismatch");
+        let mut w = BitWriter::with_capacity(self.dim * 32);
+        for &v in x {
+            w.put_f32(v);
+        }
+        let (bytes, bits) = w.finish();
+        Some(Frame::new(bytes, bits))
+    }
+
+    fn new_accumulator(&self) -> Accumulator {
+        Accumulator::new(self.dim)
+    }
+
+    fn accumulate(&self, _ctx: &RoundCtx, frame: &Frame, acc: &mut Accumulator) -> Result<()> {
+        ensure!(acc.sum.len() == self.dim, "accumulator dimension mismatch");
+        ensure!(frame.bit_len >= self.frame_bits(), "frame too short");
+        let mut r = BitReader::with_bit_len(&frame.bytes, frame.bit_len);
+        for a in acc.sum.iter_mut() {
+            *a += r.get_f32()?;
+        }
+        acc.frames += 1;
+        Ok(())
+    }
+
+    fn finish_scaled(&self, _ctx: &RoundCtx, acc: Accumulator, divisor: f64) -> Vec<f32> {
+        let inv = if divisor > 0.0 { (1.0 / divisor) as f32 } else { 0.0 };
+        acc.sum.iter().map(|&v| v * inv).collect()
+    }
+
+    fn mse_bound(&self, _n: usize, _avg_norm_sq: f64) -> Option<f64> {
+        Some(0.0) // exact up to f32 accumulation error
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::run_round;
+    use crate::protocol::test_support::gaussian_clients;
+    use crate::stats;
+
+    #[test]
+    fn exact_mean_recovery() {
+        let xs = gaussian_clients(8, 32, 3);
+        let proto = Float32Protocol::new(32);
+        let ctx = RoundCtx::new(0, 1);
+        let (est, bits) = run_round(&proto, &ctx, &xs).unwrap();
+        let truth = stats::true_mean(&xs);
+        assert!(stats::sq_error(&est, &truth) < 1e-10);
+        assert_eq!(bits, 8 * 32 * 32);
+    }
+
+    #[test]
+    fn frame_is_dense_floats() {
+        let proto = Float32Protocol::new(4);
+        let ctx = RoundCtx::new(0, 1);
+        let f = proto.encode(&ctx, 0, &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(f.bit_len, 128);
+        assert_eq!(f.bytes.len(), 16);
+    }
+}

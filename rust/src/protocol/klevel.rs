@@ -1,0 +1,268 @@
+//! π_sk — stochastic k-level quantization (paper §2.2).
+//!
+//! Coordinates are stochastically rounded onto the uniform grid
+//! `B_i(r) = X_i^min + r·s_i/(k−1)` and transmitted as fixed-width
+//! `⌈log₂ k⌉`-bit bin indices: `d⌈log₂k⌉ + Õ(1)` bits per client
+//! (Lemma 5), MSE `≤ d/(2n(k−1)²) · avg‖X‖²` (Theorem 2).
+//!
+//! The numeric work (grid + stochastic rounding) runs on a
+//! [`ComputeBackend`]: native Rust or the AOT-compiled Pallas kernel via
+//! PJRT — both produce identical bins from the same private uniforms.
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+
+use super::quantizer::Span;
+use super::{Accumulator, Frame, Protocol, RoundCtx};
+use crate::coding::bitio::{BitReader, BitWriter};
+use crate::coding::float::ScalarCodec;
+use crate::runtime::engine::{ComputeBackend, NativeBackend};
+
+/// Stochastic k-level quantization protocol.
+pub struct KLevelProtocol {
+    dim: usize,
+    k: u32,
+    span: Span,
+    pub header: ScalarCodec,
+    backend: Arc<dyn ComputeBackend>,
+}
+
+impl KLevelProtocol {
+    pub fn new(dim: usize, k: u32) -> Self {
+        assert!(k >= 2, "need k >= 2 levels");
+        KLevelProtocol {
+            dim,
+            k,
+            span: Span::MinMax,
+            header: ScalarCodec::Exact32,
+            backend: NativeBackend::shared(),
+        }
+    }
+
+    pub fn with_span(mut self, span: Span) -> Self {
+        self.span = span;
+        self
+    }
+
+    pub fn with_backend(mut self, backend: Arc<dyn ComputeBackend>) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    pub fn with_header(mut self, header: ScalarCodec) -> Self {
+        self.header = header;
+        self
+    }
+
+    pub fn k(&self) -> u32 {
+        self.k
+    }
+
+    /// Fixed bits per bin index: `⌈log₂ k⌉`.
+    pub fn bits_per_coord(&self) -> u32 {
+        32 - (self.k - 1).leading_zeros()
+    }
+
+    /// Exact per-client frame size in bits.
+    pub fn frame_bits(&self) -> u64 {
+        self.dim as u64 * self.bits_per_coord() as u64 + 2 * self.header.bits() as u64
+    }
+
+    /// Encode a pre-quantized vector (shared with the rotated protocol).
+    pub(crate) fn write_frame(
+        header: &ScalarCodec,
+        bits_per_coord: u32,
+        xmin: f32,
+        s: f32,
+        bins: &[u32],
+    ) -> Frame {
+        let mut w =
+            BitWriter::with_capacity(bins.len() * bits_per_coord as usize + 2 * header.bits() as usize);
+        header.put(&mut w, xmin);
+        header.put(&mut w, s);
+        for &b in bins {
+            w.put_bits(b as u64, bits_per_coord);
+        }
+        let (bytes, bit_len) = w.finish();
+        Frame::new(bytes, bit_len)
+    }
+
+    /// Decode a fixed-width frame into (xmin, s, bins-added-to-acc).
+    pub(crate) fn read_frame_into(
+        header: &ScalarCodec,
+        bits_per_coord: u32,
+        k: u32,
+        dim: usize,
+        frame: &Frame,
+        acc: &mut [f32],
+    ) -> Result<()> {
+        let mut r = BitReader::with_bit_len(&frame.bytes, frame.bit_len);
+        let xmin = header.get(&mut r)?;
+        let s = header.get(&mut r)?;
+        ensure!(
+            r.bits_remaining() >= dim as u64 * bits_per_coord as u64,
+            "frame too short: {} bits remaining, need {}",
+            r.bits_remaining(),
+            dim as u64 * bits_per_coord as u64
+        );
+        let w = s / (k - 1) as f32;
+        for a in acc.iter_mut().take(dim) {
+            let b = r.get_bits(bits_per_coord)? as u32;
+            ensure!(b < k, "bin index {b} out of range (k={k})");
+            *a += xmin + b as f32 * w;
+        }
+        Ok(())
+    }
+}
+
+impl Protocol for KLevelProtocol {
+    fn name(&self) -> String {
+        format!("klevel(k={})", self.k)
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn encode(&self, ctx: &RoundCtx, client_id: u64, x: &[f32]) -> Option<Frame> {
+        assert_eq!(x.len(), self.dim, "dimension mismatch");
+        let mut private = ctx.private(client_id);
+        let mut u = vec![0.0f32; self.dim];
+        private.fill_uniform_f32(&mut u);
+        let q = self
+            .backend
+            .quantize(x, &u, self.span, self.k)
+            .expect("backend quantize failed");
+        // Re-encode headers through the codec so both sides share the grid.
+        Some(Self::write_frame(&self.header, self.bits_per_coord(), q.xmin, q.s, &q.bins))
+    }
+
+    fn new_accumulator(&self) -> Accumulator {
+        Accumulator::new(self.dim)
+    }
+
+    fn accumulate(&self, _ctx: &RoundCtx, frame: &Frame, acc: &mut Accumulator) -> Result<()> {
+        ensure!(acc.sum.len() == self.dim, "accumulator dimension mismatch");
+        Self::read_frame_into(
+            &self.header,
+            self.bits_per_coord(),
+            self.k,
+            self.dim,
+            frame,
+            &mut acc.sum,
+        )?;
+        acc.frames += 1;
+        Ok(())
+    }
+
+    fn finish_scaled(&self, _ctx: &RoundCtx, acc: Accumulator, divisor: f64) -> Vec<f32> {
+        let inv = if divisor > 0.0 { (1.0 / divisor) as f32 } else { 0.0 };
+        acc.sum.iter().map(|&v| v * inv).collect()
+    }
+
+    fn mse_bound(&self, n: usize, avg_norm_sq: f64) -> Option<f64> {
+        // Theorem 2: E <= d/(2n(k-1)^2) * avg ||X||^2 (both span choices
+        // satisfy the s_i <= sqrt(2)||X_i|| condition).
+        let km1 = (self.k - 1) as f64;
+        Some(self.dim as f64 / (2.0 * n as f64 * km1 * km1) * avg_norm_sq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::run_round;
+    use crate::protocol::test_support::{gaussian_clients, measure_mse};
+    use crate::stats;
+
+    #[test]
+    fn frame_cost_matches_lemma5() {
+        for (k, bpc) in [(2u32, 1u32), (3, 2), (4, 2), (16, 4), (17, 5), (32, 5)] {
+            let proto = KLevelProtocol::new(64, k);
+            assert_eq!(proto.bits_per_coord(), bpc, "k={k}");
+            let ctx = RoundCtx::new(0, 1);
+            let f = proto.encode(&ctx, 0, &gaussian_clients(1, 64, k as u64)[0]).unwrap();
+            assert_eq!(f.bit_len, 64 * bpc as u64 + 64, "k={k}");
+        }
+    }
+
+    #[test]
+    fn k2_reduces_to_binary_semantics() {
+        // k=2 must behave like π_sb: same MSE scale.
+        let xs = gaussian_clients(6, 32, 3);
+        let k2 = KLevelProtocol::new(32, 2);
+        let sb = crate::protocol::binary::BinaryProtocol::new(32);
+        let (mse_k2, _) = measure_mse(&k2, &xs, 200, 5);
+        let (mse_sb, _) = measure_mse(&sb, &xs, 200, 5);
+        assert!(
+            (mse_k2 - mse_sb).abs() / mse_sb < 0.15,
+            "k2 {mse_k2} vs binary {mse_sb}"
+        );
+    }
+
+    #[test]
+    fn mse_within_theorem2_bound_both_spans() {
+        let xs = gaussian_clients(8, 64, 7);
+        for span in [Span::MinMax, Span::Norm] {
+            for k in [4u32, 16] {
+                let proto = KLevelProtocol::new(64, k).with_span(span);
+                let (mse, _) = measure_mse(&proto, &xs, 150, 9);
+                let bound = proto.mse_bound(xs.len(), stats::avg_norm_sq(&xs)).unwrap();
+                assert!(mse <= bound, "span={span:?} k={k}: mse {mse} > bound {bound}");
+            }
+        }
+    }
+
+    #[test]
+    fn error_decreases_quadratically_in_k() {
+        let xs = gaussian_clients(4, 128, 11);
+        let (mse_k4, _) = measure_mse(&KLevelProtocol::new(128, 4), &xs, 150, 3);
+        let (mse_k16, _) = measure_mse(&KLevelProtocol::new(128, 16), &xs, 150, 3);
+        // (k-1)^2 ratio: (15/3)^2 = 25; allow wide MC slack
+        let ratio = mse_k4 / mse_k16;
+        assert!(ratio > 10.0, "ratio {ratio} (expected ~25)");
+    }
+
+    #[test]
+    fn deterministic_given_ctx() {
+        let proto = KLevelProtocol::new(16, 8);
+        let ctx = RoundCtx::new(3, 42);
+        let x = gaussian_clients(1, 16, 1).remove(0);
+        let f1 = proto.encode(&ctx, 5, &x).unwrap();
+        let f2 = proto.encode(&ctx, 5, &x).unwrap();
+        assert_eq!(f1.bytes, f2.bytes);
+        // different client -> different private stream -> (almost surely)
+        // different rounding
+        let f3 = proto.encode(&ctx, 6, &x).unwrap();
+        assert_ne!(f1.bytes, f3.bytes);
+    }
+
+    #[test]
+    fn corrupt_bin_index_detected() {
+        // craft a frame with an out-of-range bin: k=3 (bpc=2), bin 3 invalid
+        let proto = KLevelProtocol::new(4, 3);
+        let mut w = BitWriter::new();
+        let c = ScalarCodec::Exact32;
+        c.put(&mut w, 0.0);
+        c.put(&mut w, 1.0);
+        for _ in 0..4 {
+            w.put_bits(3, 2); // invalid bin
+        }
+        let (bytes, bits) = w.finish();
+        let mut acc = proto.new_accumulator();
+        let err = proto.accumulate(&RoundCtx::new(0, 0), &Frame::new(bytes, bits), &mut acc);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn round_trip_mean_close_at_high_k() {
+        let xs = gaussian_clients(10, 64, 13);
+        let proto = KLevelProtocol::new(64, 1 << 12);
+        let ctx = RoundCtx::new(0, 1);
+        let truth = stats::true_mean(&xs);
+        let (est, _) = run_round(&proto, &ctx, &xs).unwrap();
+        let err = stats::sq_error(&est, &truth);
+        assert!(err < 1e-4, "err={err}");
+    }
+}

@@ -1,0 +1,196 @@
+//! The paper's communication protocols for distributed mean estimation.
+//!
+//! Every protocol implements [`Protocol`]: a client turns its vector into a
+//! bit-exact wire [`Frame`]; the server feeds frames into an
+//! [`Accumulator`] and finishes with the mean estimate. The bits counted in
+//! experiments are the bits of the frames actually produced.
+//!
+//! | Module | Protocol | Paper |
+//! |--------|----------|-------|
+//! | [`binary`]   | π_sb stochastic binary            | §2.1 |
+//! | [`klevel`]   | π_sk stochastic k-level           | §2.2 |
+//! | [`rotated`]  | π_srk stochastic rotated k-level  | §3   |
+//! | [`varlen`]   | π_svk k-level + entropy coding    | §4   |
+//! | [`sampling`] | π_p client-sampling wrapper       | §5   |
+//! | [`coordsample`] | coordinate-sampling wrapper    | §5 (remark) |
+//! | [`qsgd`]     | QSGD-style Elias comparator       | ref [2] |
+//! | [`float32`]  | uncompressed f32 baseline         | —    |
+//!
+//! Randomness model (§1.2): the **public** stream (shared seed) drives the
+//! rotation; each client's **private** stream drives its stochastic
+//! rounding and sampling coin. Both derive from [`RoundCtx`].
+
+pub mod binary;
+pub mod config;
+pub mod coordsample;
+pub mod float32;
+pub mod klevel;
+pub mod qsgd;
+pub mod quantizer;
+pub mod rotated;
+pub mod sampling;
+pub mod varlen;
+
+use anyhow::Result;
+
+use crate::rng::{self, Pcg64};
+
+/// A client→server wire frame: the exact bits the protocol transmits.
+#[derive(Clone, Debug)]
+pub struct Frame {
+    pub bytes: Vec<u8>,
+    /// Exact payload length in bits (≤ bytes.len() * 8; the tail of the
+    /// last byte is padding). Experiments account `bit_len`, transports
+    /// move `bytes`.
+    pub bit_len: u64,
+}
+
+impl Frame {
+    pub fn new(bytes: Vec<u8>, bit_len: u64) -> Self {
+        debug_assert!(bit_len <= bytes.len() as u64 * 8);
+        Frame { bytes, bit_len }
+    }
+}
+
+/// Per-round context: the experiment seed and round index from which all
+/// public/private randomness is derived.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundCtx {
+    pub round: u64,
+    pub seed: u64,
+}
+
+impl RoundCtx {
+    pub fn new(round: u64, seed: u64) -> Self {
+        RoundCtx { round, seed }
+    }
+
+    /// Public (shared) randomness stream for this round.
+    pub fn public(&self) -> Pcg64 {
+        rng::public_stream(self.seed, self.round)
+    }
+
+    /// Private randomness stream of `client` for this round.
+    pub fn private(&self, client: u64) -> Pcg64 {
+        rng::private_stream(self.seed, self.round, client)
+    }
+
+    /// A secondary private stream, domain-separated from [`Self::private`]
+    /// (used for the sampling coin so it never aliases rounding uniforms).
+    pub fn private_aux(&self, client: u64) -> Pcg64 {
+        rng::private_stream(self.seed ^ 0xa5a5_a5a5_a5a5_a5a5, self.round, client)
+    }
+}
+
+/// Server-side partial sum of decoded client vectors.
+#[derive(Clone, Debug)]
+pub struct Accumulator {
+    /// Running coordinate-wise sum (in the protocol's *internal* dimension,
+    /// e.g. the padded dimension for rotated protocols).
+    pub sum: Vec<f32>,
+    /// Number of frames accumulated.
+    pub frames: usize,
+}
+
+impl Accumulator {
+    pub fn new(dim: usize) -> Self {
+        Accumulator { sum: vec![0.0; dim], frames: 0 }
+    }
+}
+
+/// A distributed mean-estimation protocol (client encode + server decode).
+///
+/// Implementations are `Send + Sync`: the coordinator encodes on many
+/// worker threads concurrently.
+pub trait Protocol: Send + Sync {
+    /// Short human-readable name, e.g. `"rotated(k=16)"`.
+    fn name(&self) -> String;
+
+    /// The logical data dimension d.
+    fn dim(&self) -> usize;
+
+    /// Client-side encode. Returns `None` if this client stays silent this
+    /// round (client sampling, §5).
+    fn encode(&self, ctx: &RoundCtx, client_id: u64, x: &[f32]) -> Option<Frame>;
+
+    /// A fresh accumulator sized for this protocol's internal dimension.
+    fn new_accumulator(&self) -> Accumulator;
+
+    /// Server-side decode of one frame into the accumulator.
+    fn accumulate(&self, ctx: &RoundCtx, frame: &Frame, acc: &mut Accumulator) -> Result<()>;
+
+    /// Finish: divide by the *effective* count and undo any preprocessing.
+    /// `n_total` is the number of clients that held data this round
+    /// (including ones that stayed silent under sampling).
+    fn finish(&self, ctx: &RoundCtx, acc: Accumulator, n_total: usize) -> Vec<f32> {
+        self.finish_scaled(ctx, acc, n_total as f64)
+    }
+
+    /// Like [`Self::finish`] but with an explicit divisor (the sampling
+    /// wrapper divides by `n·p` per Lemma 8 instead of n).
+    fn finish_scaled(&self, ctx: &RoundCtx, acc: Accumulator, divisor: f64) -> Vec<f32>;
+
+    /// Analytic worst-case MSE bound for this protocol on vectors with
+    /// average squared norm `avg_norm_sq`, with `n` clients — the paper's
+    /// guarantee that experiments validate against. `None` if no clean
+    /// closed form exists.
+    fn mse_bound(&self, n: usize, avg_norm_sq: f64) -> Option<f64>;
+}
+
+/// Convenience driver used by tests, benches and examples: run one full
+/// round of `proto` over the client vectors, returning the mean estimate
+/// and the total uplink cost in bits.
+pub fn run_round(
+    proto: &dyn Protocol,
+    ctx: &RoundCtx,
+    xs: &[Vec<f32>],
+) -> Result<(Vec<f32>, u64)> {
+    let mut acc = proto.new_accumulator();
+    let mut bits = 0u64;
+    for (i, x) in xs.iter().enumerate() {
+        if let Some(frame) = proto.encode(ctx, i as u64, x) {
+            bits += frame.bit_len;
+            proto.accumulate(ctx, &frame, &mut acc)?;
+        }
+    }
+    Ok((proto.finish(ctx, acc, xs.len()), bits))
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    //! Shared helpers for protocol test modules.
+    use super::*;
+    use crate::stats;
+
+    /// Measure the empirical MSE of `proto` over `trials` independent
+    /// rounds on fixed data, plus the average bits per round.
+    pub fn measure_mse(
+        proto: &dyn Protocol,
+        xs: &[Vec<f32>],
+        trials: u64,
+        seed: u64,
+    ) -> (f64, f64) {
+        let truth = stats::true_mean(xs);
+        let mut err = stats::Running::new();
+        let mut bits = stats::Running::new();
+        for t in 0..trials {
+            let ctx = RoundCtx::new(t, seed);
+            let (est, b) = run_round(proto, &ctx, xs).expect("round failed");
+            err.push(stats::sq_error(&est, &truth));
+            bits.push(b as f64);
+        }
+        (err.mean(), bits.mean())
+    }
+
+    /// Gaussian client vectors.
+    pub fn gaussian_clients(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = crate::rng::Pcg64::new(seed);
+        (0..n)
+            .map(|_| {
+                let mut x = vec![0.0f32; d];
+                rng.fill_gaussian_f32(&mut x);
+                x
+            })
+            .collect()
+    }
+}

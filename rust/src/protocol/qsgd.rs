@@ -1,0 +1,190 @@
+//! QSGD-style comparator protocol (Alistarh et al., the paper's reference
+//! [2], discussed in §1.3.1 as concurrent work: "stochastic quantization
+//! and Elias coding can be used to obtain communication-optimal SGD").
+//!
+//! Per vector: transmit `‖x‖₂` (header), then per coordinate a sign bit
+//! and the stochastically-rounded magnitude level `l ∈ {0..k−1}` on the
+//! grid `l/(k−1)·‖x‖`, Elias-γ coded (level `l` sent as γ(l+1) — small
+//! levels dominate for dense Gaussian-like vectors, which is where Elias
+//! coding wins; sign bits are skipped for zero levels).
+//!
+//! Included as the cross-paper baseline the ablation benches compare
+//! π_svk against: same unbiasedness contract, different coding strategy.
+
+use anyhow::{ensure, Result};
+
+use super::{Accumulator, Frame, Protocol, RoundCtx};
+use crate::coding::bitio::{BitReader, BitWriter};
+use crate::coding::elias;
+use crate::coding::float::ScalarCodec;
+use crate::linalg;
+
+/// QSGD-like protocol: sign/magnitude stochastic quantization against the
+/// ℓ₂ norm, Elias-γ coded levels.
+#[derive(Clone, Debug)]
+pub struct QsgdProtocol {
+    dim: usize,
+    k: u32,
+    pub header: ScalarCodec,
+}
+
+impl QsgdProtocol {
+    pub fn new(dim: usize, k: u32) -> Self {
+        assert!(k >= 2, "need k >= 2 levels");
+        QsgdProtocol { dim, k, header: ScalarCodec::Exact32 }
+    }
+
+    pub fn k(&self) -> u32 {
+        self.k
+    }
+}
+
+impl Protocol for QsgdProtocol {
+    fn name(&self) -> String {
+        format!("qsgd(k={})", self.k)
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn encode(&self, ctx: &RoundCtx, client_id: u64, x: &[f32]) -> Option<Frame> {
+        assert_eq!(x.len(), self.dim, "dimension mismatch");
+        let mut private = ctx.private(client_id);
+        let norm = linalg::norm(x) as f32;
+        let mut w = BitWriter::new();
+        let norm_t = self.header.put(&mut w, norm);
+        let km1 = (self.k - 1) as f32;
+        let inv = if norm_t > 0.0 { km1 / norm_t } else { 0.0 };
+        for &xi in x {
+            // stochastic level on |x_i|/norm * (k-1)
+            let t = xi.abs() * inv;
+            let lo = (t as i32).clamp(0, km1 as i32 - 1);
+            let frac = t - lo as f32;
+            let level = (lo + (private.next_f32() < frac) as i32).clamp(0, km1 as i32) as u64;
+            elias::put_gamma(&mut w, level + 1);
+            if level > 0 {
+                w.put_bit(xi < 0.0);
+            }
+        }
+        let (bytes, bits) = w.finish();
+        Some(Frame::new(bytes, bits))
+    }
+
+    fn new_accumulator(&self) -> Accumulator {
+        Accumulator::new(self.dim)
+    }
+
+    fn accumulate(&self, _ctx: &RoundCtx, frame: &Frame, acc: &mut Accumulator) -> Result<()> {
+        ensure!(acc.sum.len() == self.dim, "accumulator dimension mismatch");
+        let mut r = BitReader::with_bit_len(&frame.bytes, frame.bit_len);
+        let norm = self.header.get(&mut r)?;
+        let width = norm / (self.k - 1) as f32;
+        for a in acc.sum.iter_mut() {
+            let level = elias::get_gamma(&mut r)? - 1;
+            ensure!(level < self.k as u64, "level {level} out of range");
+            if level > 0 {
+                let neg = r.get_bit()?;
+                let mag = level as f32 * width;
+                *a += if neg { -mag } else { mag };
+            }
+        }
+        Ok(())
+    }
+
+    fn finish_scaled(&self, _ctx: &RoundCtx, acc: Accumulator, divisor: f64) -> Vec<f32> {
+        let inv = if divisor > 0.0 { (1.0 / divisor) as f32 } else { 0.0 };
+        acc.sum.iter().map(|&v| v * inv).collect()
+    }
+
+    fn mse_bound(&self, n: usize, avg_norm_sq: f64) -> Option<f64> {
+        // Same grid width ‖x‖/(k−1) per coordinate, variance ≤ width²/4 per
+        // coordinate (QSGD Lemma 3.1 gives the analogous min(d/k², √d/k)
+        // form; this simple bound suffices for the comparator role).
+        let km1 = (self.k - 1) as f64;
+        Some(self.dim as f64 / (4.0 * n as f64 * km1 * km1) * avg_norm_sq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::run_round;
+    use crate::protocol::test_support::{gaussian_clients, measure_mse};
+    use crate::stats;
+
+    #[test]
+    fn roundtrip_and_unbiasedness() {
+        let d = 32;
+        let xs = gaussian_clients(5, d, 3);
+        let truth = stats::true_mean(&xs);
+        let proto = QsgdProtocol::new(d, 64);
+        let trials = 2000;
+        let mut sums = vec![0.0f64; d];
+        for t in 0..trials {
+            let ctx = RoundCtx::new(t, 9);
+            let (est, _) = run_round(&proto, &ctx, &xs).unwrap();
+            for (s, &e) in sums.iter_mut().zip(&est) {
+                *s += e as f64;
+            }
+        }
+        for (j, &s) in sums.iter().enumerate() {
+            let mean = s / trials as f64;
+            assert!(
+                (mean - truth[j] as f64).abs() < 0.05,
+                "coord {j}: {mean} vs {}",
+                truth[j]
+            );
+        }
+    }
+
+    #[test]
+    fn mse_within_bound() {
+        let xs = gaussian_clients(8, 64, 7);
+        let proto = QsgdProtocol::new(64, 16);
+        let (mse, _) = measure_mse(&proto, &xs, 200, 11);
+        let bound = proto.mse_bound(xs.len(), stats::avg_norm_sq(&xs)).unwrap();
+        assert!(mse <= bound, "mse {mse} > bound {bound}");
+    }
+
+    #[test]
+    fn elias_coding_benefits_from_sparsity() {
+        // A sparse vector has mostly level-0 coordinates -> ~1 bit each.
+        let d = 256;
+        let mut x = vec![0.0f32; d];
+        x[0] = 1.0;
+        x[100] = -1.0;
+        let proto = QsgdProtocol::new(d, 16);
+        let ctx = RoundCtx::new(0, 1);
+        let f = proto.encode(&ctx, 0, &x).unwrap();
+        // ~254 level-0 gammas (1 bit) + 2 big levels + header
+        assert!(f.bit_len < 350, "bits {}", f.bit_len);
+        // dense gaussian costs much more
+        let dense = gaussian_clients(1, d, 5).remove(0);
+        let fd = proto.encode(&ctx, 0, &dense).unwrap();
+        assert!(fd.bit_len > f.bit_len, "dense {} sparse {}", fd.bit_len, f.bit_len);
+    }
+
+    #[test]
+    fn zero_vector_is_exact() {
+        let proto = QsgdProtocol::new(16, 8);
+        let ctx = RoundCtx::new(0, 2);
+        let xs = vec![vec![0.0f32; 16]; 3];
+        let (est, _) = run_round(&proto, &ctx, &xs).unwrap();
+        assert!(est.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn truncated_frame_rejected() {
+        let proto = QsgdProtocol::new(64, 16);
+        let ctx = RoundCtx::new(0, 3);
+        let x = gaussian_clients(1, 64, 7).remove(0);
+        let f = proto.encode(&ctx, 0, &x).unwrap();
+        let cut_bytes = f.bytes[..f.bytes.len() / 3].to_vec();
+        let cut_bits = cut_bytes.len() as u64 * 8;
+        let mut acc = proto.new_accumulator();
+        assert!(proto
+            .accumulate(&ctx, &Frame::new(cut_bytes, cut_bits), &mut acc)
+            .is_err());
+    }
+}

@@ -1,0 +1,237 @@
+//! Native stochastic k-level quantization (§2.2) — the Rust twin of the
+//! Pallas kernel `python/compile/kernels/quantize.py`. Both follow the
+//! identical arithmetic (same clipping, same `u < frac` comparison) so the
+//! native and PJRT backends produce the same bins given the same uniforms.
+
+/// Span (grid width) rule for the quantizer — which `s_i` the client uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Span {
+    /// `s_i = X_i^max − X_i^min` — the natural choice (π_sb, π_sk, π_srk).
+    MinMax,
+    /// `s_i = √2‖X_i‖₂` — Theorem 4's choice for variable-length coding
+    /// (satisfies Theorem 2's condition by Eq. 4).
+    Norm,
+}
+
+/// A quantized vector: bin indices plus the grid parameters the client
+/// transmits. `xmin + bins[j] * s / (k-1)` reconstructs coordinate j.
+#[derive(Clone, Debug)]
+pub struct Quantized {
+    pub bins: Vec<u32>,
+    pub xmin: f32,
+    pub s: f32,
+}
+
+/// Grid parameters for `x` under the given span rule.
+pub fn grid_params(x: &[f32], span: Span) -> (f32, f32) {
+    let (lo, hi) = crate::linalg::min_max(x);
+    match span {
+        Span::MinMax => (lo, hi - lo),
+        Span::Norm => (lo, (2.0f64.sqrt() * crate::linalg::norm(x)) as f32),
+    }
+}
+
+/// Stochastically round `x` onto the k-level grid `(xmin, s)` using the
+/// iid uniforms `u` (one per coordinate, from the client's private stream).
+///
+/// Mirrors the Pallas kernel exactly: with `t = (x−xmin)·(k−1)/s`,
+/// `lo = clip(⌊t⌋, 0, k−2)`, the bin is `lo + [u < t−lo]`, clipped to
+/// `[0, k−1]`. `s ≤ 0` (constant vector) maps everything to bin 0.
+pub fn quantize_into(x: &[f32], u: &[f32], xmin: f32, s: f32, k: u32, bins: &mut Vec<u32>) {
+    debug_assert_eq!(x.len(), u.len());
+    debug_assert!(k >= 2, "need at least 2 quantization levels");
+    bins.clear();
+    bins.resize(x.len(), 0);
+    let km1 = (k - 1) as f32;
+    let km1i = (k - 1) as i32;
+    let inv = if s > 0.0 { km1 / s } else { 0.0 };
+    // t >= 0 by construction (xi >= xmin up to f32 rounding), so the
+    // f32->i32 cast truncates toward zero == floor; integer clamps replace
+    // the float clamps of the reference formulation (same results, and the
+    // loop auto-vectorizes).
+    for ((b, &xi), &ui) in bins.iter_mut().zip(x).zip(u) {
+        let t = (xi - xmin) * inv;
+        let lo = (t as i32).clamp(0, km1i - 1);
+        let frac = t - lo as f32;
+        let bi = lo + (ui < frac) as i32;
+        *b = bi.clamp(0, km1i) as u32;
+    }
+}
+
+/// Allocating convenience wrapper around [`quantize_into`].
+pub fn quantize(x: &[f32], u: &[f32], span: Span, k: u32) -> Quantized {
+    let (xmin, s) = grid_params(x, span);
+    let mut bins = Vec::new();
+    quantize_into(x, u, xmin, s, k, &mut bins);
+    Quantized { bins, xmin, s }
+}
+
+/// Dequantize bin `b`: `Y(j) = xmin + b·s/(k−1)`.
+#[inline]
+pub fn dequantize_one(b: u32, xmin: f32, s: f32, k: u32) -> f32 {
+    xmin + b as f32 * (s / (k - 1) as f32)
+}
+
+/// Add the dequantized vector into `acc` (server-side accumulation).
+pub fn dequantize_add(bins: &[u32], xmin: f32, s: f32, k: u32, acc: &mut [f32]) {
+    debug_assert!(bins.len() <= acc.len());
+    let w = s / (k - 1) as f32;
+    for (a, &b) in acc.iter_mut().zip(bins) {
+        *a += xmin + b as f32 * w;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::testkit::{check, run_prop};
+
+    fn uniforms(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed);
+        let mut u = vec![0.0; n];
+        rng.fill_uniform_f32(&mut u);
+        u
+    }
+
+    #[test]
+    fn bins_in_range_and_reconstruction_within_bin_width() {
+        let mut rng = Pcg64::new(3);
+        let mut x = vec![0.0f32; 257];
+        rng.fill_gaussian_f32(&mut x);
+        for k in [2u32, 3, 16, 33] {
+            for span in [Span::MinMax, Span::Norm] {
+                let u = uniforms(x.len(), k as u64);
+                let q = quantize(&x, &u, span, k);
+                let width = q.s / (k - 1) as f32;
+                assert!(q.bins.iter().all(|&b| b < k));
+                for (j, &b) in q.bins.iter().enumerate() {
+                    let y = dequantize_one(b, q.xmin, q.s, k);
+                    assert!(
+                        (y - x[j]).abs() <= width + 1e-4,
+                        "k={k} span={span:?} j={j}: |{y} - {}| > {width}",
+                        x[j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn binary_k2_matches_section_2_1() {
+        // k=2: bins are {0, 1} = {xmin, xmax}, P(xmax) = (x - xmin)/(range).
+        let x = vec![0.0f32, 1.0, 0.25];
+        // u = 0.2: coordinate 2 has frac 0.25 -> u < frac -> bin 1
+        let u = vec![0.2f32, 0.2, 0.2];
+        let q = quantize(&x, &u, Span::MinMax, 2);
+        assert_eq!(q.bins, vec![0, 1, 1]);
+        // u = 0.3 > 0.25 -> bin 0
+        let q2 = quantize(&x, &[0.3, 0.3, 0.3], Span::MinMax, 2);
+        assert_eq!(q2.bins, vec![0, 1, 0]);
+        assert_eq!(q.xmin, 0.0);
+        assert_eq!(q.s, 1.0);
+    }
+
+    #[test]
+    fn constant_vector_is_exact() {
+        let x = vec![2.5f32; 64];
+        let u = uniforms(64, 1);
+        let q = quantize(&x, &u, Span::MinMax, 16);
+        assert_eq!(q.s, 0.0);
+        assert!(q.bins.iter().all(|&b| b == 0));
+        let mut acc = vec![0.0f32; 64];
+        dequantize_add(&q.bins, q.xmin, q.s, 16, &mut acc);
+        assert!(acc.iter().all(|&v| v == 2.5));
+    }
+
+    #[test]
+    fn extremes_map_to_extreme_bins() {
+        // xmax must always land in bin k-1 (frac = 1 > u for all u < 1),
+        // xmin in bin 0 unless u < 0 never happens.
+        let x = vec![-3.0f32, 7.0];
+        for k in [2u32, 5, 16] {
+            let q = quantize(&x, &[0.999, 0.999], Span::MinMax, k);
+            assert_eq!(q.bins[0], 0);
+            assert_eq!(q.bins[1], k - 1);
+        }
+    }
+
+    #[test]
+    fn unbiased_monte_carlo() {
+        let x = vec![0.3f32, -1.2, 0.7, 2.0, -0.01];
+        let k = 4;
+        let trials = 20_000;
+        let mut sums = vec![0.0f64; x.len()];
+        let mut rng = Pcg64::new(99);
+        let mut u = vec![0.0f32; x.len()];
+        for _ in 0..trials {
+            rng.fill_uniform_f32(&mut u);
+            let q = quantize(&x, &u, Span::MinMax, k);
+            for (s, &b) in sums.iter_mut().zip(&q.bins) {
+                *s += dequantize_one(b, q.xmin, q.s, k) as f64;
+            }
+        }
+        let (_, s) = grid_params(&x, Span::MinMax);
+        let width = s as f64 / (k - 1) as f64;
+        let tol = 5.0 * width / 2.0 / (trials as f64).sqrt();
+        for (j, &sum) in sums.iter().enumerate() {
+            let mean = sum / trials as f64;
+            assert!(
+                (mean - x[j] as f64).abs() < tol,
+                "j={j}: mean {mean} vs {} (tol {tol})",
+                x[j]
+            );
+        }
+    }
+
+    #[test]
+    fn variance_within_theorem2_bound() {
+        // E(Y_j - X_j)^2 <= s^2 / (4 (k-1)^2) per coordinate.
+        let x = vec![0.11f32, -0.93, 0.42, 1.7, -2.2, 0.0, 0.5, -0.5];
+        let k = 8;
+        let trials = 20_000;
+        let mut sq = 0.0f64;
+        let mut rng = Pcg64::new(7);
+        let mut u = vec![0.0f32; x.len()];
+        let (xmin, s) = grid_params(&x, Span::MinMax);
+        let mut bins = Vec::new();
+        for _ in 0..trials {
+            rng.fill_uniform_f32(&mut u);
+            quantize_into(&x, &u, xmin, s, k, &mut bins);
+            for (j, &b) in bins.iter().enumerate() {
+                let e = dequantize_one(b, xmin, s, k) as f64 - x[j] as f64;
+                sq += e * e;
+            }
+        }
+        let per_coord = sq / (trials * x.len()) as f64;
+        let bound = (s as f64).powi(2) / (4.0 * ((k - 1) as f64).powi(2));
+        assert!(per_coord <= bound * 1.05, "var {per_coord} > bound {bound}");
+    }
+
+    #[test]
+    fn prop_quantizer_invariants() {
+        run_prop("quantizer_invariants", 150, |g| {
+            let d = g.usize_in(1..=200);
+            let k = g.u32_in(2..=64);
+            let span = if g.rng().next_u32() & 1 == 0 { Span::MinMax } else { Span::Norm };
+            let x = g.vec_f32(d..=d, -100.0, 100.0);
+            let u = uniforms(d, g.rng().next_u64());
+            let q = quantize(&x, &u, span, k);
+            check(q.bins.len() == d, "len")?;
+            check(q.bins.iter().all(|&b| b < k), "bin range")?;
+            check(q.s >= 0.0, "span nonneg")?;
+            // grid covers the data: xmin + s >= xmax (Theorem 2 condition)
+            let (lo, hi) = crate::linalg::min_max(&x);
+            check(q.xmin <= lo + 1e-3, "xmin <= min")?;
+            check(q.xmin + q.s >= hi - 1e-3 * hi.abs().max(1.0), "grid covers max")?;
+            let width = q.s / (k - 1) as f32;
+            for (j, &b) in q.bins.iter().enumerate() {
+                let y = dequantize_one(b, q.xmin, q.s, k);
+                if (y - x[j]).abs() > width + 1e-2 {
+                    return Err(format!("j={j} err {} > width {width}", (y - x[j]).abs()));
+                }
+            }
+            Ok(())
+        });
+    }
+}

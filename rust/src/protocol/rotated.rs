@@ -1,0 +1,253 @@
+//! π_srk — stochastic rotated quantization (paper §3).
+//!
+//! Clients and server share the random rotation `R = HD` through public
+//! randomness. Each client quantizes `Z_i = R X_i` with the k-level grid;
+//! the server averages the dequantized `Y_i` and applies `R⁻¹`. Because
+//! the rotation flattens the vector (`Z^max − Z^min = O(√(log d / d))·‖X‖`,
+//! Lemma 7), the MSE drops from `O(d/n)` to `O(log d / n)` (Theorem 3) at
+//! the same `d⌈log₂k⌉ + Õ(1)` communication cost.
+//!
+//! Vectors are zero-padded to the next power of two before rotation; the
+//! estimate is truncated back after the inverse rotation.
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+
+use super::klevel::KLevelProtocol;
+use super::{Accumulator, Frame, Protocol, RoundCtx};
+use crate::coding::float::ScalarCodec;
+use crate::rotation::{hadamard, Rotation};
+use crate::runtime::engine::{ComputeBackend, NativeBackend};
+
+/// Stochastic rotated k-level quantization protocol.
+pub struct RotatedProtocol {
+    dim: usize,
+    padded: usize,
+    k: u32,
+    pub header: ScalarCodec,
+    backend: Arc<dyn ComputeBackend>,
+}
+
+impl RotatedProtocol {
+    pub fn new(dim: usize, k: u32) -> Self {
+        assert!(k >= 2, "need k >= 2 levels");
+        RotatedProtocol {
+            dim,
+            padded: hadamard::pad_dim(dim),
+            k,
+            header: ScalarCodec::Exact32,
+            backend: NativeBackend::shared(),
+        }
+    }
+
+    pub fn with_backend(mut self, backend: Arc<dyn ComputeBackend>) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    pub fn with_header(mut self, header: ScalarCodec) -> Self {
+        self.header = header;
+        self
+    }
+
+    pub fn k(&self) -> u32 {
+        self.k
+    }
+
+    pub fn padded_dim(&self) -> usize {
+        self.padded
+    }
+
+    fn bits_per_coord(&self) -> u32 {
+        32 - (self.k - 1).leading_zeros()
+    }
+
+    /// Exact per-client frame size in bits (over the padded dimension).
+    pub fn frame_bits(&self) -> u64 {
+        self.padded as u64 * self.bits_per_coord() as u64 + 2 * self.header.bits() as u64
+    }
+
+    /// The round's shared rotation (derived from public randomness).
+    pub fn rotation(&self, ctx: &RoundCtx) -> Rotation {
+        Rotation::sample(self.dim, &mut ctx.public())
+    }
+}
+
+impl Protocol for RotatedProtocol {
+    fn name(&self) -> String {
+        format!("rotated(k={})", self.k)
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn encode(&self, ctx: &RoundCtx, client_id: u64, x: &[f32]) -> Option<Frame> {
+        assert_eq!(x.len(), self.dim, "dimension mismatch");
+        let rot = self.rotation(ctx);
+        let mut private = ctx.private(client_id);
+        let mut u = vec![0.0f32; self.padded];
+        private.fill_uniform_f32(&mut u);
+        // Pad and run the fused rotate+quantize on the backend (the PJRT
+        // backend executes the AOT-compiled Pallas kernel here).
+        let mut xp = vec![0.0f32; self.padded];
+        xp[..self.dim].copy_from_slice(x);
+        let q = self
+            .backend
+            .encode_rotated(&xp, rot.signs(), &u, self.k)
+            .expect("backend encode_rotated failed");
+        Some(KLevelProtocol::write_frame(
+            &self.header,
+            self.bits_per_coord(),
+            q.xmin,
+            q.s,
+            &q.bins,
+        ))
+    }
+
+    fn new_accumulator(&self) -> Accumulator {
+        // Accumulate in the rotated (padded) space; finish() rotates back.
+        Accumulator::new(self.padded)
+    }
+
+    fn accumulate(&self, _ctx: &RoundCtx, frame: &Frame, acc: &mut Accumulator) -> Result<()> {
+        ensure!(acc.sum.len() == self.padded, "accumulator dimension mismatch");
+        KLevelProtocol::read_frame_into(
+            &self.header,
+            self.bits_per_coord(),
+            self.k,
+            self.padded,
+            frame,
+            &mut acc.sum,
+        )?;
+        acc.frames += 1;
+        Ok(())
+    }
+
+    fn finish_scaled(&self, ctx: &RoundCtx, acc: Accumulator, divisor: f64) -> Vec<f32> {
+        let rot = self.rotation(ctx);
+        let inv = if divisor > 0.0 { (1.0 / divisor) as f32 } else { 0.0 };
+        let zbar: Vec<f32> = acc.sum.iter().map(|&v| v * inv).collect();
+        // Inverse rotation on the backend as well (PJRT: rotate_inv_d*).
+        let back = self
+            .backend
+            .rotate_inv(&zbar, rot.signs())
+            .expect("backend rotate_inv failed");
+        back[..self.dim].to_vec()
+    }
+
+    fn mse_bound(&self, n: usize, avg_norm_sq: f64) -> Option<f64> {
+        // Theorem 3: E <= (2 ln d + 2) / (n (k-1)^2) * avg ||X||^2,
+        // in the padded dimension (that is what is rotated).
+        let km1 = (self.k - 1) as f64;
+        let d = self.padded as f64;
+        Some((2.0 * d.ln() + 2.0) / (n as f64 * km1 * km1) * avg_norm_sq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::run_round;
+    use crate::protocol::test_support::{gaussian_clients, measure_mse};
+    use crate::stats;
+
+    #[test]
+    fn frame_cost_is_padded_fixed_width() {
+        let proto = RotatedProtocol::new(100, 16); // pads to 128
+        assert_eq!(proto.padded_dim(), 128);
+        let ctx = RoundCtx::new(0, 1);
+        let x = gaussian_clients(1, 100, 2).remove(0);
+        let f = proto.encode(&ctx, 0, &x).unwrap();
+        assert_eq!(f.bit_len, 128 * 4 + 64);
+    }
+
+    #[test]
+    fn mse_within_theorem3_bound() {
+        let xs = gaussian_clients(8, 256, 5);
+        let proto = RotatedProtocol::new(256, 16);
+        let (mse, _) = measure_mse(&proto, &xs, 100, 3);
+        let bound = proto.mse_bound(xs.len(), stats::avg_norm_sq(&xs)).unwrap();
+        assert!(mse <= bound, "mse {mse} > bound {bound}");
+    }
+
+    #[test]
+    fn beats_unrotated_on_spiky_data() {
+        // Spike + small noise: near-worst case for π_sk (a pure one-hot is
+        // *exactly* representable by the min-max grid, so noise is needed
+        // to expose the d/n error), tamed by rotation.
+        let d = 256;
+        let n = 8;
+        let mut rng = crate::rng::Pcg64::new(404);
+        let mut xs = Vec::new();
+        for i in 0..n {
+            let mut x = vec![0.0f32; d];
+            for v in x.iter_mut() {
+                *v = rng.gaussian() as f32 * 0.02;
+            }
+            x[i * 13 % d] = 1.0;
+            xs.push(x);
+        }
+        let (mse_rot, bits_rot) = measure_mse(&RotatedProtocol::new(d, 4), &xs, 120, 7);
+        let (mse_uni, bits_uni) =
+            measure_mse(&crate::protocol::klevel::KLevelProtocol::new(d, 4), &xs, 120, 7);
+        assert_eq!(bits_rot, bits_uni); // same communication cost
+        assert!(
+            mse_rot < mse_uni / 5.0,
+            "rotated {mse_rot} should be far below uniform {mse_uni}"
+        );
+    }
+
+    #[test]
+    fn section7_worked_example_zero_error() {
+        // §7: quantizing [-1, 1, 0, 0] at 1 bit/dim (k=2) after rotation has
+        // zero error: the rotated vector has exactly two distinct values.
+        let x = vec![-1.0f32, 1.0, 0.0, 0.0];
+        let xs = vec![x; 3];
+        let proto = RotatedProtocol::new(4, 2);
+        let truth = stats::true_mean(&xs);
+        for t in 0..50 {
+            let ctx = RoundCtx::new(t, 99);
+            let (est, _) = run_round(&proto, &ctx, &xs).unwrap();
+            let err = stats::sq_error(&est, &truth);
+            assert!(err < 1e-9, "round {t}: err {err} should be ~0");
+        }
+    }
+
+    #[test]
+    fn padding_roundtrip_unbiased() {
+        // Non-power-of-two dim: estimate must stay unbiased.
+        let xs = gaussian_clients(5, 60, 21);
+        let proto = RotatedProtocol::new(60, 32);
+        let truth = stats::true_mean(&xs);
+        let mut sums = vec![0.0f64; 60];
+        let trials = 600;
+        for t in 0..trials {
+            let ctx = RoundCtx::new(t, 31);
+            let (est, _) = run_round(&proto, &ctx, &xs).unwrap();
+            for (s, &e) in sums.iter_mut().zip(&est) {
+                *s += e as f64;
+            }
+        }
+        for (j, &s) in sums.iter().enumerate() {
+            let mean = s / trials as f64;
+            assert!(
+                (mean - truth[j] as f64).abs() < 0.05,
+                "coord {j}: {mean} vs {}",
+                truth[j]
+            );
+        }
+    }
+
+    #[test]
+    fn server_and_client_derive_same_rotation() {
+        let proto = RotatedProtocol::new(32, 4);
+        let ctx = RoundCtx::new(7, 123);
+        let r1 = proto.rotation(&ctx);
+        let r2 = proto.rotation(&ctx);
+        assert_eq!(r1.signs(), r2.signs());
+        let other = RoundCtx::new(8, 123);
+        assert_ne!(proto.rotation(&other).signs(), r1.signs());
+    }
+}

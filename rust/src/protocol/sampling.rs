@@ -1,0 +1,189 @@
+//! π_p — the client-sampling wrapper (paper §5).
+//!
+//! Each client transmits independently with probability `p` (a coin from
+//! its private randomness); the server scales the sum by `1/(np)` instead
+//! of `1/n` (Lemma 8):
+//!
+//! `E(π_p) = E(π)/p + (1−p)/(np) · (1/n)Σ‖X_i‖²`, `C(π_p) = p · C(π)`.
+//!
+//! Combined with π_svk at `k = √d + 1`, this achieves the minimax
+//! communication–MSE trade-off `Θ(min(1, d/c))` (Theorem 1 / Corollary 1).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::{Accumulator, Frame, Protocol, RoundCtx};
+
+/// Client-sampling wrapper around any inner protocol.
+pub struct SampledProtocol {
+    inner: Arc<dyn Protocol>,
+    p: f64,
+}
+
+impl SampledProtocol {
+    pub fn new(inner: Arc<dyn Protocol>, p: f64) -> Self {
+        assert!(p > 0.0 && p <= 1.0, "sampling probability must be in (0, 1]");
+        SampledProtocol { inner, p }
+    }
+
+    pub fn p(&self) -> f64 {
+        self.p
+    }
+}
+
+impl Protocol for SampledProtocol {
+    fn name(&self) -> String {
+        format!("sampled(p={}, {})", self.p, self.inner.name())
+    }
+
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn encode(&self, ctx: &RoundCtx, client_id: u64, x: &[f32]) -> Option<Frame> {
+        // The participation coin comes from the auxiliary private stream so
+        // it never aliases the inner protocol's rounding uniforms.
+        let mut coin = ctx.private_aux(client_id);
+        if !coin.bernoulli(self.p) {
+            return None;
+        }
+        self.inner.encode(ctx, client_id, x)
+    }
+
+    fn new_accumulator(&self) -> Accumulator {
+        self.inner.new_accumulator()
+    }
+
+    fn accumulate(&self, ctx: &RoundCtx, frame: &Frame, acc: &mut Accumulator) -> Result<()> {
+        self.inner.accumulate(ctx, frame, acc)
+    }
+
+    fn finish_scaled(&self, ctx: &RoundCtx, acc: Accumulator, divisor: f64) -> Vec<f32> {
+        // Lemma 8's estimator: divide by n·p, NOT by |S| — this is what
+        // keeps the estimate unbiased.
+        self.inner.finish_scaled(ctx, acc, divisor * self.p)
+    }
+
+    fn mse_bound(&self, n: usize, avg_norm_sq: f64) -> Option<f64> {
+        // Lemma 8: E/p + (1-p)/(np) * avg ||X||^2.
+        let inner = self.inner.mse_bound(n, avg_norm_sq)?;
+        Some(inner / self.p + (1.0 - self.p) / (n as f64 * self.p) * avg_norm_sq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::klevel::KLevelProtocol;
+    use crate::protocol::run_round;
+    use crate::protocol::test_support::{gaussian_clients, measure_mse};
+    use crate::protocol::varlen::VarlenProtocol;
+    use crate::stats;
+
+    fn sampled(d: usize, k: u32, p: f64) -> SampledProtocol {
+        SampledProtocol::new(Arc::new(KLevelProtocol::new(d, k)), p)
+    }
+
+    #[test]
+    fn p_one_is_identity() {
+        let xs = gaussian_clients(6, 32, 3);
+        let ctx = RoundCtx::new(0, 9);
+        let (est_s, bits_s) = run_round(&sampled(32, 8, 1.0), &ctx, &xs).unwrap();
+        let (est_i, bits_i) = run_round(&KLevelProtocol::new(32, 8), &ctx, &xs).unwrap();
+        assert_eq!(bits_s, bits_i);
+        for (a, b) in est_s.iter().zip(&est_i) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn communication_scales_with_p() {
+        let xs = gaussian_clients(200, 32, 5);
+        let proto = sampled(32, 8, 0.25);
+        let (_, bits) = measure_mse(&proto, &xs, 40, 7);
+        let full_bits = KLevelProtocol::new(32, 8).frame_bits() as f64 * xs.len() as f64;
+        let ratio = bits / full_bits;
+        assert!(
+            (ratio - 0.25).abs() < 0.05,
+            "bits ratio {ratio}, expected ~0.25"
+        );
+    }
+
+    #[test]
+    fn estimate_stays_unbiased_under_sampling() {
+        let xs = gaussian_clients(50, 16, 11);
+        let truth = stats::true_mean(&xs);
+        let proto = sampled(16, 32, 0.5);
+        let trials = 2000;
+        let mut sums = vec![0.0f64; 16];
+        for t in 0..trials {
+            let ctx = RoundCtx::new(t, 13);
+            let (est, _) = run_round(&proto, &ctx, &xs).unwrap();
+            for (s, &e) in sums.iter_mut().zip(&est) {
+                *s += e as f64;
+            }
+        }
+        for (j, &s) in sums.iter().enumerate() {
+            let mean = s / trials as f64;
+            assert!(
+                (mean - truth[j] as f64).abs() < 0.06,
+                "coord {j}: {mean} vs {}",
+                truth[j]
+            );
+        }
+    }
+
+    #[test]
+    fn mse_within_lemma8_bound() {
+        let xs = gaussian_clients(64, 32, 17);
+        let avg = stats::avg_norm_sq(&xs);
+        for p in [0.25, 0.5, 1.0] {
+            let proto = sampled(32, 16, p);
+            let (mse, _) = measure_mse(&proto, &xs, 150, 19);
+            let bound = proto.mse_bound(xs.len(), avg).unwrap();
+            assert!(mse <= bound * 1.1, "p={p}: mse {mse} > bound {bound}");
+        }
+    }
+
+    #[test]
+    fn minimax_tradeoff_shape_corollary1() {
+        // MSE * c should be ~Theta(d * avg) across p (Corollary 1 shape).
+        let d = 64;
+        let n = 128;
+        let xs = gaussian_clients(n, d, 23);
+        let mut products = Vec::new();
+        for p in [0.25f64, 0.5, 1.0] {
+            // Theorem 1's construction uses the Theorem-4 span (norm).
+            let inner = Arc::new(
+                VarlenProtocol::sqrt_d(d).with_span(crate::protocol::quantizer::Span::Norm),
+            );
+            let proto = SampledProtocol::new(inner, p);
+            let (mse, bits) = measure_mse(&proto, &xs, 120, 29);
+            products.push(mse * bits);
+        }
+        let max = products.iter().cloned().fold(f64::MIN, f64::max);
+        let min = products.iter().cloned().fold(f64::MAX, f64::min);
+        // "product roughly constant": within a small constant factor
+        assert!(max / min < 4.0, "products {products:?}");
+    }
+
+    #[test]
+    fn sampling_coin_independent_of_rounding() {
+        // Same client id, two nested protocols: the coin must not perturb
+        // the inner encoding when the client does transmit.
+        let xs = gaussian_clients(1, 16, 31);
+        let ctx = RoundCtx::new(0, 37);
+        let inner = KLevelProtocol::new(16, 8);
+        let direct = inner.encode(&ctx, 0, &xs[0]).unwrap();
+        let proto = sampled(16, 8, 0.9999);
+        let via = proto.encode(&ctx, 0, &xs[0]).unwrap();
+        assert_eq!(direct.bytes, via.bytes);
+    }
+
+    #[test]
+    #[should_panic(expected = "sampling probability")]
+    fn zero_p_rejected() {
+        sampled(8, 2, 0.0);
+    }
+}

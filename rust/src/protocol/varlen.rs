@@ -1,0 +1,303 @@
+//! π_svk — stochastic k-level quantization with variable-length coding
+//! (paper §4).
+//!
+//! Same quantization as π_sk (so Theorem 2's MSE applies verbatim), but the
+//! bin indices are entropy-coded: the frame carries the bin histogram
+//! `h_0..h_{k−1}` (enumerative or Elias-δ header, ≤ `k log₂((d+k)e/k)`
+//! bits) followed by an arithmetic (or Huffman) payload w.r.t.
+//! `p_r = h_r/d`. With the Theorem 4 span `s_i = √2‖X_i‖₂`, the expected
+//! cost is `O(d(1 + log(k²/d + 1)))` bits — constant bits/dimension even at
+//! `k = √d`, where the MSE reaches `O(1/n)`.
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+
+use super::quantizer::Span;
+use super::{Accumulator, Frame, Protocol, RoundCtx};
+use crate::coding::bitio::{BitReader, BitWriter};
+use crate::coding::float::ScalarCodec;
+use crate::coding::{arithmetic, histogram, huffman};
+use crate::runtime::engine::{ComputeBackend, NativeBackend};
+
+/// Which entropy coder compresses the bin stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Coder {
+    /// Arithmetic coding — the choice Theorem 4's analysis assumes.
+    Arithmetic,
+    /// Canonical Huffman — within 1 bit/coordinate of arithmetic, faster.
+    Huffman,
+}
+
+/// Variable-length-coded k-level quantization protocol.
+pub struct VarlenProtocol {
+    dim: usize,
+    k: u32,
+    span: Span,
+    coder: Coder,
+    pub header: ScalarCodec,
+    backend: Arc<dyn ComputeBackend>,
+}
+
+impl VarlenProtocol {
+    /// `k = √d + 1` — the paper's sweet spot (Theorem 4 ⇒ MSE O(1/n) at
+    /// O(nd) total bits).
+    pub fn sqrt_d(dim: usize) -> Self {
+        Self::new(dim, (dim as f64).sqrt() as u32 + 1)
+    }
+
+    pub fn new(dim: usize, k: u32) -> Self {
+        assert!(k >= 2, "need k >= 2 levels");
+        VarlenProtocol {
+            dim,
+            k,
+            // Section 4: "we quantize vectors the same way in pi_sk and
+            // pi_svk" -- min-max span by default; the sqrt(2)||x|| span is
+            // the Theorem 4 *analysis* choice, selectable via with_span.
+            span: Span::MinMax,
+            coder: Coder::Arithmetic,
+            header: ScalarCodec::Exact32,
+            backend: NativeBackend::shared(),
+        }
+    }
+
+    pub fn with_span(mut self, span: Span) -> Self {
+        self.span = span;
+        self
+    }
+
+    pub fn with_coder(mut self, coder: Coder) -> Self {
+        self.coder = coder;
+        self
+    }
+
+    pub fn with_backend(mut self, backend: Arc<dyn ComputeBackend>) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    pub fn k(&self) -> u32 {
+        self.k
+    }
+
+    /// Theorem 4's expected per-client bit bound (headers excluded are the
+    /// Õ(1) scalars): `d(2 + log₂((k−1)²/2d + 5/4)) + k log₂((d+k)e/k)`.
+    pub fn theorem4_bits(&self) -> f64 {
+        let d = self.dim as f64;
+        let km1 = (self.k - 1) as f64;
+        d * (2.0 + (km1 * km1 / (2.0 * d) + 1.25).log2())
+            + histogram::paper_bound_bits(self.dim as u64, self.k as u64)
+    }
+}
+
+impl Protocol for VarlenProtocol {
+    fn name(&self) -> String {
+        let c = match self.coder {
+            Coder::Arithmetic => "arith",
+            Coder::Huffman => "huff",
+        };
+        format!("varlen(k={}, {c})", self.k)
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn encode(&self, ctx: &RoundCtx, client_id: u64, x: &[f32]) -> Option<Frame> {
+        assert_eq!(x.len(), self.dim, "dimension mismatch");
+        let mut private = ctx.private(client_id);
+        let mut u = vec![0.0f32; self.dim];
+        private.fill_uniform_f32(&mut u);
+        let q = self
+            .backend
+            .quantize(x, &u, self.span, self.k)
+            .expect("backend quantize failed");
+
+        let mut hist = vec![0u64; self.k as usize];
+        for &b in &q.bins {
+            hist[b as usize] += 1;
+        }
+
+        let mut w = BitWriter::new();
+        self.header.put(&mut w, q.xmin);
+        self.header.put(&mut w, q.s);
+        histogram::encode(&mut w, &hist, self.dim as u64).expect("histogram encode");
+        match self.coder {
+            Coder::Arithmetic => {
+                let model =
+                    arithmetic::CumTable::from_histogram(&hist).expect("cum table");
+                arithmetic::encode(&mut w, &model, &q.bins).expect("arith encode");
+            }
+            Coder::Huffman => {
+                let code = huffman::HuffmanCode::from_histogram(&hist).expect("huffman");
+                code.encode(&mut w, &q.bins).expect("huffman encode");
+            }
+        }
+        let (bytes, bits) = w.finish();
+        Some(Frame::new(bytes, bits))
+    }
+
+    fn new_accumulator(&self) -> Accumulator {
+        Accumulator::new(self.dim)
+    }
+
+    fn accumulate(&self, _ctx: &RoundCtx, frame: &Frame, acc: &mut Accumulator) -> Result<()> {
+        ensure!(acc.sum.len() == self.dim, "accumulator dimension mismatch");
+        let mut r = BitReader::with_bit_len(&frame.bytes, frame.bit_len);
+        let xmin = self.header.get(&mut r)?;
+        let s = self.header.get(&mut r)?;
+        let hist = histogram::decode(&mut r, self.dim as u64, self.k as usize)?;
+        let mut bins = Vec::with_capacity(self.dim);
+        match self.coder {
+            Coder::Arithmetic => {
+                let model = arithmetic::CumTable::from_histogram(&hist)?;
+                arithmetic::decode(&mut r, &model, self.dim, &mut bins)?;
+            }
+            Coder::Huffman => {
+                let code = huffman::HuffmanCode::from_histogram(&hist)?;
+                code.decode(&mut r, self.dim, &mut bins)?;
+            }
+        }
+        super::quantizer::dequantize_add(&bins, xmin, s, self.k, &mut acc.sum);
+        acc.frames += 1;
+        Ok(())
+    }
+
+    fn finish_scaled(&self, _ctx: &RoundCtx, acc: Accumulator, divisor: f64) -> Vec<f32> {
+        let inv = if divisor > 0.0 { (1.0 / divisor) as f32 } else { 0.0 };
+        acc.sum.iter().map(|&v| v * inv).collect()
+    }
+
+    fn mse_bound(&self, n: usize, avg_norm_sq: f64) -> Option<f64> {
+        // Same quantizer as π_sk ⇒ Theorem 2's bound.
+        let km1 = (self.k - 1) as f64;
+        Some(self.dim as f64 / (2.0 * n as f64 * km1 * km1) * avg_norm_sq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::run_round;
+    use crate::protocol::test_support::{gaussian_clients, measure_mse};
+    use crate::stats;
+
+    #[test]
+    fn roundtrip_matches_klevel_mse() {
+        // Same quantization as π_sk ⇒ identical MSE given identical streams.
+        let d = 64;
+        let xs = gaussian_clients(6, d, 3);
+        let varlen = VarlenProtocol::new(d, 16).with_span(Span::MinMax);
+        let klevel = crate::protocol::klevel::KLevelProtocol::new(d, 16);
+        let ctx = RoundCtx::new(0, 5);
+        let (est_v, _) = run_round(&varlen, &ctx, &xs).unwrap();
+        let (est_k, _) = run_round(&klevel, &ctx, &xs).unwrap();
+        for (a, b) in est_v.iter().zip(&est_k) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn both_coders_decode_identically() {
+        let d = 128;
+        let xs = gaussian_clients(4, d, 9);
+        let ctx = RoundCtx::new(0, 7);
+        let arith = VarlenProtocol::new(d, 12).with_coder(Coder::Arithmetic);
+        let huff = VarlenProtocol::new(d, 12).with_coder(Coder::Huffman);
+        let (est_a, bits_a) = run_round(&arith, &ctx, &xs).unwrap();
+        let (est_h, bits_h) = run_round(&huff, &ctx, &xs).unwrap();
+        for (a, b) in est_a.iter().zip(&est_h) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        // arithmetic should be at least as tight as huffman (up to flush)
+        assert!(bits_a <= bits_h + 4 * xs.len() as u64, "arith {bits_a} vs huff {bits_h}");
+    }
+
+    #[test]
+    fn cost_within_theorem4_bound() {
+        // Theorem 4 span (norm): expected bits <= analytic bound.
+        let d = 256;
+        let k = (d as f64).sqrt() as u32 + 1;
+        let xs = gaussian_clients(8, d, 13);
+        let proto = VarlenProtocol::new(d, k).with_span(Span::Norm);
+        let (_, bits) = measure_mse(&proto, &xs, 30, 3);
+        let per_client = bits / xs.len() as f64;
+        let bound = proto.theorem4_bits() + 2.0 * 32.0; // + header scalars
+        assert!(per_client <= bound, "bits/client {per_client} > bound {bound}");
+        // And it must be O(d): way below the naive d log2(k) at k=sqrt(d).
+        let naive = d as f64 * (k as f64).log2();
+        assert!(per_client < naive * 0.8, "per_client {per_client} vs naive {naive}");
+    }
+
+    #[test]
+    fn mse_at_sqrt_d_is_order_one_over_n() {
+        // MSE(k=sqrt d) <= d/(2n(k-1)^2) * avg ~ avg/(2n): independent of d.
+        let n = 8;
+        for d in [64usize, 256] {
+            let xs = gaussian_clients(n, d, 17);
+            let proto = VarlenProtocol::sqrt_d(d);
+            let (mse, _) = measure_mse(&proto, &xs, 60, 5);
+            let avg = stats::avg_norm_sq(&xs);
+            let bound = proto.mse_bound(n, avg).unwrap();
+            assert!(mse <= bound, "d={d}: {mse} > {bound}");
+            // bound itself is ~avg/(2n) (up to rounding of sqrt d)
+            assert!(bound <= avg / (1.2 * n as f64), "d={d}: bound {bound} too big");
+        }
+    }
+
+    #[test]
+    fn skewed_bins_compress_well() {
+        // Norm span puts most mass near the middle bins -> low entropy.
+        // A constant-ish vector compresses to near the histogram cost alone.
+        let d = 256;
+        let mut x = vec![0.01f32; d];
+        x[0] = 1.0; // one spike
+        let xs = vec![x; 4];
+        let proto = VarlenProtocol::new(d, 17);
+        let ctx = RoundCtx::new(0, 3);
+        let (_, bits) = run_round(&proto, &ctx, &xs).unwrap();
+        let per_client = bits / 4;
+        // fixed-width would be 256 * 5 + 64 = 1344 bits
+        assert!(per_client < 600, "per_client {per_client}");
+    }
+
+    #[test]
+    fn corrupted_frame_rejected_or_detected() {
+        let d = 64;
+        let xs = gaussian_clients(1, d, 1);
+        let proto = VarlenProtocol::new(d, 8);
+        let ctx = RoundCtx::new(0, 2);
+        let f = proto.encode(&ctx, 0, &xs[0]).unwrap();
+        let mut acc = proto.new_accumulator();
+        // truncate the frame mid-payload
+        let cut_bytes = f.bytes[..f.bytes.len() / 4].to_vec();
+        let cut_bits = cut_bytes.len() as u64 * 8;
+        let cut = Frame::new(cut_bytes, cut_bits);
+        assert!(proto.accumulate(&ctx, &cut, &mut acc).is_err());
+    }
+
+    #[test]
+    fn prop_roundtrip_many_shapes() {
+        crate::testkit::run_prop("varlen_roundtrip", 40, |g| {
+            let d = g.usize_in(2..=200);
+            let k = g.u32_in(2..=40);
+            let coder = if g.rng().next_u32() & 1 == 0 { Coder::Arithmetic } else { Coder::Huffman };
+            let proto = VarlenProtocol::new(d, k).with_coder(coder);
+            let x = g.vec_f32(d..=d, -3.0, 3.0);
+            let ctx = RoundCtx::new(g.rng().next_u64(), g.rng().next_u64());
+            let f = proto.encode(&ctx, 0, &x).ok_or("no frame")?;
+            let mut acc = proto.new_accumulator();
+            proto.accumulate(&ctx, &f, &mut acc).map_err(|e| e.to_string())?;
+            let est = proto.finish(&ctx, acc, 1);
+            // single client: estimate within bin width of the truth
+            let (_, s) = super::super::quantizer::grid_params(&x, Span::Norm);
+            let width = s / (k - 1) as f32 + 1e-4;
+            for (j, (&e, &xi)) in est.iter().zip(&x).enumerate() {
+                if (e - xi).abs() > width {
+                    return Err(format!("coord {j}: |{e} - {xi}| > {width}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,182 @@
+//! Experiment result writers: CSV (for plotting) and a minimal JSON
+//! emitter (no serde in the offline crate set). Every bench writes its
+//! series here so figures can be regenerated outside Rust.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A value in a report row.
+#[derive(Clone, Debug)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+}
+
+impl From<&str> for Value {
+    fn from(s: &str) -> Self {
+        Value::Str(s.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(s: String) -> Self {
+        Value::Str(s)
+    }
+}
+impl From<i64> for Value {
+    fn from(v: i64) -> Self {
+        Value::Int(v)
+    }
+}
+impl From<u64> for Value {
+    fn from(v: u64) -> Self {
+        Value::Int(v as i64)
+    }
+}
+impl From<usize> for Value {
+    fn from(v: usize) -> Self {
+        Value::Int(v as i64)
+    }
+}
+impl From<f64> for Value {
+    fn from(v: f64) -> Self {
+        Value::Float(v)
+    }
+}
+
+impl Value {
+    fn csv(&self) -> String {
+        match self {
+            Value::Str(s) => {
+                if s.contains(',') || s.contains('"') {
+                    format!("\"{}\"", s.replace('"', "\"\""))
+                } else {
+                    s.clone()
+                }
+            }
+            Value::Int(v) => v.to_string(),
+            Value::Float(v) => format!("{v}"),
+        }
+    }
+
+    fn json(&self) -> String {
+        match self {
+            Value::Str(s) => format!(
+                "\"{}\"",
+                s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+            ),
+            Value::Int(v) => v.to_string(),
+            Value::Float(v) => {
+                if v.is_finite() {
+                    format!("{v}")
+                } else {
+                    "null".into()
+                }
+            }
+        }
+    }
+}
+
+/// A tabular report: named columns, appendable rows.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub name: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<Value>>,
+}
+
+impl Report {
+    pub fn new(name: impl Into<String>, columns: &[&str]) -> Self {
+        Report {
+            name: name.into(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<Value>) {
+        debug_assert_eq!(row.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(row);
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.columns.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(Value::csv).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("[\n");
+        for (i, row) in self.rows.iter().enumerate() {
+            let fields: Vec<String> = self
+                .columns
+                .iter()
+                .zip(row)
+                .map(|(c, v)| format!("\"{}\": {}", c, v.json()))
+                .collect();
+            out.push_str("  {");
+            out.push_str(&fields.join(", "));
+            out.push('}');
+            if i + 1 < self.rows.len() {
+                out.push(',');
+            }
+            out.push('\n');
+        }
+        out.push(']');
+        out
+    }
+
+    /// Write `<dir>/<name>.csv` and `<dir>/<name>.json`.
+    pub fn write(&self, dir: impl AsRef<Path>) -> Result<()> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let mut csv = std::fs::File::create(dir.join(format!("{}.csv", self.name)))?;
+        csv.write_all(self.to_csv().as_bytes())?;
+        let mut json = std::fs::File::create(dir.join(format!("{}.json", self.name)))?;
+        json.write_all(self.to_json().as_bytes())?;
+        Ok(())
+    }
+}
+
+/// Default report directory: `$DME_REPORTS` or `./reports`.
+pub fn default_dir() -> std::path::PathBuf {
+    std::env::var_os("DME_REPORTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| "reports".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_and_json_shapes() {
+        let mut r = Report::new("t", &["proto", "bits", "mse"]);
+        r.push(vec!["a,b".into(), 128u64.into(), 0.5f64.into()]);
+        r.push(vec!["plain".into(), 64u64.into(), f64::NAN.into()]);
+        let csv = r.to_csv();
+        assert!(csv.starts_with("proto,bits,mse\n"));
+        assert!(csv.contains("\"a,b\",128,0.5"));
+        let json = r.to_json();
+        assert!(json.contains("\"proto\": \"a,b\""));
+        assert!(json.contains("\"mse\": null")); // NaN -> null
+    }
+
+    #[test]
+    fn write_creates_files() {
+        let dir = std::env::temp_dir().join(format!("dme_report_{}", std::process::id()));
+        let mut r = Report::new("x", &["a"]);
+        r.push(vec![1u64.into()]);
+        r.write(&dir).unwrap();
+        assert!(dir.join("x.csv").exists());
+        assert!(dir.join("x.json").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,98 @@
+//! Deterministic random number generation with explicit public/private
+//! randomness streams.
+//!
+//! The paper's model (§1.2) distinguishes **public randomness** (shared by
+//! all clients and the server — used for the rotation matrix `R = HD`) from
+//! **private randomness** (per-client — used for stochastic rounding and
+//! sampling coins). We realize both from a single experiment seed by
+//! domain-separated key derivation, so every run is exactly reproducible:
+//!
+//! * public stream of round `t`: `Pcg64::new(mix(seed, PUBLIC_TAG, t))`
+//! * private stream of client `i` in round `t`:
+//!   `Pcg64::new(mix(seed, PRIVATE_TAG, t, i))`
+//!
+//! No external `rand` crate: PCG-XSH-RR 64/32 (O'Neill 2014) plus
+//! SplitMix64 for seeding/mixing, and Box–Muller for Gaussians.
+
+mod pcg;
+
+pub use pcg::Pcg64;
+
+/// Domain tag for public (shared) randomness streams.
+pub const PUBLIC_TAG: u64 = 0x9e37_79b9_7f4a_7c15;
+/// Domain tag for private (per-client) randomness streams.
+pub const PRIVATE_TAG: u64 = 0xbf58_476d_1ce4_e5b9;
+
+/// SplitMix64 step: the standard 64-bit finalizer used both as a tiny PRNG
+/// and as the mixing function for key derivation.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Mix an arbitrary list of words into a single 64-bit key
+/// (domain-separated seed derivation).
+pub fn mix(words: &[u64]) -> u64 {
+    let mut state = 0x853c_49e6_748f_ea9b;
+    let mut out = 0;
+    for &w in words {
+        state ^= w;
+        out = splitmix64(&mut state);
+    }
+    out
+}
+
+/// The shared (public) stream for round `round` under experiment `seed`.
+/// Every party can derive this identically — it plays the role of the
+/// shared random seed footnote 1 of the paper describes.
+pub fn public_stream(seed: u64, round: u64) -> Pcg64 {
+    Pcg64::new(mix(&[seed, PUBLIC_TAG, round]))
+}
+
+/// The private stream of `client` for round `round`. Only used client-side;
+/// the server never observes it (it only sees the transmitted bits).
+pub fn private_stream(seed: u64, round: u64, client: u64) -> Pcg64 {
+    Pcg64::new(mix(&[seed, PRIVATE_TAG, round, client]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_known_values_differ_and_are_deterministic() {
+        let mut a = 1u64;
+        let mut b = 1u64;
+        let x1 = splitmix64(&mut a);
+        let x2 = splitmix64(&mut a);
+        assert_ne!(x1, x2);
+        assert_eq!(splitmix64(&mut b), x1);
+    }
+
+    #[test]
+    fn mix_is_order_sensitive() {
+        assert_ne!(mix(&[1, 2]), mix(&[2, 1]));
+        assert_ne!(mix(&[1]), mix(&[1, 0]));
+    }
+
+    #[test]
+    fn public_stream_is_shared_private_is_not() {
+        let mut s1 = public_stream(7, 3);
+        let mut s2 = public_stream(7, 3);
+        assert_eq!(s1.next_u64(), s2.next_u64());
+        let mut p1 = private_stream(7, 3, 0);
+        let mut p2 = private_stream(7, 3, 1);
+        assert_ne!(p1.next_u64(), p2.next_u64());
+    }
+
+    #[test]
+    fn streams_change_across_rounds() {
+        let mut a = public_stream(7, 0);
+        let mut b = public_stream(7, 1);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

@@ -1,0 +1,234 @@
+//! PCG-XSH-RR 64/32: small, fast, statistically strong PRNG
+//! (O'Neill, "PCG: A Family of Simple Fast Space-Efficient Statistically
+//! Good Algorithms for Random Number Generation", 2014).
+//!
+//! We use the 64-bit-state / 32-bit-output member and compose two outputs
+//! for `next_u64`. Gaussian variates come from Box–Muller with a cached
+//! second sample.
+
+/// PCG-XSH-RR 64/32 generator.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u64,
+    inc: u64,
+    /// Cached second Box–Muller Gaussian sample.
+    gauss_spare: Option<f64>,
+}
+
+const PCG_MULT: u64 = 6_364_136_223_846_793_005;
+const PCG_DEFAULT_INC: u64 = 1_442_695_040_888_963_407;
+
+impl Pcg64 {
+    /// Create a generator from a 64-bit seed (default stream).
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, PCG_DEFAULT_INC >> 1)
+    }
+
+    /// Create a generator with an explicit stream selector.
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let inc = (stream << 1) | 1;
+        let mut rng = Pcg64 { state: 0, inc, gauss_spare: None };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Next 32 uniform random bits.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next 64 uniform random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)` with 24 bits of mantissa randomness (f32).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of mantissa randomness (f64).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Unbiased uniform integer in `[0, bound)` (Lemire rejection method).
+    pub fn next_below(&mut self, bound: u32) -> u32 {
+        assert!(bound > 0, "next_below(0)");
+        loop {
+            let x = self.next_u32();
+            let m = (x as u64).wrapping_mul(bound as u64);
+            let lo = m as u32;
+            if lo >= bound || lo >= bound.wrapping_neg() % bound {
+                return (m >> 32) as u32;
+            }
+        }
+    }
+
+    /// Bernoulli(p) coin.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Rademacher variate: ±1 with probability 1/2 each.
+    #[inline]
+    pub fn rademacher(&mut self) -> f32 {
+        if self.next_u32() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Standard normal via Box–Muller (caches the paired sample).
+    pub fn gaussian(&mut self) -> f64 {
+        if let Some(z) = self.gauss_spare.take() {
+            return z;
+        }
+        // u1 in (0, 1] to keep ln finite.
+        let u1 = 1.0 - self.next_f64();
+        let u2 = self.next_f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.gauss_spare = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Fill `dst` with iid uniforms in `[0, 1)`.
+    pub fn fill_uniform_f32(&mut self, dst: &mut [f32]) {
+        for v in dst {
+            *v = self.next_f32();
+        }
+    }
+
+    /// Fill `dst` with iid standard normals.
+    pub fn fill_gaussian_f32(&mut self, dst: &mut [f32]) {
+        for v in dst {
+            *v = self.gaussian() as f32;
+        }
+    }
+
+    /// Fill `dst` with iid Rademacher ±1 entries (the diagonal of `D`).
+    pub fn fill_rademacher(&mut self, dst: &mut [f32]) {
+        // Draw 32 signs per u32 for speed; this is on the round hot path.
+        let mut i = 0;
+        while i < dst.len() {
+            let mut bits = self.next_u32();
+            let n = 32.min(dst.len() - i);
+            for v in &mut dst[i..i + n] {
+                *v = if bits & 1 == 0 { 1.0 } else { -1.0 };
+                bits >>= 1;
+            }
+            i += n;
+        }
+    }
+
+    /// Sample `m` distinct indices from `[0, n)` (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, m: usize) -> Vec<usize> {
+        assert!(m <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..m {
+            let j = i + self.next_below((n - i) as u32) as usize;
+            idx.swap(i, j);
+        }
+        idx.truncate(m);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut a = Pcg64::new(123);
+        let mut b = Pcg64::new(123);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same <= 1);
+    }
+
+    #[test]
+    fn uniform_f32_in_range_and_roughly_uniform() {
+        let mut rng = Pcg64::new(9);
+        let n = 100_000;
+        let mut sum = 0.0f64;
+        for _ in 0..n {
+            let x = rng.next_f32();
+            assert!((0.0..1.0).contains(&x));
+            sum += x as f64;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn next_below_unbiased_small_bound() {
+        let mut rng = Pcg64::new(17);
+        let mut counts = [0u32; 3];
+        for _ in 0..30_000 {
+            counts[rng.next_below(3) as usize] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 500.0, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Pcg64::new(31);
+        let n = 200_000;
+        let (mut s1, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let z = rng.gaussian();
+            s1 += z;
+            s2 += z * z;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn rademacher_fill_is_balanced() {
+        let mut rng = Pcg64::new(41);
+        let mut buf = vec![0.0f32; 100_000];
+        rng.fill_rademacher(&mut buf);
+        let pos = buf.iter().filter(|&&x| x == 1.0).count();
+        assert!(buf.iter().all(|&x| x == 1.0 || x == -1.0));
+        assert!((pos as f64 - 50_000.0).abs() < 1500.0);
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_in_range() {
+        let mut rng = Pcg64::new(5);
+        let idx = rng.sample_indices(100, 30);
+        assert_eq!(idx.len(), 30);
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 30);
+        assert!(idx.iter().all(|&i| i < 100));
+    }
+}

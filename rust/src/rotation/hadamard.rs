@@ -1,0 +1,198 @@
+//! In-place fast Walsh–Hadamard transform: the `H` of the paper's
+//! structured rotation `R = HD` (§3), O(d log d) time, O(1) extra space.
+//!
+//! This is the native-Rust twin of the Pallas kernel
+//! (`python/compile/kernels/hadamard.py`); both are validated against the
+//! same dense-matrix oracle. The hot loop is written so LLVM can
+//! auto-vectorize the inner butterflies (contiguous, stride-`h` pairs).
+
+/// Unnormalized in-place FWHT. `x.len()` must be a power of two.
+///
+/// After the call, `x = H x` with `H` the ±1 Sylvester/Walsh-Hadamard
+/// matrix. `fwht(fwht(x)) == d * x`.
+pub fn fwht(x: &mut [f32]) {
+    let d = x.len();
+    assert!(d.is_power_of_two(), "FWHT needs power-of-two length, got {d}");
+    let mut h = 1;
+    // The h=1 and h=2 stages have 1- and 2-lane butterflies that defeat
+    // auto-vectorization when expressed via split_at_mut; fuse them into a
+    // single radix-4 pass over contiguous 4-blocks (one load/store per
+    // element for two stages, and a vectorizable straight-line body).
+    if d >= 4 {
+        for q in x.chunks_exact_mut(4) {
+            let (a, b, c, e) = (q[0], q[1], q[2], q[3]);
+            let (s0, d0, s1, d1) = (a + b, a - b, c + e, c - e);
+            q[0] = s0 + s1;
+            q[1] = d0 + d1;
+            q[2] = s0 - s1;
+            q[3] = d0 - d1;
+        }
+        h = 4;
+    } else if d >= 2 {
+        for q in x.chunks_exact_mut(2) {
+            let (a, b) = (q[0], q[1]);
+            q[0] = a + b;
+            q[1] = a - b;
+        }
+        h = 2;
+    }
+    while h < d {
+        let step = h * 2;
+        let mut base = 0;
+        while base < d {
+            // Butterfly the two halves of this block; the compiler
+            // vectorizes this loop (no bounds checks after the split).
+            let (lo_half, hi_half) = x[base..base + step].split_at_mut(h);
+            for (a, b) in lo_half.iter_mut().zip(hi_half.iter_mut()) {
+                let u = *a;
+                let v = *b;
+                *a = u + v;
+                *b = u - v;
+            }
+            base += step;
+        }
+        h = step;
+    }
+}
+
+/// Orthonormal FWHT: `x ← (1/√d) H x`. Self-inverse.
+pub fn fwht_normalized(x: &mut [f32]) {
+    fwht(x);
+    let inv = 1.0 / (x.len() as f32).sqrt();
+    for v in x.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// Next power of two ≥ `d` (vectors are zero-padded to this length before
+/// rotation; padding survives the round trip because R is orthogonal).
+pub fn pad_dim(d: usize) -> usize {
+    d.next_power_of_two()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::testkit::{check, run_prop};
+
+    /// Dense H for the oracle (kept tiny; tests use d <= 256).
+    fn dense_h(d: usize) -> Vec<Vec<f32>> {
+        let mut h = vec![vec![1.0f32]];
+        while h.len() < d {
+            let n = h.len();
+            let mut next = vec![vec![0.0f32; 2 * n]; 2 * n];
+            for i in 0..n {
+                for j in 0..n {
+                    next[i][j] = h[i][j];
+                    next[i][j + n] = h[i][j];
+                    next[i + n][j] = h[i][j];
+                    next[i + n][j + n] = -h[i][j];
+                }
+            }
+            h = next;
+        }
+        h
+    }
+
+    fn dense_apply(x: &[f32]) -> Vec<f32> {
+        let h = dense_h(x.len());
+        h.iter()
+            .map(|row| row.iter().zip(x).map(|(&a, &b)| a * b).sum())
+            .collect()
+    }
+
+    #[test]
+    fn matches_dense_oracle() {
+        for d in [1usize, 2, 4, 16, 64, 256] {
+            let mut rng = Pcg64::new(d as u64);
+            let mut x = vec![0.0f32; d];
+            rng.fill_gaussian_f32(&mut x);
+            let want = dense_apply(&x);
+            fwht(&mut x);
+            for (a, b) in x.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-3, "d={d}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn hadamard_2x2_by_hand() {
+        let mut x = vec![3.0f32, 5.0];
+        fwht(&mut x);
+        assert_eq!(x, vec![8.0, -2.0]);
+    }
+
+    #[test]
+    fn self_inverse_up_to_d() {
+        let mut rng = Pcg64::new(9);
+        let mut x = vec![0.0f32; 128];
+        rng.fill_gaussian_f32(&mut x);
+        let orig = x.clone();
+        fwht(&mut x);
+        fwht(&mut x);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a - 128.0 * b).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn normalized_is_isometry_and_involution() {
+        let mut rng = Pcg64::new(10);
+        let mut x = vec![0.0f32; 64];
+        rng.fill_gaussian_f32(&mut x);
+        let orig = x.clone();
+        let n0: f32 = x.iter().map(|v| v * v).sum();
+        fwht_normalized(&mut x);
+        let n1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() / n0 < 1e-5);
+        fwht_normalized(&mut x);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power-of-two")]
+    fn rejects_non_power_of_two() {
+        fwht(&mut [0.0; 12]);
+    }
+
+    #[test]
+    fn pad_dim_values() {
+        assert_eq!(pad_dim(1), 1);
+        assert_eq!(pad_dim(2), 2);
+        assert_eq!(pad_dim(3), 4);
+        assert_eq!(pad_dim(1000), 1024);
+        assert_eq!(pad_dim(1024), 1024);
+    }
+
+    #[test]
+    fn prop_linearity_and_parseval() {
+        run_prop("fwht_props", 100, |g| {
+            let d = g.pow2(0, 9);
+            let mut x = vec![0.0f32; d];
+            let mut y = vec![0.0f32; d];
+            g.rng().fill_gaussian_f32(&mut x);
+            g.rng().fill_gaussian_f32(&mut y);
+            // linearity: H(x + y) = Hx + Hy
+            let mut xy: Vec<f32> = x.iter().zip(&y).map(|(a, b)| a + b).collect();
+            let mut hx = x.clone();
+            let mut hy = y.clone();
+            fwht(&mut xy);
+            fwht(&mut hx);
+            fwht(&mut hy);
+            for i in 0..d {
+                let diff = (xy[i] - hx[i] - hy[i]).abs();
+                check(diff < 1e-2 * (d as f32), format!("linearity diff {diff} at {i}"))?;
+            }
+            // Parseval: ||Hx||^2 = d ||x||^2
+            let nx: f64 = x.iter().map(|&v| v as f64 * v as f64).sum();
+            let nhx: f64 = hx.iter().map(|&v| v as f64 * v as f64).sum();
+            check(
+                (nhx - d as f64 * nx).abs() <= 1e-3 * (1.0 + nhx),
+                format!("parseval {nhx} vs {}", d as f64 * nx),
+            )
+        });
+    }
+}

@@ -1,0 +1,200 @@
+//! The paper's structured random rotation `R = HD` (§3): a Rademacher
+//! diagonal `D` drawn from **public randomness** followed by the
+//! Walsh–Hadamard transform `H`, normalized to be orthogonal. Applying
+//! R or R⁻¹ costs O(d log d) time and O(1) extra space.
+//!
+//! Vectors whose dimension is not a power of two are zero-padded
+//! ([`hadamard::pad_dim`]); since R is orthogonal and the server knows d,
+//! the inverse rotation restores the padding to (near-)zero and the first
+//! d coordinates are returned.
+
+pub mod hadamard;
+
+use crate::rng::Pcg64;
+
+/// A sampled rotation: the Rademacher diagonal of `R = HD` for one round.
+/// `H` is implicit (the FWHT); only `D`'s signs are materialized.
+#[derive(Clone, Debug)]
+pub struct Rotation {
+    /// ±1 diagonal, length = padded dimension.
+    sign: Vec<f32>,
+    /// Original (logical) dimension, ≤ sign.len().
+    dim: usize,
+}
+
+impl Rotation {
+    /// Draw the round's rotation from a public-randomness stream. Every
+    /// party calling this with the same stream state derives the same `R`
+    /// (footnote 1 of the paper: a shared seed emulates public randomness).
+    pub fn sample(dim: usize, public: &mut Pcg64) -> Self {
+        let padded = hadamard::pad_dim(dim);
+        let mut sign = vec![0.0f32; padded];
+        public.fill_rademacher(&mut sign);
+        Rotation { sign, dim }
+    }
+
+    /// Logical (unpadded) dimension.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Padded power-of-two dimension: the length rotated vectors have.
+    pub fn padded_dim(&self) -> usize {
+        self.sign.len()
+    }
+
+    /// The ±1 diagonal (exposed for the PJRT engine, which passes it as a
+    /// tensor input to the compiled `rotate_*` HLO).
+    pub fn signs(&self) -> &[f32] {
+        &self.sign
+    }
+
+    /// `z = R x` (padding x with zeros to the power-of-two length).
+    pub fn forward(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.dim, "dimension mismatch");
+        let mut z = vec![0.0f32; self.padded_dim()];
+        for (zi, (xi, si)) in z.iter_mut().zip(x.iter().zip(&self.sign)) {
+            *zi = xi * si;
+        }
+        hadamard::fwht_normalized(&mut z);
+        z
+    }
+
+    /// `x = R⁻¹ z`, truncated back to the logical dimension.
+    pub fn inverse(&self, z: &[f32]) -> Vec<f32> {
+        assert_eq!(z.len(), self.padded_dim(), "padded dimension mismatch");
+        let mut x = z.to_vec();
+        hadamard::fwht_normalized(&mut x);
+        for (xi, si) in x.iter_mut().zip(&self.sign) {
+            *xi *= si;
+        }
+        x.truncate(self.dim);
+        x
+    }
+
+    /// In-place forward rotation of an already-padded buffer (hot path;
+    /// avoids the allocation in [`Rotation::forward`]).
+    pub fn forward_in_place(&self, buf: &mut [f32]) {
+        assert_eq!(buf.len(), self.padded_dim());
+        for (v, s) in buf.iter_mut().zip(&self.sign) {
+            *v *= s;
+        }
+        hadamard::fwht_normalized(buf);
+    }
+
+    /// In-place inverse rotation of a padded buffer.
+    pub fn inverse_in_place(&self, buf: &mut [f32]) {
+        assert_eq!(buf.len(), self.padded_dim());
+        hadamard::fwht_normalized(buf);
+        for (v, s) in buf.iter_mut().zip(&self.sign) {
+            *v *= s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg;
+    use crate::rng;
+    use crate::testkit::{check, run_prop};
+
+    #[test]
+    fn roundtrip_power_of_two() {
+        let mut pubrng = rng::public_stream(1, 0);
+        let rot = Rotation::sample(64, &mut pubrng);
+        let mut rng2 = Pcg64::new(5);
+        let mut x = vec![0.0f32; 64];
+        rng2.fill_gaussian_f32(&mut x);
+        let back = rot.inverse(&rot.forward(&x));
+        for (a, b) in back.iter().zip(&x) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn roundtrip_with_padding() {
+        let mut pubrng = rng::public_stream(2, 0);
+        let rot = Rotation::sample(100, &mut pubrng); // pads to 128
+        assert_eq!(rot.padded_dim(), 128);
+        let mut rng2 = Pcg64::new(6);
+        let mut x = vec![0.0f32; 100];
+        rng2.fill_gaussian_f32(&mut x);
+        let z = rot.forward(&x);
+        assert_eq!(z.len(), 128);
+        let back = rot.inverse(&z);
+        assert_eq!(back.len(), 100);
+        for (a, b) in back.iter().zip(&x) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn norm_preserved_including_padding() {
+        let mut pubrng = rng::public_stream(3, 7);
+        let rot = Rotation::sample(60, &mut pubrng);
+        let x = vec![0.5f32; 60];
+        let z = rot.forward(&x);
+        assert!((linalg::norm_sq(&z) - linalg::norm_sq(&x)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn same_public_stream_same_rotation() {
+        let a = Rotation::sample(32, &mut rng::public_stream(9, 4));
+        let b = Rotation::sample(32, &mut rng::public_stream(9, 4));
+        assert_eq!(a.signs(), b.signs());
+        let c = Rotation::sample(32, &mut rng::public_stream(9, 5));
+        assert_ne!(a.signs(), c.signs());
+    }
+
+    #[test]
+    fn one_hot_becomes_flat() {
+        // Lemma 7 intuition: the rotated one-hot has |z_j| = 1/sqrt(d).
+        let mut pubrng = rng::public_stream(4, 0);
+        let d = 256;
+        let rot = Rotation::sample(d, &mut pubrng);
+        let mut x = vec![0.0f32; d];
+        x[17] = 1.0;
+        let z = rot.forward(&x);
+        let expect = 1.0 / (d as f32).sqrt();
+        for &v in &z {
+            assert!((v.abs() - expect).abs() < 1e-5, "v={v} expect |{expect}|");
+        }
+    }
+
+    #[test]
+    fn in_place_variants_match_allocating() {
+        let mut pubrng = rng::public_stream(11, 0);
+        let rot = Rotation::sample(128, &mut pubrng);
+        let mut rng2 = Pcg64::new(12);
+        let mut x = vec![0.0f32; 128];
+        rng2.fill_gaussian_f32(&mut x);
+        let z = rot.forward(&x);
+        let mut buf = x.clone();
+        rot.forward_in_place(&mut buf);
+        assert_eq!(buf, z);
+        let back = rot.inverse(&z);
+        rot.inverse_in_place(&mut buf);
+        assert_eq!(&buf[..128], back.as_slice());
+    }
+
+    #[test]
+    fn prop_rotation_is_isometry_any_dim() {
+        run_prop("rotation_isometry", 80, |g| {
+            let d = g.usize_in(1..=300);
+            let seed = g.rng().next_u64();
+            let rot = Rotation::sample(d, &mut rng::public_stream(seed, 0));
+            let x = g.vec_f32(d..=d, -5.0, 5.0);
+            let z = rot.forward(&x);
+            let n_x = linalg::norm_sq(&x);
+            let n_z = linalg::norm_sq(&z);
+            check(
+                (n_x - n_z).abs() <= 1e-3 * (1.0 + n_x),
+                format!("d={d} norms {n_x} vs {n_z}"),
+            )?;
+            let back = rot.inverse(&z);
+            let err = linalg::dist_sq(&back, &x);
+            check(err < 1e-6 * (1.0 + n_x), format!("roundtrip err {err}"))
+        });
+    }
+}

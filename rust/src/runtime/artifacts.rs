@@ -1,0 +1,164 @@
+//! Artifact discovery: `make artifacts` (the build-time Python step) drops
+//! `<entry>_d<dim>.hlo.txt` files plus a `manifest.tsv` into `artifacts/`;
+//! this module locates and describes them for the PJRT loader.
+//!
+//! Manifest line format (written by `python/compile/aot.py`):
+//! `name \t file \t dim \t num_outputs \t shape;shape;...`
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One AOT-compiled entry point.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub path: PathBuf,
+    pub dim: usize,
+    pub num_outputs: usize,
+    /// Input shapes, e.g. `[[1, 64], [64], [1, 1]]`.
+    pub input_shapes: Vec<Vec<usize>>,
+}
+
+/// The set of compiled entry points available on disk.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    entries: HashMap<String, ArtifactEntry>,
+    dims: Vec<usize>,
+}
+
+impl Manifest {
+    /// Load `manifest.tsv` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let tsv = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&tsv)
+            .with_context(|| format!("reading {} (run `make artifacts`)", tsv.display()))?;
+        let mut entries = HashMap::new();
+        let mut dims = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let fields: Vec<&str> = line.split('\t').collect();
+            if fields.len() != 5 {
+                bail!("manifest.tsv line {}: expected 5 fields, got {}", lineno + 1, fields.len());
+            }
+            let name = fields[0].to_string();
+            let dim: usize = fields[2].parse().context("bad dim")?;
+            let num_outputs: usize = fields[3].parse().context("bad num_outputs")?;
+            let input_shapes = fields[4]
+                .split(';')
+                .map(|s| {
+                    s.split(',')
+                        .map(|x| x.parse::<usize>().context("bad shape"))
+                        .collect::<Result<Vec<_>>>()
+                })
+                .collect::<Result<Vec<_>>>()?;
+            if !dims.contains(&dim) {
+                dims.push(dim);
+            }
+            entries.insert(
+                name.clone(),
+                ArtifactEntry { name, path: dir.join(fields[1]), dim, num_outputs, input_shapes },
+            );
+        }
+        dims.sort_unstable();
+        Ok(Manifest { entries, dims })
+    }
+
+    /// Default artifacts directory: `$DME_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("DME_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.get(name)
+    }
+
+    /// Entry `<op>_d<dim>`, e.g. `rotate_fwd_d256`.
+    pub fn entry_for(&self, op: &str, dim: usize) -> Result<&ArtifactEntry> {
+        let key = format!("{op}_d{dim}");
+        self.entries.get(&key).with_context(|| {
+            format!(
+                "no artifact `{key}` (compiled dims: {:?}; re-run `make artifacts` \
+                 or add the dim to python/compile/aot.py DIMS)",
+                self.dims
+            )
+        })
+    }
+
+    /// Dimensions with compiled artifacts.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, lines: &str) {
+        let mut f = std::fs::File::create(dir.join("manifest.tsv")).unwrap();
+        f.write_all(lines.as_bytes()).unwrap();
+    }
+
+    #[test]
+    fn parses_wellformed_manifest() {
+        let dir = std::env::temp_dir().join(format!("dme_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(
+            &dir,
+            "rotate_fwd_d16\trotate_fwd_d16.hlo.txt\t16\t1\t1,16;16\n\
+             decode_sum_d16\tdecode_sum_d16.hlo.txt\t16\t1\t8,16;8,1;8,1;1,1\n",
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.dims(), &[16]);
+        let e = m.entry_for("rotate_fwd", 16).unwrap();
+        assert_eq!(e.num_outputs, 1);
+        assert_eq!(e.input_shapes, vec![vec![1, 16], vec![16]]);
+        assert!(m.entry_for("rotate_fwd", 32).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_is_helpful_error() {
+        let err = Manifest::load("/nonexistent/path").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn malformed_line_rejected() {
+        let dir = std::env::temp_dir().join(format!("dme_manifest_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir, "only\ttwo\n");
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn real_artifacts_manifest_if_present() {
+        // Exercised in CI after `make artifacts`; skipped silently otherwise.
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.tsv").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.is_empty());
+            for dim in [16usize, 64, 256, 512, 1024] {
+                assert!(m.entry_for("encode_rotated", dim).is_ok(), "missing dim {dim}");
+            }
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! The compute-backend abstraction: every protocol's numeric hot-spots
+//! (rotation, stochastic quantization) go through [`ComputeBackend`], so
+//! the same protocol code runs on the native Rust implementations or on
+//! the AOT-compiled JAX/Pallas executables ([`super::pjrt::PjrtBackend`]).
+//!
+//! Randomness is always produced by the *caller* (uniforms and Rademacher
+//! signs are arguments), so both backends are deterministic given the same
+//! streams and can be cross-validated bin-for-bin.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::protocol::quantizer::{self, Quantized, Span};
+use crate::rotation::hadamard;
+
+/// Numeric operations a protocol may offload.
+pub trait ComputeBackend: Send + Sync {
+    /// Backend label for logs/metrics.
+    fn name(&self) -> &'static str;
+
+    /// `z = (1/√d) H (sign ⊙ x)` — the paper's rotation `R = HD`.
+    /// `x.len()` must equal `sign.len()` and be a power of two.
+    fn rotate_fwd(&self, x: &[f32], sign: &[f32]) -> Result<Vec<f32>>;
+
+    /// `x = sign ⊙ (1/√d) H z` — the inverse rotation `R⁻¹`.
+    fn rotate_inv(&self, z: &[f32], sign: &[f32]) -> Result<Vec<f32>>;
+
+    /// Stochastic k-level quantization of `x` with uniforms `u` (§2.2).
+    fn quantize(&self, x: &[f32], u: &[f32], span: Span, k: u32) -> Result<Quantized>;
+
+    /// Fused client step of π_srk: rotate then quantize (minmax span).
+    /// The default composes the two ops; the PJRT backend uses the fused
+    /// `encode_rotated_d*` executable instead.
+    fn encode_rotated(&self, x: &[f32], sign: &[f32], u: &[f32], k: u32) -> Result<Quantized> {
+        let z = self.rotate_fwd(x, sign)?;
+        self.quantize(&z, u, Span::MinMax, k)
+    }
+}
+
+/// Pure-Rust backend (always available, any dimension).
+#[derive(Debug, Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    /// Shared singleton — protocols default to this.
+    pub fn shared() -> Arc<dyn ComputeBackend> {
+        static ONCE: std::sync::OnceLock<Arc<NativeBackend>> = std::sync::OnceLock::new();
+        ONCE.get_or_init(|| Arc::new(NativeBackend)).clone() as Arc<dyn ComputeBackend>
+    }
+}
+
+impl ComputeBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn rotate_fwd(&self, x: &[f32], sign: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(x.len() == sign.len(), "dim mismatch");
+        let mut z: Vec<f32> = x.iter().zip(sign).map(|(a, s)| a * s).collect();
+        hadamard::fwht_normalized(&mut z);
+        Ok(z)
+    }
+
+    fn rotate_inv(&self, z: &[f32], sign: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(z.len() == sign.len(), "dim mismatch");
+        let mut x = z.to_vec();
+        hadamard::fwht_normalized(&mut x);
+        for (v, s) in x.iter_mut().zip(sign) {
+            *v *= s;
+        }
+        Ok(x)
+    }
+
+    fn quantize(&self, x: &[f32], u: &[f32], span: Span, k: u32) -> Result<Quantized> {
+        anyhow::ensure!(x.len() == u.len(), "uniforms length mismatch");
+        anyhow::ensure!(k >= 2, "k must be >= 2");
+        Ok(quantizer::quantize(x, u, span, k))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn native_rotate_roundtrip() {
+        let b = NativeBackend;
+        let mut rng = Pcg64::new(1);
+        let mut x = vec![0.0f32; 64];
+        rng.fill_gaussian_f32(&mut x);
+        let mut sign = vec![0.0f32; 64];
+        rng.fill_rademacher(&mut sign);
+        let z = b.rotate_fwd(&x, &sign).unwrap();
+        let back = b.rotate_inv(&z, &sign).unwrap();
+        for (a, b) in back.iter().zip(&x) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn native_encode_rotated_matches_composition() {
+        let b = NativeBackend;
+        let mut rng = Pcg64::new(2);
+        let mut x = vec![0.0f32; 32];
+        rng.fill_gaussian_f32(&mut x);
+        let mut sign = vec![0.0f32; 32];
+        rng.fill_rademacher(&mut sign);
+        let mut u = vec![0.0f32; 32];
+        rng.fill_uniform_f32(&mut u);
+        let fused = b.encode_rotated(&x, &sign, &u, 16).unwrap();
+        let z = b.rotate_fwd(&x, &sign).unwrap();
+        let composed = b.quantize(&z, &u, Span::MinMax, 16).unwrap();
+        assert_eq!(fused.bins, composed.bins);
+        assert_eq!(fused.xmin, composed.xmin);
+        assert_eq!(fused.s, composed.s);
+    }
+
+    #[test]
+    fn dim_mismatch_rejected() {
+        let b = NativeBackend;
+        assert!(b.rotate_fwd(&[1.0; 4], &[1.0; 8]).is_err());
+        assert!(b.quantize(&[1.0; 4], &[0.5; 3], Span::MinMax, 4).is_err());
+        assert!(b.quantize(&[1.0; 4], &[0.5; 4], Span::MinMax, 1).is_err());
+    }
+
+    #[test]
+    fn shared_singleton_is_native() {
+        assert_eq!(NativeBackend::shared().name(), "native");
+    }
+}

@@ -1,0 +1,19 @@
+//! Runtime layer: executes the AOT-compiled JAX/Pallas artifacts from the
+//! Rust request path via PJRT, and defines the [`engine::ComputeBackend`]
+//! abstraction that lets every protocol run its numeric hot-spots on either
+//! the native Rust implementations or the compiled HLO executables.
+//!
+//! * [`artifacts`] — discovers `artifacts/*.hlo.txt` via `manifest.tsv`.
+//! * [`engine`] — the backend trait + the pure-Rust [`engine::NativeBackend`].
+//! * [`pjrt`] — the PJRT CPU client: loads HLO text, compiles once per
+//!   entry point, executes on a dedicated engine thread (the `xla` crate's
+//!   client is `Rc`-based and must stay on one thread; the
+//!   [`pjrt::PjrtBackend`] handle is `Send + Sync` and speaks to it over a
+//!   channel).
+
+pub mod artifacts;
+pub mod engine;
+pub mod pjrt;
+
+pub use engine::{ComputeBackend, NativeBackend};
+pub use pjrt::PjrtBackend;

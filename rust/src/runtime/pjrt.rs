@@ -1,0 +1,296 @@
+//! PJRT execution of the AOT artifacts — the bridge that puts the
+//! JAX/Pallas-compiled HLO on the Rust request path.
+//!
+//! Artifact interchange is HLO **text** (`HloModuleProto::from_text_file`):
+//! jax ≥ 0.5 serializes protos with 64-bit instruction ids which
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! Threading: the `xla` crate's `PjRtClient` is `Rc`-based and must stay on
+//! one thread. [`PjrtBackend`] is a `Send + Sync` handle that ships op
+//! requests over a channel to a dedicated engine thread owning the client
+//! and the compiled executables (compiled once, lazily, per entry point).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::artifacts::Manifest;
+use crate::protocol::quantizer::{Quantized, Span};
+
+/// Ops the engine thread serves.
+enum Request {
+    RotateFwd { x: Vec<f32>, sign: Vec<f32> },
+    RotateInv { z: Vec<f32>, sign: Vec<f32> },
+    Quantize { x: Vec<f32>, u: Vec<f32>, span: Span, k: u32 },
+    EncodeRotated { x: Vec<f32>, sign: Vec<f32>, u: Vec<f32>, k: u32 },
+    /// Server-side batch decode: Σ dequantize(rows) (decode_sum_d* artifact).
+    DecodeSum { bins: Vec<f32>, xmin: Vec<f32>, s: Vec<f32>, k: u32, dim: usize },
+    Shutdown,
+}
+
+enum Response {
+    Vector(Vec<f32>),
+    Quantized(Quantized),
+}
+
+struct Job {
+    req: Request,
+    reply: mpsc::Sender<Result<Response>>,
+}
+
+/// `Send + Sync` handle to the PJRT engine thread.
+pub struct PjrtBackend {
+    tx: Mutex<mpsc::Sender<Job>>,
+    /// Keeps the engine thread joined on drop.
+    thread: Option<std::thread::JoinHandle<()>>,
+    /// Rows per decode_sum execution (compiled batch size).
+    pub decode_batch: usize,
+}
+
+impl PjrtBackend {
+    /// Spawn the engine thread against the default artifacts directory.
+    pub fn new() -> Result<Self> {
+        Self::with_dir(Manifest::default_dir())
+    }
+
+    /// Spawn the engine thread for a specific artifacts directory.
+    pub fn with_dir(dir: PathBuf) -> Result<Self> {
+        let manifest = Manifest::load(&dir)?;
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let thread = std::thread::Builder::new()
+            .name("dme-pjrt-engine".into())
+            .spawn(move || engine_main(manifest, rx, ready_tx))
+            .context("spawning pjrt engine thread")?;
+        ready_rx
+            .recv()
+            .context("pjrt engine thread died during init")??;
+        Ok(PjrtBackend { tx: Mutex::new(tx), thread: Some(thread), decode_batch: 8 })
+    }
+
+    fn call(&self, req: Request) -> Result<Response> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .expect("pjrt handle poisoned")
+            .send(Job { req, reply: reply_tx })
+            .map_err(|_| anyhow!("pjrt engine thread is gone"))?;
+        reply_rx.recv().map_err(|_| anyhow!("pjrt engine dropped reply"))?
+    }
+
+    fn call_vec(&self, req: Request) -> Result<Vec<f32>> {
+        match self.call(req)? {
+            Response::Vector(v) => Ok(v),
+            _ => bail!("unexpected response type"),
+        }
+    }
+
+    fn call_quant(&self, req: Request) -> Result<Quantized> {
+        match self.call(req)? {
+            Response::Quantized(q) => Ok(q),
+            _ => bail!("unexpected response type"),
+        }
+    }
+
+    /// Batch server-side decode: `bins` is `rows × dim` (row-major,
+    /// zero-pad to the compiled batch), returns the per-dimension sums.
+    pub fn decode_sum(
+        &self,
+        bins: Vec<f32>,
+        xmin: Vec<f32>,
+        s: Vec<f32>,
+        k: u32,
+        dim: usize,
+    ) -> Result<Vec<f32>> {
+        self.call_vec(Request::DecodeSum { bins, xmin, s, k, dim })
+    }
+}
+
+impl Drop for PjrtBackend {
+    fn drop(&mut self) {
+        let (reply_tx, _reply_rx) = mpsc::channel();
+        let _ = self
+            .tx
+            .lock()
+            .map(|tx| tx.send(Job { req: Request::Shutdown, reply: reply_tx }));
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl super::engine::ComputeBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn rotate_fwd(&self, x: &[f32], sign: &[f32]) -> Result<Vec<f32>> {
+        self.call_vec(Request::RotateFwd { x: x.to_vec(), sign: sign.to_vec() })
+    }
+
+    fn rotate_inv(&self, z: &[f32], sign: &[f32]) -> Result<Vec<f32>> {
+        self.call_vec(Request::RotateInv { z: z.to_vec(), sign: sign.to_vec() })
+    }
+
+    fn quantize(&self, x: &[f32], u: &[f32], span: Span, k: u32) -> Result<Quantized> {
+        self.call_quant(Request::Quantize { x: x.to_vec(), u: u.to_vec(), span, k })
+    }
+
+    fn encode_rotated(&self, x: &[f32], sign: &[f32], u: &[f32], k: u32) -> Result<Quantized> {
+        self.call_quant(Request::EncodeRotated {
+            x: x.to_vec(),
+            sign: sign.to_vec(),
+            u: u.to_vec(),
+            k,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine thread
+// ---------------------------------------------------------------------------
+
+struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    /// Compiled executables, keyed by entry name (lazy).
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+fn engine_main(manifest: Manifest, rx: mpsc::Receiver<Job>, ready: mpsc::Sender<Result<()>>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            let _ = ready.send(Err(anyhow!("PjRtClient::cpu failed: {e}")));
+            return;
+        }
+    };
+    let _ = ready.send(Ok(()));
+    let mut eng = Engine { client, manifest, exes: HashMap::new() };
+    while let Ok(job) = rx.recv() {
+        if matches!(job.req, Request::Shutdown) {
+            return;
+        }
+        let resp = eng.serve(job.req);
+        let _ = job.reply.send(resp);
+    }
+}
+
+impl Engine {
+    fn exe(&mut self, op: &str, dim: usize) -> Result<&xla::PjRtLoadedExecutable> {
+        let key = format!("{op}_d{dim}");
+        if !self.exes.contains_key(&key) {
+            let entry = self.manifest.entry_for(op, dim)?.clone();
+            let proto = xla::HloModuleProto::from_text_file(
+                entry.path.to_str().context("non-utf8 artifact path")?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e}", entry.path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {key}: {e}"))?;
+            self.exes.insert(key.clone(), exe);
+        }
+        Ok(&self.exes[&key])
+    }
+
+    fn run(&mut self, op: &str, dim: usize, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.exe(op, dim)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {op}_d{dim}: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {op}_d{dim}: {e}"))?;
+        // aot.py lowers with return_tuple=True: output is always a tuple.
+        lit.to_tuple().map_err(|e| anyhow!("untupling {op}_d{dim}: {e}"))
+    }
+
+    fn serve(&mut self, req: Request) -> Result<Response> {
+        match req {
+            Request::RotateFwd { x, sign } => {
+                let d = x.len();
+                let out = self.run("rotate_fwd", d, &lits(&[(&x, &[1, d]), (&sign, &[d])])?)?;
+                Ok(Response::Vector(vec_of(&out[0])?))
+            }
+            Request::RotateInv { z, sign } => {
+                let d = z.len();
+                let out = self.run("rotate_inv", d, &lits(&[(&z, &[1, d]), (&sign, &[d])])?)?;
+                Ok(Response::Vector(vec_of(&out[0])?))
+            }
+            Request::Quantize { x, u, span, k } => {
+                let d = x.len();
+                let op = match span {
+                    Span::MinMax => "quantize_minmax",
+                    Span::Norm => "quantize_norm",
+                };
+                let km1 = vec![(k - 1) as f32];
+                let out = self.run(
+                    op,
+                    d,
+                    &lits(&[(&x, &[1, d]), (&u, &[1, d]), (&km1, &[1, 1])])?,
+                )?;
+                quantized_of(&out)
+            }
+            Request::EncodeRotated { x, sign, u, k } => {
+                let d = x.len();
+                let km1 = vec![(k - 1) as f32];
+                let out = self.run(
+                    "encode_rotated",
+                    d,
+                    &lits(&[(&x, &[1, d]), (&sign, &[d]), (&u, &[1, d]), (&km1, &[1, 1])])?,
+                )?;
+                quantized_of(&out)
+            }
+            Request::DecodeSum { bins, xmin, s, k, dim } => {
+                let rows = xmin.len();
+                anyhow::ensure!(bins.len() == rows * dim, "bins shape mismatch");
+                let km1 = vec![(k - 1) as f32];
+                let out = self.run(
+                    "decode_sum",
+                    dim,
+                    &lits(&[
+                        (&bins, &[rows, dim]),
+                        (&xmin, &[rows, 1]),
+                        (&s, &[rows, 1]),
+                        (&km1, &[1, 1]),
+                    ])?,
+                )?;
+                Ok(Response::Vector(vec_of(&out[0])?))
+            }
+            Request::Shutdown => unreachable!("handled by engine_main"),
+        }
+    }
+}
+
+fn lits(specs: &[(&Vec<f32>, &[usize])]) -> Result<Vec<xla::Literal>> {
+    specs
+        .iter()
+        .map(|(data, shape)| {
+            let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+            xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape to {dims:?}: {e}"))
+        })
+        .collect()
+}
+
+fn vec_of(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e}"))
+}
+
+fn quantized_of(out: &[xla::Literal]) -> Result<Response> {
+    anyhow::ensure!(out.len() == 3, "quantize entry returns 3 outputs, got {}", out.len());
+    let bins_f = vec_of(&out[0])?;
+    let xmin = vec_of(&out[1])?;
+    let s = vec_of(&out[2])?;
+    Ok(Response::Quantized(Quantized {
+        bins: bins_f.iter().map(|&b| b as u32).collect(),
+        xmin: xmin[0],
+        s: s[0],
+    }))
+}

@@ -1,0 +1,157 @@
+//! Estimation-error metrics and summary statistics for experiments:
+//! MSE of mean estimates, running moments, and confidence intervals over
+//! repeated trials (every figure in the paper averages multiple trials).
+
+use crate::linalg;
+
+/// Squared ℓ₂ error of an estimate against the true mean — the paper's
+/// per-trial loss `‖X̂̄ − X̄‖²`; average over trials to get the MSE
+/// `E(π, Xⁿ)`.
+pub fn sq_error(estimate: &[f32], truth: &[f32]) -> f64 {
+    linalg::dist_sq(estimate, truth)
+}
+
+/// Exact empirical mean of client vectors (the estimand `X̄`).
+pub fn true_mean(xs: &[Vec<f32>]) -> Vec<f32> {
+    let refs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+    linalg::mean_of(&refs)
+}
+
+/// Average squared norm `(1/n) Σ ‖X_i‖²` — the scale factor in all of the
+/// paper's MSE bounds.
+pub fn avg_norm_sq(xs: &[Vec<f32>]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|x| linalg::norm_sq(x)).sum::<f64>() / xs.len() as f64
+}
+
+/// Online mean/variance accumulator (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Running {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Running { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n−1 denominator); 0 for fewer than 2 samples.
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Standard error of the mean.
+    pub fn sem(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.std() / (self.n as f64).sqrt()
+        }
+    }
+
+    /// Normal-approximation 95% confidence half-width.
+    pub fn ci95(&self) -> f64 {
+        1.96 * self.sem()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Percentile of a sample (nearest-rank on a sorted copy), p in [0, 100].
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    assert!(!samples.is_empty(), "percentile of empty sample");
+    let mut v: Vec<f64> = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sq_error_basic() {
+        assert_eq!(sq_error(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert_eq!(sq_error(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
+    }
+
+    #[test]
+    fn true_mean_and_avg_norm() {
+        let xs = vec![vec![0.0f32, 2.0], vec![2.0f32, 0.0]];
+        assert_eq!(true_mean(&xs), vec![1.0, 1.0]);
+        assert_eq!(avg_norm_sq(&xs), 4.0);
+        assert_eq!(avg_norm_sq(&[]), 0.0);
+    }
+
+    #[test]
+    fn running_matches_closed_form() {
+        let mut r = Running::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            r.push(x);
+        }
+        assert_eq!(r.count(), 8);
+        assert!((r.mean() - 5.0).abs() < 1e-12);
+        // sample variance of this classic dataset is 32/7
+        assert!((r.variance() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(r.min(), 2.0);
+        assert_eq!(r.max(), 9.0);
+        assert!(r.ci95() > 0.0);
+    }
+
+    #[test]
+    fn running_degenerate_cases() {
+        let r = Running::new();
+        assert_eq!(r.variance(), 0.0);
+        assert_eq!(r.sem(), 0.0);
+        let mut one = Running::new();
+        one.push(3.0);
+        assert_eq!(one.variance(), 0.0);
+        assert_eq!(one.mean(), 3.0);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let s = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&s, 0.0), 1.0);
+        assert_eq!(percentile(&s, 50.0), 3.0);
+        assert_eq!(percentile(&s, 100.0), 5.0);
+    }
+}

@@ -1,0 +1,209 @@
+//! Coordinator integration: full leader/worker rounds over both transports
+//! (loopback threads and real TCP sockets), with byte accounting and the
+//! protocol stack in between.
+
+use std::sync::Arc;
+
+use dme::coordinator::leader::{spawn_local_cluster, Leader};
+use dme::coordinator::transport::{TcpHub, TransportHub};
+use dme::coordinator::worker::{mean_update, Worker};
+use dme::protocol::config::ProtocolConfig;
+use dme::rng::Pcg64;
+use dme::stats;
+
+fn shards(n: usize, d: usize, seed: u64) -> Vec<Vec<Vec<f32>>> {
+    let mut rng = Pcg64::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut x = vec![0.0f32; d];
+            rng.fill_gaussian_f32(&mut x);
+            vec![x]
+        })
+        .collect()
+}
+
+#[test]
+fn loopback_mean_estimation_multi_round_all_protocols() {
+    let d = 64;
+    let n = 8;
+    for spec in ["binary", "klevel:k=32", "rotated:k=32", "varlen:k=9"] {
+        let sh = shards(n, d, 3);
+        let client_vecs: Vec<Vec<f32>> = sh.iter().map(|s| s[0].clone()).collect();
+        let truth = stats::true_mean(&client_vecs);
+        let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+        let bound = proto.mse_bound(n, stats::avg_norm_sq(&client_vecs));
+        let (mut leader, handles) = spawn_local_cluster(proto, sh, mean_update(), 7);
+        let mut errs = Vec::new();
+        for r in 0..20 {
+            let out = leader.round(r, d as u32, &[]).unwrap();
+            errs.push(stats::sq_error(&out.means[0], &truth));
+        }
+        let mse: f64 = errs.iter().sum::<f64>() / errs.len() as f64;
+        if let Some(b) = bound {
+            assert!(mse <= b * 1.3, "{spec}: coordinator mse {mse} vs bound {b}");
+        }
+        assert_eq!(leader.metrics().rounds.len(), 20);
+        assert!(leader.metrics().rounds_per_sec() > 0.0);
+        leader.shutdown().unwrap();
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+    }
+}
+
+#[test]
+fn tcp_cluster_end_to_end() {
+    // Real sockets: 3 worker threads connect to a TCP leader and run
+    // 5 rounds of rotated mean estimation.
+    let d = 64;
+    let n = 3;
+    let addr = "127.0.0.1:47911";
+    let sh = shards(n, d, 5);
+    let client_vecs: Vec<Vec<f32>> = sh.iter().map(|s| s[0].clone()).collect();
+    let truth = stats::true_mean(&client_vecs);
+
+    let leader_thread = {
+        let spec = "rotated:k=64";
+        std::thread::spawn(move || {
+            let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+            let hub = TcpHub::listen(addr, n).unwrap();
+            assert_eq!(hub.n_workers(), n);
+            let mut leader = Leader::new(proto, Box::new(hub), 99);
+            let mut last = Vec::new();
+            for r in 0..5 {
+                let out = leader.round(r, d as u32, &[]).unwrap();
+                assert_eq!(out.n_frames, n);
+                last = out.means[0].clone();
+            }
+            let (down, up) = (
+                leader.metrics().rounds.last().unwrap().cum_down_bytes,
+                leader.metrics().rounds.last().unwrap().cum_up_bytes,
+            );
+            assert!(down > 0 && up > 0, "byte accounting missing");
+            leader.shutdown().unwrap();
+            last
+        })
+    };
+    std::thread::sleep(std::time::Duration::from_millis(150));
+    let mut worker_threads = Vec::new();
+    for (i, shard) in sh.into_iter().enumerate() {
+        worker_threads.push(std::thread::spawn(move || {
+            let proto = ProtocolConfig::parse("rotated:k=64", d).unwrap().build().unwrap();
+            let w = Worker {
+                client_id: i as u64,
+                shard,
+                protocol: proto,
+                update: mean_update(),
+                seed: 99,
+            };
+            w.run_tcp(addr).unwrap();
+        }));
+    }
+    let est = leader_thread.join().unwrap();
+    for t in worker_threads {
+        t.join().unwrap();
+    }
+    let err = stats::sq_error(&est, &truth);
+    let scale = stats::avg_norm_sq(&client_vecs);
+    assert!(err < scale * 0.05, "tcp estimate err {err} vs scale {scale}");
+}
+
+#[test]
+fn loopback_and_tcp_agree_bit_for_bit() {
+    // Same protocol, same seeds: the decoded mean must be identical across
+    // transports (the transport may not perturb protocol bytes).
+    let d = 32;
+    let n = 4;
+    let sh = shards(n, d, 11);
+
+    // loopback
+    let proto = ProtocolConfig::parse("varlen:k=7", d).unwrap().build().unwrap();
+    let (mut leader, handles) = spawn_local_cluster(proto, sh.clone(), mean_update(), 123);
+    let loop_mean = leader.round(0, d as u32, &[]).unwrap().means[0].clone();
+    leader.shutdown().unwrap();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+
+    // tcp
+    let addr = "127.0.0.1:47913";
+    let leader_thread = std::thread::spawn(move || {
+        let proto = ProtocolConfig::parse("varlen:k=7", d).unwrap().build().unwrap();
+        let hub = TcpHub::listen(addr, n).unwrap();
+        let mut leader = Leader::new(proto, Box::new(hub), 123);
+        let mean = leader.round(0, d as u32, &[]).unwrap().means[0].clone();
+        leader.shutdown().unwrap();
+        mean
+    });
+    std::thread::sleep(std::time::Duration::from_millis(150));
+    let mut worker_threads = Vec::new();
+    for (i, shard) in sh.into_iter().enumerate() {
+        worker_threads.push(std::thread::spawn(move || {
+            let proto = ProtocolConfig::parse("varlen:k=7", d).unwrap().build().unwrap();
+            Worker { client_id: i as u64, shard, protocol: proto, update: mean_update(), seed: 123 }
+                .run_tcp(addr)
+                .unwrap();
+        }));
+    }
+    let tcp_mean = leader_thread.join().unwrap();
+    for t in worker_threads {
+        t.join().unwrap();
+    }
+    assert_eq!(
+        loop_mean.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        tcp_mean.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "transports disagree"
+    );
+}
+
+#[test]
+fn uneven_shards_and_silent_workers() {
+    // Workers with empty shards upload zero frames; the round still closes.
+    let d = 16;
+    let mut sh = shards(3, d, 13);
+    sh.push(Vec::new()); // a worker with no data
+    let proto = ProtocolConfig::parse("klevel:k=8", d).unwrap().build().unwrap();
+    let (mut leader, handles) = spawn_local_cluster(proto, sh, mean_update(), 5);
+    let out = leader.round(0, d as u32, &[]).unwrap();
+    assert_eq!(out.n_frames, 3);
+    assert_eq!(out.means.len(), 1);
+    leader.shutdown().unwrap();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+}
+
+#[test]
+fn pjrt_backend_through_full_coordinator() {
+    // The E2E requirement: protocol encode running on the AOT-compiled
+    // JAX/Pallas executables, inside the threaded coordinator.
+    if !dme::runtime::artifacts::Manifest::default_dir().join("manifest.tsv").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let d = 256;
+    let n = 4;
+    let backend: Arc<dyn dme::runtime::ComputeBackend> =
+        Arc::new(dme::runtime::PjrtBackend::new().unwrap());
+    let proto = ProtocolConfig::parse("rotated:k=16", d)
+        .unwrap()
+        .with_backend(backend)
+        .build()
+        .unwrap();
+    let sh = shards(n, d, 17);
+    let client_vecs: Vec<Vec<f32>> = sh.iter().map(|s| s[0].clone()).collect();
+    let truth = stats::true_mean(&client_vecs);
+    let (mut leader, handles) = spawn_local_cluster(proto, sh, mean_update(), 55);
+    let mut errs = Vec::new();
+    for r in 0..5 {
+        let out = leader.round(r, d as u32, &[]).unwrap();
+        errs.push(stats::sq_error(&out.means[0], &truth));
+    }
+    let mse: f64 = errs.iter().sum::<f64>() / errs.len() as f64;
+    let scale = stats::avg_norm_sq(&client_vecs);
+    assert!(mse < scale * 0.05, "pjrt coordinator mse {mse} vs scale {scale}");
+    leader.shutdown().unwrap();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+}

@@ -1,0 +1,201 @@
+//! Integration: the AOT-compiled JAX/Pallas artifacts executed via PJRT
+//! must agree with the native Rust implementations — same rotation, same
+//! bins from the same uniforms, and protocols built on the PJRT backend
+//! must interoperate bit-for-bit with native-decoded frames.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+use std::sync::Arc;
+
+use dme::protocol::config::ProtocolConfig;
+use dme::protocol::quantizer::Span;
+use dme::protocol::{run_round, RoundCtx};
+use dme::rng::Pcg64;
+use dme::runtime::{artifacts::Manifest, ComputeBackend, NativeBackend, PjrtBackend};
+use dme::stats;
+
+fn artifacts_present() -> bool {
+    Manifest::default_dir().join("manifest.tsv").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_present() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+fn gauss(d: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::new(seed);
+    let mut x = vec![0.0f32; d];
+    rng.fill_gaussian_f32(&mut x);
+    x
+}
+
+fn signs(d: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::new(seed);
+    let mut s = vec![0.0f32; d];
+    rng.fill_rademacher(&mut s);
+    s
+}
+
+fn uniforms(d: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::new(seed);
+    let mut u = vec![0.0f32; d];
+    rng.fill_uniform_f32(&mut u);
+    u
+}
+
+#[test]
+fn rotate_fwd_matches_native_all_dims() {
+    require_artifacts!();
+    let pjrt = PjrtBackend::new().expect("pjrt backend");
+    let native = NativeBackend;
+    for d in [16usize, 64, 256, 512, 1024] {
+        let x = gauss(d, d as u64);
+        let s = signs(d, d as u64 + 1);
+        let zp = pjrt.rotate_fwd(&x, &s).expect("pjrt rotate");
+        let zn = native.rotate_fwd(&x, &s).expect("native rotate");
+        for (j, (a, b)) in zp.iter().zip(&zn).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-3,
+                "d={d} coord {j}: pjrt {a} vs native {b}"
+            );
+        }
+        // and the inverse round-trips
+        let back = pjrt.rotate_inv(&zp, &s).expect("pjrt inverse");
+        for (j, (a, b)) in back.iter().zip(&x).enumerate() {
+            assert!((a - b).abs() < 1e-3, "d={d} inv coord {j}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn quantize_bins_match_native_exactly() {
+    require_artifacts!();
+    let pjrt = PjrtBackend::new().expect("pjrt backend");
+    let native = NativeBackend;
+    for d in [16usize, 256] {
+        for k in [2u32, 16, 33] {
+            for span in [Span::MinMax, Span::Norm] {
+                let x = gauss(d, 7 + d as u64 + k as u64);
+                let u = uniforms(d, 9 + k as u64);
+                let qp = pjrt.quantize(&x, &u, span, k).expect("pjrt quantize");
+                let qn = native.quantize(&x, &u, span, k).expect("native quantize");
+                assert!((qp.xmin - qn.xmin).abs() < 1e-5, "xmin d={d} k={k}");
+                assert!(
+                    (qp.s - qn.s).abs() < 1e-3 * qn.s.abs().max(1.0),
+                    "s d={d} k={k}: {} vs {}",
+                    qp.s,
+                    qn.s
+                );
+                // Bins may differ only where x sits exactly on a grid edge
+                // (f32 rounding); require >= 99% exact agreement.
+                let same = qp.bins.iter().zip(&qn.bins).filter(|(a, b)| a == b).count();
+                assert!(
+                    same * 100 >= d * 99,
+                    "d={d} k={k} span={span:?}: only {same}/{d} bins agree"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_encode_rotated_matches_native_composition() {
+    require_artifacts!();
+    let pjrt = PjrtBackend::new().expect("pjrt backend");
+    let native = NativeBackend;
+    let d = 256;
+    let x = gauss(d, 21);
+    let s = signs(d, 22);
+    let u = uniforms(d, 23);
+    let qp = pjrt.encode_rotated(&x, &s, &u, 16).expect("pjrt fused");
+    let qn = native.encode_rotated(&x, &s, &u, 16).expect("native fused");
+    let same = qp.bins.iter().zip(&qn.bins).filter(|(a, b)| a == b).count();
+    assert!(same * 100 >= d * 99, "only {same}/{d} bins agree");
+}
+
+#[test]
+fn decode_sum_artifact_matches_manual() {
+    require_artifacts!();
+    let pjrt = PjrtBackend::new().expect("pjrt backend");
+    let d = 64;
+    let rows = 8; // compiled decode batch
+    let k = 16u32;
+    let mut bins = Vec::new();
+    let mut xmin = Vec::new();
+    let mut s = Vec::new();
+    let mut rng = Pcg64::new(31);
+    for _ in 0..rows {
+        for _ in 0..d {
+            bins.push(rng.next_below(k) as f32);
+        }
+        xmin.push(rng.gaussian() as f32);
+        s.push(rng.next_f32() + 0.1);
+    }
+    let got = pjrt
+        .decode_sum(bins.clone(), xmin.clone(), s.clone(), k, d)
+        .expect("decode_sum");
+    for j in 0..d {
+        let mut want = 0.0f64;
+        for r in 0..rows {
+            want += xmin[r] as f64 + bins[r * d + j] as f64 * s[r] as f64 / (k - 1) as f64;
+        }
+        assert!(
+            (got[j] as f64 - want).abs() < 1e-3,
+            "coord {j}: {} vs {want}",
+            got[j]
+        );
+    }
+}
+
+#[test]
+fn protocols_on_pjrt_backend_interoperate_with_native() {
+    require_artifacts!();
+    let pjrt: Arc<dyn ComputeBackend> = Arc::new(PjrtBackend::new().expect("pjrt backend"));
+    let d = 256;
+    let n = 6;
+    let xs: Vec<Vec<f32>> = (0..n).map(|i| gauss(d, 100 + i as u64)).collect();
+    let truth = stats::true_mean(&xs);
+    for spec in ["klevel:k=16", "rotated:k=16", "varlen:k=17"] {
+        let ctx = RoundCtx::new(0, 555);
+        let native_proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+        let pjrt_proto = ProtocolConfig::parse(spec, d)
+            .unwrap()
+            .with_backend(pjrt.clone())
+            .build()
+            .unwrap();
+        let (est_n, bits_n) = run_round(native_proto.as_ref(), &ctx, &xs).unwrap();
+        let (est_p, bits_p) = run_round(pjrt_proto.as_ref(), &ctx, &xs).unwrap();
+        // Same uniforms -> same bins (up to grid-edge f32 ties) -> nearly
+        // identical frames; identical bit cost is exact for fixed-width.
+        if spec.starts_with("klevel") || spec.starts_with("rotated") {
+            assert_eq!(bits_n, bits_p, "spec={spec}");
+        }
+        let err_n = stats::sq_error(&est_n, &truth);
+        let err_p = stats::sq_error(&est_p, &truth);
+        assert!(
+            (err_n - err_p).abs() <= 0.1 * err_n.max(1e-9) + 1e-9,
+            "spec={spec}: native err {err_n} vs pjrt err {err_p}"
+        );
+        // both within the analytic bound
+        let bound = native_proto.mse_bound(n, stats::avg_norm_sq(&xs));
+        if let Some(b) = bound {
+            assert!(err_p <= b * 3.0, "spec={spec}: pjrt err {err_p} vs bound {b}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_unsupported_dim_is_clean_error() {
+    require_artifacts!();
+    let pjrt = PjrtBackend::new().expect("pjrt backend");
+    let err = pjrt
+        .rotate_fwd(&gauss(32, 1), &signs(32, 2))
+        .expect_err("dim 32 is not compiled");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+}

@@ -1,0 +1,172 @@
+//! Cross-protocol conformance suite: properties every protocol must
+//! satisfy, run against every spec the config registry can build.
+
+use dme::protocol::config::ProtocolConfig;
+use dme::protocol::{run_round, Frame, RoundCtx};
+use dme::rng::Pcg64;
+use dme::stats;
+
+const SPECS: &[&str] = &[
+    "float32",
+    "binary",
+    "klevel:k=2",
+    "klevel:k=16",
+    "klevel:k=16,span=norm",
+    "rotated:k=2",
+    "rotated:k=16",
+    "varlen:k=4",
+    "varlen:k=17",
+    "varlen:k=17,coder=huffman",
+    "klevel:k=16,p=0.5",
+    "varlen:k=17,p=0.25",
+];
+
+fn clients(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Pcg64::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut x = vec![0.0f32; d];
+            rng.fill_gaussian_f32(&mut x);
+            x
+        })
+        .collect()
+}
+
+#[test]
+fn every_protocol_estimates_every_dim() {
+    // Includes non-power-of-two dims (rotation pads) and tiny dims.
+    for d in [1usize, 2, 5, 31, 64, 100] {
+        let xs = clients(4, d, d as u64);
+        let truth = stats::true_mean(&xs);
+        for spec in SPECS {
+            if *spec == "varlen:k=4" && d == 1 {
+                // k=4 > sqrt(1)+1 fine; keep it — nothing to skip actually.
+            }
+            let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+            let ctx = RoundCtx::new(0, 9);
+            let (est, _) = run_round(proto.as_ref(), &ctx, &xs).unwrap();
+            assert_eq!(est.len(), d, "spec={spec} d={d}");
+            assert!(est.iter().all(|v| v.is_finite()), "spec={spec} d={d}");
+            // sanity scale: the estimate is in the ballpark of the truth
+            let err = stats::sq_error(&est, &truth);
+            let scale = stats::avg_norm_sq(&xs).max(1e-9);
+            assert!(err <= scale * 10.0, "spec={spec} d={d}: err {err} vs scale {scale}");
+        }
+    }
+}
+
+#[test]
+fn unbiasedness_over_rounds_all_protocols() {
+    let d = 32;
+    let xs = clients(6, d, 5);
+    let truth = stats::true_mean(&xs);
+    for spec in SPECS {
+        let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+        let trials = if spec.contains("p=") { 1200 } else { 400 };
+        let mut sums = vec![0.0f64; d];
+        for t in 0..trials {
+            let ctx = RoundCtx::new(t, 31);
+            let (est, _) = run_round(proto.as_ref(), &ctx, &xs).unwrap();
+            for (s, &e) in sums.iter_mut().zip(&est) {
+                *s += e as f64;
+            }
+        }
+        // Per-coordinate tolerance scaled by the protocol's MSE bound.
+        let bound = proto
+            .mse_bound(xs.len(), stats::avg_norm_sq(&xs))
+            .unwrap_or(1.0)
+            .max(1e-6);
+        let tol = 6.0 * (bound / trials as f64).sqrt() + 0.02;
+        for (j, &s) in sums.iter().enumerate() {
+            let mean = s / trials as f64;
+            assert!(
+                (mean - truth[j] as f64).abs() < tol,
+                "spec={spec} coord {j}: {mean} vs {} (tol {tol})",
+                truth[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn mse_bounds_hold_for_all_protocols() {
+    let d = 64;
+    let xs = clients(8, d, 7);
+    let avg = stats::avg_norm_sq(&xs);
+    let truth = stats::true_mean(&xs);
+    for spec in SPECS {
+        let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+        let Some(bound) = proto.mse_bound(xs.len(), avg) else { continue };
+        if bound == 0.0 {
+            continue; // float32
+        }
+        let mut err = stats::Running::new();
+        for t in 0..200 {
+            let ctx = RoundCtx::new(t, 13);
+            let (est, _) = run_round(proto.as_ref(), &ctx, &xs).unwrap();
+            err.push(stats::sq_error(&est, &truth));
+        }
+        assert!(
+            err.mean() <= bound * 1.1,
+            "spec={spec}: measured {} > bound {bound}",
+            err.mean()
+        );
+    }
+}
+
+#[test]
+fn frames_are_deterministic_and_client_distinct() {
+    let d = 48;
+    let xs = clients(2, d, 11);
+    for spec in SPECS {
+        if spec.contains("p=") {
+            continue; // sampling may silence clients
+        }
+        let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+        let ctx = RoundCtx::new(4, 21);
+        let f1 = proto.encode(&ctx, 0, &xs[0]).unwrap();
+        let f2 = proto.encode(&ctx, 0, &xs[0]).unwrap();
+        assert_eq!(f1.bytes, f2.bytes, "spec={spec} not deterministic");
+        assert_eq!(f1.bit_len, f2.bit_len);
+    }
+}
+
+#[test]
+fn garbage_frames_never_panic() {
+    // Decoders must return Err (or a wrong-but-finite result), never panic.
+    let d = 64;
+    let mut rng = Pcg64::new(99);
+    for spec in SPECS {
+        let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+        let ctx = RoundCtx::new(0, 1);
+        for len in [0usize, 1, 7, 64, 1024] {
+            let mut bytes = vec![0u8; len];
+            for b in bytes.iter_mut() {
+                *b = rng.next_u32() as u8;
+            }
+            let frame = Frame::new(bytes, len as u64 * 8);
+            let mut acc = proto.new_accumulator();
+            // Must not panic; error or garbage-but-finite both acceptable.
+            let _ = proto.accumulate(&ctx, &frame, &mut acc);
+            assert!(acc.sum.iter().all(|v| v.is_finite() || v.is_nan() || v.is_infinite()));
+        }
+    }
+}
+
+#[test]
+fn bit_accounting_matches_frame_lengths() {
+    let d = 128;
+    let xs = clients(5, d, 13);
+    for spec in SPECS {
+        if spec.contains("p=") {
+            continue;
+        }
+        let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+        let ctx = RoundCtx::new(0, 2);
+        let manual: u64 = (0..5)
+            .map(|i| proto.encode(&ctx, i as u64, &xs[i]).unwrap().bit_len)
+            .sum();
+        let (_, reported) = run_round(proto.as_ref(), &ctx, &xs).unwrap();
+        assert_eq!(manual, reported, "spec={spec}");
+    }
+}
