@@ -1,28 +1,40 @@
 //! Microbenchmarks of the hot paths (the §Perf numbers in EXPERIMENTS.md):
-//! FWHT, quantization, entropy coders, full protocol encode/decode, PJRT
-//! executable dispatch, and a full coordinator round.
+//! FWHT, quantization, entropy coders, full protocol encode/decode, the
+//! round-session encode pipeline (one-shot vs prepared, 1 vs N threads),
+//! PJRT executable dispatch, and a full coordinator round.
 //!
 //! ```bash
-//! cargo bench --offline --bench micro
+//! cargo bench --offline --bench micro            # full run
+//! cargo bench --offline --bench micro -- --smoke # CI fast path
 //! ```
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use dme::bench::Bench;
 use dme::coordinator::leader::spawn_local_cluster;
 use dme::coordinator::worker::mean_update;
 use dme::protocol::config::ProtocolConfig;
 use dme::protocol::quantizer::Span;
-use dme::protocol::{Protocol, RoundCtx};
+use dme::protocol::{run_round_par, Encoder, Frame, Protocol, RoundCtx};
 use dme::rng::Pcg64;
 use dme::rotation::hadamard;
 use dme::runtime::{ComputeBackend, NativeBackend};
 
 fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let mut b = Bench::new();
+    if smoke {
+        // CI fast path: tiny budgets, skip the largest dims. Still
+        // exercises every case family so the perf-path code keeps
+        // compiling and running.
+        b.budget = Duration::from_millis(20);
+        b.warmup = Duration::from_millis(4);
+    }
 
     // ---- FWHT (the L1/L3 hot kernel) ----
-    for d in [256usize, 1024, 4096, 16384] {
+    let fwht_dims: &[usize] = if smoke { &[256, 1024] } else { &[256, 1024, 4096, 16384] };
+    for &d in fwht_dims {
         let mut rng = Pcg64::new(d as u64);
         let mut x = vec![0.0f32; d];
         rng.fill_gaussian_f32(&mut x);
@@ -32,7 +44,8 @@ fn main() -> anyhow::Result<()> {
     }
 
     // ---- quantizer ----
-    for d in [1024usize, 16384] {
+    let quant_dims: &[usize] = if smoke { &[1024] } else { &[1024, 16384] };
+    for &d in quant_dims {
         let mut rng = Pcg64::new(1);
         let mut x = vec![0.0f32; d];
         let mut u = vec![0.0f32; d];
@@ -119,6 +132,65 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // ---- round-session encode throughput: rotated(k=16), n=64 clients ----
+    //
+    // The before/after pair for the session refactor: `oneshot` is the
+    // pre-refactor behavior (stateless encode: the rotation is re-derived
+    // and every scratch buffer reallocated per client); `session` prepares
+    // the round once and reuses scratch + frame buffer. `round_par` runs
+    // the full encode+decode round on 1 vs N threads.
+    {
+        let n = 64usize;
+        let dims: &[usize] = if smoke { &[1 << 10] } else { &[1 << 10, 1 << 14, 1 << 18] };
+        let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+        for &d in dims {
+            let mut rng = Pcg64::new(6 + d as u64);
+            let xs: Vec<Vec<f32>> = (0..n)
+                .map(|_| {
+                    let mut v = vec![0.0f32; d];
+                    rng.fill_gaussian_f32(&mut v);
+                    v
+                })
+                .collect();
+            let proto = ProtocolConfig::parse("rotated:k=16", d)?.build()?;
+            let ctx = RoundCtx::new(0, 1);
+            let units = (n * d) as f64;
+            let log2d = d.trailing_zeros();
+            b.run(
+                &format!("rotated k=16 encode/oneshot n={n} d=2^{log2d}"),
+                Some(units),
+                || {
+                    for (i, x) in xs.iter().enumerate() {
+                        std::hint::black_box(proto.encode(&ctx, i as u64, x));
+                    }
+                },
+            );
+            let state = proto.prepare(&ctx);
+            let mut enc = Encoder::new(proto.as_ref(), &state);
+            let mut frame = Frame::empty();
+            b.run(
+                &format!("rotated k=16 encode/session n={n} d=2^{log2d}"),
+                Some(units),
+                || {
+                    for (i, x) in xs.iter().enumerate() {
+                        std::hint::black_box(enc.encode_into(i as u64, x, &mut frame));
+                    }
+                },
+            );
+            for t in [1usize, threads] {
+                b.run(
+                    &format!("rotated k=16 round_par t={t} n={n} d=2^{log2d}"),
+                    Some(units),
+                    || {
+                        std::hint::black_box(
+                            run_round_par(proto.as_ref(), &ctx, &xs, t).unwrap(),
+                        );
+                    },
+                );
+            }
+        }
+    }
+
     // ---- backends: native vs PJRT dispatch ----
     {
         let d = 1024;
@@ -132,6 +204,14 @@ fn main() -> anyhow::Result<()> {
         let native = NativeBackend;
         b.run("native encode_rotated d=1024 k=16", Some(d as f64), || {
             std::hint::black_box(native.encode_rotated(&x, &sign, &u, 16).unwrap());
+        });
+        let mut buf = vec![0.0f32; d];
+        let mut bins = Vec::new();
+        b.run("native encode_rotated_in_place d=1024 k=16", Some(d as f64), || {
+            buf.copy_from_slice(&x);
+            std::hint::black_box(
+                native.encode_rotated_in_place(&mut buf, &sign, &u, 16, &mut bins).unwrap(),
+            );
         });
         if dme::runtime::artifacts::Manifest::default_dir().join("manifest.tsv").exists() {
             if let Ok(pjrt) = dme::runtime::PjrtBackend::new() {

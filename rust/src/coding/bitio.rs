@@ -24,6 +24,14 @@ impl BitWriter {
         BitWriter { buf: Vec::with_capacity(bits.div_ceil(8)), free: 0 }
     }
 
+    /// Start a writer over a recycled buffer: the buffer is cleared but
+    /// its capacity is kept. The round-session encoders reuse one frame
+    /// allocation per client this way.
+    pub fn over(mut buf: Vec<u8>) -> Self {
+        buf.clear();
+        BitWriter { buf, free: 0 }
+    }
+
     /// Total bits written so far.
     #[inline]
     pub fn bit_len(&self) -> u64 {

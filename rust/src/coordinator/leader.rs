@@ -8,7 +8,7 @@ use anyhow::{bail, ensure, Result};
 
 use super::metrics::{ExperimentMetrics, RoundMetrics};
 use super::transport::{Message, TransportHub, WeightedFrame};
-use crate::protocol::{Protocol, RoundCtx};
+use crate::protocol::{Decoder, Protocol, RoundCtx};
 
 /// Result of one coordinated round.
 #[derive(Clone, Debug)]
@@ -82,6 +82,10 @@ impl Leader {
         // Slot count: max over workers (workers with empty shards send 0).
         let n_slots = uploads.iter().map(|(_, f)| f.len()).max().unwrap_or(0);
         let ctx = RoundCtx::new(round, self.seed);
+        // One round session: shared state (the rotation for π_srk) is
+        // prepared once and reused across every slot and frame.
+        let proto = self.protocol.as_ref();
+        let round_state = proto.prepare(&ctx);
 
         let mut means = Vec::with_capacity(n_slots);
         let mut weights = Vec::with_capacity(n_slots);
@@ -89,8 +93,8 @@ impl Leader {
         let mut n_frames = 0usize;
 
         for slot in 0..n_slots {
-            // Plain-mean fast path: every present frame has weight 1.0 —
-            // a single accumulator and one finish() (one inverse rotation).
+            // Frames decode in client-id order (uploads are sorted above):
+            // f32 accumulation order is part of the determinism guarantee.
             let slot_frames: Vec<&WeightedFrame> = uploads
                 .iter()
                 .filter_map(|(_, f)| f.get(slot))
@@ -100,30 +104,24 @@ impl Leader {
             n_frames += slot_frames.len();
             let holders = uploads.iter().filter(|(_, f)| f.get(slot).is_some()).count();
 
+            let mut dec = Decoder::new(proto, &round_state);
             let uniform = slot_frames.iter().all(|wf| wf.weight == 1.0);
             if uniform {
-                let mut acc = self.protocol.new_accumulator();
+                // Plain-mean fast path: every present frame has weight 1.0.
                 for wf in &slot_frames {
-                    self.protocol.accumulate(&ctx, &wf.frame, &mut acc)?;
+                    dec.push(&wf.frame)?;
                 }
-                means.push(self.protocol.finish(&ctx, acc, holders));
                 weights.push(slot_frames.len() as f64);
+                means.push(dec.finish(holders));
             } else {
-                // Weighted average: decode each frame alone, then combine.
-                let mut sum = vec![0.0f64; self.protocol.dim()];
-                let mut total_w = 0.0f64;
+                // Weighted average: the decoder folds weight-scaled frames
+                // in the protocol's internal space, so the inverse rotation
+                // runs once per slot instead of once per frame.
                 for wf in &slot_frames {
-                    let mut acc = self.protocol.new_accumulator();
-                    self.protocol.accumulate(&ctx, &wf.frame, &mut acc)?;
-                    let y = self.protocol.finish_scaled(&ctx, acc, 1.0);
-                    for (s, &v) in sum.iter_mut().zip(&y) {
-                        *s += wf.weight as f64 * v as f64;
-                    }
-                    total_w += wf.weight as f64;
+                    dec.push_weighted(&wf.frame, wf.weight)?;
                 }
-                let inv = if total_w > 0.0 { 1.0 / total_w } else { 0.0 };
-                means.push(sum.iter().map(|&v| (v * inv) as f32).collect());
-                weights.push(total_w);
+                weights.push(dec.total_weight());
+                means.push(dec.finish_weighted());
             }
         }
 

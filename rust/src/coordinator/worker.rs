@@ -7,7 +7,7 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use super::transport::{LoopbackEndpoint, Message, WeightedFrame};
-use crate::protocol::{Protocol, RoundCtx};
+use crate::protocol::{Encoder, Protocol, RoundCtx};
 
 /// The application hook: given the broadcast state (`n_vecs × dim`,
 /// flattened) and the worker's local shard, produce the update vectors to
@@ -31,6 +31,11 @@ impl Worker {
     /// Compute and encode this round's upload.
     pub fn step(&self, round: u64, dim: u32, broadcast: &[f32]) -> Message {
         let ctx = RoundCtx::new(round, self.seed);
+        // One round session per step: the shared state (the rotation for
+        // π_srk) is prepared once and reused across every slot, and the
+        // encoder's scratch buffers are reused across slots too.
+        let state = self.protocol.prepare(&ctx);
+        let mut enc = Encoder::new(self.protocol.as_ref(), &state);
         let updates = (self.update)(broadcast, dim, &self.shard);
         let mut frames = Vec::with_capacity(updates.len());
         for (slot, (vec, weight)) in updates.into_iter().enumerate() {
@@ -39,7 +44,7 @@ impl Worker {
             // rounding noise is independent across slots: fold the slot
             // into the client id (ids are dense and < 2^32 in practice).
             let stream_id = self.client_id | ((slot as u64) << 40);
-            if let Some(frame) = self.protocol.encode(&ctx, stream_id, &vec) {
+            if let Some(frame) = enc.encode(stream_id, &vec) {
                 frames.push(WeightedFrame { frame, weight });
             } else {
                 // Sampling silenced this slot: an empty frame keeps slot

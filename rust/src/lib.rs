@@ -24,27 +24,42 @@
 //! | `π_svk` variable-length coded | §4 | [`protocol::varlen`] |
 //! | `π_p` client sampling | §5 | [`protocol::sampling`] |
 //!
-//! ## Quickstart
+//! ## Quickstart: a round session
+//!
+//! Every round follows the **prepare → encode → accumulate → finish**
+//! lifecycle (see [`protocol`]): shared per-round state (e.g. the π_srk
+//! rotation) is prepared exactly once, clients encode through a reusable
+//! [`Encoder`], and the server folds frames through a streaming
+//! [`Decoder`].
 //!
 //! ```no_run
-//! use dme::protocol::{Protocol, RoundCtx, config::ProtocolConfig};
+//! use dme::protocol::{Decoder, Encoder, Protocol, RoundCtx, config::ProtocolConfig};
 //!
 //! let d = 256;
 //! let cfg = ProtocolConfig::rotated(d, 16);
 //! let proto = cfg.build().unwrap();
 //! let ctx = RoundCtx::new(/*round=*/ 0, /*seed=*/ 42);
 //!
-//! // clients encode...
-//! let xs: Vec<Vec<f32>> = (0..10).map(|_| vec![0.1; d]).collect();
-//! let frames: Vec<_> = xs.iter().enumerate()
-//!     .filter_map(|(i, x)| proto.encode(&ctx, i as u64, x))
-//!     .collect();
+//! // prepare once per round: the rotation is sampled here and only here
+//! let state = proto.prepare(&ctx);
 //!
-//! // ...server decodes and averages
-//! let mut acc = proto.new_accumulator();
-//! for f in &frames { proto.accumulate(&ctx, f, &mut acc).unwrap(); }
-//! let mean = proto.finish(&ctx, acc, xs.len());
+//! // clients encode through one reusable encoder...
+//! let xs: Vec<Vec<f32>> = (0..10).map(|_| vec![0.1; d]).collect();
+//! let mut enc = Encoder::new(proto.as_ref(), &state);
+//! let mut dec = Decoder::new(proto.as_ref(), &state);
+//! for (i, x) in xs.iter().enumerate() {
+//!     if let Some(frame) = enc.encode(i as u64, x) {
+//!         // ...and the server streams the frames into one accumulator
+//!         dec.push(&frame).unwrap();
+//!     }
+//! }
+//! let mean = dec.finish(xs.len());
 //! ```
+//!
+//! For the common "one full round" case use [`protocol::run_round`], or
+//! [`protocol::run_round_par`] to shard clients across threads — the two
+//! are bit-identical for every thread count (the f32 accumulation order
+//! is fixed by client id, never by scheduling).
 
 pub mod apps;
 pub mod bench;
@@ -61,4 +76,7 @@ pub mod runtime;
 pub mod stats;
 pub mod testkit;
 
-pub use protocol::{Accumulator, Frame, Protocol, RoundCtx};
+pub use protocol::{
+    run_round, run_round_par, Accumulator, Decoder, EncodeScratch, Encoder, Frame, Protocol,
+    RoundCtx, RoundState,
+};

@@ -8,8 +8,10 @@
 
 use anyhow::{ensure, Result};
 
-use super::{Accumulator, Frame, Protocol, RoundCtx};
-use crate::coding::bitio::{BitReader, BitWriter};
+use super::{Accumulator, EncodeScratch, Frame, Protocol, RoundState};
+#[cfg(test)]
+use super::RoundCtx;
+use crate::coding::bitio::BitReader;
 use crate::coding::float::ScalarCodec;
 use crate::linalg;
 
@@ -46,11 +48,18 @@ impl Protocol for BinaryProtocol {
         self.dim
     }
 
-    fn encode(&self, ctx: &RoundCtx, client_id: u64, x: &[f32]) -> Option<Frame> {
+    fn encode_with(
+        &self,
+        state: &RoundState,
+        _scratch: &mut EncodeScratch,
+        client_id: u64,
+        x: &[f32],
+        frame: &mut Frame,
+    ) -> bool {
         assert_eq!(x.len(), self.dim, "dimension mismatch");
-        let mut private = ctx.private(client_id);
+        let mut private = state.ctx.private(client_id);
         let (lo, hi) = linalg::min_max(x);
-        let mut w = BitWriter::with_capacity(self.frame_bits() as usize);
+        let mut w = frame.writer();
         // Header first: quantize against the *decoded* scalars so client
         // and server use identical grid endpoints.
         let lo_t = self.header.put(&mut w, lo);
@@ -60,15 +69,15 @@ impl Protocol for BinaryProtocol {
             let p = if range > 0.0 { ((xj - lo_t) / range).clamp(0.0, 1.0) } else { 0.0 };
             w.put_bit(private.next_f32() < p);
         }
-        let (bytes, bits) = w.finish();
-        Some(Frame::new(bytes, bits))
+        frame.store(w);
+        true
     }
 
     fn new_accumulator(&self) -> Accumulator {
         Accumulator::new(self.dim)
     }
 
-    fn accumulate(&self, _ctx: &RoundCtx, frame: &Frame, acc: &mut Accumulator) -> Result<()> {
+    fn accumulate_with(&self, _state: &RoundState, frame: &Frame, acc: &mut Accumulator) -> Result<()> {
         ensure!(acc.sum.len() == self.dim, "accumulator dimension mismatch");
         let mut r = BitReader::with_bit_len(&frame.bytes, frame.bit_len);
         let lo = self.header.get(&mut r)?;
@@ -81,9 +90,8 @@ impl Protocol for BinaryProtocol {
         Ok(())
     }
 
-    fn finish_scaled(&self, _ctx: &RoundCtx, acc: Accumulator, divisor: f64) -> Vec<f32> {
-        let inv = if divisor > 0.0 { (1.0 / divisor) as f32 } else { 0.0 };
-        acc.sum.iter().map(|&v| v * inv).collect()
+    fn finish_scaled_with(&self, _state: &RoundState, acc: Accumulator, divisor: f64) -> Vec<f32> {
+        acc.into_scaled(divisor)
     }
 
     fn mse_bound(&self, n: usize, avg_norm_sq: f64) -> Option<f64> {

@@ -17,7 +17,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use super::{Accumulator, Frame, Protocol, RoundCtx};
+use super::{Accumulator, EncodeScratch, Frame, Protocol, RoundCtx, RoundState};
 
 /// Coordinate-sampling wrapper: transmit each coordinate w.p. `q` through
 /// the inner protocol (silenced coordinates are zeroed before encoding and
@@ -36,14 +36,6 @@ impl CoordSampledProtocol {
     pub fn q(&self) -> f64 {
         self.q
     }
-
-    /// The coordinate mask of `client` this round. Derived from the
-    /// auxiliary private stream (server and client both derive it; the
-    /// mask itself never crosses the wire).
-    fn mask(&self, ctx: &RoundCtx, client_id: u64) -> Vec<bool> {
-        let mut coin = ctx.private_aux(client_id ^ 0xc00d);
-        (0..self.inner.dim()).map(|_| coin.bernoulli(self.q)).collect()
-    }
 }
 
 impl Protocol for CoordSampledProtocol {
@@ -55,34 +47,50 @@ impl Protocol for CoordSampledProtocol {
         self.inner.dim()
     }
 
-    fn encode(&self, ctx: &RoundCtx, client_id: u64, x: &[f32]) -> Option<Frame> {
-        let mask = self.mask(ctx, client_id);
+    fn prepare(&self, ctx: &RoundCtx) -> RoundState {
+        RoundState::wrapping(*ctx, self.inner.prepare(ctx))
+    }
+
+    fn encode_with(
+        &self,
+        state: &RoundState,
+        scratch: &mut EncodeScratch,
+        client_id: u64,
+        x: &[f32],
+        frame: &mut Frame,
+    ) -> bool {
+        // The coordinate mask is derived from the auxiliary private stream
+        // (server and client both can; the mask never crosses the wire).
         // Zero the dropped coordinates; the inner quantizer then encodes a
         // sparser vector (varlen inner protocols get real bit savings, and
-        // the zeros shrink the min-max span on one side).
-        let sparse: Vec<f32> = x
-            .iter()
-            .zip(&mask)
-            .map(|(&v, &keep)| if keep { v } else { 0.0 })
-            .collect();
-        self.inner.encode(ctx, client_id, &sparse)
+        // the zeros shrink the min-max span on one side). The sparse copy
+        // lives in the reusable scratch, taken out while the inner encode
+        // borrows the rest of it.
+        let mut coin = state.ctx.private_aux(client_id ^ 0xc00d);
+        let mut sparse = std::mem::take(&mut scratch.sparse);
+        sparse.clear();
+        sparse.extend(x.iter().map(|&v| if coin.bernoulli(self.q) { v } else { 0.0 }));
+        let sent =
+            self.inner.encode_with(state.inner_state(), scratch, client_id, &sparse, frame);
+        scratch.sparse = sparse;
+        sent
     }
 
     fn new_accumulator(&self) -> Accumulator {
         self.inner.new_accumulator()
     }
 
-    fn accumulate(&self, ctx: &RoundCtx, frame: &Frame, acc: &mut Accumulator) -> Result<()> {
-        self.inner.accumulate(ctx, frame, acc)
+    fn accumulate_with(&self, state: &RoundState, frame: &Frame, acc: &mut Accumulator) -> Result<()> {
+        self.inner.accumulate_with(state.inner_state(), frame, acc)
     }
 
-    fn finish_scaled(&self, ctx: &RoundCtx, acc: Accumulator, divisor: f64) -> Vec<f32> {
+    fn finish_scaled_with(&self, state: &RoundState, acc: Accumulator, divisor: f64) -> Vec<f32> {
         // Inner finish divides by n; surviving coordinates then need the
         // 1/q inflation. NOTE this is only unbiased when the inner
         // protocol is coordinate-separable (all of ours are except the
         // rotated one, which mixes coordinates before quantization —
         // config::build rejects that combination).
-        let mut est = self.inner.finish_scaled(ctx, acc, divisor);
+        let mut est = self.inner.finish_scaled_with(state.inner_state(), acc, divisor);
         let inv_q = (1.0 / self.q) as f32;
         for v in est.iter_mut() {
             *v *= inv_q;

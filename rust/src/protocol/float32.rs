@@ -4,8 +4,10 @@
 
 use anyhow::{ensure, Result};
 
-use super::{Accumulator, Frame, Protocol, RoundCtx};
-use crate::coding::bitio::{BitReader, BitWriter};
+use super::{Accumulator, EncodeScratch, Frame, Protocol, RoundState};
+#[cfg(test)]
+use super::RoundCtx;
+use crate::coding::bitio::BitReader;
 
 /// Raw f32 transmission (no compression).
 #[derive(Clone, Debug)]
@@ -32,21 +34,28 @@ impl Protocol for Float32Protocol {
         self.dim
     }
 
-    fn encode(&self, _ctx: &RoundCtx, _client_id: u64, x: &[f32]) -> Option<Frame> {
+    fn encode_with(
+        &self,
+        _state: &RoundState,
+        _scratch: &mut EncodeScratch,
+        _client_id: u64,
+        x: &[f32],
+        frame: &mut Frame,
+    ) -> bool {
         assert_eq!(x.len(), self.dim, "dimension mismatch");
-        let mut w = BitWriter::with_capacity(self.dim * 32);
+        let mut w = frame.writer();
         for &v in x {
             w.put_f32(v);
         }
-        let (bytes, bits) = w.finish();
-        Some(Frame::new(bytes, bits))
+        frame.store(w);
+        true
     }
 
     fn new_accumulator(&self) -> Accumulator {
         Accumulator::new(self.dim)
     }
 
-    fn accumulate(&self, _ctx: &RoundCtx, frame: &Frame, acc: &mut Accumulator) -> Result<()> {
+    fn accumulate_with(&self, _state: &RoundState, frame: &Frame, acc: &mut Accumulator) -> Result<()> {
         ensure!(acc.sum.len() == self.dim, "accumulator dimension mismatch");
         ensure!(frame.bit_len >= self.frame_bits(), "frame too short");
         let mut r = BitReader::with_bit_len(&frame.bytes, frame.bit_len);
@@ -57,9 +66,8 @@ impl Protocol for Float32Protocol {
         Ok(())
     }
 
-    fn finish_scaled(&self, _ctx: &RoundCtx, acc: Accumulator, divisor: f64) -> Vec<f32> {
-        let inv = if divisor > 0.0 { (1.0 / divisor) as f32 } else { 0.0 };
-        acc.sum.iter().map(|&v| v * inv).collect()
+    fn finish_scaled_with(&self, _state: &RoundState, acc: Accumulator, divisor: f64) -> Vec<f32> {
+        acc.into_scaled(divisor)
     }
 
     fn mse_bound(&self, _n: usize, _avg_norm_sq: f64) -> Option<f64> {

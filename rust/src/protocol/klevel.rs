@@ -14,8 +14,12 @@ use std::sync::Arc;
 use anyhow::{ensure, Result};
 
 use super::quantizer::Span;
-use super::{Accumulator, Frame, Protocol, RoundCtx};
-use crate::coding::bitio::{BitReader, BitWriter};
+use super::{Accumulator, EncodeScratch, Frame, Protocol, RoundState};
+#[cfg(test)]
+use super::RoundCtx;
+use crate::coding::bitio::BitReader;
+#[cfg(test)]
+use crate::coding::bitio::BitWriter;
 use crate::coding::float::ScalarCodec;
 use crate::runtime::engine::{ComputeBackend, NativeBackend};
 
@@ -69,23 +73,23 @@ impl KLevelProtocol {
         self.dim as u64 * self.bits_per_coord() as u64 + 2 * self.header.bits() as u64
     }
 
-    /// Encode a pre-quantized vector (shared with the rotated protocol).
-    pub(crate) fn write_frame(
+    /// Encode a pre-quantized vector into a recycled frame (shared with
+    /// the rotated protocol; zero allocation once the buffer has grown).
+    pub(crate) fn write_frame_into(
         header: &ScalarCodec,
         bits_per_coord: u32,
         xmin: f32,
         s: f32,
         bins: &[u32],
-    ) -> Frame {
-        let mut w =
-            BitWriter::with_capacity(bins.len() * bits_per_coord as usize + 2 * header.bits() as usize);
+        frame: &mut Frame,
+    ) {
+        let mut w = frame.writer();
         header.put(&mut w, xmin);
         header.put(&mut w, s);
         for &b in bins {
             w.put_bits(b as u64, bits_per_coord);
         }
-        let (bytes, bit_len) = w.finish();
-        Frame::new(bytes, bit_len)
+        frame.store(w);
     }
 
     /// Decode a fixed-width frame into (xmin, s, bins-added-to-acc).
@@ -125,24 +129,32 @@ impl Protocol for KLevelProtocol {
         self.dim
     }
 
-    fn encode(&self, ctx: &RoundCtx, client_id: u64, x: &[f32]) -> Option<Frame> {
+    fn encode_with(
+        &self,
+        state: &RoundState,
+        scratch: &mut EncodeScratch,
+        client_id: u64,
+        x: &[f32],
+        frame: &mut Frame,
+    ) -> bool {
         assert_eq!(x.len(), self.dim, "dimension mismatch");
-        let mut private = ctx.private(client_id);
-        let mut u = vec![0.0f32; self.dim];
-        private.fill_uniform_f32(&mut u);
-        let q = self
+        let mut private = state.ctx.private(client_id);
+        scratch.u.resize(self.dim, 0.0);
+        private.fill_uniform_f32(&mut scratch.u);
+        let (xmin, s) = self
             .backend
-            .quantize(x, &u, self.span, self.k)
+            .quantize_into(x, &scratch.u, self.span, self.k, &mut scratch.bins)
             .expect("backend quantize failed");
         // Re-encode headers through the codec so both sides share the grid.
-        Some(Self::write_frame(&self.header, self.bits_per_coord(), q.xmin, q.s, &q.bins))
+        Self::write_frame_into(&self.header, self.bits_per_coord(), xmin, s, &scratch.bins, frame);
+        true
     }
 
     fn new_accumulator(&self) -> Accumulator {
         Accumulator::new(self.dim)
     }
 
-    fn accumulate(&self, _ctx: &RoundCtx, frame: &Frame, acc: &mut Accumulator) -> Result<()> {
+    fn accumulate_with(&self, _state: &RoundState, frame: &Frame, acc: &mut Accumulator) -> Result<()> {
         ensure!(acc.sum.len() == self.dim, "accumulator dimension mismatch");
         Self::read_frame_into(
             &self.header,
@@ -156,9 +168,8 @@ impl Protocol for KLevelProtocol {
         Ok(())
     }
 
-    fn finish_scaled(&self, _ctx: &RoundCtx, acc: Accumulator, divisor: f64) -> Vec<f32> {
-        let inv = if divisor > 0.0 { (1.0 / divisor) as f32 } else { 0.0 };
-        acc.sum.iter().map(|&v| v * inv).collect()
+    fn finish_scaled_with(&self, _state: &RoundState, acc: Accumulator, divisor: f64) -> Vec<f32> {
+        acc.into_scaled(divisor)
     }
 
     fn mse_bound(&self, n: usize, avg_norm_sq: f64) -> Option<f64> {

@@ -1,9 +1,5 @@
-//! The paper's communication protocols for distributed mean estimation.
-//!
-//! Every protocol implements [`Protocol`]: a client turns its vector into a
-//! bit-exact wire [`Frame`]; the server feeds frames into an
-//! [`Accumulator`] and finishes with the mean estimate. The bits counted in
-//! experiments are the bits of the frames actually produced.
+//! The paper's communication protocols for distributed mean estimation,
+//! organized around **round sessions**.
 //!
 //! | Module | Protocol | Paper |
 //! |--------|----------|-------|
@@ -16,9 +12,51 @@
 //! | [`qsgd`]     | QSGD-style Elias comparator       | ref [2] |
 //! | [`float32`]  | uncompressed f32 baseline         | —    |
 //!
-//! Randomness model (§1.2): the **public** stream (shared seed) drives the
-//! rotation; each client's **private** stream drives its stochastic
-//! rounding and sampling coin. Both derive from [`RoundCtx`].
+//! # Lifecycle: prepare → encode → accumulate → finish
+//!
+//! Every protocol shares per-round *public* state (the sampled rotation
+//! `R = HD`, grid layout) and per-client *private* scratch (rounding
+//! uniforms, padded buffers, bin indices). The session API materializes
+//! both exactly once:
+//!
+//! 1. **prepare** — [`Protocol::prepare`] derives the round's shared
+//!    state ([`RoundState`]) from public randomness, *once per round*.
+//!    For π_srk this is the only place the rotation is sampled.
+//! 2. **encode** — an [`Encoder`] (or [`Protocol::encode_with`] with a
+//!    caller-owned [`EncodeScratch`]) turns each client vector into a
+//!    bit-exact wire [`Frame`], reusing the scratch buffers and the
+//!    frame's byte buffer across clients: zero heap allocation per
+//!    encode on the native backend.
+//! 3. **accumulate** — a streaming [`Decoder`] folds frames into one
+//!    [`Accumulator`] without per-frame allocation. Weighted frames are
+//!    combined in the protocol's *internal* space (e.g. the rotated,
+//!    padded space), so the inverse rotation runs once per round, not
+//!    once per frame.
+//! 4. **finish** — [`Decoder::finish`] / [`Decoder::finish_weighted`]
+//!    divide by the effective count and undo any preprocessing (one
+//!    inverse rotation for π_srk).
+//!
+//! The pre-session one-shot methods ([`Protocol::encode`],
+//! [`Protocol::accumulate`], [`Protocol::finish`]) remain as provided
+//! conveniences; each call prepares a throwaway round state.
+//!
+//! # Randomness model (unchanged, §1.2)
+//!
+//! The **public** stream (shared seed) drives the rotation; each client's
+//! **private** stream drives its stochastic rounding and sampling coin.
+//! Both derive from [`RoundCtx`]; a frame's bits depend only on
+//! `(seed, round, client_id, x)` — never on which thread encoded it.
+//!
+//! # Determinism guarantee
+//!
+//! f32 addition is not associative, so the *order* of accumulation is
+//! part of a round's contract. [`run_round`] and [`run_round_par`] shard
+//! clients into contiguous blocks whose size depends only on the client
+//! count (never on the thread count), accumulate each block in client-id
+//! order, and merge the per-block partial sums in block order. Any
+//! thread count therefore produces **bit-identical** estimates — the
+//! leader relies on the same rule when it decodes uploads in client-id
+//! order regardless of arrival order.
 
 pub mod binary;
 pub mod config;
@@ -33,7 +71,9 @@ pub mod varlen;
 
 use anyhow::Result;
 
+use crate::coding::bitio::BitWriter;
 use crate::rng::{self, Pcg64};
+use crate::rotation::Rotation;
 
 /// A client→server wire frame: the exact bits the protocol transmits.
 #[derive(Clone, Debug)]
@@ -49,6 +89,26 @@ impl Frame {
     pub fn new(bytes: Vec<u8>, bit_len: u64) -> Self {
         debug_assert!(bit_len <= bytes.len() as u64 * 8);
         Frame { bytes, bit_len }
+    }
+
+    /// An empty frame — the reusable target for [`Encoder::encode_into`].
+    pub fn empty() -> Self {
+        Frame { bytes: Vec::new(), bit_len: 0 }
+    }
+
+    /// Recycle this frame's byte buffer into a fresh [`BitWriter`]
+    /// (cleared, capacity kept). Pair with [`Frame::store`] — this is the
+    /// allocation-free encode path.
+    pub fn writer(&mut self) -> BitWriter {
+        self.bit_len = 0;
+        BitWriter::over(std::mem::take(&mut self.bytes))
+    }
+
+    /// Store a finished writer's output back into this frame.
+    pub fn store(&mut self, w: BitWriter) {
+        let (bytes, bit_len) = w.finish();
+        self.bytes = bytes;
+        self.bit_len = bit_len;
     }
 }
 
@@ -82,6 +142,63 @@ impl RoundCtx {
     }
 }
 
+/// The shared state of one protocol round, computed once by
+/// [`Protocol::prepare`] and reused by every encode/accumulate/finish of
+/// that round: the sampled rotation for π_srk, and the inner protocol's
+/// state for wrapper protocols. Derived entirely from public randomness,
+/// so every party prepares an identical value.
+#[derive(Clone, Debug)]
+pub struct RoundState {
+    pub ctx: RoundCtx,
+    rotation: Option<Rotation>,
+    inner: Option<Box<RoundState>>,
+}
+
+impl RoundState {
+    /// State for a protocol with no shared per-round randomness.
+    pub fn bare(ctx: RoundCtx) -> Self {
+        RoundState { ctx, rotation: None, inner: None }
+    }
+
+    /// State holding the round's shared rotation (π_srk).
+    pub fn with_rotation(ctx: RoundCtx, rotation: Rotation) -> Self {
+        RoundState { ctx, rotation: Some(rotation), inner: None }
+    }
+
+    /// Wrapper-protocol state holding the inner protocol's state.
+    pub fn wrapping(ctx: RoundCtx, inner: RoundState) -> Self {
+        RoundState { ctx, rotation: None, inner: Some(Box::new(inner)) }
+    }
+
+    /// The round's rotation. Panics if this state was prepared by a
+    /// protocol without one.
+    pub fn rotation(&self) -> &Rotation {
+        self.rotation.as_ref().expect("RoundState carries no rotation")
+    }
+
+    /// The wrapped protocol's state. Panics for non-wrapper states.
+    pub fn inner_state(&self) -> &RoundState {
+        self.inner.as_deref().expect("RoundState wraps no inner state")
+    }
+}
+
+/// Caller-owned reusable encode scratch: every buffer a client-side
+/// encode needs, allocated once and reused across clients (and rounds).
+/// One instance per encoding thread.
+#[derive(Clone, Debug, Default)]
+pub struct EncodeScratch {
+    /// Rounding uniforms from the client's private stream.
+    pub u: Vec<f32>,
+    /// Padded/rotated workspace (π_srk).
+    pub buf: Vec<f32>,
+    /// Quantizer bin indices.
+    pub bins: Vec<u32>,
+    /// Bin histogram (π_svk).
+    pub hist: Vec<u64>,
+    /// Sparsified copy of the input (coordinate-sampling wrapper).
+    pub sparse: Vec<f32>,
+}
+
 /// Server-side partial sum of decoded client vectors.
 #[derive(Clone, Debug)]
 pub struct Accumulator {
@@ -96,12 +213,30 @@ impl Accumulator {
     pub fn new(dim: usize) -> Self {
         Accumulator { sum: vec![0.0; dim], frames: 0 }
     }
+
+    /// Zero the accumulator for reuse (the streaming decoder's weighted
+    /// path decodes each frame into a recycled scratch accumulator).
+    pub fn reset(&mut self) {
+        self.sum.fill(0.0);
+        self.frames = 0;
+    }
+
+    /// Consume into `sum / divisor`, scaling in place. `divisor <= 0`
+    /// yields zeros — the empty-round convention every protocol shares.
+    pub fn into_scaled(self, divisor: f64) -> Vec<f32> {
+        let inv = if divisor > 0.0 { (1.0 / divisor) as f32 } else { 0.0 };
+        let mut sum = self.sum;
+        for v in sum.iter_mut() {
+            *v *= inv;
+        }
+        sum
+    }
 }
 
 /// A distributed mean-estimation protocol (client encode + server decode).
 ///
-/// Implementations are `Send + Sync`: the coordinator encodes on many
-/// worker threads concurrently.
+/// Implementations are `Send + Sync`: the round engine encodes on many
+/// worker threads concurrently against one shared [`RoundState`].
 pub trait Protocol: Send + Sync {
     /// Short human-readable name, e.g. `"rotated(k=16)"`.
     fn name(&self) -> String;
@@ -109,51 +244,347 @@ pub trait Protocol: Send + Sync {
     /// The logical data dimension d.
     fn dim(&self) -> usize;
 
-    /// Client-side encode. Returns `None` if this client stays silent this
-    /// round (client sampling, §5).
-    fn encode(&self, ctx: &RoundCtx, client_id: u64, x: &[f32]) -> Option<Frame>;
+    /// Prepare the round's shared state from public randomness — called
+    /// once per round, then reused for every encode/accumulate/finish.
+    /// The default is stateless; π_srk samples the rotation here (and
+    /// nowhere else), wrappers prepare their inner protocol.
+    fn prepare(&self, ctx: &RoundCtx) -> RoundState {
+        RoundState::bare(*ctx)
+    }
+
+    /// Client-side encode into a caller-owned frame, reusing `scratch`
+    /// and the frame's byte buffer. Returns `false` if this client stays
+    /// silent this round (client sampling, §5) — the frame's contents are
+    /// unspecified then.
+    fn encode_with(
+        &self,
+        state: &RoundState,
+        scratch: &mut EncodeScratch,
+        client_id: u64,
+        x: &[f32],
+        frame: &mut Frame,
+    ) -> bool;
 
     /// A fresh accumulator sized for this protocol's internal dimension.
     fn new_accumulator(&self) -> Accumulator;
 
     /// Server-side decode of one frame into the accumulator.
-    fn accumulate(&self, ctx: &RoundCtx, frame: &Frame, acc: &mut Accumulator) -> Result<()>;
+    fn accumulate_with(
+        &self,
+        state: &RoundState,
+        frame: &Frame,
+        acc: &mut Accumulator,
+    ) -> Result<()>;
 
     /// Finish: divide by the *effective* count and undo any preprocessing.
     /// `n_total` is the number of clients that held data this round
     /// (including ones that stayed silent under sampling).
-    fn finish(&self, ctx: &RoundCtx, acc: Accumulator, n_total: usize) -> Vec<f32> {
-        self.finish_scaled(ctx, acc, n_total as f64)
+    fn finish_with(&self, state: &RoundState, acc: Accumulator, n_total: usize) -> Vec<f32> {
+        self.finish_scaled_with(state, acc, n_total as f64)
     }
 
-    /// Like [`Self::finish`] but with an explicit divisor (the sampling
-    /// wrapper divides by `n·p` per Lemma 8 instead of n).
-    fn finish_scaled(&self, ctx: &RoundCtx, acc: Accumulator, divisor: f64) -> Vec<f32>;
+    /// Like [`Self::finish_with`] but with an explicit divisor (the
+    /// sampling wrapper divides by `n·p` per Lemma 8 instead of n).
+    fn finish_scaled_with(&self, state: &RoundState, acc: Accumulator, divisor: f64) -> Vec<f32>;
 
     /// Analytic worst-case MSE bound for this protocol on vectors with
     /// average squared norm `avg_norm_sq`, with `n` clients — the paper's
     /// guarantee that experiments validate against. `None` if no clean
     /// closed form exists.
     fn mse_bound(&self, n: usize, avg_norm_sq: f64) -> Option<f64>;
+
+    // ---- one-shot conveniences (prepare a throwaway round state) ----
+
+    /// One-shot encode. Prefer an [`Encoder`] over a prepared state when
+    /// encoding more than one client: this re-derives the round state
+    /// (for π_srk, the rotation) on every call.
+    fn encode(&self, ctx: &RoundCtx, client_id: u64, x: &[f32]) -> Option<Frame> {
+        let state = self.prepare(ctx);
+        let mut scratch = EncodeScratch::default();
+        let mut frame = Frame::empty();
+        if self.encode_with(&state, &mut scratch, client_id, x, &mut frame) {
+            Some(frame)
+        } else {
+            None
+        }
+    }
+
+    /// One-shot accumulate (prefer [`Decoder`] over a prepared state).
+    fn accumulate(&self, ctx: &RoundCtx, frame: &Frame, acc: &mut Accumulator) -> Result<()> {
+        self.accumulate_with(&self.prepare(ctx), frame, acc)
+    }
+
+    /// One-shot finish (prefer [`Decoder::finish`]).
+    fn finish(&self, ctx: &RoundCtx, acc: Accumulator, n_total: usize) -> Vec<f32> {
+        self.finish_with(&self.prepare(ctx), acc, n_total)
+    }
+
+    /// One-shot scaled finish (prefer [`Decoder::finish_weighted`]).
+    fn finish_scaled(&self, ctx: &RoundCtx, acc: Accumulator, divisor: f64) -> Vec<f32> {
+        self.finish_scaled_with(&self.prepare(ctx), acc, divisor)
+    }
 }
+
+/// Client-side handle for one round session: a protocol, its prepared
+/// state, and owned reusable scratch. Encoding `n` clients through one
+/// `Encoder` recycles every buffer (uniforms, workspace, bins, the
+/// frame's bytes) — the fixed-width protocols perform zero heap
+/// allocation per client on the native backend; π_svk only allocates its
+/// per-client coder tables.
+pub struct Encoder<'a> {
+    proto: &'a dyn Protocol,
+    state: &'a RoundState,
+    scratch: EncodeScratch,
+}
+
+impl<'a> Encoder<'a> {
+    pub fn new(proto: &'a dyn Protocol, state: &'a RoundState) -> Self {
+        Encoder { proto, state, scratch: EncodeScratch::default() }
+    }
+
+    /// Encode into a caller-owned frame, reusing its byte buffer.
+    /// Returns `false` if the client is silent this round.
+    pub fn encode_into(&mut self, client_id: u64, x: &[f32], frame: &mut Frame) -> bool {
+        self.proto.encode_with(self.state, &mut self.scratch, client_id, x, frame)
+    }
+
+    /// Encode into a fresh frame (for callers that must keep the frame,
+    /// e.g. to ship it over a transport).
+    pub fn encode(&mut self, client_id: u64, x: &[f32]) -> Option<Frame> {
+        let mut frame = Frame::empty();
+        if self.encode_into(client_id, x, &mut frame) {
+            Some(frame)
+        } else {
+            None
+        }
+    }
+}
+
+/// Server-side streaming decoder for one round session: folds frames into
+/// a single accumulator with no per-frame allocation. Weighted frames are
+/// combined in the protocol's internal space, so protocol-level
+/// postprocessing (π_srk's inverse rotation) runs once per round in
+/// `finish*`, not once per frame.
+pub struct Decoder<'a> {
+    proto: &'a dyn Protocol,
+    state: &'a RoundState,
+    acc: Accumulator,
+    /// Recycled scratch accumulator for the weighted path (lazy).
+    scratch: Option<Accumulator>,
+    /// f64 fold of the weight-scaled frames (lazy): disparate weights
+    /// (e.g. very unequal cluster sizes) would lose small contributions
+    /// in an f32 running sum.
+    wsum: Option<Vec<f64>>,
+    total_weight: f64,
+    frames: usize,
+}
+
+impl<'a> Decoder<'a> {
+    pub fn new(proto: &'a dyn Protocol, state: &'a RoundState) -> Self {
+        Decoder {
+            proto,
+            state,
+            acc: proto.new_accumulator(),
+            scratch: None,
+            wsum: None,
+            total_weight: 0.0,
+            frames: 0,
+        }
+    }
+
+    /// Accumulate one frame with weight 1.
+    pub fn push(&mut self, frame: &Frame) -> Result<()> {
+        self.proto.accumulate_with(self.state, frame, &mut self.acc)?;
+        self.total_weight += 1.0;
+        self.frames += 1;
+        Ok(())
+    }
+
+    /// Accumulate one frame scaled by `weight` (e.g. a cluster size in
+    /// distributed Lloyd's). Decodes into a recycled scratch accumulator
+    /// and folds it, weight-scaled, into an f64 running sum — no fresh
+    /// accumulator, no per-frame inverse rotation, and no precision loss
+    /// under disparate weights.
+    pub fn push_weighted(&mut self, frame: &Frame, weight: f32) -> Result<()> {
+        if weight == 1.0 {
+            return self.push(frame);
+        }
+        let scratch = {
+            let proto = self.proto;
+            self.scratch.get_or_insert_with(|| proto.new_accumulator())
+        };
+        scratch.reset();
+        self.proto.accumulate_with(self.state, frame, scratch)?;
+        let wsum = {
+            let dim = scratch.sum.len();
+            self.wsum.get_or_insert_with(|| vec![0.0f64; dim])
+        };
+        for (a, &v) in wsum.iter_mut().zip(&scratch.sum) {
+            *a += weight as f64 * v as f64;
+        }
+        self.acc.frames += 1;
+        self.total_weight += weight as f64;
+        self.frames += 1;
+        Ok(())
+    }
+
+    /// Frames accumulated so far.
+    pub fn frames(&self) -> usize {
+        self.frames
+    }
+
+    /// Total weight accumulated so far.
+    pub fn total_weight(&self) -> f64 {
+        self.total_weight
+    }
+
+    /// Finish as a plain mean over `n_total` data-holding clients
+    /// (silent sampled clients included — Lemma 8's estimator).
+    pub fn finish(self, n_total: usize) -> Vec<f32> {
+        let (proto, state) = (self.proto, self.state);
+        let acc = self.into_acc();
+        proto.finish_with(state, acc, n_total)
+    }
+
+    /// Finish as a weighted mean: divide by the accumulated total weight.
+    pub fn finish_weighted(mut self) -> Vec<f32> {
+        let (proto, state, w) = (self.proto, self.state, self.total_weight);
+        if let Some(wsum) = self.wsum.take() {
+            // Divide the f64 fold in f64 *before* narrowing to f32 (a huge
+            // weighted sum must not overflow on the cast), then hand the
+            // already-averaged slot to the protocol with divisor 1 —
+            // wrapper scalings (sampling's 1/p) still apply on top.
+            let inv = if w > 0.0 { 1.0 / w } else { 0.0 };
+            for (a, ws) in self.acc.sum.iter_mut().zip(wsum) {
+                *a = ((*a as f64 + ws) * inv) as f32;
+            }
+            proto.finish_scaled_with(state, self.acc, 1.0)
+        } else {
+            proto.finish_scaled_with(state, self.acc, w)
+        }
+    }
+
+    /// Fold the f64 weighted sum (if any) back into the f32 accumulator.
+    fn into_acc(mut self) -> Accumulator {
+        if let Some(wsum) = self.wsum.take() {
+            for (a, w) in self.acc.sum.iter_mut().zip(wsum) {
+                *a += w as f32;
+            }
+        }
+        self.acc
+    }
+}
+
+/// Shard count of the round engine. The f32 merge tree depends only on
+/// the client count — never on the thread count — so every `threads`
+/// value (including 1, i.e. [`run_round`]) produces bit-identical output.
+const ROUND_SHARDS: usize = 32;
 
 /// Convenience driver used by tests, benches and examples: run one full
 /// round of `proto` over the client vectors, returning the mean estimate
 /// and the total uplink cost in bits.
+///
+/// Equivalent to [`run_round_par`] with one thread (same shard structure,
+/// bit-identical result).
 pub fn run_round(
     proto: &dyn Protocol,
     ctx: &RoundCtx,
     xs: &[Vec<f32>],
 ) -> Result<(Vec<f32>, u64)> {
-    let mut acc = proto.new_accumulator();
-    let mut bits = 0u64;
-    for (i, x) in xs.iter().enumerate() {
-        if let Some(frame) = proto.encode(ctx, i as u64, x) {
-            bits += frame.bit_len;
-            proto.accumulate(ctx, &frame, &mut acc)?;
-        }
+    run_round_par(proto, ctx, xs, 1)
+}
+
+/// Parallel round engine: prepare once, shard clients across `threads`
+/// scoped worker threads (per-thread [`EncodeScratch`] and recycled
+/// frame), accumulate each shard into its own partial accumulator, and
+/// merge the partials deterministically in client-id order.
+///
+/// Bit-identical to [`run_round`] for every thread count — see the
+/// module-level determinism guarantee.
+pub fn run_round_par(
+    proto: &dyn Protocol,
+    ctx: &RoundCtx,
+    xs: &[Vec<f32>],
+    threads: usize,
+) -> Result<(Vec<f32>, u64)> {
+    let state = proto.prepare(ctx);
+    let n = xs.len();
+    if n == 0 {
+        return Ok((proto.finish_with(&state, proto.new_accumulator(), 0), 0));
     }
-    Ok((proto.finish(ctx, acc, xs.len()), bits))
+    // Contiguous client shards; the geometry is a function of n alone.
+    let shard_len = n.div_ceil(ROUND_SHARDS).max(1);
+    let n_shards = n.div_ceil(shard_len);
+    let threads = threads.clamp(1, n_shards);
+
+    // Encode + accumulate one shard into its own partial accumulator.
+    let run_shard = |sidx: usize,
+                     scratch: &mut EncodeScratch,
+                     frame: &mut Frame|
+     -> Result<(usize, Accumulator, u64)> {
+        let base = sidx * shard_len;
+        let chunk = &xs[base..(base + shard_len).min(n)];
+        let mut acc = proto.new_accumulator();
+        let mut bits = 0u64;
+        for (j, x) in chunk.iter().enumerate() {
+            if proto.encode_with(&state, scratch, (base + j) as u64, x, frame) {
+                bits += frame.bit_len;
+                proto.accumulate_with(&state, frame, &mut acc)?;
+            }
+        }
+        Ok((sidx, acc, bits))
+    };
+
+    let mut parts: Vec<(usize, Accumulator, u64)> = if threads == 1 {
+        let mut scratch = EncodeScratch::default();
+        let mut frame = Frame::empty();
+        (0..n_shards)
+            .map(|s| run_shard(s, &mut scratch, &mut frame))
+            .collect::<Result<_>>()?
+    } else {
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        let run_shard = &run_shard;
+        let next = &next;
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..threads)
+                .map(|_| {
+                    scope.spawn(move || {
+                        let mut scratch = EncodeScratch::default();
+                        let mut frame = Frame::empty();
+                        let mut out = Vec::new();
+                        loop {
+                            let s = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            if s >= n_shards {
+                                break;
+                            }
+                            out.push(run_shard(s, &mut scratch, &mut frame));
+                        }
+                        out
+                    })
+                })
+                .collect();
+            let mut all = Vec::with_capacity(n_shards);
+            for h in handles {
+                for r in h.join().expect("round worker thread panicked") {
+                    all.push(r?);
+                }
+            }
+            Ok::<_, anyhow::Error>(all)
+        })?
+    };
+
+    // Deterministic merge: partial sums folded in shard (client-id) order.
+    parts.sort_by_key(|(s, _, _)| *s);
+    let mut parts = parts.into_iter();
+    let (_, mut acc, mut bits) = parts.next().expect("at least one shard");
+    for (_, part, b) in parts {
+        for (a, v) in acc.sum.iter_mut().zip(part.sum) {
+            *a += v;
+        }
+        acc.frames += part.frames;
+        bits += b;
+    }
+    Ok((proto.finish_with(&state, acc, n), bits))
 }
 
 #[cfg(test)]
@@ -192,5 +623,115 @@ pub(crate) mod test_support {
                 x
             })
             .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_support::gaussian_clients;
+    use super::*;
+    use crate::protocol::config::ProtocolConfig;
+
+    #[test]
+    fn session_encoder_matches_oneshot_encode() {
+        let d = 60;
+        let xs = gaussian_clients(6, d, 3);
+        for spec in ["float32", "binary", "klevel:k=16", "rotated:k=16", "varlen:k=8", "qsgd:k=8"] {
+            let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+            let ctx = RoundCtx::new(5, 11);
+            let state = proto.prepare(&ctx);
+            let mut enc = Encoder::new(proto.as_ref(), &state);
+            let mut frame = Frame::empty();
+            for (i, x) in xs.iter().enumerate() {
+                let oneshot = proto.encode(&ctx, i as u64, x).unwrap();
+                assert!(enc.encode_into(i as u64, x, &mut frame), "spec={spec}");
+                assert_eq!(frame.bytes, oneshot.bytes, "spec={spec} client {i}");
+                assert_eq!(frame.bit_len, oneshot.bit_len, "spec={spec} client {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn decoder_weighted_matches_manual_average() {
+        let d = 16;
+        let proto = ProtocolConfig::parse("float32", d).unwrap().build().unwrap();
+        let ctx = RoundCtx::new(0, 3);
+        let xs = gaussian_clients(3, d, 7);
+        let ws = [1.0f32, 3.0, 0.5];
+        let state = proto.prepare(&ctx);
+        let mut enc = Encoder::new(proto.as_ref(), &state);
+        let mut dec = Decoder::new(proto.as_ref(), &state);
+        for ((i, x), &w) in xs.iter().enumerate().zip(&ws) {
+            let f = enc.encode(i as u64, x).unwrap();
+            dec.push_weighted(&f, w).unwrap();
+        }
+        assert_eq!(dec.frames(), 3);
+        assert_eq!(dec.total_weight(), 4.5);
+        let est = dec.finish_weighted();
+        let total: f32 = ws.iter().sum();
+        for j in 0..d {
+            let want = xs.iter().zip(&ws).map(|(x, &w)| w * x[j]).sum::<f32>() / total;
+            assert!((est[j] - want).abs() < 1e-4, "coord {j}: {} vs {want}", est[j]);
+        }
+    }
+
+    #[test]
+    fn weighted_decoder_single_inverse_rotation_is_exact() {
+        // The weighted path folds in the rotated space and inverts once;
+        // by linearity of R⁻¹ this must match per-frame inversion.
+        let d = 32;
+        let proto = ProtocolConfig::parse("rotated:k=4096", d).unwrap().build().unwrap();
+        let ctx = RoundCtx::new(2, 9);
+        let xs = gaussian_clients(4, d, 13);
+        let ws = [2.0f32, 1.0, 0.5, 4.0];
+        let state = proto.prepare(&ctx);
+        let mut enc = Encoder::new(proto.as_ref(), &state);
+        let mut dec = Decoder::new(proto.as_ref(), &state);
+        let mut manual = vec![0.0f64; d];
+        for ((i, x), &w) in xs.iter().enumerate().zip(&ws) {
+            let f = enc.encode(i as u64, x).unwrap();
+            dec.push_weighted(&f, w).unwrap();
+            let mut acc = proto.new_accumulator();
+            proto.accumulate_with(&state, &f, &mut acc).unwrap();
+            let y = proto.finish_scaled_with(&state, acc, 1.0);
+            for (m, &v) in manual.iter_mut().zip(&y) {
+                *m += w as f64 * v as f64;
+            }
+        }
+        let total: f64 = ws.iter().map(|&w| w as f64).sum();
+        let est = dec.finish_weighted();
+        for j in 0..d {
+            let want = manual[j] / total;
+            assert!(
+                (est[j] as f64 - want).abs() < 1e-4,
+                "coord {j}: {} vs {want}",
+                est[j]
+            );
+        }
+    }
+
+    #[test]
+    fn empty_round_yields_zeros() {
+        let proto = ProtocolConfig::parse("klevel:k=4", 8).unwrap().build().unwrap();
+        let ctx = RoundCtx::new(0, 1);
+        let (est, bits) = run_round(proto.as_ref(), &ctx, &[]).unwrap();
+        assert_eq!(bits, 0);
+        assert_eq!(est, vec![0.0; 8]);
+    }
+
+    #[test]
+    fn frame_buffer_recycles_capacity() {
+        let mut frame = Frame::empty();
+        let mut w = frame.writer();
+        w.put_bits(0xabcd, 16);
+        frame.store(w);
+        assert_eq!(frame.bit_len, 16);
+        let ptr = frame.bytes.as_ptr();
+        let mut w = frame.writer();
+        w.put_bits(0x12, 8);
+        frame.store(w);
+        assert_eq!(frame.bit_len, 8);
+        assert_eq!(frame.bytes, vec![0x12]);
+        assert_eq!(frame.bytes.as_ptr(), ptr, "buffer was reallocated");
     }
 }

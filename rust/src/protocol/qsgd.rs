@@ -13,8 +13,10 @@
 
 use anyhow::{ensure, Result};
 
-use super::{Accumulator, Frame, Protocol, RoundCtx};
-use crate::coding::bitio::{BitReader, BitWriter};
+use super::{Accumulator, EncodeScratch, Frame, Protocol, RoundState};
+#[cfg(test)]
+use super::RoundCtx;
+use crate::coding::bitio::BitReader;
 use crate::coding::elias;
 use crate::coding::float::ScalarCodec;
 use crate::linalg;
@@ -48,11 +50,18 @@ impl Protocol for QsgdProtocol {
         self.dim
     }
 
-    fn encode(&self, ctx: &RoundCtx, client_id: u64, x: &[f32]) -> Option<Frame> {
+    fn encode_with(
+        &self,
+        state: &RoundState,
+        _scratch: &mut EncodeScratch,
+        client_id: u64,
+        x: &[f32],
+        frame: &mut Frame,
+    ) -> bool {
         assert_eq!(x.len(), self.dim, "dimension mismatch");
-        let mut private = ctx.private(client_id);
+        let mut private = state.ctx.private(client_id);
         let norm = linalg::norm(x) as f32;
-        let mut w = BitWriter::new();
+        let mut w = frame.writer();
         let norm_t = self.header.put(&mut w, norm);
         let km1 = (self.k - 1) as f32;
         let inv = if norm_t > 0.0 { km1 / norm_t } else { 0.0 };
@@ -67,15 +76,15 @@ impl Protocol for QsgdProtocol {
                 w.put_bit(xi < 0.0);
             }
         }
-        let (bytes, bits) = w.finish();
-        Some(Frame::new(bytes, bits))
+        frame.store(w);
+        true
     }
 
     fn new_accumulator(&self) -> Accumulator {
         Accumulator::new(self.dim)
     }
 
-    fn accumulate(&self, _ctx: &RoundCtx, frame: &Frame, acc: &mut Accumulator) -> Result<()> {
+    fn accumulate_with(&self, _state: &RoundState, frame: &Frame, acc: &mut Accumulator) -> Result<()> {
         ensure!(acc.sum.len() == self.dim, "accumulator dimension mismatch");
         let mut r = BitReader::with_bit_len(&frame.bytes, frame.bit_len);
         let norm = self.header.get(&mut r)?;
@@ -92,9 +101,8 @@ impl Protocol for QsgdProtocol {
         Ok(())
     }
 
-    fn finish_scaled(&self, _ctx: &RoundCtx, acc: Accumulator, divisor: f64) -> Vec<f32> {
-        let inv = if divisor > 0.0 { (1.0 / divisor) as f32 } else { 0.0 };
-        acc.sum.iter().map(|&v| v * inv).collect()
+    fn finish_scaled_with(&self, _state: &RoundState, acc: Accumulator, divisor: f64) -> Vec<f32> {
+        acc.into_scaled(divisor)
     }
 
     fn mse_bound(&self, n: usize, avg_norm_sq: f64) -> Option<f64> {

@@ -15,7 +15,7 @@ use std::sync::Arc;
 use anyhow::{ensure, Result};
 
 use super::klevel::KLevelProtocol;
-use super::{Accumulator, Frame, Protocol, RoundCtx};
+use super::{Accumulator, EncodeScratch, Frame, Protocol, RoundCtx, RoundState};
 use crate::coding::float::ScalarCodec;
 use crate::rotation::{hadamard, Rotation};
 use crate::runtime::engine::{ComputeBackend, NativeBackend};
@@ -69,6 +69,8 @@ impl RotatedProtocol {
     }
 
     /// The round's shared rotation (derived from public randomness).
+    /// [`Protocol::prepare`] calls this exactly once per round; everything
+    /// downstream reuses the sampled signs through the [`RoundState`].
     pub fn rotation(&self, ctx: &RoundCtx) -> Rotation {
         Rotation::sample(self.dim, &mut ctx.public())
     }
@@ -83,35 +85,61 @@ impl Protocol for RotatedProtocol {
         self.dim
     }
 
-    fn encode(&self, ctx: &RoundCtx, client_id: u64, x: &[f32]) -> Option<Frame> {
+    fn prepare(&self, ctx: &RoundCtx) -> RoundState {
+        // The ONLY place the round's rotation is sampled: one public-stream
+        // draw per round per protocol instance, shared by every client's
+        // encode and the server's inverse rotation.
+        RoundState::with_rotation(*ctx, self.rotation(ctx))
+    }
+
+    fn encode_with(
+        &self,
+        state: &RoundState,
+        scratch: &mut EncodeScratch,
+        client_id: u64,
+        x: &[f32],
+        frame: &mut Frame,
+    ) -> bool {
         assert_eq!(x.len(), self.dim, "dimension mismatch");
-        let rot = self.rotation(ctx);
-        let mut private = ctx.private(client_id);
-        let mut u = vec![0.0f32; self.padded];
-        private.fill_uniform_f32(&mut u);
-        // Pad and run the fused rotate+quantize on the backend (the PJRT
-        // backend executes the AOT-compiled Pallas kernel here).
-        let mut xp = vec![0.0f32; self.padded];
-        xp[..self.dim].copy_from_slice(x);
-        let q = self
+        let rot = state.rotation();
+        let mut private = state.ctx.private(client_id);
+        scratch.u.resize(self.padded, 0.0);
+        private.fill_uniform_f32(&mut scratch.u);
+        // Pad into the reusable workspace and run the fused in-place
+        // rotate+quantize on the backend (the PJRT backend executes the
+        // AOT-compiled Pallas kernel here).
+        scratch.buf.resize(self.padded, 0.0);
+        scratch.buf[..self.dim].copy_from_slice(x);
+        for v in &mut scratch.buf[self.dim..] {
+            *v = 0.0;
+        }
+        let (xmin, s) = self
             .backend
-            .encode_rotated(&xp, rot.signs(), &u, self.k)
+            .encode_rotated_in_place(
+                &mut scratch.buf,
+                rot.signs(),
+                &scratch.u,
+                self.k,
+                &mut scratch.bins,
+            )
             .expect("backend encode_rotated failed");
-        Some(KLevelProtocol::write_frame(
+        KLevelProtocol::write_frame_into(
             &self.header,
             self.bits_per_coord(),
-            q.xmin,
-            q.s,
-            &q.bins,
-        ))
+            xmin,
+            s,
+            &scratch.bins,
+            frame,
+        );
+        true
     }
 
     fn new_accumulator(&self) -> Accumulator {
-        // Accumulate in the rotated (padded) space; finish() rotates back.
+        // Accumulate in the rotated (padded) space; finish rotates back.
         Accumulator::new(self.padded)
     }
 
-    fn accumulate(&self, _ctx: &RoundCtx, frame: &Frame, acc: &mut Accumulator) -> Result<()> {
+    fn accumulate_with(&self, _state: &RoundState, frame: &Frame, acc: &mut Accumulator) -> Result<()> {
         ensure!(acc.sum.len() == self.padded, "accumulator dimension mismatch");
         KLevelProtocol::read_frame_into(
             &self.header,
@@ -125,16 +153,17 @@ impl Protocol for RotatedProtocol {
         Ok(())
     }
 
-    fn finish_scaled(&self, ctx: &RoundCtx, acc: Accumulator, divisor: f64) -> Vec<f32> {
-        let rot = self.rotation(ctx);
-        let inv = if divisor > 0.0 { (1.0 / divisor) as f32 } else { 0.0 };
-        let zbar: Vec<f32> = acc.sum.iter().map(|&v| v * inv).collect();
-        // Inverse rotation on the backend as well (PJRT: rotate_inv_d*).
-        let back = self
+    fn finish_scaled_with(&self, state: &RoundState, acc: Accumulator, divisor: f64) -> Vec<f32> {
+        // Scale in place on the accumulator sum (no intermediate vector),
+        // then one inverse rotation on the backend (PJRT: rotate_inv_d*),
+        // reusing the round's prepared rotation.
+        let sum = acc.into_scaled(divisor);
+        let mut back = self
             .backend
-            .rotate_inv(&zbar, rot.signs())
+            .rotate_inv(&sum, state.rotation().signs())
             .expect("backend rotate_inv failed");
-        back[..self.dim].to_vec()
+        back.truncate(self.dim);
+        back
     }
 
     fn mse_bound(&self, n: usize, avg_norm_sq: f64) -> Option<f64> {

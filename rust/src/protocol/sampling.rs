@@ -13,7 +13,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use super::{Accumulator, Frame, Protocol, RoundCtx};
+use super::{Accumulator, EncodeScratch, Frame, Protocol, RoundCtx, RoundState};
 
 /// Client-sampling wrapper around any inner protocol.
 pub struct SampledProtocol {
@@ -41,28 +41,41 @@ impl Protocol for SampledProtocol {
         self.inner.dim()
     }
 
-    fn encode(&self, ctx: &RoundCtx, client_id: u64, x: &[f32]) -> Option<Frame> {
+    fn prepare(&self, ctx: &RoundCtx) -> RoundState {
+        // The coin parameter `p` is static configuration; the only
+        // per-round state is the inner protocol's.
+        RoundState::wrapping(*ctx, self.inner.prepare(ctx))
+    }
+
+    fn encode_with(
+        &self,
+        state: &RoundState,
+        scratch: &mut EncodeScratch,
+        client_id: u64,
+        x: &[f32],
+        frame: &mut Frame,
+    ) -> bool {
         // The participation coin comes from the auxiliary private stream so
         // it never aliases the inner protocol's rounding uniforms.
-        let mut coin = ctx.private_aux(client_id);
+        let mut coin = state.ctx.private_aux(client_id);
         if !coin.bernoulli(self.p) {
-            return None;
+            return false;
         }
-        self.inner.encode(ctx, client_id, x)
+        self.inner.encode_with(state.inner_state(), scratch, client_id, x, frame)
     }
 
     fn new_accumulator(&self) -> Accumulator {
         self.inner.new_accumulator()
     }
 
-    fn accumulate(&self, ctx: &RoundCtx, frame: &Frame, acc: &mut Accumulator) -> Result<()> {
-        self.inner.accumulate(ctx, frame, acc)
+    fn accumulate_with(&self, state: &RoundState, frame: &Frame, acc: &mut Accumulator) -> Result<()> {
+        self.inner.accumulate_with(state.inner_state(), frame, acc)
     }
 
-    fn finish_scaled(&self, ctx: &RoundCtx, acc: Accumulator, divisor: f64) -> Vec<f32> {
+    fn finish_scaled_with(&self, state: &RoundState, acc: Accumulator, divisor: f64) -> Vec<f32> {
         // Lemma 8's estimator: divide by n·p, NOT by |S| — this is what
         // keeps the estimate unbiased.
-        self.inner.finish_scaled(ctx, acc, divisor * self.p)
+        self.inner.finish_scaled_with(state.inner_state(), acc, divisor * self.p)
     }
 
     fn mse_bound(&self, n: usize, avg_norm_sq: f64) -> Option<f64> {

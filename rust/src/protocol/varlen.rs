@@ -14,8 +14,10 @@ use std::sync::Arc;
 use anyhow::{ensure, Result};
 
 use super::quantizer::Span;
-use super::{Accumulator, Frame, Protocol, RoundCtx};
-use crate::coding::bitio::{BitReader, BitWriter};
+use super::{Accumulator, EncodeScratch, Frame, Protocol, RoundState};
+#[cfg(test)]
+use super::RoundCtx;
+use crate::coding::bitio::BitReader;
 use crate::coding::float::ScalarCodec;
 use crate::coding::{arithmetic, histogram, huffman};
 use crate::runtime::engine::{ComputeBackend, NativeBackend};
@@ -103,45 +105,53 @@ impl Protocol for VarlenProtocol {
         self.dim
     }
 
-    fn encode(&self, ctx: &RoundCtx, client_id: u64, x: &[f32]) -> Option<Frame> {
+    fn encode_with(
+        &self,
+        state: &RoundState,
+        scratch: &mut EncodeScratch,
+        client_id: u64,
+        x: &[f32],
+        frame: &mut Frame,
+    ) -> bool {
         assert_eq!(x.len(), self.dim, "dimension mismatch");
-        let mut private = ctx.private(client_id);
-        let mut u = vec![0.0f32; self.dim];
-        private.fill_uniform_f32(&mut u);
-        let q = self
+        let mut private = state.ctx.private(client_id);
+        scratch.u.resize(self.dim, 0.0);
+        private.fill_uniform_f32(&mut scratch.u);
+        let (xmin, s) = self
             .backend
-            .quantize(x, &u, self.span, self.k)
+            .quantize_into(x, &scratch.u, self.span, self.k, &mut scratch.bins)
             .expect("backend quantize failed");
 
-        let mut hist = vec![0u64; self.k as usize];
-        for &b in &q.bins {
-            hist[b as usize] += 1;
+        scratch.hist.clear();
+        scratch.hist.resize(self.k as usize, 0);
+        for &b in &scratch.bins {
+            scratch.hist[b as usize] += 1;
         }
 
-        let mut w = BitWriter::new();
-        self.header.put(&mut w, q.xmin);
-        self.header.put(&mut w, q.s);
-        histogram::encode(&mut w, &hist, self.dim as u64).expect("histogram encode");
+        let mut w = frame.writer();
+        self.header.put(&mut w, xmin);
+        self.header.put(&mut w, s);
+        histogram::encode(&mut w, &scratch.hist, self.dim as u64).expect("histogram encode");
         match self.coder {
             Coder::Arithmetic => {
                 let model =
-                    arithmetic::CumTable::from_histogram(&hist).expect("cum table");
-                arithmetic::encode(&mut w, &model, &q.bins).expect("arith encode");
+                    arithmetic::CumTable::from_histogram(&scratch.hist).expect("cum table");
+                arithmetic::encode(&mut w, &model, &scratch.bins).expect("arith encode");
             }
             Coder::Huffman => {
-                let code = huffman::HuffmanCode::from_histogram(&hist).expect("huffman");
-                code.encode(&mut w, &q.bins).expect("huffman encode");
+                let code = huffman::HuffmanCode::from_histogram(&scratch.hist).expect("huffman");
+                code.encode(&mut w, &scratch.bins).expect("huffman encode");
             }
         }
-        let (bytes, bits) = w.finish();
-        Some(Frame::new(bytes, bits))
+        frame.store(w);
+        true
     }
 
     fn new_accumulator(&self) -> Accumulator {
         Accumulator::new(self.dim)
     }
 
-    fn accumulate(&self, _ctx: &RoundCtx, frame: &Frame, acc: &mut Accumulator) -> Result<()> {
+    fn accumulate_with(&self, _state: &RoundState, frame: &Frame, acc: &mut Accumulator) -> Result<()> {
         ensure!(acc.sum.len() == self.dim, "accumulator dimension mismatch");
         let mut r = BitReader::with_bit_len(&frame.bytes, frame.bit_len);
         let xmin = self.header.get(&mut r)?;
@@ -163,9 +173,8 @@ impl Protocol for VarlenProtocol {
         Ok(())
     }
 
-    fn finish_scaled(&self, _ctx: &RoundCtx, acc: Accumulator, divisor: f64) -> Vec<f32> {
-        let inv = if divisor > 0.0 { (1.0 / divisor) as f32 } else { 0.0 };
-        acc.sum.iter().map(|&v| v * inv).collect()
+    fn finish_scaled_with(&self, _state: &RoundState, acc: Accumulator, divisor: f64) -> Vec<f32> {
+        acc.into_scaled(divisor)
     }
 
     fn mse_bound(&self, n: usize, avg_norm_sq: f64) -> Option<f64> {

@@ -46,10 +46,26 @@ pub fn mix(words: &[u64]) -> u64 {
     out
 }
 
+thread_local! {
+    /// Per-thread count of public-stream derivations — test
+    /// instrumentation for the round-session guarantee that the shared
+    /// rotation is sampled exactly once per round (see
+    /// [`crate::protocol::Protocol::prepare`]).
+    static PUBLIC_STREAM_DRAWS: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+/// How many public streams *this thread* has derived so far. Tests diff
+/// this counter around a round to assert the rotation is sampled exactly
+/// once per round; thread-local so concurrent tests don't interfere.
+pub fn public_stream_draws() -> u64 {
+    PUBLIC_STREAM_DRAWS.with(|c| c.get())
+}
+
 /// The shared (public) stream for round `round` under experiment `seed`.
 /// Every party can derive this identically — it plays the role of the
 /// shared random seed footnote 1 of the paper describes.
 pub fn public_stream(seed: u64, round: u64) -> Pcg64 {
+    PUBLIC_STREAM_DRAWS.with(|c| c.set(c.get() + 1));
     Pcg64::new(mix(&[seed, PUBLIC_TAG, round]))
 }
 

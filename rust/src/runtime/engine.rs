@@ -36,6 +36,44 @@ pub trait ComputeBackend: Send + Sync {
         let z = self.rotate_fwd(x, sign)?;
         self.quantize(&z, u, Span::MinMax, k)
     }
+
+    /// Stochastic quantization into caller storage — the round-session
+    /// encode path. The native backend overrides this allocation-free;
+    /// the default routes through [`Self::quantize`] and copies. Returns
+    /// the grid `(xmin, s)`.
+    fn quantize_into(
+        &self,
+        x: &[f32],
+        u: &[f32],
+        span: Span,
+        k: u32,
+        bins: &mut Vec<u32>,
+    ) -> Result<(f32, f32)> {
+        let q = self.quantize(x, u, span, k)?;
+        bins.clear();
+        bins.extend_from_slice(&q.bins);
+        Ok((q.xmin, q.s))
+    }
+
+    /// Fused in-place client step of π_srk for the round-session encode
+    /// path: rotate `buf` (already padded to a power of two) in place,
+    /// then quantize into `bins` (minmax span). `buf`'s contents are
+    /// unspecified afterwards. The native backend overrides this
+    /// allocation-free; the default routes through
+    /// [`Self::encode_rotated`] and copies.
+    fn encode_rotated_in_place(
+        &self,
+        buf: &mut [f32],
+        sign: &[f32],
+        u: &[f32],
+        k: u32,
+        bins: &mut Vec<u32>,
+    ) -> Result<(f32, f32)> {
+        let q = self.encode_rotated(buf, sign, u, k)?;
+        bins.clear();
+        bins.extend_from_slice(&q.bins);
+        Ok((q.xmin, q.s))
+    }
 }
 
 /// Pure-Rust backend (always available, any dimension).
@@ -77,6 +115,37 @@ impl ComputeBackend for NativeBackend {
         anyhow::ensure!(k >= 2, "k must be >= 2");
         Ok(quantizer::quantize(x, u, span, k))
     }
+
+    fn quantize_into(
+        &self,
+        x: &[f32],
+        u: &[f32],
+        span: Span,
+        k: u32,
+        bins: &mut Vec<u32>,
+    ) -> Result<(f32, f32)> {
+        anyhow::ensure!(x.len() == u.len(), "uniforms length mismatch");
+        anyhow::ensure!(k >= 2, "k must be >= 2");
+        let (xmin, s) = quantizer::grid_params(x, span);
+        quantizer::quantize_into(x, u, xmin, s, k, bins);
+        Ok((xmin, s))
+    }
+
+    fn encode_rotated_in_place(
+        &self,
+        buf: &mut [f32],
+        sign: &[f32],
+        u: &[f32],
+        k: u32,
+        bins: &mut Vec<u32>,
+    ) -> Result<(f32, f32)> {
+        anyhow::ensure!(buf.len() == sign.len(), "dim mismatch");
+        for (v, s) in buf.iter_mut().zip(sign) {
+            *v *= s;
+        }
+        hadamard::fwht_normalized(buf);
+        self.quantize_into(buf, u, Span::MinMax, k, bins)
+    }
 }
 
 #[cfg(test)]
@@ -115,6 +184,30 @@ mod tests {
         assert_eq!(fused.bins, composed.bins);
         assert_eq!(fused.xmin, composed.xmin);
         assert_eq!(fused.s, composed.s);
+    }
+
+    #[test]
+    fn in_place_fused_matches_allocating() {
+        let b = NativeBackend;
+        let mut rng = Pcg64::new(7);
+        let mut x = vec![0.0f32; 64];
+        rng.fill_gaussian_f32(&mut x);
+        let mut sign = vec![0.0f32; 64];
+        rng.fill_rademacher(&mut sign);
+        let mut u = vec![0.0f32; 64];
+        rng.fill_uniform_f32(&mut u);
+        let q = b.encode_rotated(&x, &sign, &u, 16).unwrap();
+        let mut buf = x.clone();
+        let mut bins = Vec::new();
+        let (xmin, s) = b.encode_rotated_in_place(&mut buf, &sign, &u, 16, &mut bins).unwrap();
+        assert_eq!(bins, q.bins);
+        assert_eq!(xmin, q.xmin);
+        assert_eq!(s, q.s);
+        // quantize_into agrees with quantize as well
+        let qq = b.quantize(&x, &u, Span::Norm, 8).unwrap();
+        let (xmin2, s2) = b.quantize_into(&x, &u, Span::Norm, 8, &mut bins).unwrap();
+        assert_eq!(bins, qq.bins);
+        assert_eq!((xmin2, s2), (qq.xmin, qq.s));
     }
 
     #[test]

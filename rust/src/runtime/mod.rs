@@ -9,10 +9,16 @@
 //!   entry point, executes on a dedicated engine thread (the `xla` crate's
 //!   client is `Rc`-based and must stay on one thread; the
 //!   [`pjrt::PjrtBackend`] handle is `Send + Sync` and speaks to it over a
-//!   channel).
+//!   channel). Compiled only with the `pjrt` cargo feature — the default
+//!   build ships a stub whose constructor returns a clean error, since the
+//!   `xla` crate is not part of the offline crate set.
 
 pub mod artifacts;
 pub mod engine;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+#[cfg(not(feature = "pjrt"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;
 
 pub use engine::{ComputeBackend, NativeBackend};

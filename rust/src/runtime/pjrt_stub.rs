@@ -1,0 +1,77 @@
+//! Stub PJRT backend, compiled when the `pjrt` cargo feature is off.
+//!
+//! The real backend (`pjrt.rs`) depends on the vendored `xla` crate,
+//! which is not part of the default offline crate set. This stub keeps
+//! the public surface identical so `--backend pjrt` call sites compile
+//! unconditionally: every constructor returns a clean error and callers
+//! fall back to the native backend (or skip, as the integration tests do
+//! when no artifacts are present).
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::protocol::quantizer::{Quantized, Span};
+
+const UNAVAILABLE: &str = "dme was built without the `pjrt` feature; rebuild with \
+     `--features pjrt` (and the vendored `xla` crate) to execute AOT artifacts";
+
+/// Stand-in for the PJRT engine handle. Never constructible: both
+/// constructors return the "built without pjrt" error.
+pub struct PjrtBackend {
+    /// Rows per decode_sum execution (mirrors the real backend's field).
+    pub decode_batch: usize,
+}
+
+impl PjrtBackend {
+    /// Always fails: the crate was built without the `pjrt` feature.
+    pub fn new() -> Result<Self> {
+        bail!(UNAVAILABLE)
+    }
+
+    /// Always fails: the crate was built without the `pjrt` feature.
+    pub fn with_dir(_dir: PathBuf) -> Result<Self> {
+        bail!(UNAVAILABLE)
+    }
+
+    /// Unreachable in practice (no instance can exist); kept for API parity.
+    pub fn decode_sum(
+        &self,
+        _bins: Vec<f32>,
+        _xmin: Vec<f32>,
+        _s: Vec<f32>,
+        _k: u32,
+        _dim: usize,
+    ) -> Result<Vec<f32>> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+impl super::engine::ComputeBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt (stubbed out)"
+    }
+
+    fn rotate_fwd(&self, _x: &[f32], _sign: &[f32]) -> Result<Vec<f32>> {
+        bail!(UNAVAILABLE)
+    }
+
+    fn rotate_inv(&self, _z: &[f32], _sign: &[f32]) -> Result<Vec<f32>> {
+        bail!(UNAVAILABLE)
+    }
+
+    fn quantize(&self, _x: &[f32], _u: &[f32], _span: Span, _k: u32) -> Result<Quantized> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_missing_feature() {
+        let err = PjrtBackend::new().unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "unhelpful error: {err}");
+    }
+}

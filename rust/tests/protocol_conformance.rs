@@ -2,7 +2,7 @@
 //! satisfy, run against every spec the config registry can build.
 
 use dme::protocol::config::ProtocolConfig;
-use dme::protocol::{run_round, Frame, RoundCtx};
+use dme::protocol::{run_round, run_round_par, Frame, RoundCtx};
 use dme::rng::Pcg64;
 use dme::stats;
 
@@ -17,6 +17,8 @@ const SPECS: &[&str] = &[
     "varlen:k=4",
     "varlen:k=17",
     "varlen:k=17,coder=huffman",
+    "qsgd:k=8",
+    "klevel:k=8,q=0.5",
     "klevel:k=16,p=0.5",
     "varlen:k=17,p=0.25",
 ];
@@ -151,6 +153,65 @@ fn garbage_frames_never_panic() {
             assert!(acc.sum.iter().all(|v| v.is_finite() || v.is_nan() || v.is_infinite()));
         }
     }
+}
+
+#[test]
+fn run_round_par_bit_identical_to_sequential_all_protocols() {
+    // The round engine's determinism guarantee: the f32 merge tree depends
+    // only on the client count, so every thread count must produce
+    // bit-identical estimates and identical bit totals.
+    for (n, d) in [(1usize, 33usize), (5, 64), (64, 100)] {
+        let xs = clients(n, d, (n + d) as u64);
+        for spec in SPECS {
+            let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+            let ctx = RoundCtx::new(2, 77);
+            let (est, bits) = run_round(proto.as_ref(), &ctx, &xs).unwrap();
+            let seq_bits: Vec<u32> = est.iter().map(|v| v.to_bits()).collect();
+            for threads in [1usize, 2, 8] {
+                let (est_p, bits_p) =
+                    run_round_par(proto.as_ref(), &ctx, &xs, threads).unwrap();
+                assert_eq!(bits, bits_p, "spec={spec} n={n} threads={threads}");
+                let par_bits: Vec<u32> = est_p.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(
+                    seq_bits, par_bits,
+                    "spec={spec} n={n} d={d} threads={threads}: estimates diverge"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn rotation_sampled_exactly_once_per_round() {
+    // The round-session guarantee: prepare() is the only public-stream
+    // draw, shared by every client's encode and the server's inverse
+    // rotation. The counter is thread-local, and the engine prepares on
+    // the calling thread, so concurrent tests don't interfere.
+    let d = 96;
+    let xs = clients(32, d, 9);
+    for spec in ["rotated:k=2", "rotated:k=16"] {
+        let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+        let ctx = RoundCtx::new(1, 13);
+        let before = dme::rng::public_stream_draws();
+        run_round(proto.as_ref(), &ctx, &xs).unwrap();
+        assert_eq!(
+            dme::rng::public_stream_draws() - before,
+            1,
+            "spec={spec}: sequential round should sample the rotation once"
+        );
+        let before = dme::rng::public_stream_draws();
+        run_round_par(proto.as_ref(), &ctx, &xs, 4).unwrap();
+        assert_eq!(
+            dme::rng::public_stream_draws() - before,
+            1,
+            "spec={spec}: parallel round should sample the rotation once"
+        );
+    }
+    // Protocols without shared randomness draw none at all.
+    let proto = ProtocolConfig::parse("klevel:k=16", d).unwrap().build().unwrap();
+    let before = dme::rng::public_stream_draws();
+    run_round(proto.as_ref(), &RoundCtx::new(0, 5), &xs).unwrap();
+    assert_eq!(dme::rng::public_stream_draws() - before, 0);
 }
 
 #[test]
