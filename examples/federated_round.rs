@@ -101,7 +101,10 @@ fn main() -> anyhow::Result<()> {
     );
 
     let wall = t0.elapsed();
-    println!("\ne2e wall time: {:.2}s (both phases, all protocols, full coordinator stack)", wall.as_secs_f64());
+    println!(
+        "\ne2e wall time: {:.2}s (both phases, all protocols, full coordinator stack)",
+        wall.as_secs_f64()
+    );
     println!("layers exercised: L3 rust coordinator -> L2 JAX graphs -> L1 Pallas kernels (PJRT)");
     Ok(())
 }

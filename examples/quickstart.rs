@@ -22,7 +22,9 @@ fn main() -> anyhow::Result<()> {
     let data = synthetic::gaussian(n, d, seed);
     let truth = stats::true_mean(&data.rows);
     let avg_sq = stats::avg_norm_sq(&data.rows);
-    println!("distributed mean estimation: n={n} clients, d={d}, {trials} trials, {threads} threads");
+    println!(
+        "distributed mean estimation: n={n} clients, d={d}, {trials} trials, {threads} threads"
+    );
     println!("data: {} (avg ||x||^2 = {avg_sq:.1})", data.name);
 
     let specs = [

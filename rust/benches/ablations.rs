@@ -100,7 +100,8 @@ fn main() -> anyhow::Result<()> {
             format!("enum={enum_bits}"),
         ]);
         println!(
-            "histogram header: picked {hdr_bits} bits (enumerative {enum_bits}, payload entropy {entropy:.0})"
+            "histogram header: picked {hdr_bits} bits \
+             (enumerative {enum_bits}, payload entropy {entropy:.0})"
         );
     }
 
@@ -122,7 +123,8 @@ fn main() -> anyhow::Result<()> {
     // 5. native vs PJRT backend (statistics must match; timing in micro).
     if dme::runtime::artifacts::Manifest::default_dir().join("manifest.tsv").exists() {
         if let Ok(pjrt) = dme::runtime::PjrtBackend::new() {
-            let pjrt = std::sync::Arc::new(pjrt) as std::sync::Arc<dyn dme::runtime::ComputeBackend>;
+            let pjrt =
+                std::sync::Arc::new(pjrt) as std::sync::Arc<dyn dme::runtime::ComputeBackend>;
             for (label, cfg) in [
                 ("native", ProtocolConfig::parse("rotated:k=16", d)?),
                 ("pjrt", ProtocolConfig::parse("rotated:k=16", d)?.with_backend(pjrt)),

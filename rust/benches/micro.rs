@@ -1,7 +1,8 @@
 //! Microbenchmarks of the hot paths (the §Perf numbers in EXPERIMENTS.md):
 //! FWHT, quantization, entropy coders, full protocol encode/decode, the
 //! round-session encode pipeline (one-shot vs prepared, 1 vs N threads),
-//! PJRT executable dispatch, and a full coordinator round.
+//! the streaming leader aggregation (n worker uploads, 1 vs N decode
+//! threads), PJRT executable dispatch, and a full coordinator round.
 //!
 //! ```bash
 //! cargo bench --offline --bench micro            # full run
@@ -12,7 +13,8 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use dme::bench::Bench;
-use dme::coordinator::leader::spawn_local_cluster;
+use dme::coordinator::leader::{aggregate_uploads_streaming, spawn_local_cluster};
+use dme::coordinator::transport::WeightedFrame;
 use dme::coordinator::worker::mean_update;
 use dme::protocol::config::ProtocolConfig;
 use dme::protocol::quantizer::Span;
@@ -184,6 +186,46 @@ fn main() -> anyhow::Result<()> {
                     || {
                         std::hint::black_box(
                             run_round_par(proto.as_ref(), &ctx, &xs, t).unwrap(),
+                        );
+                    },
+                );
+            }
+        }
+    }
+
+    // ---- streaming leader aggregation: decode n uploads, 1 vs N threads ----
+    //
+    // The server-side half of a round in isolation: n pre-encoded worker
+    // uploads pushed through `aggregate_uploads_streaming` (decode into
+    // per-slot partials + deterministic client-order merge). The 1-thread
+    // and N-thread rows are bit-identical by construction; the delta is
+    // pure decode parallelism.
+    {
+        let d = 1024;
+        let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+        let worker_counts: &[usize] = if smoke { &[64] } else { &[64, 512] };
+        for &n in worker_counts {
+            let proto = ProtocolConfig::parse("rotated:k=16", d)?.build()?;
+            let ctx = RoundCtx::new(0, 21);
+            let state = proto.prepare(&ctx);
+            let mut enc = Encoder::new(proto.as_ref(), &state);
+            let mut rng = Pcg64::new(7 + n as u64);
+            let uploads: Vec<(u64, Vec<WeightedFrame>)> = (0..n)
+                .map(|i| {
+                    let mut x = vec![0.0f32; d];
+                    rng.fill_gaussian_f32(&mut x);
+                    let frame = enc.encode(i as u64, &x).expect("encode");
+                    (i as u64, vec![WeightedFrame { frame, weight: 1.0 }])
+                })
+                .collect();
+            for t in [1usize, threads] {
+                b.run(
+                    &format!("leader decode rotated k=16 n={n} t={t} d={d}"),
+                    Some((n * d) as f64),
+                    || {
+                        std::hint::black_box(
+                            aggregate_uploads_streaming(proto.as_ref(), &state, &uploads, t)
+                                .unwrap(),
                         );
                     },
                 );

@@ -31,7 +31,8 @@ fn measure(proto: &dyn dme::Protocol, xs: &[Vec<f32>], trials: u64) -> f64 {
 
 fn main() -> anyhow::Result<()> {
     let trials: u64 = std::env::var("DME_TRIALS").ok().and_then(|s| s.parse().ok()).unwrap_or(60);
-    let mut report = Report::new("theory_mse", &["protocol", "d", "n", "k", "mse", "bound", "ratio"]);
+    let mut report =
+        Report::new("theory_mse", &["protocol", "d", "n", "k", "mse", "bound", "ratio"]);
     let mut rows = Vec::new();
 
     for (d, n) in [(64usize, 4usize), (256, 16), (1024, 16)] {

@@ -1,14 +1,36 @@
 //! The leader (server) side of the coordinator: drives rounds, enforces
-//! the barrier, decodes uploads, and aggregates per-slot weighted means.
+//! the barrier, and aggregates per-slot weighted means through a
+//! **streaming, parallel decode pipeline**.
+//!
+//! # Streaming aggregation
+//!
+//! The pre-streaming leader waited for the full barrier, then decoded
+//! every slot of every upload serially — at large worker counts the
+//! server, not the clients, became the round bottleneck. Now each upload
+//! is handed to a decode pool the moment it arrives ([`decode_upload`]
+//! turns it into per-slot [`SlotPartial`]s), so decode work overlaps the
+//! barrier wait; at the barrier the partials are merged in client-id
+//! order ([`merge_decoded`]).
+//!
+//! Determinism: decoding a frame into its own zeroed accumulator is
+//! order-independent, and the merge folds partials in client-id order —
+//! the same rule `run_round_par` uses — so the outcome is **bit-identical
+//! to the sequential sorted-decode reference**
+//! ([`aggregate_uploads_reference`], kept as the executable
+//! specification) for every arrival order and every decode-thread count.
+//! The conformance suite in `tests/streaming_leader.rs` proves this for
+//! all protocol specs × arrival orders × decode threads ∈ {1, 2, 8}.
 
-use std::sync::Arc;
-use std::time::Instant;
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Result};
 
 use super::metrics::{ExperimentMetrics, RoundMetrics};
 use super::transport::{Message, TransportHub, WeightedFrame};
-use crate::protocol::{Decoder, Protocol, RoundCtx};
+use crate::protocol::{Decoder, Protocol, RoundCtx, RoundState, SlotPartial};
 
 /// Result of one coordinated round.
 #[derive(Clone, Debug)]
@@ -24,17 +46,214 @@ pub struct RoundOutcome {
     pub n_frames: usize,
 }
 
+/// One worker's upload with every slot decoded into a [`SlotPartial`]:
+/// the unit of work of the streaming pipeline. Producing it is the
+/// expensive, order-independent half of server-side aggregation (bit
+/// unpacking + dequantization into zeroed accumulators, on any decode
+/// thread); what remains at the barrier is a cheap deterministic fold.
+pub struct DecodedUpload {
+    pub client: u64,
+    /// One entry per uploaded slot; `None` for a silent (empty) frame,
+    /// which still counts toward the slot's holder count.
+    pub slots: Vec<Option<SlotPartial>>,
+    /// Sum of the non-silent frames' bit lengths.
+    pub uplink_bits: u64,
+    /// Non-silent frame count.
+    pub n_frames: usize,
+}
+
+/// Decode one worker's upload into per-slot partials. Shares only the
+/// immutable round state, so uploads decode concurrently on any threads,
+/// in any arrival order, without affecting the merged bits.
+pub fn decode_upload(
+    proto: &dyn Protocol,
+    state: &RoundState,
+    client: u64,
+    frames: &[WeightedFrame],
+) -> Result<DecodedUpload> {
+    let mut slots = Vec::with_capacity(frames.len());
+    let mut uplink_bits = 0u64;
+    let mut n_frames = 0usize;
+    for wf in frames {
+        if wf.frame.bit_len == 0 {
+            slots.push(None);
+        } else {
+            uplink_bits += wf.frame.bit_len;
+            n_frames += 1;
+            slots.push(Some(SlotPartial::decode(proto, state, &wf.frame, wf.weight)?));
+        }
+    }
+    Ok(DecodedUpload { client, slots, uplink_bits, n_frames })
+}
+
+/// Merge decoded uploads into the round outcome: sort by client id, then
+/// fold each slot's partials in that order through
+/// [`Decoder::push_partial`]. Bit-identical to
+/// [`aggregate_uploads_reference`] for any upload arrival order and any
+/// decode-thread count.
+pub fn merge_decoded(
+    proto: &dyn Protocol,
+    state: &RoundState,
+    mut decoded: Vec<DecodedUpload>,
+) -> RoundOutcome {
+    decoded.sort_by_key(|d| d.client);
+    // Slot count: max over workers (workers with empty shards send 0).
+    let n_slots = decoded.iter().map(|d| d.slots.len()).max().unwrap_or(0);
+    let uplink_bits = decoded.iter().map(|d| d.uplink_bits).sum();
+    let n_frames = decoded.iter().map(|d| d.n_frames).sum();
+    let mut means = Vec::with_capacity(n_slots);
+    let mut weights = Vec::with_capacity(n_slots);
+    for slot in 0..n_slots {
+        let holders = decoded.iter().filter(|d| d.slots.len() > slot).count();
+        let parts: Vec<&SlotPartial> = decoded
+            .iter()
+            .filter_map(|d| d.slots.get(slot).and_then(|p| p.as_ref()))
+            .collect();
+        // Plain-mean fast path iff every present frame has weight 1.0 —
+        // the same branch (and therefore the same finish semantics) as
+        // the sequential reference.
+        let uniform = parts.iter().all(|p| p.weight == 1.0);
+        let mut dec = Decoder::new(proto, state);
+        for p in &parts {
+            dec.push_partial(p);
+        }
+        if uniform {
+            weights.push(dec.frames() as f64);
+            means.push(dec.finish(holders));
+        } else {
+            weights.push(dec.total_weight());
+            means.push(dec.finish_weighted());
+        }
+    }
+    RoundOutcome { means, weights, uplink_bits, n_frames }
+}
+
+/// The pre-streaming aggregation path: sort uploads by client id, then
+/// decode every slot sequentially, in place. Retained as the executable
+/// bit-exact specification of what the streaming pipeline must produce;
+/// the conformance suite diffs the two.
+pub fn aggregate_uploads_reference(
+    proto: &dyn Protocol,
+    state: &RoundState,
+    mut uploads: Vec<(u64, Vec<WeightedFrame>)>,
+) -> Result<RoundOutcome> {
+    // Deterministic aggregation: decode in client-id order regardless
+    // of arrival order (f32 addition is not associative; without this
+    // the same round could produce different bit patterns run-to-run).
+    uploads.sort_by_key(|(client, _)| *client);
+    let n_slots = uploads.iter().map(|(_, f)| f.len()).max().unwrap_or(0);
+    let mut means = Vec::with_capacity(n_slots);
+    let mut weights = Vec::with_capacity(n_slots);
+    let mut uplink_bits = 0u64;
+    let mut n_frames = 0usize;
+    for slot in 0..n_slots {
+        let slot_frames: Vec<&WeightedFrame> = uploads
+            .iter()
+            .filter_map(|(_, f)| f.get(slot))
+            .filter(|wf| wf.frame.bit_len > 0)
+            .collect();
+        uplink_bits += slot_frames.iter().map(|wf| wf.frame.bit_len).sum::<u64>();
+        n_frames += slot_frames.len();
+        let holders = uploads.iter().filter(|(_, f)| f.get(slot).is_some()).count();
+
+        let mut dec = Decoder::new(proto, state);
+        let uniform = slot_frames.iter().all(|wf| wf.weight == 1.0);
+        if uniform {
+            for wf in &slot_frames {
+                dec.push(&wf.frame)?;
+            }
+            weights.push(slot_frames.len() as f64);
+            means.push(dec.finish(holders));
+        } else {
+            for wf in &slot_frames {
+                dec.push_weighted(&wf.frame, wf.weight)?;
+            }
+            weights.push(dec.total_weight());
+            means.push(dec.finish_weighted());
+        }
+    }
+    Ok(RoundOutcome { means, weights, uplink_bits, n_frames })
+}
+
+/// Run the streaming aggregation over an already-received upload list
+/// with `decode_threads` workers. Shares the determinism-relevant core
+/// with [`Leader::round`] ([`decode_upload`] + [`merge_decoded`]); only
+/// the task scheduling differs (a ready list here vs the channel-fed
+/// pool a live round streams through — which the conformance suite also
+/// exercises end to end via `Leader::round` itself). Exposed for
+/// benches and the conformance suite.
+pub fn aggregate_uploads_streaming(
+    proto: &dyn Protocol,
+    state: &RoundState,
+    uploads: &[(u64, Vec<WeightedFrame>)],
+    decode_threads: usize,
+) -> Result<RoundOutcome> {
+    let decoded = if decode_threads <= 1 {
+        uploads
+            .iter()
+            .map(|(c, f)| decode_upload(proto, state, *c, f))
+            .collect::<Result<Vec<_>>>()?
+    } else {
+        let next = AtomicUsize::new(0);
+        let next = &next;
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..decode_threads)
+                .map(|_| {
+                    scope.spawn(move || {
+                        let mut out = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= uploads.len() {
+                                break;
+                            }
+                            let (c, f) = &uploads[i];
+                            out.push(decode_upload(proto, state, *c, f));
+                        }
+                        out
+                    })
+                })
+                .collect();
+            let mut all = Vec::with_capacity(uploads.len());
+            for h in handles {
+                for r in h.join().expect("decode thread panicked") {
+                    all.push(r?);
+                }
+            }
+            Ok::<_, anyhow::Error>(all)
+        })?
+    };
+    Ok(merge_decoded(proto, state, decoded))
+}
+
 /// The coordinator leader.
 pub struct Leader {
     protocol: Arc<dyn Protocol>,
     hub: Box<dyn TransportHub>,
     seed: u64,
     metrics: ExperimentMetrics,
+    decode_threads: usize,
 }
 
 impl Leader {
     pub fn new(protocol: Arc<dyn Protocol>, hub: Box<dyn TransportHub>, seed: u64) -> Self {
-        Leader { protocol, hub, seed, metrics: ExperimentMetrics::default() }
+        Leader { protocol, hub, seed, metrics: ExperimentMetrics::default(), decode_threads: 1 }
+    }
+
+    /// Set the decode-pool width (builder style). Any value produces
+    /// bit-identical round outcomes — the merge order is fixed by client
+    /// ids, never by scheduling; `0` is treated as 1.
+    pub fn with_decode_threads(mut self, n: usize) -> Self {
+        self.decode_threads = n.max(1);
+        self
+    }
+
+    /// Change the decode-pool width on a live leader.
+    pub fn set_decode_threads(&mut self, n: usize) {
+        self.decode_threads = n.max(1);
+    }
+
+    pub fn decode_threads(&self) -> usize {
+        self.decode_threads
     }
 
     pub fn n_workers(&self) -> usize {
@@ -46,95 +265,103 @@ impl Leader {
     }
 
     /// Run one synchronous round: broadcast `state` (`n_slots × dim`
-    /// flattened — what the workers need to compute their updates), wait
-    /// for every worker's upload, decode and aggregate.
+    /// flattened — what the workers need to compute their updates), then
+    /// stream uploads through the decode pool as they arrive and merge
+    /// the partials once every worker has answered.
     pub fn round(&mut self, round: u64, dim: u32, state: &[f32]) -> Result<RoundOutcome> {
         let t0 = Instant::now();
         let n_workers = self.hub.n_workers();
         ensure!(n_workers > 0, "no workers connected");
-        self.hub.broadcast(&Message::RoundStart {
-            round,
-            dim,
-            payload: state.to_vec(),
+        // The payload is Arc-shared: one allocation for the whole
+        // broadcast instead of one clone per worker.
+        self.hub.broadcast(&Message::RoundStart { round, dim, payload: Arc::from(state) })?;
+
+        let ctx = RoundCtx::new(round, self.seed);
+        let proto = self.protocol.clone();
+        // One round session: shared state (the rotation for π_srk) is
+        // prepared once and reused by every decode thread and the merge.
+        let round_state = proto.prepare(&ctx);
+        let decode_threads = self.decode_threads.clamp(1, n_workers);
+
+        let decode_ns = AtomicU64::new(0);
+        let mut wait_wall = Duration::ZERO;
+
+        // Streaming barrier: the leader thread owns the transport and
+        // hands each upload to the decode pool the moment it arrives, so
+        // decoding overlaps the wait for slower workers. The channels
+        // live outside the scope: scoped threads may only borrow data
+        // that outlives the scope itself.
+        let hub = &mut self.hub;
+        let (task_tx, task_rx) = mpsc::channel::<(u64, Vec<WeightedFrame>)>();
+        let (out_tx, out_rx) = mpsc::channel::<Result<DecodedUpload>>();
+        let task_rx = Mutex::new(task_rx);
+        let decoded = std::thread::scope(|scope| -> Result<Vec<DecodedUpload>> {
+            for i in 0..decode_threads {
+                let out_tx = out_tx.clone();
+                let task_rx = &task_rx;
+                let proto = proto.as_ref();
+                let round_state = &round_state;
+                let decode_ns = &decode_ns;
+                std::thread::Builder::new()
+                    .name(format!("dme-decode-{i}"))
+                    .spawn_scoped(scope, move || loop {
+                        // Hold the lock only for the dequeue, not the
+                        // decode, so the pool drains in parallel.
+                        let task = task_rx.lock().unwrap().recv();
+                        let Ok((client, frames)) = task else { return };
+                        let t = Instant::now();
+                        let res = decode_upload(proto, round_state, client, &frames);
+                        decode_ns.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                        if out_tx.send(res).is_err() {
+                            return;
+                        }
+                    })
+                    .expect("spawning decode thread");
+            }
+            drop(out_tx);
+
+            // Barrier: exactly one upload per worker.
+            let mut seen = HashSet::new();
+            for _ in 0..n_workers {
+                let t = Instant::now();
+                let msg = hub.recv()?;
+                wait_wall += t.elapsed();
+                match msg {
+                    Message::Upload { client, round: r, frames } => {
+                        ensure!(r == round, "worker {client} answered round {r}, expected {round}");
+                        ensure!(seen.insert(client), "duplicate upload from worker {client}");
+                        task_tx.send((client, frames)).expect("decode pool hung up");
+                    }
+                    Message::RoundStart { .. } | Message::Shutdown => {
+                        bail!("unexpected message at the leader")
+                    }
+                }
+            }
+            drop(task_tx); // pool drains the queue, then exits
+
+            let mut decoded = Vec::with_capacity(n_workers);
+            for _ in 0..n_workers {
+                decoded.push(out_rx.recv().expect("decode pool died")?);
+            }
+            Ok(decoded)
         })?;
 
-        // Barrier: exactly one upload per worker.
-        let mut uploads: Vec<(u64, Vec<WeightedFrame>)> = Vec::with_capacity(n_workers);
-        let mut seen = std::collections::HashSet::new();
-        while uploads.len() < n_workers {
-            match self.hub.recv()? {
-                Message::Upload { client, round: r, frames } => {
-                    ensure!(r == round, "worker {client} answered round {r}, expected {round}");
-                    ensure!(seen.insert(client), "duplicate upload from worker {client}");
-                    uploads.push((client, frames));
-                }
-                Message::RoundStart { .. } | Message::Shutdown => {
-                    bail!("unexpected message at the leader")
-                }
-            }
-        }
-
-        // Deterministic aggregation: decode in client-id order regardless
-        // of arrival order (f32 addition is not associative; without this
-        // the same round could produce different bit patterns run-to-run).
-        uploads.sort_by_key(|(client, _)| *client);
-
-        // Slot count: max over workers (workers with empty shards send 0).
-        let n_slots = uploads.iter().map(|(_, f)| f.len()).max().unwrap_or(0);
-        let ctx = RoundCtx::new(round, self.seed);
-        // One round session: shared state (the rotation for π_srk) is
-        // prepared once and reused across every slot and frame.
-        let proto = self.protocol.as_ref();
-        let round_state = proto.prepare(&ctx);
-
-        let mut means = Vec::with_capacity(n_slots);
-        let mut weights = Vec::with_capacity(n_slots);
-        let mut uplink_bits = 0u64;
-        let mut n_frames = 0usize;
-
-        for slot in 0..n_slots {
-            // Frames decode in client-id order (uploads are sorted above):
-            // f32 accumulation order is part of the determinism guarantee.
-            let slot_frames: Vec<&WeightedFrame> = uploads
-                .iter()
-                .filter_map(|(_, f)| f.get(slot))
-                .filter(|wf| wf.frame.bit_len > 0)
-                .collect();
-            uplink_bits += slot_frames.iter().map(|wf| wf.frame.bit_len).sum::<u64>();
-            n_frames += slot_frames.len();
-            let holders = uploads.iter().filter(|(_, f)| f.get(slot).is_some()).count();
-
-            let mut dec = Decoder::new(proto, &round_state);
-            let uniform = slot_frames.iter().all(|wf| wf.weight == 1.0);
-            if uniform {
-                // Plain-mean fast path: every present frame has weight 1.0.
-                for wf in &slot_frames {
-                    dec.push(&wf.frame)?;
-                }
-                weights.push(slot_frames.len() as f64);
-                means.push(dec.finish(holders));
-            } else {
-                // Weighted average: the decoder folds weight-scaled frames
-                // in the protocol's internal space, so the inverse rotation
-                // runs once per slot instead of once per frame.
-                for wf in &slot_frames {
-                    dec.push_weighted(&wf.frame, wf.weight)?;
-                }
-                weights.push(dec.total_weight());
-                means.push(dec.finish_weighted());
-            }
-        }
+        let t_merge = Instant::now();
+        let outcome = merge_decoded(proto.as_ref(), &round_state, decoded);
+        decode_ns.fetch_add(t_merge.elapsed().as_nanos() as u64, Ordering::Relaxed);
 
         let (down, up) = self.hub.bytes_moved();
         self.metrics.push(RoundMetrics {
             round,
-            uplink_bits,
-            n_frames,
+            uplink_bits: outcome.uplink_bits,
+            n_frames: outcome.n_frames,
             wall: t0.elapsed(),
+            wait_wall,
+            decode_wall: Duration::from_nanos(decode_ns.load(Ordering::Relaxed)),
             cum_down_bytes: down,
             cum_up_bytes: up,
         });
-        Ok(RoundOutcome { means, weights, uplink_bits, n_frames })
+        Ok(outcome)
     }
 
     /// Broadcast shutdown to all workers.
@@ -221,10 +448,122 @@ mod tests {
         let m = &leader.metrics().rounds[3];
         assert_eq!(m.round, 3);
         assert!(m.cum_up_bytes >= m.uplink_bits / 8);
+        assert!(m.decode_wall > Duration::ZERO, "decode wall not measured");
         leader.shutdown().unwrap();
         for h in handles {
             h.join().unwrap().unwrap();
         }
+    }
+
+    #[test]
+    fn decode_pool_width_does_not_change_round_bits() {
+        // Same cluster, same seeds, different decode-thread counts: the
+        // estimates must agree bit for bit (the merge order is fixed by
+        // client ids, not by decode scheduling).
+        let d = 64;
+        let mk_shards = || -> Vec<Vec<Vec<f32>>> {
+            (0..9).map(|i| vec![vec![0.3 + i as f32 * 0.7; d]]).collect()
+        };
+        let mut reference: Option<Vec<Vec<u32>>> = None;
+        for threads in [1usize, 2, 8] {
+            let (mut leader, handles) = cluster("rotated:k=16", d, mk_shards());
+            leader.set_decode_threads(threads);
+            let mut rounds = Vec::new();
+            for r in 0..3 {
+                let out = leader.round(r, d as u32, &[]).unwrap();
+                rounds.push(out.means[0].iter().map(|v| v.to_bits()).collect::<Vec<_>>());
+            }
+            match &reference {
+                None => reference = Some(rounds.concat()),
+                Some(want) => {
+                    assert_eq!(&rounds.concat(), want, "threads={threads} diverged");
+                }
+            }
+            leader.shutdown().unwrap();
+            for h in handles {
+                h.join().unwrap().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_matches_reference_on_manual_uploads() {
+        // Hand-built multi-slot uploads with ragged slot counts and mixed
+        // weights, fed to both aggregation paths in scrambled order.
+        let d = 16;
+        let proto = ProtocolConfig::parse("float32", d).unwrap().build().unwrap();
+        let ctx = RoundCtx::new(0, 5);
+        let state = proto.prepare(&ctx);
+        let mut enc = crate::protocol::Encoder::new(proto.as_ref(), &state);
+        let mut uploads: Vec<(u64, Vec<WeightedFrame>)> = Vec::new();
+        for client in 0..5u64 {
+            let n_slots = 1 + (client as usize) % 3; // ragged: 1..=3 slots
+            let mut frames = Vec::new();
+            for slot in 0..n_slots {
+                let x = vec![client as f32 + slot as f32 * 0.1; d];
+                let frame = enc.encode(client * 10 + slot as u64, &x).unwrap();
+                let weight = if client == 2 { 3.0 } else { 1.0 }; // mixed
+                frames.push(WeightedFrame { frame, weight });
+            }
+            // client 4 additionally uploads a silent frame
+            if client == 4 {
+                frames.push(WeightedFrame {
+                    frame: crate::protocol::Frame::new(Vec::new(), 0),
+                    weight: 0.0,
+                });
+            }
+            uploads.push((client, frames));
+        }
+        let want = aggregate_uploads_reference(proto.as_ref(), &state, uploads.clone()).unwrap();
+        uploads.reverse(); // scrambled arrival
+        for threads in [1usize, 2, 8] {
+            let got =
+                aggregate_uploads_streaming(proto.as_ref(), &state, &uploads, threads).unwrap();
+            assert_eq!(got.uplink_bits, want.uplink_bits);
+            assert_eq!(got.n_frames, want.n_frames);
+            assert_eq!(got.weights, want.weights);
+            assert_eq!(got.means.len(), want.means.len());
+            for (a, b) in got.means.iter().zip(&want.means) {
+                assert_eq!(
+                    a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    b.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "threads={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn failing_worker_errors_the_round_instead_of_deadlocking() {
+        // A worker whose step() fails (here: stream-id packing overflow)
+        // sends a barrier-wakeup before dying, so the leader's round
+        // returns Err instead of blocking forever on the barrier.
+        let d = 8;
+        let proto = ProtocolConfig::parse("klevel:k=4", d).unwrap().build().unwrap();
+        let (hub, mut endpoints) = crate::coordinator::transport::LoopbackHub::new(2);
+        // The dead worker takes the LOWER endpoint index: shutdown must
+        // still reach the healthy worker behind it (broadcast is
+        // best-effort, not fail-fast).
+        let ep_good = endpoints.pop().unwrap();
+        let ep_bad = endpoints.pop().unwrap();
+        let mk = |client_id| crate::coordinator::worker::Worker {
+            client_id,
+            shard: vec![vec![1.0; d]],
+            protocol: proto.clone(),
+            update: mean_update(),
+            seed: 3,
+        };
+        let good = mk(0);
+        let bad = mk(1 << 40); // client id overflows the stream-id field
+        let h_good = std::thread::spawn(move || good.run_loopback(ep_good));
+        let h_bad = std::thread::spawn(move || bad.run_loopback(ep_bad));
+        let mut leader = Leader::new(proto, Box::new(hub), 3);
+        assert!(leader.round(0, d as u32, &[]).is_err(), "round must error, not hang");
+        // The dead worker's endpoint is gone, so shutdown may only reach
+        // the surviving worker — best effort is all that is required.
+        let _ = leader.shutdown();
+        assert!(h_good.join().unwrap().is_ok());
+        assert!(h_bad.join().unwrap().is_err());
     }
 
     #[test]

@@ -13,6 +13,14 @@ pub struct RoundMetrics {
     pub n_frames: usize,
     /// Leader-observed wall time for the round.
     pub wall: Duration,
+    /// Time the leader thread spent blocked waiting for uploads (barrier
+    /// wait: worker compute + network). With the streaming pipeline,
+    /// decode overlaps this wait instead of running after it.
+    pub wait_wall: Duration,
+    /// Time spent decoding uploads and merging partials, summed across
+    /// decode threads — CPU time, so it can exceed `wall` when the
+    /// leader runs more than one decode thread.
+    pub decode_wall: Duration,
     /// Cumulative transport-level bytes after this round.
     pub cum_down_bytes: u64,
     pub cum_up_bytes: u64,
@@ -37,6 +45,16 @@ impl ExperimentMetrics {
     /// Total wall time across rounds.
     pub fn total_wall(&self) -> Duration {
         self.rounds.iter().map(|m| m.wall).sum()
+    }
+
+    /// Total leader-side barrier wait across rounds.
+    pub fn total_wait_wall(&self) -> Duration {
+        self.rounds.iter().map(|m| m.wait_wall).sum()
+    }
+
+    /// Total decode CPU time across rounds (summed over decode threads).
+    pub fn total_decode_wall(&self) -> Duration {
+        self.rounds.iter().map(|m| m.decode_wall).sum()
     }
 
     /// Average bits per round.
@@ -73,12 +91,15 @@ impl ExperimentMetrics {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "{} rounds, {:.2} Mbit uplink ({:.1} kbit/round), {:.1} rounds/s, transport overhead {:.2}x",
+            "{} rounds, {:.2} Mbit uplink ({:.1} kbit/round), {:.1} rounds/s, \
+             transport overhead {:.2}x, wait {:.1} ms + decode {:.1} ms (cpu)",
             self.rounds.len(),
             self.total_uplink_bits() as f64 / 1e6,
             self.avg_bits_per_round() / 1e3,
             self.rounds_per_sec(),
             self.uplink_overhead(),
+            self.total_wait_wall().as_secs_f64() * 1e3,
+            self.total_decode_wall().as_secs_f64() * 1e3,
         )
     }
 }
@@ -93,6 +114,8 @@ mod tests {
             uplink_bits: bits,
             n_frames: 2,
             wall: Duration::from_millis(10),
+            wait_wall: Duration::from_millis(6),
+            decode_wall: Duration::from_millis(3),
             cum_down_bytes: 100,
             cum_up_bytes: up,
         }
@@ -108,6 +131,8 @@ mod tests {
         assert!(em.rounds_per_sec() > 0.0);
         // payload = 250 bytes, wire = 350
         assert!((em.uplink_overhead() - 1.4).abs() < 1e-9);
+        assert_eq!(em.total_wait_wall(), Duration::from_millis(12));
+        assert_eq!(em.total_decode_wall(), Duration::from_millis(6));
         assert!(em.summary().contains("2 rounds"));
     }
 

@@ -10,15 +10,29 @@
 //!
 //! * [`transport`] — the wire: an in-process loopback with exact byte
 //!   accounting, and a TCP transport for running workers as separate
-//!   processes. One message format for both.
+//!   processes. One message format for both, one `framed_len` accounting
+//!   rule for both (so loopback and TCP report identical `bytes_moved`),
+//!   and `Arc`-shared broadcast payloads so fan-out never clones the
+//!   model state per worker.
 //! * [`worker`] — the client side: shard + update function + encoder.
-//! * [`leader`] — the server side: round barrier, decode, aggregate.
-//! * [`metrics`] — per-round and cumulative communication/latency metrics.
+//! * [`leader`] — the server side: round barrier + the streaming decode
+//!   pipeline. Uploads are decoded the moment they arrive, on a decode
+//!   pool that overlaps the barrier wait; the per-slot partials are then
+//!   merged in client-id order, so the outcome is bit-identical for any
+//!   arrival order and any decode-thread count (see
+//!   [`leader::aggregate_uploads_reference`], the retained sequential
+//!   specification).
+//! * [`metrics`] — per-round and cumulative communication/latency
+//!   metrics, including the barrier-wait vs decode-work split.
 //!
 //! Threading: plain `std::thread` + channels. The round barrier is the
 //! natural synchronization point of the paper's model (all clients answer
 //! every round — or stay silent under sampling, which the protocol layer
-//! decides); an async runtime would buy nothing here.
+//! decides); an async runtime would buy nothing here. The leader's decode
+//! pool is a per-round set of scoped threads fed by the receive loop —
+//! at millions-of-users scale the server's decode path, not the clients'
+//! encode path, is the bottleneck, and it parallelizes without touching
+//! the determinism contract.
 
 pub mod leader;
 pub mod metrics;

@@ -5,24 +5,36 @@
 //!
 //! * [`LoopbackHub`] — in-process channels; workers are threads. This is
 //!   the default for experiments: zero copies beyond the frames
-//!   themselves, deterministic, and every byte is still accounted as if it
+//!   themselves (broadcast payloads are `Arc`-shared, not cloned per
+//!   worker), deterministic, and every byte is still accounted as if it
 //!   had crossed a network.
 //! * [`TcpHub`] — a real socket transport (length-prefixed messages over
 //!   `std::net::TcpStream`), so workers can run as separate `dme worker`
-//!   processes on other machines.
+//!   processes on other machines. [`TcpHub::bind`] exposes the real
+//!   listen address before accepting, so tests can bind port 0.
 //!
 //! Wire format (identical for both transports, little-endian):
 //!
 //! ```text
 //! u8 tag | payload
-//! tag 1 RoundStart: u64 round, u32 n_vecs, u32 dim, then n_vecs*dim f32
+//! tag 1 RoundStart: u64 round, u32 n_floats, u32 dim (> 0),
+//!                   then n_floats f32 (the flattened broadcast payload;
+//!                   its length is serialized directly, so ragged
+//!                   payloads — n_floats not a multiple of dim — survive
+//!                   the wire unchanged)
 //! tag 2 Upload:     u64 client, u64 round, u32 n_frames,
 //!                   then per frame: u64 bit_len, u32 n_bytes, f32 weight, bytes
 //! tag 3 Shutdown
 //! ```
+//!
+//! On the wire every message is preceded by a u32 length prefix
+//! ([`Message::framed_len`] = serialized size + 4). *Both* hubs account
+//! `framed_len` per message, so a loopback run and a TCP run of the same
+//! experiment report identical `bytes_moved` — conformance-tested in
+//! `tests/coordinator_integration.rs`.
 
 use std::io::{BufReader, BufWriter, Read, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Mutex};
 
@@ -42,8 +54,10 @@ pub struct WeightedFrame {
 #[derive(Clone, Debug)]
 pub enum Message {
     /// Leader → workers: new round with the broadcast state
-    /// (`n_vecs` vectors of `dim` f32s, flattened).
-    RoundStart { round: u64, dim: u32, payload: Vec<f32> },
+    /// (`n_slots` vectors of `dim` f32s, flattened). The payload is
+    /// `Arc`-shared so broadcasting to n loopback workers clones a
+    /// pointer, not `n_slots × dim` floats per worker.
+    RoundStart { round: u64, dim: u32, payload: Arc<[f32]> },
     /// Worker → leader: the round's encoded updates. A worker that the
     /// sampling layer silenced still uploads an empty frame list (the
     /// leader needs the barrier).
@@ -53,18 +67,51 @@ pub enum Message {
 }
 
 impl Message {
-    /// Serialize to the wire format. Used by the TCP transport and by the
-    /// loopback accounting (so both report identical byte counts).
-    pub fn to_bytes(&self) -> Vec<u8> {
+    /// Check the wire-format invariants without serializing: everything
+    /// the serialize or parse path would reject (a length field over
+    /// `u32::MAX`, a `RoundStart` with `dim == 0`, a frame whose
+    /// `bit_len` overruns its bytes, a total size beyond the framing
+    /// cap). The loopback transport runs this on every send, so a
+    /// message that cannot cross TCP cannot cross loopback either —
+    /// transports never diverge on legality.
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            Message::RoundStart { dim, payload, .. } => {
+                ensure!(*dim > 0, "RoundStart dim must be > 0");
+                ensure_u32(payload.len())?;
+            }
+            Message::Upload { frames, .. } => {
+                ensure_u32(frames.len())?;
+                for wf in frames {
+                    ensure_u32(wf.frame.bytes.len())?;
+                    ensure!(
+                        wf.frame.bit_len <= wf.frame.bytes.len() as u64 * 8,
+                        "bit_len exceeds payload"
+                    );
+                }
+            }
+            Message::Shutdown => {}
+        }
+        // Same cap the receive path enforces (read_msg rejects frames
+        // over 1 GiB): catching it at send keeps the u32 length prefix
+        // from silently wrapping and desyncing the stream.
+        ensure!(self.wire_len() <= 1 << 30, "message too large for the wire format");
+        Ok(())
+    }
+
+    /// Serialize to the wire format. Used by the TCP transport and by
+    /// tests; the loopback transport accounts the same bytes via
+    /// [`Self::wire_len`]. Errors on whatever [`Self::validate`] rejects.
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        self.validate()?;
         let mut out = Vec::new();
         match self {
             Message::RoundStart { round, dim, payload } => {
                 out.push(1u8);
                 out.extend_from_slice(&round.to_le_bytes());
-                ensure_u32(payload.len() / *dim as usize);
-                out.extend_from_slice(&((payload.len() / *dim as usize) as u32).to_le_bytes());
+                out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
                 out.extend_from_slice(&dim.to_le_bytes());
-                for v in payload {
+                for v in payload.iter() {
                     out.extend_from_slice(&v.to_le_bytes());
                 }
             }
@@ -72,11 +119,9 @@ impl Message {
                 out.push(2u8);
                 out.extend_from_slice(&client.to_le_bytes());
                 out.extend_from_slice(&round.to_le_bytes());
-                ensure_u32(frames.len());
                 out.extend_from_slice(&(frames.len() as u32).to_le_bytes());
                 for wf in frames {
                     out.extend_from_slice(&wf.frame.bit_len.to_le_bytes());
-                    ensure_u32(wf.frame.bytes.len());
                     out.extend_from_slice(&(wf.frame.bytes.len() as u32).to_le_bytes());
                     out.extend_from_slice(&wf.weight.to_le_bytes());
                     out.extend_from_slice(&wf.frame.bytes);
@@ -84,7 +129,7 @@ impl Message {
             }
             Message::Shutdown => out.push(3u8),
         }
-        out
+        Ok(out)
     }
 
     /// Serialized size in bytes without materializing the buffer (the
@@ -106,6 +151,13 @@ impl Message {
         }
     }
 
+    /// On-the-wire size including the u32 length prefix every transport
+    /// frame carries. Both hubs account this, so loopback and TCP report
+    /// identical `bytes_moved` for identical traffic.
+    pub fn framed_len(&self) -> u64 {
+        self.wire_len() + 4
+    }
+
     /// Parse from the wire format.
     pub fn from_bytes(buf: &[u8]) -> Result<Self> {
         let mut c = Cursor { buf, pos: 0 };
@@ -113,19 +165,33 @@ impl Message {
         match tag {
             1 => {
                 let round = c.u64()?;
-                let n_vecs = c.u32()? as usize;
+                let n_floats = c.u32()? as usize;
                 let dim = c.u32()?;
-                let mut payload = Vec::with_capacity(n_vecs * dim as usize);
-                for _ in 0..n_vecs * dim as usize {
+                ensure!(dim > 0, "RoundStart dim must be > 0");
+                // Validate before allocating: a corrupt header must not
+                // reserve gigabytes.
+                ensure!(
+                    c.remaining() as u64 == n_floats as u64 * 4,
+                    "RoundStart payload length mismatch"
+                );
+                let mut payload = Vec::with_capacity(n_floats);
+                for _ in 0..n_floats {
                     payload.push(c.f32()?);
                 }
                 c.done()?;
-                Ok(Message::RoundStart { round, dim, payload })
+                Ok(Message::RoundStart { round, dim, payload: payload.into() })
             }
             2 => {
                 let client = c.u64()?;
                 let round = c.u64()?;
                 let n = c.u32()? as usize;
+                // Validate before allocating (as for RoundStart): every
+                // frame needs at least 16 header bytes, so a corrupt
+                // count cannot reserve gigabytes.
+                ensure!(
+                    n as u64 <= c.remaining() as u64 / 16,
+                    "Upload frame count exceeds message size"
+                );
                 let mut frames = Vec::with_capacity(n);
                 for _ in 0..n {
                     let bit_len = c.u64()?;
@@ -147,8 +213,12 @@ impl Message {
     }
 }
 
-fn ensure_u32(v: usize) {
-    assert!(v <= u32::MAX as usize, "field too large for wire format");
+/// Checked narrowing for wire-format length fields: an oversized frame is
+/// a serialization error the caller can surface, never a worker-thread
+/// panic.
+fn ensure_u32(v: usize) -> Result<u32> {
+    ensure!(v <= u32::MAX as usize, "field too large for wire format ({v} > u32::MAX)");
+    Ok(v as u32)
 }
 
 struct Cursor<'a> {
@@ -162,6 +232,9 @@ impl<'a> Cursor<'a> {
         let s = &self.buf[self.pos..self.pos + n];
         self.pos += n;
         Ok(s)
+    }
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
     }
     fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
@@ -215,7 +288,10 @@ pub struct LoopbackEndpoint {
 
 impl LoopbackEndpoint {
     pub fn send(&self, msg: Message) -> Result<()> {
-        *self.up_bytes.lock().unwrap() += msg.wire_len();
+        // Same legality as TCP: a message the wire format cannot carry
+        // must not slip through in-process either.
+        msg.validate()?;
+        *self.up_bytes.lock().unwrap() += msg.framed_len();
         self.tx.send(msg).context("leader hung up")
     }
     pub fn recv(&self) -> Result<Message> {
@@ -254,10 +330,24 @@ impl TransportHub for LoopbackHub {
     fn broadcast(&mut self, msg: &Message) -> Result<()> {
         // Account the broadcast once per worker (the paper's footnote 4
         // notes broadcast downlink can be cheaper; metrics report both).
-        self.down_bytes += msg.wire_len() * self.to_workers.len() as u64;
+        // The clone itself is cheap: RoundStart payloads are Arc-shared,
+        // so n workers share one allocation instead of n copies.
+        //
+        // Same legality as TCP (which validates inside write_msg).
+        msg.validate()?;
+        // Best-effort across endpoints: a worker that died mid-round must
+        // not prevent the others from receiving the message — Shutdown in
+        // particular — so send to every endpoint first and report the
+        // failure afterwards.
+        let mut any_dead = false;
         for tx in &self.to_workers {
-            tx.send(msg.clone()).context("worker hung up")?;
+            if tx.send(msg.clone()).is_ok() {
+                self.down_bytes += msg.framed_len();
+            } else {
+                any_dead = true;
+            }
         }
+        ensure!(!any_dead, "worker hung up");
         Ok(())
     }
 
@@ -275,7 +365,7 @@ impl TransportHub for LoopbackHub {
 // ---------------------------------------------------------------------------
 
 fn write_msg(stream: &mut impl Write, msg: &Message) -> Result<u64> {
-    let bytes = msg.to_bytes();
+    let bytes = msg.to_bytes()?;
     stream.write_all(&(bytes.len() as u32).to_le_bytes())?;
     stream.write_all(&bytes)?;
     stream.flush()?;
@@ -292,25 +382,29 @@ fn read_msg(stream: &mut impl Read) -> Result<(Message, u64)> {
     Ok((Message::from_bytes(&buf)?, len as u64 + 4))
 }
 
-/// TCP hub: listens, accepts `n` workers, then serves rounds.
-pub struct TcpHub {
-    writers: Vec<BufWriter<TcpStream>>,
-    from_workers: Receiver<Result<Message>>,
-    reader_threads: Vec<std::thread::JoinHandle<()>>,
-    down_bytes: u64,
-    up_bytes: Arc<Mutex<u64>>,
+/// A bound-but-not-yet-accepting TCP hub: created by [`TcpHub::bind`].
+/// Exposes the real listen address (essential after binding port 0, and
+/// the natural ready signal for tests — once `bind` returns, connects
+/// queue in the OS backlog even before [`Self::accept`] runs).
+pub struct TcpHubBinding {
+    listener: TcpListener,
 }
 
-impl TcpHub {
-    /// Bind `addr` and accept exactly `n` worker connections.
-    pub fn listen(addr: &str, n: usize) -> Result<Self> {
-        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+impl TcpHubBinding {
+    /// The address the listener actually bound (with the OS-assigned port
+    /// when the caller asked for port 0).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Accept exactly `n` worker connections and start serving.
+    pub fn accept(self, n: usize) -> Result<TcpHub> {
         let (tx, rx) = std::sync::mpsc::channel();
         let up_bytes = Arc::new(Mutex::new(0u64));
         let mut writers = Vec::with_capacity(n);
         let mut reader_threads = Vec::with_capacity(n);
         for i in 0..n {
-            let (stream, peer) = listener.accept().context("accepting worker")?;
+            let (stream, peer) = self.listener.accept().context("accepting worker")?;
             stream.set_nodelay(true).ok();
             let reader = stream.try_clone().context("cloning stream")?;
             writers.push(BufWriter::new(stream));
@@ -340,6 +434,29 @@ impl TcpHub {
     }
 }
 
+/// TCP hub: listens, accepts `n` workers, then serves rounds.
+pub struct TcpHub {
+    writers: Vec<BufWriter<TcpStream>>,
+    from_workers: Receiver<Result<Message>>,
+    reader_threads: Vec<std::thread::JoinHandle<()>>,
+    down_bytes: u64,
+    up_bytes: Arc<Mutex<u64>>,
+}
+
+impl TcpHub {
+    /// Bind `addr` without accepting yet; use [`TcpHubBinding::local_addr`]
+    /// to learn the real address (port 0 supported).
+    pub fn bind(addr: &str) -> Result<TcpHubBinding> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        Ok(TcpHubBinding { listener })
+    }
+
+    /// Bind `addr` and accept exactly `n` worker connections.
+    pub fn listen(addr: &str, n: usize) -> Result<Self> {
+        Self::bind(addr)?.accept(n)
+    }
+}
+
 impl Drop for TcpHub {
     fn drop(&mut self) {
         let _ = self.broadcast(&Message::Shutdown);
@@ -356,10 +473,24 @@ impl TransportHub for TcpHub {
     }
 
     fn broadcast(&mut self, msg: &Message) -> Result<()> {
+        // Best-effort like the loopback hub: write to every live worker
+        // before surfacing the first failure, so one dead connection
+        // cannot starve the others of Shutdown.
+        let mut first_err = None;
         for w in &mut self.writers {
-            self.down_bytes += write_msg(w, msg)?;
+            match write_msg(w, msg) {
+                Ok(n) => self.down_bytes += n,
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
         }
-        Ok(())
+        match first_err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
     }
 
     fn recv(&mut self) -> Result<Message> {
@@ -403,10 +534,47 @@ mod tests {
         WeightedFrame { frame: Frame::new(bytes, bits), weight: 2.5 }
     }
 
-    #[test]
-    fn message_roundtrip_all_variants() {
-        let msgs = vec![
-            Message::RoundStart { round: 7, dim: 2, payload: vec![1.0, -2.0, 3.5, 0.0] },
+    fn assert_roundtrip(m: &Message) {
+        let bytes = m.to_bytes().unwrap();
+        let back = Message::from_bytes(&bytes).unwrap();
+        match (m, &back) {
+            (
+                Message::RoundStart { round: r1, dim: d1, payload: p1 },
+                Message::RoundStart { round: r2, dim: d2, payload: p2 },
+            ) => {
+                assert_eq!((r1, d1), (r2, d2));
+                assert_eq!(&p1[..], &p2[..]);
+            }
+            (
+                Message::Upload { client: c1, round: r1, frames: f1 },
+                Message::Upload { client: c2, round: r2, frames: f2 },
+            ) => {
+                assert_eq!((c1, r1), (c2, r2));
+                assert_eq!(f1.len(), f2.len());
+                for (a, b) in f1.iter().zip(f2) {
+                    assert_eq!(a.frame.bytes, b.frame.bytes);
+                    assert_eq!(a.frame.bit_len, b.frame.bit_len);
+                    assert_eq!(a.weight, b.weight);
+                }
+            }
+            (Message::Shutdown, Message::Shutdown) => {}
+            _ => panic!("variant mismatch"),
+        }
+    }
+
+    /// Every message shape the leader (or a worker) can legally build:
+    /// the wire format must round-trip each of them exactly.
+    fn legal_messages() -> Vec<Message> {
+        vec![
+            Message::RoundStart { round: 7, dim: 2, payload: vec![1.0, -2.0, 3.5, 0.0].into() },
+            // Ragged payload: length not a multiple of dim. The leader
+            // sends these legally (e.g. a single d-vector broadcast with
+            // protocol-internal dim); the header counts floats, not
+            // vectors, so nothing is truncated or rejected.
+            Message::RoundStart { round: 1, dim: 2, payload: vec![9.0, 1.0, 3.5].into() },
+            // Payload shorter than one vector, and an empty payload.
+            Message::RoundStart { round: 2, dim: 7, payload: vec![4.0].into() },
+            Message::RoundStart { round: 3, dim: 64, payload: Vec::new().into() },
             Message::Upload {
                 client: 3,
                 round: 7,
@@ -414,39 +582,65 @@ mod tests {
             },
             Message::Upload { client: 0, round: 0, frames: vec![] },
             Message::Shutdown,
-        ];
-        for m in msgs {
-            let bytes = m.to_bytes();
-            let back = Message::from_bytes(&bytes).unwrap();
-            match (&m, &back) {
-                (
-                    Message::RoundStart { round: r1, dim: d1, payload: p1 },
-                    Message::RoundStart { round: r2, dim: d2, payload: p2 },
-                ) => {
-                    assert_eq!((r1, d1, p1), (r2, d2, p2));
-                }
-                (
-                    Message::Upload { client: c1, round: r1, frames: f1 },
-                    Message::Upload { client: c2, round: r2, frames: f2 },
-                ) => {
-                    assert_eq!((c1, r1), (c2, r2));
-                    assert_eq!(f1.len(), f2.len());
-                    for (a, b) in f1.iter().zip(f2) {
-                        assert_eq!(a.frame.bytes, b.frame.bytes);
-                        assert_eq!(a.frame.bit_len, b.frame.bit_len);
-                        assert_eq!(a.weight, b.weight);
-                    }
-                }
-                (Message::Shutdown, Message::Shutdown) => {}
-                _ => panic!("variant mismatch"),
-            }
+        ]
+    }
+
+    #[test]
+    fn message_roundtrip_all_variants() {
+        for m in legal_messages() {
+            assert_roundtrip(&m);
         }
+    }
+
+    #[test]
+    fn ragged_round_start_roundtrips() {
+        // Regression: the old header encoded payload.len()/dim, so a
+        // payload that was not a multiple of dim serialized more floats
+        // than the header admitted and from_bytes failed with "trailing
+        // bytes" — fine over loopback (which never serializes), broken
+        // over TCP.
+        let m = Message::RoundStart { round: 5, dim: 3, payload: vec![1.0, 2.0, 3.0, 4.0].into() };
+        assert_roundtrip(&m);
+    }
+
+    #[test]
+    fn round_start_dim_zero_rejected() {
+        let m = Message::RoundStart { round: 0, dim: 0, payload: vec![1.0].into() };
+        assert!(m.to_bytes().is_err(), "dim == 0 must not serialize");
+        // Loopback enforces the same legality as TCP: the invalid
+        // message is rejected by both hub directions, not just by
+        // serialization.
+        let (mut hub, eps) = LoopbackHub::new(1);
+        assert!(hub.broadcast(&m).is_err());
+        assert!(eps[0].send(m).is_err());
+        // And a handcrafted dim-0 header must not parse (it used to
+        // divide by zero before reaching any check).
+        let mut bytes = Vec::new();
+        bytes.push(1u8);
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // round
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // n_floats
+        bytes.extend_from_slice(&0u32.to_le_bytes()); // dim = 0
+        bytes.extend_from_slice(&1.0f32.to_le_bytes());
+        assert!(Message::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn oversized_fields_error_instead_of_panicking() {
+        // An oversized length field must surface as Err from to_bytes,
+        // never assert/panic the sending thread. Exercising it end to end
+        // would need a >4 GiB allocation, so test the guard at its exact
+        // boundary plus a legal message through the checked path.
+        assert!(ensure_u32(u32::MAX as usize).is_ok());
+        assert!(ensure_u32(u32::MAX as usize + 1).is_err());
+        let m = Message::Upload { client: 1, round: 1, frames: vec![frame(vec![1, 2, 3], 20)] };
+        assert!(m.to_bytes().is_ok());
     }
 
     #[test]
     fn wire_len_matches_serialization() {
         let msgs = vec![
-            Message::RoundStart { round: 7, dim: 3, payload: vec![1.0; 9] },
+            Message::RoundStart { round: 7, dim: 3, payload: vec![1.0; 9].into() },
+            Message::RoundStart { round: 7, dim: 3, payload: vec![1.0; 10].into() },
             Message::Upload {
                 client: 3,
                 round: 7,
@@ -456,7 +650,8 @@ mod tests {
             Message::Shutdown,
         ];
         for m in msgs {
-            assert_eq!(m.wire_len(), m.to_bytes().len() as u64);
+            assert_eq!(m.wire_len(), m.to_bytes().unwrap().len() as u64);
+            assert_eq!(m.framed_len(), m.wire_len() + 4);
         }
     }
 
@@ -466,10 +661,23 @@ mod tests {
         assert!(Message::from_bytes(&[9]).is_err());
         assert!(Message::from_bytes(&[1, 0]).is_err()); // truncated
         // trailing garbage
-        let mut ok = Message::Shutdown.to_bytes();
+        let mut ok = Message::Shutdown.to_bytes().unwrap();
         ok.push(0);
         assert!(Message::from_bytes(&ok).is_err());
-        // bit_len > bytes
+        // RoundStart header/payload length mismatch (one float missing)
+        let full =
+            Message::RoundStart { round: 0, dim: 1, payload: vec![1.0, 2.0].into() };
+        let mut bytes = full.to_bytes().unwrap();
+        bytes.truncate(bytes.len() - 4);
+        assert!(Message::from_bytes(&bytes).is_err());
+        // Upload frame count larger than the message could possibly hold
+        // (must be rejected before any allocation happens).
+        let mut bytes = vec![2u8];
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // client
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // round
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes()); // n_frames
+        assert!(Message::from_bytes(&bytes).is_err());
+        // bit_len > bytes*8: rejected on send (validate) and on parse.
         let bad = Message::Upload {
             client: 0,
             round: 0,
@@ -478,21 +686,31 @@ mod tests {
                 weight: 1.0,
             }],
         };
-        assert!(Message::from_bytes(&bad.to_bytes()).is_err());
+        assert!(bad.to_bytes().is_err());
+        let mut bytes = vec![2u8];
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // client
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // round
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // n_frames
+        bytes.extend_from_slice(&9u64.to_le_bytes()); // bit_len
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // n_bytes
+        bytes.extend_from_slice(&1.0f32.to_le_bytes()); // weight
+        bytes.push(1);
+        assert!(Message::from_bytes(&bytes).is_err());
     }
 
     #[test]
-    fn loopback_accounts_bytes_exactly() {
+    fn loopback_accounts_framed_bytes_exactly() {
         let (mut hub, eps) = LoopbackHub::new(3);
-        let msg = Message::RoundStart { round: 0, dim: 4, payload: vec![0.0; 4] };
-        let msg_len = msg.to_bytes().len() as u64;
+        let msg = Message::RoundStart { round: 0, dim: 4, payload: vec![0.0; 4].into() };
+        let msg_len = msg.framed_len();
+        assert_eq!(msg_len, msg.to_bytes().unwrap().len() as u64 + 4);
         hub.broadcast(&msg).unwrap();
         for ep in &eps {
             let got = ep.recv().unwrap();
             matches!(got, Message::RoundStart { .. });
         }
         let up_msg = Message::Upload { client: 1, round: 0, frames: vec![] };
-        let up_len = up_msg.to_bytes().len() as u64;
+        let up_len = up_msg.framed_len();
         eps[1].send(up_msg).unwrap();
         hub.recv().unwrap();
         let (down, up) = hub.bytes_moved();
@@ -501,11 +719,41 @@ mod tests {
     }
 
     #[test]
+    fn broadcast_payload_is_shared_not_cloned() {
+        let (mut hub, eps) = LoopbackHub::new(4);
+        let payload: Arc<[f32]> = vec![1.0f32; 64].into();
+        let msg = Message::RoundStart { round: 0, dim: 8, payload: payload.clone() };
+        hub.broadcast(&msg).unwrap();
+        for ep in &eps {
+            match ep.recv().unwrap() {
+                Message::RoundStart { payload: p, .. } => {
+                    assert!(
+                        Arc::ptr_eq(&p, &payload),
+                        "loopback broadcast must share the payload allocation"
+                    );
+                }
+                _ => panic!("expected RoundStart"),
+            }
+        }
+    }
+
+    #[test]
     fn tcp_hub_round_trip() {
-        let hub_thread = std::thread::spawn(|| {
-            let mut hub = TcpHub::listen("127.0.0.1:47231", 2).unwrap();
-            hub.broadcast(&Message::RoundStart { round: 1, dim: 1, payload: vec![9.0] })
-                .unwrap();
+        // Bind port 0 and read the real address back — no hardcoded port
+        // (parallel test runs collide), no sleep (the bound listener is
+        // the ready signal: connects queue in the backlog before accept).
+        let binding = TcpHub::bind("127.0.0.1:0").unwrap();
+        let addr = binding.local_addr().unwrap();
+        let hub_thread = std::thread::spawn(move || {
+            let mut hub = binding.accept(2).unwrap();
+            // Ragged payload over real sockets: regression for the
+            // n_vecs-based header.
+            hub.broadcast(&Message::RoundStart {
+                round: 1,
+                dim: 2,
+                payload: vec![9.0, 1.0, 3.5].into(),
+            })
+            .unwrap();
             let mut clients = Vec::new();
             for _ in 0..2 {
                 if let Message::Upload { client, .. } = hub.recv().unwrap() {
@@ -516,15 +764,14 @@ mod tests {
             hub.broadcast(&Message::Shutdown).unwrap();
             (clients, hub.bytes_moved())
         });
-        std::thread::sleep(std::time::Duration::from_millis(100));
         let mut workers = Vec::new();
         for id in 0..2u64 {
             workers.push(std::thread::spawn(move || {
-                let mut ep = TcpEndpoint::connect("127.0.0.1:47231").unwrap();
+                let mut ep = TcpEndpoint::connect(&addr.to_string()).unwrap();
                 match ep.recv().unwrap() {
                     Message::RoundStart { round, payload, .. } => {
                         assert_eq!(round, 1);
-                        assert_eq!(payload, vec![9.0]);
+                        assert_eq!(&payload[..], &[9.0, 1.0, 3.5]);
                     }
                     _ => panic!("expected RoundStart"),
                 }
@@ -543,5 +790,36 @@ mod tests {
         }
         assert_eq!(clients, vec![0, 1]);
         assert!(down > 0 && up > 0);
+    }
+
+    #[test]
+    fn every_legal_message_survives_tcp() {
+        // The serialization regression suite, but over real sockets: each
+        // legal message is framed, written, read, and parsed back.
+        let binding = TcpHub::bind("127.0.0.1:0").unwrap();
+        let addr = binding.local_addr().unwrap();
+        let msgs = legal_messages();
+        let n_msgs = msgs.len();
+        let echo = std::thread::spawn(move || {
+            let (stream, _) = binding.listener.accept().unwrap();
+            let mut r = BufReader::new(stream.try_clone().unwrap());
+            let mut received = Vec::new();
+            for _ in 0..n_msgs {
+                received.push(read_msg(&mut r).unwrap().0);
+            }
+            received
+        });
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut w = BufWriter::new(stream);
+        for m in &msgs {
+            write_msg(&mut w, m).unwrap();
+        }
+        drop(w);
+        let received = echo.join().unwrap();
+        assert_eq!(received.len(), msgs.len());
+        for (sent, got) in msgs.iter().zip(&received) {
+            // Compare via the canonical serialization.
+            assert_eq!(sent.to_bytes().unwrap(), got.to_bytes().unwrap());
+        }
     }
 }

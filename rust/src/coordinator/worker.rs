@@ -8,6 +8,7 @@ use anyhow::{bail, Result};
 
 use super::transport::{LoopbackEndpoint, Message, WeightedFrame};
 use crate::protocol::{Encoder, Protocol, RoundCtx};
+use crate::rng;
 
 /// The application hook: given the broadcast state (`n_vecs × dim`,
 /// flattened) and the worker's local shard, produce the update vectors to
@@ -28,8 +29,10 @@ pub struct Worker {
 }
 
 impl Worker {
-    /// Compute and encode this round's upload.
-    pub fn step(&self, round: u64, dim: u32, broadcast: &[f32]) -> Message {
+    /// Compute and encode this round's upload. Errors if the client id
+    /// cannot be combined with a slot index into a collision-free
+    /// private-stream id (see [`rng::client_slot_stream_id`]).
+    pub fn step(&self, round: u64, dim: u32, broadcast: &[f32]) -> Result<Message> {
         let ctx = RoundCtx::new(round, self.seed);
         // One round session per step: the shared state (the rotation for
         // π_srk) is prepared once and reused across every slot, and the
@@ -40,10 +43,11 @@ impl Worker {
         let mut frames = Vec::with_capacity(updates.len());
         for (slot, (vec, weight)) in updates.into_iter().enumerate() {
             debug_assert_eq!(vec.len(), self.protocol.dim(), "update has wrong dim");
-            // Each slot (e.g. cluster index) gets its own private stream so
-            // rounding noise is independent across slots: fold the slot
-            // into the client id (ids are dense and < 2^32 in practice).
-            let stream_id = self.client_id | ((slot as u64) << 40);
+            // Each slot (e.g. cluster index) gets its own private stream
+            // so rounding noise is independent across slots. The packing
+            // is checked: an out-of-range client id is an explicit error,
+            // never a silent merge of two clients' randomness streams.
+            let stream_id = rng::client_slot_stream_id(self.client_id, slot as u64)?;
             if let Some(frame) = enc.encode(stream_id, &vec) {
                 frames.push(WeightedFrame { frame, weight });
             } else {
@@ -55,7 +59,7 @@ impl Worker {
                 });
             }
         }
-        Message::Upload { client: self.client_id, round, frames }
+        Ok(Message::Upload { client: self.client_id, round, frames })
     }
 
     /// Run the worker loop over a loopback endpoint until Shutdown.
@@ -63,7 +67,17 @@ impl Worker {
         loop {
             match ep.recv()? {
                 Message::RoundStart { round, dim, payload } => {
-                    ep.send(self.step(round, dim, &payload))?;
+                    match self.step(round, dim, &payload) {
+                        Ok(reply) => ep.send(reply)?,
+                        Err(e) => {
+                            // Wake the leader's barrier before dying: an
+                            // unexpected Shutdown from a worker makes the
+                            // leader error out instead of waiting forever
+                            // for an upload that will never come.
+                            let _ = ep.send(Message::Shutdown);
+                            return Err(e);
+                        }
+                    }
                 }
                 Message::Shutdown => return Ok(()),
                 Message::Upload { .. } => bail!("worker received an Upload message"),
@@ -77,8 +91,17 @@ impl Worker {
         loop {
             match ep.recv()? {
                 Message::RoundStart { round, dim, payload } => {
-                    let reply = self.step(round, dim, &payload);
-                    ep.send(&reply)?;
+                    match self.step(round, dim, &payload) {
+                        Ok(reply) => ep.send(&reply)?,
+                        Err(e) => {
+                            // Same barrier-wakeup as the loopback path: a
+                            // lone dead worker does not close the leader's
+                            // upload channel (other readers keep it open),
+                            // so signal explicitly before exiting.
+                            let _ = ep.send(&Message::Shutdown);
+                            return Err(e);
+                        }
+                    }
                 }
                 Message::Shutdown => return Ok(()),
                 Message::Upload { .. } => bail!("worker received an Upload message"),
@@ -114,7 +137,7 @@ mod tests {
             update: mean_update(),
             seed: 1,
         };
-        match w.step(0, 8, &[]) {
+        match w.step(0, 8, &[]).unwrap() {
             Message::Upload { client, round, frames } => {
                 assert_eq!(client, 3);
                 assert_eq!(round, 0);
@@ -127,6 +150,22 @@ mod tests {
     }
 
     #[test]
+    fn out_of_range_client_id_errors_instead_of_aliasing() {
+        // client_id = 2^40 used to silently collide with (client 0,
+        // slot 1) in the stream-id packing, merging private randomness
+        // across clients; it must now be an explicit error.
+        let proto = ProtocolConfig::parse("klevel:k=4", 8).unwrap().build().unwrap();
+        let w = Worker {
+            client_id: 1 << 40,
+            shard: vec![vec![1.0; 8]],
+            protocol: proto,
+            update: mean_update(),
+            seed: 1,
+        };
+        assert!(w.step(0, 8, &[]).is_err());
+    }
+
+    #[test]
     fn empty_shard_uploads_nothing() {
         let proto = ProtocolConfig::parse("binary", 4).unwrap().build().unwrap();
         let w = Worker {
@@ -136,7 +175,7 @@ mod tests {
             update: mean_update(),
             seed: 1,
         };
-        match w.step(0, 4, &[]) {
+        match w.step(0, 4, &[]).unwrap() {
             Message::Upload { frames, .. } => assert!(frames.is_empty()),
             _ => panic!("expected Upload"),
         }
@@ -150,8 +189,9 @@ mod tests {
         let update: UpdateFn = Arc::new(|_, _, _| {
             vec![(vec![0.3; 8], 1.0), (vec![0.3; 8], 1.0)]
         });
-        let w = Worker { client_id: 1, shard: vec![vec![0.0; 8]], protocol: proto, update, seed: 5 };
-        match w.step(0, 8, &[]) {
+        let w =
+            Worker { client_id: 1, shard: vec![vec![0.0; 8]], protocol: proto, update, seed: 5 };
+        match w.step(0, 8, &[]).unwrap() {
             Message::Upload { frames, .. } => {
                 assert_eq!(frames.len(), 2);
                 // constant vectors quantize exactly -> frames equal; use a
@@ -165,7 +205,7 @@ mod tests {
             vec![(v.clone(), 1.0), (v, 1.0)]
         });
         let w2 = Worker { client_id: 1, shard: vec![], protocol: proto2, update: update2, seed: 5 };
-        match w2.step(0, 8, &[]) {
+        match w2.step(0, 8, &[]).unwrap() {
             Message::Upload { frames, .. } => {
                 assert_ne!(frames[0].frame.bytes, frames[1].frame.bytes);
             }

@@ -78,5 +78,5 @@ pub mod testkit;
 
 pub use protocol::{
     run_round, run_round_par, Accumulator, Decoder, EncodeScratch, Encoder, Frame, Protocol,
-    RoundCtx, RoundState,
+    RoundCtx, RoundState, SlotPartial,
 };

@@ -6,6 +6,7 @@
 //! dme kmeans   --data mnist --clients 10 --centers 10 --iters 10 --protocol varlen
 //! dme power    --data cifar --clients 100 --iters 10 --protocol rotated:k=32
 //! dme serve    --addr 0.0.0.0:7070 --workers 4 --dim 256 --protocol varlen --rounds 10
+//!              [--decode-threads N]   (0 = all cores; any value is bit-identical)
 //! dme worker   --connect host:7070 --dim 256 --protocol varlen [--points 100]
 //! dme info
 //! ```
@@ -44,7 +45,9 @@ fn real_main() -> Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("worker") => cmd_worker(&args),
         Some("info") => cmd_info(&args),
-        Some(other) => bail!("unknown command `{other}` (try: estimate kmeans power serve worker info)"),
+        Some(other) => {
+            bail!("unknown command `{other}` (try: estimate kmeans power serve worker info)")
+        }
         None => {
             println!("{}", HELP);
             Ok(())
@@ -197,11 +200,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let dim = args.get("dim", 256usize)?;
     let rounds = args.get("rounds", 10u64)?;
     let seed = args.get("seed", 42u64)?;
+    // Width of the leader's streaming decode pool; 0 = one per core.
+    // Every value produces bit-identical round outcomes.
+    let decode_threads = match args.get("decode-threads", 1usize)? {
+        0 => std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+        n => n,
+    };
     let proto = build_protocol(args, dim)?;
     args.reject_unknown()?;
-    println!("leader: listening on {addr} for {n_workers} workers ({})", proto.name());
+    println!(
+        "leader: listening on {addr} for {n_workers} workers ({}, {decode_threads} decode threads)",
+        proto.name()
+    );
     let hub = TcpHub::listen(&addr, n_workers)?;
-    let mut leader = Leader::new(proto, Box::new(hub), seed);
+    let mut leader = Leader::new(proto, Box::new(hub), seed).with_decode_threads(decode_threads);
     for r in 0..rounds {
         let out = leader.round(r, dim as u32, &[])?;
         println!(

@@ -55,7 +55,12 @@ impl Protocol for Float32Protocol {
         Accumulator::new(self.dim)
     }
 
-    fn accumulate_with(&self, _state: &RoundState, frame: &Frame, acc: &mut Accumulator) -> Result<()> {
+    fn accumulate_with(
+        &self,
+        _state: &RoundState,
+        frame: &Frame,
+        acc: &mut Accumulator,
+    ) -> Result<()> {
         ensure!(acc.sum.len() == self.dim, "accumulator dimension mismatch");
         ensure!(frame.bit_len >= self.frame_bits(), "frame too short");
         let mut r = BitReader::with_bit_len(&frame.bytes, frame.bit_len);

@@ -154,7 +154,12 @@ impl Protocol for KLevelProtocol {
         Accumulator::new(self.dim)
     }
 
-    fn accumulate_with(&self, _state: &RoundState, frame: &Frame, acc: &mut Accumulator) -> Result<()> {
+    fn accumulate_with(
+        &self,
+        _state: &RoundState,
+        frame: &Frame,
+        acc: &mut Accumulator,
+    ) -> Result<()> {
         ensure!(acc.sum.len() == self.dim, "accumulator dimension mismatch");
         Self::read_frame_into(
             &self.header,

@@ -31,7 +31,11 @@
 //!    [`Accumulator`] without per-frame allocation. Weighted frames are
 //!    combined in the protocol's *internal* space (e.g. the rotated,
 //!    padded space), so the inverse rotation runs once per round, not
-//!    once per frame.
+//!    once per frame. When frames arrive out of order (the leader's
+//!    streaming pipeline), each frame can be pre-decoded on any thread
+//!    into a [`SlotPartial`] and later folded with
+//!    [`Decoder::push_partial`] in client-id order — bit-identical to
+//!    decoding in place.
 //! 4. **finish** — [`Decoder::finish`] / [`Decoder::finish_weighted`]
 //!    divide by the effective count and undo any preprocessing (one
 //!    inverse rotation for π_srk).
@@ -57,6 +61,18 @@
 //! thread count therefore produces **bit-identical** estimates — the
 //! leader relies on the same rule when it decodes uploads in client-id
 //! order regardless of arrival order.
+//!
+//! The leader's streaming pipeline extends the rule to *decode* work:
+//! every protocol's `accumulate_with` is a per-coordinate `+=` into the
+//! accumulator, so decoding a frame into a fresh zeroed accumulator (a
+//! [`SlotPartial`], on whichever decode thread picks it up first) and
+//! folding the partial later adds `0.0 + v` where in-place decoding
+//! would have added `v`. Those are the same f32 ops bit-for-bit: an f32
+//! running sum that starts at `+0.0` can never become `-0.0` (IEEE 754
+//! round-to-nearest returns `+0.0` for any exact cancellation), so the
+//! extra `+0.0` is always the identity. Only the *fold order* of
+//! partials matters, and [`Decoder::push_partial`] requires client-id
+//! order — decode scheduling is free.
 
 pub mod binary;
 pub mod config;
@@ -473,6 +489,67 @@ impl<'a> Decoder<'a> {
         }
         self.acc
     }
+
+    /// Fold a pre-decoded partial. Pushing partials in client-id order is
+    /// bit-identical to having called [`Self::push`] (weight 1) or
+    /// [`Self::push_weighted`] on the original frames in that same order
+    /// — see the module-level determinism notes for why.
+    pub fn push_partial(&mut self, part: &SlotPartial) {
+        debug_assert_eq!(part.acc.sum.len(), self.acc.sum.len(), "partial dimension mismatch");
+        if part.weight == 1.0 {
+            // Mirrors push(): accumulate_with is a per-coordinate `+=`,
+            // and the protocol decides whether a frame bumps acc.frames,
+            // so carry the partial's count rather than assuming 1.
+            for (a, &v) in self.acc.sum.iter_mut().zip(&part.acc.sum) {
+                *a += v;
+            }
+            self.acc.frames += part.acc.frames;
+            self.total_weight += 1.0;
+        } else {
+            // Mirrors push_weighted(): fold weight-scaled into the f64
+            // running sum; the scratch decode's frame count is dropped
+            // and the decoder counts exactly one frame.
+            let wsum = {
+                let dim = part.acc.sum.len();
+                self.wsum.get_or_insert_with(|| vec![0.0f64; dim])
+            };
+            for (a, &v) in wsum.iter_mut().zip(&part.acc.sum) {
+                *a += part.weight as f64 * v as f64;
+            }
+            self.acc.frames += 1;
+            self.total_weight += part.weight as f64;
+        }
+        self.frames += 1;
+    }
+}
+
+/// One frame decoded into its own zeroed accumulator, tagged with its
+/// aggregation weight: the unit of the leader's streaming pipeline. The
+/// expensive half of server-side work (bit unpacking + dequantization)
+/// happens here, on any thread, in any arrival order; the cheap f32/f64
+/// fold is deferred to a deterministic client-id-ordered
+/// [`Decoder::push_partial`] pass at the round barrier.
+#[derive(Clone, Debug)]
+pub struct SlotPartial {
+    /// The decoded frame, in the protocol's internal space.
+    pub acc: Accumulator,
+    /// The frame's aggregation weight (1.0 for plain means).
+    pub weight: f32,
+}
+
+impl SlotPartial {
+    /// Decode one frame into a fresh partial. Shares only the immutable
+    /// round `state`, so decodes of different frames can run concurrently.
+    pub fn decode(
+        proto: &dyn Protocol,
+        state: &RoundState,
+        frame: &Frame,
+        weight: f32,
+    ) -> Result<Self> {
+        let mut acc = proto.new_accumulator();
+        proto.accumulate_with(state, frame, &mut acc)?;
+        Ok(SlotPartial { acc, weight })
+    }
 }
 
 /// Shard count of the round engine. The f32 merge tree depends only on
@@ -707,6 +784,59 @@ mod tests {
                 "coord {j}: {} vs {want}",
                 est[j]
             );
+        }
+    }
+
+    #[test]
+    fn push_partial_bit_identical_to_streaming_push() {
+        // The leader's streaming-merge contract: pre-decoding frames into
+        // SlotPartials (in any order) and folding them in client order
+        // must reproduce the in-place push/push_weighted bits exactly,
+        // for uniform, weighted, and mixed-weight slots.
+        let d = 48;
+        let xs = gaussian_clients(5, d, 17);
+        for spec in ["float32", "binary", "klevel:k=16", "rotated:k=16", "varlen:k=8", "qsgd:k=8"] {
+            let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+            let ctx = RoundCtx::new(3, 29);
+            let state = proto.prepare(&ctx);
+            let mut enc = Encoder::new(proto.as_ref(), &state);
+            let frames: Vec<Frame> =
+                (0..5).map(|i| enc.encode(i as u64, &xs[i]).unwrap()).collect();
+            for weights in [vec![1.0f32; 5], vec![2.0, 1.0, 0.5, 4.0, 1.0]] {
+                let uniform = weights.iter().all(|&w| w == 1.0);
+                // In-place streaming decode, client order (the reference).
+                let mut dec = Decoder::new(proto.as_ref(), &state);
+                for (f, &w) in frames.iter().zip(&weights) {
+                    if uniform {
+                        dec.push(f).unwrap();
+                    } else {
+                        dec.push_weighted(f, w).unwrap();
+                    }
+                }
+                // Pre-decode in reverse order, fold in client order.
+                let parts: Vec<SlotPartial> = frames
+                    .iter()
+                    .zip(&weights)
+                    .rev()
+                    .map(|(f, &w)| SlotPartial::decode(proto.as_ref(), &state, f, w).unwrap())
+                    .collect();
+                let mut dec_p = Decoder::new(proto.as_ref(), &state);
+                for p in parts.iter().rev() {
+                    dec_p.push_partial(p);
+                }
+                assert_eq!(dec_p.frames(), dec.frames(), "spec={spec}");
+                assert_eq!(dec_p.total_weight(), dec.total_weight(), "spec={spec}");
+                let (a, b) = if uniform {
+                    (dec.finish(5), dec_p.finish(5))
+                } else {
+                    (dec.finish_weighted(), dec_p.finish_weighted())
+                };
+                assert_eq!(
+                    a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    b.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "spec={spec} uniform={uniform}: partial fold diverges"
+                );
+            }
         }
     }
 

@@ -84,7 +84,12 @@ impl Protocol for QsgdProtocol {
         Accumulator::new(self.dim)
     }
 
-    fn accumulate_with(&self, _state: &RoundState, frame: &Frame, acc: &mut Accumulator) -> Result<()> {
+    fn accumulate_with(
+        &self,
+        _state: &RoundState,
+        frame: &Frame,
+        acc: &mut Accumulator,
+    ) -> Result<()> {
         ensure!(acc.sum.len() == self.dim, "accumulator dimension mismatch");
         let mut r = BitReader::with_bit_len(&frame.bytes, frame.bit_len);
         let norm = self.header.get(&mut r)?;

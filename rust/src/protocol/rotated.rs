@@ -139,7 +139,12 @@ impl Protocol for RotatedProtocol {
         Accumulator::new(self.padded)
     }
 
-    fn accumulate_with(&self, _state: &RoundState, frame: &Frame, acc: &mut Accumulator) -> Result<()> {
+    fn accumulate_with(
+        &self,
+        _state: &RoundState,
+        frame: &Frame,
+        acc: &mut Accumulator,
+    ) -> Result<()> {
         ensure!(acc.sum.len() == self.padded, "accumulator dimension mismatch");
         KLevelProtocol::read_frame_into(
             &self.header,

@@ -68,7 +68,12 @@ impl Protocol for SampledProtocol {
         self.inner.new_accumulator()
     }
 
-    fn accumulate_with(&self, state: &RoundState, frame: &Frame, acc: &mut Accumulator) -> Result<()> {
+    fn accumulate_with(
+        &self,
+        state: &RoundState,
+        frame: &Frame,
+        acc: &mut Accumulator,
+    ) -> Result<()> {
         self.inner.accumulate_with(state.inner_state(), frame, acc)
     }
 

@@ -151,7 +151,12 @@ impl Protocol for VarlenProtocol {
         Accumulator::new(self.dim)
     }
 
-    fn accumulate_with(&self, _state: &RoundState, frame: &Frame, acc: &mut Accumulator) -> Result<()> {
+    fn accumulate_with(
+        &self,
+        _state: &RoundState,
+        frame: &Frame,
+        acc: &mut Accumulator,
+    ) -> Result<()> {
         ensure!(acc.sum.len() == self.dim, "accumulator dimension mismatch");
         let mut r = BitReader::with_bit_len(&frame.bytes, frame.bit_len);
         let xmin = self.header.get(&mut r)?;
@@ -290,7 +295,8 @@ mod tests {
         crate::testkit::run_prop("varlen_roundtrip", 40, |g| {
             let d = g.usize_in(2..=200);
             let k = g.u32_in(2..=40);
-            let coder = if g.rng().next_u32() & 1 == 0 { Coder::Arithmetic } else { Coder::Huffman };
+            let coder =
+                if g.rng().next_u32() & 1 == 0 { Coder::Arithmetic } else { Coder::Huffman };
             let proto = VarlenProtocol::new(d, k).with_coder(coder);
             let x = g.vec_f32(d..=d, -3.0, 3.0);
             let ctx = RoundCtx::new(g.rng().next_u64(), g.rng().next_u64());

@@ -75,6 +75,32 @@ pub fn private_stream(seed: u64, round: u64, client: u64) -> Pcg64 {
     Pcg64::new(mix(&[seed, PRIVATE_TAG, round, client]))
 }
 
+/// Bits of a combined stream id reserved for the client id (the low
+/// field); the remaining high bits carry the upload slot index. See
+/// [`client_slot_stream_id`].
+pub const CLIENT_ID_BITS: u32 = 40;
+/// Bits of a combined stream id reserved for the slot index.
+pub const SLOT_BITS: u32 = 64 - CLIENT_ID_BITS;
+
+/// Pack a client id and an upload slot index into a single private-stream
+/// id with disjoint bit fields, so every `(client, slot)` pair owns a
+/// distinct randomness stream. The packing is *checked*: a field that
+/// overflows its budget is an explicit error, never a silent collision
+/// that would merge two clients' (or two slots') private streams — a
+/// correctness and privacy bug, not just noise.
+pub fn client_slot_stream_id(client: u64, slot: u64) -> anyhow::Result<u64> {
+    anyhow::ensure!(
+        client < 1u64 << CLIENT_ID_BITS,
+        "client id {client} does not fit the {CLIENT_ID_BITS}-bit stream-id field; \
+         ids this large would alias another client's private randomness"
+    );
+    anyhow::ensure!(
+        slot < 1u64 << SLOT_BITS,
+        "slot index {slot} does not fit the {SLOT_BITS}-bit stream-id field"
+    );
+    Ok(client | (slot << CLIENT_ID_BITS))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,5 +136,32 @@ mod tests {
         let mut a = public_stream(7, 0);
         let mut b = public_stream(7, 1);
         assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn client_slot_stream_ids_are_injective() {
+        // Distinct (client, slot) pairs map to distinct ids — including
+        // the pairs the old unchecked `client | slot << 40` packing
+        // collided on (client ids with bits at or above position 40).
+        let mut seen = std::collections::HashSet::new();
+        for client in [0u64, 1, 2, (1 << 40) - 1] {
+            for slot in [0u64, 1, 2, (1 << SLOT_BITS) - 1] {
+                assert!(
+                    seen.insert(client_slot_stream_id(client, slot).unwrap()),
+                    "collision at client={client} slot={slot}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn client_slot_stream_id_overflow_is_an_error() {
+        // The regression case: client_id = 2^40 used to silently alias
+        // (client 0, slot 1).
+        assert!(client_slot_stream_id(1 << CLIENT_ID_BITS, 0).is_err());
+        assert!(client_slot_stream_id(0, 1 << SLOT_BITS).is_err());
+        // Boundary values are fine.
+        assert_eq!(client_slot_stream_id(0, 0).unwrap(), 0);
+        assert!(client_slot_stream_id((1 << CLIENT_ID_BITS) - 1, (1 << SLOT_BITS) - 1).is_ok());
     }
 }

@@ -1,6 +1,11 @@
 //! Coordinator integration: full leader/worker rounds over both transports
 //! (loopback threads and real TCP sockets), with byte accounting and the
 //! protocol stack in between.
+//!
+//! TCP tests bind port 0 and read the real address back from the
+//! listener — no hardcoded ports (parallel test runs would collide) and
+//! no sleeps (a bound listener is the ready signal: connects queue in
+//! the OS backlog before `accept` runs).
 
 use std::sync::Arc;
 
@@ -51,42 +56,102 @@ fn loopback_mean_estimation_multi_round_all_protocols() {
     }
 }
 
+/// Run one round of `spec` over loopback; returns (means, down, up).
+fn loopback_round(
+    spec: &str,
+    d: usize,
+    sh: Vec<Vec<Vec<f32>>>,
+    seed: u64,
+) -> (Vec<Vec<f32>>, u64, u64) {
+    let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+    let (mut leader, handles) = spawn_local_cluster(proto, sh, mean_update(), seed);
+    let out = leader.round(0, d as u32, &[]).unwrap();
+    let m = leader.metrics().rounds.last().unwrap();
+    let (down, up) = (m.cum_down_bytes, m.cum_up_bytes);
+    leader.shutdown().unwrap();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+    (out.means, down, up)
+}
+
+/// Run one round of `spec` over real TCP sockets; returns (means, down, up).
+fn tcp_round(
+    spec: &str,
+    d: usize,
+    sh: Vec<Vec<Vec<f32>>>,
+    seed: u64,
+) -> (Vec<Vec<f32>>, u64, u64) {
+    let n = sh.len();
+    let binding = TcpHub::bind("127.0.0.1:0").unwrap();
+    let addr = binding.local_addr().unwrap().to_string();
+    let spec_owned = spec.to_string();
+    let leader_thread = std::thread::spawn(move || {
+        let proto = ProtocolConfig::parse(&spec_owned, d).unwrap().build().unwrap();
+        let hub = binding.accept(n).unwrap();
+        let mut leader = Leader::new(proto, Box::new(hub), seed);
+        let out = leader.round(0, d as u32, &[]).unwrap();
+        let m = leader.metrics().rounds.last().unwrap();
+        let bytes = (m.cum_down_bytes, m.cum_up_bytes);
+        leader.shutdown().unwrap();
+        (out.means, bytes)
+    });
+    let mut worker_threads = Vec::new();
+    for (i, shard) in sh.into_iter().enumerate() {
+        let addr = addr.clone();
+        let spec_owned = spec.to_string();
+        worker_threads.push(std::thread::spawn(move || {
+            let proto = ProtocolConfig::parse(&spec_owned, d).unwrap().build().unwrap();
+            Worker { client_id: i as u64, shard, protocol: proto, update: mean_update(), seed }
+                .run_tcp(&addr)
+                .unwrap();
+        }));
+    }
+    let (means, (down, up)) = leader_thread.join().unwrap();
+    for t in worker_threads {
+        t.join().unwrap();
+    }
+    (means, down, up)
+}
+
+fn bits_of(means: &[Vec<f32>]) -> Vec<Vec<u32>> {
+    means.iter().map(|m| m.iter().map(|v| v.to_bits()).collect()).collect()
+}
+
 #[test]
 fn tcp_cluster_end_to_end() {
-    // Real sockets: 3 worker threads connect to a TCP leader and run
-    // 5 rounds of rotated mean estimation.
+    // Real sockets: 3 worker threads connect to a TCP leader (port 0)
+    // and run 5 rounds of rotated mean estimation.
     let d = 64;
     let n = 3;
-    let addr = "127.0.0.1:47911";
     let sh = shards(n, d, 5);
     let client_vecs: Vec<Vec<f32>> = sh.iter().map(|s| s[0].clone()).collect();
     let truth = stats::true_mean(&client_vecs);
 
-    let leader_thread = {
-        let spec = "rotated:k=64";
-        std::thread::spawn(move || {
-            let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
-            let hub = TcpHub::listen(addr, n).unwrap();
-            assert_eq!(hub.n_workers(), n);
-            let mut leader = Leader::new(proto, Box::new(hub), 99);
-            let mut last = Vec::new();
-            for r in 0..5 {
-                let out = leader.round(r, d as u32, &[]).unwrap();
-                assert_eq!(out.n_frames, n);
-                last = out.means[0].clone();
-            }
-            let (down, up) = (
-                leader.metrics().rounds.last().unwrap().cum_down_bytes,
-                leader.metrics().rounds.last().unwrap().cum_up_bytes,
-            );
-            assert!(down > 0 && up > 0, "byte accounting missing");
-            leader.shutdown().unwrap();
-            last
-        })
-    };
-    std::thread::sleep(std::time::Duration::from_millis(150));
+    let binding = TcpHub::bind("127.0.0.1:0").unwrap();
+    let addr = binding.local_addr().unwrap().to_string();
+    let leader_thread = std::thread::spawn(move || {
+        let proto = ProtocolConfig::parse("rotated:k=64", d).unwrap().build().unwrap();
+        let hub = binding.accept(n).unwrap();
+        assert_eq!(hub.n_workers(), n);
+        let mut leader = Leader::new(proto, Box::new(hub), 99).with_decode_threads(2);
+        let mut last = Vec::new();
+        for r in 0..5 {
+            let out = leader.round(r, d as u32, &[]).unwrap();
+            assert_eq!(out.n_frames, n);
+            last = out.means[0].clone();
+        }
+        let (down, up) = (
+            leader.metrics().rounds.last().unwrap().cum_down_bytes,
+            leader.metrics().rounds.last().unwrap().cum_up_bytes,
+        );
+        assert!(down > 0 && up > 0, "byte accounting missing");
+        leader.shutdown().unwrap();
+        last
+    });
     let mut worker_threads = Vec::new();
     for (i, shard) in sh.into_iter().enumerate() {
+        let addr = addr.clone();
         worker_threads.push(std::thread::spawn(move || {
             let proto = ProtocolConfig::parse("rotated:k=64", d).unwrap().build().unwrap();
             let w = Worker {
@@ -96,7 +161,7 @@ fn tcp_cluster_end_to_end() {
                 update: mean_update(),
                 seed: 99,
             };
-            w.run_tcp(addr).unwrap();
+            w.run_tcp(&addr).unwrap();
         }));
     }
     let est = leader_thread.join().unwrap();
@@ -109,51 +174,41 @@ fn tcp_cluster_end_to_end() {
 }
 
 #[test]
-fn loopback_and_tcp_agree_bit_for_bit() {
-    // Same protocol, same seeds: the decoded mean must be identical across
-    // transports (the transport may not perturb protocol bytes).
+fn loopback_and_tcp_bit_identical_all_protocols() {
+    // The transport-conformance guarantee: a loopback round and a TCP
+    // round with identical seeds and shards produce bit-identical means
+    // AND identical byte accounting (both hubs account framed wire
+    // bytes), for every protocol spec the registry can build.
+    let specs = [
+        "float32",
+        "binary",
+        "klevel:k=2",
+        "klevel:k=16",
+        "klevel:k=16,span=norm",
+        "rotated:k=2",
+        "rotated:k=16",
+        "varlen:k=4",
+        "varlen:k=17",
+        "varlen:k=17,coder=huffman",
+        "qsgd:k=8",
+        "klevel:k=8,q=0.5",
+        "klevel:k=16,p=0.5",
+        "varlen:k=17,p=0.25",
+    ];
     let d = 32;
     let n = 4;
-    let sh = shards(n, d, 11);
-
-    // loopback
-    let proto = ProtocolConfig::parse("varlen:k=7", d).unwrap().build().unwrap();
-    let (mut leader, handles) = spawn_local_cluster(proto, sh.clone(), mean_update(), 123);
-    let loop_mean = leader.round(0, d as u32, &[]).unwrap().means[0].clone();
-    leader.shutdown().unwrap();
-    for h in handles {
-        h.join().unwrap().unwrap();
+    for spec in specs {
+        let sh = shards(n, d, 11);
+        let (loop_means, loop_down, loop_up) = loopback_round(spec, d, sh.clone(), 123);
+        let (tcp_means, tcp_down, tcp_up) = tcp_round(spec, d, sh, 123);
+        assert_eq!(
+            bits_of(&loop_means),
+            bits_of(&tcp_means),
+            "{spec}: transports disagree on the decoded mean"
+        );
+        assert_eq!(loop_up, tcp_up, "{spec}: uplink byte accounting diverges");
+        assert_eq!(loop_down, tcp_down, "{spec}: downlink byte accounting diverges");
     }
-
-    // tcp
-    let addr = "127.0.0.1:47913";
-    let leader_thread = std::thread::spawn(move || {
-        let proto = ProtocolConfig::parse("varlen:k=7", d).unwrap().build().unwrap();
-        let hub = TcpHub::listen(addr, n).unwrap();
-        let mut leader = Leader::new(proto, Box::new(hub), 123);
-        let mean = leader.round(0, d as u32, &[]).unwrap().means[0].clone();
-        leader.shutdown().unwrap();
-        mean
-    });
-    std::thread::sleep(std::time::Duration::from_millis(150));
-    let mut worker_threads = Vec::new();
-    for (i, shard) in sh.into_iter().enumerate() {
-        worker_threads.push(std::thread::spawn(move || {
-            let proto = ProtocolConfig::parse("varlen:k=7", d).unwrap().build().unwrap();
-            Worker { client_id: i as u64, shard, protocol: proto, update: mean_update(), seed: 123 }
-                .run_tcp(addr)
-                .unwrap();
-        }));
-    }
-    let tcp_mean = leader_thread.join().unwrap();
-    for t in worker_threads {
-        t.join().unwrap();
-    }
-    assert_eq!(
-        loop_mean.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
-        tcp_mean.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
-        "transports disagree"
-    );
 }
 
 #[test]

@@ -1,0 +1,197 @@
+//! Conformance suite for the leader's streaming aggregation pipeline.
+//!
+//! The contract: for every protocol spec, every upload arrival order,
+//! and every decode-thread count, `aggregate_uploads_streaming` produces
+//! a `RoundOutcome` bit-identical to `aggregate_uploads_reference` — the
+//! retained pre-streaming sorted-decode path. Covers multi-slot uploads,
+//! ragged slot counts, mixed weights, silent (sampled) frames, and
+//! workers with empty shards.
+
+use std::sync::Arc;
+
+use dme::coordinator::leader::{
+    aggregate_uploads_reference, aggregate_uploads_streaming, RoundOutcome,
+};
+use dme::coordinator::transport::{Message, WeightedFrame};
+use dme::coordinator::worker::{UpdateFn, Worker};
+use dme::protocol::config::ProtocolConfig;
+use dme::protocol::{Protocol, RoundCtx, RoundState};
+use dme::rng::Pcg64;
+
+const SPECS: &[&str] = &[
+    "float32",
+    "binary",
+    "klevel:k=2",
+    "klevel:k=16",
+    "klevel:k=16,span=norm",
+    "rotated:k=2",
+    "rotated:k=16",
+    "varlen:k=4",
+    "varlen:k=17",
+    "varlen:k=17,coder=huffman",
+    "qsgd:k=8",
+    "klevel:k=8,q=0.5",
+    "klevel:k=16,p=0.5",
+    "varlen:k=17,p=0.25",
+];
+
+/// A multi-slot weighted update: worker `i` contributes `1 + i % 3`
+/// slots (ragged), with weights mixing 1.0 and non-1.0 values.
+fn multi_slot_update() -> UpdateFn {
+    Arc::new(|_broadcast, dim, shard| {
+        if shard.is_empty() {
+            return Vec::new();
+        }
+        let d = dim as usize;
+        let tag = shard[0][0].abs();
+        let n_slots = 1 + (tag as usize) % 3;
+        (0..n_slots)
+            .map(|s| {
+                let v: Vec<f32> = shard[0]
+                    .iter()
+                    .take(d)
+                    .map(|&x| x + s as f32 * 0.25)
+                    .collect();
+                let weight = if (tag as usize + s) % 2 == 0 { 1.0 } else { 2.0 + s as f32 };
+                (v, weight)
+            })
+            .collect()
+    })
+}
+
+/// Build every worker's upload for one round of `spec` — exactly what
+/// the transport would deliver to the leader, minus the transport.
+fn build_uploads(
+    spec: &str,
+    d: usize,
+    n: usize,
+    seed: u64,
+) -> (Arc<dyn Protocol>, RoundState, Vec<(u64, Vec<WeightedFrame>)>) {
+    let mut rng = Pcg64::new(seed ^ 0x5eed);
+    let mut uploads = Vec::with_capacity(n);
+    for i in 0..n {
+        let shard = if i == n - 1 {
+            Vec::new() // one worker with no data: uploads zero frames
+        } else {
+            let mut x = vec![0.0f32; d];
+            rng.fill_gaussian_f32(&mut x);
+            x[0] = i as f32; // drives the ragged slot count in the update
+            vec![x]
+        };
+        let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+        let worker = Worker {
+            client_id: i as u64,
+            shard,
+            protocol: proto,
+            update: multi_slot_update(),
+            seed,
+        };
+        match worker.step(0, d as u32, &[]).unwrap() {
+            Message::Upload { client, frames, .. } => uploads.push((client, frames)),
+            _ => unreachable!("step always yields Upload"),
+        }
+    }
+    let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+    let state = proto.prepare(&RoundCtx::new(0, seed));
+    (proto, state, uploads)
+}
+
+fn assert_outcomes_bit_identical(a: &RoundOutcome, b: &RoundOutcome, what: &str) {
+    assert_eq!(a.uplink_bits, b.uplink_bits, "{what}: uplink_bits");
+    assert_eq!(a.n_frames, b.n_frames, "{what}: n_frames");
+    assert_eq!(a.weights, b.weights, "{what}: weights");
+    assert_eq!(a.means.len(), b.means.len(), "{what}: slot count");
+    for (slot, (x, y)) in a.means.iter().zip(&b.means).enumerate() {
+        assert_eq!(
+            x.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            y.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "{what}: slot {slot} means diverge"
+        );
+    }
+}
+
+/// Deterministic "random" permutation of upload order.
+fn permute<T>(mut items: Vec<T>, key: u64) -> Vec<T> {
+    let mut rng = Pcg64::new(key);
+    let mut out = Vec::with_capacity(items.len());
+    while !items.is_empty() {
+        let i = (rng.next_u64() % items.len() as u64) as usize;
+        out.push(items.swap_remove(i));
+    }
+    out
+}
+
+#[test]
+fn streaming_bit_identical_for_all_specs_orders_and_thread_counts() {
+    let d = 48;
+    let n = 7;
+    for spec in SPECS {
+        let (proto, state, uploads) = build_uploads(spec, d, n, 77);
+        let want =
+            aggregate_uploads_reference(proto.as_ref(), &state, uploads.clone()).unwrap();
+        assert!(want.means.len() >= 2, "{spec}: expected multi-slot round");
+
+        let mut orders = vec![uploads.clone()];
+        let mut reversed = uploads.clone();
+        reversed.reverse();
+        orders.push(reversed);
+        orders.push(permute(uploads.clone(), 0xfeed));
+        for (o, order) in orders.into_iter().enumerate() {
+            for threads in [1usize, 2, 8] {
+                let got =
+                    aggregate_uploads_streaming(proto.as_ref(), &state, &order, threads).unwrap();
+                assert_outcomes_bit_identical(
+                    &got,
+                    &want,
+                    &format!("spec={spec} order={o} threads={threads}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn streaming_leader_round_matches_reference_over_loopback() {
+    // End to end: the full Leader::round (streaming pipeline, several
+    // decode widths) against the reference aggregation on the same
+    // uploads, reconstructed from identical worker state.
+    use dme::coordinator::leader::spawn_local_cluster;
+
+    let d = 32;
+    let n = 6;
+    for spec in ["rotated:k=16", "varlen:k=17", "klevel:k=16,p=0.5"] {
+        let (proto, state, uploads) = build_uploads(spec, d, n, 91);
+        let want =
+            aggregate_uploads_reference(proto.as_ref(), &state, uploads).unwrap();
+
+        for threads in [1usize, 3] {
+            let mut rng = Pcg64::new(91 ^ 0x5eed);
+            let shards: Vec<Vec<Vec<f32>>> = (0..n)
+                .map(|i| {
+                    if i == n - 1 {
+                        Vec::new()
+                    } else {
+                        let mut x = vec![0.0f32; d];
+                        rng.fill_gaussian_f32(&mut x);
+                        x[0] = i as f32;
+                        vec![x]
+                    }
+                })
+                .collect();
+            let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+            let (mut leader, handles) =
+                spawn_local_cluster(proto, shards, multi_slot_update(), 91);
+            leader.set_decode_threads(threads);
+            let got = leader.round(0, d as u32, &[]).unwrap();
+            assert_outcomes_bit_identical(
+                &got,
+                &want,
+                &format!("spec={spec} threads={threads} (full leader)"),
+            );
+            leader.shutdown().unwrap();
+            for h in handles {
+                h.join().unwrap().unwrap();
+            }
+        }
+    }
+}
