@@ -5,15 +5,18 @@
 //! threads), PJRT executable dispatch, and a full coordinator round.
 //!
 //! ```bash
-//! cargo bench --offline --bench micro            # full run
-//! cargo bench --offline --bench micro -- --smoke # CI fast path
+//! cargo bench --offline --bench micro                 # full run
+//! cargo bench --offline --bench micro -- --smoke      # CI fast path
+//! cargo bench --offline --bench micro -- --json out.json  # machine-readable results
 //! ```
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use dme::bench::Bench;
+use dme::coordinator::aggregator::aggregate_tree;
 use dme::coordinator::leader::{aggregate_uploads_streaming, spawn_local_cluster};
+use dme::coordinator::topology::Topology;
 use dme::coordinator::transport::WeightedFrame;
 use dme::coordinator::worker::mean_update;
 use dme::protocol::config::ProtocolConfig;
@@ -24,7 +27,13 @@ use dme::rotation::hadamard;
 use dme::runtime::{ComputeBackend, NativeBackend};
 
 fn main() -> anyhow::Result<()> {
-    let smoke = std::env::args().any(|a| a == "--smoke");
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    let json_path = argv
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| argv.get(i + 1))
+        .cloned();
     let mut b = Bench::new();
     if smoke {
         // CI fast path: tiny budgets, skip the largest dims. Still
@@ -233,6 +242,66 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // ---- aggregation tier: flat vs 2-level vs 3-level trees ----
+    //
+    // The server-side fan-in of one round at n simulated clients, routed
+    // through tree topologies of partial-merging aggregators (every hop
+    // crosses the real PartialUpload wire serialization). All shapes are
+    // bit-identical by construction (exact folds); the delta is pure
+    // topology: deeper trees bound each node's fan-in, and the printed
+    // root-ingress numbers show root traffic dropping from O(n · frames)
+    // to O(root-fan-in · slots).
+    {
+        let d = 256;
+        let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+        let worker_counts: &[usize] = if smoke { &[512] } else { &[512, 4096] };
+        for &n in worker_counts {
+            let proto = ProtocolConfig::parse("rotated:k=16", d)?.build()?;
+            let ctx = RoundCtx::new(0, 31);
+            let state = proto.prepare(&ctx);
+            let mut enc = Encoder::new(proto.as_ref(), &state);
+            let mut rng = Pcg64::new(11 + n as u64);
+            let uploads: Vec<(u64, Vec<WeightedFrame>)> = (0..n)
+                .map(|i| {
+                    let mut x = vec![0.0f32; d];
+                    rng.fill_gaussian_f32(&mut x);
+                    let frame = enc.encode(i as u64, &x).expect("encode");
+                    (i as u64, vec![WeightedFrame { frame, weight: 1.0 }])
+                })
+                .collect();
+            let units = (n * d) as f64;
+            let shapes: Vec<(String, Topology)> = vec![
+                ("flat".to_string(), Topology::flat(n as u64)),
+                // Depth 2: √n-ish fan-in at both tiers.
+                ("depth=2".to_string(), Topology::uniform(n as u64, 64, 2)?),
+                // Depth 3: small fan-in per node.
+                ("depth=3".to_string(), Topology::uniform(n as u64, 16, 3)?),
+            ];
+            let mut ingress = Vec::new();
+            for (label, topo) in &shapes {
+                let out = aggregate_tree(proto.as_ref(), &state, &uploads, topo, threads)?;
+                ingress.push((label.clone(), out.tier_ingress[0]));
+                b.run(
+                    &format!("tree agg {label} rotated k=16 n={n} d={d}"),
+                    Some(units),
+                    || {
+                        std::hint::black_box(
+                            aggregate_tree(proto.as_ref(), &state, &uploads, topo, threads)
+                                .unwrap(),
+                        );
+                    },
+                );
+            }
+            let flat_root = ingress[0].1;
+            for (label, bytes) in &ingress {
+                println!(
+                    "root ingress n={n}: {label:<8} {bytes:>12} bytes ({:.1}% of flat)",
+                    *bytes as f64 / flat_root as f64 * 100.0
+                );
+            }
+        }
+    }
+
     // ---- backends: native vs PJRT dispatch ----
     {
         let d = 1024;
@@ -297,5 +366,9 @@ fn main() -> anyhow::Result<()> {
     }
 
     b.report("microbenchmarks (units/s are elements/s; fwht is bytes/s)");
+    if let Some(path) = json_path {
+        b.write_json(&path)?;
+        println!("wrote {path}");
+    }
     Ok(())
 }

@@ -141,6 +141,46 @@ impl Bench {
     pub fn timings(&self) -> &[Timing] {
         &self.timings
     }
+
+    /// Machine-readable results: a JSON array of case objects (the CI
+    /// artifact that tracks the perf trajectory across commits). Names
+    /// are plain ASCII; escape the few JSON-special characters anyway.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("[\n");
+        for (i, t) in self.timings.iter().enumerate() {
+            let esc: String = t
+                .name
+                .chars()
+                .flat_map(|c| match c {
+                    '"' => vec!['\\', '"'],
+                    '\\' => vec!['\\', '\\'],
+                    c if (c as u32) < 0x20 => vec![' '],
+                    c => vec![c],
+                })
+                .collect();
+            let tput = match t.throughput() {
+                // A sub-resolution mean yields inf — not a JSON token.
+                Some(v) if v.is_finite() => format!("{v}"),
+                _ => "null".to_string(),
+            };
+            out.push_str(&format!(
+                "  {{\"name\": \"{esc}\", \"iters\": {}, \"mean_ns\": {}, \"p50_ns\": {}, \
+                 \"p99_ns\": {}, \"units_per_sec\": {tput}}}{}\n",
+                t.iters,
+                t.mean.as_nanos(),
+                t.p50.as_nanos(),
+                t.p99.as_nanos(),
+                if i + 1 < self.timings.len() { "," } else { "" },
+            ));
+        }
+        out.push_str("]\n");
+        out
+    }
+
+    /// Write [`Self::to_json`] to `path`.
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
 }
 
 /// Print a generic results table (the figure benches' row format).
@@ -194,6 +234,11 @@ mod tests {
         assert!(t.row().contains("spin"));
         std::hint::black_box(x);
         b.report("test");
+        let json = b.to_json();
+        assert!(json.starts_with('['), "{json}");
+        assert!(json.contains("\"name\": \"spin\""), "{json}");
+        assert!(json.contains("\"units_per_sec\""), "{json}");
+        assert!(json.trim_end().ends_with(']'), "{json}");
     }
 
     #[test]

@@ -1,9 +1,20 @@
 //! Tiny CLI argument parser (clap is not in the offline crate set):
-//! `--key value`, `--key=value`, boolean `--flag`, and positionals.
+//! `--key value`, `--key=value`, boolean `--flag`, positionals, and the
+//! `lo:hi` span syntax the aggregation-tier commands use.
 
 use std::collections::HashMap;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
+
+/// Parse a client span `lo:hi` (half-open, `lo ≤ hi`) as used by
+/// `dme aggregate --span`.
+pub fn parse_span(s: &str) -> Result<(u64, u64)> {
+    let (lo, hi) = s.split_once(':').with_context(|| format!("span `{s}` is not `lo:hi`"))?;
+    let lo: u64 = lo.trim().parse().with_context(|| format!("span lo `{lo}`"))?;
+    let hi: u64 = hi.trim().parse().with_context(|| format!("span hi `{hi}`"))?;
+    ensure!(lo <= hi, "span `{s}` is inverted");
+    Ok((lo, hi))
+}
 
 /// Parsed command-line arguments.
 #[derive(Clone, Debug, Default)]
@@ -134,5 +145,15 @@ mod tests {
         let a = parse(&["--a", "--b", "3"]);
         assert!(a.bool("a").unwrap());
         assert_eq!(a.get("b", 0u32).unwrap(), 3);
+    }
+
+    #[test]
+    fn span_syntax() {
+        assert_eq!(parse_span("0:128").unwrap(), (0, 128));
+        assert_eq!(parse_span("7:7").unwrap(), (7, 7));
+        assert_eq!(parse_span(" 3 : 9 ").unwrap(), (3, 9));
+        assert!(parse_span("9:3").is_err(), "inverted");
+        assert!(parse_span("12").is_err(), "no separator");
+        assert!(parse_span("a:b").is_err(), "not numeric");
     }
 }

@@ -1,0 +1,614 @@
+//! The aggregation-tier node: a partial-merging relay between workers
+//! and the leader (or between tiers of itself).
+//!
+//! An [`Aggregator`] owns a [`TransportHub`] over its children (workers
+//! or lower-tier aggregators — the same hubs the leader uses) and an
+//! upstream [`Endpoint`] to its parent. Per round it:
+//!
+//! 1. relays the parent's `RoundStart` downstream (the broadcast payload
+//!    stays `Arc`-shared over loopback),
+//! 2. runs the same streaming barrier + decode pool as the leader
+//!    (`collect_round`): worker uploads decode on the pool, child
+//!    `PartialUpload`s are absorbed directly,
+//! 3. folds everything into one exactly-mergeable `SlotPartial` per slot
+//!    (`fold_spans`) and forwards a single `PartialUpload` for its whole
+//!    client span.
+//!
+//! Because the fold is exact (see `protocol::exact`), the root estimate
+//! is **bit-identical to the flat leader for every tree shape** — the
+//! tier is purely a throughput/deployment lever: root ingest drops from
+//! O(n · frames) to O(root-fan-in · slots), and decode work spreads
+//! across the tier (`tests/tree_aggregation.rs` is the conformance
+//! suite).
+//!
+//! [`spawn_local_tree`] wires a whole tree of loopback hubs in one
+//! process (the `dme serve --fanout` path); [`aggregate_tree`] is the
+//! transportless simulator used by benches and conformance tests —
+//! every hop still passes through the real `PartialUpload` wire
+//! serialization.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::leader::{
+    collect_round, decode_all, fold_spans, merge_decoded, BarrierTimeout, ChildKey,
+    DecodedUpload, Leader, RoundOutcome,
+};
+use super::metrics::{ExperimentMetrics, RoundMetrics, TierMetrics};
+use super::topology::{Child, Topology};
+use super::transport::{Endpoint, LoopbackHub, Message, TransportHub, WeightedFrame};
+use crate::protocol::{Protocol, RoundCtx};
+
+/// A partial-merging aggregation node.
+pub struct Aggregator {
+    protocol: Arc<dyn Protocol>,
+    /// Experiment seed — must match the leader's and the workers' so the
+    /// round's public randomness (e.g. the π_srk rotation) agrees.
+    seed: u64,
+    agg_id: u64,
+    span: (u64, u64),
+    /// Topology level (0 = directly above the workers); only used to
+    /// attribute metrics to a tier.
+    level: usize,
+    decode_threads: usize,
+    round_timeout: Option<Duration>,
+}
+
+/// What an aggregator hands back when its tree shuts down: per-round
+/// metrics plus its hub's cumulative byte accounting.
+#[derive(Clone, Debug)]
+pub struct AggregatorReport {
+    pub agg_id: u64,
+    pub level: usize,
+    pub span: (u64, u64),
+    pub metrics: ExperimentMetrics,
+    /// Bytes this node sent down to its children.
+    pub down_bytes: u64,
+    /// Bytes this node ingested from its children.
+    pub up_bytes: u64,
+}
+
+impl Aggregator {
+    pub fn new(protocol: Arc<dyn Protocol>, seed: u64, agg_id: u64, span: (u64, u64)) -> Self {
+        Aggregator {
+            protocol,
+            seed,
+            agg_id,
+            span,
+            level: 0,
+            decode_threads: 1,
+            round_timeout: None,
+        }
+    }
+
+    /// Tag this node with its topology level (for tier metrics).
+    pub fn with_level(mut self, level: usize) -> Self {
+        self.level = level;
+        self
+    }
+
+    /// Width of this node's decode pool; any value is bit-identical.
+    pub fn with_decode_threads(mut self, n: usize) -> Self {
+        self.decode_threads = n.max(1);
+        self
+    }
+
+    /// Arm a per-round barrier deadline over this node's span (default:
+    /// wait forever, like the leader). A timed-out round is *skipped* —
+    /// this node answers nothing and stays alive — so the parent (and
+    /// every ancestor up to the root) **must also arm a deadline**: its
+    /// timeout is what names this node and advances the tree to the
+    /// next round. A child-tier deadline under a wait-forever parent
+    /// trades a late round for a hung one.
+    pub fn with_round_timeout(mut self, timeout: Duration) -> Self {
+        self.round_timeout = Some(timeout);
+        self
+    }
+
+    /// Serve rounds until the parent sends `Shutdown` (which is relayed
+    /// to the children), then return this node's report. On a mid-round
+    /// failure the parent's barrier is woken first (an unexpected
+    /// `Shutdown` upstream) so the tree errors out instead of hanging.
+    pub fn run(
+        self,
+        mut hub: Box<dyn TransportHub>,
+        up: &mut dyn Endpoint,
+    ) -> Result<AggregatorReport> {
+        let mut metrics = ExperimentMetrics::default();
+        let mut expected: Vec<ChildKey> = Vec::new();
+        loop {
+            match up.recv_msg()? {
+                Message::RoundStart { round, dim, payload } => {
+                    let reply = self.one_round(
+                        hub.as_mut(),
+                        round,
+                        dim,
+                        payload,
+                        &mut expected,
+                        &mut metrics,
+                    );
+                    match reply {
+                        Ok(msg) => up.send_msg(msg)?,
+                        Err(e) if e.downcast_ref::<BarrierTimeout>().is_some() => {
+                            // A timed-out span is survivable: answer
+                            // nothing (the parent's own deadline names
+                            // this node), stay alive, and serve the next
+                            // round — its barrier drops the stale answers
+                            // this round leaves behind. Dying here would
+                            // turn one transiently slow worker into the
+                            // loss of the whole tree.
+                            eprintln!(
+                                "aggregator {} skipping round {round}: {e:#}",
+                                self.agg_id
+                            );
+                        }
+                        Err(e) => {
+                            // Tear the subtree down — children blocked in
+                            // recv would otherwise wait forever — then
+                            // wake the parent's barrier before surfacing
+                            // the failure (mirrors the worker loop).
+                            let _ = hub.broadcast(&Message::Shutdown);
+                            let _ = up.send_msg(Message::Shutdown);
+                            return Err(e);
+                        }
+                    }
+                }
+                Message::Shutdown => {
+                    hub.broadcast(&Message::Shutdown)?;
+                    let (down_bytes, up_bytes) = hub.bytes_moved();
+                    return Ok(AggregatorReport {
+                        agg_id: self.agg_id,
+                        level: self.level,
+                        span: self.span,
+                        metrics,
+                        down_bytes,
+                        up_bytes,
+                    });
+                }
+                Message::Upload { .. } | Message::PartialUpload { .. } => {
+                    bail!("aggregator received an upstream-only message from its parent")
+                }
+            }
+        }
+    }
+
+    fn one_round(
+        &self,
+        hub: &mut dyn TransportHub,
+        round: u64,
+        dim: u32,
+        payload: Arc<[f32]>,
+        expected: &mut Vec<ChildKey>,
+        metrics: &mut ExperimentMetrics,
+    ) -> Result<Message> {
+        let t0 = Instant::now();
+        hub.broadcast(&Message::RoundStart { round, dim, payload })?;
+        let ctx = RoundCtx::new(round, self.seed);
+        let state = self.protocol.prepare(&ctx);
+        let collected = collect_round(
+            hub,
+            self.protocol.as_ref(),
+            &state,
+            round,
+            self.decode_threads,
+            self.round_timeout,
+            expected,
+        )?;
+        // The barrier checked the children against each other; they must
+        // also fit inside the span this node forwards upstream, or a
+        // miswired TCP tree double-counts clients another branch covers.
+        for key in &collected.seen {
+            let (lo, hi) = key.span();
+            ensure!(
+                lo >= self.span.0 && hi <= self.span.1,
+                "aggregator {} [{}..{}) received {key}, which is outside its span",
+                self.agg_id,
+                self.span.0,
+                self.span.1,
+            );
+        }
+        *expected = collected.seen.clone();
+        let t_merge = Instant::now();
+        let decoded = collected.decoded;
+        let uplink_bits: u64 = decoded.iter().map(|d| d.uplink_bits).sum();
+        let n_frames: usize = decoded.iter().map(|d| d.n_frames).sum();
+        let slots = fold_spans(self.protocol.as_ref(), &decoded)?;
+        let decode_wall = collected.decode_wall + t_merge.elapsed();
+        let (down, up) = hub.bytes_moved();
+        metrics.push(RoundMetrics {
+            round,
+            uplink_bits,
+            n_frames,
+            wall: t0.elapsed(),
+            wait_wall: collected.wait_wall,
+            decode_wall,
+            cum_down_bytes: down,
+            cum_up_bytes: up,
+        });
+        Ok(Message::PartialUpload {
+            agg_id: self.agg_id,
+            round,
+            span: self.span,
+            uplink_bits,
+            n_frames: n_frames as u64,
+            slots,
+        })
+    }
+}
+
+/// Join handles of a [`spawn_local_tree`] cluster.
+pub struct LocalTree {
+    pub workers: Vec<std::thread::JoinHandle<Result<()>>>,
+    pub aggregators: Vec<std::thread::JoinHandle<Result<AggregatorReport>>>,
+    /// Number of aggregator levels (for tier attribution).
+    pub n_levels: usize,
+}
+
+impl LocalTree {
+    /// Join every thread, propagating the first failure; on success
+    /// returns the aggregator reports.
+    pub fn join(self) -> Result<Vec<AggregatorReport>> {
+        let mut reports = Vec::with_capacity(self.aggregators.len());
+        for h in self.aggregators {
+            reports.push(h.join().expect("aggregator thread panicked")?);
+        }
+        for h in self.workers {
+            h.join().expect("worker thread panicked")?;
+        }
+        Ok(reports)
+    }
+
+    /// Assemble per-tier metrics (tier 0 = root) from the leader's view
+    /// and the aggregator reports gathered by [`LocalTree::join`].
+    pub fn tier_metrics(
+        n_levels: usize,
+        leader_metrics: &ExperimentMetrics,
+        leader_bytes: (u64, u64),
+        reports: &[AggregatorReport],
+    ) -> Vec<TierMetrics> {
+        let mut tiers = vec![TierMetrics {
+            tier: 0,
+            nodes: 1,
+            down_bytes: leader_bytes.0,
+            up_bytes: leader_bytes.1,
+            wait_wall: leader_metrics.total_wait_wall(),
+            decode_wall: leader_metrics.total_decode_wall(),
+        }];
+        for tier in 1..=n_levels {
+            let level = n_levels - tier; // topology level for this tier
+            let mut tm = TierMetrics {
+                tier,
+                nodes: 0,
+                down_bytes: 0,
+                up_bytes: 0,
+                wait_wall: Duration::ZERO,
+                decode_wall: Duration::ZERO,
+            };
+            for r in reports.iter().filter(|r| r.level == level) {
+                tm.nodes += 1;
+                tm.down_bytes += r.down_bytes;
+                tm.up_bytes += r.up_bytes;
+                tm.wait_wall += r.metrics.total_wait_wall();
+                tm.decode_wall += r.metrics.total_decode_wall();
+            }
+            tiers.push(tm);
+        }
+        tiers
+    }
+}
+
+/// Spawn a whole aggregation tree — workers, aggregators, leader — as
+/// loopback threads in this process: the tree-shaped sibling of
+/// `spawn_local_cluster`. `shards[c]` is client `c`'s data; the
+/// topology decides who reports to whom. `decode_threads` and
+/// `round_timeout` apply to the leader and every aggregator, so a
+/// timeout error names the missing child at the barrier nearest to it.
+pub fn spawn_local_tree(
+    protocol: Arc<dyn Protocol>,
+    shards: Vec<Vec<Vec<f32>>>,
+    update: super::worker::UpdateFn,
+    seed: u64,
+    topo: &Topology,
+    decode_threads: usize,
+    round_timeout: Option<Duration>,
+) -> Result<(Leader, LocalTree)> {
+    ensure!(
+        shards.len() as u64 == topo.n_clients(),
+        "topology covers {} clients but {} shards were provided",
+        topo.n_clients(),
+        shards.len()
+    );
+    topo.validate()?;
+    let mut shards: Vec<Option<Vec<Vec<f32>>>> = shards.into_iter().map(Some).collect();
+    let mut tree = LocalTree {
+        workers: Vec::new(),
+        aggregators: Vec::new(),
+        n_levels: topo.levels().len(),
+    };
+
+    // Recursive wiring, top-down: creating a node's hub yields the
+    // endpoints its children run on.
+    #[allow(clippy::too_many_arguments)]
+    fn spawn_child(
+        child: &Child,
+        ep: super::transport::LoopbackEndpoint,
+        topo: &Topology,
+        protocol: &Arc<dyn Protocol>,
+        update: &super::worker::UpdateFn,
+        seed: u64,
+        decode_threads: usize,
+        round_timeout: Option<Duration>,
+        shards: &mut Vec<Option<Vec<Vec<f32>>>>,
+        tree: &mut LocalTree,
+    ) -> Result<()> {
+        match child {
+            Child::Worker(c) => {
+                let shard = shards[*c as usize].take().expect("shard handed out twice");
+                let worker = super::worker::Worker {
+                    client_id: *c,
+                    shard,
+                    protocol: protocol.clone(),
+                    update: update.clone(),
+                    seed,
+                };
+                tree.workers.push(
+                    std::thread::Builder::new()
+                        .name(format!("dme-worker-{c}"))
+                        .spawn(move || worker.run_loopback(ep))
+                        .context("spawning worker thread")?,
+                );
+            }
+            Child::Agg { level, index } => {
+                let spec = topo.spec(*level, *index);
+                let (hub, endpoints) = LoopbackHub::new(spec.children.len());
+                for (grandchild, gep) in spec.children.iter().zip(endpoints) {
+                    spawn_child(
+                        grandchild,
+                        gep,
+                        topo,
+                        protocol,
+                        update,
+                        seed,
+                        decode_threads,
+                        round_timeout,
+                        shards,
+                        tree,
+                    )?;
+                }
+                let mut agg = Aggregator::new(protocol.clone(), seed, spec.id, spec.span)
+                    .with_level(*level)
+                    .with_decode_threads(decode_threads);
+                if let Some(t) = round_timeout {
+                    agg = agg.with_round_timeout(t);
+                }
+                let name = format!("dme-agg-{}", spec.id);
+                tree.aggregators.push(
+                    std::thread::Builder::new()
+                        .name(name)
+                        .spawn(move || {
+                            let mut ep = ep;
+                            agg.run(Box::new(hub), &mut ep)
+                        })
+                        .context("spawning aggregator thread")?,
+                );
+            }
+        }
+        Ok(())
+    }
+
+    let root_children = topo.root_children();
+    let (hub, endpoints) = LoopbackHub::new(root_children.len());
+    for (child, ep) in root_children.iter().zip(endpoints) {
+        spawn_child(
+            child,
+            ep,
+            topo,
+            &protocol,
+            &update,
+            seed,
+            decode_threads,
+            round_timeout,
+            &mut shards,
+            &mut tree,
+        )?;
+    }
+    let expected = root_children
+        .iter()
+        .map(|c| match c {
+            Child::Worker(id) => ChildKey::Client(*id),
+            Child::Agg { level, index } => {
+                let spec = topo.spec(*level, *index);
+                ChildKey::Aggregator { id: spec.id, span: spec.span }
+            }
+        })
+        .collect();
+    let mut leader = Leader::new(protocol, Box::new(hub), seed)
+        .with_decode_threads(decode_threads)
+        .with_expected_children(expected);
+    if let Some(t) = round_timeout {
+        leader = leader.with_round_timeout(t);
+    }
+    Ok((leader, tree))
+}
+
+/// One round of tree aggregation over already-encoded uploads, without
+/// transports or threads-per-node: the deterministic simulator used by
+/// benches and the conformance suite. Every aggregator hop still
+/// round-trips its `PartialUpload` through the real wire serialization,
+/// so serialization fidelity is on the tested path.
+pub struct TreeOutcome {
+    pub outcome: RoundOutcome,
+    /// `tier_ingress[0]` is the framed transport bytes crossing into the
+    /// root; higher indices are the tiers below, ending with the leaf
+    /// aggregators' ingress from the workers. For a flat topology the
+    /// single entry is the workers' direct ingress at the root.
+    pub tier_ingress: Vec<u64>,
+}
+
+pub fn aggregate_tree(
+    proto: &dyn Protocol,
+    state: &crate::protocol::RoundState,
+    uploads: &[(u64, Vec<WeightedFrame>)],
+    topo: &Topology,
+    decode_threads: usize,
+) -> Result<TreeOutcome> {
+    topo.validate()?;
+    ensure!(
+        uploads.iter().all(|(c, _)| *c < topo.n_clients()),
+        "upload client id outside the topology's client range"
+    );
+    let round = state.ctx.round;
+    // Leaf ingress accounting: what the workers' Upload messages cost on
+    // the wire wherever they land (leaf aggregators, or the root when
+    // flat).
+    let worker_ingress: u64 = uploads
+        .iter()
+        .map(|(_, frames)| Message::upload_wire_len(frames) + 4) // + u32 frame prefix
+        .sum();
+    // Decode once — the same work the leaf tier's pools would do.
+    let mut current = decode_all(proto, state, uploads, decode_threads)?;
+    let mut ingress_rev = vec![worker_ingress];
+    for tier in topo.levels() {
+        // Route every child into the aggregator whose span contains it.
+        let mut buckets: Vec<Vec<DecodedUpload>> = (0..tier.len()).map(|_| Vec::new()).collect();
+        for d in current.drain(..) {
+            let (lo, hi) = d.origin.span();
+            let idx = tier.partition_point(|s| s.span.1 <= lo);
+            ensure!(
+                idx < tier.len() && lo >= tier[idx].span.0 && hi <= tier[idx].span.1,
+                "child span [{lo}, {hi}) fits no aggregator at this tier"
+            );
+            buckets[idx].push(d);
+        }
+        let mut tier_bytes = 0u64;
+        let mut next = Vec::with_capacity(tier.len());
+        for (spec, mine) in tier.iter().zip(buckets) {
+            if mine.is_empty() {
+                continue; // a span with no uploads present sends nothing
+            }
+            let uplink_bits: u64 = mine.iter().map(|d| d.uplink_bits).sum();
+            let n_frames: usize = mine.iter().map(|d| d.n_frames).sum();
+            let slots = fold_spans(proto, &mine)?;
+            let msg = Message::PartialUpload {
+                agg_id: spec.id,
+                round,
+                span: spec.span,
+                uplink_bits,
+                n_frames: n_frames as u64,
+                slots,
+            };
+            tier_bytes += msg.framed_len();
+            // The wire round-trip: prove the serialized partials carry
+            // the exact state.
+            let bytes = msg.to_bytes()?;
+            let Message::PartialUpload { agg_id, span, uplink_bits, n_frames, slots, .. } =
+                Message::from_bytes(&bytes)?
+            else {
+                bail!("PartialUpload did not survive the wire")
+            };
+            next.push(DecodedUpload {
+                origin: ChildKey::Aggregator { id: agg_id, span },
+                slots: slots.into_iter().map(Some).collect(),
+                uplink_bits,
+                n_frames: n_frames as usize,
+            });
+        }
+        ingress_rev.push(tier_bytes);
+        current = next;
+    }
+    let outcome = merge_decoded(proto, state, current)?;
+    ingress_rev.reverse(); // root first
+    Ok(TreeOutcome { outcome, tier_ingress: ingress_rev })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::leader::aggregate_uploads_reference;
+    use crate::coordinator::worker::mean_update;
+    use crate::protocol::config::ProtocolConfig;
+    use crate::protocol::Encoder;
+    use crate::rng::Pcg64;
+
+    fn gaussian_shards(n: usize, d: usize, seed: u64) -> Vec<Vec<Vec<f32>>> {
+        let mut rng = Pcg64::new(seed);
+        (0..n)
+            .map(|_| {
+                let mut x = vec![0.0f32; d];
+                rng.fill_gaussian_f32(&mut x);
+                vec![x]
+            })
+            .collect()
+    }
+
+    fn bits_of(means: &[Vec<f32>]) -> Vec<Vec<u32>> {
+        means.iter().map(|m| m.iter().map(|v| v.to_bits()).collect()).collect()
+    }
+
+    #[test]
+    fn local_tree_matches_flat_cluster_bits() {
+        let d = 32;
+        let n = 11;
+        let spec = "rotated:k=16";
+        let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+        let shards = gaussian_shards(n, d, 5);
+        let (mut flat_leader, flat_handles) =
+            super::super::leader::spawn_local_cluster(proto, shards.clone(), mean_update(), 9);
+        let mut flat_means = Vec::new();
+        for r in 0..2 {
+            flat_means.push(flat_leader.round(r, d as u32, &[]).unwrap().means);
+        }
+        flat_leader.shutdown().unwrap();
+        for h in flat_handles {
+            h.join().unwrap().unwrap();
+        }
+
+        let topo = Topology::uniform(n as u64, 4, 3).unwrap();
+        let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+        let (mut leader, tree) =
+            spawn_local_tree(proto, shards, mean_update(), 9, &topo, 2, None).unwrap();
+        for (r, want) in flat_means.iter().enumerate() {
+            let got = leader.round(r as u64, d as u32, &[]).unwrap();
+            assert_eq!(bits_of(&got.means), bits_of(want), "round {r} diverged");
+        }
+        leader.shutdown().unwrap();
+        let reports = tree.join().unwrap();
+        assert_eq!(reports.len(), topo.n_aggregators());
+        assert!(reports.iter().all(|r| r.metrics.rounds.len() == 2));
+        assert!(reports.iter().all(|r| r.up_bytes > 0 && r.down_bytes > 0));
+    }
+
+    #[test]
+    fn aggregate_tree_matches_reference_and_accounts_ingress() {
+        let d = 24;
+        let n = 20;
+        let spec = "klevel:k=16";
+        let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+        let ctx = RoundCtx::new(0, 77);
+        let state = proto.prepare(&ctx);
+        let mut enc = Encoder::new(proto.as_ref(), &state);
+        let mut rng = Pcg64::new(13);
+        let uploads: Vec<(u64, Vec<WeightedFrame>)> = (0..n)
+            .map(|i| {
+                let mut x = vec![0.0f32; d];
+                rng.fill_gaussian_f32(&mut x);
+                let frame = enc.encode(i, &x).unwrap();
+                (i, vec![WeightedFrame { frame, weight: 1.0 }])
+            })
+            .collect();
+        let want = aggregate_uploads_reference(proto.as_ref(), &state, uploads.clone()).unwrap();
+        let topo = Topology::uniform(n, 5, 2).unwrap();
+        let got = aggregate_tree(proto.as_ref(), &state, &uploads, &topo, 2).unwrap();
+        assert_eq!(bits_of(&got.outcome.means), bits_of(&want.means));
+        assert_eq!(got.outcome.weights, want.weights);
+        assert_eq!(got.outcome.uplink_bits, want.uplink_bits);
+        assert_eq!(got.tier_ingress.len(), 2);
+        assert!(got.tier_ingress[1] > 0, "worker-edge ingress must be accounted");
+        // Flat "tree": single ingress entry, equal to the workers' cost.
+        let flat = aggregate_tree(proto.as_ref(), &state, &uploads, &Topology::flat(n), 1).unwrap();
+        assert_eq!(flat.tier_ingress.len(), 1);
+        assert_eq!(flat.tier_ingress[0], got.tier_ingress[1]);
+    }
+}

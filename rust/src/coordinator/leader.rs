@@ -1,25 +1,36 @@
 //! The leader (server) side of the coordinator: drives rounds, enforces
 //! the barrier, and aggregates per-slot weighted means through a
-//! **streaming, parallel decode pipeline**.
+//! **streaming, parallel decode pipeline** that also understands
+//! pre-merged spans from the aggregation tier.
 //!
 //! # Streaming aggregation
 //!
-//! The pre-streaming leader waited for the full barrier, then decoded
-//! every slot of every upload serially — at large worker counts the
-//! server, not the clients, became the round bottleneck. Now each upload
-//! is handed to a decode pool the moment it arrives ([`decode_upload`]
-//! turns it into per-slot [`SlotPartial`]s), so decode work overlaps the
-//! barrier wait; at the barrier the partials are merged in client-id
-//! order ([`merge_decoded`]).
+//! Each upload is handed to a decode pool the moment it arrives
+//! ([`decode_upload`] turns it into one exactly-mergeable
+//! [`SlotPartial`] per slot), so decode work overlaps the barrier wait;
+//! at the barrier the partials are merged span by span
+//! ([`merge_decoded`]). A child may equally be an aggregation-tier node
+//! (see `coordinator::aggregator`) sending a `PartialUpload` — already
+//! decoded and merged for its whole client span — which the barrier
+//! absorbs directly, mixing plain and pre-merged children freely.
 //!
-//! Determinism: decoding a frame into its own zeroed accumulator is
-//! order-independent, and the merge folds partials in client-id order —
-//! the same rule `run_round_par` uses — so the outcome is **bit-identical
-//! to the sequential sorted-decode reference**
-//! ([`aggregate_uploads_reference`], kept as the executable
-//! specification) for every arrival order and every decode-thread count.
-//! The conformance suite in `tests/streaming_leader.rs` proves this for
-//! all protocol specs × arrival orders × decode threads ∈ {1, 2, 8}.
+//! # Determinism
+//!
+//! The per-slot fold state is exact (fixed-point integer sums, see
+//! `protocol::exact`), so merging is associative and commutative: the
+//! outcome is **bit-identical for every arrival order, decode-thread
+//! count, and aggregation-tree shape**, and equals the flat sequential
+//! specification [`aggregate_uploads_reference`]. The conformance
+//! suites in `tests/streaming_leader.rs` and
+//! `tests/tree_aggregation.rs` prove this across every protocol spec.
+//!
+//! # Barrier liveness
+//!
+//! By default the barrier waits forever — the right behavior for
+//! in-process loopback clusters, where a dead worker already wakes the
+//! barrier explicitly. For TCP deployments, [`Leader::with_round_timeout`]
+//! arms a deadline; an expired round fails with an error that names the
+//! missing children instead of hanging.
 
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -30,7 +41,7 @@ use anyhow::{bail, ensure, Result};
 
 use super::metrics::{ExperimentMetrics, RoundMetrics};
 use super::transport::{Message, TransportHub, WeightedFrame};
-use crate::protocol::{Decoder, Protocol, RoundCtx, RoundState, SlotPartial};
+use crate::protocol::{Protocol, RoundCtx, RoundState, SlotPartial};
 
 /// Result of one coordinated round.
 #[derive(Clone, Debug)]
@@ -40,23 +51,57 @@ pub struct RoundOutcome {
     pub means: Vec<Vec<f32>>,
     /// Total weight per slot.
     pub weights: Vec<f64>,
-    /// Exact uplink payload bits this round (sum of frame bit lengths).
+    /// Exact uplink payload bits this round (sum of frame bit lengths,
+    /// counted at the client edge even when forwarded through aggregators).
     pub uplink_bits: u64,
     /// Number of non-silent frames received.
     pub n_frames: usize,
 }
 
-/// One worker's upload with every slot decoded into a [`SlotPartial`]:
-/// the unit of work of the streaming pipeline. Producing it is the
-/// expensive, order-independent half of server-side aggregation (bit
-/// unpacking + dequantization into zeroed accumulators, on any decode
-/// thread); what remains at the barrier is a cheap deterministic fold.
+/// Identity of one direct child of a barrier node: a worker, or an
+/// aggregation-tier node covering a client span.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChildKey {
+    Client(u64),
+    Aggregator { id: u64, span: (u64, u64) },
+}
+
+impl ChildKey {
+    /// Client span the child speaks for.
+    pub fn span(&self) -> (u64, u64) {
+        match self {
+            ChildKey::Client(c) => (*c, c.saturating_add(1)),
+            ChildKey::Aggregator { span, .. } => *span,
+        }
+    }
+}
+
+impl std::fmt::Display for ChildKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ChildKey::Client(c) => write!(f, "client {c}"),
+            ChildKey::Aggregator { id, span } => {
+                write!(f, "aggregator {id} [{}..{})", span.0, span.1)
+            }
+        }
+    }
+}
+
+/// One child's contribution with every slot decoded into a
+/// [`SlotPartial`]: the unit of work of the streaming pipeline. For a
+/// worker upload, producing it is the expensive half of server-side
+/// aggregation (bit unpacking + dequantization, on any decode thread);
+/// for an aggregation-tier child it arrives in this form on the wire.
 pub struct DecodedUpload {
-    pub client: u64,
-    /// One entry per uploaded slot; `None` for a silent (empty) frame,
-    /// which still counts toward the slot's holder count.
+    /// Who this came from (also the span used for ordering/diagnostics).
+    pub origin: ChildKey,
+    /// One entry per slot. `None` is a silent (sampled-out) frame: it
+    /// counts as one slot holder and contributes nothing else, so it
+    /// carries no dense state — under heavy sampling most frames are
+    /// silent, and a dim-sized zero partial per silent frame would
+    /// dominate the barrier's memory.
     pub slots: Vec<Option<SlotPartial>>,
-    /// Sum of the non-silent frames' bit lengths.
+    /// Sum of the non-silent frames' bit lengths at the client edge.
     pub uplink_bits: u64,
     /// Non-silent frame count.
     pub n_frames: usize,
@@ -83,173 +128,445 @@ pub fn decode_upload(
             slots.push(Some(SlotPartial::decode(proto, state, &wf.frame, wf.weight)?));
         }
     }
-    Ok(DecodedUpload { client, slots, uplink_bits, n_frames })
+    Ok(DecodedUpload { origin: ChildKey::Client(client), slots, uplink_bits, n_frames })
 }
 
-/// Merge decoded uploads into the round outcome: sort by client id, then
-/// fold each slot's partials in that order through
-/// [`Decoder::push_partial`]. Bit-identical to
-/// [`aggregate_uploads_reference`] for any upload arrival order and any
-/// decode-thread count.
+/// Merge decoded children slot-wise into one [`SlotPartial`] per slot —
+/// the aggregation-tier node's whole job, and the first half of the
+/// leader's. Exact (associative and commutative), so the result is
+/// independent of arrival order and of how the children were grouped
+/// into spans (any tree ≡ flat) — no sorting needed.
+pub fn fold_spans(proto: &dyn Protocol, decoded: &[DecodedUpload]) -> Result<Vec<SlotPartial>> {
+    let dim = proto.internal_dim();
+    let n_slots = decoded.iter().map(|d| d.slots.len()).max().unwrap_or(0);
+    let mut out = Vec::with_capacity(n_slots);
+    for slot in 0..n_slots {
+        let mut acc = SlotPartial::empty(dim);
+        for d in decoded.iter() {
+            match d.slots.get(slot) {
+                Some(Some(p)) => acc.merge(p)?,
+                // Bit-identical to merging a dense silent partial: zeros
+                // add nothing, so only the holder count moves.
+                Some(None) => acc.add_silent_holder(),
+                None => {}
+            }
+        }
+        out.push(acc);
+    }
+    Ok(out)
+}
+
+/// Merge decoded children into the round outcome: fold every slot, then
+/// finish each one (single rounding + protocol postprocessing).
 pub fn merge_decoded(
     proto: &dyn Protocol,
     state: &RoundState,
-    mut decoded: Vec<DecodedUpload>,
-) -> RoundOutcome {
-    decoded.sort_by_key(|d| d.client);
-    // Slot count: max over workers (workers with empty shards send 0).
-    let n_slots = decoded.iter().map(|d| d.slots.len()).max().unwrap_or(0);
+    decoded: Vec<DecodedUpload>,
+) -> Result<RoundOutcome> {
     let uplink_bits = decoded.iter().map(|d| d.uplink_bits).sum();
     let n_frames = decoded.iter().map(|d| d.n_frames).sum();
-    let mut means = Vec::with_capacity(n_slots);
-    let mut weights = Vec::with_capacity(n_slots);
-    for slot in 0..n_slots {
-        let holders = decoded.iter().filter(|d| d.slots.len() > slot).count();
-        let parts: Vec<&SlotPartial> = decoded
-            .iter()
-            .filter_map(|d| d.slots.get(slot).and_then(|p| p.as_ref()))
-            .collect();
-        // Plain-mean fast path iff every present frame has weight 1.0 —
-        // the same branch (and therefore the same finish semantics) as
-        // the sequential reference.
-        let uniform = parts.iter().all(|p| p.weight == 1.0);
-        let mut dec = Decoder::new(proto, state);
-        for p in &parts {
-            dec.push_partial(p);
-        }
-        if uniform {
-            weights.push(dec.frames() as f64);
-            means.push(dec.finish(holders));
-        } else {
-            weights.push(dec.total_weight());
-            means.push(dec.finish_weighted());
-        }
+    let slots = fold_spans(proto, &decoded)?;
+    let mut means = Vec::with_capacity(slots.len());
+    let mut weights = Vec::with_capacity(slots.len());
+    for sp in &slots {
+        let (mean, weight) = sp.finish(proto, state);
+        means.push(mean);
+        weights.push(weight);
     }
-    RoundOutcome { means, weights, uplink_bits, n_frames }
+    Ok(RoundOutcome { means, weights, uplink_bits, n_frames })
 }
 
-/// The pre-streaming aggregation path: sort uploads by client id, then
-/// decode every slot sequentially, in place. Retained as the executable
-/// bit-exact specification of what the streaming pipeline must produce;
-/// the conformance suite diffs the two.
+/// The flat sequential aggregation path: sort uploads by client id, then
+/// decode and fold every slot in that order, one frame at a time, on one
+/// thread. Retained as the executable specification of what the
+/// streaming pipeline — and any aggregation tree — must produce; the
+/// conformance suites diff against it.
 pub fn aggregate_uploads_reference(
     proto: &dyn Protocol,
     state: &RoundState,
     mut uploads: Vec<(u64, Vec<WeightedFrame>)>,
 ) -> Result<RoundOutcome> {
-    // Deterministic aggregation: decode in client-id order regardless
-    // of arrival order (f32 addition is not associative; without this
-    // the same round could produce different bit patterns run-to-run).
     uploads.sort_by_key(|(client, _)| *client);
+    let dim = proto.internal_dim();
     let n_slots = uploads.iter().map(|(_, f)| f.len()).max().unwrap_or(0);
     let mut means = Vec::with_capacity(n_slots);
     let mut weights = Vec::with_capacity(n_slots);
     let mut uplink_bits = 0u64;
     let mut n_frames = 0usize;
     for slot in 0..n_slots {
-        let slot_frames: Vec<&WeightedFrame> = uploads
-            .iter()
-            .filter_map(|(_, f)| f.get(slot))
-            .filter(|wf| wf.frame.bit_len > 0)
-            .collect();
-        uplink_bits += slot_frames.iter().map(|wf| wf.frame.bit_len).sum::<u64>();
-        n_frames += slot_frames.len();
-        let holders = uploads.iter().filter(|(_, f)| f.get(slot).is_some()).count();
-
-        let mut dec = Decoder::new(proto, state);
-        let uniform = slot_frames.iter().all(|wf| wf.weight == 1.0);
-        if uniform {
-            for wf in &slot_frames {
-                dec.push(&wf.frame)?;
+        let mut acc = SlotPartial::empty(dim);
+        for (_, frames) in &uploads {
+            let Some(wf) = frames.get(slot) else { continue };
+            if wf.frame.bit_len == 0 {
+                acc.add_silent_holder();
+            } else {
+                uplink_bits += wf.frame.bit_len;
+                n_frames += 1;
+                acc.merge(&SlotPartial::decode(proto, state, &wf.frame, wf.weight)?)?;
             }
-            weights.push(slot_frames.len() as f64);
-            means.push(dec.finish(holders));
-        } else {
-            for wf in &slot_frames {
-                dec.push_weighted(&wf.frame, wf.weight)?;
-            }
-            weights.push(dec.total_weight());
-            means.push(dec.finish_weighted());
         }
+        let (mean, weight) = acc.finish(proto, state);
+        means.push(mean);
+        weights.push(weight);
     }
     Ok(RoundOutcome { means, weights, uplink_bits, n_frames })
 }
 
+/// Decode a batch of already-received uploads on `decode_threads`
+/// workers (the pool half of [`aggregate_uploads_streaming`], shared
+/// with the in-memory tree simulator).
+pub(crate) fn decode_all(
+    proto: &dyn Protocol,
+    state: &RoundState,
+    uploads: &[(u64, Vec<WeightedFrame>)],
+    decode_threads: usize,
+) -> Result<Vec<DecodedUpload>> {
+    if decode_threads <= 1 {
+        return uploads.iter().map(|(c, f)| decode_upload(proto, state, *c, f)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let next = &next;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..decode_threads)
+            .map(|_| {
+                scope.spawn(move || {
+                    let mut out = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= uploads.len() {
+                            break;
+                        }
+                        let (c, f) = &uploads[i];
+                        out.push(decode_upload(proto, state, *c, f));
+                    }
+                    out
+                })
+            })
+            .collect();
+        let mut all = Vec::with_capacity(uploads.len());
+        for h in handles {
+            for r in h.join().expect("decode thread panicked") {
+                all.push(r?);
+            }
+        }
+        Ok(all)
+    })
+}
+
 /// Run the streaming aggregation over an already-received upload list
-/// with `decode_threads` workers. Shares the determinism-relevant core
-/// with [`Leader::round`] ([`decode_upload`] + [`merge_decoded`]); only
-/// the task scheduling differs (a ready list here vs the channel-fed
-/// pool a live round streams through — which the conformance suite also
-/// exercises end to end via `Leader::round` itself). Exposed for
-/// benches and the conformance suite.
+/// with `decode_threads` workers. Shares the exact-merge core with
+/// [`Leader::round`]; only the task scheduling differs (a ready list
+/// here vs the channel-fed pool a live round streams through). Exposed
+/// for benches and the conformance suite.
 pub fn aggregate_uploads_streaming(
     proto: &dyn Protocol,
     state: &RoundState,
     uploads: &[(u64, Vec<WeightedFrame>)],
     decode_threads: usize,
 ) -> Result<RoundOutcome> {
-    let decoded = if decode_threads <= 1 {
-        uploads
-            .iter()
-            .map(|(c, f)| decode_upload(proto, state, *c, f))
-            .collect::<Result<Vec<_>>>()?
-    } else {
-        let next = AtomicUsize::new(0);
-        let next = &next;
-        std::thread::scope(|scope| {
-            let handles: Vec<_> = (0..decode_threads)
-                .map(|_| {
-                    scope.spawn(move || {
-                        let mut out = Vec::new();
-                        loop {
-                            let i = next.fetch_add(1, Ordering::Relaxed);
-                            if i >= uploads.len() {
-                                break;
-                            }
-                            let (c, f) = &uploads[i];
-                            out.push(decode_upload(proto, state, *c, f));
-                        }
-                        out
-                    })
-                })
-                .collect();
-            let mut all = Vec::with_capacity(uploads.len());
-            for h in handles {
-                for r in h.join().expect("decode thread panicked") {
-                    all.push(r?);
-                }
-            }
-            Ok::<_, anyhow::Error>(all)
-        })?
-    };
-    Ok(merge_decoded(proto, state, decoded))
+    let decoded = decode_all(proto, state, uploads, decode_threads)?;
+    merge_decoded(proto, state, decoded)
 }
 
-/// The coordinator leader.
+/// What one barrier pass over a hub produced: every child's decoded
+/// contribution plus the wait/decode time split.
+pub(crate) struct CollectedRound {
+    pub decoded: Vec<DecodedUpload>,
+    /// The children that answered, in arrival order.
+    pub seen: Vec<ChildKey>,
+    pub wait_wall: Duration,
+    pub decode_wall: Duration,
+}
+
+/// Marker at the root of every barrier-timeout error chain, so callers
+/// (the aggregator loop) can tell a survivable timeout from a fatal
+/// error without string matching.
+#[derive(Debug)]
+pub(crate) struct BarrierTimeout;
+
+impl std::fmt::Display for BarrierTimeout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "round barrier timed out")
+    }
+}
+
+impl std::error::Error for BarrierTimeout {}
+
+fn barrier_timeout_error(
+    round: u64,
+    timeout: Duration,
+    seen: &[ChildKey],
+    expected: &[ChildKey],
+    n_children: usize,
+) -> anyhow::Error {
+    let missing: Vec<String> =
+        expected.iter().filter(|k| !seen.contains(k)).map(|k| k.to_string()).collect();
+    let msg = if missing.is_empty() {
+        // No usable expectation list: name who DID answer.
+        let got: Vec<String> = seen.iter().map(|k| k.to_string()).collect();
+        format!(
+            "round {round} barrier timed out after {timeout:?}: {}/{n_children} children \
+             answered ({}); the remaining children are unidentified ({})",
+            seen.len(),
+            if got.is_empty() { "none".to_string() } else { got.join(", ") },
+            if expected.is_empty() {
+                "no expectation list"
+            } else {
+                "the expectation list is stale"
+            },
+        )
+    } else {
+        format!(
+            "round {round} barrier timed out after {timeout:?}: missing {} of {n_children} \
+             children: {}",
+            missing.len(),
+            missing.join(", "),
+        )
+    };
+    anyhow::Error::new(BarrierTimeout).context(msg)
+}
+
+/// Children must speak for disjoint client spans — a duplicate client id
+/// or an overlapping aggregator span is a miswired topology, caught at
+/// the barrier rather than silently double-counted.
+fn check_disjoint_spans(seen: &[ChildKey]) -> Result<()> {
+    let mut spans: Vec<(u64, u64, ChildKey)> =
+        seen.iter().map(|k| (k.span().0, k.span().1, *k)).collect();
+    spans.sort_by_key(|&(lo, hi, _)| (lo, hi));
+    for w in spans.windows(2) {
+        ensure!(
+            w[0].1 <= w[1].0,
+            "children cover overlapping client spans: {} and {}",
+            w[0].2,
+            w[1].2
+        );
+    }
+    Ok(())
+}
+
+/// One barrier pass: broadcast already done, receive exactly one message
+/// per child, streaming worker uploads through a decode pool and
+/// absorbing aggregation-tier `PartialUpload`s directly. Shared by
+/// [`Leader::round`] and the aggregation-tier node loop.
+pub(crate) fn collect_round(
+    hub: &mut dyn TransportHub,
+    proto: &dyn Protocol,
+    round_state: &RoundState,
+    round: u64,
+    decode_threads: usize,
+    timeout: Option<Duration>,
+    expected: &[ChildKey],
+) -> Result<CollectedRound> {
+    let n_children = hub.n_workers();
+    ensure!(n_children > 0, "no children connected");
+    let decode_threads = decode_threads.clamp(1, n_children);
+    let decode_ns = AtomicU64::new(0);
+    let mut wait_wall = Duration::ZERO;
+    let mut seen: Vec<ChildKey> = Vec::with_capacity(n_children);
+    // Duplicate detection stays O(1) per arrival; `seen` keeps arrival
+    // order for diagnostics.
+    let mut seen_clients: HashSet<u64> = HashSet::with_capacity(n_children);
+    let mut seen_aggs: HashSet<u64> = HashSet::new();
+    let deadline = timeout.map(|t| Instant::now() + t);
+
+    // Streaming barrier: this thread owns the transport and hands each
+    // worker upload to the decode pool the moment it arrives, so
+    // decoding overlaps the wait for slower children. The channels live
+    // outside the scope: scoped threads may only borrow data that
+    // outlives the scope itself.
+    let (task_tx, task_rx) = mpsc::channel::<(u64, Vec<WeightedFrame>)>();
+    let (out_tx, out_rx) = mpsc::channel::<Result<DecodedUpload>>();
+    let task_rx = Mutex::new(task_rx);
+    let decoded = std::thread::scope(|scope| -> Result<Vec<DecodedUpload>> {
+        // The decode pool spawns lazily on the first worker upload: a
+        // barrier whose children are all aggregation-tier nodes absorbs
+        // `PartialUpload`s directly and never pays for idle threads.
+        let mut pool_started = false;
+
+        // Barrier: exactly one message per child. With a deadline armed,
+        // messages answering an *earlier* round are dropped, not errors:
+        // they are late replies to a round that already timed out, and
+        // dropping them is what lets the round that superseded it still
+        // complete. Without a deadline no round can have timed out, so a
+        // stale answer is a protocol violation worth failing fast on.
+        let mut ready: Vec<DecodedUpload> = Vec::new();
+        let mut n_pooled = 0usize;
+        let mut n_accepted = 0usize;
+        while n_accepted < n_children {
+            let t = Instant::now();
+            let msg = match deadline {
+                None => hub.recv()?,
+                Some(dl) => {
+                    let remain = dl.checked_duration_since(Instant::now());
+                    let msg = match remain {
+                        None => None,
+                        Some(remain) => hub.recv_timeout(remain)?,
+                    };
+                    match msg {
+                        Some(m) => m,
+                        None => {
+                            return Err(barrier_timeout_error(
+                                round,
+                                timeout.unwrap_or_default(),
+                                &seen,
+                                expected,
+                                n_children,
+                            ))
+                        }
+                    }
+                }
+            };
+            wait_wall += t.elapsed();
+            match msg {
+                Message::Upload { client, round: r, frames } => {
+                    if r < round && timeout.is_some() {
+                        continue; // late answer to a timed-out round
+                    }
+                    ensure!(r == round, "client {client} answered round {r}, expected {round}");
+                    ensure!(
+                        seen_clients.insert(client),
+                        "duplicate upload from client {client}"
+                    );
+                    seen.push(ChildKey::Client(client));
+                    if !pool_started {
+                        pool_started = true;
+                        for i in 0..decode_threads {
+                            let out_tx = out_tx.clone();
+                            let task_rx = &task_rx;
+                            let decode_ns = &decode_ns;
+                            std::thread::Builder::new()
+                                .name(format!("dme-decode-{i}"))
+                                .spawn_scoped(scope, move || loop {
+                                    // Hold the lock only for the dequeue,
+                                    // not the decode, so the pool drains
+                                    // in parallel.
+                                    let task = task_rx.lock().unwrap().recv();
+                                    let Ok((client, frames)) = task else { return };
+                                    let t = Instant::now();
+                                    let res = decode_upload(proto, round_state, client, &frames);
+                                    decode_ns.fetch_add(
+                                        t.elapsed().as_nanos() as u64,
+                                        Ordering::Relaxed,
+                                    );
+                                    if out_tx.send(res).is_err() {
+                                        return;
+                                    }
+                                })
+                                .expect("spawning decode thread");
+                        }
+                    }
+                    task_tx.send((client, frames)).expect("decode pool hung up");
+                    n_pooled += 1;
+                    n_accepted += 1;
+                }
+                Message::PartialUpload { agg_id, round: r, span, uplink_bits, n_frames, slots } => {
+                    if r < round && timeout.is_some() {
+                        continue; // late answer to a timed-out round
+                    }
+                    ensure!(
+                        r == round,
+                        "aggregator {agg_id} answered round {r}, expected {round}"
+                    );
+                    ensure!(
+                        seen_aggs.insert(agg_id),
+                        "duplicate partial upload from aggregator {agg_id}"
+                    );
+                    let key = ChildKey::Aggregator { id: agg_id, span };
+                    seen.push(key);
+                    ready.push(DecodedUpload {
+                        origin: key,
+                        slots: slots.into_iter().map(Some).collect(),
+                        uplink_bits,
+                        n_frames: n_frames as usize,
+                    });
+                    n_accepted += 1;
+                }
+                Message::RoundStart { .. } | Message::Shutdown => {
+                    bail!("unexpected message at the round barrier (did a child die mid-round?)")
+                }
+            }
+        }
+        drop(task_tx); // pool drains the queue, then exits
+        drop(out_tx); // the pool threads hold the only other senders
+
+        for _ in 0..n_pooled {
+            ready.push(out_rx.recv().expect("decode pool died")?);
+        }
+        Ok(ready)
+    })?;
+
+    check_disjoint_spans(&seen)?;
+    Ok(CollectedRound {
+        decoded,
+        seen,
+        wait_wall,
+        decode_wall: Duration::from_nanos(decode_ns.load(Ordering::Relaxed)),
+    })
+}
+
+/// The coordinator leader (tree root).
 pub struct Leader {
     protocol: Arc<dyn Protocol>,
     hub: Box<dyn TransportHub>,
     seed: u64,
     metrics: ExperimentMetrics,
     decode_threads: usize,
+    round_timeout: Option<Duration>,
+    /// Children expected at the barrier — seeded by the spawn helpers
+    /// (or [`Leader::with_expected_children`]) and refreshed from each
+    /// completed round, so a timeout can name exactly who is missing.
+    expected_children: Vec<ChildKey>,
 }
 
 impl Leader {
     pub fn new(protocol: Arc<dyn Protocol>, hub: Box<dyn TransportHub>, seed: u64) -> Self {
-        Leader { protocol, hub, seed, metrics: ExperimentMetrics::default(), decode_threads: 1 }
+        Leader {
+            protocol,
+            hub,
+            seed,
+            metrics: ExperimentMetrics::default(),
+            decode_threads: 1,
+            round_timeout: None,
+            expected_children: Vec::new(),
+        }
     }
 
     /// Set the decode-pool width (builder style). Any value produces
-    /// bit-identical round outcomes — the merge order is fixed by client
-    /// ids, never by scheduling; `0` is treated as 1.
+    /// bit-identical round outcomes — the merge is exact, so scheduling
+    /// is free; `0` is treated as 1.
     pub fn with_decode_threads(mut self, n: usize) -> Self {
         self.decode_threads = n.max(1);
+        self
+    }
+
+    /// Arm a per-round barrier deadline (builder style). The default —
+    /// no timeout — waits forever, which keeps loopback behavior
+    /// unchanged; with a timeout, a round whose children do not all
+    /// answer in time fails with an error naming the missing ones. To
+    /// recover, call [`Leader::round`] with the **next** round number:
+    /// the barrier drops late answers to earlier rounds, while retrying
+    /// the same number would race a child's late answer against its
+    /// retry answer.
+    pub fn with_round_timeout(mut self, timeout: Duration) -> Self {
+        self.round_timeout = Some(timeout);
+        self
+    }
+
+    /// Declare the identities of the children expected at the barrier
+    /// (builder style) — used by timeout errors to name the missing.
+    pub fn with_expected_children(mut self, children: Vec<ChildKey>) -> Self {
+        self.expected_children = children;
         self
     }
 
     /// Change the decode-pool width on a live leader.
     pub fn set_decode_threads(&mut self, n: usize) {
         self.decode_threads = n.max(1);
+    }
+
+    /// Change or clear the barrier deadline on a live leader.
+    pub fn set_round_timeout(&mut self, timeout: Option<Duration>) {
+        self.round_timeout = timeout;
     }
 
     pub fn decode_threads(&self) -> usize {
@@ -264,14 +581,19 @@ impl Leader {
         &self.metrics
     }
 
+    /// Cumulative (downlink, uplink) transport bytes at the root hub.
+    pub fn bytes_moved(&self) -> (u64, u64) {
+        self.hub.bytes_moved()
+    }
+
     /// Run one synchronous round: broadcast `state` (`n_slots × dim`
     /// flattened — what the workers need to compute their updates), then
     /// stream uploads through the decode pool as they arrive and merge
-    /// the partials once every worker has answered.
+    /// at the barrier. Children may be workers, aggregation-tier nodes,
+    /// or a mix.
     pub fn round(&mut self, round: u64, dim: u32, state: &[f32]) -> Result<RoundOutcome> {
         let t0 = Instant::now();
-        let n_workers = self.hub.n_workers();
-        ensure!(n_workers > 0, "no workers connected");
+        ensure!(self.hub.n_workers() > 0, "no workers connected");
         // The payload is Arc-shared: one allocation for the whole
         // broadcast instead of one clone per worker.
         self.hub.broadcast(&Message::RoundStart { round, dim, payload: Arc::from(state) })?;
@@ -281,74 +603,34 @@ impl Leader {
         // One round session: shared state (the rotation for π_srk) is
         // prepared once and reused by every decode thread and the merge.
         let round_state = proto.prepare(&ctx);
-        let decode_threads = self.decode_threads.clamp(1, n_workers);
-
-        let decode_ns = AtomicU64::new(0);
-        let mut wait_wall = Duration::ZERO;
-
-        // Streaming barrier: the leader thread owns the transport and
-        // hands each upload to the decode pool the moment it arrives, so
-        // decoding overlaps the wait for slower workers. The channels
-        // live outside the scope: scoped threads may only borrow data
-        // that outlives the scope itself.
-        let hub = &mut self.hub;
-        let (task_tx, task_rx) = mpsc::channel::<(u64, Vec<WeightedFrame>)>();
-        let (out_tx, out_rx) = mpsc::channel::<Result<DecodedUpload>>();
-        let task_rx = Mutex::new(task_rx);
-        let decoded = std::thread::scope(|scope| -> Result<Vec<DecodedUpload>> {
-            for i in 0..decode_threads {
-                let out_tx = out_tx.clone();
-                let task_rx = &task_rx;
-                let proto = proto.as_ref();
-                let round_state = &round_state;
-                let decode_ns = &decode_ns;
-                std::thread::Builder::new()
-                    .name(format!("dme-decode-{i}"))
-                    .spawn_scoped(scope, move || loop {
-                        // Hold the lock only for the dequeue, not the
-                        // decode, so the pool drains in parallel.
-                        let task = task_rx.lock().unwrap().recv();
-                        let Ok((client, frames)) = task else { return };
-                        let t = Instant::now();
-                        let res = decode_upload(proto, round_state, client, &frames);
-                        decode_ns.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                        if out_tx.send(res).is_err() {
-                            return;
-                        }
-                    })
-                    .expect("spawning decode thread");
+        let expected = std::mem::take(&mut self.expected_children);
+        let collected = collect_round(
+            self.hub.as_mut(),
+            proto.as_ref(),
+            &round_state,
+            round,
+            self.decode_threads,
+            self.round_timeout,
+            &expected,
+        );
+        let collected = match collected {
+            Ok(c) => c,
+            Err(e) => {
+                // Keep the expectation list so a retry's timeout error can
+                // still name the missing children. Recovery must use the
+                // NEXT round number: the barrier drops late answers to
+                // earlier rounds, but re-running the *same* round races a
+                // child's late first answer against its retry answer —
+                // an unavoidable duplicate.
+                self.expected_children = expected;
+                return Err(e);
             }
-            drop(out_tx);
-
-            // Barrier: exactly one upload per worker.
-            let mut seen = HashSet::new();
-            for _ in 0..n_workers {
-                let t = Instant::now();
-                let msg = hub.recv()?;
-                wait_wall += t.elapsed();
-                match msg {
-                    Message::Upload { client, round: r, frames } => {
-                        ensure!(r == round, "worker {client} answered round {r}, expected {round}");
-                        ensure!(seen.insert(client), "duplicate upload from worker {client}");
-                        task_tx.send((client, frames)).expect("decode pool hung up");
-                    }
-                    Message::RoundStart { .. } | Message::Shutdown => {
-                        bail!("unexpected message at the leader")
-                    }
-                }
-            }
-            drop(task_tx); // pool drains the queue, then exits
-
-            let mut decoded = Vec::with_capacity(n_workers);
-            for _ in 0..n_workers {
-                decoded.push(out_rx.recv().expect("decode pool died")?);
-            }
-            Ok(decoded)
-        })?;
+        };
+        self.expected_children = collected.seen.clone();
 
         let t_merge = Instant::now();
-        let outcome = merge_decoded(proto.as_ref(), &round_state, decoded);
-        decode_ns.fetch_add(t_merge.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let outcome = merge_decoded(proto.as_ref(), &round_state, collected.decoded)?;
+        let decode_wall = collected.decode_wall + t_merge.elapsed();
 
         let (down, up) = self.hub.bytes_moved();
         self.metrics.push(RoundMetrics {
@@ -356,22 +638,23 @@ impl Leader {
             uplink_bits: outcome.uplink_bits,
             n_frames: outcome.n_frames,
             wall: t0.elapsed(),
-            wait_wall,
-            decode_wall: Duration::from_nanos(decode_ns.load(Ordering::Relaxed)),
+            wait_wall: collected.wait_wall,
+            decode_wall,
             cum_down_bytes: down,
             cum_up_bytes: up,
         });
         Ok(outcome)
     }
 
-    /// Broadcast shutdown to all workers.
+    /// Broadcast shutdown to all children (aggregators forward it down).
     pub fn shutdown(&mut self) -> Result<()> {
         self.hub.broadcast(&Message::Shutdown)
     }
 }
 
 /// Spawn `shards.len()` loopback worker threads plus a leader — the
-/// single-process cluster used by examples, tests, and benches.
+/// flat single-process cluster used by examples, tests, and benches.
+/// For a tree-shaped sibling see `coordinator::aggregator::spawn_local_tree`.
 pub fn spawn_local_cluster(
     protocol: Arc<dyn Protocol>,
     shards: Vec<Vec<Vec<f32>>>,
@@ -396,7 +679,9 @@ pub fn spawn_local_cluster(
                 .expect("spawning worker thread"),
         );
     }
-    (Leader::new(protocol, Box::new(hub), seed), handles)
+    let leader = Leader::new(protocol, Box::new(hub), seed)
+        .with_expected_children((0..n as u64).map(ChildKey::Client).collect());
+    (leader, handles)
 }
 
 #[cfg(test)]
@@ -404,6 +689,7 @@ mod tests {
     use super::*;
     use crate::coordinator::worker::mean_update;
     use crate::protocol::config::ProtocolConfig;
+    use crate::protocol::Encoder;
     use crate::stats;
 
     fn cluster(
@@ -458,8 +744,8 @@ mod tests {
     #[test]
     fn decode_pool_width_does_not_change_round_bits() {
         // Same cluster, same seeds, different decode-thread counts: the
-        // estimates must agree bit for bit (the merge order is fixed by
-        // client ids, not by decode scheduling).
+        // estimates must agree bit for bit (the merge is exact, so
+        // scheduling cannot matter).
         let d = 64;
         let mk_shards = || -> Vec<Vec<Vec<f32>>> {
             (0..9).map(|i| vec![vec![0.3 + i as f32 * 0.7; d]]).collect()
@@ -494,7 +780,7 @@ mod tests {
         let proto = ProtocolConfig::parse("float32", d).unwrap().build().unwrap();
         let ctx = RoundCtx::new(0, 5);
         let state = proto.prepare(&ctx);
-        let mut enc = crate::protocol::Encoder::new(proto.as_ref(), &state);
+        let mut enc = Encoder::new(proto.as_ref(), &state);
         let mut uploads: Vec<(u64, Vec<WeightedFrame>)> = Vec::new();
         for client in 0..5u64 {
             let n_slots = 1 + (client as usize) % 3; // ragged: 1..=3 slots
@@ -530,6 +816,55 @@ mod tests {
                     "threads={threads}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn fold_spans_handles_silent_and_ragged_slots() {
+        // Direct unit coverage of the merge with silent partials and
+        // ragged slot counts — the shapes sampling protocols produce.
+        let d = 8;
+        let proto = ProtocolConfig::parse("float32", d).unwrap().build().unwrap();
+        let ctx = RoundCtx::new(0, 3);
+        let state = proto.prepare(&ctx);
+        let dim = proto.new_accumulator().sum.len();
+        let decoded = vec![
+            DecodedUpload {
+                origin: ChildKey::Client(0),
+                slots: vec![
+                    Some(SlotPartial::from_decoded(&vec![2.0; dim], 1.0, 1).unwrap()),
+                    None, // silent frame
+                ],
+                uplink_bits: 32,
+                n_frames: 1,
+            },
+            DecodedUpload {
+                origin: ChildKey::Client(1),
+                slots: vec![None], // ragged: one slot only, silent
+                uplink_bits: 0,
+                n_frames: 0,
+            },
+            DecodedUpload {
+                origin: ChildKey::Client(2),
+                slots: vec![
+                    Some(SlotPartial::from_decoded(&vec![4.0; dim], 1.0, 1).unwrap()),
+                    Some(SlotPartial::from_decoded(&vec![1.0; dim], 1.0, 1).unwrap()),
+                ],
+                uplink_bits: 64,
+                n_frames: 2,
+            },
+        ];
+        let slots = fold_spans(proto.as_ref(), &decoded).unwrap();
+        assert_eq!(slots.len(), 2);
+        assert_eq!(slots[0].holders, 3);
+        assert_eq!(slots[0].frames, 2);
+        assert_eq!(slots[1].holders, 2);
+        assert_eq!(slots[1].frames, 1);
+        let (mean0, w0) = slots[0].finish(proto.as_ref(), &state);
+        // Plain mean over holders: (2 + 4 + silent 0) / 3.
+        assert_eq!(w0, 2.0);
+        for &v in &mean0 {
+            assert!((v - 2.0).abs() < 1e-6, "{v}");
         }
     }
 

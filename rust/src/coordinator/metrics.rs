@@ -1,5 +1,9 @@
 //! Coordinator metrics: per-round and cumulative communication/latency
-//! accounting, printed by the CLI and consumed by the bench harness.
+//! accounting, printed by the CLI and consumed by the bench harness —
+//! plus the per-tier rollup for aggregation trees ([`TierMetrics`]),
+//! which makes the point of the tier visible: root ingest shrinks from
+//! O(n · frames) to O(root-fan-in · slots) while decode work spreads
+//! across the tree.
 
 use std::time::Duration;
 
@@ -104,6 +108,46 @@ impl ExperimentMetrics {
     }
 }
 
+/// One tier of an aggregation tree, rolled up across its nodes. Tier 0
+/// is the root (leader); the last tier is the aggregators directly above
+/// the workers (or the leader itself when flat).
+#[derive(Clone, Debug)]
+pub struct TierMetrics {
+    pub tier: usize,
+    /// Nodes in this tier (1 for the root).
+    pub nodes: usize,
+    /// Bytes this tier's nodes sent down to their children.
+    pub down_bytes: u64,
+    /// Bytes this tier's nodes ingested from their children — the
+    /// per-tier `bytes_moved` that the tree exists to shrink at the root.
+    pub up_bytes: u64,
+    /// Summed barrier-wait wall time across the tier's nodes.
+    pub wait_wall: Duration,
+    /// Summed decode+merge CPU time across the tier's nodes.
+    pub decode_wall: Duration,
+}
+
+/// Human-readable table of a tree run's tiers.
+pub fn format_tier_table(tiers: &[TierMetrics]) -> String {
+    let mut s = format!(
+        "{:<6} {:>6} {:>14} {:>14} {:>12} {:>12}\n",
+        "tier", "nodes", "ingress bytes", "egress bytes", "wait ms", "decode ms"
+    );
+    for t in tiers {
+        let label = if t.tier == 0 { "root".to_string() } else { format!("agg-{}", t.tier) };
+        s.push_str(&format!(
+            "{:<6} {:>6} {:>14} {:>14} {:>12.1} {:>12.1}\n",
+            label,
+            t.nodes,
+            t.up_bytes,
+            t.down_bytes,
+            t.wait_wall.as_secs_f64() * 1e3,
+            t.decode_wall.as_secs_f64() * 1e3,
+        ));
+    }
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -142,5 +186,31 @@ mod tests {
         assert_eq!(em.avg_bits_per_round(), 0.0);
         assert_eq!(em.uplink_overhead(), 0.0);
         assert_eq!(em.rounds_per_sec(), 0.0);
+    }
+
+    #[test]
+    fn tier_table_renders_every_tier() {
+        let tiers = vec![
+            TierMetrics {
+                tier: 0,
+                nodes: 1,
+                down_bytes: 10,
+                up_bytes: 2_000,
+                wait_wall: Duration::from_millis(4),
+                decode_wall: Duration::from_millis(2),
+            },
+            TierMetrics {
+                tier: 1,
+                nodes: 8,
+                down_bytes: 80,
+                up_bytes: 64_000,
+                wait_wall: Duration::from_millis(9),
+                decode_wall: Duration::from_millis(31),
+            },
+        ];
+        let table = format_tier_table(&tiers);
+        assert!(table.contains("root"));
+        assert!(table.contains("agg-1"));
+        assert!(table.contains("64000"));
     }
 }

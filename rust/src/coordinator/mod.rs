@@ -1,5 +1,5 @@
 //! The leader/worker coordinator: the deployment shell around the
-//! protocols.
+//! protocols, now with an optional **hierarchical aggregation tier**.
 //!
 //! The paper's communication model is synchronous and round-based: the
 //! leader broadcasts the current model state (cluster centers, eigenvector
@@ -8,38 +8,69 @@
 //! and uploads the frame; the leader decodes, aggregates, and advances to
 //! the next round.
 //!
+//! # The tier model
+//!
+//! Because the paper's estimators are linear in the client frames, the
+//! per-slot decoded partials can be merged anywhere — not only at the
+//! leader. A [`Topology`](topology::Topology) arranges workers →
+//! aggregators → leader in an arbitrary-depth tree of contiguous client
+//! spans. Each [`Aggregator`](aggregator::Aggregator) runs the same
+//! streaming barrier + decode pool as the leader over its own children,
+//! folds the results into one exactly-mergeable
+//! [`SlotPartial`](crate::protocol::SlotPartial) per slot, and forwards a
+//! single `PartialUpload` for its whole span; the leader absorbs worker
+//! uploads and partial uploads interchangeably. The per-slot fold is an
+//! exact fixed-point sum (`protocol::exact`), so the root estimate is
+//! **bit-identical to the flat topology for every tree shape, fan-in,
+//! arrival order, and decode-thread count** — the tier is purely a
+//! scaling lever, shrinking root ingest from O(n · frames) to
+//! O(root-fan-in · slots).
+//!
+//! # Modules
+//!
 //! * [`transport`] — the wire: an in-process loopback with exact byte
-//!   accounting, and a TCP transport for running workers as separate
-//!   processes. One message format for both, one `framed_len` accounting
-//!   rule for both (so loopback and TCP report identical `bytes_moved`),
-//!   and `Arc`-shared broadcast payloads so fan-out never clones the
-//!   model state per worker.
+//!   accounting, and a TCP transport for running workers/aggregators as
+//!   separate processes. One message format for both, one `framed_len`
+//!   accounting rule for both (so loopback and TCP report identical
+//!   `bytes_moved`), `Arc`-shared broadcast payloads, and the
+//!   [`Endpoint`](transport::Endpoint) abstraction every child node
+//!   (worker or aggregator) speaks to its parent through.
 //! * [`worker`] — the client side: shard + update function + encoder.
-//! * [`leader`] — the server side: round barrier + the streaming decode
-//!   pipeline. Uploads are decoded the moment they arrive, on a decode
-//!   pool that overlaps the barrier wait; the per-slot partials are then
-//!   merged in client-id order, so the outcome is bit-identical for any
-//!   arrival order and any decode-thread count (see
-//!   [`leader::aggregate_uploads_reference`], the retained sequential
-//!   specification).
+//! * [`leader`] — the tree root: round barrier (optionally with a
+//!   liveness timeout that names missing children) + the streaming
+//!   decode pipeline, with
+//!   [`leader::aggregate_uploads_reference`] retained as the flat
+//!   sequential specification every aggregation path must reproduce
+//!   bit for bit.
+//! * [`aggregator`] — the aggregation-tier node, the in-process tree
+//!   spawner ([`aggregator::spawn_local_tree`]), and the transportless
+//!   tree simulator ([`aggregator::aggregate_tree`]) benches and
+//!   conformance tests drive.
+//! * [`topology`] — tree descriptors ([`topology::Topology::uniform`])
+//!   and their structural invariants.
 //! * [`metrics`] — per-round and cumulative communication/latency
-//!   metrics, including the barrier-wait vs decode-work split.
+//!   metrics, including the barrier-wait vs decode-work split and the
+//!   per-tier rollup ([`metrics::TierMetrics`]).
 //!
 //! Threading: plain `std::thread` + channels. The round barrier is the
-//! natural synchronization point of the paper's model (all clients answer
-//! every round — or stay silent under sampling, which the protocol layer
-//! decides); an async runtime would buy nothing here. The leader's decode
-//! pool is a per-round set of scoped threads fed by the receive loop —
-//! at millions-of-users scale the server's decode path, not the clients'
-//! encode path, is the bottleneck, and it parallelizes without touching
+//! natural synchronization point of the paper's model; an async runtime
+//! would buy nothing here. Every barrier node (leader or aggregator)
+//! owns a per-round set of scoped decode threads fed by its receive
+//! loop — at millions-of-users scale the server's decode path, not the
+//! clients' encode path, is the bottleneck, and the tier spreads that
+//! work across as many nodes as the topology provides without touching
 //! the determinism contract.
 
+pub mod aggregator;
 pub mod leader;
 pub mod metrics;
+pub mod topology;
 pub mod transport;
 pub mod worker;
 
-pub use leader::{Leader, RoundOutcome};
-pub use metrics::{ExperimentMetrics, RoundMetrics};
-pub use transport::{LoopbackHub, Message, TcpHub, TransportHub};
+pub use aggregator::{aggregate_tree, spawn_local_tree, Aggregator, AggregatorReport};
+pub use leader::{ChildKey, Leader, RoundOutcome};
+pub use metrics::{ExperimentMetrics, RoundMetrics, TierMetrics};
+pub use topology::Topology;
+pub use transport::{Endpoint, LoopbackHub, Message, TcpHub, TransportHub};
 pub use worker::{UpdateFn, Worker};

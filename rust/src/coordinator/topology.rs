@@ -1,0 +1,250 @@
+//! Aggregation-tree topology: how workers, aggregation-tier nodes, and
+//! the leader are arranged.
+//!
+//! A [`Topology`] describes a tree over the client-id range
+//! `[0, n_clients)`: level 0 of [`Topology::levels`] is the aggregator
+//! tier directly above the workers, higher levels sit above it, and the
+//! leader takes whatever the top level exposes ([`Topology::root_children`]).
+//! Every aggregator owns a contiguous client span, spans at each level
+//! partition `[0, n_clients)`, and a child's span is always contained in
+//! its parent's — the invariants [`Topology::validate`] checks and the
+//! coordinator relies on for its span-disjointness barrier checks.
+//!
+//! Because the aggregation state itself is exactly mergeable
+//! (`SlotPartial`), the *shape* of the tree never changes the root
+//! estimate — topology is purely a deployment/throughput decision: a
+//! deeper tree trades hops for a smaller fan-in (and so a smaller ingest
+//! load) at every node, shrinking root ingest from O(n · frames) to
+//! O(root-fan-in · slots).
+
+use anyhow::{ensure, Result};
+
+/// One child of an aggregator (or of the leader): either a worker
+/// (leaf), or an aggregator at `levels[level][index]`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Child {
+    Worker(u64),
+    Agg { level: usize, index: usize },
+}
+
+/// One aggregation-tier node: its wire id, the contiguous client span it
+/// covers, and its direct children.
+#[derive(Clone, Debug)]
+pub struct AggSpec {
+    /// Unique id across the whole tree (what `PartialUpload` carries).
+    pub id: u64,
+    /// Covered clients `[span.0, span.1)`.
+    pub span: (u64, u64),
+    pub children: Vec<Child>,
+}
+
+/// A tree arrangement of workers → aggregators → leader.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    n_clients: u64,
+    /// `levels[0]` is the tier directly above the workers; the last
+    /// entry is the tier directly below the leader. Empty = flat.
+    levels: Vec<Vec<AggSpec>>,
+}
+
+impl Topology {
+    /// The flat topology: every worker reports straight to the leader.
+    pub fn flat(n_clients: u64) -> Self {
+        Topology { n_clients, levels: Vec::new() }
+    }
+
+    /// A uniform tree: `depth` barrier tiers (1 = flat, 2 = one
+    /// aggregator tier, …), each aggregator taking at most `fanout`
+    /// consecutive children from the tier below.
+    pub fn uniform(n_clients: u64, fanout: usize, depth: usize) -> Result<Self> {
+        ensure!(n_clients >= 1, "topology needs at least one client");
+        ensure!(fanout >= 1, "fanout must be at least 1");
+        ensure!((1..=16).contains(&depth), "depth must be in 1..=16");
+        let mut levels: Vec<Vec<AggSpec>> = Vec::new();
+        // The tier below the one being built: (span, child handle).
+        let mut below: Vec<((u64, u64), Child)> =
+            (0..n_clients).map(|c| ((c, c + 1), Child::Worker(c))).collect();
+        let mut next_id = 0u64;
+        for level in 0..depth.saturating_sub(1) {
+            let mut tier = Vec::with_capacity(below.len().div_ceil(fanout));
+            for chunk in below.chunks(fanout) {
+                let span = (chunk[0].0 .0, chunk[chunk.len() - 1].0 .1);
+                tier.push(AggSpec {
+                    id: next_id,
+                    span,
+                    children: chunk.iter().map(|&(_, c)| c).collect(),
+                });
+                next_id += 1;
+            }
+            below = tier
+                .iter()
+                .enumerate()
+                .map(|(index, spec)| (spec.span, Child::Agg { level, index }))
+                .collect();
+            levels.push(tier);
+        }
+        let topo = Topology { n_clients, levels };
+        topo.validate()?;
+        Ok(topo)
+    }
+
+    pub fn n_clients(&self) -> u64 {
+        self.n_clients
+    }
+
+    /// Number of barrier tiers, counting the leader's (flat = 1).
+    pub fn depth(&self) -> usize {
+        self.levels.len() + 1
+    }
+
+    /// Aggregator tiers, bottom-up; empty for the flat topology.
+    pub fn levels(&self) -> &[Vec<AggSpec>] {
+        &self.levels
+    }
+
+    pub fn spec(&self, level: usize, index: usize) -> &AggSpec {
+        &self.levels[level][index]
+    }
+
+    /// Total number of aggregation-tier nodes.
+    pub fn n_aggregators(&self) -> usize {
+        self.levels.iter().map(|t| t.len()).sum()
+    }
+
+    /// The leader's direct children.
+    pub fn root_children(&self) -> Vec<Child> {
+        match self.levels.last() {
+            None => (0..self.n_clients).map(Child::Worker).collect(),
+            Some(top) => (0..top.len())
+                .map(|index| Child::Agg { level: self.levels.len() - 1, index })
+                .collect(),
+        }
+    }
+
+    /// How many children the leader ingests per round.
+    pub fn root_fan_in(&self) -> usize {
+        match self.levels.last() {
+            None => self.n_clients as usize,
+            Some(top) => top.len(),
+        }
+    }
+
+    /// The span a child handle covers.
+    pub fn child_span(&self, child: &Child) -> (u64, u64) {
+        match child {
+            Child::Worker(c) => (*c, c + 1),
+            Child::Agg { level, index } => self.levels[*level][*index].span,
+        }
+    }
+
+    /// Check the structural invariants: every tier's spans partition
+    /// `[0, n_clients)` in order, children are contiguous and contained
+    /// in their parent's span, and ids are unique.
+    pub fn validate(&self) -> Result<()> {
+        let mut ids = std::collections::HashSet::new();
+        for (level, tier) in self.levels.iter().enumerate() {
+            let mut cursor = 0u64;
+            for spec in tier {
+                ensure!(ids.insert(spec.id), "duplicate aggregator id {}", spec.id);
+                ensure!(spec.span.0 == cursor, "tier {level} spans leave a gap at {cursor}");
+                ensure!(spec.span.1 > spec.span.0, "aggregator {} has an empty span", spec.id);
+                ensure!(!spec.children.is_empty(), "aggregator {} has no children", spec.id);
+                let mut child_cursor = spec.span.0;
+                for child in &spec.children {
+                    let (lo, hi) = self.child_span(child);
+                    ensure!(
+                        lo == child_cursor && hi <= spec.span.1,
+                        "aggregator {}: child span [{lo}, {hi}) breaks its span {:?}",
+                        spec.id,
+                        spec.span
+                    );
+                    if let Child::Agg { level: cl, .. } = child {
+                        ensure!(level > 0 && *cl == level - 1, "child tier must be one below");
+                    }
+                    child_cursor = hi;
+                }
+                ensure!(child_cursor == spec.span.1, "aggregator {} span not covered", spec.id);
+                cursor = spec.span.1;
+            }
+            ensure!(cursor == self.n_clients, "tier {level} does not cover all clients");
+        }
+        Ok(())
+    }
+
+    /// One-line human description, e.g.
+    /// `"4096 workers → 64 aggs (fan-in 64) → 1 agg (fan-in 64) → leader (fan-in 1)"`.
+    pub fn describe(&self) -> String {
+        let mut s = format!("{} workers", self.n_clients);
+        for tier in &self.levels {
+            let max_fan = tier.iter().map(|a| a.children.len()).max().unwrap_or(0);
+            s.push_str(&format!(" → {} aggs (fan-in ≤ {})", tier.len(), max_fan));
+        }
+        s.push_str(&format!(" → leader (fan-in {})", self.root_fan_in()));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_topology_is_depth_one() {
+        let t = Topology::flat(5);
+        assert_eq!(t.depth(), 1);
+        assert_eq!(t.n_aggregators(), 0);
+        assert_eq!(t.root_fan_in(), 5);
+        assert_eq!(t.root_children().len(), 5);
+        assert!(t.validate().is_ok());
+        assert_eq!(Topology::uniform(5, 8, 1).unwrap().n_aggregators(), 0);
+    }
+
+    #[test]
+    fn uniform_depth2_partitions_clients() {
+        let t = Topology::uniform(36, 32, 2).unwrap();
+        assert_eq!(t.depth(), 2);
+        assert_eq!(t.levels().len(), 1);
+        assert_eq!(t.levels()[0].len(), 2);
+        assert_eq!(t.levels()[0][0].span, (0, 32));
+        assert_eq!(t.levels()[0][1].span, (32, 36));
+        assert_eq!(t.root_fan_in(), 2);
+        assert!(t.describe().contains("36 workers"));
+    }
+
+    #[test]
+    fn uniform_depth3_nests_spans() {
+        let t = Topology::uniform(100, 7, 3).unwrap();
+        assert_eq!(t.depth(), 3);
+        assert_eq!(t.levels()[0].len(), 15); // ceil(100/7)
+        assert_eq!(t.levels()[1].len(), 3); // ceil(15/7)
+        assert_eq!(t.root_fan_in(), 3);
+        assert_eq!(t.n_aggregators(), 18);
+        // ids unique and spans nested — validate() checks it all.
+        assert!(t.validate().is_ok());
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        // fanout 1: a chain tier with one aggregator per worker.
+        let t = Topology::uniform(4, 1, 2).unwrap();
+        assert_eq!(t.levels()[0].len(), 4);
+        assert_eq!(t.root_fan_in(), 4);
+        // fanout ≥ n: a single aggregator holding everyone.
+        let t = Topology::uniform(4, 64, 2).unwrap();
+        assert_eq!(t.levels()[0].len(), 1);
+        assert_eq!(t.root_fan_in(), 1);
+        // deeper than useful: chains of singleton aggregators are legal.
+        let t = Topology::uniform(3, 8, 4).unwrap();
+        assert_eq!(t.depth(), 4);
+        assert_eq!(t.levels()[1].len(), 1);
+        assert_eq!(t.levels()[2].len(), 1);
+    }
+
+    #[test]
+    fn invalid_parameters_rejected() {
+        assert!(Topology::uniform(0, 4, 2).is_err());
+        assert!(Topology::uniform(4, 0, 2).is_err());
+        assert!(Topology::uniform(4, 4, 0).is_err());
+        assert!(Topology::uniform(4, 4, 17).is_err());
+    }
+}

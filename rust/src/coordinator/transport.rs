@@ -25,6 +25,10 @@
 //! tag 2 Upload:     u64 client, u64 round, u32 n_frames,
 //!                   then per frame: u64 bit_len, u32 n_bytes, f32 weight, bytes
 //! tag 3 Shutdown
+//! tag 4 PartialUpload: u64 agg_id, u64 round, u64 span.0, u64 span.1,
+//!                   u64 uplink_bits, u64 n_frames, u32 n_slots, then per
+//!                   slot: u32 n_bytes + a versioned SlotPartial
+//!                   serialization (see `SlotPartial::to_bytes`)
 //! ```
 //!
 //! On the wire every message is preceded by a u32 length prefix
@@ -35,12 +39,13 @@
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::mpsc::{Receiver, Sender};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::protocol::Frame;
+use crate::protocol::{Frame, SlotPartial};
 
 /// A weighted encoded vector (weight matters for weighted averages, e.g.
 /// cluster sizes in distributed Lloyd's; 1.0 for plain means).
@@ -62,6 +67,18 @@ pub enum Message {
     /// sampling layer silenced still uploads an empty frame list (the
     /// leader needs the barrier).
     Upload { client: u64, round: u64, frames: Vec<WeightedFrame> },
+    /// Aggregator → parent: one exactly-merged `SlotPartial` per slot for
+    /// the aggregator's whole client span `[span.0, span.1)`, plus the
+    /// span's client-edge accounting (`uplink_bits`, `n_frames`) so the
+    /// root still reports the paper's per-client communication cost.
+    PartialUpload {
+        agg_id: u64,
+        round: u64,
+        span: (u64, u64),
+        uplink_bits: u64,
+        n_frames: u64,
+        slots: Vec<SlotPartial>,
+    },
     /// Leader → workers: tear down.
     Shutdown,
 }
@@ -88,6 +105,14 @@ impl Message {
                         wf.frame.bit_len <= wf.frame.bytes.len() as u64 * 8,
                         "bit_len exceeds payload"
                     );
+                }
+            }
+            Message::PartialUpload { span, slots, .. } => {
+                ensure!(span.0 <= span.1, "PartialUpload span is inverted");
+                ensure_u32(slots.len())?;
+                check_partial_holders(*span, slots)?;
+                for s in slots {
+                    ensure_u32(s.wire_len())?;
                 }
             }
             Message::Shutdown => {}
@@ -127,6 +152,21 @@ impl Message {
                     out.extend_from_slice(&wf.frame.bytes);
                 }
             }
+            Message::PartialUpload { agg_id, round, span, uplink_bits, n_frames, slots } => {
+                out.push(4u8);
+                out.extend_from_slice(&agg_id.to_le_bytes());
+                out.extend_from_slice(&round.to_le_bytes());
+                out.extend_from_slice(&span.0.to_le_bytes());
+                out.extend_from_slice(&span.1.to_le_bytes());
+                out.extend_from_slice(&uplink_bits.to_le_bytes());
+                out.extend_from_slice(&n_frames.to_le_bytes());
+                out.extend_from_slice(&(slots.len() as u32).to_le_bytes());
+                for s in slots {
+                    let bytes = s.to_bytes()?;
+                    out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+                    out.extend_from_slice(&bytes);
+                }
+            }
             Message::Shutdown => out.push(3u8),
         }
         Ok(out)
@@ -138,14 +178,9 @@ impl Message {
     pub fn wire_len(&self) -> u64 {
         match self {
             Message::RoundStart { payload, .. } => 1 + 8 + 4 + 4 + payload.len() as u64 * 4,
-            Message::Upload { frames, .. } => {
-                1 + 8
-                    + 8
-                    + 4
-                    + frames
-                        .iter()
-                        .map(|wf| 8 + 4 + 4 + wf.frame.bytes.len() as u64)
-                        .sum::<u64>()
+            Message::Upload { frames, .. } => Self::upload_wire_len(frames),
+            Message::PartialUpload { slots, .. } => {
+                1 + 8 * 6 + 4 + slots.iter().map(|s| 4 + s.wire_len() as u64).sum::<u64>()
             }
             Message::Shutdown => 1,
         }
@@ -156,6 +191,19 @@ impl Message {
     /// identical `bytes_moved` for identical traffic.
     pub fn framed_len(&self) -> u64 {
         self.wire_len() + 4
+    }
+
+    /// Wire size of an `Upload` carrying `frames`, from borrowed frames —
+    /// accounting paths (the tree simulator) measure what a message
+    /// *would* cost without cloning the payload into one.
+    pub fn upload_wire_len(frames: &[WeightedFrame]) -> u64 {
+        1 + 8
+            + 8
+            + 4
+            + frames
+                .iter()
+                .map(|wf| 8 + 4 + 4 + wf.frame.bytes.len() as u64)
+                .sum::<u64>()
     }
 
     /// Parse from the wire format.
@@ -208,9 +256,51 @@ impl Message {
                 c.done()?;
                 Ok(Message::Shutdown)
             }
+            4 => {
+                let agg_id = c.u64()?;
+                let round = c.u64()?;
+                let span = (c.u64()?, c.u64()?);
+                ensure!(span.0 <= span.1, "PartialUpload span is inverted");
+                let uplink_bits = c.u64()?;
+                let n_frames = c.u64()?;
+                let n = c.u32()? as usize;
+                // Validate before allocating (as for Upload): every slot
+                // needs at least a 4-byte length prefix.
+                ensure!(
+                    n as u64 <= c.remaining() as u64 / 4,
+                    "PartialUpload slot count exceeds message size"
+                );
+                // n is attacker-controlled and a parsed SlotPartial takes
+                // far more memory than its 4-byte floor on the wire:
+                // reserve modestly and let growth track parsed bytes.
+                let mut slots = Vec::with_capacity(n.min(1 + c.remaining() / 64));
+                for _ in 0..n {
+                    let len = c.u32()? as usize;
+                    slots.push(SlotPartial::from_bytes(c.take(len)?)?);
+                }
+                c.done()?;
+                check_partial_holders(span, &slots)?;
+                Ok(Message::PartialUpload { agg_id, round, span, uplink_bits, n_frames, slots })
+            }
             t => bail!("unknown message tag {t}"),
         }
     }
+}
+
+/// A `PartialUpload`'s slots cannot claim more holders than the span has
+/// clients — each client holds a slot at most once, however deep the
+/// tree. Checked on send (validate) and on parse, so a forged span
+/// cannot inflate the root's plain-mean divisor.
+fn check_partial_holders(span: (u64, u64), slots: &[SlotPartial]) -> Result<()> {
+    let width = span.1 - span.0;
+    for s in slots {
+        ensure!(
+            s.holders <= width,
+            "PartialUpload claims {} slot holders for a span of {width} clients",
+            s.holders
+        );
+    }
+    Ok(())
 }
 
 /// Checked narrowing for wire-format length fields: an oversized frame is
@@ -255,7 +345,9 @@ impl<'a> Cursor<'a> {
 }
 
 /// Leader-side view of a transport: broadcast to all workers, receive
-/// uploads, with cumulative byte accounting.
+/// uploads, with cumulative byte accounting. "Workers" here means the
+/// node's direct children — real workers, or aggregation-tier nodes
+/// forwarding `PartialUpload`s.
 pub trait TransportHub: Send {
     /// Number of connected workers.
     fn n_workers(&self) -> usize;
@@ -263,8 +355,23 @@ pub trait TransportHub: Send {
     fn broadcast(&mut self, msg: &Message) -> Result<()>;
     /// Block for the next upload.
     fn recv(&mut self) -> Result<Message>;
+    /// Block for the next upload, up to `timeout`: `Ok(None)` means the
+    /// deadline passed with no message (the barrier-liveness path —
+    /// callers turn it into an error naming the missing children).
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<Message>>;
     /// Cumulative (downlink, uplink) bytes moved so far.
     fn bytes_moved(&self) -> (u64, u64);
+}
+
+/// Child-side view of a transport link to the parent node: what a worker
+/// (or an aggregation-tier node talking to *its* parent) holds. One
+/// abstraction for both the in-process and the TCP endpoint, so the
+/// worker/aggregator loops are written once.
+pub trait Endpoint: Send {
+    /// Send a message upstream.
+    fn send_msg(&mut self, msg: Message) -> Result<()>;
+    /// Block for the next downstream message.
+    fn recv_msg(&mut self) -> Result<Message>;
 }
 
 // ---------------------------------------------------------------------------
@@ -296,6 +403,15 @@ impl LoopbackEndpoint {
     }
     pub fn recv(&self) -> Result<Message> {
         self.rx.recv().context("leader hung up")
+    }
+}
+
+impl Endpoint for LoopbackEndpoint {
+    fn send_msg(&mut self, msg: Message) -> Result<()> {
+        LoopbackEndpoint::send(self, msg)
+    }
+    fn recv_msg(&mut self) -> Result<Message> {
+        LoopbackEndpoint::recv(self)
     }
 }
 
@@ -353,6 +469,14 @@ impl TransportHub for LoopbackHub {
 
     fn recv(&mut self) -> Result<Message> {
         self.from_workers.recv().context("all workers hung up")
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<Message>> {
+        match self.from_workers.recv_timeout(timeout) {
+            Ok(m) => Ok(Some(m)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => bail!("all workers hung up"),
+        }
     }
 
     fn bytes_moved(&self) -> (u64, u64) {
@@ -497,6 +621,14 @@ impl TransportHub for TcpHub {
         self.from_workers.recv().context("all workers disconnected")?
     }
 
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<Message>> {
+        match self.from_workers.recv_timeout(timeout) {
+            Ok(m) => Ok(Some(m?)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => bail!("all workers disconnected"),
+        }
+    }
+
     fn bytes_moved(&self) -> (u64, u64) {
         (self.down_bytes, *self.up_bytes.lock().unwrap())
     }
@@ -523,6 +655,15 @@ impl TcpEndpoint {
 
     pub fn recv(&mut self) -> Result<Message> {
         Ok(read_msg(&mut self.reader)?.0)
+    }
+}
+
+impl Endpoint for TcpEndpoint {
+    fn send_msg(&mut self, msg: Message) -> Result<()> {
+        TcpEndpoint::send(self, &msg)
+    }
+    fn recv_msg(&mut self) -> Result<Message> {
+        TcpEndpoint::recv(self)
     }
 }
 
@@ -557,8 +698,46 @@ mod tests {
                     assert_eq!(a.weight, b.weight);
                 }
             }
+            (
+                Message::PartialUpload {
+                    agg_id: a1,
+                    round: r1,
+                    span: s1,
+                    uplink_bits: u1,
+                    n_frames: n1,
+                    slots: sl1,
+                },
+                Message::PartialUpload {
+                    agg_id: a2,
+                    round: r2,
+                    span: s2,
+                    uplink_bits: u2,
+                    n_frames: n2,
+                    slots: sl2,
+                },
+            ) => {
+                assert_eq!((a1, r1, s1, u1, n1), (a2, r2, s2, u2, n2));
+                assert_eq!(sl1, sl2, "slots must round-trip exactly");
+            }
             (Message::Shutdown, Message::Shutdown) => {}
             _ => panic!("variant mismatch"),
+        }
+    }
+
+    /// A PartialUpload with merged, weighted, and silent slots — the
+    /// shapes an aggregation-tier node actually produces.
+    fn partial_upload() -> Message {
+        let mut merged = SlotPartial::from_decoded(&[1.5, -2.25, 0.5], 1.0, 1).unwrap();
+        merged.merge(&SlotPartial::from_decoded(&[0.25, 1e-3, -7.0], 2.5, 1).unwrap()).unwrap();
+        merged.merge(&SlotPartial::silent(3)).unwrap();
+        let uniform = SlotPartial::from_decoded(&[4.0, 0.0, -0.125], 1.0, 1).unwrap();
+        Message::PartialUpload {
+            agg_id: 9,
+            round: 3,
+            span: (16, 48),
+            uplink_bits: 12345,
+            n_frames: 2,
+            slots: vec![merged, uniform, SlotPartial::silent(3)],
         }
     }
 
@@ -581,6 +760,17 @@ mod tests {
                 frames: vec![frame(vec![0xab, 0xcd], 12), frame(vec![], 0)],
             },
             Message::Upload { client: 0, round: 0, frames: vec![] },
+            partial_upload(),
+            // A span-degenerate, slotless partial (an aggregator whose
+            // whole span was silent this round).
+            Message::PartialUpload {
+                agg_id: 0,
+                round: 0,
+                span: (5, 5),
+                uplink_bits: 0,
+                n_frames: 0,
+                slots: vec![],
+            },
             Message::Shutdown,
         ]
     }
@@ -647,12 +837,68 @@ mod tests {
                 frames: vec![frame(vec![0xab; 17], 130), frame(vec![], 0)],
             },
             Message::Upload { client: 0, round: 0, frames: vec![] },
+            partial_upload(),
             Message::Shutdown,
         ];
         for m in msgs {
             assert_eq!(m.wire_len(), m.to_bytes().unwrap().len() as u64);
             assert_eq!(m.framed_len(), m.wire_len() + 4);
         }
+    }
+
+    #[test]
+    fn malformed_partial_uploads_rejected() {
+        // Inverted span: rejected by validate() on send — which is the
+        // same gate both hubs run — and by the parser.
+        let inverted = Message::PartialUpload {
+            agg_id: 1,
+            round: 0,
+            span: (8, 4),
+            uplink_bits: 0,
+            n_frames: 0,
+            slots: vec![],
+        };
+        assert!(inverted.validate().is_err());
+        assert!(inverted.to_bytes().is_err());
+        let (mut hub, eps) = LoopbackHub::new(1);
+        assert!(hub.broadcast(&inverted).is_err());
+        assert!(eps[0].send(inverted).is_err());
+        // Slot count larger than the message could hold: rejected before
+        // any allocation.
+        let mut bytes = vec![4u8];
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // agg_id
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // round
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // span.0
+        bytes.extend_from_slice(&9u64.to_le_bytes()); // span.1
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // uplink_bits
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // n_frames
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes()); // n_slots
+        assert!(Message::from_bytes(&bytes).is_err());
+        // Truncations of a valid message are rejected at every cut the
+        // wire could realistically produce.
+        let good = partial_upload().to_bytes().unwrap();
+        for cut in [1usize, 9, 40, 53, 55, good.len() / 2, good.len() - 1] {
+            assert!(
+                Message::from_bytes(&good[..cut]).is_err(),
+                "truncation at {cut} accepted"
+            );
+        }
+        let mut long = good.clone();
+        long.push(7);
+        assert!(Message::from_bytes(&long).is_err(), "trailing garbage accepted");
+    }
+
+    #[test]
+    fn hub_recv_timeout_elapses_and_delivers() {
+        let (mut hub, eps) = LoopbackHub::new(1);
+        assert!(hub.recv_timeout(Duration::from_millis(10)).unwrap().is_none());
+        eps[0].send(Message::Upload { client: 3, round: 0, frames: vec![] }).unwrap();
+        match hub.recv_timeout(Duration::from_millis(100)).unwrap() {
+            Some(Message::Upload { client, .. }) => assert_eq!(client, 3),
+            other => panic!("expected the queued upload, got {other:?}"),
+        }
+        drop(eps);
+        assert!(hub.recv_timeout(Duration::from_millis(10)).is_err(), "disconnected");
     }
 
     #[test]

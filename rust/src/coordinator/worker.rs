@@ -6,7 +6,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use super::transport::{LoopbackEndpoint, Message, WeightedFrame};
+use super::transport::{Endpoint, LoopbackEndpoint, Message, WeightedFrame};
 use crate::protocol::{Encoder, Protocol, RoundCtx};
 use crate::rng;
 
@@ -62,51 +62,46 @@ impl Worker {
         Ok(Message::Upload { client: self.client_id, round, frames })
     }
 
-    /// Run the worker loop over a loopback endpoint until Shutdown.
-    pub fn run_loopback(&self, ep: LoopbackEndpoint) -> Result<()> {
+    /// Run the worker loop over any endpoint until Shutdown: the one
+    /// loop both transports (and both parents — leader or aggregator)
+    /// share.
+    pub fn run(&self, ep: &mut dyn Endpoint) -> Result<()> {
         loop {
-            match ep.recv()? {
+            match ep.recv_msg()? {
                 Message::RoundStart { round, dim, payload } => {
                     match self.step(round, dim, &payload) {
-                        Ok(reply) => ep.send(reply)?,
+                        Ok(reply) => ep.send_msg(reply)?,
                         Err(e) => {
-                            // Wake the leader's barrier before dying: an
+                            // Wake the parent's barrier before dying: an
                             // unexpected Shutdown from a worker makes the
-                            // leader error out instead of waiting forever
-                            // for an upload that will never come.
-                            let _ = ep.send(Message::Shutdown);
+                            // parent error out instead of waiting forever
+                            // for an upload that will never come. (Over
+                            // TCP this matters even more: a lone dead
+                            // worker does not close the parent's upload
+                            // channel — other readers keep it open.)
+                            let _ = ep.send_msg(Message::Shutdown);
                             return Err(e);
                         }
                     }
                 }
                 Message::Shutdown => return Ok(()),
-                Message::Upload { .. } => bail!("worker received an Upload message"),
+                Message::Upload { .. } | Message::PartialUpload { .. } => {
+                    bail!("worker received an upstream-only message")
+                }
             }
         }
+    }
+
+    /// Run the worker loop over a loopback endpoint until Shutdown.
+    pub fn run_loopback(&self, ep: LoopbackEndpoint) -> Result<()> {
+        let mut ep = ep;
+        self.run(&mut ep)
     }
 
     /// Run the worker loop over TCP (the `dme worker` subcommand).
     pub fn run_tcp(&self, addr: &str) -> Result<()> {
         let mut ep = super::transport::TcpEndpoint::connect(addr)?;
-        loop {
-            match ep.recv()? {
-                Message::RoundStart { round, dim, payload } => {
-                    match self.step(round, dim, &payload) {
-                        Ok(reply) => ep.send(&reply)?,
-                        Err(e) => {
-                            // Same barrier-wakeup as the loopback path: a
-                            // lone dead worker does not close the leader's
-                            // upload channel (other readers keep it open),
-                            // so signal explicitly before exiting.
-                            let _ = ep.send(&Message::Shutdown);
-                            return Err(e);
-                        }
-                    }
-                }
-                Message::Shutdown => return Ok(()),
-                Message::Upload { .. } => bail!("worker received an Upload message"),
-            }
-        }
+        self.run(&mut ep)
     }
 }
 

@@ -60,6 +60,17 @@
 //! [`protocol::run_round_par`] to shard clients across threads — the two
 //! are bit-identical for every thread count (the f32 accumulation order
 //! is fixed by client id, never by scheduling).
+//!
+//! ## Scaling out: the aggregation tier
+//!
+//! The estimators are linear in the client frames, so server-side
+//! aggregation distributes: [`coordinator::topology::Topology`] arranges
+//! workers → [`coordinator::aggregator::Aggregator`]s → leader in
+//! arbitrary-depth trees, each node folding its span into exactly
+//! mergeable [`SlotPartial`]s (fixed-point sums, [`protocol::exact`]).
+//! Root ingest drops from O(n · frames) to O(root-fan-in · slots) while
+//! the root estimate stays **bit-identical to the flat topology for
+//! every tree shape** — see `coordinator` for the tier model.
 
 pub mod apps;
 pub mod bench;

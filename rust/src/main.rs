@@ -1,13 +1,17 @@
 //! `dme` — the coordinator CLI.
 //!
 //! ```text
-//! dme estimate --dim 256 --clients 100 --protocol rotated:k=16 [--trials 20]
-//!              [--data gaussian|unbalanced|sphere|mnist|cifar] [--backend pjrt]
-//! dme kmeans   --data mnist --clients 10 --centers 10 --iters 10 --protocol varlen
-//! dme power    --data cifar --clients 100 --iters 10 --protocol rotated:k=32
-//! dme serve    --addr 0.0.0.0:7070 --workers 4 --dim 256 --protocol varlen --rounds 10
-//!              [--decode-threads N]   (0 = all cores; any value is bit-identical)
-//! dme worker   --connect host:7070 --dim 256 --protocol varlen [--points 100]
+//! dme estimate  --dim 256 --clients 100 --protocol rotated:k=16 [--trials 20]
+//!               [--data gaussian|unbalanced|sphere|mnist|cifar] [--backend pjrt]
+//! dme kmeans    --data mnist --clients 10 --centers 10 --iters 10 --protocol varlen
+//! dme power     --data cifar --clients 100 --iters 10 --protocol rotated:k=32
+//! dme serve     --addr 0.0.0.0:7070 --workers 4 --dim 256 --protocol varlen --rounds 10
+//!               [--decode-threads N]   (0 = all cores; any value is bit-identical)
+//!               [--timeout-ms 30000]   (round barrier deadline; 0 = wait forever)
+//!               [--fanout 16 --depth 2]  (single-process loopback tree instead of TCP)
+//! dme aggregate --parent host:7070 --listen 0.0.0.0:7071 --children 16 --span 0:16
+//!               --dim 256 --protocol varlen [--id N] [--decode-threads N] [--timeout-ms N]
+//! dme worker    --connect host:7071 --dim 256 --protocol varlen [--points 100]
 //! dme info
 //! ```
 //!
@@ -15,13 +19,17 @@
 //! varlen[:k=17][,coder=huffman] | <any>:p=0.25` (client sampling).
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
 use dme::apps::{kmeans, power_iteration};
-use dme::cli::Args;
+use dme::cli::{parse_span, Args};
+use dme::coordinator::aggregator::{spawn_local_tree, Aggregator, LocalTree};
 use dme::coordinator::leader::Leader;
-use dme::coordinator::transport::TcpHub;
+use dme::coordinator::metrics::format_tier_table;
+use dme::coordinator::topology::Topology;
+use dme::coordinator::transport::{TcpEndpoint, TcpHub};
 use dme::coordinator::worker::{mean_update, Worker};
 use dme::data::{synthetic, Dataset};
 use dme::protocol::config::ProtocolConfig;
@@ -43,10 +51,13 @@ fn real_main() -> Result<()> {
         Some("kmeans") => cmd_kmeans(&args),
         Some("power") => cmd_power(&args),
         Some("serve") => cmd_serve(&args),
+        Some("aggregate") => cmd_aggregate(&args),
         Some("worker") => cmd_worker(&args),
         Some("info") => cmd_info(&args),
         Some(other) => {
-            bail!("unknown command `{other}` (try: estimate kmeans power serve worker info)")
+            bail!(
+                "unknown command `{other}` (try: estimate kmeans power serve aggregate worker info)"
+            )
         }
         None => {
             println!("{}", HELP);
@@ -61,8 +72,11 @@ commands:
   estimate   one-shot distributed mean estimation; reports MSE & bits
   kmeans     distributed Lloyd's with quantized uplink (paper Fig. 2)
   power      distributed power iteration with quantized uplink (paper Fig. 3)
-  serve      TCP leader (workers connect with `dme worker`)
-  worker     TCP worker process
+  serve      TCP leader (workers/aggregators connect), or a single-process
+             loopback aggregation tree with --fanout/--depth
+  aggregate  TCP aggregation-tier node: accepts its children's uploads,
+             merges them exactly, forwards one PartialUpload upstream
+  worker     TCP worker process (point --connect at a leader or aggregator)
   info       show compiled artifacts and available backends
 
 see README.md for all flags.";
@@ -194,26 +208,10 @@ fn cmd_power(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
-    let addr = args.get("addr", "127.0.0.1:7070".to_string())?;
-    let n_workers = args.get("workers", 2usize)?;
-    let dim = args.get("dim", 256usize)?;
-    let rounds = args.get("rounds", 10u64)?;
-    let seed = args.get("seed", 42u64)?;
-    // Width of the leader's streaming decode pool; 0 = one per core.
-    // Every value produces bit-identical round outcomes.
-    let decode_threads = match args.get("decode-threads", 1usize)? {
-        0 => std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
-        n => n,
-    };
-    let proto = build_protocol(args, dim)?;
-    args.reject_unknown()?;
-    println!(
-        "leader: listening on {addr} for {n_workers} workers ({}, {decode_threads} decode threads)",
-        proto.name()
-    );
-    let hub = TcpHub::listen(&addr, n_workers)?;
-    let mut leader = Leader::new(proto, Box::new(hub), seed).with_decode_threads(decode_threads);
+/// Drive `rounds` rounds of `leader`, print each outcome, then shut the
+/// tree down and print the cumulative metrics — shared by the TCP and
+/// loopback-tree branches of `dme serve`.
+fn run_rounds(leader: &mut Leader, rounds: u64, dim: usize) -> Result<()> {
     for r in 0..rounds {
         let out = leader.round(r, dim as u32, &[])?;
         println!(
@@ -225,6 +223,124 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     leader.shutdown()?;
     println!("{}", leader.metrics().summary());
+    Ok(())
+}
+
+/// Width of the streaming decode pools; 0 = one per core. Every value
+/// produces bit-identical round outcomes.
+fn resolve_decode_threads(args: &Args) -> Result<usize> {
+    Ok(match args.get("decode-threads", 1usize)? {
+        0 => std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+        n => n,
+    })
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let addr = args.opt("addr");
+    let n_workers = args.get("workers", 2usize)?;
+    let dim = args.get("dim", 256usize)?;
+    let rounds = args.get("rounds", 10u64)?;
+    let seed = args.get("seed", 42u64)?;
+    let decode_threads = resolve_decode_threads(args)?;
+    // Round-barrier deadline; 0 keeps the default wait-forever behavior.
+    let timeout_ms = args.get("timeout-ms", 0u64)?;
+    let round_timeout = (timeout_ms > 0).then(|| Duration::from_millis(timeout_ms));
+    // --fanout > 0 switches to the single-process loopback tree; --depth
+    // only means anything there.
+    let fanout = args.get("fanout", 0usize)?;
+    let depth = args.opt("depth");
+    let proto = build_protocol(args, dim)?;
+
+    if fanout > 0 {
+        if let Some(addr) = addr {
+            bail!(
+                "--addr {addr} makes no sense with --fanout: the tree runs entirely \
+                 in-process over loopback (drop --addr, or drop --fanout for a TCP leader)"
+            );
+        }
+        let data = load_data(args, n_workers, dim, seed)?;
+        args.reject_unknown()?;
+        if data.dim != dim {
+            bail!("--data {} has dim {}, but --dim is {dim}", data.name, data.dim);
+        }
+        let depth: usize = match &depth {
+            None => 2,
+            Some(s) => s.parse().with_context(|| format!("--depth {s}"))?,
+        };
+        let topo = Topology::uniform(n_workers as u64, fanout, depth)?;
+        println!("loopback tree: {} ({})", topo.describe(), proto.name());
+        let shards: Vec<Vec<Vec<f32>>> = data.rows.into_iter().map(|row| vec![row]).collect();
+        let (mut leader, tree) = spawn_local_tree(
+            proto,
+            shards,
+            mean_update(),
+            seed,
+            &topo,
+            decode_threads,
+            round_timeout,
+        )?;
+        run_rounds(&mut leader, rounds, dim)?;
+        let n_levels = tree.n_levels;
+        let leader_bytes = leader.bytes_moved();
+        let reports = tree.join()?;
+        let tiers =
+            LocalTree::tier_metrics(n_levels, leader.metrics(), leader_bytes, &reports);
+        print!("{}", format_tier_table(&tiers));
+        return Ok(());
+    }
+
+    args.reject_unknown()?;
+    if let Some(depth) = depth {
+        bail!("--depth {depth} only applies with --fanout (the loopback tree)");
+    }
+    let addr = addr.unwrap_or_else(|| "127.0.0.1:7070".to_string());
+    println!(
+        "leader: listening on {addr} for {n_workers} children ({}, {decode_threads} decode threads)",
+        proto.name()
+    );
+    let hub = TcpHub::listen(&addr, n_workers)?;
+    let mut leader = Leader::new(proto, Box::new(hub), seed).with_decode_threads(decode_threads);
+    if let Some(t) = round_timeout {
+        leader = leader.with_round_timeout(t);
+    }
+    run_rounds(&mut leader, rounds, dim)
+}
+
+fn cmd_aggregate(args: &Args) -> Result<()> {
+    let parent = args.require("parent")?;
+    let listen = args.require("listen")?;
+    let children = args.get("children", 2usize)?;
+    let span = parse_span(&args.require("span")?)?;
+    let dim = args.get("dim", 256usize)?;
+    let seed = args.get("seed", 42u64)?;
+    // Default id: the span's first client. Sibling spans are disjoint, so
+    // unlike a process id this cannot collide across hosts/containers.
+    let agg_id = args.get("id", span.0)?;
+    let decode_threads = resolve_decode_threads(args)?;
+    let timeout_ms = args.get("timeout-ms", 0u64)?;
+    let proto = build_protocol(args, dim)?;
+    args.reject_unknown()?;
+    println!(
+        "aggregator {agg_id} [{}..{}): listening on {listen} for {children} children, \
+         parent {parent} ({}, {decode_threads} decode threads)",
+        span.0,
+        span.1,
+        proto.name()
+    );
+    // Accept our children first, then connect upstream — the parent's
+    // accept loop is what gates round start, so ordering is safe.
+    let hub = TcpHub::listen(&listen, children)?;
+    let mut up = TcpEndpoint::connect(&parent)?;
+    let mut agg = Aggregator::new(proto, seed, agg_id, span).with_decode_threads(decode_threads);
+    if timeout_ms > 0 {
+        agg = agg.with_round_timeout(Duration::from_millis(timeout_ms));
+    }
+    let report = agg.run(Box::new(hub), &mut up)?;
+    println!("{}", report.metrics.summary());
+    println!(
+        "ingress {} bytes from {} children; egress accounted by the parent",
+        report.up_bytes, children
+    );
     Ok(())
 }
 

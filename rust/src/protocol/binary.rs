@@ -77,6 +77,10 @@ impl Protocol for BinaryProtocol {
         Accumulator::new(self.dim)
     }
 
+    fn internal_dim(&self) -> usize {
+        self.dim
+    }
+
     fn accumulate_with(
         &self,
         _state: &RoundState,

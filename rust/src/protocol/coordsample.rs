@@ -80,6 +80,10 @@ impl Protocol for CoordSampledProtocol {
         self.inner.new_accumulator()
     }
 
+    fn internal_dim(&self) -> usize {
+        self.inner.internal_dim()
+    }
+
     fn accumulate_with(
         &self,
         state: &RoundState,

@@ -1,0 +1,476 @@
+//! Exact fixed-point accumulation of f32 contributions — the arithmetic
+//! core of the hierarchical aggregation tier.
+//!
+//! # Why exact arithmetic
+//!
+//! The paper's estimators are linear in the client frames, so per-slot
+//! partial sums can be merged anywhere in a tree of aggregators, not only
+//! at the leader. But floating-point addition is not associative: folding
+//! clients 0..8 on one aggregator and 8..16 on another, then adding the
+//! two span sums, rounds differently from the flat leader's sequential
+//! fold. Any scheme that accumulates in f32 or f64 therefore produces
+//! tree-shape-dependent bits, and the repo's determinism contract (the
+//! root estimate is bit-identical to the flat reference for *any*
+//! topology) becomes unenforceable.
+//!
+//! The fix is to make the fold exact. Every per-coordinate contribution
+//! is a product of two f32s (`weight × decoded_value`; plain means use
+//! weight 1.0). Each finite f32 is an integer multiple of 2⁻¹⁴⁹, so each
+//! product is an integer multiple of 2⁻²⁹⁸ with magnitude below 2²⁵⁶ —
+//! and the f64 product of the two widened f32s is *exact* (48-bit
+//! significand ≤ 53). [`FixedAcc`] stores the running sum as a 640-bit
+//! two's-complement integer in units of 2⁻²⁹⁸: integer addition is
+//! associative and commutative, so **any grouping and any order of
+//! contributions yields bit-identical state**, and the single rounding
+//! to f64 happens once, at the root, in [`FixedAcc::to_f64`]
+//! (round-to-nearest-even, like IEEE arithmetic itself).
+//!
+//! Capacity: contributions occupy bits `[0, 555)` of the 639 magnitude
+//! bits, leaving headroom for more than 2⁸⁰ summands — unreachable in
+//! practice.
+//!
+//! # Wire format
+//!
+//! A sum of same-scale contributions touches only a couple of the ten
+//! limbs, so the serialized form ([`FixedAcc::to_bytes_into`]) stores a
+//! sign byte plus the window of limbs that differ from the sign
+//! extension: `sign u8 | start u8 | len u8 | len × u64 (LE)`. Typical
+//! cost is 11–27 bytes per coordinate instead of the dense 83.
+
+use anyhow::{bail, ensure, Result};
+
+/// Number of 64-bit limbs (640 bits total, two's complement).
+pub const LIMBS: usize = 10;
+
+/// Exponent of the least-significant bit: every stored value is an
+/// integer multiple of 2^LSB_EXP.
+const LSB_EXP: i64 = -298;
+
+/// Exact fixed-point accumulator for sums of f32×f32 products.
+///
+/// Addition ([`FixedAcc::add`], [`FixedAcc::add_product`]) is exactly
+/// associative and commutative, which is what lets aggregation trees of
+/// any shape reproduce the flat leader's bits. See the module docs.
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub struct FixedAcc {
+    /// Little-endian limbs; the value is the 640-bit two's-complement
+    /// integer times 2⁻²⁹⁸.
+    limbs: [u64; LIMBS],
+}
+
+impl std::fmt::Debug for FixedAcc {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "FixedAcc({})", self.to_f64())
+    }
+}
+
+impl Default for FixedAcc {
+    fn default() -> Self {
+        Self::zero()
+    }
+}
+
+impl FixedAcc {
+    pub fn zero() -> Self {
+        FixedAcc { limbs: [0; LIMBS] }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.limbs.iter().all(|&l| l == 0)
+    }
+
+    /// Add the exact product `a · b` of two finite f32s. This is the only
+    /// way contributions enter the accumulator, which is what guarantees
+    /// the fixed-point range invariant (multiple of 2⁻²⁹⁸, below 2²⁵⁶).
+    pub fn add_product(&mut self, a: f32, b: f32) -> Result<()> {
+        ensure!(
+            a.is_finite() && b.is_finite(),
+            "non-finite contribution {a} × {b} cannot be aggregated exactly"
+        );
+        // f32→f64 is exact and the product of two f32-valued f64s has a
+        // ≤48-bit significand, so this f64 multiply is exact.
+        self.add_f64(a as f64 * b as f64);
+        Ok(())
+    }
+
+    /// Add a finite f64 that is exactly a product of two f32s (an integer
+    /// multiple of 2⁻²⁹⁸ with |v| < 2²⁵⁶). Internal: public entry points
+    /// establish the precondition.
+    fn add_f64(&mut self, v: f64) {
+        if v == 0.0 {
+            return;
+        }
+        let bits = v.to_bits();
+        let neg = bits >> 63 == 1;
+        let e = ((bits >> 52) & 0x7ff) as i64;
+        let frac = bits & ((1u64 << 52) - 1);
+        debug_assert!(e != 0x7ff, "non-finite value reached add_f64");
+        // v = m × 2^p with m a ≤53-bit integer.
+        let (mut m, p) = if e == 0 { (frac, -1074i64) } else { ((1u64 << 52) | frac, e - 1075) };
+        let mut sh = p - LSB_EXP;
+        if sh < 0 {
+            // v is a multiple of 2^LSB_EXP, so the dropped bits are zero.
+            debug_assert!(
+                (-sh) < 64 && m & ((1u64 << (-sh)) - 1) == 0,
+                "value is not a multiple of 2^{LSB_EXP}"
+            );
+            m >>= (-sh) as u32;
+            sh = 0;
+        }
+        let limb = (sh / 64) as usize;
+        let off = (sh % 64) as u32;
+        debug_assert!(limb + 1 < LIMBS, "contribution exceeds the fixed-point range");
+        let chunk = (m as u128) << off; // ≤ 53 + 63 = 116 bits
+        let lo = chunk as u64;
+        let hi = (chunk >> 64) as u64;
+        if neg {
+            self.sub_shifted(limb, lo, hi);
+        } else {
+            self.add_shifted(limb, lo, hi);
+        }
+    }
+
+    fn add_shifted(&mut self, limb: usize, lo: u64, hi: u64) {
+        let mut carry = 0u128;
+        for j in limb..LIMBS {
+            let add = if j == limb {
+                lo
+            } else if j == limb + 1 {
+                hi
+            } else if carry == 0 {
+                break;
+            } else {
+                0
+            };
+            let s = self.limbs[j] as u128 + add as u128 + carry;
+            self.limbs[j] = s as u64;
+            carry = s >> 64;
+        }
+        // A carry out of the top limb wraps: correct two's-complement
+        // behavior (e.g. a positive chunk cancelling a negative sum).
+    }
+
+    fn sub_shifted(&mut self, limb: usize, lo: u64, hi: u64) {
+        let mut borrow = 0u64;
+        for j in limb..LIMBS {
+            let sub = if j == limb {
+                lo
+            } else if j == limb + 1 {
+                hi
+            } else if borrow == 0 {
+                break;
+            } else {
+                0
+            };
+            let (d1, b1) = self.limbs[j].overflowing_sub(sub);
+            let (d2, b2) = d1.overflowing_sub(borrow);
+            self.limbs[j] = d2;
+            borrow = (b1 | b2) as u64;
+        }
+    }
+
+    /// Exact merge: 640-bit two's-complement addition. Associative and
+    /// commutative — the property the aggregation tree is built on.
+    pub fn add(&mut self, other: &FixedAcc) {
+        let mut carry = 0u128;
+        for j in 0..LIMBS {
+            let s = self.limbs[j] as u128 + other.limbs[j] as u128 + carry;
+            self.limbs[j] = s as u64;
+            carry = s >> 64;
+        }
+    }
+
+    /// Magnitude and sign of the two's-complement value.
+    fn magnitude(&self) -> ([u64; LIMBS], bool) {
+        let neg = self.limbs[LIMBS - 1] >> 63 == 1;
+        if !neg {
+            return (self.limbs, false);
+        }
+        let mut mag = [0u64; LIMBS];
+        let mut carry = 1u128;
+        for j in 0..LIMBS {
+            let s = (!self.limbs[j]) as u128 + carry;
+            mag[j] = s as u64;
+            carry = s >> 64;
+        }
+        (mag, true)
+    }
+
+    /// Round the exact sum to the nearest f64 (ties to even) — the single
+    /// rounding step, performed once per round at the root.
+    pub fn to_f64(&self) -> f64 {
+        let (mag, neg) = self.magnitude();
+        // Highest set bit.
+        let mut top = None;
+        for j in (0..LIMBS).rev() {
+            if mag[j] != 0 {
+                top = Some(j * 64 + 63 - mag[j].leading_zeros() as usize);
+                break;
+            }
+        }
+        let Some(h) = top else { return 0.0 };
+        let (m, k) = if h <= 52 {
+            // Fits the 53-bit significand exactly: only limb 0 is live.
+            (mag[0], LSB_EXP)
+        } else {
+            // Extract bits [h-52 ..= h], then round on guard + sticky.
+            let lo_bit = h - 52;
+            let (limb, off) = (lo_bit / 64, (lo_bit % 64) as u32);
+            let mut m = mag[limb] >> off;
+            if off > 0 && limb + 1 < LIMBS {
+                m |= mag[limb + 1] << (64 - off);
+            }
+            m &= (1u64 << 53) - 1;
+            let g_bit = h - 53;
+            let guard = (mag[g_bit / 64] >> (g_bit % 64)) & 1 == 1;
+            let sticky = {
+                let (gl, go) = (g_bit / 64, (g_bit % 64) as u32);
+                let below_in_limb = if go == 0 { 0 } else { mag[gl] & ((1u64 << go) - 1) };
+                below_in_limb != 0 || mag[..gl].iter().any(|&l| l != 0)
+            };
+            let mut k = (h - 52) as i64 + LSB_EXP;
+            if guard && (sticky || m & 1 == 1) {
+                m += 1;
+                if m == 1u64 << 53 {
+                    m >>= 1;
+                    k += 1;
+                }
+            }
+            (m, k)
+        };
+        // m ≤ 2^53 is exact in f64; 2^k is a normal power of two for every
+        // reachable k (k ∈ [-298, 290]), so this multiply is exact.
+        debug_assert!((-1022..=1023).contains(&k));
+        let pow = f64::from_bits(((k + 1023) as u64) << 52);
+        let r = m as f64 * pow;
+        if neg {
+            -r
+        } else {
+            r
+        }
+    }
+
+    /// Serialized size in bytes (sparse window encoding).
+    pub fn wire_len(&self) -> usize {
+        3 + 8 * self.window().2 as usize
+    }
+
+    /// (negative, start, len): the window of limbs that differ from the
+    /// sign extension (`0` above the window for non-negative values,
+    /// `u64::MAX` for negative ones; limbs below the window are zero).
+    fn window(&self) -> (bool, u8, u8) {
+        let neg = self.limbs[LIMBS - 1] >> 63 == 1;
+        let filler = if neg { u64::MAX } else { 0 };
+        let mut hi = LIMBS;
+        while hi > 0 && self.limbs[hi - 1] == filler {
+            hi -= 1;
+        }
+        let mut lo = 0;
+        while lo < hi && self.limbs[lo] == 0 {
+            lo += 1;
+        }
+        (neg, lo as u8, (hi - lo) as u8)
+    }
+
+    /// Append the sparse serialization: `sign u8 | start u8 | len u8 |
+    /// len × u64 LE`.
+    pub fn to_bytes_into(&self, out: &mut Vec<u8>) {
+        let (neg, start, len) = self.window();
+        out.push(neg as u8);
+        out.push(start);
+        out.push(len);
+        for j in start..start + len {
+            out.extend_from_slice(&self.limbs[j as usize].to_le_bytes());
+        }
+    }
+
+    /// Parse a sparse serialization from the front of `buf`; returns the
+    /// value and the number of bytes consumed. Rejects malformed windows
+    /// and truncation.
+    pub fn from_slice(buf: &[u8]) -> Result<(Self, usize)> {
+        ensure!(buf.len() >= 3, "FixedAcc truncated");
+        let neg = match buf[0] {
+            0 => false,
+            1 => true,
+            v => bail!("bad FixedAcc sign byte {v}"),
+        };
+        let (start, len) = (buf[1] as usize, buf[2] as usize);
+        ensure!(start + len <= LIMBS, "FixedAcc window out of range");
+        let need = 3 + 8 * len;
+        ensure!(buf.len() >= need, "FixedAcc truncated");
+        let filler = if neg { u64::MAX } else { 0 };
+        let mut limbs = [0u64; LIMBS];
+        for (j, limb) in limbs.iter_mut().enumerate() {
+            *limb = if j < start {
+                0
+            } else if j < start + len {
+                let at = 3 + 8 * (j - start);
+                u64::from_le_bytes(buf[at..at + 8].try_into().unwrap())
+            } else {
+                filler
+            };
+        }
+        Ok((FixedAcc { limbs }, need))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{check, run_prop};
+
+    fn acc_of(vals: &[(f32, f32)]) -> FixedAcc {
+        let mut a = FixedAcc::zero();
+        for &(x, w) in vals {
+            a.add_product(x, w).unwrap();
+        }
+        a
+    }
+
+    #[test]
+    fn simple_sums_are_exact() {
+        let a = acc_of(&[(1.5, 1.0), (2.25, 1.0), (-0.75, 1.0)]);
+        assert_eq!(a.to_f64(), 3.0);
+        let b = acc_of(&[(1.5, 2.0), (0.5, -3.0)]);
+        assert_eq!(b.to_f64(), 1.5);
+        assert!(FixedAcc::zero().is_zero());
+        assert_eq!(FixedAcc::zero().to_f64(), 0.0);
+    }
+
+    #[test]
+    fn rounding_is_nearest_even_with_sticky() {
+        // 2^60 + 2^7 is an exact tie at f64 precision (ulp of 2^60 is
+        // 2^8): ties-to-even keeps 2^60. Adding any dust below the guard
+        // bit makes it round up — a plain f64 fold loses exactly this.
+        let mut a = FixedAcc::zero();
+        a.add_product(2.0f32.powi(30), 2.0f32.powi(30)).unwrap();
+        a.add_product(2.0f32.powi(7), 1.0).unwrap();
+        assert_eq!(a.to_f64(), 2.0f64.powi(60));
+        a.add_product(2.0f32.powi(-20), 1.0).unwrap();
+        assert_eq!(a.to_f64(), 2.0f64.powi(60) + 2.0f64.powi(8));
+        // Negative mirror.
+        let mut b = FixedAcc::zero();
+        b.add_product(-(2.0f32.powi(30)), 2.0f32.powi(30)).unwrap();
+        b.add_product(2.0f32.powi(7), -1.0).unwrap();
+        b.add_product(-(2.0f32.powi(-20)), 1.0).unwrap();
+        assert_eq!(b.to_f64(), -(2.0f64.powi(60) + 2.0f64.powi(8)));
+    }
+
+    #[test]
+    fn cancellation_and_extremes() {
+        // Exact cancellation down to the least significant unit.
+        let tiny = f32::from_bits(1); // 2^-149, the smallest subnormal
+        let mut a = FixedAcc::zero();
+        a.add_product(1.0, 1.0).unwrap();
+        a.add_product(-1.0, 1.0).unwrap();
+        a.add_product(-tiny, tiny).unwrap();
+        assert!(!a.is_zero());
+        assert_eq!(a.to_f64(), -(2.0f64.powi(-298)));
+        // -1 unit is the all-ones two's-complement pattern: the sparse
+        // window degenerates to len 0 with the negative flag.
+        assert_eq!(a.wire_len(), 3);
+        // Largest products stay in range.
+        let mut b = FixedAcc::zero();
+        for _ in 0..100 {
+            b.add_product(f32::MAX, f32::MAX).unwrap();
+        }
+        assert_eq!(b.to_f64(), f32::MAX as f64 * f32::MAX as f64 * 100.0);
+        let mut c = FixedAcc::zero();
+        c.add_product(tiny, tiny).unwrap();
+        assert_eq!(c.to_f64(), 2.0f64.powi(-298));
+    }
+
+    #[test]
+    fn non_finite_contributions_are_rejected() {
+        let mut a = FixedAcc::zero();
+        assert!(a.add_product(f32::NAN, 1.0).is_err());
+        assert!(a.add_product(1.0, f32::INFINITY).is_err());
+        assert!(a.add_product(f32::NEG_INFINITY, 2.0).is_err());
+        assert!(a.is_zero(), "rejected contributions must not alter state");
+    }
+
+    #[test]
+    fn prop_grouping_and_order_invariant() {
+        // The load-bearing property: any shuffle and any tree grouping of
+        // the same contributions produces bit-identical state. This is
+        // what makes the aggregation tier topology-independent.
+        run_prop("fixedacc_grouping", 60, |g| {
+            let n = g.usize_in(2..=40);
+            let mut vals = Vec::with_capacity(n);
+            for _ in 0..n {
+                let scale = 2.0f32.powi(g.u32_in(0..=60) as i32 - 30);
+                vals.push((g.f32_in(-4.0, 4.0) * scale, g.f32_in(-3.0, 3.0)));
+            }
+            let base = acc_of(&vals);
+            // Shuffled sequential fold.
+            let mut shuffled = vals.clone();
+            for i in (1..shuffled.len()).rev() {
+                let j = (g.rng().next_u64() % (i as u64 + 1)) as usize;
+                shuffled.swap(i, j);
+            }
+            check(acc_of(&shuffled) == base, "shuffle diverged")?;
+            // Random binary-tree grouping via pairwise merges.
+            let mut parts: Vec<FixedAcc> =
+                shuffled.iter().map(|&(x, w)| acc_of(&[(x, w)])).collect();
+            while parts.len() > 1 {
+                let i = (g.rng().next_u64() % (parts.len() as u64 - 1)) as usize;
+                let right = parts.remove(i + 1);
+                parts[i].add(&right);
+            }
+            check(parts[0] == base, "tree grouping diverged")
+        });
+    }
+
+    #[test]
+    fn prop_exact_vs_f64_on_safe_range() {
+        // Against an independent oracle: when every contribution is an
+        // integer (exactly representable, no rounding in a plain f64 sum
+        // of this size), the fixed-point sum must agree with f64 exactly.
+        run_prop("fixedacc_integer_oracle", 100, |g| {
+            let n = g.usize_in(1..=50);
+            let mut acc = FixedAcc::zero();
+            let mut oracle = 0.0f64;
+            for _ in 0..n {
+                let x = (g.rng().next_u64() % 2000) as f32 - 1000.0;
+                let w = (g.rng().next_u64() % 9) as f32 - 4.0;
+                acc.add_product(x, w).unwrap();
+                oracle += x as f64 * w as f64;
+            }
+            check(acc.to_f64() == oracle, format!("{} vs {oracle}", acc.to_f64()))
+        });
+    }
+
+    #[test]
+    fn prop_wire_roundtrip() {
+        run_prop("fixedacc_wire", 120, |g| {
+            let n = g.usize_in(0..=12);
+            let mut acc = FixedAcc::zero();
+            for _ in 0..n {
+                let scale = 2.0f32.powi(g.u32_in(0..=100) as i32 - 50);
+                acc.add_product(g.f32_in(-8.0, 8.0) * scale, g.f32_in(-2.0, 2.0)).unwrap();
+            }
+            let mut bytes = Vec::new();
+            acc.to_bytes_into(&mut bytes);
+            check(bytes.len() == acc.wire_len(), "wire_len mismatch")?;
+            let (back, used) = FixedAcc::from_slice(&bytes).unwrap();
+            check(used == bytes.len(), "partial consume")?;
+            check(back == acc, "roundtrip diverged")
+        });
+    }
+
+    #[test]
+    fn malformed_wire_rejected() {
+        assert!(FixedAcc::from_slice(&[]).is_err());
+        assert!(FixedAcc::from_slice(&[0, 0]).is_err());
+        assert!(FixedAcc::from_slice(&[2, 0, 0]).is_err(), "bad sign byte");
+        assert!(FixedAcc::from_slice(&[0, 8, 3]).is_err(), "window out of range");
+        assert!(FixedAcc::from_slice(&[0, 0, 1, 1, 2, 3]).is_err(), "truncated limbs");
+        // A valid window parses and consumes exactly its own bytes.
+        let mut bytes = vec![0u8, 1, 1];
+        bytes.extend_from_slice(&7u64.to_le_bytes());
+        bytes.push(0xab); // trailing byte belongs to the caller
+        let (v, used) = FixedAcc::from_slice(&bytes).unwrap();
+        assert_eq!(used, 11);
+        assert_eq!(v.to_f64(), 7.0 * 2.0f64.powi(64) * 2.0f64.powi(-298));
+    }
+}

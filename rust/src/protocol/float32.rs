@@ -55,6 +55,10 @@ impl Protocol for Float32Protocol {
         Accumulator::new(self.dim)
     }
 
+    fn internal_dim(&self) -> usize {
+        self.dim
+    }
+
     fn accumulate_with(
         &self,
         _state: &RoundState,

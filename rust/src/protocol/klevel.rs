@@ -154,6 +154,10 @@ impl Protocol for KLevelProtocol {
         Accumulator::new(self.dim)
     }
 
+    fn internal_dim(&self) -> usize {
+        self.dim
+    }
+
     fn accumulate_with(
         &self,
         _state: &RoundState,

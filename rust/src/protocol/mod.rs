@@ -31,11 +31,10 @@
 //!    [`Accumulator`] without per-frame allocation. Weighted frames are
 //!    combined in the protocol's *internal* space (e.g. the rotated,
 //!    padded space), so the inverse rotation runs once per round, not
-//!    once per frame. When frames arrive out of order (the leader's
-//!    streaming pipeline), each frame can be pre-decoded on any thread
-//!    into a [`SlotPartial`] and later folded with
-//!    [`Decoder::push_partial`] in client-id order — bit-identical to
-//!    decoding in place.
+//!    once per frame. The coordinator's aggregation paths instead decode
+//!    each frame into a [`SlotPartial`] — an *exactly mergeable* per-slot
+//!    state (see below) that any thread, any arrival order, and any
+//!    aggregation-tree shape folds to bit-identical bits.
 //! 4. **finish** — [`Decoder::finish`] / [`Decoder::finish_weighted`]
 //!    divide by the effective count and undo any preprocessing (one
 //!    inverse rotation for π_srk).
@@ -51,32 +50,35 @@
 //! Both derive from [`RoundCtx`]; a frame's bits depend only on
 //! `(seed, round, client_id, x)` — never on which thread encoded it.
 //!
-//! # Determinism guarantee
+//! # Determinism guarantees
 //!
-//! f32 addition is not associative, so the *order* of accumulation is
-//! part of a round's contract. [`run_round`] and [`run_round_par`] shard
-//! clients into contiguous blocks whose size depends only on the client
-//! count (never on the thread count), accumulate each block in client-id
-//! order, and merge the per-block partial sums in block order. Any
-//! thread count therefore produces **bit-identical** estimates — the
-//! leader relies on the same rule when it decodes uploads in client-id
-//! order regardless of arrival order.
+//! Two mechanisms, for two layers:
 //!
-//! The leader's streaming pipeline extends the rule to *decode* work:
-//! every protocol's `accumulate_with` is a per-coordinate `+=` into the
-//! accumulator, so decoding a frame into a fresh zeroed accumulator (a
-//! [`SlotPartial`], on whichever decode thread picks it up first) and
-//! folding the partial later adds `0.0 + v` where in-place decoding
-//! would have added `v`. Those are the same f32 ops bit-for-bit: an f32
-//! running sum that starts at `+0.0` can never become `-0.0` (IEEE 754
-//! round-to-nearest returns `+0.0` for any exact cancellation), so the
-//! extra `+0.0` is always the identity. Only the *fold order* of
-//! partials matters, and [`Decoder::push_partial`] requires client-id
-//! order — decode scheduling is free.
+//! * **Fixed fold geometry** (client-side simulation): f32 addition is
+//!   not associative, so [`run_round`] and [`run_round_par`] shard
+//!   clients into contiguous blocks whose size depends only on the
+//!   client count (never on the thread count), accumulate each block in
+//!   client-id order, and merge the per-block partial sums in block
+//!   order. Any thread count therefore produces **bit-identical**
+//!   estimates.
+//!
+//! * **Exact folds** (server-side aggregation): the coordinator's
+//!   aggregation paths — the leader's streaming decode pool and the
+//!   hierarchical aggregator tier — cannot fix a fold geometry, because
+//!   the tree topology itself varies. They instead fold each frame into
+//!   a [`SlotPartial`], whose per-coordinate state is an exact
+//!   fixed-point sum ([`exact::FixedAcc`]) of the `weight × value`
+//!   contributions. Integer addition is associative and commutative, so
+//!   **any decode-thread count, any arrival order, and any tree of
+//!   partial merges produces bit-identical state**; the single rounding
+//!   to floating point happens once, in [`SlotPartial::finish`]. The
+//!   serialized form ([`SlotPartial::to_bytes`]) is what aggregators
+//!   forward upstream in `PartialUpload` messages.
 
 pub mod binary;
 pub mod config;
 pub mod coordsample;
+pub mod exact;
 pub mod float32;
 pub mod klevel;
 pub mod qsgd;
@@ -85,7 +87,7 @@ pub mod rotated;
 pub mod sampling;
 pub mod varlen;
 
-use anyhow::Result;
+use anyhow::{bail, ensure, Result};
 
 use crate::coding::bitio::BitWriter;
 use crate::rng::{self, Pcg64};
@@ -283,6 +285,13 @@ pub trait Protocol: Send + Sync {
 
     /// A fresh accumulator sized for this protocol's internal dimension.
     fn new_accumulator(&self) -> Accumulator;
+
+    /// The internal (accumulation-space) dimension — `new_accumulator`'s
+    /// length without allocating it. Implementations override the default
+    /// (which does allocate) so hot paths can ask for the dimension alone.
+    fn internal_dim(&self) -> usize {
+        self.new_accumulator().sum.len()
+    }
 
     /// Server-side decode of one frame into the accumulator.
     fn accumulate_with(
@@ -489,57 +498,80 @@ impl<'a> Decoder<'a> {
         }
         self.acc
     }
-
-    /// Fold a pre-decoded partial. Pushing partials in client-id order is
-    /// bit-identical to having called [`Self::push`] (weight 1) or
-    /// [`Self::push_weighted`] on the original frames in that same order
-    /// — see the module-level determinism notes for why.
-    pub fn push_partial(&mut self, part: &SlotPartial) {
-        debug_assert_eq!(part.acc.sum.len(), self.acc.sum.len(), "partial dimension mismatch");
-        if part.weight == 1.0 {
-            // Mirrors push(): accumulate_with is a per-coordinate `+=`,
-            // and the protocol decides whether a frame bumps acc.frames,
-            // so carry the partial's count rather than assuming 1.
-            for (a, &v) in self.acc.sum.iter_mut().zip(&part.acc.sum) {
-                *a += v;
-            }
-            self.acc.frames += part.acc.frames;
-            self.total_weight += 1.0;
-        } else {
-            // Mirrors push_weighted(): fold weight-scaled into the f64
-            // running sum; the scratch decode's frame count is dropped
-            // and the decoder counts exactly one frame.
-            let wsum = {
-                let dim = part.acc.sum.len();
-                self.wsum.get_or_insert_with(|| vec![0.0f64; dim])
-            };
-            for (a, &v) in wsum.iter_mut().zip(&part.acc.sum) {
-                *a += part.weight as f64 * v as f64;
-            }
-            self.acc.frames += 1;
-            self.total_weight += part.weight as f64;
-        }
-        self.frames += 1;
-    }
 }
 
-/// One frame decoded into its own zeroed accumulator, tagged with its
-/// aggregation weight: the unit of the leader's streaming pipeline. The
-/// expensive half of server-side work (bit unpacking + dequantization)
-/// happens here, on any thread, in any arrival order; the cheap f32/f64
-/// fold is deferred to a deterministic client-id-ordered
-/// [`Decoder::push_partial`] pass at the round barrier.
-#[derive(Clone, Debug)]
+/// The exactly mergeable per-slot aggregation state: what the leader's
+/// decode pool produces per frame, what aggregation-tier nodes fold and
+/// forward upstream (serialized inside `PartialUpload` messages), and
+/// what the root finishes into a mean.
+///
+/// Per coordinate it keeps the exact fixed-point sum of the
+/// `weight × decoded_value` contributions ([`exact::FixedAcc`]); merging
+/// two partials ([`SlotPartial::merge`]) is integer addition plus
+/// counter sums — associative and commutative — so **every aggregation
+/// tree shape, arrival order, and decode-thread count produces
+/// bit-identical state**, and [`SlotPartial::finish`] rounds exactly
+/// once. The expensive half of server-side work (bit unpacking +
+/// dequantization) happens in [`SlotPartial::decode`], on any thread.
+#[derive(Clone, Debug, PartialEq)]
 pub struct SlotPartial {
-    /// The decoded frame, in the protocol's internal space.
-    pub acc: Accumulator,
-    /// The frame's aggregation weight (1.0 for plain means).
-    pub weight: f32,
+    /// Exact per-coordinate sums of `weight × value`, in the protocol's
+    /// internal dimension.
+    sums: Vec<exact::FixedAcc>,
+    /// Exact sum of the non-silent frames' weights.
+    weight: exact::FixedAcc,
+    /// Non-silent frames folded in.
+    pub frames: u64,
+    /// Clients that held this slot, including silent (sampled-out) ones —
+    /// the divisor of the plain-mean path (Lemma 8 counts silent clients).
+    pub holders: u64,
+    /// Sum of the protocol-level `Accumulator::frames` counters (the
+    /// protocol decides whether a frame bumps it).
+    pub acc_frames: u64,
+    /// True while every non-silent contribution had weight exactly 1.0 —
+    /// selects the plain-mean finish branch, exactly like the flat
+    /// leader's per-slot `all(weight == 1.0)` test did.
+    uniform: bool,
 }
+
+/// Serialization version of [`SlotPartial::to_bytes`].
+pub const SLOT_PARTIAL_VERSION: u8 = 1;
 
 impl SlotPartial {
+    /// The merge identity for a slot of internal dimension `dim`
+    /// (contributes nothing, holds nothing).
+    pub fn empty(dim: usize) -> Self {
+        SlotPartial {
+            sums: vec![exact::FixedAcc::zero(); dim],
+            weight: exact::FixedAcc::zero(),
+            frames: 0,
+            holders: 0,
+            acc_frames: 0,
+            uniform: true,
+        }
+    }
+
+    /// A silent (sampled-out) client's contribution: no frame, no weight,
+    /// but one holder — it still counts in the plain-mean divisor.
+    pub fn silent(dim: usize) -> Self {
+        let mut p = Self::empty(dim);
+        p.holders = 1;
+        p
+    }
+
+    /// Fold in a silent client without materializing a dense
+    /// [`Self::silent`] partial: bit-identical to `merge(&silent(dim))`
+    /// (zero sums add nothing; silence never breaks uniformity), at zero
+    /// allocation — the common case under heavy sampling.
+    pub fn add_silent_holder(&mut self) {
+        self.holders += 1;
+    }
+
     /// Decode one frame into a fresh partial. Shares only the immutable
-    /// round `state`, so decodes of different frames can run concurrently.
+    /// round `state`, so decodes of different frames can run concurrently
+    /// on any threads. Rejects non-finite decoded values or weights (an
+    /// exact sum cannot carry them; they could only come from non-finite
+    /// client data).
     pub fn decode(
         proto: &dyn Protocol,
         state: &RoundState,
@@ -548,7 +580,192 @@ impl SlotPartial {
     ) -> Result<Self> {
         let mut acc = proto.new_accumulator();
         proto.accumulate_with(state, frame, &mut acc)?;
-        Ok(SlotPartial { acc, weight })
+        Self::from_decoded(&acc.sum, weight, acc.frames as u64)
+    }
+
+    /// Build a partial directly from already-decoded values (used by
+    /// tests and benches; [`Self::decode`] is the real pipeline).
+    pub fn from_decoded(values: &[f32], weight: f32, acc_frames: u64) -> Result<Self> {
+        let mut sums = Vec::with_capacity(values.len());
+        for &v in values {
+            let mut fx = exact::FixedAcc::zero();
+            fx.add_product(v, weight)?;
+            sums.push(fx);
+        }
+        let mut wacc = exact::FixedAcc::zero();
+        wacc.add_product(weight, 1.0)?;
+        Ok(SlotPartial {
+            sums,
+            weight: wacc,
+            frames: 1,
+            holders: 1,
+            acc_frames,
+            uniform: weight == 1.0,
+        })
+    }
+
+    /// Internal (protocol-space) dimension of this partial.
+    pub fn internal_dim(&self) -> usize {
+        self.sums.len()
+    }
+
+    /// Exact total weight, rounded to f64 once.
+    pub fn weight_f64(&self) -> f64 {
+        self.weight.to_f64()
+    }
+
+    /// Whether every folded contribution had weight 1.0.
+    pub fn is_uniform(&self) -> bool {
+        self.uniform
+    }
+
+    /// Exact merge — associative and commutative, so the result is
+    /// independent of the aggregation tree that produced the operands.
+    pub fn merge(&mut self, other: &SlotPartial) -> Result<()> {
+        ensure!(
+            self.sums.len() == other.sums.len(),
+            "SlotPartial dimension mismatch: {} vs {}",
+            self.sums.len(),
+            other.sums.len()
+        );
+        for (a, b) in self.sums.iter_mut().zip(&other.sums) {
+            a.add(b);
+        }
+        self.weight.add(&other.weight);
+        self.frames += other.frames;
+        self.holders += other.holders;
+        self.acc_frames += other.acc_frames;
+        self.uniform &= other.uniform;
+        Ok(())
+    }
+
+    /// Finish the slot at the root: round each exact sum once, divide,
+    /// and run the protocol's postprocessing (e.g. π_srk's inverse
+    /// rotation). Returns `(mean, total_weight)` where `total_weight` is
+    /// the frame count for uniform slots and the exact weight sum
+    /// otherwise — the same branch structure the flat leader always had.
+    pub fn finish(&self, proto: &dyn Protocol, state: &RoundState) -> (Vec<f32>, f64) {
+        let mut acc = Accumulator::new(self.sums.len());
+        acc.frames = self.acc_frames as usize;
+        if self.uniform {
+            for (a, s) in acc.sum.iter_mut().zip(&self.sums) {
+                *a = s.to_f64() as f32;
+            }
+            let mean = proto.finish_with(state, acc, self.holders as usize);
+            (mean, self.frames as f64)
+        } else {
+            // Divide the exact weighted sum in f64 before narrowing to
+            // f32, then hand the already-averaged slot to the protocol
+            // with divisor 1 — wrapper scalings (sampling's 1/p) still
+            // apply on top.
+            let w = self.weight.to_f64();
+            let inv = if w > 0.0 { 1.0 / w } else { 0.0 };
+            for (a, s) in acc.sum.iter_mut().zip(&self.sums) {
+                *a = (s.to_f64() * inv) as f32;
+            }
+            let mean = proto.finish_scaled_with(state, acc, 1.0);
+            (mean, w)
+        }
+    }
+
+    /// Serialized size in bytes of [`Self::to_bytes`], without building
+    /// the buffer (transports account message sizes on every send).
+    pub fn wire_len(&self) -> usize {
+        2 + 4
+            + 8 * 3
+            + self.weight.wire_len()
+            + self.sums.iter().map(|s| s.wire_len()).sum::<usize>()
+    }
+
+    /// Versioned serialization: `version u8 | flags u8 | dim u32 |
+    /// frames u64 | holders u64 | acc_frames u64 | weight | dim × sums`,
+    /// with each exact accumulator in its sparse window encoding.
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        ensure!(self.sums.len() <= u32::MAX as usize, "SlotPartial dimension exceeds u32");
+        let mut out = Vec::with_capacity(self.wire_len());
+        out.push(SLOT_PARTIAL_VERSION);
+        out.push(self.uniform as u8);
+        out.extend_from_slice(&(self.sums.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.frames.to_le_bytes());
+        out.extend_from_slice(&self.holders.to_le_bytes());
+        out.extend_from_slice(&self.acc_frames.to_le_bytes());
+        self.weight.to_bytes_into(&mut out);
+        for s in &self.sums {
+            s.to_bytes_into(&mut out);
+        }
+        Ok(out)
+    }
+
+    /// Parse a serialized partial, requiring the buffer to be consumed
+    /// exactly. Rejects unknown versions, malformed flags, truncated or
+    /// oversized payloads.
+    pub fn from_bytes(buf: &[u8]) -> Result<Self> {
+        ensure!(buf.len() >= 30, "SlotPartial truncated");
+        ensure!(
+            buf[0] == SLOT_PARTIAL_VERSION,
+            "unsupported SlotPartial version {} (expected {SLOT_PARTIAL_VERSION})",
+            buf[0]
+        );
+        let uniform = match buf[1] {
+            0 => false,
+            1 => true,
+            v => bail!("bad SlotPartial flags byte {v}"),
+        };
+        let dim = u32::from_le_bytes(buf[2..6].try_into().unwrap()) as usize;
+        let frames = u64::from_le_bytes(buf[6..14].try_into().unwrap());
+        let holders = u64::from_le_bytes(buf[14..22].try_into().unwrap());
+        let acc_frames = u64::from_le_bytes(buf[22..30].try_into().unwrap());
+        let mut pos = 30usize;
+        // Each accumulator needs ≥ 3 bytes: a corrupt dim cannot reserve
+        // more memory than the message already occupies.
+        ensure!(
+            dim as u64 <= (buf.len() as u64).saturating_sub(pos as u64) / 3,
+            "SlotPartial dimension exceeds payload"
+        );
+        let (weight, used) = exact::FixedAcc::from_slice(&buf[pos..])?;
+        pos += used;
+        // dim is attacker-controlled and an in-memory FixedAcc is ~27x
+        // its minimal 3-byte wire form: reserve at most a few multiples
+        // of the received payload and let growth track parsed bytes.
+        let mut sums = Vec::with_capacity(dim.min(1 + buf.len() / 16));
+        for _ in 0..dim {
+            let (s, used) = exact::FixedAcc::from_slice(&buf[pos..])?;
+            pos += used;
+            sums.push(s);
+        }
+        ensure!(pos == buf.len(), "trailing bytes in SlotPartial");
+        let p = SlotPartial { sums, weight, frames, holders, acc_frames, uniform };
+        p.check_invariants()?;
+        Ok(p)
+    }
+
+    /// Semantic invariants every partial built by [`Self::decode`] /
+    /// [`Self::merge`] holds by construction — enforced at the wire
+    /// boundary so a structurally valid but inconsistent `PartialUpload`
+    /// (e.g. nonzero sums with `holders == 0`) errors out instead of
+    /// poisoning the root estimate with a division by zero.
+    fn check_invariants(&self) -> Result<()> {
+        ensure!(
+            self.frames <= self.holders,
+            "SlotPartial counts non-silent frames ({}) beyond its holders ({})",
+            self.frames,
+            self.holders
+        );
+        if self.frames == 0 {
+            ensure!(
+                self.weight.is_zero() && self.sums.iter().all(|s| s.is_zero()),
+                "SlotPartial carries contributions but claims zero frames"
+            );
+        }
+        if self.uniform {
+            ensure!(
+                self.weight.to_f64() == self.frames as f64,
+                "uniform SlotPartial weight {} disagrees with its frame count {}",
+                self.weight.to_f64(),
+                self.frames
+            );
+        }
+        Ok(())
     }
 }
 
@@ -788,56 +1005,175 @@ mod tests {
     }
 
     #[test]
-    fn push_partial_bit_identical_to_streaming_push() {
-        // The leader's streaming-merge contract: pre-decoding frames into
-        // SlotPartials (in any order) and folding them in client order
-        // must reproduce the in-place push/push_weighted bits exactly,
-        // for uniform, weighted, and mixed-weight slots.
+    fn slot_partial_fold_is_grouping_and_order_invariant() {
+        // The aggregation-tier contract: folding the same frames through
+        // ANY tree of SlotPartial merges — sequential, reversed, paired,
+        // lopsided — produces bit-identical state and finishes, for
+        // uniform, weighted, and mixed-weight slots, with silent clients
+        // interleaved. This is the property the hierarchical tier stands
+        // on (see the module docs on exact folds).
         let d = 48;
-        let xs = gaussian_clients(5, d, 17);
+        let xs = gaussian_clients(6, d, 17);
         for spec in ["float32", "binary", "klevel:k=16", "rotated:k=16", "varlen:k=8", "qsgd:k=8"] {
             let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
             let ctx = RoundCtx::new(3, 29);
             let state = proto.prepare(&ctx);
+            let dim = proto.new_accumulator().sum.len();
             let mut enc = Encoder::new(proto.as_ref(), &state);
             let frames: Vec<Frame> =
-                (0..5).map(|i| enc.encode(i as u64, &xs[i]).unwrap()).collect();
-            for weights in [vec![1.0f32; 5], vec![2.0, 1.0, 0.5, 4.0, 1.0]] {
-                let uniform = weights.iter().all(|&w| w == 1.0);
-                // In-place streaming decode, client order (the reference).
-                let mut dec = Decoder::new(proto.as_ref(), &state);
-                for (f, &w) in frames.iter().zip(&weights) {
-                    if uniform {
-                        dec.push(f).unwrap();
-                    } else {
-                        dec.push_weighted(f, w).unwrap();
-                    }
-                }
-                // Pre-decode in reverse order, fold in client order.
-                let parts: Vec<SlotPartial> = frames
+                (0..6).map(|i| enc.encode(i as u64, &xs[i]).unwrap()).collect();
+            for weights in [vec![1.0f32; 6], vec![2.0, 1.0, 0.5, 4.0, 1.0, 3.5]] {
+                let mut parts: Vec<SlotPartial> = frames
                     .iter()
                     .zip(&weights)
-                    .rev()
                     .map(|(f, &w)| SlotPartial::decode(proto.as_ref(), &state, f, w).unwrap())
                     .collect();
-                let mut dec_p = Decoder::new(proto.as_ref(), &state);
-                for p in parts.iter().rev() {
-                    dec_p.push_partial(p);
+                parts.push(SlotPartial::silent(dim)); // a sampled-out client
+                // Reference: flat sequential fold.
+                let mut flat = SlotPartial::empty(dim);
+                for p in &parts {
+                    flat.merge(p).unwrap();
                 }
-                assert_eq!(dec_p.frames(), dec.frames(), "spec={spec}");
-                assert_eq!(dec_p.total_weight(), dec.total_weight(), "spec={spec}");
-                let (a, b) = if uniform {
-                    (dec.finish(5), dec_p.finish(5))
-                } else {
-                    (dec.finish_weighted(), dec_p.finish_weighted())
-                };
+                // Reversed fold.
+                let mut rev = SlotPartial::empty(dim);
+                for p in parts.iter().rev() {
+                    rev.merge(p).unwrap();
+                }
+                assert_eq!(rev, flat, "spec={spec}: reversed fold diverged");
+                // Two-level tree: pairs merged first, then the pair sums.
+                let mut tree = SlotPartial::empty(dim);
+                for pair in parts.chunks(2) {
+                    let mut agg = SlotPartial::empty(dim);
+                    for p in pair {
+                        agg.merge(p).unwrap();
+                    }
+                    tree.merge(&agg).unwrap();
+                }
+                assert_eq!(tree, flat, "spec={spec}: paired tree diverged");
+                // Lopsided tree: one big span plus a singleton.
+                let mut left = SlotPartial::empty(dim);
+                for p in &parts[..parts.len() - 1] {
+                    left.merge(p).unwrap();
+                }
+                left.merge(&parts[parts.len() - 1]).unwrap();
+                assert_eq!(left, flat, "spec={spec}: lopsided tree diverged");
+                // Identical state ⇒ identical finish; also sanity-check
+                // the finish bits agree across the foldings.
+                let (m1, w1) = flat.finish(proto.as_ref(), &state);
+                let (m2, w2) = tree.finish(proto.as_ref(), &state);
+                assert_eq!(w1, w2, "spec={spec}");
                 assert_eq!(
-                    a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
-                    b.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
-                    "spec={spec} uniform={uniform}: partial fold diverges"
+                    m1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    m2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "spec={spec}: finish diverges"
                 );
+                assert_eq!(flat.frames, 6);
+                assert_eq!(flat.holders, 7);
             }
         }
+    }
+
+    #[test]
+    fn slot_partial_finish_tracks_decoder_streaming() {
+        // The exact fold replaces the old f32/f64 streaming fold; the two
+        // must agree to floating-point accumulation error (the exact path
+        // is the more accurate of the two).
+        let d = 32;
+        let xs = gaussian_clients(5, d, 23);
+        let ws = [1.0f32, 3.0, 0.5, 2.0, 1.0];
+        for spec in ["float32", "klevel:k=64", "rotated:k=64"] {
+            let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+            let ctx = RoundCtx::new(1, 7);
+            let state = proto.prepare(&ctx);
+            let dim = proto.new_accumulator().sum.len();
+            let mut enc = Encoder::new(proto.as_ref(), &state);
+            let mut dec = Decoder::new(proto.as_ref(), &state);
+            let mut part = SlotPartial::empty(dim);
+            for ((i, x), &w) in xs.iter().enumerate().zip(&ws) {
+                let f = enc.encode(i as u64, x).unwrap();
+                dec.push_weighted(&f, w).unwrap();
+                part.merge(&SlotPartial::decode(proto.as_ref(), &state, &f, w).unwrap()).unwrap();
+            }
+            assert_eq!(part.frames, 5);
+            assert_eq!(part.weight_f64(), 7.5);
+            assert!(!part.is_uniform());
+            let streaming = dec.finish_weighted();
+            let (exact, w) = part.finish(proto.as_ref(), &state);
+            assert_eq!(w, 7.5, "spec={spec}");
+            for (j, (a, b)) in exact.iter().zip(&streaming).enumerate() {
+                assert!((a - b).abs() < 1e-4, "spec={spec} coord {j}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn slot_partial_wire_roundtrip_is_exact() {
+        let d = 40;
+        let xs = gaussian_clients(4, d, 31);
+        for spec in ["float32", "rotated:k=16", "varlen:k=8"] {
+            let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+            let ctx = RoundCtx::new(2, 13);
+            let state = proto.prepare(&ctx);
+            let dim = proto.new_accumulator().sum.len();
+            let mut enc = Encoder::new(proto.as_ref(), &state);
+            let mut part = SlotPartial::empty(dim);
+            for ((i, x), w) in xs.iter().enumerate().zip([1.0f32, 2.5, 1.0, 0.25]) {
+                let f = enc.encode(i as u64, x).unwrap();
+                part.merge(&SlotPartial::decode(proto.as_ref(), &state, &f, w).unwrap()).unwrap();
+            }
+            let bytes = part.to_bytes().unwrap();
+            assert_eq!(bytes.len(), part.wire_len(), "spec={spec}: wire_len mismatch");
+            let back = SlotPartial::from_bytes(&bytes).unwrap();
+            assert_eq!(back, part, "spec={spec}: roundtrip diverged");
+            // Truncations and trailing garbage must be rejected.
+            for cut in [0, 1, 5, 29, bytes.len() / 2, bytes.len() - 1] {
+                assert!(
+                    SlotPartial::from_bytes(&bytes[..cut]).is_err(),
+                    "spec={spec}: truncation at {cut} accepted"
+                );
+            }
+            let mut long = bytes.clone();
+            long.push(0);
+            assert!(SlotPartial::from_bytes(&long).is_err(), "spec={spec}: trailing byte");
+            let mut bad_ver = bytes.clone();
+            bad_ver[0] = 99;
+            assert!(SlotPartial::from_bytes(&bad_ver).is_err(), "spec={spec}: version");
+        }
+    }
+
+    #[test]
+    fn inconsistent_slot_partials_rejected_at_wire() {
+        // Structurally valid but semantically inconsistent payloads — the
+        // shapes only a buggy or malicious aggregator can produce — must
+        // error at the wire instead of poisoning the root with Inf/NaN.
+        let mut part = SlotPartial::from_decoded(&[1.0, -2.0], 1.0, 1).unwrap();
+        part.merge(&SlotPartial::from_decoded(&[0.5, 3.0], 2.5, 1).unwrap()).unwrap();
+        let bytes = part.to_bytes().unwrap();
+        assert!(SlotPartial::from_bytes(&bytes).is_ok());
+        // holders (bytes 14..22) zeroed under frames = 2: would divide by 0.
+        let mut bad = bytes.clone();
+        bad[14..22].fill(0);
+        assert!(SlotPartial::from_bytes(&bad).is_err(), "frames beyond holders accepted");
+        // Uniform flag forged on a weighted partial: weight 3.5 ≠ frames 2.
+        let mut bad = bytes.clone();
+        bad[1] = 1;
+        assert!(SlotPartial::from_bytes(&bad).is_err(), "forged uniform flag accepted");
+        // Zero frames (bytes 6..14) with nonzero sums and weight.
+        let mut bad = bytes.clone();
+        bad[6..14].fill(0);
+        assert!(SlotPartial::from_bytes(&bad).is_err(), "contributions without frames accepted");
+    }
+
+    #[test]
+    fn add_silent_holder_matches_dense_silent_merge() {
+        // The allocation-free silent fold must be bit-identical to
+        // merging a dense silent partial — the equivalence the streaming
+        // pipeline's Option<SlotPartial> slots rely on.
+        let mut dense = SlotPartial::from_decoded(&[1.5, -2.0, 0.25], 2.0, 1).unwrap();
+        let mut sparse = dense.clone();
+        dense.merge(&SlotPartial::silent(3)).unwrap();
+        sparse.add_silent_holder();
+        assert_eq!(dense, sparse);
     }
 
     #[test]

@@ -84,6 +84,10 @@ impl Protocol for QsgdProtocol {
         Accumulator::new(self.dim)
     }
 
+    fn internal_dim(&self) -> usize {
+        self.dim
+    }
+
     fn accumulate_with(
         &self,
         _state: &RoundState,

@@ -139,6 +139,10 @@ impl Protocol for RotatedProtocol {
         Accumulator::new(self.padded)
     }
 
+    fn internal_dim(&self) -> usize {
+        self.padded
+    }
+
     fn accumulate_with(
         &self,
         _state: &RoundState,

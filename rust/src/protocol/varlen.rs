@@ -151,6 +151,10 @@ impl Protocol for VarlenProtocol {
         Accumulator::new(self.dim)
     }
 
+    fn internal_dim(&self) -> usize {
+        self.dim
+    }
+
     fn accumulate_with(
         &self,
         _state: &RoundState,

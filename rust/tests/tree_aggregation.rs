@@ -1,0 +1,724 @@
+//! Conformance suite for the hierarchical aggregation tier.
+//!
+//! The contract: for every protocol spec, fan-in, tree depth, decode
+//! thread count, and transport, the root estimate of a tree of
+//! partial-merging aggregators is **bit-identical** to the flat
+//! sequential specification `aggregate_uploads_reference`. The per-slot
+//! fold is exact (fixed-point), so this holds by construction — these
+//! tests prove the whole pipeline (decode pools, wire serialization,
+//! barrier mixing of `Upload`/`PartialUpload`, both hubs) preserves it.
+//!
+//! Also covered: silent (sampled-out) frames interleaved across tiers,
+//! per-tier byte accounting (root ingress strictly below flat at
+//! n = 4096 simulated clients), hub-identical accounting for
+//! `PartialUpload` traffic, adversarial wire payloads, and the barrier
+//! timeout naming missing children.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+use dme::coordinator::aggregator::{aggregate_tree, spawn_local_tree, Aggregator};
+use dme::coordinator::leader::{
+    aggregate_uploads_reference, ChildKey, Leader, RoundOutcome,
+};
+use dme::coordinator::topology::Topology;
+use dme::coordinator::transport::{
+    LoopbackHub, Message, TcpEndpoint, TcpHub, TransportHub, WeightedFrame,
+};
+use dme::coordinator::worker::{mean_update, UpdateFn, Worker};
+use dme::protocol::config::ProtocolConfig;
+use dme::protocol::{Protocol, RoundCtx, RoundState, SlotPartial};
+use dme::rng::Pcg64;
+use dme::testkit::{check, run_prop};
+
+/// The eight protocol families of the paper's table (§2–§5 + baselines):
+/// fixed-width, rotated, entropy-coded, comparator, and both sampling
+/// wrappers.
+const SPECS: &[&str] = &[
+    "float32",
+    "binary",
+    "klevel:k=16",
+    "rotated:k=16",
+    "varlen:k=17",
+    "qsgd:k=8",
+    "klevel:k=16,p=0.5",
+    "klevel:k=8,q=0.5",
+];
+
+/// A multi-slot weighted update: worker `i` contributes `1 + i % 3`
+/// slots (ragged), with weights mixing 1.0 and non-1.0 values.
+fn multi_slot_update() -> UpdateFn {
+    Arc::new(|_broadcast, dim, shard| {
+        if shard.is_empty() {
+            return Vec::new();
+        }
+        let d = dim as usize;
+        let tag = shard[0][0].abs();
+        let n_slots = 1 + (tag as usize) % 3;
+        (0..n_slots)
+            .map(|s| {
+                let v: Vec<f32> =
+                    shard[0].iter().take(d).map(|&x| x + s as f32 * 0.25).collect();
+                let weight = if (tag as usize + s) % 2 == 0 { 1.0 } else { 2.0 + s as f32 };
+                (v, weight)
+            })
+            .collect()
+    })
+}
+
+/// Deterministic shards: worker `n-1` holds no data (uploads zero
+/// frames); the others hold one tagged gaussian vector driving the
+/// ragged slot count.
+fn make_shards(n: usize, d: usize, seed: u64) -> Vec<Vec<Vec<f32>>> {
+    let mut rng = Pcg64::new(seed ^ 0x5eed);
+    (0..n)
+        .map(|i| {
+            if i == n - 1 {
+                Vec::new()
+            } else {
+                let mut x = vec![0.0f32; d];
+                rng.fill_gaussian_f32(&mut x);
+                x[0] = i as f32;
+                vec![x]
+            }
+        })
+        .collect()
+}
+
+/// Build every worker's upload for `round` of `spec` — exactly what the
+/// transports would deliver, minus the transports.
+fn build_uploads(
+    spec: &str,
+    d: usize,
+    round: u64,
+    shards: &[Vec<Vec<f32>>],
+    update: &UpdateFn,
+    seed: u64,
+) -> (Arc<dyn Protocol>, RoundState, Vec<(u64, Vec<WeightedFrame>)>) {
+    let mut uploads = Vec::with_capacity(shards.len());
+    for (i, shard) in shards.iter().enumerate() {
+        let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+        let worker = Worker {
+            client_id: i as u64,
+            shard: shard.clone(),
+            protocol: proto,
+            update: update.clone(),
+            seed,
+        };
+        match worker.step(round, d as u32, &[]).unwrap() {
+            Message::Upload { client, frames, .. } => uploads.push((client, frames)),
+            _ => unreachable!("step always yields Upload"),
+        }
+    }
+    let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+    let state = proto.prepare(&RoundCtx::new(round, seed));
+    (proto, state, uploads)
+}
+
+fn assert_outcomes_bit_identical(a: &RoundOutcome, b: &RoundOutcome, what: &str) {
+    assert_eq!(a.uplink_bits, b.uplink_bits, "{what}: uplink_bits");
+    assert_eq!(a.n_frames, b.n_frames, "{what}: n_frames");
+    assert_eq!(a.weights, b.weights, "{what}: weights");
+    assert_eq!(a.means.len(), b.means.len(), "{what}: slot count");
+    for (slot, (x, y)) in a.means.iter().zip(&b.means).enumerate() {
+        assert_eq!(
+            x.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            y.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "{what}: slot {slot} means diverge"
+        );
+    }
+}
+
+#[test]
+fn tree_matches_flat_reference_full_grid() {
+    // The full acceptance grid, through the transportless simulator:
+    // every hop still crosses the real PartialUpload wire serialization.
+    let d = 32;
+    let n = 36;
+    let seed = 77;
+    let shards = make_shards(n, d, seed);
+    let update = multi_slot_update();
+    for spec in SPECS {
+        let (proto, state, uploads) = build_uploads(spec, d, 0, &shards, &update, seed);
+        let want =
+            aggregate_uploads_reference(proto.as_ref(), &state, uploads.clone()).unwrap();
+        assert!(want.means.len() >= 2, "{spec}: expected a multi-slot round");
+        for fan_in in [1usize, 7, 32] {
+            for depth in [2usize, 3] {
+                let topo = Topology::uniform(n as u64, fan_in, depth).unwrap();
+                for threads in [1usize, 4] {
+                    let got =
+                        aggregate_tree(proto.as_ref(), &state, &uploads, &topo, threads).unwrap();
+                    assert_outcomes_bit_identical(
+                        &got.outcome,
+                        &want,
+                        &format!("spec={spec} fan_in={fan_in} depth={depth} threads={threads}"),
+                    );
+                    assert_eq!(got.tier_ingress.len(), depth);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn loopback_tree_full_stack_matches_reference() {
+    // Full-stack over the loopback hub: real worker threads, real
+    // aggregator threads with their own decode pools, real barrier
+    // mixing — the same grid, two rounds each.
+    let d = 32;
+    let n = 14;
+    let seed = 91;
+    let shards = make_shards(n, d, seed);
+    let update = multi_slot_update();
+    for spec in SPECS {
+        let mut wants = Vec::new();
+        for round in 0..2u64 {
+            let (proto, state, uploads) = build_uploads(spec, d, round, &shards, &update, seed);
+            wants.push(aggregate_uploads_reference(proto.as_ref(), &state, uploads).unwrap());
+        }
+        for fan_in in [1usize, 7, 32] {
+            for depth in [2usize, 3] {
+                for threads in [1usize, 4] {
+                    let topo = Topology::uniform(n as u64, fan_in, depth).unwrap();
+                    let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+                    let (mut leader, tree) = spawn_local_tree(
+                        proto,
+                        shards.clone(),
+                        update.clone(),
+                        seed,
+                        &topo,
+                        threads,
+                        None,
+                    )
+                    .unwrap();
+                    for (round, want) in wants.iter().enumerate() {
+                        let got = leader.round(round as u64, d as u32, &[]).unwrap();
+                        assert_outcomes_bit_identical(
+                            &got,
+                            want,
+                            &format!(
+                                "loopback spec={spec} fan_in={fan_in} depth={depth} \
+                                 threads={threads} round={round}"
+                            ),
+                        );
+                    }
+                    leader.shutdown().unwrap();
+                    let reports = tree.join().unwrap();
+                    assert_eq!(reports.len(), topo.n_aggregators());
+                }
+            }
+        }
+    }
+}
+
+/// Run two rounds of `spec` over a real TCP tree (leader + aggregators +
+/// workers as separate sockets); returns outcomes and root ingress bytes.
+fn tcp_tree_rounds(
+    spec: &str,
+    d: usize,
+    shards: &[Vec<Vec<f32>>],
+    update: &UpdateFn,
+    seed: u64,
+    topo: &Topology,
+) -> (Vec<RoundOutcome>, u64) {
+    assert_eq!(topo.depth(), 2, "helper wires one aggregator tier");
+    let tier = &topo.levels()[0];
+    let leader_binding = TcpHub::bind("127.0.0.1:0").unwrap();
+    let leader_addr = leader_binding.local_addr().unwrap().to_string();
+
+    // Aggregators: bind, report their worker-facing address, accept
+    // their children, then connect upstream.
+    let (addr_tx, addr_rx) = mpsc::channel::<(usize, String)>();
+    let mut agg_threads = Vec::new();
+    for (idx, spec_node) in tier.iter().enumerate() {
+        let spec_s = spec.to_string();
+        let leader_addr = leader_addr.clone();
+        let addr_tx = addr_tx.clone();
+        let (span, id, n_children) = (spec_node.span, spec_node.id, spec_node.children.len());
+        agg_threads.push(std::thread::spawn(move || {
+            let proto = ProtocolConfig::parse(&spec_s, d).unwrap().build().unwrap();
+            let binding = TcpHub::bind("127.0.0.1:0").unwrap();
+            addr_tx.send((idx, binding.local_addr().unwrap().to_string())).unwrap();
+            let hub = binding.accept(n_children).unwrap();
+            let mut up = TcpEndpoint::connect(&leader_addr).unwrap();
+            Aggregator::new(proto, seed, id, span)
+                .with_level(0)
+                .with_decode_threads(2)
+                .run(Box::new(hub), &mut up)
+                .unwrap()
+        }));
+    }
+    drop(addr_tx);
+    let mut agg_addrs = vec![String::new(); tier.len()];
+    for _ in 0..tier.len() {
+        let (idx, addr) = addr_rx.recv().unwrap();
+        agg_addrs[idx] = addr;
+    }
+
+    // Workers: each connects to the aggregator owning its span.
+    let mut worker_threads = Vec::new();
+    for (c, shard) in shards.iter().enumerate() {
+        let idx = tier.iter().position(|s| (c as u64) < s.span.1).unwrap();
+        let addr = agg_addrs[idx].clone();
+        let spec_s = spec.to_string();
+        let shard = shard.clone();
+        let update = update.clone();
+        worker_threads.push(std::thread::spawn(move || {
+            let proto = ProtocolConfig::parse(&spec_s, d).unwrap().build().unwrap();
+            Worker { client_id: c as u64, shard, protocol: proto, update, seed }
+                .run_tcp(&addr)
+                .unwrap();
+        }));
+    }
+
+    let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+    let hub = leader_binding.accept(tier.len()).unwrap();
+    let mut leader = Leader::new(proto, Box::new(hub), seed).with_decode_threads(2);
+    let mut outcomes = Vec::new();
+    for round in 0..2u64 {
+        outcomes.push(leader.round(round, d as u32, &[]).unwrap());
+    }
+    let (_, root_up) = leader.bytes_moved();
+    leader.shutdown().unwrap();
+    for h in agg_threads {
+        h.join().unwrap();
+    }
+    for h in worker_threads {
+        h.join().unwrap();
+    }
+    (outcomes, root_up)
+}
+
+#[test]
+fn tcp_tree_matches_reference_with_identical_accounting() {
+    // Real sockets for every spec at (fan-in 7, depth 2): bit-identical
+    // to the flat reference, AND the root hub's ingress bytes equal the
+    // loopback tree's — both hubs account framed wire bytes.
+    let d = 32;
+    let n = 10;
+    let seed = 123;
+    let shards = make_shards(n, d, seed);
+    let update = multi_slot_update();
+    let topo = Topology::uniform(n as u64, 7, 2).unwrap();
+    for spec in SPECS {
+        let mut wants = Vec::new();
+        for round in 0..2u64 {
+            let (proto, state, uploads) = build_uploads(spec, d, round, &shards, &update, seed);
+            wants.push(aggregate_uploads_reference(proto.as_ref(), &state, uploads).unwrap());
+        }
+        let (tcp_outcomes, tcp_root_up) =
+            tcp_tree_rounds(spec, d, &shards, &update, seed, &topo);
+        for (round, (got, want)) in tcp_outcomes.iter().zip(&wants).enumerate() {
+            assert_outcomes_bit_identical(got, want, &format!("tcp spec={spec} round={round}"));
+        }
+        // Loopback twin with identical seeds and shards.
+        let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+        let (mut leader, tree) =
+            spawn_local_tree(proto, shards.clone(), update.clone(), seed, &topo, 2, None)
+                .unwrap();
+        for (round, want) in wants.iter().enumerate() {
+            let got = leader.round(round as u64, d as u32, &[]).unwrap();
+            assert_outcomes_bit_identical(&got, want, &format!("loop spec={spec} round={round}"));
+        }
+        let (_, loop_root_up) = leader.bytes_moved();
+        leader.shutdown().unwrap();
+        tree.join().unwrap();
+        assert_eq!(
+            tcp_root_up, loop_root_up,
+            "{spec}: root ingress accounting diverges between hubs"
+        );
+    }
+}
+
+#[test]
+fn sparse_silent_slots_interleave_across_tiers() {
+    // Sampling protocols produce silent frames (bit_len 0) that still
+    // count as slot holders. Scatter them across a depth-3 tree and
+    // check the tree agrees with the flat reference — and that the
+    // scenario really exercises silence.
+    let d = 24;
+    let n = 24;
+    let seed = 41;
+    let shards = make_shards(n, d, seed);
+    let update = multi_slot_update();
+    let spec = "klevel:k=16,p=0.4";
+    let (proto, state, uploads) = build_uploads(spec, d, 0, &shards, &update, seed);
+    let n_silent: usize = uploads
+        .iter()
+        .flat_map(|(_, frames)| frames.iter())
+        .filter(|wf| wf.frame.bit_len == 0)
+        .count();
+    assert!(n_silent > 0, "scenario must contain silent frames");
+    let want = aggregate_uploads_reference(proto.as_ref(), &state, uploads.clone()).unwrap();
+    assert!(want.n_frames > 0);
+    for fan_in in [3usize, 9] {
+        let topo = Topology::uniform(n as u64, fan_in, 3).unwrap();
+        let got = aggregate_tree(proto.as_ref(), &state, &uploads, &topo, 4).unwrap();
+        assert_outcomes_bit_identical(&got.outcome, &want, &format!("fan_in={fan_in}"));
+    }
+    // Full stack too: silent frames crossing two aggregator tiers.
+    let topo = Topology::uniform(n as u64, 5, 3).unwrap();
+    let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+    let (mut leader, tree) =
+        spawn_local_tree(proto, shards, update, seed, &topo, 2, None).unwrap();
+    let got = leader.round(0, d as u32, &[]).unwrap();
+    assert_outcomes_bit_identical(&got, &want, "loopback depth-3 sampling");
+    leader.shutdown().unwrap();
+    tree.join().unwrap();
+}
+
+#[test]
+fn mixed_worker_and_aggregator_children_at_root() {
+    // The leader accepts Upload and PartialUpload in the same barrier:
+    // client 0 reports directly, clients 1..4 go through an aggregator.
+    let d = 16;
+    let seed = 19;
+    let spec = "rotated:k=16";
+    let shards = make_shards(4, d, seed);
+    let update = multi_slot_update();
+    let (proto, state, uploads) = build_uploads(spec, d, 0, &shards, &update, seed);
+    let want = aggregate_uploads_reference(proto.as_ref(), &state, uploads).unwrap();
+
+    let (hub, mut root_eps) = LoopbackHub::new(2);
+    let ep_agg = root_eps.pop().unwrap();
+    let ep_w0 = root_eps.pop().unwrap();
+    let mk_worker = |c: usize| Worker {
+        client_id: c as u64,
+        shard: shards[c].clone(),
+        protocol: ProtocolConfig::parse(spec, d).unwrap().build().unwrap(),
+        update: update.clone(),
+        seed,
+    };
+    let w0 = mk_worker(0);
+    let h_w0 = std::thread::spawn(move || w0.run_loopback(ep_w0));
+    let (agg_hub, agg_eps) = LoopbackHub::new(3);
+    let mut worker_handles = vec![h_w0];
+    for (i, ep) in agg_eps.into_iter().enumerate() {
+        let w = mk_worker(i + 1);
+        worker_handles.push(std::thread::spawn(move || w.run_loopback(ep)));
+    }
+    let agg_proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+    let h_agg = std::thread::spawn(move || {
+        let mut ep = ep_agg;
+        Aggregator::new(agg_proto, seed, 100, (1, 4)).run(Box::new(agg_hub), &mut ep)
+    });
+    let mut leader = Leader::new(proto, Box::new(hub), seed).with_expected_children(vec![
+        ChildKey::Client(0),
+        ChildKey::Aggregator { id: 100, span: (1, 4) },
+    ]);
+    let got = leader.round(0, d as u32, &[]).unwrap();
+    assert_outcomes_bit_identical(&got, &want, "mixed barrier");
+    leader.shutdown().unwrap();
+    h_agg.join().unwrap().unwrap();
+    for h in worker_handles {
+        h.join().unwrap().unwrap();
+    }
+}
+
+#[test]
+fn root_ingress_shrinks_at_depth2_with_4096_simulated_clients() {
+    // The scaling claim made measurable: at n = 4096 the root's ingress
+    // bytes under a depth-2 tree are strictly below the flat topology's
+    // O(n · frames) — while the estimate stays bit-identical.
+    let d = 128;
+    let n = 4096u64;
+    let spec = "klevel:k=16";
+    let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+    let ctx = RoundCtx::new(0, 7);
+    let state = proto.prepare(&ctx);
+    let mut enc = dme::protocol::Encoder::new(proto.as_ref(), &state);
+    let mut rng = Pcg64::new(3);
+    let uploads: Vec<(u64, Vec<WeightedFrame>)> = (0..n)
+        .map(|i| {
+            let mut x = vec![0.0f32; d];
+            rng.fill_gaussian_f32(&mut x);
+            let frame = enc.encode(i, &x).unwrap();
+            (i, vec![WeightedFrame { frame, weight: 1.0 }])
+        })
+        .collect();
+    let flat = aggregate_tree(proto.as_ref(), &state, &uploads, &Topology::flat(n), 4).unwrap();
+    let topo = Topology::uniform(n, 256, 2).unwrap();
+    let tree = aggregate_tree(proto.as_ref(), &state, &uploads, &topo, 4).unwrap();
+    assert_outcomes_bit_identical(&tree.outcome, &flat.outcome, "n=4096 depth-2");
+    let (flat_root, tree_root) = (flat.tier_ingress[0], tree.tier_ingress[0]);
+    assert!(
+        tree_root < flat_root,
+        "root ingress must shrink: tree {tree_root} vs flat {flat_root}"
+    );
+    // The workers' edge cost is unchanged — the tree moves it, not hides it.
+    assert_eq!(tree.tier_ingress[1], flat_root);
+}
+
+#[test]
+fn partial_upload_accounting_identical_on_both_hubs() {
+    // One real PartialUpload through each hub: both must account exactly
+    // framed_len, so tree runs report identical bytes over loopback and
+    // TCP.
+    let mut slot = SlotPartial::from_decoded(&[0.5, -1.25, 3.0], 1.0, 1).unwrap();
+    slot.merge(&SlotPartial::from_decoded(&[2.0, 0.125, -0.5], 2.0, 1).unwrap()).unwrap();
+    let msg = Message::PartialUpload {
+        agg_id: 5,
+        round: 2,
+        span: (0, 64),
+        uplink_bits: 4096,
+        n_frames: 2,
+        slots: vec![slot],
+    };
+    let framed = msg.framed_len();
+    assert_eq!(framed, msg.to_bytes().unwrap().len() as u64 + 4);
+
+    // Loopback: endpoint send accounts the uplink.
+    let (mut hub, eps) = LoopbackHub::new(1);
+    eps[0].send(msg.clone()).unwrap();
+    hub.recv().unwrap();
+    assert_eq!(hub.bytes_moved().1, framed);
+
+    // TCP: reader-side accounting after a real socket crossing.
+    let binding = TcpHub::bind("127.0.0.1:0").unwrap();
+    let addr = binding.local_addr().unwrap().to_string();
+    let msg2 = msg.clone();
+    let sender = std::thread::spawn(move || {
+        let mut ep = TcpEndpoint::connect(&addr).unwrap();
+        ep.send(&msg2).unwrap();
+        // Wait for shutdown so the hub's reader sees an orderly close.
+        ep.recv().unwrap()
+    });
+    let mut hub = binding.accept(1).unwrap();
+    match hub.recv().unwrap() {
+        Message::PartialUpload { agg_id, slots, .. } => {
+            assert_eq!(agg_id, 5);
+            assert_eq!(slots.len(), 1);
+        }
+        other => panic!("expected PartialUpload, got {other:?}"),
+    }
+    assert_eq!(hub.bytes_moved().1, framed, "TCP accounting diverges from loopback");
+    hub.broadcast(&Message::Shutdown).unwrap();
+    sender.join().unwrap();
+}
+
+#[test]
+fn adversarial_partial_upload_payloads() {
+    // Property: random well-formed PartialUploads round-trip exactly;
+    // random corruptions — truncation, trailing bytes, bad version —
+    // are rejected by the parser, and messages that violate the wire
+    // invariants are rejected by Message::validate on both hub types
+    // (loopback checks on send, TCP checks inside to_bytes).
+    run_prop("partial_upload_wire", 40, |g| {
+        let dim = g.usize_in(1..=24);
+        let n_parts = g.usize_in(1..=5);
+        let mut slot = SlotPartial::empty(dim);
+        for _ in 0..n_parts {
+            let vals = g.vec_f32(dim..=dim, -8.0, 8.0);
+            let w = if g.usize_in(0..=1) == 0 { 1.0 } else { g.f32_in(0.25, 4.0) };
+            slot.merge(&SlotPartial::from_decoded(&vals, w, 1).map_err(|e| e.to_string())?)
+                .map_err(|e| e.to_string())?;
+        }
+        let msg = Message::PartialUpload {
+            agg_id: g.rng().next_u64(),
+            round: g.rng().next_u64() % 1000,
+            // Wide enough for the merged slot's holder count.
+            span: (4, 4 + n_parts as u64 + g.rng().next_u64() % 64),
+            uplink_bits: g.rng().next_u64() % (1 << 40),
+            n_frames: n_parts as u64,
+            slots: vec![slot.clone(), SlotPartial::silent(dim)],
+        };
+        let bytes = msg.to_bytes().map_err(|e| e.to_string())?;
+        check(bytes.len() as u64 == msg.wire_len(), "wire_len mismatch")?;
+        let back = Message::from_bytes(&bytes).map_err(|e| e.to_string())?;
+        let Message::PartialUpload { slots, .. } = back else {
+            return Err("variant changed on the wire".into());
+        };
+        check(slots[0] == slot, "slot state changed on the wire")?;
+        // Random truncation is always rejected.
+        let cut = g.usize_in(0..=bytes.len() - 1);
+        check(Message::from_bytes(&bytes[..cut]).is_err(), format!("truncation {cut} passed"))?;
+        // Trailing garbage is always rejected.
+        let mut long = bytes.clone();
+        long.push(g.rng().next_u64() as u8);
+        check(Message::from_bytes(&long).is_err(), "trailing garbage passed")?;
+        // An inverted span must be refused before it reaches any wire.
+        let bad = Message::PartialUpload {
+            agg_id: 0,
+            round: 0,
+            span: (9, 3),
+            uplink_bits: 0,
+            n_frames: 0,
+            slots: vec![],
+        };
+        check(bad.validate().is_err(), "validate accepted inverted span")?;
+        check(bad.to_bytes().is_err(), "TCP serialization accepted inverted span")?;
+        let (mut hub, eps) = LoopbackHub::new(1);
+        check(hub.broadcast(&bad).is_err(), "loopback broadcast accepted inverted span")?;
+        check(eps[0].send(bad).is_err(), "loopback send accepted inverted span")?;
+        // A span too narrow for its slots' holder counts must be refused
+        // on send...
+        let forged = Message::PartialUpload {
+            agg_id: 0,
+            round: 0,
+            span: (7, 7),
+            uplink_bits: 0,
+            n_frames: n_parts as u64,
+            slots: vec![slot.clone()],
+        };
+        check(forged.validate().is_err(), "validate accepted holders beyond span")?;
+        // ...and on parse: narrow a valid message's span bytes (offsets
+        // 17..25 = span.0, 25..33 = span.1) down to an empty span.
+        let mut narrowed = bytes.clone();
+        let lo: [u8; 8] = narrowed[17..25].try_into().unwrap();
+        narrowed[25..33].copy_from_slice(&lo);
+        check(Message::from_bytes(&narrowed).is_err(), "parser accepted holders beyond span")
+    });
+}
+
+#[test]
+fn barrier_timeout_names_missing_children() {
+    // One worker answers, the other stays silent: a leader armed with a
+    // timeout must fail the round and name exactly the missing child;
+    // the healthy path (both answer) still works afterwards with the
+    // default wait-forever behavior left untouched elsewhere.
+    let d = 8;
+    let proto = ProtocolConfig::parse("klevel:k=4", d).unwrap().build().unwrap();
+    let (hub, mut eps) = LoopbackHub::new(2);
+    let ep_silent = eps.pop().unwrap(); // client 1's endpoint — held, never answered
+    let ep_live = eps.pop().unwrap();
+    let live = Worker {
+        client_id: 0,
+        shard: vec![vec![1.0; d]],
+        protocol: proto.clone(),
+        update: mean_update(),
+        seed: 3,
+    };
+    let h_live = std::thread::spawn(move || live.run_loopback(ep_live));
+    let mut leader = Leader::new(proto, Box::new(hub), 3)
+        .with_round_timeout(Duration::from_millis(200))
+        .with_expected_children(vec![ChildKey::Client(0), ChildKey::Client(1)]);
+    let err = leader.round(0, d as u32, &[]).unwrap_err().to_string();
+    assert!(err.contains("timed out"), "unexpected error: {err}");
+    assert!(err.contains("client 1"), "must name the missing client: {err}");
+    assert!(!err.contains("client 0,"), "must not blame the live client: {err}");
+    // The silent endpoint got the RoundStart; drain and release it so
+    // shutdown can complete.
+    drop(ep_silent);
+    let _ = leader.shutdown();
+    h_live.join().unwrap().unwrap();
+}
+
+#[test]
+fn barrier_recovers_after_timeout_when_late_upload_arrives() {
+    // The retry path the timeout feature promises: a worker that answers
+    // a round *after* its barrier timed out must not poison the next
+    // round — the stale upload is dropped at the barrier and the
+    // superseding round completes with every child.
+    let d = 8;
+    let proto = ProtocolConfig::parse("klevel:k=4", d).unwrap().build().unwrap();
+    let (hub, mut eps) = LoopbackHub::new(2);
+    let ep_slow = eps.pop().unwrap(); // client 1's endpoint — driven manually
+    let ep_live = eps.pop().unwrap();
+    let live = Worker {
+        client_id: 0,
+        shard: vec![vec![1.0; d]],
+        protocol: proto.clone(),
+        update: mean_update(),
+        seed: 3,
+    };
+    let h_live = std::thread::spawn(move || live.run_loopback(ep_live));
+    let slow = Worker {
+        client_id: 1,
+        shard: vec![vec![2.0; d]],
+        protocol: proto.clone(),
+        update: mean_update(),
+        seed: 3,
+    };
+    let mut leader = Leader::new(proto, Box::new(hub), 3)
+        .with_round_timeout(Duration::from_millis(200))
+        .with_expected_children(vec![ChildKey::Client(0), ChildKey::Client(1)]);
+    let err = leader.round(0, d as u32, &[]).unwrap_err().to_string();
+    assert!(err.contains("client 1"), "must name the missing client: {err}");
+    // The slow worker answers round 0 late: its upload sits in the hub's
+    // queue ahead of anything round 1 produces.
+    let Message::RoundStart { round, dim, .. } = ep_slow.recv().unwrap() else {
+        panic!("expected RoundStart");
+    };
+    assert_eq!(round, 0);
+    ep_slow.send(slow.step(0, dim, &[]).unwrap()).unwrap();
+    // Round 1 must drop the stale upload and complete with both children.
+    let h_slow = std::thread::spawn(move || {
+        let Message::RoundStart { round, dim, .. } = ep_slow.recv().unwrap() else {
+            panic!("expected RoundStart");
+        };
+        ep_slow.send(slow.step(round, dim, &[]).unwrap()).unwrap();
+        let _ = ep_slow.recv(); // drain Shutdown
+    });
+    let out = leader.round(1, d as u32, &[]).unwrap();
+    assert_eq!(out.n_frames, 2, "both children must land in the recovered round");
+    leader.shutdown().unwrap();
+    h_slow.join().unwrap();
+    h_live.join().unwrap().unwrap();
+}
+
+#[test]
+fn aggregator_survives_barrier_timeout_and_tree_recovers() {
+    // The tree-shaped version of the recovery contract: an aggregator
+    // whose own barrier times out must NOT die (that would turn one
+    // transiently slow worker into the loss of the whole tree) — it
+    // skips the round, the leader's deadline names it, and the next
+    // round completes with every client present.
+    let d = 8;
+    let spec = "klevel:k=4";
+    let seed = 11;
+    let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+    // Root hub: one aggregator child covering clients [0, 2).
+    let (root_hub, mut root_eps) = LoopbackHub::new(1);
+    let ep_agg = root_eps.pop().unwrap();
+    // Aggregator hub: a live worker (client 0) plus a manually driven
+    // endpoint standing in for a slow client 1.
+    let (agg_hub, mut agg_eps) = LoopbackHub::new(2);
+    let ep_slow = agg_eps.pop().unwrap();
+    let ep_live = agg_eps.pop().unwrap();
+    let mk_worker = |c: u64| Worker {
+        client_id: c,
+        shard: vec![vec![c as f32 + 1.0; d]],
+        protocol: ProtocolConfig::parse(spec, d).unwrap().build().unwrap(),
+        update: mean_update(),
+        seed,
+    };
+    let live = mk_worker(0);
+    let h_live = std::thread::spawn(move || live.run_loopback(ep_live));
+    let agg_proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+    let h_agg = std::thread::spawn(move || {
+        let mut ep = ep_agg;
+        Aggregator::new(agg_proto, seed, 7, (0, 2))
+            .with_round_timeout(Duration::from_millis(100))
+            .run(Box::new(agg_hub), &mut ep)
+    });
+    let mut leader = Leader::new(proto, Box::new(root_hub), seed)
+        .with_round_timeout(Duration::from_millis(1000))
+        .with_expected_children(vec![ChildKey::Aggregator { id: 7, span: (0, 2) }]);
+    // Round 0: client 1 never answers, the aggregator's 100 ms deadline
+    // expires, it skips the round, and the leader's deadline names it.
+    let err = leader.round(0, d as u32, &[]).unwrap_err().to_string();
+    assert!(err.contains("aggregator 7"), "must name the silent aggregator: {err}");
+    // Client 1 answers round 0 late, then serves round 1 properly.
+    let slow = mk_worker(1);
+    let Message::RoundStart { round, dim, .. } = ep_slow.recv().unwrap() else {
+        panic!("expected RoundStart");
+    };
+    assert_eq!(round, 0);
+    ep_slow.send(slow.step(0, dim, &[]).unwrap()).unwrap();
+    let h_slow = std::thread::spawn(move || {
+        let Message::RoundStart { round, dim, .. } = ep_slow.recv().unwrap() else {
+            panic!("expected RoundStart");
+        };
+        ep_slow.send(slow.step(round, dim, &[]).unwrap()).unwrap();
+        let _ = ep_slow.recv(); // drain Shutdown
+    });
+    let out = leader.round(1, d as u32, &[]).unwrap();
+    assert_eq!(out.n_frames, 2, "tree must recover with every client present");
+    leader.shutdown().unwrap();
+    let report = h_agg.join().unwrap().unwrap();
+    assert_eq!(report.agg_id, 7);
+    h_slow.join().unwrap();
+    h_live.join().unwrap().unwrap();
+}
