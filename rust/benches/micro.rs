@@ -15,9 +15,9 @@ use std::time::Duration;
 
 use dme::bench::Bench;
 use dme::coordinator::aggregator::aggregate_tree;
-use dme::coordinator::leader::{aggregate_uploads_streaming, spawn_local_cluster};
+use dme::coordinator::leader::{aggregate_uploads_streaming, spawn_local_cluster, Leader};
 use dme::coordinator::topology::Topology;
-use dme::coordinator::transport::WeightedFrame;
+use dme::coordinator::transport::{LoopbackHub, Message, WeightedFrame};
 use dme::coordinator::worker::mean_update;
 use dme::protocol::config::ProtocolConfig;
 use dme::protocol::quantizer::Span;
@@ -25,6 +25,50 @@ use dme::protocol::{run_round_par, Encoder, Frame, Protocol, RoundCtx};
 use dme::rng::Pcg64;
 use dme::rotation::hadamard;
 use dme::runtime::{ComputeBackend, NativeBackend};
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Counting allocator wrapping the system allocator: tracks live bytes
+/// and the high-water mark, so the streaming-barrier case below can
+/// report *peak retained memory*, not just time. `realloc`/
+/// `alloc_zeroed` use the `GlobalAlloc` defaults, which route through
+/// `alloc`/`dealloc` and stay counted.
+struct PeakAlloc;
+
+static LIVE_BYTES: AtomicUsize = AtomicUsize::new(0);
+static PEAK_BYTES: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for PeakAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            let live = LIVE_BYTES.fetch_add(layout.size(), Ordering::Relaxed) + layout.size();
+            PEAK_BYTES.fetch_max(live, Ordering::Relaxed);
+        }
+        p
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        LIVE_BYTES.fetch_sub(layout.size(), Ordering::Relaxed);
+    }
+}
+
+#[global_allocator]
+static PEAK_ALLOC: PeakAlloc = PeakAlloc;
+
+/// Start a peak-measurement window: returns the baseline to pass to
+/// [`peak_since`].
+fn reset_peak() -> usize {
+    let live = LIVE_BYTES.load(Ordering::Relaxed);
+    PEAK_BYTES.store(live, Ordering::Relaxed);
+    live
+}
+
+/// Peak bytes allocated *above the baseline* since [`reset_peak`].
+fn peak_since(baseline: usize) -> usize {
+    PEAK_BYTES.load(Ordering::Relaxed).saturating_sub(baseline)
+}
 
 fn main() -> anyhow::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -240,6 +284,90 @@ fn main() -> anyhow::Result<()> {
                 );
             }
         }
+    }
+
+    // ---- streaming-barrier peak memory: eager per-thread fold ----
+    //
+    // The PR-4 perf item, closed: the live streaming barrier folds each
+    // decoded upload into a per-decode-thread SlotPartial accumulator
+    // the moment it decodes (exact 640-bit merges make that
+    // bit-identical by construction), so peak retention is
+    // O(threads·dim) — versus the batch path, which by design holds all
+    // n decoded uploads (O(n·dim)) until the merge. Measured with a
+    // counting global allocator at n=4096, one-shot (peak is a property
+    // of one pass, not a timing).
+    {
+        let d = 256;
+        let n: usize = 4096;
+        let threads = 4;
+        let seed = 77u64;
+        let proto = ProtocolConfig::parse("klevel:k=16", d)?.build()?;
+        let ctx = RoundCtx::new(0, seed);
+        let state = proto.prepare(&ctx);
+        let mut enc = Encoder::new(proto.as_ref(), &state);
+        let mut rng = Pcg64::new(13);
+        let uploads: Vec<(u64, Vec<WeightedFrame>)> = (0..n)
+            .map(|i| {
+                let mut x = vec![0.0f32; d];
+                rng.fill_gaussian_f32(&mut x);
+                let frame = enc.encode(i as u64, &x).expect("encode");
+                (i as u64, vec![WeightedFrame { frame, weight: 1.0 }])
+            })
+            .collect();
+
+        // Batch path: decode_all retains every DecodedUpload, then merges.
+        let base = reset_peak();
+        let batch_out = aggregate_uploads_streaming(proto.as_ref(), &state, &uploads, threads)?;
+        let batch_peak = peak_since(base);
+
+        // Live streaming barrier: pre-queue the same uploads on a
+        // loopback hub (allocated *before* the measurement window), then
+        // run the real Leader::round with its eager per-thread fold.
+        let (hub, endpoints) = LoopbackHub::new(n);
+        for (i, frames) in &uploads {
+            endpoints[*i as usize].send(Message::Upload {
+                client: *i,
+                round: 0,
+                frames: frames.clone(),
+            })?;
+        }
+        let mut leader =
+            Leader::new(proto.clone(), Box::new(hub), seed).with_decode_threads(threads);
+        let base = reset_peak();
+        let eager_out = leader.round(0, d as u32, &[])?;
+        let eager_peak = peak_since(base);
+        drop(endpoints); // kept alive through the round (hub broadcast targets)
+
+        // Same bits — the eager fold is a memory optimization, not a
+        // numerical change.
+        assert_eq!(batch_out.n_frames, eager_out.n_frames);
+        for (a, b) in batch_out.means.iter().zip(&eager_out.means) {
+            assert_eq!(
+                a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                b.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "eager fold changed the bits"
+            );
+        }
+        assert!(
+            eager_peak < batch_peak / 2,
+            "eager barrier peak {eager_peak} B not clearly below batch {batch_peak} B"
+        );
+        dme::bench::print_table(
+            &format!("streaming barrier peak retained memory (n={n}, d={d}, {threads} decode threads)"),
+            &["path", "peak bytes", "vs batch"],
+            &[
+                vec![
+                    "batch decode-then-merge (O(n·dim))".into(),
+                    format!("{batch_peak}"),
+                    "1.00x".into(),
+                ],
+                vec![
+                    "live barrier, eager fold (O(threads·dim))".into(),
+                    format!("{eager_peak}"),
+                    format!("{:.3}x", eager_peak as f64 / batch_peak as f64),
+                ],
+            ],
+        );
     }
 
     // ---- aggregation tier: flat vs 2-level vs 3-level trees ----

@@ -88,6 +88,21 @@ impl Args {
         self.flags.get(key).cloned()
     }
 
+    /// Typed optional flag: `Ok(None)` when absent, parse errors surfaced
+    /// (unlike [`Args::get`], which needs a default).
+    pub fn get_opt<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.consumed.borrow_mut().insert(key.to_string());
+        match self.flags.get(key) {
+            None => Ok(None),
+            Some(v) => {
+                v.parse().map(Some).map_err(|e| anyhow::anyhow!("--{key} {v}: {e}"))
+            }
+        }
+    }
+
     /// Boolean flag (present or `--key true/false`).
     pub fn bool(&self, key: &str) -> Result<bool> {
         self.get(key, false)
@@ -129,6 +144,15 @@ mod tests {
         let a = parse(&["--clients", "ten"]);
         assert!(a.get("clients", 0usize).is_err());
         assert!(a.require("nope").is_err());
+    }
+
+    #[test]
+    fn typed_optionals() {
+        let a = parse(&["--budget-bits", "2.5"]);
+        assert_eq!(a.get_opt::<f64>("budget-bits").unwrap(), Some(2.5));
+        assert_eq!(a.get_opt::<f64>("mse-target").unwrap(), None);
+        let bad = parse(&["--budget-bits", "lots"]);
+        assert!(bad.get_opt::<f64>("budget-bits").is_err());
     }
 
     #[test]

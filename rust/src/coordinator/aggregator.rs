@@ -107,12 +107,23 @@ impl Aggregator {
         self
     }
 
+    /// Rebuild this node's protocol handle from a `SpecChange` spec (the
+    /// same total rebuild the workers perform — see
+    /// `Worker::apply_spec`).
+    fn apply_spec(&mut self, spec: &str) -> Result<()> {
+        let dim = self.protocol.dim();
+        self.protocol = crate::protocol::config::ProtocolConfig::parse(spec, dim)
+            .and_then(|cfg| cfg.build())
+            .with_context(|| format!("aggregator {} rebuilding protocol `{spec}`", self.agg_id))?;
+        Ok(())
+    }
+
     /// Serve rounds until the parent sends `Shutdown` (which is relayed
     /// to the children), then return this node's report. On a mid-round
     /// failure the parent's barrier is woken first (an unexpected
     /// `Shutdown` upstream) so the tree errors out instead of hanging.
     pub fn run(
-        self,
+        mut self,
         mut hub: Box<dyn TransportHub>,
         up: &mut dyn Endpoint,
     ) -> Result<AggregatorReport> {
@@ -153,6 +164,20 @@ impl Aggregator {
                             let _ = up.send_msg(Message::Shutdown);
                             return Err(e);
                         }
+                    }
+                }
+                Message::SpecChange { round, spec } => {
+                    // Relay downstream first — the subtree rebuilds on
+                    // receipt, ahead of the RoundStart that follows on
+                    // the same FIFO links — then rebuild this node. Any
+                    // failure takes the mid-round teardown path below.
+                    let relay = hub
+                        .broadcast(&Message::SpecChange { round, spec: spec.clone() })
+                        .and_then(|()| self.apply_spec(&spec));
+                    if let Err(e) = relay {
+                        let _ = hub.broadcast(&Message::Shutdown);
+                        let _ = up.send_msg(Message::Shutdown);
+                        return Err(e);
                     }
                 }
                 Message::Shutdown => {
@@ -211,10 +236,9 @@ impl Aggregator {
         }
         *expected = collected.seen.clone();
         let t_merge = Instant::now();
-        let decoded = collected.decoded;
-        let uplink_bits: u64 = decoded.iter().map(|d| d.uplink_bits).sum();
-        let n_frames: usize = decoded.iter().map(|d| d.n_frames).sum();
-        let slots = fold_spans(self.protocol.as_ref(), &decoded)?;
+        let uplink_bits = collected.folded.uplink_bits();
+        let n_frames = collected.folded.n_frames() as usize;
+        let slots = collected.folded.into_slots();
         let decode_wall = collected.decode_wall + t_merge.elapsed();
         let (down, up) = hub.bytes_moved();
         metrics.push(RoundMetrics {

@@ -41,6 +41,7 @@ use anyhow::{bail, ensure, Result};
 
 use super::metrics::{ExperimentMetrics, RoundMetrics};
 use super::transport::{Message, TransportHub, WeightedFrame};
+use crate::protocol::config::ProtocolConfig;
 use crate::protocol::{Protocol, RoundCtx, RoundState, SlotPartial};
 
 /// Result of one coordinated round.
@@ -131,29 +132,112 @@ pub fn decode_upload(
     Ok(DecodedUpload { origin: ChildKey::Client(client), slots, uplink_bits, n_frames })
 }
 
+/// Running slot-wise fold of decoded children: one [`SlotPartial`] per
+/// slot plus the span's client-edge accounting, growing only with the
+/// slot count — never with the child count. This is what each decode
+/// thread (and the barrier thread) accumulates into *eagerly*, the
+/// moment a child decodes, so the streaming barrier retains
+/// O(threads · slots · dim) state instead of one decoded upload per
+/// child (O(n · dim) at a flat leader — the PR-4 peak-memory item).
+///
+/// Because every per-slot state is an exact fixed-point sum, folding
+/// child-by-child here is bit-identical to the batch slot-by-slot fold
+/// ([`fold_spans`]) for any grouping and order.
+pub struct SpanAccum {
+    dim: usize,
+    slots: Vec<SlotPartial>,
+    uplink_bits: u64,
+    n_frames: u64,
+}
+
+impl SpanAccum {
+    /// An empty accumulator for a protocol of internal dimension `dim`.
+    pub fn new(dim: usize) -> Self {
+        SpanAccum { dim, slots: Vec::new(), uplink_bits: 0, n_frames: 0 }
+    }
+
+    /// Fold one decoded child in: exact merge per present slot, holder
+    /// count only for silent slots, counters summed. Slots grow to the
+    /// widest child seen so far (ragged uploads contribute nothing to
+    /// the slots they lack, exactly like the batch fold).
+    pub fn fold(&mut self, d: &DecodedUpload) -> Result<()> {
+        while self.slots.len() < d.slots.len() {
+            self.slots.push(SlotPartial::empty(self.dim));
+        }
+        for (acc, s) in self.slots.iter_mut().zip(&d.slots) {
+            match s {
+                Some(p) => acc.merge(p)?,
+                // Bit-identical to merging a dense silent partial: zeros
+                // add nothing, so only the holder count moves.
+                None => acc.add_silent_holder(),
+            }
+        }
+        self.uplink_bits += d.uplink_bits;
+        self.n_frames += d.n_frames as u64;
+        Ok(())
+    }
+
+    /// Merge another accumulator in (the cross-thread reduction at the
+    /// barrier). Exact, so the thread assignment of children and the
+    /// order of absorption cannot change a bit of the result.
+    pub fn absorb(&mut self, other: SpanAccum) -> Result<()> {
+        while self.slots.len() < other.slots.len() {
+            self.slots.push(SlotPartial::empty(self.dim));
+        }
+        for (acc, s) in self.slots.iter_mut().zip(&other.slots) {
+            acc.merge(s)?;
+        }
+        self.uplink_bits += other.uplink_bits;
+        self.n_frames += other.n_frames;
+        Ok(())
+    }
+
+    /// Sum of the folded children's client-edge payload bits.
+    pub fn uplink_bits(&self) -> u64 {
+        self.uplink_bits
+    }
+
+    /// Sum of the folded children's non-silent frame counts.
+    pub fn n_frames(&self) -> u64 {
+        self.n_frames
+    }
+
+    /// The merged per-slot partials (what an aggregation-tier node
+    /// forwards upstream).
+    pub fn into_slots(self) -> Vec<SlotPartial> {
+        self.slots
+    }
+
+    /// Finish every slot at the root (single rounding + protocol
+    /// postprocessing) into the round outcome.
+    pub fn finish(&self, proto: &dyn Protocol, state: &RoundState) -> RoundOutcome {
+        let mut means = Vec::with_capacity(self.slots.len());
+        let mut weights = Vec::with_capacity(self.slots.len());
+        for sp in &self.slots {
+            let (mean, weight) = sp.finish(proto, state);
+            means.push(mean);
+            weights.push(weight);
+        }
+        RoundOutcome {
+            means,
+            weights,
+            uplink_bits: self.uplink_bits,
+            n_frames: self.n_frames as usize,
+        }
+    }
+}
+
 /// Merge decoded children slot-wise into one [`SlotPartial`] per slot —
 /// the aggregation-tier node's whole job, and the first half of the
 /// leader's. Exact (associative and commutative), so the result is
 /// independent of arrival order and of how the children were grouped
 /// into spans (any tree ≡ flat) — no sorting needed.
 pub fn fold_spans(proto: &dyn Protocol, decoded: &[DecodedUpload]) -> Result<Vec<SlotPartial>> {
-    let dim = proto.internal_dim();
-    let n_slots = decoded.iter().map(|d| d.slots.len()).max().unwrap_or(0);
-    let mut out = Vec::with_capacity(n_slots);
-    for slot in 0..n_slots {
-        let mut acc = SlotPartial::empty(dim);
-        for d in decoded.iter() {
-            match d.slots.get(slot) {
-                Some(Some(p)) => acc.merge(p)?,
-                // Bit-identical to merging a dense silent partial: zeros
-                // add nothing, so only the holder count moves.
-                Some(None) => acc.add_silent_holder(),
-                None => {}
-            }
-        }
-        out.push(acc);
+    let mut acc = SpanAccum::new(proto.internal_dim());
+    for d in decoded {
+        acc.fold(d)?;
     }
-    Ok(out)
+    Ok(acc.into_slots())
 }
 
 /// Merge decoded children into the round outcome: fold every slot, then
@@ -163,17 +247,11 @@ pub fn merge_decoded(
     state: &RoundState,
     decoded: Vec<DecodedUpload>,
 ) -> Result<RoundOutcome> {
-    let uplink_bits = decoded.iter().map(|d| d.uplink_bits).sum();
-    let n_frames = decoded.iter().map(|d| d.n_frames).sum();
-    let slots = fold_spans(proto, &decoded)?;
-    let mut means = Vec::with_capacity(slots.len());
-    let mut weights = Vec::with_capacity(slots.len());
-    for sp in &slots {
-        let (mean, weight) = sp.finish(proto, state);
-        means.push(mean);
-        weights.push(weight);
+    let mut acc = SpanAccum::new(proto.internal_dim());
+    for d in &decoded {
+        acc.fold(d)?;
     }
-    Ok(RoundOutcome { means, weights, uplink_bits, n_frames })
+    Ok(acc.finish(proto, state))
 }
 
 /// The flat sequential aggregation path: sort uploads by client id, then
@@ -268,10 +346,13 @@ pub fn aggregate_uploads_streaming(
     merge_decoded(proto, state, decoded)
 }
 
-/// What one barrier pass over a hub produced: every child's decoded
-/// contribution plus the wait/decode time split.
+/// What one barrier pass over a hub produced: the eagerly folded
+/// per-slot state plus the wait/decode time split. Individual children's
+/// decoded uploads are *not* retained — each one folds into a per-thread
+/// [`SpanAccum`] the moment it decodes and is dropped, so the barrier's
+/// peak memory is O(threads · slots · dim), not O(children · dim).
 pub(crate) struct CollectedRound {
-    pub decoded: Vec<DecodedUpload>,
+    pub folded: SpanAccum,
     /// The children that answered, in arrival order.
     pub seen: Vec<ChildKey>,
     pub wait_wall: Duration,
@@ -371,17 +452,22 @@ pub(crate) fn collect_round(
 
     // Streaming barrier: this thread owns the transport and hands each
     // worker upload to the decode pool the moment it arrives, so
-    // decoding overlaps the wait for slower children. The channels live
+    // decoding overlaps the wait for slower children. Each pool thread
+    // folds what it decodes into its own `SpanAccum` immediately (the
+    // exact merge makes the thread assignment invisible in the bits) and
+    // sends back one accumulator at drain time. The channels live
     // outside the scope: scoped threads may only borrow data that
     // outlives the scope itself.
+    let internal_dim = proto.internal_dim();
     let (task_tx, task_rx) = mpsc::channel::<(u64, Vec<WeightedFrame>)>();
-    let (out_tx, out_rx) = mpsc::channel::<Result<DecodedUpload>>();
+    let (out_tx, out_rx) = mpsc::channel::<Result<SpanAccum>>();
     let task_rx = Mutex::new(task_rx);
-    let decoded = std::thread::scope(|scope| -> Result<Vec<DecodedUpload>> {
+    let folded = std::thread::scope(|scope| -> Result<SpanAccum> {
         // The decode pool spawns lazily on the first worker upload: a
         // barrier whose children are all aggregation-tier nodes absorbs
         // `PartialUpload`s directly and never pays for idle threads.
         let mut pool_started = false;
+        let mut n_pool_threads = 0usize;
 
         // Barrier: exactly one message per child. With a deadline armed,
         // messages answering an *earlier* round are dropped, not errors:
@@ -389,8 +475,7 @@ pub(crate) fn collect_round(
         // dropping them is what lets the round that superseded it still
         // complete. Without a deadline no round can have timed out, so a
         // stale answer is a protocol violation worth failing fast on.
-        let mut ready: Vec<DecodedUpload> = Vec::new();
-        let mut n_pooled = 0usize;
+        let mut main_acc = SpanAccum::new(internal_dim);
         let mut n_accepted = 0usize;
         while n_accepted < n_children {
             let t = Instant::now();
@@ -430,33 +515,44 @@ pub(crate) fn collect_round(
                     seen.push(ChildKey::Client(client));
                     if !pool_started {
                         pool_started = true;
+                        n_pool_threads = decode_threads;
                         for i in 0..decode_threads {
                             let out_tx = out_tx.clone();
                             let task_rx = &task_rx;
                             let decode_ns = &decode_ns;
                             std::thread::Builder::new()
                                 .name(format!("dme-decode-{i}"))
-                                .spawn_scoped(scope, move || loop {
-                                    // Hold the lock only for the dequeue,
-                                    // not the decode, so the pool drains
-                                    // in parallel.
-                                    let task = task_rx.lock().unwrap().recv();
-                                    let Ok((client, frames)) = task else { return };
-                                    let t = Instant::now();
-                                    let res = decode_upload(proto, round_state, client, &frames);
-                                    decode_ns.fetch_add(
-                                        t.elapsed().as_nanos() as u64,
-                                        Ordering::Relaxed,
-                                    );
-                                    if out_tx.send(res).is_err() {
-                                        return;
+                                .spawn_scoped(scope, move || {
+                                    // Eager fold: decode, merge into this
+                                    // thread's accumulator, drop the
+                                    // decoded upload — nothing per-child
+                                    // is retained past this iteration.
+                                    let mut acc = SpanAccum::new(internal_dim);
+                                    loop {
+                                        // Hold the lock only for the
+                                        // dequeue, not the decode, so the
+                                        // pool drains in parallel.
+                                        let task = task_rx.lock().unwrap().recv();
+                                        let Ok((client, frames)) = task else { break };
+                                        let t = Instant::now();
+                                        let res =
+                                            decode_upload(proto, round_state, client, &frames)
+                                                .and_then(|d| acc.fold(&d));
+                                        decode_ns.fetch_add(
+                                            t.elapsed().as_nanos() as u64,
+                                            Ordering::Relaxed,
+                                        );
+                                        if let Err(e) = res {
+                                            let _ = out_tx.send(Err(e));
+                                            return;
+                                        }
                                     }
+                                    let _ = out_tx.send(Ok(acc));
                                 })
                                 .expect("spawning decode thread");
                         }
                     }
                     task_tx.send((client, frames)).expect("decode pool hung up");
-                    n_pooled += 1;
                     n_accepted += 1;
                 }
                 Message::PartialUpload { agg_id, round: r, span, uplink_bits, n_frames, slots } => {
@@ -473,15 +569,17 @@ pub(crate) fn collect_round(
                     );
                     let key = ChildKey::Aggregator { id: agg_id, span };
                     seen.push(key);
-                    ready.push(DecodedUpload {
+                    // Pre-merged spans fold straight into the barrier
+                    // thread's accumulator — no decode pool involved.
+                    main_acc.fold(&DecodedUpload {
                         origin: key,
                         slots: slots.into_iter().map(Some).collect(),
                         uplink_bits,
                         n_frames: n_frames as usize,
-                    });
+                    })?;
                     n_accepted += 1;
                 }
-                Message::RoundStart { .. } | Message::Shutdown => {
+                Message::RoundStart { .. } | Message::SpecChange { .. } | Message::Shutdown => {
                     bail!("unexpected message at the round barrier (did a child die mid-round?)")
                 }
             }
@@ -489,15 +587,19 @@ pub(crate) fn collect_round(
         drop(task_tx); // pool drains the queue, then exits
         drop(out_tx); // the pool threads hold the only other senders
 
-        for _ in 0..n_pooled {
-            ready.push(out_rx.recv().expect("decode pool died")?);
+        // Cross-thread reduction: absorb one accumulator per pool thread
+        // (a thread that hit a decode error sends Err instead). The
+        // merge is exact, so absorption order is invisible in the bits.
+        for _ in 0..n_pool_threads {
+            let acc = out_rx.recv().expect("decode pool died")?;
+            main_acc.absorb(acc)?;
         }
-        Ok(ready)
+        Ok(main_acc)
     })?;
 
     check_disjoint_spans(&seen)?;
     Ok(CollectedRound {
-        decoded,
+        folded,
         seen,
         wait_wall,
         decode_wall: Duration::from_nanos(decode_ns.load(Ordering::Relaxed)),
@@ -629,7 +731,7 @@ impl Leader {
         self.expected_children = collected.seen.clone();
 
         let t_merge = Instant::now();
-        let outcome = merge_decoded(proto.as_ref(), &round_state, collected.decoded)?;
+        let outcome = collected.folded.finish(proto.as_ref(), &round_state);
         let decode_wall = collected.decode_wall + t_merge.elapsed();
 
         let (down, up) = self.hub.bytes_moved();
@@ -644,6 +746,37 @@ impl Leader {
             cum_up_bytes: up,
         });
         Ok(outcome)
+    }
+
+    /// The active protocol's display name.
+    pub fn protocol_name(&self) -> String {
+        self.protocol.name()
+    }
+
+    /// Switch the session's protocol to `spec` (the `ProtocolConfig`
+    /// grammar string) starting at round `effective_round` — the round
+    /// number of the *next* [`Leader::round`] call. The spec is built
+    /// locally first (so an invalid spec errors without touching the
+    /// tree), then broadcast as a tag-5 `SpecChange` that every worker
+    /// and aggregator applies on receipt; transports are FIFO, so the
+    /// switch is ordered before the next `RoundStart` on every link.
+    ///
+    /// Estimates after the switch are **bit-identical to a fresh session
+    /// started at `spec`** and driven through the same round numbers:
+    /// every bit of a round depends only on `(seed, round, client_id,
+    /// spec, data)`, and the rebuild carries no state across specs
+    /// (conformance-tested in `tests/rate_control.rs`, flat and tree,
+    /// loopback and TCP).
+    pub fn switch_spec(&mut self, spec: &str, effective_round: u64) -> Result<()> {
+        let dim = self.protocol.dim();
+        let proto = ProtocolConfig::parse(spec, dim)?.build()?;
+        self.hub.broadcast(&Message::SpecChange {
+            round: effective_round,
+            spec: spec.to_string(),
+        })?;
+        self.protocol = proto;
+        self.metrics.note_spec_change(effective_round, spec);
+        Ok(())
     }
 
     /// Broadcast shutdown to all children (aggregators forward it down).
@@ -865,6 +998,58 @@ mod tests {
         assert_eq!(w0, 2.0);
         for &v in &mean0 {
             assert!((v - 2.0).abs() < 1e-6, "{v}");
+        }
+    }
+
+    #[test]
+    fn eager_span_accum_matches_batch_fold_for_any_thread_split() {
+        // The eager per-thread fold contract: splitting children across
+        // any number of per-thread accumulators and absorbing them in any
+        // order is bit-identical to the batch fold_spans over the whole
+        // list — including ragged slot counts and silent slots.
+        let d = 12;
+        let proto = ProtocolConfig::parse("float32", d).unwrap().build().unwrap();
+        let dim = proto.internal_dim();
+        let mk = |v: f32, w: f32, slots: usize, silent_last: bool| DecodedUpload {
+            origin: ChildKey::Client(0),
+            slots: (0..slots)
+                .map(|s| {
+                    if silent_last && s + 1 == slots {
+                        None
+                    } else {
+                        Some(SlotPartial::from_decoded(&vec![v + s as f32; dim], w, 1).unwrap())
+                    }
+                })
+                .collect(),
+            uplink_bits: 32 * slots as u64,
+            n_frames: slots - silent_last as usize,
+        };
+        let decoded = vec![
+            mk(1.0, 1.0, 2, false),
+            mk(-3.0, 2.5, 1, false),
+            mk(0.25, 1.0, 3, true),
+            mk(7.0, 0.5, 2, false),
+            mk(2.0, 1.0, 1, true),
+        ];
+        let want = fold_spans(proto.as_ref(), &decoded).unwrap();
+        for split in [1usize, 2, 3, 5] {
+            let mut per_thread: Vec<SpanAccum> =
+                (0..split).map(|_| SpanAccum::new(dim)).collect();
+            for (i, u) in decoded.iter().enumerate() {
+                per_thread[i % split].fold(u).unwrap();
+            }
+            let mut main = SpanAccum::new(dim);
+            // Absorb in reverse to prove order-independence too.
+            for acc in per_thread.into_iter().rev() {
+                main.absorb(acc).unwrap();
+            }
+            assert_eq!(main.uplink_bits(), decoded.iter().map(|d| d.uplink_bits).sum::<u64>());
+            assert_eq!(
+                main.n_frames(),
+                decoded.iter().map(|d| d.n_frames as u64).sum::<u64>()
+            );
+            let got = main.into_slots();
+            assert_eq!(got, want, "split={split} diverged from the batch fold");
         }
     }
 

@@ -34,11 +34,19 @@ pub struct RoundMetrics {
 #[derive(Clone, Debug, Default)]
 pub struct ExperimentMetrics {
     pub rounds: Vec<RoundMetrics>,
+    /// Mid-session protocol switches: `(first round the spec governs,
+    /// spec string)` — the session's rate-control trajectory, in order.
+    pub spec_changes: Vec<(u64, String)>,
 }
 
 impl ExperimentMetrics {
     pub fn push(&mut self, m: RoundMetrics) {
         self.rounds.push(m);
+    }
+
+    /// Record a mid-session spec switch (called by `Leader::switch_spec`).
+    pub fn note_spec_change(&mut self, round: u64, spec: &str) {
+        self.spec_changes.push((round, spec.to_string()));
     }
 
     /// Total protocol payload bits across all rounds.
@@ -92,9 +100,10 @@ impl ExperimentMetrics {
         }
     }
 
-    /// One-line human summary.
+    /// One-line human summary (plus the spec-switch trajectory when the
+    /// session retuned mid-flight).
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "{} rounds, {:.2} Mbit uplink ({:.1} kbit/round), {:.1} rounds/s, \
              transport overhead {:.2}x, wait {:.1} ms + decode {:.1} ms (cpu)",
             self.rounds.len(),
@@ -104,7 +113,16 @@ impl ExperimentMetrics {
             self.uplink_overhead(),
             self.total_wait_wall().as_secs_f64() * 1e3,
             self.total_decode_wall().as_secs_f64() * 1e3,
-        )
+        );
+        if !self.spec_changes.is_empty() {
+            let traj: Vec<String> = self
+                .spec_changes
+                .iter()
+                .map(|(r, spec)| format!("round {r} -> {spec}"))
+                .collect();
+            s.push_str(&format!("; spec switches: {}", traj.join(", ")));
+        }
+        s
     }
 }
 

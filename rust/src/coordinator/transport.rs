@@ -29,6 +29,11 @@
 //!                   u64 uplink_bits, u64 n_frames, u32 n_slots, then per
 //!                   slot: u32 n_bytes + a versioned SlotPartial
 //!                   serialization (see `SlotPartial::to_bytes`)
+//! tag 5 SpecChange: u64 round, u32 n_bytes, then the UTF-8 protocol spec
+//!                   string (the `ProtocolConfig` grammar, ≤ 1024 bytes;
+//!                   both ends re-validate it through the spec parser, so
+//!                   a forged or garbled spec errors at the wire instead
+//!                   of poisoning a protocol rebuild)
 //! ```
 //!
 //! On the wire every message is preceded by a u32 length prefix
@@ -79,8 +84,38 @@ pub enum Message {
         n_frames: u64,
         slots: Vec<SlotPartial>,
     },
+    /// Leader → children (relayed down every aggregation tier): switch
+    /// the active protocol to `spec` (the `ProtocolConfig` grammar
+    /// string) starting at round `round`. Sent *before* the `RoundStart`
+    /// it first applies to; transports are FIFO, so applying the switch
+    /// on receipt is race-free. See `rate::controller` for the policy
+    /// that emits these.
+    SpecChange { round: u64, spec: String },
     /// Leader → workers: tear down.
     Shutdown,
+}
+
+/// Hard cap on a `SpecChange` spec string. Real specs are tens of bytes;
+/// the cap bounds what a forged length field can make a receiver buffer.
+pub const MAX_SPEC_LEN: usize = 1024;
+
+/// The wire-boundary legality checks for a `SpecChange` spec string:
+/// bounded, and accepted by the spec grammar. Run on send (validate) and
+/// on parse, exactly like the tag-4 forgery checks.
+fn check_spec_string(spec: &str) -> Result<()> {
+    ensure!(!spec.is_empty(), "SpecChange spec is empty");
+    ensure!(
+        spec.len() <= MAX_SPEC_LEN,
+        "SpecChange spec exceeds {MAX_SPEC_LEN} bytes"
+    );
+    // Grammar + structural checks. The build runs at dim 1 (dim is a
+    // session property the transport does not know; every structural
+    // constraint — k >= 2, coordinate sampling vs rotation — is
+    // dim-independent), so a spec that passes here can only fail at the
+    // receiver for session-level reasons.
+    let cfg = crate::protocol::config::ProtocolConfig::parse(spec, 1)
+        .context("SpecChange spec rejected by the protocol grammar")?;
+    cfg.build().map(|_| ()).context("SpecChange spec rejected by the protocol builder")
 }
 
 impl Message {
@@ -115,6 +150,7 @@ impl Message {
                     ensure_u32(s.wire_len())?;
                 }
             }
+            Message::SpecChange { spec, .. } => check_spec_string(spec)?,
             Message::Shutdown => {}
         }
         // Same cap the receive path enforces (read_msg rejects frames
@@ -167,6 +203,12 @@ impl Message {
                     out.extend_from_slice(&bytes);
                 }
             }
+            Message::SpecChange { round, spec } => {
+                out.push(5u8);
+                out.extend_from_slice(&round.to_le_bytes());
+                out.extend_from_slice(&(spec.len() as u32).to_le_bytes());
+                out.extend_from_slice(spec.as_bytes());
+            }
             Message::Shutdown => out.push(3u8),
         }
         Ok(out)
@@ -182,6 +224,7 @@ impl Message {
             Message::PartialUpload { slots, .. } => {
                 1 + 8 * 6 + 4 + slots.iter().map(|s| 4 + s.wire_len() as u64).sum::<u64>()
             }
+            Message::SpecChange { spec, .. } => 1 + 8 + 4 + spec.len() as u64,
             Message::Shutdown => 1,
         }
     }
@@ -281,6 +324,17 @@ impl Message {
                 c.done()?;
                 check_partial_holders(span, &slots)?;
                 Ok(Message::PartialUpload { agg_id, round, span, uplink_bits, n_frames, slots })
+            }
+            5 => {
+                let round = c.u64()?;
+                let n = c.u32()? as usize;
+                ensure!(n <= MAX_SPEC_LEN, "SpecChange spec exceeds {MAX_SPEC_LEN} bytes");
+                let spec = std::str::from_utf8(c.take(n)?)
+                    .context("SpecChange spec is not valid UTF-8")?
+                    .to_string();
+                c.done()?;
+                check_spec_string(&spec)?;
+                Ok(Message::SpecChange { round, spec })
             }
             t => bail!("unknown message tag {t}"),
         }
@@ -719,6 +773,12 @@ mod tests {
                 assert_eq!((a1, r1, s1, u1, n1), (a2, r2, s2, u2, n2));
                 assert_eq!(sl1, sl2, "slots must round-trip exactly");
             }
+            (
+                Message::SpecChange { round: r1, spec: s1 },
+                Message::SpecChange { round: r2, spec: s2 },
+            ) => {
+                assert_eq!((r1, s1), (r2, s2));
+            }
             (Message::Shutdown, Message::Shutdown) => {}
             _ => panic!("variant mismatch"),
         }
@@ -770,6 +830,11 @@ mod tests {
                 uplink_bits: 0,
                 n_frames: 0,
                 slots: vec![],
+            },
+            Message::SpecChange { round: 4, spec: "rotated:k=16".into() },
+            Message::SpecChange {
+                round: 0,
+                spec: "varlen:k=33,coder=huffman,p=0.5,q=0.25".into(),
             },
             Message::Shutdown,
         ]
@@ -838,12 +903,57 @@ mod tests {
             },
             Message::Upload { client: 0, round: 0, frames: vec![] },
             partial_upload(),
+            Message::SpecChange { round: 9, spec: "klevel:k=8,p=0.5".into() },
             Message::Shutdown,
         ];
         for m in msgs {
             assert_eq!(m.wire_len(), m.to_bytes().unwrap().len() as u64);
             assert_eq!(m.framed_len(), m.wire_len() + 4);
         }
+    }
+
+    #[test]
+    fn forged_spec_changes_rejected() {
+        // The tag-5 forgery gate: a spec the grammar (or builder) rejects
+        // must fail at validate/to_bytes on send — the same gate both
+        // hubs run — and at from_bytes on receive.
+        for bad in [
+            "",                        // empty
+            "nonsense",                // unknown protocol
+            "klevel:k",                // malformed arg
+            "klevel:k=1",              // builder rejects k < 2
+            "klevel:p=0",              // p out of range
+            "rotated:k=4,q=0.5",       // structural: rotation + coord sampling
+            "varlen:coder=zip",        // unknown coder
+        ] {
+            let m = Message::SpecChange { round: 0, spec: bad.to_string() };
+            assert!(m.validate().is_err(), "spec `{bad}` accepted by validate");
+            assert!(m.to_bytes().is_err(), "spec `{bad}` serialized");
+            let (mut hub, eps) = LoopbackHub::new(1);
+            assert!(hub.broadcast(&m).is_err(), "spec `{bad}` crossed loopback");
+            drop(eps);
+        }
+        // Oversized spec: rejected on send and before the parser ever
+        // sees the payload on receive.
+        let long = format!("klevel:k=16{}", " ".repeat(MAX_SPEC_LEN));
+        let m = Message::SpecChange { round: 0, spec: long };
+        assert!(m.validate().is_err());
+        // Handcrafted wire payloads: bad UTF-8, truncation, trailing
+        // garbage, and a length field overrunning the message.
+        let good = Message::SpecChange { round: 3, spec: "binary".into() }.to_bytes().unwrap();
+        assert!(Message::from_bytes(&good).is_ok());
+        let mut bad_utf8 = good.clone();
+        *bad_utf8.last_mut().unwrap() = 0xff;
+        assert!(Message::from_bytes(&bad_utf8).is_err(), "bad UTF-8 accepted");
+        for cut in [1usize, 9, 12, good.len() - 1] {
+            assert!(Message::from_bytes(&good[..cut]).is_err(), "truncation at {cut} accepted");
+        }
+        let mut long = good.clone();
+        long.push(b'x');
+        assert!(Message::from_bytes(&long).is_err(), "trailing byte accepted");
+        let mut huge_len = good.clone();
+        huge_len[9..13].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Message::from_bytes(&huge_len).is_err(), "oversized length accepted");
     }
 
     #[test]

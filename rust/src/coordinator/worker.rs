@@ -4,9 +4,10 @@
 
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use super::transport::{Endpoint, LoopbackEndpoint, Message, WeightedFrame};
+use crate::protocol::config::ProtocolConfig;
 use crate::protocol::{Encoder, Protocol, RoundCtx};
 use crate::rng;
 
@@ -62,10 +63,25 @@ impl Worker {
         Ok(Message::Upload { client: self.client_id, round, frames })
     }
 
+    /// Rebuild the protocol handle from a `SpecChange` spec string at
+    /// the same data dimension. The rebuild is total — no state crosses
+    /// the switch — so subsequent rounds are bit-identical to a fresh
+    /// session started at `spec` (the tag-5 conformance contract).
+    /// Rebuilds land on the native backend: the spec string is the
+    /// protocol's identity, and a backend is an execution engine the
+    /// wire cannot (and need not) carry.
+    pub fn apply_spec(&mut self, spec: &str) -> Result<()> {
+        let dim = self.protocol.dim();
+        self.protocol = ProtocolConfig::parse(spec, dim)
+            .and_then(|cfg| cfg.build())
+            .with_context(|| format!("worker {} rebuilding protocol `{spec}`", self.client_id))?;
+        Ok(())
+    }
+
     /// Run the worker loop over any endpoint until Shutdown: the one
     /// loop both transports (and both parents — leader or aggregator)
     /// share.
-    pub fn run(&self, ep: &mut dyn Endpoint) -> Result<()> {
+    pub fn run(&mut self, ep: &mut dyn Endpoint) -> Result<()> {
         loop {
             match ep.recv_msg()? {
                 Message::RoundStart { round, dim, payload } => {
@@ -84,6 +100,17 @@ impl Worker {
                         }
                     }
                 }
+                Message::SpecChange { spec, .. } => {
+                    // Applied on receipt: the transport is FIFO, so this
+                    // lands before the first RoundStart it governs. No
+                    // reply — the parent is not at a barrier.
+                    if let Err(e) = self.apply_spec(&spec) {
+                        // Same dying courtesy as a failed step: wake the
+                        // parent's next barrier instead of hanging it.
+                        let _ = ep.send_msg(Message::Shutdown);
+                        return Err(e);
+                    }
+                }
                 Message::Shutdown => return Ok(()),
                 Message::Upload { .. } | Message::PartialUpload { .. } => {
                     bail!("worker received an upstream-only message")
@@ -93,13 +120,13 @@ impl Worker {
     }
 
     /// Run the worker loop over a loopback endpoint until Shutdown.
-    pub fn run_loopback(&self, ep: LoopbackEndpoint) -> Result<()> {
+    pub fn run_loopback(mut self, ep: LoopbackEndpoint) -> Result<()> {
         let mut ep = ep;
         self.run(&mut ep)
     }
 
     /// Run the worker loop over TCP (the `dme worker` subcommand).
-    pub fn run_tcp(&self, addr: &str) -> Result<()> {
+    pub fn run_tcp(mut self, addr: &str) -> Result<()> {
         let mut ep = super::transport::TcpEndpoint::connect(addr)?;
         self.run(&mut ep)
     }

@@ -61,6 +61,17 @@
 //! are bit-identical for every thread count (the f32 accumulation order
 //! is fixed by client id, never by scheduling).
 //!
+//! ## Choosing a spec: the rate-control tier
+//!
+//! [`rate`] turns the paper's MSE-vs-communication theorems into an
+//! optimizer: analytic + calibrated predictors per protocol kind
+//! ([`rate::model`]), a bit-budget planner that enumerates the spec
+//! space and returns the Pareto frontier ([`rate::planner::Plan`],
+//! `dme tune`), and a live controller that can switch the session's
+//! protocol **between rounds** over the versioned tag-5 `SpecChange`
+//! message (`dme serve --auto-rate`) — with post-switch rounds
+//! bit-identical to a fresh session started at the new spec.
+//!
 //! ## Scaling out: the aggregation tier
 //!
 //! The estimators are linear in the client frames, so server-side
@@ -80,6 +91,7 @@ pub mod coordinator;
 pub mod data;
 pub mod linalg;
 pub mod protocol;
+pub mod rate;
 pub mod report;
 pub mod rng;
 pub mod rotation;

@@ -5,10 +5,13 @@
 //!               [--data gaussian|unbalanced|sphere|mnist|cifar] [--backend pjrt]
 //! dme kmeans    --data mnist --clients 10 --centers 10 --iters 10 --protocol varlen
 //! dme power     --data cifar --clients 100 --iters 10 --protocol rotated:k=32
+//! dme tune      --dim 1024 --clients 64 --budget-bits 4 [--mse-target 1e-2]
+//!               [--analytic] [--json PATH]   (rate planner: frontier + chosen spec)
 //! dme serve     --addr 0.0.0.0:7070 --workers 4 --dim 256 --protocol varlen --rounds 10
 //!               [--decode-threads N]   (0 = all cores; any value is bit-identical)
 //!               [--timeout-ms 30000]   (round barrier deadline; 0 = wait forever)
 //!               [--fanout 16 --depth 2]  (single-process loopback tree instead of TCP)
+//!               [--auto-rate --budget-bits 4]  (rate controller picks + retunes the spec)
 //! dme aggregate --parent host:7070 --listen 0.0.0.0:7071 --children 16 --span 0:16
 //!               --dim 256 --protocol varlen [--id N] [--decode-threads N] [--timeout-ms N]
 //! dme worker    --connect host:7071 --dim 256 --protocol varlen [--points 100]
@@ -32,8 +35,9 @@ use dme::coordinator::topology::Topology;
 use dme::coordinator::transport::{TcpEndpoint, TcpHub};
 use dme::coordinator::worker::{mean_update, Worker};
 use dme::data::{synthetic, Dataset};
-use dme::protocol::config::ProtocolConfig;
+use dme::protocol::config::{Kind, ProtocolConfig};
 use dme::protocol::{run_round, RoundCtx};
+use dme::rate::{Calibration, Objective, Plan, RateController};
 use dme::runtime::{artifacts::Manifest, ComputeBackend, PjrtBackend};
 use dme::stats;
 
@@ -50,13 +54,15 @@ fn real_main() -> Result<()> {
         Some("estimate") => cmd_estimate(&args),
         Some("kmeans") => cmd_kmeans(&args),
         Some("power") => cmd_power(&args),
+        Some("tune") => cmd_tune(&args),
         Some("serve") => cmd_serve(&args),
         Some("aggregate") => cmd_aggregate(&args),
         Some("worker") => cmd_worker(&args),
         Some("info") => cmd_info(&args),
         Some(other) => {
             bail!(
-                "unknown command `{other}` (try: estimate kmeans power serve aggregate worker info)"
+                "unknown command `{other}` \
+                 (try: estimate kmeans power tune serve aggregate worker info)"
             )
         }
         None => {
@@ -72,8 +78,11 @@ commands:
   estimate   one-shot distributed mean estimation; reports MSE & bits
   kmeans     distributed Lloyd's with quantized uplink (paper Fig. 2)
   power      distributed power iteration with quantized uplink (paper Fig. 3)
+  tune       rate planner: the predicted MSE-vs-bits frontier and the best
+             spec under a bit budget (copy-pasteable into --protocol)
   serve      TCP leader (workers/aggregators connect), or a single-process
-             loopback aggregation tree with --fanout/--depth
+             loopback aggregation tree with --fanout/--depth; --auto-rate
+             lets the rate controller pick and retune the spec mid-session
   aggregate  TCP aggregation-tier node: accepts its children's uploads,
              merges them exactly, forwards one PartialUpload upstream
   worker     TCP worker process (point --connect at a leader or aggregator)
@@ -208,10 +217,116 @@ fn cmd_power(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Rate planner CLI: print the predicted MSE-vs-bits frontier, the
+/// paper's per-family ordering at the budget, and the chosen spec —
+/// optionally exporting the machine-readable plan (`--json PATH`, the
+/// CI's BENCH_rate_frontier.json artifact).
+fn cmd_tune(args: &Args) -> Result<()> {
+    let dim = args.get("dim", 1024usize)?;
+    let n = args.get("clients", 64usize)?;
+    let budget_per_dim: f64 = args.get("budget-bits", 4.0f64)?;
+    let seed = args.get("seed", 42u64)?;
+    let mse_target = args.get_opt::<f64>("mse-target")?;
+    let analytic = args.bool("analytic")?;
+    let json_path = args.opt("json");
+    args.reject_unknown()?;
+
+    let objective = match mse_target {
+        Some(t) => Objective::MinBits { max_mse: t },
+        None => Objective::MinMse,
+    };
+    let mut plan = Plan::solve(budget_per_dim * dim as f64, dim, n, objective)?;
+    if !analytic {
+        // One-shot empirical calibration: probe rounds through the real
+        // encode path, per spec (deterministic for a fixed seed).
+        let mut cal = Calibration::new(seed);
+        plan.calibrate(&mut cal)?;
+    }
+
+    println!(
+        "rate plan: d={dim}, n={n}, budget {budget_per_dim} bits/dim \
+         ({:.0} bits/client), {} candidates ({})",
+        plan.budget_bits_per_client,
+        plan.candidates.len(),
+        if plan.calibrated { "calibrated" } else { "analytic bounds" },
+    );
+    let mut rows = Vec::new();
+    for c in plan.frontier_specs() {
+        let marker = match plan.chosen_spec() {
+            Some(ch) if ch.spec == c.spec => " <= chosen",
+            _ if c.bits_per_client <= plan.budget_bits_per_client => "",
+            _ => " (over budget)",
+        };
+        rows.push(vec![
+            c.spec.clone(),
+            format!("{:.0}", c.bits_per_client),
+            format!("{:.3}", c.bits_per_dim()),
+            format!("{:.3e}{marker}", c.predicted_mse),
+        ]);
+    }
+    dme::bench::print_table(
+        "Pareto frontier (predicted MSE at avg ||X||^2 = 1)",
+        &["spec", "bits/client", "bits/dim", "predicted MSE"],
+        &rows,
+    );
+    // The paper's ordering at this budget: π_sb ≻ π_srk ≻ π_svk in MSE.
+    let mut fam = Vec::new();
+    for kind in [Kind::Binary, Kind::Rotated, Kind::Varlen] {
+        if let Some(best) = plan.best_in_kind(kind) {
+            fam.push(vec![
+                kind.name().to_string(),
+                best.spec.clone(),
+                format!("{:.3}", best.bits_per_dim()),
+                format!("{:.3e}", best.predicted_mse),
+            ]);
+        }
+    }
+    dme::bench::print_table(
+        "Family bests under the budget (Thm 1 vs Thm 3 vs Thm 4)",
+        &["family", "best spec", "bits/dim", "predicted MSE"],
+        &fam,
+    );
+    match plan.chosen_spec() {
+        Some(c) => {
+            println!(
+                "\nchosen spec : {}\n  predicted : {:.3e} MSE, {:.1} bits/client \
+                 ({:.3} bits/dim)\n  replay    : dme estimate --dim {dim} --clients {n} \
+                 --protocol '{}'",
+                c.spec, c.predicted_mse, c.bits_per_client, c.bits_per_dim(), c.spec
+            );
+        }
+        None => println!(
+            "\nno spec satisfies the constraints (budget {budget_per_dim} bits/dim\
+             {}); the frontier above shows what each extra bit buys",
+            match mse_target {
+                Some(t) => format!(", MSE target {t:.3e}"),
+                None => String::new(),
+            }
+        ),
+    }
+    if let Some(path) = json_path {
+        std::fs::write(&path, plan.to_json()).with_context(|| format!("writing {path}"))?;
+        println!("plan written to {path}");
+    }
+    Ok(())
+}
+
 /// Drive `rounds` rounds of `leader`, print each outcome, then shut the
 /// tree down and print the cumulative metrics — shared by the TCP and
-/// loopback-tree branches of `dme serve`.
-fn run_rounds(leader: &mut Leader, rounds: u64, dim: usize) -> Result<()> {
+/// loopback-tree branches of `dme serve`. With a rate controller
+/// (`--auto-rate`), each round's realized bits and estimate feed back
+/// into it, and a recommended switch is broadcast (tag-5 `SpecChange`)
+/// before the next round.
+fn run_rounds(
+    leader: &mut Leader,
+    rounds: u64,
+    dim: usize,
+    // Total clients behind the leader — NOT leader.n_workers(), which in
+    // tree mode counts direct children (top-level aggregators) and would
+    // inflate the controller's realized bits/client by the fan-in.
+    n_clients: usize,
+    mut controller: Option<RateController>,
+) -> Result<()> {
     for r in 0..rounds {
         let out = leader.round(r, dim as u32, &[])?;
         println!(
@@ -220,9 +335,38 @@ fn run_rounds(leader: &mut Leader, rounds: u64, dim: usize) -> Result<()> {
             out.uplink_bits as f64 / 1e3,
             &out.means.first().map(|m| m[..m.len().min(4)].to_vec()).unwrap_or_default()
         );
+        if let Some(ctl) = controller.as_mut() {
+            let est = out.means.first().map(|m| m.as_slice()).unwrap_or(&[]);
+            if let Some(spec) = ctl.observe(r, out.uplink_bits, n_clients, est) {
+                if r + 1 < rounds {
+                    println!("  auto-rate: switching to `{spec}` from round {}", r + 1);
+                    leader.switch_spec(&spec, r + 1)?;
+                }
+            }
+        }
     }
     leader.shutdown()?;
     println!("{}", leader.metrics().summary());
+    if let Some(ctl) = controller {
+        let rows: Vec<Vec<String>> = ctl
+            .history()
+            .iter()
+            .map(|s| {
+                vec![
+                    s.round.to_string(),
+                    s.spec.clone(),
+                    format!("{:.1}", s.bits_per_client),
+                    s.mse_proxy.map(|p| format!("{p:.3e}")).unwrap_or_else(|| "--".into()),
+                    s.switched_to.clone().unwrap_or_default(),
+                ]
+            })
+            .collect();
+        dme::bench::print_table(
+            "auto-rate trajectory (proxy = est. round MSE from estimate dispersion)",
+            &["round", "spec", "bits/client", "mse proxy", "switched to"],
+            &rows,
+        );
+    }
     Ok(())
 }
 
@@ -249,7 +393,44 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // only means anything there.
     let fanout = args.get("fanout", 0usize)?;
     let depth = args.opt("depth");
-    let proto = build_protocol(args, dim)?;
+    // --auto-rate: the rate controller picks the starting spec under
+    // --budget-bits (bits/dim) and may broadcast tag-5 spec switches
+    // between rounds as realized bits come in.
+    let auto_rate = args.bool("auto-rate")?;
+    let controller = if auto_rate {
+        if let Some(spec) = args.opt("protocol") {
+            bail!(
+                "--protocol {spec} conflicts with --auto-rate (the controller picks the \
+                 spec; drop one of the two)"
+            );
+        }
+        if args.opt("backend").is_some() {
+            bail!("--backend is not available with --auto-rate (spec rebuilds are native)");
+        }
+        let budget: f64 = args
+            .get_opt("budget-bits")?
+            .ok_or_else(|| anyhow::anyhow!("--auto-rate needs --budget-bits (bits/dim)"))?;
+        let plan = Plan::solve(budget * dim as f64, dim, n_workers, Objective::MinMse)?;
+        let ctl = RateController::new(plan)?;
+        println!(
+            "auto-rate: budget {budget} bits/dim -> starting at `{}` \
+             (predicted {:.3e} MSE, {:.1} bits/client)",
+            ctl.active_spec().spec,
+            ctl.active_spec().predicted_mse,
+            ctl.active_spec().bits_per_client,
+        );
+        Some(ctl)
+    } else {
+        None
+    };
+    let proto = match &controller {
+        Some(ctl) => {
+            let mut cfg = ctl.active_spec().cfg.clone();
+            cfg.dim = dim;
+            cfg.build()?
+        }
+        None => build_protocol(args, dim)?,
+    };
 
     if fanout > 0 {
         if let Some(addr) = addr {
@@ -279,7 +460,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             decode_threads,
             round_timeout,
         )?;
-        run_rounds(&mut leader, rounds, dim)?;
+        run_rounds(&mut leader, rounds, dim, n_workers, controller)?;
         let n_levels = tree.n_levels;
         let leader_bytes = leader.bytes_moved();
         let reports = tree.join()?;
@@ -303,7 +484,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(t) = round_timeout {
         leader = leader.with_round_timeout(t);
     }
-    run_rounds(&mut leader, rounds, dim)
+    run_rounds(&mut leader, rounds, dim, n_workers, controller)
 }
 
 fn cmd_aggregate(args: &Args) -> Result<()> {

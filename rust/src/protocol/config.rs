@@ -41,6 +41,25 @@ pub enum Kind {
     Qsgd,
 }
 
+impl Kind {
+    /// Every base protocol kind (the rate planner enumerates these).
+    pub const ALL: [Kind; 6] =
+        [Kind::Float32, Kind::Binary, Kind::KLevel, Kind::Rotated, Kind::Varlen, Kind::Qsgd];
+
+    /// The canonical spec-grammar name (the one [`ProtocolConfig::parse`]
+    /// documents; aliases parse but are never emitted).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kind::Float32 => "float32",
+            Kind::Binary => "binary",
+            Kind::KLevel => "klevel",
+            Kind::Rotated => "rotated",
+            Kind::Varlen => "varlen",
+            Kind::Qsgd => "qsgd",
+        }
+    }
+}
+
 /// Declarative protocol description.
 #[derive(Clone)]
 pub struct ProtocolConfig {
@@ -59,6 +78,68 @@ pub struct ProtocolConfig {
     pub q: f64,
     /// Numeric backend (None = native).
     pub backend: Option<Arc<dyn ComputeBackend>>,
+}
+
+impl std::fmt::Debug for ProtocolConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ProtocolConfig")
+            .field("spec", &self.to_string())
+            .field("dim", &self.dim)
+            .field("backend", &self.backend.is_some())
+            .finish()
+    }
+}
+
+/// Two configs are equal when they build the same protocol *stack*: every
+/// spec-grammar field is compared, the numeric backend is not (backends
+/// are execution engines for the same protocol, not protocol identity —
+/// and the spec string, which `SpecChange` ships between machines,
+/// cannot carry one).
+impl PartialEq for ProtocolConfig {
+    fn eq(&self, other: &Self) -> bool {
+        self.kind == other.kind
+            && self.dim == other.dim
+            && self.k == other.k
+            && self.coder == other.coder
+            && self.span == other.span
+            && self.p == other.p
+            && self.q == other.q
+    }
+}
+
+/// The exact spec-grammar string: `parse(cfg.to_string(), cfg.dim)`
+/// reconstructs `cfg` field for field (property-tested below). Only the
+/// arguments that differ from what parsing the bare kind name would
+/// produce are emitted, so defaults stay terse (`binary`, `varlen`) and
+/// everything else is explicit (`klevel:k=8,p=0.5`).
+impl std::fmt::Display for ProtocolConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.kind.name())?;
+        // What `parse(kind.name(), dim)` would default each field to.
+        let default_k = if self.kind == Kind::Varlen { 0 } else { 16 };
+        let mut sep = ':';
+        let mut arg = |f: &mut std::fmt::Formatter<'_>, args: std::fmt::Arguments<'_>| {
+            let r = write!(f, "{sep}{args}");
+            sep = ',';
+            r
+        };
+        if self.k != default_k {
+            arg(f, format_args!("k={}", self.k))?;
+        }
+        if self.coder != Coder::Arithmetic {
+            arg(f, format_args!("coder=huffman"))?;
+        }
+        if self.span != Span::MinMax {
+            arg(f, format_args!("span=norm"))?;
+        }
+        if self.p != 1.0 {
+            arg(f, format_args!("p={}", self.p))?;
+        }
+        if self.q != 1.0 {
+            arg(f, format_args!("q={}", self.q))?;
+        }
+        Ok(())
+    }
 }
 
 impl ProtocolConfig {
@@ -281,6 +362,63 @@ mod tests {
         assert!(proto.name().starts_with("sampled(p=0.5, coordsampled"));
         assert!(ProtocolConfig::parse("rotated:k=4,q=0.5", 16).unwrap().build().is_err());
         assert!(ProtocolConfig::parse("klevel:q=0", 16).is_err());
+    }
+
+    #[test]
+    fn display_emits_exact_spec_grammar() {
+        for (spec, want) in [
+            ("float32", "float32"),
+            ("binary", "binary"),
+            ("klevel:k=8", "klevel:k=8"),
+            ("sk:k=16", "klevel"), // alias + default k collapse to the canonical name
+            ("rotated:k=32,p=0.5", "rotated:k=32,p=0.5"),
+            ("varlen", "varlen"),
+            ("varlen:k=33,coder=huffman", "varlen:k=33,coder=huffman"),
+            ("varlen:span=norm,q=0.25", "varlen:span=norm,q=0.25"),
+            ("qsgd:k=4,p=0.125", "qsgd:k=4,p=0.125"),
+        ] {
+            let cfg = ProtocolConfig::parse(spec, 64).unwrap();
+            assert_eq!(cfg.to_string(), want, "spec={spec}");
+        }
+    }
+
+    #[test]
+    fn display_parse_roundtrip_property() {
+        // parse(cfg.to_string()) == cfg over the whole discrete config
+        // space the planner enumerates, plus awkward float values whose
+        // Display must survive the grammar (Rust float formatting is
+        // shortest-round-trip, so `p={}` re-parses to the same bits).
+        use crate::protocol::quantizer::Span;
+        use crate::protocol::varlen::Coder;
+        let mut n_checked = 0usize;
+        for kind in Kind::ALL {
+            for dim in [1usize, 64, 1000] {
+                for k in [0u32, 2, 3, 16, 17, 1023] {
+                    for coder in [Coder::Arithmetic, Coder::Huffman] {
+                        for span in [Span::MinMax, Span::Norm] {
+                            for p in [1.0f64, 0.5, 1.0 / 3.0, 0.1234567891234, 1e-9] {
+                                for q in [1.0f64, 0.25, 2.0 / 3.0] {
+                                    let mut cfg = ProtocolConfig::new(kind, dim);
+                                    cfg.k = k;
+                                    cfg.coder = coder;
+                                    cfg.span = span;
+                                    cfg.p = p;
+                                    cfg.q = q;
+                                    let s = cfg.to_string();
+                                    let back = ProtocolConfig::parse(&s, dim)
+                                        .unwrap_or_else(|e| {
+                                            panic!("`{s}` failed to re-parse: {e}")
+                                        });
+                                    assert_eq!(back, cfg, "spec `{s}` round-trip diverged");
+                                    n_checked += 1;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        assert!(n_checked > 5000, "property grid unexpectedly small");
     }
 
     #[test]

@@ -1,0 +1,224 @@
+//! The live rate controller: per-session feedback loop that watches each
+//! round's realized uplink bits and a decode-side MSE proxy, recalibrates
+//! the active spec's bit prediction from what actually crossed the wire,
+//! and switches the session's protocol between rounds (via the leader's
+//! tag-5 `SpecChange` broadcast) when the plan says a better spec fits
+//! the budget — `dme serve --auto-rate --budget-bits`.
+
+use std::collections::HashMap;
+
+use anyhow::{ensure, Result};
+
+use super::planner::{Plan, PlannedSpec};
+
+/// One observed round in the controller's log.
+#[derive(Clone, Debug)]
+pub struct ControllerStep {
+    pub round: u64,
+    /// Spec active during this round.
+    pub spec: String,
+    /// Realized uplink bits per client this round.
+    pub bits_per_client: f64,
+    /// Decode-side MSE proxy: squared distance between this round's
+    /// estimate and the running mean of all previous rounds' estimates.
+    /// For repeated estimation of a stationary mean this tracks the
+    /// protocol's per-round MSE (each round's error is independent);
+    /// it is observability — reported, not a switching signal, because
+    /// a single round's proxy is far noisier than the calibrated model.
+    pub mse_proxy: Option<f64>,
+    /// Spec switched to *after* this round, if the controller retuned.
+    pub switched_to: Option<String>,
+}
+
+/// Per-session rate controller over a solved [`Plan`].
+///
+/// Policy (deterministic, convergent):
+/// * the active spec's predicted bits are replaced by an exponential
+///   blend of what the wire actually carried (sampling makes realized
+///   bits stochastic; the blend smooths them),
+/// * each round the plan's objective re-runs with those observed bits;
+///   the controller switches when the active spec has outgrown the
+///   budget, or when another spec's predicted MSE beats the active one
+///   by more than the hysteresis margin (5% — prevents flapping between
+///   near-ties),
+/// * observed bits stick to a spec once measured, so a spec that
+///   overran the budget is not re-chosen on its optimistic prediction.
+pub struct RateController {
+    plan: Plan,
+    active: usize,
+    /// candidate index → observed bits/client blend.
+    observed_bits: HashMap<usize, f64>,
+    /// Running mean of round estimates (slot 0), for the MSE proxy.
+    est_mean: Vec<f64>,
+    est_rounds: u64,
+    history: Vec<ControllerStep>,
+    /// Required relative predicted-MSE improvement before switching.
+    min_gain: f64,
+}
+
+impl RateController {
+    /// Build over a solved plan; errors if the plan found no feasible
+    /// spec (nothing fits the budget — say so up front, not mid-session).
+    pub fn new(plan: Plan) -> Result<Self> {
+        let active = plan.chosen.ok_or_else(|| {
+            anyhow::anyhow!(
+                "no spec fits {:.1} bits/client (d={}): raise --budget-bits",
+                plan.budget_bits_per_client,
+                plan.dim
+            )
+        })?;
+        ensure!(!plan.candidates.is_empty(), "plan has no candidates");
+        Ok(RateController {
+            plan,
+            active,
+            observed_bits: HashMap::new(),
+            est_mean: Vec::new(),
+            est_rounds: 0,
+            history: Vec::new(),
+            min_gain: 0.05,
+        })
+    }
+
+    /// The spec the session should currently run.
+    pub fn active_spec(&self) -> &PlannedSpec {
+        &self.plan.candidates[self.active]
+    }
+
+    /// The observed-round log.
+    pub fn history(&self) -> &[ControllerStep] {
+        &self.history
+    }
+
+    fn effective_bits(&self, i: usize) -> f64 {
+        *self.observed_bits.get(&i).unwrap_or(&self.plan.candidates[i].bits_per_client)
+    }
+
+    /// Feed one completed round. Returns the spec string to switch to
+    /// before the next round, or `None` to stay.
+    pub fn observe(
+        &mut self,
+        round: u64,
+        uplink_bits: u64,
+        n_clients: usize,
+        estimate: &[f32],
+    ) -> Option<String> {
+        let ran_spec = self.active_spec().spec.clone();
+        let realized = uplink_bits as f64 / n_clients.max(1) as f64;
+        // Blend realized into the active spec's bits (EMA, α = 1/2; the
+        // first observation replaces the prediction outright).
+        let blended = match self.observed_bits.get(&self.active) {
+            Some(prev) => 0.5 * prev + 0.5 * realized,
+            None => realized,
+        };
+        self.observed_bits.insert(self.active, blended);
+
+        // Decode-side MSE proxy against the running estimate mean.
+        let proxy = if self.est_rounds > 0 && self.est_mean.len() == estimate.len() {
+            Some(
+                estimate
+                    .iter()
+                    .zip(&self.est_mean)
+                    .map(|(&e, &m)| (e as f64 - m) * (e as f64 - m))
+                    .sum::<f64>(),
+            )
+        } else {
+            None
+        };
+        if self.est_mean.len() != estimate.len() {
+            self.est_mean = vec![0.0; estimate.len()];
+            self.est_rounds = 0;
+        }
+        self.est_rounds += 1;
+        let inv = 1.0 / self.est_rounds as f64;
+        for (m, &e) in self.est_mean.iter_mut().zip(estimate) {
+            *m += (e as f64 - *m) * inv;
+        }
+
+        // Re-run the objective with observed bits in place of predictions.
+        let budget = self.plan.budget_bits_per_client;
+        let best = (0..self.plan.candidates.len())
+            .filter(|&i| self.effective_bits(i) <= budget)
+            .min_by(|&a, &b| {
+                self.plan.candidates[a]
+                    .predicted_mse
+                    .total_cmp(&self.plan.candidates[b].predicted_mse)
+                    .then(self.effective_bits(a).total_cmp(&self.effective_bits(b)))
+                    .then(self.plan.candidates[a].spec.cmp(&self.plan.candidates[b].spec))
+            });
+        let active_over_budget = self.effective_bits(self.active) > budget;
+        let switched_to = match best {
+            Some(best) if best != self.active => {
+                let gain = 1.0
+                    - self.plan.candidates[best].predicted_mse
+                        / self.plan.candidates[self.active].predicted_mse.max(f64::MIN_POSITIVE);
+                if active_over_budget || gain > self.min_gain {
+                    self.active = best;
+                    Some(self.plan.candidates[best].spec.clone())
+                } else {
+                    None
+                }
+            }
+            _ => None,
+        };
+        self.history.push(ControllerStep {
+            round,
+            spec: ran_spec,
+            bits_per_client: realized,
+            mse_proxy: proxy,
+            switched_to: switched_to.clone(),
+        });
+        switched_to
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rate::planner::Objective;
+
+    fn plan(budget_bits_per_dim: f64) -> Plan {
+        Plan::solve(budget_bits_per_dim * 256.0, 256, 32, Objective::MinMse).unwrap()
+    }
+
+    #[test]
+    fn stays_put_when_realized_matches_predicted() {
+        let mut ctl = RateController::new(plan(4.0)).unwrap();
+        let spec = ctl.active_spec().spec.clone();
+        let bits = ctl.active_spec().bits_per_client;
+        let est = vec![0.5f32; 8];
+        for r in 0..5 {
+            let sw = ctl.observe(r, (bits * 32.0) as u64, 32, &est);
+            assert!(sw.is_none(), "round {r} switched needlessly to {sw:?}");
+        }
+        assert_eq!(ctl.active_spec().spec, spec);
+        // Proxy appears from round 1, and is ~0 for identical estimates.
+        assert!(ctl.history()[0].mse_proxy.is_none());
+        assert!(ctl.history()[1].mse_proxy.unwrap() < 1e-12);
+    }
+
+    #[test]
+    fn switches_down_when_realized_bits_overrun_budget() {
+        let mut ctl = RateController::new(plan(3.0)).unwrap();
+        let first = ctl.active_spec().spec.clone();
+        // The wire reports 4x the prediction: the active spec no longer
+        // fits, the controller must move to a cheaper one and the
+        // overrun spec must keep its observed cost (no flap back).
+        let overrun = (ctl.active_spec().bits_per_client * 4.0 * 32.0) as u64;
+        let est = vec![0.1f32; 8];
+        let sw = ctl.observe(0, overrun, 32, &est);
+        let second = sw.expect("must switch off an over-budget spec");
+        assert_ne!(second, first);
+        assert!(ctl.active_spec().bits_per_client <= 3.0 * 256.0);
+        // Now realized matches the new spec: steady state.
+        let ok = (ctl.active_spec().bits_per_client * 32.0) as u64;
+        for r in 1..4 {
+            assert!(ctl.observe(r, ok, 32, &est).is_none(), "flapped at round {r}");
+        }
+    }
+
+    #[test]
+    fn refuses_an_unmeetable_budget() {
+        let plan = Plan::solve(1.0, 1024, 8, Objective::MinMse).unwrap();
+        assert!(RateController::new(plan).is_err());
+    }
+}

@@ -1,0 +1,58 @@
+//! Rate control: analytic MSE/communication models, a bit-budget
+//! planner, and a live controller that retunes the protocol mid-session.
+//!
+//! The paper's whole point is the MSE-vs-communication frontier — π_sb
+//! at Θ(d/n) MSE for ~1 bit/dim, π_srk at O((log d)/n), π_svk at O(1/n)
+//! for a constant number of bits per dimension. This module turns those
+//! theorems into an optimizer: *given a bit budget, which protocol
+//! configuration minimizes MSE?* — the framing of Konečný & Richtárik's
+//! "Randomized Distributed Mean Estimation: Accuracy vs Communication".
+//!
+//! Three layers:
+//!
+//! * [`model`] — closed-form predictors `predicted_mse` /
+//!   [`model::predicted_uplink_bits`] for every [`Kind`], implementing
+//!   the paper's bounds (see the theorem map below), plus a one-shot
+//!   empirical [`model::Calibration`] fitter that runs small probe
+//!   rounds through the *real* encode path and stores per-spec
+//!   correction factors.
+//! * [`planner`] — [`planner::Plan::solve`] enumerates the discrete
+//!   spec space (kind × k grid × coder × sampling p/q), returns the
+//!   Pareto frontier and the arg-min spec under the budget as a
+//!   replayable [`ProtocolConfig`], exportable as JSON
+//!   (`dme tune`).
+//! * [`controller`] — a per-session [`controller::RateController`] that
+//!   observes realized `RoundMetrics::uplink_bits` and a decode-side
+//!   MSE proxy each round and switches the active spec between rounds
+//!   via the tag-5 `SpecChange` message (`dme serve --auto-rate`).
+//!
+//! # Theorem map (predictor → paper claim, PAPER.md)
+//!
+//! | predictor | protocol | claim |
+//! |-----------|----------|-------|
+//! | MSE `d/(2n)·B̄` | π_sb (binary) | Theorem 1 (= Lemma 3's bound): Θ(d/n) at 1 bit/dim |
+//! | MSE `d/(2n(k−1)²)·B̄` | π_sk (klevel), π_svk (varlen) | Theorem 2 |
+//! | MSE `(2 ln d̃ + 2)/(n(k−1)²)·B̄` | π_srk (rotated, padded dim d̃) | Theorem 3: O((log d)/n) |
+//! | bits `d + 64` | π_sb | Lemma 1 (32-bit headers) |
+//! | bits `d⌈log₂k⌉ + 64` | π_sk | Lemma 5 |
+//! | bits `d(2 + log₂((k−1)²/2d + 1.25)) + k-hist + 64` | π_svk | Theorem 4's entropy-coded rate: O(1) bits/dim at k = √d |
+//! | MSE `E/p + (1−p)/(np)·B̄` | π_p sampling wrapper | Lemma 8 (bits scale by p) |
+//!
+//! `B̄` is the clients' average squared norm. The coordinate-sampling
+//! wrapper mirrors Lemma 8 coordinate-wise, and the QSGD comparator uses
+//! the same grid-width variance bound its `mse_bound` documents. Every
+//! closed form is an upper bound; the [`model::Calibration`] fitter
+//! shrinks each spec's prediction onto the measured behavior of the real
+//! encode path, so planner choices reflect realized bits and error, not
+//! just worst cases.
+
+pub mod controller;
+pub mod model;
+pub mod planner;
+
+pub use controller::{ControllerStep, RateController};
+pub use model::{predicted_mse, predicted_uplink_bits, Calibration, SpecCalibration};
+pub use planner::{Objective, Plan, PlannedSpec};
+
+#[allow(unused_imports)] // doc links
+use crate::protocol::config::{Kind, ProtocolConfig};

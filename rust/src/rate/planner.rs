@@ -1,0 +1,331 @@
+//! The bit-budget planner: enumerate the discrete spec space, predict
+//! each candidate's (bits, MSE) with the [`super::model`] forms, and
+//! solve for the best spec under a communication budget — the paper's
+//! MSE-vs-bits frontier as an optimizer (`dme tune`).
+
+use anyhow::{ensure, Result};
+
+use super::model::{self, Calibration};
+use crate::protocol::config::{Kind, ProtocolConfig};
+use crate::protocol::quantizer::Span;
+use crate::protocol::varlen::Coder;
+
+/// What the planner optimizes, subject to the per-client bit budget.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Objective {
+    /// Minimize predicted MSE s.t. predicted bits/client ≤ budget.
+    MinMse,
+    /// Minimize predicted bits/client s.t. predicted MSE ≤ `max_mse`
+    /// (MSE normalized to avg ‖X‖² = 1; the budget still applies as an
+    /// upper bound — pass `f64::INFINITY` to disable it).
+    MinBits { max_mse: f64 },
+}
+
+/// One enumerated candidate with its predictions.
+#[derive(Clone, Debug)]
+pub struct PlannedSpec {
+    pub cfg: ProtocolConfig,
+    /// The exact spec-grammar string (`ProtocolConfig::to_string`):
+    /// copy-pasteable into every `--protocol` flag and `SpecChange`.
+    pub spec: String,
+    /// Predicted expected uplink bits per client (calibrated when the
+    /// plan was calibrated).
+    pub bits_per_client: f64,
+    /// Predicted MSE at the plan's `n`, normalized to avg ‖X‖² = 1.
+    pub predicted_mse: f64,
+}
+
+impl PlannedSpec {
+    fn from_cfg(cfg: ProtocolConfig, n: usize, cal: Option<&Calibration>) -> Self {
+        let (bits, mse) = match cal {
+            Some(c) => (c.predicted_bits(&cfg), c.predicted_mse(&cfg, n, 1.0)),
+            None => (model::predicted_uplink_bits(&cfg), model::predicted_mse(&cfg, n, 1.0)),
+        };
+        PlannedSpec { spec: cfg.to_string(), cfg, bits_per_client: bits, predicted_mse: mse }
+    }
+
+    /// Bits per dimension per client (the paper's frontier axis).
+    pub fn bits_per_dim(&self) -> f64 {
+        self.bits_per_client / self.cfg.dim as f64
+    }
+}
+
+/// A solved plan: every candidate (sorted by predicted bits), the Pareto
+/// frontier over (bits, MSE), and the objective's arg-min.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub dim: usize,
+    pub n: usize,
+    pub budget_bits_per_client: f64,
+    pub objective: Objective,
+    /// All candidates, sorted by `bits_per_client` ascending (ties by
+    /// MSE, then spec string — fully deterministic).
+    pub candidates: Vec<PlannedSpec>,
+    /// Indices into `candidates` on the Pareto frontier: strictly
+    /// decreasing MSE as bits increase.
+    pub frontier: Vec<usize>,
+    /// Index of the objective's arg-min, if any candidate is feasible.
+    pub chosen: Option<usize>,
+    /// Whether predictions were empirically calibrated.
+    pub calibrated: bool,
+}
+
+/// The discrete spec space: kind × k grid × coder × span (π_svk) ×
+/// client-sampling p × coordinate-sampling q. The k grid carries the
+/// power-of-two ladder the fixed-width protocols live on (any other k
+/// pays ⌈log₂k⌉ for less accuracy), intermediate values and √d + 1 for
+/// π_svk (whose rate moves smoothly in k), and the sampling grids fill
+/// the frontier below each family's cheapest full-participation point.
+fn candidate_grid(dim: usize) -> Vec<ProtocolConfig> {
+    const P_GRID: [f64; 6] = [1.0, 0.75, 0.5, 0.375, 0.25, 0.125];
+    const Q_GRID: [f64; 3] = [1.0, 0.5, 0.25];
+    let mut ks: Vec<u32> = vec![2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64, 96, 128];
+    let sqrt_d = (dim as f64).sqrt() as u32 + 1;
+    if !ks.contains(&sqrt_d) {
+        ks.push(sqrt_d);
+    }
+    ks.sort_unstable();
+    ks.retain(|&k| (k as u64) <= 2 * dim as u64 + 1); // finer grids than coords are pointless
+    let mut out = Vec::new();
+    for p in P_GRID {
+        let base = |kind: Kind| {
+            let mut c = ProtocolConfig::new(kind, dim);
+            c.p = p;
+            c
+        };
+        out.push(base(Kind::Float32));
+        out.push(base(Kind::Binary));
+        for &k in &ks {
+            out.push(base(Kind::Rotated).with_k(k));
+            out.push(base(Kind::Qsgd).with_k(k));
+            for q in Q_GRID {
+                let mut c = base(Kind::KLevel).with_k(k);
+                c.q = q;
+                out.push(c);
+                for coder in [Coder::Arithmetic, Coder::Huffman] {
+                    for span in [Span::MinMax, Span::Norm] {
+                        let mut c = base(Kind::Varlen).with_k(k).with_coder(coder);
+                        c.span = span;
+                        c.q = q;
+                        out.push(c);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+impl Plan {
+    /// Solve analytically: enumerate the grid, predict with the paper's
+    /// closed forms, compute the frontier and the objective's arg-min.
+    /// `budget_bits_per_client` is the per-client uplink budget (the CLI
+    /// multiplies its per-dim budget by d).
+    pub fn solve(
+        budget_bits_per_client: f64,
+        dim: usize,
+        n: usize,
+        objective: Objective,
+    ) -> Result<Plan> {
+        ensure!(dim >= 1, "dim must be >= 1");
+        ensure!(n >= 1, "clients must be >= 1");
+        ensure!(budget_bits_per_client > 0.0, "budget must be > 0");
+        let candidates: Vec<PlannedSpec> = candidate_grid(dim)
+            .into_iter()
+            .map(|cfg| PlannedSpec::from_cfg(cfg, n, None))
+            .collect();
+        let mut plan = Plan {
+            dim,
+            n,
+            budget_bits_per_client,
+            objective,
+            candidates,
+            frontier: Vec::new(),
+            chosen: None,
+            calibrated: false,
+        };
+        plan.resolve();
+        Ok(plan)
+    }
+
+    /// Re-predict every candidate through an empirical [`Calibration`]
+    /// (probe rounds through the real encode path, cached per spec) and
+    /// re-solve. The planner then ranks by measured behavior instead of
+    /// worst-case bounds.
+    pub fn calibrate(&mut self, cal: &mut Calibration) -> Result<()> {
+        for c in &mut self.candidates {
+            cal.fit(&c.cfg)?;
+            *c = PlannedSpec::from_cfg(c.cfg.clone(), self.n, Some(&*cal));
+        }
+        self.calibrated = true;
+        self.resolve();
+        Ok(())
+    }
+
+    /// Deterministic sort + frontier + arg-min.
+    fn resolve(&mut self) {
+        self.candidates.sort_by(|a, b| {
+            a.bits_per_client
+                .total_cmp(&b.bits_per_client)
+                .then(a.predicted_mse.total_cmp(&b.predicted_mse))
+                .then(a.spec.cmp(&b.spec))
+        });
+        self.frontier.clear();
+        let mut best = f64::INFINITY;
+        for (i, c) in self.candidates.iter().enumerate() {
+            if c.predicted_mse < best {
+                best = c.predicted_mse;
+                self.frontier.push(i);
+            }
+        }
+        self.chosen = match self.objective {
+            Objective::MinMse => self
+                .feasible()
+                .min_by(|(_, a), (_, b)| {
+                    a.predicted_mse
+                        .total_cmp(&b.predicted_mse)
+                        .then(a.bits_per_client.total_cmp(&b.bits_per_client))
+                        .then(a.spec.cmp(&b.spec))
+                })
+                .map(|(i, _)| i),
+            Objective::MinBits { max_mse } => self
+                .feasible()
+                .filter(|(_, c)| c.predicted_mse <= max_mse)
+                .min_by(|(_, a), (_, b)| {
+                    a.bits_per_client
+                        .total_cmp(&b.bits_per_client)
+                        .then(a.predicted_mse.total_cmp(&b.predicted_mse))
+                        .then(a.spec.cmp(&b.spec))
+                })
+                .map(|(i, _)| i),
+        };
+    }
+
+    fn feasible(&self) -> impl Iterator<Item = (usize, &PlannedSpec)> {
+        let budget = self.budget_bits_per_client;
+        self.candidates
+            .iter()
+            .enumerate()
+            .filter(move |(_, c)| c.bits_per_client <= budget)
+    }
+
+    /// The objective's arg-min, if any candidate met the constraints.
+    pub fn chosen_spec(&self) -> Option<&PlannedSpec> {
+        self.chosen.map(|i| &self.candidates[i])
+    }
+
+    /// The Pareto-frontier candidates, cheapest first.
+    pub fn frontier_specs(&self) -> impl Iterator<Item = &PlannedSpec> {
+        self.frontier.iter().map(|&i| &self.candidates[i])
+    }
+
+    /// Best in-budget candidate of one protocol family — how the paper's
+    /// ordering (π_sb ≻ π_srk ≻ π_svk in MSE at equal budget) is read
+    /// off a plan.
+    pub fn best_in_kind(&self, kind: Kind) -> Option<&PlannedSpec> {
+        self.feasible()
+            .filter(|(_, c)| c.cfg.kind == kind)
+            .min_by(|(_, a), (_, b)| {
+                a.predicted_mse
+                    .total_cmp(&b.predicted_mse)
+                    .then(a.bits_per_client.total_cmp(&b.bits_per_client))
+            })
+            .map(|(_, c)| c)
+    }
+
+    /// Machine-readable export (the `dme tune --json` / CI artifact
+    /// format): scope, the chosen spec, and the full frontier.
+    pub fn to_json(&self) -> String {
+        fn spec_json(c: &PlannedSpec) -> String {
+            format!(
+                "{{\"spec\":\"{}\",\"bits_per_client\":{:.3},\"bits_per_dim\":{:.6},\
+                 \"predicted_mse\":{:.6e}}}",
+                c.spec,
+                c.bits_per_client,
+                c.bits_per_dim(),
+                c.predicted_mse
+            )
+        }
+        let frontier: Vec<String> = self.frontier_specs().map(spec_json).collect();
+        let chosen = match self.chosen_spec() {
+            Some(c) => spec_json(c),
+            None => "null".to_string(),
+        };
+        format!(
+            "{{\n  \"dim\": {},\n  \"clients\": {},\n  \"budget_bits_per_client\": {:.3},\n  \
+             \"calibrated\": {},\n  \"n_candidates\": {},\n  \"chosen\": {},\n  \
+             \"frontier\": [\n    {}\n  ]\n}}\n",
+            self.dim,
+            self.n,
+            self.budget_bits_per_client,
+            self.calibrated,
+            self.candidates.len(),
+            chosen,
+            frontier.join(",\n    ")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_is_deterministic_and_replayable() {
+        let a = candidate_grid(256);
+        let b = candidate_grid(256);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x, y);
+        }
+        // Every candidate builds and its spec string replays exactly.
+        for cfg in a.iter().take(200) {
+            cfg.build().unwrap_or_else(|e| panic!("{cfg} fails to build: {e}"));
+            let back = ProtocolConfig::parse(&cfg.to_string(), 256).unwrap();
+            assert_eq!(&back, cfg);
+        }
+    }
+
+    #[test]
+    fn frontier_is_monotone_and_chosen_is_feasible() {
+        let plan = Plan::solve(4.0 * 1024.0, 1024, 64, Objective::MinMse).unwrap();
+        let frontier: Vec<_> = plan.frontier_specs().collect();
+        assert!(frontier.len() >= 5, "frontier too small: {}", frontier.len());
+        for w in frontier.windows(2) {
+            assert!(w[0].bits_per_client <= w[1].bits_per_client);
+            assert!(w[0].predicted_mse > w[1].predicted_mse, "frontier not strictly improving");
+        }
+        let chosen = plan.chosen_spec().expect("4 bits/dim must be feasible");
+        assert!(chosen.bits_per_client <= plan.budget_bits_per_client);
+        // Nothing feasible beats the chosen MSE.
+        for c in &plan.candidates {
+            if c.bits_per_client <= plan.budget_bits_per_client {
+                assert!(c.predicted_mse >= chosen.predicted_mse);
+            }
+        }
+        // float32 wins any budget that fits it (MSE 0), and needs 32/dim.
+        let rich = Plan::solve(33.0 * 1024.0, 1024, 64, Objective::MinMse).unwrap();
+        assert_eq!(rich.chosen_spec().unwrap().cfg.kind, Kind::Float32);
+    }
+
+    #[test]
+    fn min_bits_objective_respects_mse_target() {
+        let target = 1e-2;
+        let plan =
+            Plan::solve(f64::INFINITY, 1024, 64, Objective::MinBits { max_mse: target }).unwrap();
+        let chosen = plan.chosen_spec().expect("target must be reachable");
+        assert!(chosen.predicted_mse <= target);
+        for c in &plan.candidates {
+            if c.predicted_mse <= target {
+                assert!(c.bits_per_client >= chosen.bits_per_client);
+            }
+        }
+    }
+
+    #[test]
+    fn impossible_budget_yields_no_choice() {
+        let plan = Plan::solve(0.5, 1024, 64, Objective::MinMse).unwrap();
+        assert!(plan.chosen_spec().is_none(), "half a bit per client fits nothing");
+        assert!(!plan.frontier.is_empty(), "the frontier is budget-independent");
+    }
+}

@@ -1,0 +1,276 @@
+//! Conformance suite for the rate-control tier (tag-5 `SpecChange` and
+//! the planner).
+//!
+//! The load-bearing contract: a **mid-session spec switch is
+//! bit-identical to restarting a fresh session at the new spec** and
+//! driving it through the same round numbers — over flat and depth-2
+//! tree topologies, loopback and TCP. Every bit of a round depends only
+//! on `(seed, round, client_id, spec, data)`; the switch rebuilds every
+//! node's protocol handle with no carried state, and these tests prove
+//! the plumbing actually delivers that on every tier.
+//!
+//! Plus the planner acceptance check: at equal budgets of 1, 2, and 4
+//! bits/dim the predicted-MSE ordering reproduces the paper's frontier —
+//! π_sb (Θ(d/n)) ≻ π_srk (O(log d / n)) ≻ π_svk (O(1/n)).
+
+use dme::coordinator::aggregator::spawn_local_tree;
+use dme::coordinator::leader::{spawn_local_cluster, Leader};
+use dme::coordinator::topology::Topology;
+use dme::coordinator::transport::TcpHub;
+use dme::coordinator::worker::{mean_update, Worker};
+use dme::protocol::config::{Kind, ProtocolConfig};
+use dme::rate::{Objective, Plan};
+use dme::rng::Pcg64;
+
+const SEED: u64 = 41;
+
+fn gaussian_shards(n: usize, d: usize, seed: u64) -> Vec<Vec<Vec<f32>>> {
+    let mut rng = Pcg64::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut x = vec![0.0f32; d];
+            rng.fill_gaussian_f32(&mut x);
+            vec![x]
+        })
+        .collect()
+}
+
+fn bits_of(means: &[Vec<f32>]) -> Vec<Vec<u32>> {
+    means.iter().map(|m| m.iter().map(|v| v.to_bits()).collect()).collect()
+}
+
+/// Drive `leader` through rounds `[lo, hi)`, returning each round's
+/// estimate bits.
+fn drive(leader: &mut Leader, lo: u64, hi: u64, dim: usize) -> Vec<Vec<Vec<u32>>> {
+    (lo..hi)
+        .map(|r| bits_of(&leader.round(r, dim as u32, &[]).unwrap().means))
+        .collect()
+}
+
+/// The spec pairs every topology is checked over: fixed-width →
+/// rotated, entropy-coded → fixed-width, and a switch *into* a sampled
+/// wrapper (private sampling streams must come up exactly as a fresh
+/// session's would).
+const SWITCHES: [(&str, &str); 3] = [
+    ("klevel:k=16", "rotated:k=8"),
+    ("varlen:k=8", "binary"),
+    ("rotated:k=4", "klevel:k=4,p=0.5"),
+];
+
+#[test]
+fn flat_mid_session_switch_matches_fresh_session() {
+    let d = 32;
+    let n = 7;
+    for (from, to) in SWITCHES {
+        let shards = gaussian_shards(n, d, 5);
+        let proto = ProtocolConfig::parse(from, d).unwrap().build().unwrap();
+        let (mut leader, handles) =
+            spawn_local_cluster(proto, shards.clone(), mean_update(), SEED);
+        drive(&mut leader, 0, 2, d);
+        leader.switch_spec(to, 2).unwrap();
+        let after = drive(&mut leader, 2, 4, d);
+        assert_eq!(
+            leader.metrics().spec_changes,
+            vec![(2, to.to_string())],
+            "switch not recorded in metrics"
+        );
+        leader.shutdown().unwrap();
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+
+        // Fresh session at the new spec, same seed, same round numbers.
+        let proto = ProtocolConfig::parse(to, d).unwrap().build().unwrap();
+        let (mut fresh, handles) = spawn_local_cluster(proto, shards, mean_update(), SEED);
+        let want = drive(&mut fresh, 2, 4, d);
+        fresh.shutdown().unwrap();
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+        assert_eq!(after, want, "{from} -> {to}: switched session diverged from fresh");
+    }
+}
+
+#[test]
+fn tree_mid_session_switch_matches_fresh_session() {
+    // Depth-2 tree: the SpecChange must relay through the aggregator
+    // tier, every node rebuilding before the next RoundStart.
+    let d = 32;
+    let n = 11;
+    for (from, to) in SWITCHES {
+        let topo = Topology::uniform(n as u64, 4, 2).unwrap();
+        let shards = gaussian_shards(n, d, 9);
+        let proto = ProtocolConfig::parse(from, d).unwrap().build().unwrap();
+        let (mut leader, tree) =
+            spawn_local_tree(proto, shards.clone(), mean_update(), SEED, &topo, 2, None)
+                .unwrap();
+        drive(&mut leader, 0, 2, d);
+        leader.switch_spec(to, 2).unwrap();
+        let after = drive(&mut leader, 2, 4, d);
+        leader.shutdown().unwrap();
+        tree.join().unwrap();
+
+        let topo = Topology::uniform(n as u64, 4, 2).unwrap();
+        let proto = ProtocolConfig::parse(to, d).unwrap().build().unwrap();
+        let (mut fresh, tree) =
+            spawn_local_tree(proto, shards, mean_update(), SEED, &topo, 2, None).unwrap();
+        let want = drive(&mut fresh, 2, 4, d);
+        fresh.shutdown().unwrap();
+        tree.join().unwrap();
+        assert_eq!(after, want, "{from} -> {to}: tree switch diverged from fresh");
+    }
+}
+
+#[test]
+fn tcp_mid_session_switch_matches_fresh_session() {
+    // Real sockets: the tag-5 message crosses the wire serialization,
+    // and the result must equal a fresh *loopback* session at the new
+    // spec — proving both switch conformance and transport neutrality.
+    let d = 16;
+    let n = 3;
+    let (from, to) = ("klevel:k=16", "rotated:k=8");
+    let shards = gaussian_shards(n, d, 21);
+
+    let binding = TcpHub::bind("127.0.0.1:0").unwrap();
+    let addr = binding.local_addr().unwrap();
+    let mut worker_handles = Vec::new();
+    for (i, shard) in shards.iter().cloned().enumerate() {
+        let proto = ProtocolConfig::parse(from, d).unwrap().build().unwrap();
+        worker_handles.push(std::thread::spawn(move || {
+            Worker {
+                client_id: i as u64,
+                shard,
+                protocol: proto,
+                update: mean_update(),
+                seed: SEED,
+            }
+            .run_tcp(&addr.to_string())
+        }));
+    }
+    let hub = binding.accept(n).unwrap();
+    let proto = ProtocolConfig::parse(from, d).unwrap().build().unwrap();
+    let mut leader = Leader::new(proto, Box::new(hub), SEED);
+    drive(&mut leader, 0, 2, d);
+    leader.switch_spec(to, 2).unwrap();
+    let after = drive(&mut leader, 2, 4, d);
+    leader.shutdown().unwrap();
+    for h in worker_handles {
+        h.join().unwrap().unwrap();
+    }
+
+    let proto = ProtocolConfig::parse(to, d).unwrap().build().unwrap();
+    let (mut fresh, handles) = spawn_local_cluster(proto, shards, mean_update(), SEED);
+    let want = drive(&mut fresh, 2, 4, d);
+    fresh.shutdown().unwrap();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+    assert_eq!(after, want, "TCP switch diverged from a fresh loopback session");
+}
+
+#[test]
+fn invalid_switch_errors_without_disturbing_the_session() {
+    let d = 16;
+    let shards = gaussian_shards(4, d, 3);
+    let proto = ProtocolConfig::parse("klevel:k=8", d).unwrap().build().unwrap();
+    let (mut leader, handles) = spawn_local_cluster(proto, shards.clone(), mean_update(), SEED);
+    drive(&mut leader, 0, 1, d);
+    // Grammar and build failures error locally, before any broadcast...
+    assert!(leader.switch_spec("nonsense", 1).is_err());
+    assert!(leader.switch_spec("rotated:k=16,q=0.5", 1).is_err());
+    assert!(leader.metrics().spec_changes.is_empty());
+    // ...so the session continues at the old spec, bit-identical to an
+    // undisturbed one.
+    let after = drive(&mut leader, 1, 2, d);
+    leader.shutdown().unwrap();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+    let proto = ProtocolConfig::parse("klevel:k=8", d).unwrap().build().unwrap();
+    let (mut fresh, handles) = spawn_local_cluster(proto, shards, mean_update(), SEED);
+    let want = drive(&mut fresh, 1, 2, d);
+    fresh.shutdown().unwrap();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+    assert_eq!(after, want);
+}
+
+#[test]
+fn planner_reproduces_the_papers_ordering_at_equal_budgets() {
+    // Acceptance criterion: at budgets of 1, 2, and 4 bits/dim the
+    // family bests order binary ≻ rotated ≻ varlen by predicted MSE —
+    // the Θ(d/n) vs O(log d / n) vs O(1/n) frontier of PAPER.md.
+    let (d, n) = (1024usize, 64usize);
+    for budget in [1.0f64, 2.0, 4.0] {
+        let plan = Plan::solve(budget * d as f64, d, n, Objective::MinMse).unwrap();
+        let binary = plan
+            .best_in_kind(Kind::Binary)
+            .unwrap_or_else(|| panic!("no binary spec fits {budget} bits/dim"));
+        let rotated = plan
+            .best_in_kind(Kind::Rotated)
+            .unwrap_or_else(|| panic!("no rotated spec fits {budget} bits/dim"));
+        let varlen = plan
+            .best_in_kind(Kind::Varlen)
+            .unwrap_or_else(|| panic!("no varlen spec fits {budget} bits/dim"));
+        assert!(
+            varlen.predicted_mse < rotated.predicted_mse,
+            "budget {budget}: varlen `{}` ({:.3e}) must beat rotated `{}` ({:.3e})",
+            varlen.spec,
+            varlen.predicted_mse,
+            rotated.spec,
+            rotated.predicted_mse
+        );
+        assert!(
+            rotated.predicted_mse < binary.predicted_mse,
+            "budget {budget}: rotated `{}` ({:.3e}) must beat binary `{}` ({:.3e})",
+            rotated.spec,
+            rotated.predicted_mse,
+            binary.spec,
+            binary.predicted_mse
+        );
+        // And the overall choice is at least as good as every family best.
+        let chosen = plan.chosen_spec().expect("budget must be feasible");
+        assert!(chosen.predicted_mse <= varlen.predicted_mse);
+        assert!(chosen.bits_per_client <= plan.budget_bits_per_client);
+    }
+}
+
+#[test]
+fn switched_session_controller_loop_end_to_end() {
+    // A miniature auto-rate session: plan, run at the chosen spec,
+    // switch when the controller says so, keep serving. Exercises the
+    // Plan -> RateController -> Leader::switch_spec loop the serve
+    // command wires together.
+    use dme::rate::RateController;
+    let d = 64;
+    let n = 6;
+    let plan = Plan::solve(4.0 * d as f64, d, n, Objective::MinMse).unwrap();
+    let mut ctl = RateController::new(plan).unwrap();
+    let first = ctl.active_spec().spec.clone();
+    let shards = gaussian_shards(n, d, 77);
+    let mut cfg = ctl.active_spec().cfg.clone();
+    cfg.dim = d;
+    let (mut leader, handles) =
+        spawn_local_cluster(cfg.build().unwrap(), shards, mean_update(), SEED);
+    let mut switched = Vec::new();
+    for r in 0..4u64 {
+        let out = leader.round(r, d as u32, &[]).unwrap();
+        let est = out.means.first().cloned().unwrap_or_default();
+        if let Some(spec) = ctl.observe(r, out.uplink_bits, n, &est) {
+            leader.switch_spec(&spec, r + 1).unwrap();
+            switched.push(spec);
+        }
+    }
+    leader.shutdown().unwrap();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+    assert_eq!(ctl.history().len(), 4);
+    // Realized bits of the fixed-width chosen specs match predictions,
+    // so a well-calibrated plan must not flap.
+    assert!(
+        switched.len() <= 1,
+        "controller flapped: started at `{first}`, switched through {switched:?}"
+    );
+}

@@ -1,0 +1,163 @@
+//! Property suite for the rate models (`rate::model`): the calibrated
+//! predictors must track real rounds across every protocol family, both
+//! test dimensions, and both client counts.
+//!
+//! Contracts (satellite spec):
+//! * empirical MSE from real rounds ≤ calibrated `predicted_mse` ×
+//!   `MSE_SLACK`. The calibration probe and the test rounds are
+//!   independent draws of a per-round error whose mean they both
+//!   estimate from a handful of rounds; for the sampled wrappers the
+//!   binomial client count makes single-round MSE swing by tens of
+//!   percent, so the slack is 3× (documented here, deterministic under
+//!   the fixed seeds).
+//! * `predicted_uplink_bits` within 10% of realized
+//!   `RoundMetrics::uplink_bits`. For client-sampled specs (p < 1) the
+//!   realized count is binomial, so the tolerance widens by 3σ of the
+//!   sampling noise — exact formulas stay at 10%.
+//!
+//! Everything runs through `run_round` — the same engine the `estimate`
+//! CLI and the coordinator's conformance baseline use; a final check
+//! drives a real loopback cluster and compares against the leader's
+//! `RoundMetrics::uplink_bits` literally.
+
+use dme::coordinator::leader::spawn_local_cluster;
+use dme::coordinator::worker::mean_update;
+use dme::data::synthetic;
+use dme::protocol::config::ProtocolConfig;
+use dme::protocol::{run_round, RoundCtx};
+use dme::rate::Calibration;
+use dme::stats;
+
+const MSE_SLACK: f64 = 3.0;
+const BITS_TOL: f64 = 0.10;
+const TRIALS: u64 = 3;
+
+const SPECS: [&str; 13] = [
+    "float32",
+    "binary",
+    "klevel:k=4",
+    "klevel:k=16",
+    "rotated:k=4",
+    "rotated:k=16",
+    "varlen:k=8",
+    "varlen:span=norm", // k defaults to sqrt(d)+1 — Theorem 4's regime
+    "varlen:k=16,coder=huffman",
+    "qsgd:k=8",
+    "klevel:k=16,p=0.5",
+    "klevel:k=8,q=0.5",
+    "varlen:k=8,p=0.25",
+];
+
+#[test]
+fn calibrated_models_track_real_rounds_across_specs_dims_and_ns() {
+    for d in [1usize << 8, 1 << 12] {
+        // One calibration per dimension: fitted once, reused for every
+        // (spec, n) — the way the planner consumes it.
+        let mut cal = Calibration::new(1234).with_probe(8, 4);
+        for n in [16usize, 256] {
+            let data = synthetic::gaussian(n, d, 7 + d as u64 + n as u64);
+            let truth = stats::true_mean(&data.rows);
+            let avg_sq = stats::avg_norm_sq(&data.rows);
+            for spec in SPECS {
+                let cfg = ProtocolConfig::parse(spec, d).unwrap();
+                cal.fit(&cfg).unwrap();
+                let proto = cfg.build().unwrap();
+                let mut err = stats::Running::new();
+                let mut bits = stats::Running::new();
+                // Client-sampled specs transmit a binomial number of
+                // frames per round; average realized bits over more
+                // rounds so the comparison tests the model, not one
+                // coin-flip draw. More rounds at small n (where the
+                // speaker count swings hardest), fewer at large n —
+                // the tolerance below adapts to the count either way.
+                let bits_trials = if cfg.p < 1.0 { (384 / n).clamp(8, 24) as u64 } else { TRIALS };
+                for t in 0..bits_trials {
+                    let ctx = RoundCtx::new(t, 99);
+                    let (est, b) = run_round(proto.as_ref(), &ctx, &data.rows).unwrap();
+                    if t < TRIALS {
+                        err.push(stats::sq_error(&est, &truth));
+                    }
+                    bits.push(b as f64);
+                }
+
+                // (a) Empirical MSE under the calibrated prediction. The
+                // absolute epsilon covers float32, whose predicted MSE
+                // is exactly 0 while real rounds carry f32 summation
+                // noise.
+                let pred_mse = cal.predicted_mse(&cfg, n, avg_sq);
+                assert!(
+                    err.mean() <= pred_mse * MSE_SLACK + 1e-9 * avg_sq,
+                    "{spec} d={d} n={n}: empirical MSE {:.3e} exceeds calibrated \
+                     prediction {:.3e} x{MSE_SLACK}",
+                    err.mean(),
+                    pred_mse
+                );
+
+                // (b) Predicted bits vs realized uplink bits.
+                let pred_bits = cal.predicted_bits(&cfg) * n as f64;
+                let tol = if cfg.p < 1.0 {
+                    // Binomial speaker count: widen by 3σ of the
+                    // relative sampling noise over the averaged rounds
+                    // (the prediction side is noise-free — the fitter
+                    // probes the p=1 twin and scales by p analytically).
+                    BITS_TOL
+                        + 3.0
+                            * ((1.0 - cfg.p) / (cfg.p * n as f64 * bits_trials as f64)).sqrt()
+                } else {
+                    BITS_TOL
+                };
+                let rel = (pred_bits - bits.mean()).abs() / bits.mean().max(1.0);
+                assert!(
+                    rel <= tol,
+                    "{spec} d={d} n={n}: predicted {pred_bits:.0} bits vs realized {:.0} \
+                     ({:.1}% off, tol {:.1}%)",
+                    bits.mean(),
+                    rel * 100.0,
+                    tol * 100.0
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn predictions_match_leader_round_metrics_literally() {
+    // The satellite names RoundMetrics::uplink_bits — drive a real
+    // coordinator and read the field itself.
+    let d = 256;
+    let n = 12;
+    for spec in ["binary", "rotated:k=16", "varlen:k=8"] {
+        let cfg = ProtocolConfig::parse(spec, d).unwrap();
+        let mut cal = Calibration::new(5).with_probe(8, 4);
+        cal.fit(&cfg).unwrap();
+        let pred_total = cal.predicted_bits(&cfg) * n as f64;
+
+        let mut rng = dme::rng::Pcg64::new(31);
+        let shards: Vec<Vec<Vec<f32>>> = (0..n)
+            .map(|_| {
+                let mut x = vec![0.0f32; d];
+                rng.fill_gaussian_f32(&mut x);
+                vec![x]
+            })
+            .collect();
+        let (mut leader, handles) =
+            spawn_local_cluster(cfg.build().unwrap(), shards, mean_update(), 8);
+        for r in 0..2 {
+            leader.round(r, d as u32, &[]).unwrap();
+        }
+        leader.shutdown().unwrap();
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+        for m in &leader.metrics().rounds {
+            let rel = (pred_total - m.uplink_bits as f64).abs() / m.uplink_bits as f64;
+            assert!(
+                rel <= 0.10,
+                "{spec}: predicted {pred_total:.0} vs RoundMetrics::uplink_bits {} \
+                 ({:.1}% off)",
+                m.uplink_bits,
+                rel * 100.0
+            );
+        }
+    }
+}
