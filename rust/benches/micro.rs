@@ -1,8 +1,11 @@
 //! Microbenchmarks of the hot paths (the §Perf numbers in EXPERIMENTS.md):
-//! FWHT, quantization, entropy coders, full protocol encode/decode, the
-//! round-session encode pipeline (one-shot vs prepared, 1 vs N threads),
-//! the streaming leader aggregation (n worker uploads, 1 vs N decode
-//! threads), PJRT executable dispatch, and a full coordinator round.
+//! FWHT, quantization, entropy coders, per-spec encode/decode/fold
+//! throughput, the round-session encode pipeline (one-shot vs prepared,
+//! 1 vs N threads), the same-run vector-vs-forced-scalar dispatch pair
+//! (rotated k=16 at d=2^18), the exact carry-save fold vs a plain f64
+//! fold, the encode-scratch allocation audit, the streaming leader
+//! aggregation (n worker uploads, 1 vs N decode threads), PJRT
+//! executable dispatch, and a full coordinator round.
 //!
 //! ```bash
 //! cargo bench --offline --bench micro                 # full run
@@ -21,7 +24,7 @@ use dme::coordinator::transport::{LoopbackHub, Message, WeightedFrame};
 use dme::coordinator::worker::mean_update;
 use dme::protocol::config::ProtocolConfig;
 use dme::protocol::quantizer::Span;
-use dme::protocol::{run_round_par, Encoder, Frame, Protocol, RoundCtx};
+use dme::protocol::{run_round_par, Encoder, Frame, Protocol, RoundCtx, SlotPartial};
 use dme::rng::Pcg64;
 use dme::rotation::hadamard;
 use dme::runtime::{ComputeBackend, NativeBackend};
@@ -187,6 +190,54 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // ---- per-spec encode / decode / fold throughput (coords/s) ----
+    //
+    // One row triple per spec in BENCH_micro.json: session encode,
+    // server-side decode (accumulate_with into a recycled accumulator),
+    // and the exact fold (SlotPartial::fold_frame = decode + carry-save
+    // 640-bit add). `units_per_sec` is coordinates/s — divide by 1e6 for
+    // the Mcoords/s table in the README.
+    {
+        let d = 4096;
+        let mut rng = Pcg64::new(17);
+        let mut x = vec![0.0f32; d];
+        rng.fill_gaussian_f32(&mut x);
+        let specs = [
+            "float32",
+            "binary",
+            "klevel:k=16",
+            "klevel:k=16,p=0.5",
+            "klevel:k=16,q=0.5",
+            "rotated:k=16",
+            "varlen:k=33",
+            "qsgd:k=8",
+        ];
+        for spec in specs {
+            let proto = ProtocolConfig::parse(spec, d)?.build()?;
+            let ctx = RoundCtx::new(0, 19);
+            let state = proto.prepare(&ctx);
+            let mut enc = Encoder::new(proto.as_ref(), &state);
+            let mut frame = Frame::empty();
+            // A speaking stream id (client sampling silences some ids).
+            let id = (0..64u64)
+                .find(|&i| enc.encode_into(i, &x, &mut frame))
+                .expect("no speaking client in 64 ids");
+            b.run(&format!("{spec} encode d={d}"), Some(d as f64), || {
+                std::hint::black_box(enc.encode_into(id, std::hint::black_box(&x), &mut frame));
+            });
+            let mut acc = proto.new_accumulator();
+            b.run(&format!("{spec} decode d={d}"), Some(d as f64), || {
+                acc.reset();
+                proto.accumulate_with(&state, std::hint::black_box(&frame), &mut acc).unwrap();
+            });
+            let mut part = SlotPartial::empty(acc.sum.len());
+            let mut scratch = proto.new_accumulator();
+            b.run(&format!("{spec} fold d={d}"), Some(d as f64), || {
+                part.fold_frame(proto.as_ref(), &state, &frame, 1.0, &mut scratch).unwrap();
+            });
+        }
+    }
+
     // ---- round-session encode throughput: rotated(k=16), n=64 clients ----
     //
     // The before/after pair for the session refactor: `oneshot` is the
@@ -244,6 +295,134 @@ fn main() -> anyhow::Result<()> {
                 );
             }
         }
+    }
+
+    // ---- dispatch: vector vs forced-scalar, same run (rotated k=16, d=2^18) ----
+    //
+    // The acceptance pair for the SIMD hot path: identical inputs, one
+    // process, toggling only the scalar-fallback override between rows.
+    // Frames are asserted bit-identical before timing. On a machine
+    // without AVX2 (or under `--no-default-features`) both rows measure
+    // the scalar path and the ratio reads ≈ 1×.
+    {
+        let d = 1 << 18;
+        let mut rng = Pcg64::new(23);
+        let mut x = vec![0.0f32; d];
+        rng.fill_gaussian_f32(&mut x);
+        let proto = ProtocolConfig::parse("rotated:k=16", d)?.build()?;
+        let ctx = RoundCtx::new(0, 29);
+        let state = proto.prepare(&ctx);
+        let mut enc = Encoder::new(proto.as_ref(), &state);
+        let mut frame = Frame::empty();
+        // Conformance gate before timing: both paths, same bits.
+        let prev = dme::simd::set_force_scalar(true);
+        enc.encode_into(0, &x, &mut frame);
+        let scalar_bytes = frame.bytes.clone();
+        dme::simd::set_force_scalar(false);
+        enc.encode_into(0, &x, &mut frame);
+        dme::simd::set_force_scalar(prev);
+        assert_eq!(frame.bytes, scalar_bytes, "vector encode diverged from scalar");
+
+        let mut thr = [[0.0f64; 2]; 2]; // [encode, decode] × [vector, scalar]
+        for (pi, (label, force)) in [("vector", false), ("scalar", true)].iter().enumerate() {
+            let prev = dme::simd::set_force_scalar(*force);
+            let t = b.run(&format!("rotated k=16 encode d=2^18 {label}"), Some(d as f64), || {
+                std::hint::black_box(enc.encode_into(0, std::hint::black_box(&x), &mut frame));
+            });
+            thr[0][pi] = t.throughput().unwrap_or(0.0);
+            let mut acc = proto.new_accumulator();
+            let t = b.run(&format!("rotated k=16 decode d=2^18 {label}"), Some(d as f64), || {
+                acc.reset();
+                proto.accumulate_with(&state, std::hint::black_box(&frame), &mut acc).unwrap();
+            });
+            thr[1][pi] = t.throughput().unwrap_or(0.0);
+            dme::simd::set_force_scalar(prev);
+        }
+        dme::bench::print_table(
+            &format!(
+                "vector vs scalar dispatch, same run (rotated k=16 d=2^18, active path: {})",
+                dme::simd::active_path()
+            ),
+            &["stage", "vector Mcoords/s", "scalar Mcoords/s", "speedup"],
+            &[
+                vec![
+                    "encode".into(),
+                    format!("{:.1}", thr[0][0] / 1e6),
+                    format!("{:.1}", thr[0][1] / 1e6),
+                    format!("{:.2}x", thr[0][0] / thr[0][1].max(1e-9)),
+                ],
+                vec![
+                    "decode".into(),
+                    format!("{:.1}", thr[1][0] / 1e6),
+                    format!("{:.1}", thr[1][1] / 1e6),
+                    format!("{:.2}x", thr[1][0] / thr[1][1].max(1e-9)),
+                ],
+            ],
+        );
+    }
+
+    // ---- exact carry-save fold vs a plain f64 fold ----
+    //
+    // The cost of the determinism contract, recorded honestly: the
+    // carry-save SlotPartial fold (finiteness validation + one exact
+    // 640-bit windowed add per coordinate) against the naive
+    // `acc[j] += v[j]` f64 fold, which has no fold-order guarantee at
+    // all. State memory is part of each row name: 16 B/coord for the
+    // window vector vs 8 B/coord for the f64 vector — exactly 2× while
+    // nothing spills (the spill tier allocates lazily, and Gaussian
+    // same-scale folds never reach it).
+    {
+        let d = 1 << 14;
+        let n = 64usize;
+        let mut rng = Pcg64::new(37);
+        let values: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0.0f32; d];
+                rng.fill_gaussian_f32(&mut v);
+                v
+            })
+            .collect();
+        let units = (n * d) as f64;
+        let mut facc = vec![0.0f64; d];
+        let t = b.run(&format!("fold f64 naive d=2^14 n={n} (8B/coord)"), Some(units), || {
+            for v in &values {
+                for (a, &x) in facc.iter_mut().zip(v) {
+                    *a += x as f64;
+                }
+            }
+            std::hint::black_box(&mut facc);
+        });
+        let f64_thr = t.throughput().unwrap_or(0.0);
+        let base = reset_peak();
+        let mut part = SlotPartial::empty(d);
+        let carry_state_bytes = peak_since(base);
+        let t = b.run(&format!("fold carry-save d=2^14 n={n} (16B/coord)"), Some(units), || {
+            for v in &values {
+                part.add_decoded(v, 1.0, 1).unwrap();
+            }
+        });
+        let carry_thr = t.throughput().unwrap_or(0.0);
+        dme::bench::print_table(
+            "exact carry-save fold vs plain f64 fold (d=2^14)",
+            &["fold", "Mcoords/s", "state bytes", "notes"],
+            &[
+                vec![
+                    "f64 +=".into(),
+                    format!("{:.1}", f64_thr / 1e6),
+                    format!("{}", 8 * d),
+                    "no fold-order guarantee".into(),
+                ],
+                vec![
+                    "carry-save exact".into(),
+                    format!("{:.1}", carry_thr / 1e6),
+                    format!("{carry_state_bytes}"),
+                    format!(
+                        "{:.2}x slower, bit-identical under any merge tree",
+                        f64_thr / carry_thr.max(1e-9)
+                    ),
+                ],
+            ],
+        );
     }
 
     // ---- streaming leader aggregation: decode n uploads, 1 vs N threads ----
@@ -365,6 +544,64 @@ fn main() -> anyhow::Result<()> {
                     "live barrier, eager fold (O(threads·dim))".into(),
                     format!("{eager_peak}"),
                     format!("{:.3}x", eager_peak as f64 / batch_peak as f64),
+                ],
+            ],
+        );
+    }
+
+    // ---- encode-scratch hoisting: steady-state allocation audit ----
+    //
+    // The scratch-reuse contract, enforced: a warm encode session
+    // (persistent EncodeScratch + recycled frame — the worker loop and
+    // probe driver path) must be allocation-free, and the calibration
+    // fitter must reuse one probe set + one scratch across every spec it
+    // fits at a dimension, so only the *first* fit at a dim pays for
+    // probe generation. Measured with the counting global allocator.
+    {
+        let d = 4096;
+        let mut rng = Pcg64::new(41);
+        let mut x = vec![0.0f32; d];
+        rng.fill_gaussian_f32(&mut x);
+        let proto = ProtocolConfig::parse("rotated:k=16", d)?.build()?;
+        let ctx = RoundCtx::new(0, 43);
+        let state = proto.prepare(&ctx);
+        let mut enc = Encoder::new(proto.as_ref(), &state);
+        let mut frame = Frame::empty();
+        for i in 0..4 {
+            enc.encode_into(i, &x, &mut frame); // grow all scratch to final size
+        }
+        let base = reset_peak();
+        for i in 0..256u64 {
+            std::hint::black_box(enc.encode_into(i, &x, &mut frame));
+        }
+        let warm_alloc = peak_since(base);
+        assert_eq!(warm_alloc, 0, "warm session encode allocated {warm_alloc} B");
+
+        let mut cal = dme::rate::Calibration::new(47);
+        let base = reset_peak();
+        cal.fit(&ProtocolConfig::parse("rotated:k=16", d)?)?;
+        let cold_fit = peak_since(base);
+        let base = reset_peak();
+        cal.fit(&ProtocolConfig::parse("klevel:k=16", d)?)?;
+        cal.fit(&ProtocolConfig::parse("binary", d)?)?;
+        let warm_fits = peak_since(base);
+        assert!(
+            warm_fits < cold_fit,
+            "two warm calibration fits ({warm_fits} B) should allocate less than the one \
+             cold fit that generated the d={d} probe set ({cold_fit} B)"
+        );
+        dme::bench::print_table(
+            "encode-scratch hoisting (counting allocator, d=4096)",
+            &["path", "peak bytes above baseline"],
+            &[
+                vec!["warm session encode ×256 (rotated k=16)".into(), format!("{warm_alloc}")],
+                vec![
+                    "calibration: first fit at dim (probe gen + scratch)".into(),
+                    format!("{cold_fit}"),
+                ],
+                vec![
+                    "calibration: two more specs at dim (probe + scratch reused)".into(),
+                    format!("{warm_fits}"),
                 ],
             ],
         );

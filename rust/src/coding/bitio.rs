@@ -87,6 +87,47 @@ impl BitWriter {
         }
     }
 
+    /// Append `values.len()` fixed-width fields, MSB-first — bit-identical
+    /// to calling [`put_bits`](Self::put_bits) once per value, but with
+    /// the stream state kept in a u64 accumulator so the per-field cost
+    /// is a shift/or plus amortized byte stores (this is the frame
+    /// bit-pack hot path for the k-level protocols). `width <= 32`.
+    ///
+    /// Invariant that keeps the accumulator in bounds: whole bytes are
+    /// flushed *before* the next field is shifted in, so at the shift
+    /// point at most 7 bits are pending and `7 + 32 < 64`.
+    pub fn put_bits_bulk(&mut self, values: &[u32], width: u32) {
+        debug_assert!(width <= 32);
+        if width == 0 || values.is_empty() {
+            return;
+        }
+        self.buf.reserve((values.len() * width as usize) / 8 + 1);
+        let mask = (1u64 << width) - 1;
+        let mut acc: u64 = 0;
+        let mut nbits: u32 = 0;
+        // Absorb the current partial byte so the flush loop below stays
+        // byte-aligned against the buffer.
+        if self.free > 0 {
+            let last = self.buf.pop().unwrap();
+            nbits = 8 - self.free as u32;
+            acc = (last >> self.free) as u64;
+            self.free = 0;
+        }
+        for &v in values {
+            acc = (acc << width) | (v as u64 & mask);
+            nbits += width;
+            while nbits >= 8 {
+                nbits -= 8;
+                self.buf.push((acc >> nbits) as u8);
+            }
+            acc &= (1u64 << nbits) - 1;
+        }
+        if nbits > 0 {
+            self.free = (8 - nbits) as u8;
+            self.buf.push((acc as u8) << self.free);
+        }
+    }
+
     /// Append a full byte (fast path when aligned).
     pub fn put_u8(&mut self, v: u8) {
         if self.free == 0 {
@@ -204,6 +245,50 @@ impl<'a> BitReader<'a> {
         Ok(v)
     }
 
+    /// Read `out.len()` fixed-width fields, MSB-first — bit-identical to
+    /// calling [`get_bits`](Self::get_bits) once per field, including the
+    /// error position on stream under-run (the slow path re-runs the
+    /// per-field reads so the failing offset in the message matches).
+    /// `width <= 32`. This is the frame bit-unpack hot path.
+    pub fn get_bits_bulk(&mut self, width: u32, out: &mut [u32]) -> Result<()> {
+        debug_assert!(width <= 32);
+        if width == 0 {
+            out.fill(0);
+            return Ok(());
+        }
+        let total = width as u64 * out.len() as u64;
+        if self.pos + total > self.len {
+            for o in out.iter_mut() {
+                *o = self.get_bits(width)? as u32;
+            }
+            return Ok(());
+        }
+        let mut acc: u64 = 0;
+        let mut nbits: u32 = 0;
+        let mut byte_idx = (self.pos / 8) as usize;
+        let offset = (self.pos % 8) as u32;
+        if offset != 0 {
+            let avail = 8 - offset;
+            acc = (self.buf[byte_idx] & ((1u16 << avail) - 1) as u8) as u64;
+            nbits = avail;
+            byte_idx += 1;
+        }
+        for o in out.iter_mut() {
+            // Refill whole bytes until a field fits: nbits < 32 before,
+            // so nbits <= 39 after — consumed high bits above `nbits`
+            // are garbage but the extraction mask ignores them.
+            while nbits < width {
+                acc = (acc << 8) | self.buf[byte_idx] as u64;
+                byte_idx += 1;
+                nbits += 8;
+            }
+            nbits -= width;
+            *o = ((acc >> nbits) & ((1u64 << width) - 1)) as u32;
+        }
+        self.pos += total;
+        Ok(())
+    }
+
     pub fn get_f32(&mut self) -> Result<f32> {
         Ok(f32::from_bits(self.get_bits(32)? as u32))
     }
@@ -312,6 +397,93 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn prop_bulk_pack_matches_per_value_put_bits() {
+        run_prop("bitio_bulk_pack", 200, |g| {
+            let width = g.u32_in(1..=32);
+            let n = g.usize_in(0..=300);
+            let misalign = g.u32_in(0..=13);
+            let vals: Vec<u32> =
+                (0..n).map(|_| g.rng().next_u64() as u32 & mask32(width)).collect();
+
+            let mut wa = BitWriter::new();
+            let mut wb = BitWriter::new();
+            wa.put_bits(0x155, misalign.min(9));
+            wb.put_bits(0x155, misalign.min(9));
+            wa.put_bits_bulk(&vals, width);
+            for &v in &vals {
+                wb.put_bits(v as u64, width);
+            }
+            // Trailing odd bits must land identically too.
+            wa.put_bit(true);
+            wb.put_bit(true);
+            let (ba, la) = wa.finish();
+            let (bb, lb) = wb.finish();
+            check(la == lb, format!("bit_len {la} != {lb}"))?;
+            check(ba == bb, format!("bytes differ (w={width}, n={n})"))
+        });
+    }
+
+    #[test]
+    fn prop_bulk_unpack_matches_per_value_get_bits() {
+        run_prop("bitio_bulk_unpack", 200, |g| {
+            let width = g.u32_in(1..=32);
+            let n = g.usize_in(0..=300);
+            let misalign = g.u32_in(0..=13).min(9);
+            let vals: Vec<u32> =
+                (0..n).map(|_| g.rng().next_u64() as u32 & mask32(width)).collect();
+            let mut w = BitWriter::new();
+            w.put_bits(0x0f3, misalign);
+            w.put_bits_bulk(&vals, width);
+            let (bytes, bits) = w.finish();
+
+            let mut r = BitReader::with_bit_len(&bytes, bits);
+            r.get_bits(misalign).map_err(|e| e.to_string())?;
+            let mut got = vec![0u32; n];
+            r.get_bits_bulk(width, &mut got).map_err(|e| e.to_string())?;
+            check(got == vals, format!("values differ (w={width}, n={n})"))?;
+            check(
+                r.bits_remaining() == 0,
+                format!("reader left {} bits", r.bits_remaining()),
+            )
+        });
+    }
+
+    #[test]
+    fn bulk_unpack_underrun_reports_same_error_as_per_value() {
+        let mut w = BitWriter::new();
+        w.put_bits_bulk(&[1, 2, 3], 5);
+        let (bytes, bits) = w.finish();
+        let mut out = [0u32; 4]; // one field too many
+        let mut ra = BitReader::with_bit_len(&bytes, bits);
+        let ea = ra.get_bits_bulk(5, &mut out).unwrap_err().to_string();
+        let mut rb = BitReader::with_bit_len(&bytes, bits);
+        let eb = (0..4)
+            .map(|_| rb.get_bits(5).map(|_| ()))
+            .collect::<Result<Vec<_>>>()
+            .unwrap_err()
+            .to_string();
+        assert_eq!(ea, eb);
+    }
+
+    #[test]
+    fn bulk_zero_width_is_noop() {
+        let mut w = BitWriter::new();
+        w.put_bit(true);
+        w.put_bits_bulk(&[7, 7], 0);
+        assert_eq!(w.bit_len(), 1);
+        let (bytes, bits) = w.finish();
+        let mut r = BitReader::with_bit_len(&bytes, bits);
+        let mut out = [9u32; 2];
+        r.get_bits_bulk(0, &mut out).unwrap();
+        assert_eq!(out, [0, 0]);
+        assert_eq!(r.position(), 0);
+    }
+
+    fn mask32(width: u32) -> u32 {
+        (((1u64 << width) - 1) & u32::MAX as u64) as u32
     }
 
     #[test]

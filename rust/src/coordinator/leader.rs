@@ -5,11 +5,14 @@
 //!
 //! # Streaming aggregation
 //!
-//! Each upload is handed to a decode pool the moment it arrives
-//! ([`decode_upload`] turns it into one exactly-mergeable
-//! [`SlotPartial`] per slot), so decode work overlaps the barrier wait;
-//! at the barrier the partials are merged span by span
-//! ([`merge_decoded`]). A child may equally be an aggregation-tier node
+//! Each upload is handed to a decode pool the moment it arrives — each
+//! pool thread folds it straight into its own per-slot state
+//! ([`SpanAccum::fold_frames`], reusing one scratch accumulator across
+//! frames, zero allocation per frame) — so decode work overlaps the
+//! barrier wait; at the barrier the per-thread states are absorbed.
+//! The batch equivalents ([`decode_upload`] + [`merge_decoded`])
+//! remain as the allocating two-phase path for simulators and tests.
+//! A child may equally be an aggregation-tier node
 //! (see `coordinator::aggregator`) sending a `PartialUpload` — already
 //! decoded and merged for its whole client span — which the barrier
 //! absorbs directly, mixing plain and pre-merged children freely.
@@ -42,7 +45,7 @@ use anyhow::{bail, ensure, Result};
 use super::metrics::{ExperimentMetrics, RoundMetrics};
 use super::transport::{Message, TransportHub, WeightedFrame};
 use crate::protocol::config::ProtocolConfig;
-use crate::protocol::{Protocol, RoundCtx, RoundState, SlotPartial};
+use crate::protocol::{Accumulator, Protocol, RoundCtx, RoundState, SlotPartial};
 
 /// Result of one coordinated round.
 #[derive(Clone, Debug)]
@@ -174,6 +177,34 @@ impl SpanAccum {
         }
         self.uplink_bits += d.uplink_bits;
         self.n_frames += d.n_frames as u64;
+        Ok(())
+    }
+
+    /// Decode one worker upload straight into this accumulator, slot by
+    /// slot, through the carry-save fold and a caller-owned scratch
+    /// accumulator: bit-identical to `fold(&decode_upload(...)?)` (the
+    /// per-slot fold is exact, so streaming frames in cannot change the
+    /// bits) with zero per-frame allocation — the decode pool's hot
+    /// path. On error the round is abandoned, so no rollback is needed.
+    pub fn fold_frames(
+        &mut self,
+        proto: &dyn Protocol,
+        state: &RoundState,
+        frames: &[WeightedFrame],
+        scratch: &mut Accumulator,
+    ) -> Result<()> {
+        while self.slots.len() < frames.len() {
+            self.slots.push(SlotPartial::empty(self.dim));
+        }
+        for (slot, wf) in self.slots.iter_mut().zip(frames) {
+            if wf.frame.bit_len == 0 {
+                slot.add_silent_holder();
+            } else {
+                self.uplink_bits += wf.frame.bit_len;
+                self.n_frames += 1;
+                slot.fold_frame(proto, state, &wf.frame, wf.weight, scratch)?;
+            }
+        }
         Ok(())
     }
 
@@ -523,21 +554,26 @@ pub(crate) fn collect_round(
                             std::thread::Builder::new()
                                 .name(format!("dme-decode-{i}"))
                                 .spawn_scoped(scope, move || {
-                                    // Eager fold: decode, merge into this
-                                    // thread's accumulator, drop the
-                                    // decoded upload — nothing per-child
-                                    // is retained past this iteration.
+                                    // Eager fold: each upload decodes
+                                    // straight into this thread's
+                                    // accumulator through a recycled
+                                    // scratch — nothing per-child is
+                                    // allocated or retained.
                                     let mut acc = SpanAccum::new(internal_dim);
+                                    let mut scratch = proto.new_accumulator();
                                     loop {
                                         // Hold the lock only for the
                                         // dequeue, not the decode, so the
                                         // pool drains in parallel.
                                         let task = task_rx.lock().unwrap().recv();
-                                        let Ok((client, frames)) = task else { break };
+                                        let Ok((_client, frames)) = task else { break };
                                         let t = Instant::now();
-                                        let res =
-                                            decode_upload(proto, round_state, client, &frames)
-                                                .and_then(|d| acc.fold(&d));
+                                        let res = acc.fold_frames(
+                                            proto,
+                                            round_state,
+                                            &frames,
+                                            &mut scratch,
+                                        );
                                         decode_ns.fetch_add(
                                             t.elapsed().as_nanos() as u64,
                                             Ordering::Relaxed,
@@ -1050,6 +1086,46 @@ mod tests {
             );
             let got = main.into_slots();
             assert_eq!(got, want, "split={split} diverged from the batch fold");
+        }
+    }
+
+    #[test]
+    fn fold_frames_matches_decode_upload_fold() {
+        // The decode pool's zero-allocation streaming fold must be
+        // bit-identical to the batch decode-then-fold path, including
+        // silent frames, mixed weights, and sampling protocols.
+        let d = 24;
+        for spec in ["float32", "rotated:k=16", "klevel:k=32,p=0.5"] {
+            let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+            let ctx = RoundCtx::new(1, 9);
+            let state = proto.prepare(&ctx);
+            let dim = proto.internal_dim();
+            let mut enc = Encoder::new(proto.as_ref(), &state);
+            let mut frames = Vec::new();
+            for slot in 0..3u64 {
+                let x: Vec<f32> = (0..d).map(|j| j as f32 * 0.3 - slot as f32).collect();
+                let wf = match enc.encode(slot * 7 + 1, &x) {
+                    Some(frame) => WeightedFrame { frame, weight: 0.5 + slot as f32 },
+                    None => WeightedFrame {
+                        frame: crate::protocol::Frame::new(Vec::new(), 0),
+                        weight: 0.0,
+                    },
+                };
+                frames.push(wf);
+            }
+            // An explicitly silent trailing frame.
+            frames.push(WeightedFrame {
+                frame: crate::protocol::Frame::new(Vec::new(), 0),
+                weight: 0.0,
+            });
+            let mut batch = SpanAccum::new(dim);
+            batch.fold(&decode_upload(proto.as_ref(), &state, 1, &frames).unwrap()).unwrap();
+            let mut streaming = SpanAccum::new(dim);
+            let mut scratch = proto.new_accumulator();
+            streaming.fold_frames(proto.as_ref(), &state, &frames, &mut scratch).unwrap();
+            assert_eq!(streaming.uplink_bits(), batch.uplink_bits(), "spec={spec}");
+            assert_eq!(streaming.n_frames(), batch.n_frames(), "spec={spec}");
+            assert_eq!(streaming.into_slots(), batch.into_slots(), "spec={spec}");
         }
     }
 

@@ -8,7 +8,7 @@ use anyhow::{bail, Context, Result};
 
 use super::transport::{Endpoint, LoopbackEndpoint, Message, WeightedFrame};
 use crate::protocol::config::ProtocolConfig;
-use crate::protocol::{Encoder, Protocol, RoundCtx};
+use crate::protocol::{EncodeScratch, Frame, Protocol, RoundCtx};
 use crate::rng;
 
 /// The application hook: given the broadcast state (`n_vecs × dim`,
@@ -34,12 +34,26 @@ impl Worker {
     /// cannot be combined with a slot index into a collision-free
     /// private-stream id (see [`rng::client_slot_stream_id`]).
     pub fn step(&self, round: u64, dim: u32, broadcast: &[f32]) -> Result<Message> {
+        self.step_with(round, dim, broadcast, &mut EncodeScratch::default())
+    }
+
+    /// [`Worker::step`] with caller-owned encode scratch. The worker
+    /// loop ([`Worker::run`]) keeps one [`EncodeScratch`] alive for its
+    /// whole lifetime, so the rotation workspace, rounding uniforms and
+    /// bin buffers are allocated once per worker — not once per round.
+    /// (Frames still allocate: they are moved into the upload message.)
+    pub fn step_with(
+        &self,
+        round: u64,
+        dim: u32,
+        broadcast: &[f32],
+        scratch: &mut EncodeScratch,
+    ) -> Result<Message> {
         let ctx = RoundCtx::new(round, self.seed);
         // One round session per step: the shared state (the rotation for
         // π_srk) is prepared once and reused across every slot, and the
-        // encoder's scratch buffers are reused across slots too.
+        // scratch buffers are reused across slots (and rounds).
         let state = self.protocol.prepare(&ctx);
-        let mut enc = Encoder::new(self.protocol.as_ref(), &state);
         let updates = (self.update)(broadcast, dim, &self.shard);
         let mut frames = Vec::with_capacity(updates.len());
         for (slot, (vec, weight)) in updates.into_iter().enumerate() {
@@ -49,15 +63,13 @@ impl Worker {
             // is checked: an out-of-range client id is an explicit error,
             // never a silent merge of two clients' randomness streams.
             let stream_id = rng::client_slot_stream_id(self.client_id, slot as u64)?;
-            if let Some(frame) = enc.encode(stream_id, &vec) {
+            let mut frame = Frame::empty();
+            if self.protocol.encode_with(&state, scratch, stream_id, &vec, &mut frame) {
                 frames.push(WeightedFrame { frame, weight });
             } else {
                 // Sampling silenced this slot: an empty frame keeps slot
                 // alignment (weight 0 contributes nothing server-side).
-                frames.push(WeightedFrame {
-                    frame: crate::protocol::Frame::new(Vec::new(), 0),
-                    weight: 0.0,
-                });
+                frames.push(WeightedFrame { frame: Frame::new(Vec::new(), 0), weight: 0.0 });
             }
         }
         Ok(Message::Upload { client: self.client_id, round, frames })
@@ -82,10 +94,13 @@ impl Worker {
     /// loop both transports (and both parents — leader or aggregator)
     /// share.
     pub fn run(&mut self, ep: &mut dyn Endpoint) -> Result<()> {
+        // One encode scratch for the worker's lifetime; encoders resize
+        // it per call, so it survives SpecChange rebuilds unchanged.
+        let mut scratch = EncodeScratch::default();
         loop {
             match ep.recv_msg()? {
                 Message::RoundStart { round, dim, payload } => {
-                    match self.step(round, dim, &payload) {
+                    match self.step_with(round, dim, &payload, &mut scratch) {
                         Ok(reply) => ep.send_msg(reply)?,
                         Err(e) => {
                             // Wake the parent's barrier before dying: an
@@ -168,6 +183,35 @@ mod tests {
                 assert_eq!(frames[0].weight, 1.0);
             }
             _ => panic!("expected Upload"),
+        }
+    }
+
+    #[test]
+    fn step_with_reused_scratch_is_bit_identical() {
+        // The worker loop reuses one scratch across rounds (and spec
+        // changes); its uploads must match a fresh-scratch step exactly.
+        let proto = ProtocolConfig::parse("rotated:k=4", 8).unwrap().build().unwrap();
+        let w = Worker {
+            client_id: 2,
+            shard: vec![vec![0.3; 8], vec![1.7; 8]],
+            protocol: proto,
+            update: mean_update(),
+            seed: 9,
+        };
+        let mut scratch = EncodeScratch::default();
+        for round in 0..3 {
+            let fresh = w.step(round, 8, &[]).unwrap();
+            let reused = w.step_with(round, 8, &[], &mut scratch).unwrap();
+            match (fresh, reused) {
+                (Message::Upload { frames: a, .. }, Message::Upload { frames: b, .. }) => {
+                    assert_eq!(a.len(), b.len());
+                    for (fa, fb) in a.iter().zip(&b) {
+                        assert_eq!(fa.frame.bytes, fb.frame.bytes, "round {round}");
+                        assert_eq!(fa.frame.bit_len, fb.frame.bit_len, "round {round}");
+                    }
+                }
+                _ => panic!("expected Upload"),
+            }
         }
     }
 

@@ -96,10 +96,11 @@ pub mod report;
 pub mod rng;
 pub mod rotation;
 pub mod runtime;
+pub mod simd;
 pub mod stats;
 pub mod testkit;
 
 pub use protocol::{
-    run_round, run_round_par, Accumulator, Decoder, EncodeScratch, Encoder, Frame, Protocol,
-    RoundCtx, RoundState, SlotPartial,
+    run_round, run_round_par, run_round_with_scratch, Accumulator, Decoder, EncodeScratch,
+    Encoder, Frame, Protocol, RoundCtx, RoundState, SlotPartial,
 };

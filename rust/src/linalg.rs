@@ -77,6 +77,44 @@ pub fn min_max(x: &[f32]) -> (f32, f32) {
     (lo, hi)
 }
 
+/// Single-pass per-vector statistics: everything the quantizer's grid
+/// rules need from one scan of the data.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct VectorStats {
+    pub lo: f32,
+    pub hi: f32,
+    /// Squared ℓ₂ norm, accumulated in f64 exactly like [`norm_sq`].
+    pub norm_sq: f64,
+}
+
+/// Compute min, max, and squared norm in **one pass** over `x` — fused
+/// so `grid_params(Span::Norm)` (and the calibration probes that sit on
+/// it) scan the input once instead of twice. Bit-identical to calling
+/// [`min_max`] and [`norm_sq`] separately: the comparisons and the f64
+/// accumulation run in the same element order (the extra compare against
+/// `x[0]` itself is a no-op for every value, including NaN and ±0).
+/// The min/max lattice is deliberately left scalar in both dispatch
+/// paths: a lane-parallel `min`/`max` reduction can return the *other*
+/// zero when ±0.0 tie — a different `xmin` bit pattern in the frame
+/// header — so the sequential order is part of the wire contract.
+/// Panics on empty input.
+pub fn vector_stats(x: &[f32]) -> VectorStats {
+    assert!(!x.is_empty(), "vector_stats of empty slice");
+    let mut lo = x[0];
+    let mut hi = x[0];
+    let mut nsq = 0.0f64;
+    for &v in x {
+        if v < lo {
+            lo = v;
+        }
+        if v > hi {
+            hi = v;
+        }
+        nsq += v as f64 * v as f64;
+    }
+    VectorStats { lo, hi, norm_sq: nsq }
+}
+
 /// Index of the minimum value (first occurrence). Panics on empty input.
 pub fn argmin(x: &[f64]) -> usize {
     assert!(!x.is_empty(), "argmin of empty slice");
@@ -159,6 +197,32 @@ mod tests {
         assert_eq!(min_max(&[3.0, -1.0, 2.0]), (-1.0, 3.0));
         assert_eq!(argmin(&[3.0, -1.0, 2.0]), 1);
         assert_eq!(argmin(&[1.0, 1.0]), 0);
+    }
+
+    #[test]
+    fn vector_stats_matches_separate_passes() {
+        let mut rng = crate::rng::Pcg64::new(41);
+        for d in [1usize, 2, 7, 8, 9, 255, 256, 1000] {
+            let mut x = vec![0.0f32; d];
+            rng.fill_gaussian_f32(&mut x);
+            // Sprinkle the awkward values the quantizer must survive.
+            if d >= 4 {
+                x[0] = -0.0;
+                x[1] = 0.0;
+                x[2] = f32::from_bits(1); // smallest subnormal
+                x[3] = -f32::MIN_POSITIVE;
+            }
+            let st = vector_stats(&x);
+            let (lo, hi) = min_max(&x);
+            assert_eq!(st.lo.to_bits(), lo.to_bits(), "d={d}");
+            assert_eq!(st.hi.to_bits(), hi.to_bits(), "d={d}");
+            assert_eq!(st.norm_sq.to_bits(), norm_sq(&x).to_bits(), "d={d}");
+        }
+        // ±0 tie-break: the first-seen zero wins in both.
+        let z = [0.0f32, -0.0];
+        let st = vector_stats(&z);
+        assert_eq!(st.lo.to_bits(), min_max(&z).0.to_bits());
+        assert_eq!(st.hi.to_bits(), min_max(&z).1.to_bits());
     }
 
     #[test]

@@ -36,6 +36,25 @@
 //! sign byte plus the window of limbs that differ from the sign
 //! extension: `sign u8 | start u8 | len u8 | len × u64 (LE)`. Typical
 //! cost is 11–27 bytes per coordinate instead of the dense 83.
+//!
+//! # Carry-save fast path
+//!
+//! The dense representation makes every add touch up to ten limbs and
+//! costs 80 bytes per coordinate even though a same-scale f32×f32
+//! product occupies at most 117 consecutive bits. [`CarryVec`] exploits
+//! this: each coordinate keeps a 16-byte *window* — a signed 124-bit
+//! value `W` anchored at limb base `b`, representing `W · 2^(64b)`
+//! fixed-point units — and contributions whose bits land inside the
+//! current window are absorbed with one `i128` add. Only when a
+//! contribution's base differs or the window saturates does the window
+//! *flush* into a lazily-allocated dense [`FixedAcc`] spill lane (the
+//! deferred carry), after which accumulation restarts fresh. Because
+//! `value(j) = window(j) + spill(j)` holds exactly at every step and
+//! 640-bit integer addition is associative, the canonical value
+//! recovered by [`CarryVec::canonical`] is bit-identical to a dense
+//! [`FixedAcc`] fold of the same contributions in any order — carries
+//! are *deferred*, never lost, so the determinism contract and the wire
+//! format are completely unchanged.
 
 use anyhow::{bail, ensure, Result};
 
@@ -314,6 +333,254 @@ impl FixedAcc {
     }
 }
 
+/// Low 60 bits of a window's `hi` word (bits 60..64 hold the limb base).
+const MASK60: u64 = (1 << 60) - 1;
+
+/// One coordinate's carry-save window: a signed 124-bit accumulator `W`
+/// anchored at limb base `b ∈ [0, 8]`, representing `W · 2^(64b)` units
+/// of 2^LSB_EXP. `lo` holds bits 0..64 of `W`, `hi` bits 64..124 plus
+/// the base in bits 60..64 of the high word.
+#[derive(Clone, Copy, Default)]
+struct Window {
+    lo: u64,
+    hi: u64,
+}
+
+impl Window {
+    /// True when `W == 0` (the base bits are then meaningless).
+    #[inline]
+    fn is_zero(self) -> bool {
+        self.lo | (self.hi & MASK60) == 0
+    }
+
+    #[inline]
+    fn base(self) -> usize {
+        (self.hi >> 60) as usize
+    }
+
+    /// Sign-extend the 124-bit window to i128.
+    #[inline]
+    fn value(self) -> i128 {
+        (((((self.hi & MASK60) as u128) << 64) | self.lo as u128) as i128) << 4 >> 4
+    }
+
+    /// Pack a window value that is known to fit 124 signed bits.
+    #[inline]
+    fn pack(base: usize, w: i128) -> Window {
+        debug_assert!(base + 1 < LIMBS);
+        debug_assert!(w >> 123 == 0 || w >> 123 == -1, "window value out of range");
+        Window { lo: w as u64, hi: (((w >> 64) as u64) & MASK60) | ((base as u64) << 60) }
+    }
+}
+
+/// Carry-save vector of exact accumulators — the hot-path form of one
+/// [`FixedAcc`] per coordinate.
+///
+/// Each coordinate holds a 16-byte [`Window`] plus a share of a
+/// lazily-allocated dense spill lane; `value(j) = window(j) + spill(j)`
+/// exactly. Same-scale streams (the common case: clients contribute
+/// values of comparable magnitude per coordinate) never allocate the
+/// spill and each add costs one f64 decompose plus one `i128` add.
+/// [`CarryVec::canonical`] resolves the deferred carries, yielding a
+/// value bit-identical to the dense fold for any grouping or order of
+/// the same contributions — see the module docs.
+#[derive(Clone)]
+pub struct CarryVec {
+    win: Vec<Window>,
+    spill: Option<Box<[FixedAcc]>>,
+}
+
+impl CarryVec {
+    pub fn new(dim: usize) -> Self {
+        CarryVec { win: vec![Window::default(); dim], spill: None }
+    }
+
+    pub fn len(&self) -> usize {
+        self.win.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.win.is_empty()
+    }
+
+    /// Whether the spill lane has been materialized (diagnostics/tests).
+    pub fn spilled(&self) -> bool {
+        self.spill.is_some()
+    }
+
+    /// Expand a window into its dense equivalent.
+    fn expand(base: usize, w: i128) -> FixedAcc {
+        let fill = if w < 0 { u64::MAX } else { 0 };
+        let mut limbs = [fill; LIMBS];
+        limbs[..base].fill(0);
+        limbs[base] = w as u64;
+        // i128 >> is arithmetic, so the high limb sign-extends correctly.
+        limbs[base + 1] = (w >> 64) as u64;
+        FixedAcc { limbs }
+    }
+
+    /// Express a dense value as a window when it fits: the low 124
+    /// signed bits of the limb pair at the lowest nonzero limb must
+    /// cover the whole value. Returns `None` (→ spill path) otherwise.
+    fn window_of(v: &FixedAcc) -> Option<(usize, i128)> {
+        let limbs = &v.limbs;
+        let lb = limbs.iter().position(|&l| l != 0)?;
+        if lb + 1 >= LIMBS {
+            return None;
+        }
+        let neg = limbs[LIMBS - 1] >> 63 == 1;
+        let fill = if neg { u64::MAX } else { 0 };
+        if limbs[lb + 2..].iter().any(|&l| l != fill) {
+            return None;
+        }
+        let pair = ((limbs[lb + 1] as u128) << 64) | limbs[lb] as u128;
+        let t = (pair >> 123) as u32;
+        // The top five bits must be a pure sign extension of bit 123 AND
+        // agree with the value's true sign: a negative value whose pair
+        // happens to look non-negative (all fill limbs above) must not be
+        // misread as a small positive window.
+        if (t != 0 && t != 0x1f) || ((t == 0x1f) != neg) {
+            return None;
+        }
+        Some((lb, pair as i128))
+    }
+
+    #[inline]
+    fn add_window(&mut self, j: usize, base: usize, c: i128) {
+        let w = self.win[j];
+        if w.is_zero() {
+            self.win[j] = Window::pack(base, c);
+            return;
+        }
+        if w.base() == base {
+            // |W| < 2^123 and |c| ≤ 2^123, so the i128 add cannot wrap.
+            let w2 = w.value() + c;
+            let t = w2 >> 123;
+            if t == 0 || t == -1 {
+                self.win[j] = Window::pack(base, w2);
+                return;
+            }
+        }
+        self.flush(j, w);
+        self.win[j] = Window::pack(base, c);
+    }
+
+    /// Defer the live window's carries into the dense spill lane.
+    #[cold]
+    fn flush(&mut self, j: usize, w: Window) {
+        let n = self.win.len();
+        let spill =
+            self.spill.get_or_insert_with(|| vec![FixedAcc::zero(); n].into_boxed_slice());
+        spill[j].add(&Self::expand(w.base(), w.value()));
+    }
+
+    /// Add the exact product `a · b` to coordinate `j`. The caller must
+    /// have validated both factors finite ([`FixedAcc::add_product`]
+    /// semantics without the per-add branch); the decomposition below is
+    /// identical to [`FixedAcc::add_f64`].
+    #[inline]
+    pub fn add_product_unchecked(&mut self, j: usize, a: f32, b: f32) {
+        let p = a as f64 * b as f64;
+        if p == 0.0 {
+            return;
+        }
+        let bits = p.to_bits();
+        let neg = bits >> 63 == 1;
+        let e = ((bits >> 52) & 0x7ff) as i64;
+        let frac = bits & ((1u64 << 52) - 1);
+        debug_assert!(e != 0x7ff, "non-finite product reached the unchecked fold");
+        let (mut m, pexp) = if e == 0 { (frac, -1074i64) } else { ((1u64 << 52) | frac, e - 1075) };
+        let mut sh = pexp - LSB_EXP;
+        if sh < 0 {
+            debug_assert!((-sh) < 64 && m & ((1u64 << (-sh)) - 1) == 0);
+            m >>= (-sh) as u32;
+            sh = 0;
+        }
+        let limb = (sh / 64) as usize;
+        let off = (sh % 64) as u32;
+        let chunk = (m as u128) << off; // ≤ 53 + 63 = 116 bits
+        // Branchless conditional negate: s is 0 or -1.
+        let s = -(neg as i128);
+        let c = (chunk as i128 ^ s) - s;
+        self.add_window(j, limb, c);
+    }
+
+    /// Add a dense value (e.g. parsed off the wire) to coordinate `j`.
+    pub fn add_fixed(&mut self, j: usize, v: &FixedAcc) {
+        if v.is_zero() {
+            return;
+        }
+        match Self::window_of(v) {
+            Some((base, w)) => self.add_window(j, base, w),
+            None => {
+                let n = self.win.len();
+                let spill =
+                    self.spill.get_or_insert_with(|| vec![FixedAcc::zero(); n].into_boxed_slice());
+                spill[j].add(v);
+            }
+        }
+    }
+
+    /// Exact coordinate-wise merge. Windows merge through the same
+    /// absorb-or-flush path as contributions; spill lanes add densely.
+    pub fn merge(&mut self, other: &CarryVec) {
+        assert_eq!(self.win.len(), other.win.len(), "CarryVec length mismatch");
+        for j in 0..other.win.len() {
+            let w = other.win[j];
+            if !w.is_zero() {
+                self.add_window(j, w.base(), w.value());
+            }
+        }
+        if let Some(os) = &other.spill {
+            let n = self.win.len();
+            let spill =
+                self.spill.get_or_insert_with(|| vec![FixedAcc::zero(); n].into_boxed_slice());
+            for (s, o) in spill.iter_mut().zip(os.iter()) {
+                s.add(o);
+            }
+        }
+    }
+
+    /// Resolve coordinate `j` to its canonical dense value — the value a
+    /// plain [`FixedAcc`] fold of the same contributions would hold.
+    pub fn canonical(&self, j: usize) -> FixedAcc {
+        let w = self.win[j];
+        let mut acc =
+            if w.is_zero() { FixedAcc::zero() } else { Self::expand(w.base(), w.value()) };
+        if let Some(s) = &self.spill {
+            acc.add(&s[j]);
+        }
+        acc
+    }
+
+    /// Canonical values for all coordinates, in order.
+    pub fn iter_canonical(&self) -> impl Iterator<Item = FixedAcc> + '_ {
+        (0..self.win.len()).map(|j| self.canonical(j))
+    }
+
+    /// True when every coordinate's canonical value is zero. (Window and
+    /// spill may be individually nonzero yet cancel exactly.)
+    pub fn is_all_zero(&self) -> bool {
+        (0..self.win.len()).all(|j| self.canonical(j).is_zero())
+    }
+}
+
+impl PartialEq for CarryVec {
+    /// Canonical-value equality: two accumulators are equal when they
+    /// represent the same exact sums, regardless of how the carries are
+    /// currently split between window and spill.
+    fn eq(&self, other: &Self) -> bool {
+        self.win.len() == other.win.len()
+            && (0..self.win.len()).all(|j| self.canonical(j) == other.canonical(j))
+    }
+}
+
+impl std::fmt::Debug for CarryVec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "CarryVec(dim={}, spilled={})", self.win.len(), self.spill.is_some())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -456,6 +723,154 @@ mod tests {
             check(used == bytes.len(), "partial consume")?;
             check(back == acc, "roundtrip diverged")
         });
+    }
+
+    #[test]
+    fn prop_carryvec_matches_dense_oracle() {
+        // The carry-save fast path must be bit-identical to the dense
+        // fold for every stream, including scale mixes that force window
+        // flushes and spill allocation.
+        run_prop("carryvec_oracle", 40, |g| {
+            let dim = g.usize_in(1..=6);
+            let mut cv = CarryVec::new(dim);
+            let mut oracle = vec![FixedAcc::zero(); dim];
+            let n = g.usize_in(1..=120);
+            for _ in 0..n {
+                let j = g.usize_in(0..=dim - 1);
+                let scale = 2.0f32.powi(g.u32_in(0..=220) as i32 - 110);
+                let x = g.f32_in(-4.0, 4.0) * scale;
+                let w = g.f32_in(-3.0, 3.0);
+                cv.add_product_unchecked(j, x, w);
+                oracle[j].add_product(x, w).unwrap();
+            }
+            for (j, want) in oracle.iter().enumerate() {
+                check(cv.canonical(j) == *want, format!("coord {j} diverged"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_carryvec_merge_matches_dense() {
+        // Random partitions merged in a random tree must equal the flat
+        // dense fold — the SlotPartial topology-independence property,
+        // exercised at the accumulator level.
+        run_prop("carryvec_merge", 30, |g| {
+            let dim = g.usize_in(1..=4);
+            let nparts = g.usize_in(2..=8);
+            let mut oracle = vec![FixedAcc::zero(); dim];
+            let mut parts = Vec::with_capacity(nparts);
+            for _ in 0..nparts {
+                let mut cv = CarryVec::new(dim);
+                for _ in 0..g.usize_in(0..=40) {
+                    let j = g.usize_in(0..=dim - 1);
+                    let scale = 2.0f32.powi(g.u32_in(0..=160) as i32 - 80);
+                    let x = g.f32_in(-4.0, 4.0) * scale;
+                    let w = g.f32_in(-2.0, 2.0);
+                    cv.add_product_unchecked(j, x, w);
+                    oracle[j].add_product(x, w).unwrap();
+                }
+                parts.push(cv);
+            }
+            while parts.len() > 1 {
+                let i = (g.rng().next_u64() % (parts.len() as u64 - 1)) as usize;
+                let right = parts.remove(i + 1);
+                parts[i].merge(&right);
+            }
+            for (j, want) in oracle.iter().enumerate() {
+                check(parts[0].canonical(j) == *want, format!("coord {j} diverged"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_carryvec_add_fixed_matches_dense() {
+        // Wire-ingest path: dense values fed through add_fixed (window
+        // form when they fit, spill otherwise) must match dense adds.
+        run_prop("carryvec_add_fixed", 40, |g| {
+            let mut cv = CarryVec::new(1);
+            let mut oracle = FixedAcc::zero();
+            for _ in 0..g.usize_in(1..=20) {
+                let mut v = FixedAcc::zero();
+                for _ in 0..g.usize_in(0..=6) {
+                    let scale = 2.0f32.powi(g.u32_in(0..=240) as i32 - 120);
+                    v.add_product(g.f32_in(-8.0, 8.0) * scale, g.f32_in(-2.0, 2.0)).unwrap();
+                }
+                cv.add_fixed(0, &v);
+                oracle.add(&v);
+            }
+            check(cv.canonical(0) == oracle, "add_fixed diverged")
+        });
+    }
+
+    #[test]
+    fn carryvec_window_overflow_flushes_exactly() {
+        // Enough same-sign max-magnitude products overflow the 124-bit
+        // window; the flush must defer the carries without losing a bit.
+        let mut cv = CarryVec::new(1);
+        let mut oracle = FixedAcc::zero();
+        // Each product contributes ≈2^106 window units at base 7, so the
+        // signed 124-bit window saturates after ≈2^17 same-sign adds.
+        for _ in 0..150_000 {
+            cv.add_product_unchecked(0, f32::MAX, f32::MAX);
+            oracle.add_product(f32::MAX, f32::MAX).unwrap();
+        }
+        assert!(cv.spilled(), "expected a window overflow flush");
+        assert!(cv.canonical(0) == oracle);
+        assert_eq!(cv.canonical(0).to_f64(), oracle.to_f64());
+    }
+
+    #[test]
+    fn carryvec_scale_jumps_spill_and_stay_exact() {
+        // Alternating distant scales forces a flush on nearly every add —
+        // the worst case for carry-save — and must still be exact.
+        let tiny = f32::from_bits(1);
+        let mut cv = CarryVec::new(1);
+        let mut oracle = FixedAcc::zero();
+        for i in 0..50 {
+            let (x, w) = if i % 2 == 0 { (1.5f32, 2.0f32) } else { (tiny, tiny) };
+            cv.add_product_unchecked(0, x, w);
+            oracle.add_product(x, w).unwrap();
+        }
+        assert!(cv.spilled());
+        assert!(cv.canonical(0) == oracle);
+    }
+
+    #[test]
+    fn carryvec_cancellation_reports_all_zero() {
+        // Window and spill may be individually nonzero yet cancel: the
+        // canonical view (and is_all_zero) must see through the split.
+        let tiny = f32::from_bits(1);
+        let mut cv = CarryVec::new(2);
+        cv.add_product_unchecked(0, 1.0, 1.0);
+        cv.add_product_unchecked(0, tiny, tiny); // flush 1.0 to spill
+        cv.add_product_unchecked(0, -tiny, tiny);
+        cv.add_product_unchecked(0, -1.0, 1.0);
+        assert!(cv.spilled());
+        assert!(cv.is_all_zero());
+        assert!(cv.canonical(0).is_zero());
+        assert_eq!(cv, CarryVec::new(2));
+    }
+
+    #[test]
+    fn carryvec_add_fixed_sign_consistency_edge() {
+        // Value 5 − 2^128 units: limbs [5, 0, MAX…]. The limb pair at the
+        // lowest nonzero limb reads as small-positive even though the
+        // value is negative — window_of must refuse it (spill path) or
+        // the sign flips. This is the adversarial case for the window
+        // parser.
+        let tiny = f32::from_bits(1); // 1 unit = tiny·tiny
+        let mut v = FixedAcc::zero();
+        for _ in 0..5 {
+            v.add_product(tiny, tiny).unwrap();
+        }
+        // −2^128 units = −2^-170 = −2^-85 · 2^-85.
+        v.add_product(-(2.0f32.powi(-85)), 2.0f32.powi(-85)).unwrap();
+        let mut cv = CarryVec::new(1);
+        cv.add_fixed(0, &v);
+        assert!(cv.canonical(0) == v);
+        assert_eq!(cv.canonical(0).to_f64(), v.to_f64());
     }
 
     #[test]

@@ -11,7 +11,7 @@
 
 use std::sync::Arc;
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
 use super::quantizer::Span;
 use super::{Accumulator, EncodeScratch, Frame, Protocol, RoundState};
@@ -86,9 +86,7 @@ impl KLevelProtocol {
         let mut w = frame.writer();
         header.put(&mut w, xmin);
         header.put(&mut w, s);
-        for &b in bins {
-            w.put_bits(b as u64, bits_per_coord);
-        }
+        w.put_bits_bulk(bins, bits_per_coord);
         frame.store(w);
     }
 
@@ -110,11 +108,24 @@ impl KLevelProtocol {
             r.bits_remaining(),
             dim as u64 * bits_per_coord as u64
         );
-        let w = s / (k - 1) as f32;
-        for a in acc.iter_mut().take(dim) {
-            let b = r.get_bits(bits_per_coord)? as u32;
-            ensure!(b < k, "bin index {b} out of range (k={k})");
-            *a += xmin + b as f32 * w;
+        // Chunked bulk unpack: fields land in a stack buffer, the range
+        // check runs over the whole chunk (one predictable branch per 256
+        // coords instead of one per coord), and the dequantize-accumulate
+        // goes through the dispatched vector kernel. Bit-identical to the
+        // per-coordinate loop, including which invalid bin is reported.
+        let n = dim.min(acc.len());
+        let mut bins = [0u32; 256];
+        let mut done = 0;
+        while done < n {
+            let take = (n - done).min(256);
+            let chunk = &mut bins[..take];
+            r.get_bits_bulk(bits_per_coord, chunk)?;
+            if chunk.iter().any(|&b| b >= k) {
+                let b = chunk.iter().copied().find(|&b| b >= k).unwrap();
+                bail!("bin index {b} out of range (k={k})");
+            }
+            super::quantizer::dequantize_add(chunk, xmin, s, k, &mut acc[done..done + take]);
+            done += take;
         }
         Ok(())
     }

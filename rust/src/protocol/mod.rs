@@ -516,8 +516,11 @@ impl<'a> Decoder<'a> {
 #[derive(Clone, Debug, PartialEq)]
 pub struct SlotPartial {
     /// Exact per-coordinate sums of `weight × value`, in the protocol's
-    /// internal dimension.
-    sums: Vec<exact::FixedAcc>,
+    /// internal dimension, kept in carry-save form ([`exact::CarryVec`]):
+    /// same-scale contributions cost one 16-byte window add per
+    /// coordinate, and the canonical dense value — hence the wire format
+    /// and the bit-identical-for-any-fold-order contract — is unchanged.
+    sums: exact::CarryVec,
     /// Exact sum of the non-silent frames' weights.
     weight: exact::FixedAcc,
     /// Non-silent frames folded in.
@@ -542,7 +545,7 @@ impl SlotPartial {
     /// (contributes nothing, holds nothing).
     pub fn empty(dim: usize) -> Self {
         SlotPartial {
-            sums: vec![exact::FixedAcc::zero(); dim],
+            sums: exact::CarryVec::new(dim),
             weight: exact::FixedAcc::zero(),
             frames: 0,
             holders: 0,
@@ -580,28 +583,65 @@ impl SlotPartial {
     ) -> Result<Self> {
         let mut acc = proto.new_accumulator();
         proto.accumulate_with(state, frame, &mut acc)?;
-        Self::from_decoded(&acc.sum, weight, acc.frames as u64)
+        let mut p = Self::empty(acc.sum.len());
+        p.add_decoded(&acc.sum, weight, acc.frames as u64)?;
+        Ok(p)
     }
 
     /// Build a partial directly from already-decoded values (used by
     /// tests and benches; [`Self::decode`] is the real pipeline).
     pub fn from_decoded(values: &[f32], weight: f32, acc_frames: u64) -> Result<Self> {
-        let mut sums = Vec::with_capacity(values.len());
+        let mut p = Self::empty(values.len());
+        p.add_decoded(values, weight, acc_frames)?;
+        Ok(p)
+    }
+
+    /// Fold one already-decoded frame into this partial through the
+    /// carry-save fast path — bit-identical to `merge(&from_decoded(...))`
+    /// with no per-frame allocation. All contributions are validated
+    /// finite *before* any state mutates, so a rejected frame leaves the
+    /// partial exactly as it was.
+    pub fn add_decoded(&mut self, values: &[f32], weight: f32, acc_frames: u64) -> Result<()> {
+        ensure!(
+            values.len() == self.sums.len(),
+            "SlotPartial dimension mismatch: {} vs {}",
+            self.sums.len(),
+            values.len()
+        );
         for &v in values {
-            let mut fx = exact::FixedAcc::zero();
-            fx.add_product(v, weight)?;
-            sums.push(fx);
+            ensure!(
+                v.is_finite() && weight.is_finite(),
+                "non-finite contribution {v} × {weight} cannot be aggregated exactly"
+            );
         }
-        let mut wacc = exact::FixedAcc::zero();
-        wacc.add_product(weight, 1.0)?;
-        Ok(SlotPartial {
-            sums,
-            weight: wacc,
-            frames: 1,
-            holders: 1,
-            acc_frames,
-            uniform: weight == 1.0,
-        })
+        // Fails (and therefore commits nothing) on a non-finite weight
+        // even when `values` is empty.
+        self.weight.add_product(weight, 1.0)?;
+        for (j, &v) in values.iter().enumerate() {
+            self.sums.add_product_unchecked(j, v, weight);
+        }
+        self.frames += 1;
+        self.holders += 1;
+        self.acc_frames += acc_frames;
+        self.uniform &= weight == 1.0;
+        Ok(())
+    }
+
+    /// Decode one frame straight into this partial, reusing a
+    /// caller-owned scratch accumulator: bit-identical to
+    /// `merge(&SlotPartial::decode(...))` with zero per-frame allocation.
+    /// A decode or validation error leaves the partial untouched.
+    pub fn fold_frame(
+        &mut self,
+        proto: &dyn Protocol,
+        state: &RoundState,
+        frame: &Frame,
+        weight: f32,
+        scratch: &mut Accumulator,
+    ) -> Result<()> {
+        scratch.reset();
+        proto.accumulate_with(state, frame, scratch)?;
+        self.add_decoded(&scratch.sum, weight, scratch.frames as u64)
     }
 
     /// Internal (protocol-space) dimension of this partial.
@@ -628,9 +668,7 @@ impl SlotPartial {
             self.sums.len(),
             other.sums.len()
         );
-        for (a, b) in self.sums.iter_mut().zip(&other.sums) {
-            a.add(b);
-        }
+        self.sums.merge(&other.sums);
         self.weight.add(&other.weight);
         self.frames += other.frames;
         self.holders += other.holders;
@@ -648,7 +686,7 @@ impl SlotPartial {
         let mut acc = Accumulator::new(self.sums.len());
         acc.frames = self.acc_frames as usize;
         if self.uniform {
-            for (a, s) in acc.sum.iter_mut().zip(&self.sums) {
+            for (a, s) in acc.sum.iter_mut().zip(self.sums.iter_canonical()) {
                 *a = s.to_f64() as f32;
             }
             let mean = proto.finish_with(state, acc, self.holders as usize);
@@ -660,7 +698,7 @@ impl SlotPartial {
             // apply on top.
             let w = self.weight.to_f64();
             let inv = if w > 0.0 { 1.0 / w } else { 0.0 };
-            for (a, s) in acc.sum.iter_mut().zip(&self.sums) {
+            for (a, s) in acc.sum.iter_mut().zip(self.sums.iter_canonical()) {
                 *a = (s.to_f64() * inv) as f32;
             }
             let mean = proto.finish_scaled_with(state, acc, 1.0);
@@ -674,7 +712,7 @@ impl SlotPartial {
         2 + 4
             + 8 * 3
             + self.weight.wire_len()
-            + self.sums.iter().map(|s| s.wire_len()).sum::<usize>()
+            + self.sums.iter_canonical().map(|s| s.wire_len()).sum::<usize>()
     }
 
     /// Versioned serialization: `version u8 | flags u8 | dim u32 |
@@ -690,7 +728,7 @@ impl SlotPartial {
         out.extend_from_slice(&self.holders.to_le_bytes());
         out.extend_from_slice(&self.acc_frames.to_le_bytes());
         self.weight.to_bytes_into(&mut out);
-        for s in &self.sums {
+        for s in self.sums.iter_canonical() {
             s.to_bytes_into(&mut out);
         }
         Ok(out)
@@ -724,14 +762,14 @@ impl SlotPartial {
         );
         let (weight, used) = exact::FixedAcc::from_slice(&buf[pos..])?;
         pos += used;
-        // dim is attacker-controlled and an in-memory FixedAcc is ~27x
-        // its minimal 3-byte wire form: reserve at most a few multiples
-        // of the received payload and let growth track parsed bytes.
-        let mut sums = Vec::with_capacity(dim.min(1 + buf.len() / 16));
-        for _ in 0..dim {
+        // dim is attacker-controlled, but the ≥3-bytes-per-accumulator
+        // guard above bounds the 16·dim window allocation to a small
+        // multiple of the received payload.
+        let mut sums = exact::CarryVec::new(dim);
+        for j in 0..dim {
             let (s, used) = exact::FixedAcc::from_slice(&buf[pos..])?;
             pos += used;
-            sums.push(s);
+            sums.add_fixed(j, &s);
         }
         ensure!(pos == buf.len(), "trailing bytes in SlotPartial");
         let p = SlotPartial { sums, weight, frames, holders, acc_frames, uniform };
@@ -753,7 +791,7 @@ impl SlotPartial {
         );
         if self.frames == 0 {
             ensure!(
-                self.weight.is_zero() && self.sums.iter().all(|s| s.is_zero()),
+                self.weight.is_zero() && self.sums.is_all_zero(),
                 "SlotPartial carries contributions but claims zero frames"
             );
         }
@@ -785,7 +823,66 @@ pub fn run_round(
     ctx: &RoundCtx,
     xs: &[Vec<f32>],
 ) -> Result<(Vec<f32>, u64)> {
-    run_round_par(proto, ctx, xs, 1)
+    let mut scratch = EncodeScratch::default();
+    let mut frame = Frame::empty();
+    run_round_with_scratch(proto, ctx, xs, &mut scratch, &mut frame)
+}
+
+/// Encode + accumulate one contiguous client shard into its own partial
+/// accumulator — the unit of work both round drivers share.
+fn run_round_shard(
+    proto: &dyn Protocol,
+    state: &RoundState,
+    xs: &[Vec<f32>],
+    shard_len: usize,
+    sidx: usize,
+    scratch: &mut EncodeScratch,
+    frame: &mut Frame,
+) -> Result<(Accumulator, u64)> {
+    let base = sidx * shard_len;
+    let chunk = &xs[base..(base + shard_len).min(xs.len())];
+    let mut acc = proto.new_accumulator();
+    let mut bits = 0u64;
+    for (j, x) in chunk.iter().enumerate() {
+        if proto.encode_with(state, scratch, (base + j) as u64, x, frame) {
+            bits += frame.bit_len;
+            proto.accumulate_with(state, frame, &mut acc)?;
+        }
+    }
+    Ok((acc, bits))
+}
+
+/// [`run_round`] with caller-owned encode scratch and frame buffers,
+/// reused across calls. The rate-calibration probe path drives hundreds
+/// of spec fits × trials through this, so the per-round scratch (the
+/// rotation workspace, rounding uniforms, bin buffers, the frame's
+/// bytes) is allocated once per `Calibration` instead of once per probe
+/// round. Bit-identical to [`run_round`]: same shard geometry, same
+/// client-id-order merge.
+pub fn run_round_with_scratch(
+    proto: &dyn Protocol,
+    ctx: &RoundCtx,
+    xs: &[Vec<f32>],
+    scratch: &mut EncodeScratch,
+    frame: &mut Frame,
+) -> Result<(Vec<f32>, u64)> {
+    let state = proto.prepare(ctx);
+    let n = xs.len();
+    if n == 0 {
+        return Ok((proto.finish_with(&state, proto.new_accumulator(), 0), 0));
+    }
+    let shard_len = n.div_ceil(ROUND_SHARDS).max(1);
+    let n_shards = n.div_ceil(shard_len);
+    let (mut acc, mut bits) = run_round_shard(proto, &state, xs, shard_len, 0, scratch, frame)?;
+    for sidx in 1..n_shards {
+        let (part, b) = run_round_shard(proto, &state, xs, shard_len, sidx, scratch, frame)?;
+        for (a, v) in acc.sum.iter_mut().zip(part.sum) {
+            *a += v;
+        }
+        acc.frames += part.frames;
+        bits += b;
+    }
+    Ok((proto.finish_with(&state, acc, n), bits))
 }
 
 /// Parallel round engine: prepare once, shard clients across `threads`
@@ -801,41 +898,29 @@ pub fn run_round_par(
     xs: &[Vec<f32>],
     threads: usize,
 ) -> Result<(Vec<f32>, u64)> {
-    let state = proto.prepare(ctx);
     let n = xs.len();
     if n == 0 {
-        return Ok((proto.finish_with(&state, proto.new_accumulator(), 0), 0));
+        return run_round(proto, ctx, xs);
     }
     // Contiguous client shards; the geometry is a function of n alone.
     let shard_len = n.div_ceil(ROUND_SHARDS).max(1);
     let n_shards = n.div_ceil(shard_len);
     let threads = threads.clamp(1, n_shards);
+    if threads == 1 {
+        return run_round(proto, ctx, xs);
+    }
+    let state = proto.prepare(ctx);
 
     // Encode + accumulate one shard into its own partial accumulator.
     let run_shard = |sidx: usize,
                      scratch: &mut EncodeScratch,
                      frame: &mut Frame|
      -> Result<(usize, Accumulator, u64)> {
-        let base = sidx * shard_len;
-        let chunk = &xs[base..(base + shard_len).min(n)];
-        let mut acc = proto.new_accumulator();
-        let mut bits = 0u64;
-        for (j, x) in chunk.iter().enumerate() {
-            if proto.encode_with(&state, scratch, (base + j) as u64, x, frame) {
-                bits += frame.bit_len;
-                proto.accumulate_with(&state, frame, &mut acc)?;
-            }
-        }
-        Ok((sidx, acc, bits))
+        run_round_shard(proto, &state, xs, shard_len, sidx, scratch, frame)
+            .map(|(acc, bits)| (sidx, acc, bits))
     };
 
-    let mut parts: Vec<(usize, Accumulator, u64)> = if threads == 1 {
-        let mut scratch = EncodeScratch::default();
-        let mut frame = Frame::empty();
-        (0..n_shards)
-            .map(|s| run_shard(s, &mut scratch, &mut frame))
-            .collect::<Result<_>>()?
-    } else {
+    let mut parts: Vec<(usize, Accumulator, u64)> = {
         let next = std::sync::atomic::AtomicUsize::new(0);
         let run_shard = &run_shard;
         let next = &next;
@@ -942,6 +1027,39 @@ mod tests {
                 assert_eq!(frame.bytes, oneshot.bytes, "spec={spec} client {i}");
                 assert_eq!(frame.bit_len, oneshot.bit_len, "spec={spec} client {i}");
             }
+        }
+    }
+
+    #[test]
+    fn run_round_with_scratch_matches_run_round() {
+        // The scratch-reusing driver must be bit-identical to run_round
+        // even when the scratch/frame arrive dirty from a *different*
+        // spec and dimension (the calibration probe path interleaves
+        // specs through one persistent scratch).
+        let mut scratch = EncodeScratch::default();
+        let mut frame = Frame::empty();
+        for (spec, d, n) in [
+            ("rotated:k=16", 100, 37),
+            ("binary", 33, 5),
+            ("klevel:k=16,p=0.5", 64, 64),
+            ("varlen:k=8", 48, 3),
+            ("qsgd:k=8", 200, 9),
+            ("float32", 7, 1),
+            ("binary", 12, 0),
+        ] {
+            let xs = gaussian_clients(n, d, 23);
+            let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+            let ctx = RoundCtx::new(4, 31);
+            let fresh = run_round(proto.as_ref(), &ctx, &xs).unwrap();
+            let reused =
+                run_round_with_scratch(proto.as_ref(), &ctx, &xs, &mut scratch, &mut frame)
+                    .unwrap();
+            assert_eq!(reused.1, fresh.1, "spec={spec}: bits diverged");
+            assert_eq!(
+                reused.0.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                fresh.0.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "spec={spec}: estimate not bit-identical with dirty scratch"
+            );
         }
     }
 

@@ -2,6 +2,12 @@
 //! Pallas kernel `python/compile/kernels/quantize.py`. Both follow the
 //! identical arithmetic (same clipping, same `u < frac` comparison) so the
 //! native and PJRT backends produce the same bins given the same uniforms.
+//!
+//! The per-coordinate loops ([`quantize_into`], [`dequantize_add`]) are
+//! dispatched through [`crate::simd`]: an AVX2 kernel when the build and
+//! CPU support it, the scalar reference otherwise — **bit-identical**
+//! either way (see the `avx2` module for the two cast edge cases the
+//! kernel compensates for).
 
 /// Span (grid width) rule for the quantizer — which `s_i` the client uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -22,12 +28,21 @@ pub struct Quantized {
     pub s: f32,
 }
 
-/// Grid parameters for `x` under the given span rule.
+/// Grid parameters for `x` under the given span rule — one pass over the
+/// data ([`crate::linalg::vector_stats`] fuses min/max and the norm), or
+/// zero passes when the caller already has the stats
+/// ([`grid_params_from_stats`]).
 pub fn grid_params(x: &[f32], span: Span) -> (f32, f32) {
-    let (lo, hi) = crate::linalg::min_max(x);
+    grid_params_from_stats(&crate::linalg::vector_stats(x), span)
+}
+
+/// Grid parameters from precomputed per-vector statistics. Exposed so
+/// callers that already scanned the input (e.g. the rate-calibration
+/// probes, which compute per-row norms for the MSE fit) don't re-scan it.
+pub fn grid_params_from_stats(st: &crate::linalg::VectorStats, span: Span) -> (f32, f32) {
     match span {
-        Span::MinMax => (lo, hi - lo),
-        Span::Norm => (lo, (2.0f64.sqrt() * crate::linalg::norm(x)) as f32),
+        Span::MinMax => (st.lo, st.hi - st.lo),
+        Span::Norm => (st.lo, (2.0f64.sqrt() * st.norm_sq.sqrt()) as f32),
     }
 }
 
@@ -42,6 +57,19 @@ pub fn quantize_into(x: &[f32], u: &[f32], xmin: f32, s: f32, k: u32, bins: &mut
     debug_assert!(k >= 2, "need at least 2 quantization levels");
     bins.clear();
     bins.resize(x.len(), 0);
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if crate::simd::use_x86_vector() {
+        // SAFETY: gated on runtime AVX2 detection.
+        unsafe { avx2::quantize_bins(x, u, xmin, s, k, bins) };
+        return;
+    }
+    quantize_bins_scalar(x, u, xmin, s, k, bins);
+}
+
+/// The scalar reference quantization loop — the executable specification
+/// the AVX2 kernel is conformance-tested against. `bins.len()` must equal
+/// `x.len()`.
+pub fn quantize_bins_scalar(x: &[f32], u: &[f32], xmin: f32, s: f32, k: u32, bins: &mut [u32]) {
     let km1 = (k - 1) as f32;
     let km1i = (k - 1) as i32;
     let inv = if s > 0.0 { km1 / s } else { 0.0 };
@@ -75,9 +103,114 @@ pub fn dequantize_one(b: u32, xmin: f32, s: f32, k: u32) -> f32 {
 /// Add the dequantized vector into `acc` (server-side accumulation).
 pub fn dequantize_add(bins: &[u32], xmin: f32, s: f32, k: u32, acc: &mut [f32]) {
     debug_assert!(bins.len() <= acc.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if crate::simd::use_x86_vector() {
+        // SAFETY: gated on runtime AVX2 detection.
+        unsafe { avx2::dequantize_add(bins, xmin, s, k, acc) };
+        return;
+    }
+    dequantize_add_scalar(bins, xmin, s, k, acc);
+}
+
+/// The scalar reference dequantize-accumulate loop.
+pub fn dequantize_add_scalar(bins: &[u32], xmin: f32, s: f32, k: u32, acc: &mut [f32]) {
     let w = s / (k - 1) as f32;
     for (a, &b) in acc.iter_mut().zip(bins) {
         *a += xmin + b as f32 * w;
+    }
+}
+
+/// AVX2 twins of the scalar loops, bit-identical by construction: every
+/// f32 operation is the same operation in the same order (explicit
+/// intrinsics, so no FMA contraction can change a rounding), and the two
+/// places where x86 vector semantics differ from Rust scalar semantics
+/// are compensated:
+///
+/// * `f32 as i32` in Rust saturates (NaN → 0, +overflow → `i32::MAX`,
+///   −overflow → `i32::MIN`) while `cvttps2dq` returns `i32::MIN` for
+///   NaN and *both* overflow directions. After the `[0, k−2]` clamp the
+///   NaN and −overflow cases agree (both clamp to 0); the +overflow case
+///   (`t ≥ 2³¹`) is patched by a compare-and-blend to `k−2` — exactly
+///   where the saturating cast lands. The ordered (`_OQ`) compare is
+///   false on NaN, matching the cast's NaN → 0 route.
+/// * `u < frac` uses the ordered `_CMP_LT_OQ` predicate, false on NaN —
+///   the same result the scalar `<` produces.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    #[cfg(target_arch = "x86_64")]
+    use std::arch::x86_64::*;
+
+    /// SAFETY: caller must ensure AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn quantize_bins(
+        x: &[f32],
+        u: &[f32],
+        xmin: f32,
+        s: f32,
+        k: u32,
+        bins: &mut [u32],
+    ) {
+        debug_assert_eq!(x.len(), bins.len());
+        let km1 = (k - 1) as f32;
+        let km1i = (k - 1) as i32;
+        let inv = if s > 0.0 { km1 / s } else { 0.0 };
+        let vxmin = _mm256_set1_ps(xmin);
+        let vinv = _mm256_set1_ps(inv);
+        let vzero = _mm256_setzero_si256();
+        let vkm2 = _mm256_set1_epi32(km1i - 1);
+        let vkm1 = _mm256_set1_epi32(km1i);
+        // 2^31 as f32 (exact): the first value whose truncation the
+        // saturating cast and cvttps2dq disagree on.
+        let vbig = _mm256_set1_ps(2147483648.0);
+        let n = x.len() & !7;
+        let mut i = 0;
+        while i < n {
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            let uv = _mm256_loadu_ps(u.as_ptr().add(i));
+            let t = _mm256_mul_ps(_mm256_sub_ps(xv, vxmin), vinv);
+            let lo_raw = _mm256_cvttps_epi32(t);
+            let lo_clamped = _mm256_min_epi32(_mm256_max_epi32(lo_raw, vzero), vkm2);
+            // Patch t >= 2^31: the saturating cast gives i32::MAX -> k-2.
+            let ovf = _mm256_castps_si256(_mm256_cmp_ps::<_CMP_GE_OQ>(t, vbig));
+            let lo = _mm256_blendv_epi8(lo_clamped, vkm2, ovf);
+            let frac = _mm256_sub_ps(t, _mm256_cvtepi32_ps(lo));
+            // All-ones where u < frac; subtracting the mask adds 1 there.
+            let hit = _mm256_castps_si256(_mm256_cmp_ps::<_CMP_LT_OQ>(uv, frac));
+            let bi = _mm256_sub_epi32(lo, hit);
+            let b = _mm256_min_epi32(_mm256_max_epi32(bi, vzero), vkm1);
+            _mm256_storeu_si256(bins.as_mut_ptr().add(i) as *mut __m256i, b);
+            i += 8;
+        }
+        super::quantize_bins_scalar(&x[n..], &u[n..], xmin, s, k, &mut bins[n..]);
+    }
+
+    /// SAFETY: caller must ensure AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dequantize_add(
+        bins: &[u32],
+        xmin: f32,
+        s: f32,
+        k: u32,
+        acc: &mut [f32],
+    ) {
+        let len = bins.len().min(acc.len());
+        let w = s / (k - 1) as f32;
+        let vxmin = _mm256_set1_ps(xmin);
+        let vw = _mm256_set1_ps(w);
+        let n = len & !7;
+        let mut i = 0;
+        while i < n {
+            // Bins are < k <= 2^31 (the quantizer's clamp arithmetic is
+            // i32), so the signed epi32 -> ps conversion equals the
+            // scalar `b as f32`.
+            let b = _mm256_loadu_si256(bins.as_ptr().add(i) as *const __m256i);
+            let bf = _mm256_cvtepi32_ps(b);
+            let val = _mm256_add_ps(vxmin, _mm256_mul_ps(bf, vw));
+            let a = _mm256_loadu_ps(acc.as_ptr().add(i));
+            _mm256_storeu_ps(acc.as_mut_ptr().add(i), _mm256_add_ps(a, val));
+            i += 8;
+        }
+        super::dequantize_add_scalar(&bins[n..len], xmin, s, k, &mut acc[n..len]);
     }
 }
 

@@ -20,7 +20,7 @@ use crate::coding::histogram;
 use crate::data::synthetic;
 use crate::protocol::config::{Kind, ProtocolConfig};
 use crate::protocol::varlen::Coder;
-use crate::protocol::{run_round, RoundCtx};
+use crate::protocol::{run_round_with_scratch, EncodeScratch, Frame, RoundCtx};
 use crate::stats;
 
 /// Fixed-width bits per coordinate for a k-level grid: ⌈log₂ k⌉.
@@ -156,22 +156,49 @@ impl Default for SpecCalibration {
     }
 }
 
+/// Probe inputs for one dimension: generated and scanned **once**, then
+/// shared by every spec fitted at that dimension. The scan is the same
+/// fused single pass the quantizer's grid rules use
+/// ([`crate::linalg::vector_stats`] yields each row's squared norm
+/// alongside min/max), so a `dme tune` plan that fits hundreds of
+/// candidate specs per dimension reads the probe data once instead of
+/// re-scanning it per spec.
+struct ProbeSet {
+    rows: Vec<Vec<f32>>,
+    truth: Vec<f32>,
+    avg_norm_sq: f64,
+}
+
 /// One-shot empirical fitter: runs small probe rounds through the real
-/// encode path ([`run_round`], the same engine experiments use) on
-/// Gaussian probe data and stores per-spec correction factors, keyed by
+/// encode path ([`run_round_with_scratch`], the same engine experiments
+/// use, with the per-round encode scratch held across fits) on Gaussian
+/// probe data and stores per-spec correction factors, keyed by
 /// `(spec string, dim)`. Fitting is deterministic for a given seed.
 pub struct Calibration {
     seed: u64,
     n_probe: usize,
     trials: u64,
     factors: HashMap<String, SpecCalibration>,
+    /// Per-dimension probe data, generated + scanned once (see [`ProbeSet`]).
+    probes: HashMap<usize, ProbeSet>,
+    /// Encode scratch + frame reused by every probe round this fitter runs.
+    scratch: EncodeScratch,
+    frame: Frame,
 }
 
 impl Calibration {
     /// Default probe: 8 clients × 4 rounds per spec — small enough to
     /// fit a few hundred specs in well under a second at d ≈ 1024.
     pub fn new(seed: u64) -> Self {
-        Calibration { seed, n_probe: 8, trials: 4, factors: HashMap::new() }
+        Calibration {
+            seed,
+            n_probe: 8,
+            trials: 4,
+            factors: HashMap::new(),
+            probes: HashMap::new(),
+            scratch: EncodeScratch::default(),
+            frame: Frame::empty(),
+        }
     }
 
     /// Override the probe shape (tests use more rounds for tight fits).
@@ -195,16 +222,34 @@ impl Calibration {
         ensure!(cfg.dim >= 1, "calibration needs dim >= 1");
         let proto = cfg.build()?;
         // Same probe data for every spec at a given dim: factors stay
-        // comparable across the planner's candidate set.
-        let data = synthetic::gaussian(self.n_probe, cfg.dim, self.seed ^ cfg.dim as u64);
-        let truth = stats::true_mean(&data.rows);
-        let avg_sq = stats::avg_norm_sq(&data.rows);
+        // comparable across the planner's candidate set, and the rows are
+        // generated and scanned exactly once per dimension (one fused
+        // `vector_stats` pass per row yields the squared norms).
+        if !self.probes.contains_key(&cfg.dim) {
+            let data = synthetic::gaussian(self.n_probe, cfg.dim, self.seed ^ cfg.dim as u64);
+            let truth = stats::true_mean(&data.rows);
+            let avg_norm_sq = data
+                .rows
+                .iter()
+                .map(|r| crate::linalg::vector_stats(r).norm_sq)
+                .sum::<f64>()
+                / data.rows.len() as f64;
+            self.probes.insert(cfg.dim, ProbeSet { rows: data.rows, truth, avg_norm_sq });
+        }
+        let probe = &self.probes[&cfg.dim];
+        let avg_sq = probe.avg_norm_sq;
         let mut err = stats::Running::new();
         let mut bits = stats::Running::new();
         for t in 0..self.trials {
             let ctx = RoundCtx::new(t, self.seed);
-            let (est, b) = run_round(proto.as_ref(), &ctx, &data.rows)?;
-            err.push(stats::sq_error(&est, &truth));
+            let (est, b) = run_round_with_scratch(
+                proto.as_ref(),
+                &ctx,
+                &probe.rows,
+                &mut self.scratch,
+                &mut self.frame,
+            )?;
+            err.push(stats::sq_error(&est, &probe.truth));
             bits.push(b as f64 / self.n_probe as f64);
         }
         // Bits are calibrated on the p = 1 twin: the sampling wrapper's
@@ -262,7 +307,7 @@ impl Calibration {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::protocol::Protocol;
+    use crate::protocol::{run_round, Protocol};
 
     /// The fixed-width predictions are exact, to the bit, against the
     /// real encoders (Lemmas 1 and 5; π_srk pays the padded dimension).

@@ -3,14 +3,37 @@
 //!
 //! This is the native-Rust twin of the Pallas kernel
 //! (`python/compile/kernels/hadamard.py`); both are validated against the
-//! same dense-matrix oracle. The hot loop is written so LLVM can
-//! auto-vectorize the inner butterflies (contiguous, stride-`h` pairs).
+//! same dense-matrix oracle.
+//!
+//! Two implementations, dispatched through [`crate::simd`]:
+//! [`fwht_scalar`] (the reference; its hot loop is written so LLVM can
+//! auto-vectorize the contiguous stride-`h` butterflies) and an AVX2
+//! kernel that runs the first three stages in registers and fuses later
+//! stages pairwise into radix-4 passes (half the memory sweeps). The two
+//! are **bit-identical**: a butterfly is an elementwise `u+v` / `u−v`
+//! with a fixed stage order, and the radix-4 fusion evaluates literally
+//! the same sums with the same association (`(a+b)+(c+e)` is what two
+//! sequential stages compute), so no f32 rounding can differ.
 
 /// Unnormalized in-place FWHT. `x.len()` must be a power of two.
 ///
 /// After the call, `x = H x` with `H` the ±1 Sylvester/Walsh-Hadamard
 /// matrix. `fwht(fwht(x)) == d * x`.
 pub fn fwht(x: &mut [f32]) {
+    let d = x.len();
+    assert!(d.is_power_of_two(), "FWHT needs power-of-two length, got {d}");
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if d >= 8 && crate::simd::use_x86_vector() {
+        // SAFETY: gated on runtime AVX2 detection.
+        unsafe { avx2::fwht(x) };
+        return;
+    }
+    fwht_scalar(x);
+}
+
+/// The scalar reference FWHT — the executable specification the AVX2
+/// kernel is conformance-tested against.
+pub fn fwht_scalar(x: &mut [f32]) {
     let d = x.len();
     assert!(d.is_power_of_two(), "FWHT needs power-of-two length, got {d}");
     let mut h = 1;
@@ -61,6 +84,95 @@ pub fn fwht_normalized(x: &mut [f32]) {
     let inv = 1.0 / (x.len() as f32).sqrt();
     for v in x.iter_mut() {
         *v *= inv;
+    }
+}
+
+/// AVX2 FWHT. Stage order and operand order match [`fwht_scalar`]
+/// exactly (see the module docs for why the radix-4 fusion cannot change
+/// a bit).
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    #[cfg(target_arch = "x86_64")]
+    use std::arch::x86_64::*;
+
+    /// One in-register pass of the h ∈ {1, 2, 4} stages over eight
+    /// contiguous lanes: swap partners, add/sub, blend — the partner
+    /// order puts `u+v` in the low lane and `u−v` in the high lane,
+    /// matching the scalar butterflies.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn stage8(v: __m256) -> __m256 {
+        // h=1: partners are adjacent lanes.
+        let p = _mm256_permute_ps::<0b10_11_00_01>(v);
+        let v = _mm256_blend_ps::<0b1010_1010>(_mm256_add_ps(v, p), _mm256_sub_ps(p, v));
+        // h=2: partners are lane pairs.
+        let p = _mm256_permute_ps::<0b01_00_11_10>(v);
+        let v = _mm256_blend_ps::<0b1100_1100>(_mm256_add_ps(v, p), _mm256_sub_ps(p, v));
+        // h=4: partners are 128-bit halves.
+        let p = _mm256_permute2f128_ps::<0x01>(v, v);
+        _mm256_blend_ps::<0b1111_0000>(_mm256_add_ps(v, p), _mm256_sub_ps(p, v))
+    }
+
+    /// SAFETY: caller must ensure AVX2 is available; `x.len()` must be a
+    /// power of two ≥ 8.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn fwht(x: &mut [f32]) {
+        let d = x.len();
+        debug_assert!(d.is_power_of_two() && d >= 8);
+        let ptr = x.as_mut_ptr();
+        // Stages h = 1, 2, 4 in registers, one load/store per element.
+        let mut i = 0;
+        while i < d {
+            let v = _mm256_loadu_ps(ptr.add(i));
+            _mm256_storeu_ps(ptr.add(i), stage8(v));
+            i += 8;
+        }
+        // Stages h >= 8: pairwise-fused radix-4 passes (stages h and 2h
+        // in one sweep), with a single radix-2 pass when one stage is
+        // left over.
+        let mut h = 8;
+        while h * 2 < d {
+            let step = h * 4;
+            let mut base = 0;
+            while base < d {
+                let mut i = 0;
+                while i < h {
+                    let p = base + i;
+                    let a = _mm256_loadu_ps(ptr.add(p));
+                    let b = _mm256_loadu_ps(ptr.add(p + h));
+                    let c = _mm256_loadu_ps(ptr.add(p + 2 * h));
+                    let e = _mm256_loadu_ps(ptr.add(p + 3 * h));
+                    let s0 = _mm256_add_ps(a, b);
+                    let d0 = _mm256_sub_ps(a, b);
+                    let s1 = _mm256_add_ps(c, e);
+                    let d1 = _mm256_sub_ps(c, e);
+                    _mm256_storeu_ps(ptr.add(p), _mm256_add_ps(s0, s1));
+                    _mm256_storeu_ps(ptr.add(p + h), _mm256_add_ps(d0, d1));
+                    _mm256_storeu_ps(ptr.add(p + 2 * h), _mm256_sub_ps(s0, s1));
+                    _mm256_storeu_ps(ptr.add(p + 3 * h), _mm256_sub_ps(d0, d1));
+                    i += 8;
+                }
+                base += step;
+            }
+            h *= 4;
+        }
+        if h < d {
+            // Final lone stage (log2(d/8) was odd).
+            let step = h * 2;
+            let mut base = 0;
+            while base < d {
+                let mut i = 0;
+                while i < h {
+                    let p = base + i;
+                    let u = _mm256_loadu_ps(ptr.add(p));
+                    let v = _mm256_loadu_ps(ptr.add(p + h));
+                    _mm256_storeu_ps(ptr.add(p), _mm256_add_ps(u, v));
+                    _mm256_storeu_ps(ptr.add(p + h), _mm256_sub_ps(u, v));
+                    i += 8;
+                }
+                base += step;
+            }
+        }
     }
 }
 

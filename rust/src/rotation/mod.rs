@@ -7,6 +7,11 @@
 //! ([`hadamard::pad_dim`]); since R is orthogonal and the server knows d,
 //! the inverse rotation restores the padding to (near-)zero and the first
 //! d coordinates are returned.
+//!
+//! The FWHT ships two implementations — a scalar reference and an AVX2
+//! radix-4 kernel — selected at runtime through [`crate::simd`]; they
+//! are bit-identical by construction, so the dispatch never affects the
+//! wire bits (see [`hadamard`] for why the fused passes round the same).
 
 pub mod hadamard;
 

@@ -1,0 +1,95 @@
+//! Runtime dispatch for the vectorized hot paths.
+//!
+//! The per-coordinate loops (stochastic quantization, the FWHT
+//! butterflies, frame bit pack/unpack) each exist twice: a scalar
+//! reference implementation — the executable specification every
+//! conformance suite diffs against — and an explicitly vectorized
+//! `std::arch` twin that must be **bit-identical** to it. This module
+//! decides, once, which one runs:
+//!
+//! * Compile time: the `simd` cargo feature (on by default) compiles the
+//!   `std::arch` kernels at all. `--no-default-features` builds the
+//!   scalar reference only — the forced-scalar CI leg.
+//! * Run time: [`use_x86_vector`] requires `avx2` via
+//!   `is_x86_feature_detected!` (cached after the first call), so the
+//!   same binary is correct on any x86-64 — older machines simply take
+//!   the scalar path. Non-x86 targets always report `false`.
+//! * Override: [`set_force_scalar`] flips every dispatch back to the
+//!   scalar reference at run time. Benches use it to measure the scalar
+//!   baseline and the vector path *in the same process* (the ≥3×
+//!   acceptance gate in `benches/micro.rs`), and the conformance suite
+//!   uses it to drive full encode/decode pipelines down both paths.
+//!
+//! Because both paths produce identical bits, flipping the override —
+//! even while other threads are mid-encode — can never change an
+//! observable result, only which (equivalent) instructions compute it.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// When `true`, every dispatch point takes the scalar reference path
+/// regardless of CPU features. Relaxed ordering is enough: the flag only
+/// selects between bit-identical implementations.
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+/// Force (or stop forcing) the scalar reference path process-wide.
+/// Intended for benches and conformance tests; returns the previous
+/// value so callers can restore it.
+pub fn set_force_scalar(force: bool) -> bool {
+    FORCE_SCALAR.swap(force, Ordering::Relaxed)
+}
+
+/// Is the scalar override currently active?
+pub fn force_scalar() -> bool {
+    FORCE_SCALAR.load(Ordering::Relaxed)
+}
+
+/// Does this build + CPU support the AVX2 kernels at all (ignoring the
+/// scalar override)? Cached after the first call.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub fn x86_vector_available() -> bool {
+    static AVAILABLE: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *AVAILABLE.get_or_init(|| std::arch::is_x86_feature_detected!("avx2"))
+}
+
+/// Scalar-only build or non-x86 target: the vector kernels don't exist.
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+pub fn x86_vector_available() -> bool {
+    false
+}
+
+/// Should a dispatch point take the AVX2 kernel right now? This is the
+/// single gate every vectorized hot path checks (one relaxed atomic load
+/// plus a cached feature bit — negligible next to any loop it guards).
+#[inline]
+pub fn use_x86_vector() -> bool {
+    x86_vector_available() && !force_scalar()
+}
+
+/// Human-readable name of the active dispatch target, for bench labels
+/// and logs.
+pub fn active_path() -> &'static str {
+    if use_x86_vector() {
+        "avx2"
+    } else {
+        "scalar"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn force_scalar_round_trips() {
+        let prev = set_force_scalar(true);
+        assert!(force_scalar());
+        assert!(!use_x86_vector());
+        assert_eq!(active_path(), "scalar");
+        set_force_scalar(false);
+        assert!(!force_scalar());
+        // Whatever the CPU supports, the gate must agree with the
+        // availability probe once the override is off.
+        assert_eq!(use_x86_vector(), x86_vector_available());
+        set_force_scalar(prev);
+    }
+}

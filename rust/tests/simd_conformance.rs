@@ -1,0 +1,342 @@
+//! SIMD / carry-save conformance suite (the bit-identity contract of the
+//! vectorized hot paths).
+//!
+//! Two families of properties:
+//!
+//! 1. **Dispatch invariance** — every vectorized kernel (quantize,
+//!    dequantize, FWHT, bulk bit I/O via the frame pipelines) must be
+//!    bit-identical to its scalar reference, across lane-multiple and
+//!    non-lane-multiple dimensions, with subnormals and ±0 in the input.
+//!    On AVX2 hardware with the `simd` feature these compare real vector
+//!    output against the scalar path; under `--no-default-features` (or
+//!    on non-x86 hosts) both sides take the scalar path and the suite
+//!    degenerates to a self-consistency check of the override plumbing.
+//!
+//! 2. **Carry-save fold invariance** — the [`SlotPartial`] carry-save
+//!    accumulator must produce bit-identical state, wire bytes, and
+//!    finishes under adversarial merge groupings: deep right-nested
+//!    trees, fan-in-1 chains through empties, random pairings, silent
+//!    holders interleaved everywhere, and mixed-scale contributions that
+//!    force window flushes into the spill tier.
+
+use dme::protocol::config::ProtocolConfig;
+use dme::protocol::quantizer::{self, Span};
+use dme::protocol::{run_round, Encoder, Frame, RoundCtx, SlotPartial};
+use dme::rng::Pcg64;
+use dme::rotation::hadamard;
+use dme::simd;
+use std::sync::Mutex;
+
+/// Tests that toggle the global scalar override serialize on this lock.
+/// A race could not produce a false failure (both paths are asserted
+/// bit-identical), but it could silently downgrade a "vector" side to a
+/// scalar run and weaken the comparison.
+static DISPATCH: Mutex<()> = Mutex::new(());
+
+fn dispatch_lock() -> std::sync::MutexGuard<'static, ()> {
+    DISPATCH.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn with_forced_scalar<T>(force: bool, f: impl FnOnce() -> T) -> T {
+    let prev = simd::set_force_scalar(force);
+    let out = f();
+    simd::set_force_scalar(prev);
+    out
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Gaussian data salted with the values lane tails must get right:
+/// ±0, subnormals (including the smallest), and large-but-safe
+/// magnitudes. Magnitudes stay ≤ 1e18 so a d ≤ 2^18 FWHT cannot
+/// overflow to infinity.
+fn adversarial(d: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::new(seed);
+    let mut x = vec![0.0f32; d];
+    rng.fill_gaussian_f32(&mut x);
+    let specials: [f32; 10] = [
+        0.0,
+        -0.0,
+        f32::MIN_POSITIVE,
+        -f32::MIN_POSITIVE,
+        1.0e-45,  // smallest positive subnormal
+        -1.0e-45,
+        f32::MIN_POSITIVE / 2.0, // mid-range subnormal
+        1.0e-30,
+        1.0e18,
+        -1.0e18,
+    ];
+    for (i, &s) in specials.iter().enumerate() {
+        let at = (i * 7 + 3) % d.max(1);
+        if at < d {
+            x[at] = s;
+        }
+    }
+    x
+}
+
+/// Every registry family, including the wrappers (8+ specs as required
+/// by the conformance checklist).
+const SPECS: &[&str] = &[
+    "float32",
+    "binary",
+    "klevel:k=2",
+    "klevel:k=16",
+    "klevel:k=16,span=norm",
+    "rotated:k=2",
+    "rotated:k=16",
+    "varlen:k=17",
+    "varlen:k=17,coder=huffman",
+    "qsgd:k=8",
+    "klevel:k=8,q=0.5",
+    "klevel:k=16,p=0.5",
+];
+
+#[test]
+fn quantize_kernels_match_scalar_reference() {
+    let _g = dispatch_lock();
+    let dims: [usize; 12] =
+        [1, 7, 8, 9, 255, 256, 257, 4095, 4096, 4099, 1 << 18, (1 << 18) + 3];
+    for (i, &d) in dims.iter().enumerate() {
+        let x = adversarial(d, 100 + i as u64);
+        let mut u = vec![0.0f32; d];
+        Pcg64::new(200 + i as u64).fill_uniform_f32(&mut u);
+        for span in [Span::MinMax, Span::Norm] {
+            let (xmin, s) = quantizer::grid_params(&x, span);
+            for k in [2u32, 3, 16, 17, 1024, 65535] {
+                let mut vec_bins = Vec::new();
+                with_forced_scalar(false, || {
+                    quantizer::quantize_into(&x, &u, xmin, s, k, &mut vec_bins)
+                });
+                let mut ref_bins = vec![0u32; d];
+                quantizer::quantize_bins_scalar(&x, &u, xmin, s, k, &mut ref_bins);
+                assert_eq!(vec_bins, ref_bins, "quantize d={d} k={k} span={span:?}");
+                // Dequantize back onto a non-zero accumulator (the +=
+                // form is what the decode path uses).
+                let mut vec_acc = vec![0.125f32; d];
+                let mut ref_acc = vec![0.125f32; d];
+                with_forced_scalar(false, || {
+                    quantizer::dequantize_add(&vec_bins, xmin, s, k, &mut vec_acc)
+                });
+                quantizer::dequantize_add_scalar(&ref_bins, xmin, s, k, &mut ref_acc);
+                assert_eq!(
+                    bits(&vec_acc),
+                    bits(&ref_acc),
+                    "dequantize_add d={d} k={k} span={span:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fwht_matches_scalar_reference() {
+    let _g = dispatch_lock();
+    for e in 0..=18u32 {
+        let d = 1usize << e;
+        let mut vector = adversarial(d, 300 + e as u64);
+        let mut scalar = vector.clone();
+        with_forced_scalar(false, || hadamard::fwht(&mut vector));
+        hadamard::fwht_scalar(&mut scalar);
+        assert_eq!(bits(&vector), bits(&scalar), "fwht d=2^{e}");
+    }
+}
+
+#[test]
+fn frames_and_estimates_are_dispatch_invariant() {
+    let _g = dispatch_lock();
+    for &d in &[256usize, 257, 4096, 4099, 1 << 18] {
+        let n = if d >= 1 << 18 { 2 } else { 4 };
+        let xs: Vec<Vec<f32>> = (0..n as u64).map(|i| adversarial(d, 7 * d as u64 + i)).collect();
+        for spec in SPECS {
+            // The largest dim only for the base families; the sampling
+            // wrappers reuse the same inner kernels.
+            if d >= 1 << 18 && (spec.contains(",p=") || spec.contains(",q=")) {
+                continue;
+            }
+            let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+            let ctx = RoundCtx::new(1, 77);
+            let state = proto.prepare(&ctx);
+            // Frame-level: every client's wire bits match across paths.
+            let mut enc = Encoder::new(proto.as_ref(), &state);
+            let mut frame = Frame::empty();
+            for (i, x) in xs.iter().enumerate() {
+                let vector = with_forced_scalar(false, || {
+                    enc.encode_into(i as u64, x, &mut frame)
+                        .then(|| (frame.bytes.clone(), frame.bit_len))
+                });
+                let scalar = with_forced_scalar(true, || {
+                    enc.encode_into(i as u64, x, &mut frame)
+                        .then(|| (frame.bytes.clone(), frame.bit_len))
+                });
+                assert_eq!(vector, scalar, "spec={spec} d={d} client={i}: frame diverged");
+            }
+            // Round-level: estimate and bit count match across paths
+            // (covers decode + finish, including the inverse rotation).
+            let (vec_est, vec_bits) =
+                with_forced_scalar(false, || run_round(proto.as_ref(), &ctx, &xs).unwrap());
+            let (sca_est, sca_bits) =
+                with_forced_scalar(true, || run_round(proto.as_ref(), &ctx, &xs).unwrap());
+            assert_eq!(vec_bits, sca_bits, "spec={spec} d={d}: uplink bits diverged");
+            assert_eq!(
+                bits(&vec_est),
+                bits(&sca_est),
+                "spec={spec} d={d}: estimate not bit-identical across dispatch paths"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Carry-save fold conformance
+// ---------------------------------------------------------------------
+
+/// Build a deterministic, adversarial set of slot partials: decoded
+/// frames at assorted weights, direct mixed-scale contributions that
+/// force carry-save window flushes into the spill tier, and silent
+/// holders interleaved throughout. Rebuilt identically per grouping so
+/// groupings never share state.
+fn adversarial_partials(d: usize) -> Vec<SlotPartial> {
+    let proto = ProtocolConfig::parse("klevel:k=16", d).unwrap().build().unwrap();
+    let ctx = RoundCtx::new(2, 91);
+    let state = proto.prepare(&ctx);
+    let mut enc = Encoder::new(proto.as_ref(), &state);
+    let xs: Vec<Vec<f32>> = (0..6u64).map(|i| adversarial(d, 900 + i)).collect();
+    let weights = [1.0f32, 1.0, 0.5, 3.5e37, 1.2e-40, 7.25];
+    let mut parts: Vec<SlotPartial> = xs
+        .iter()
+        .enumerate()
+        .zip(&weights)
+        .map(|((i, x), &w)| {
+            let f = enc.encode(i as u64, x).unwrap();
+            SlotPartial::decode(proto.as_ref(), &state, &f, w).unwrap()
+        })
+        .collect();
+    // Mixed-scale direct contributions: huge then tiny at the same
+    // coordinates, so the second add lands limbs away from the first
+    // window base and must flush.
+    let mut rng = Pcg64::new(41);
+    for (scale, weight) in [(3.0e38f32, 1.0f32), (1.0e-44, 1.0), (1.0, 2.5e20), (1.0e19, 1.0e19)]
+    {
+        let mut p = SlotPartial::empty(d);
+        let mut v = vec![0.0f32; d];
+        rng.fill_gaussian_f32(&mut v);
+        for val in v.iter_mut() {
+            *val = (*val * scale).clamp(-3.4e38, 3.4e38);
+        }
+        p.add_decoded(&v, weight, 1).unwrap();
+        parts.push(p);
+    }
+    // Silent holders interleaved at every third position.
+    let dim = parts[0].internal_dim();
+    for at in (0..parts.len()).step_by(3).rev() {
+        parts.insert(at, SlotPartial::silent(dim));
+    }
+    parts
+}
+
+#[test]
+fn carry_save_fold_survives_adversarial_groupings() {
+    for d in [16usize, 96] {
+        let parts = adversarial_partials(d);
+        let dim = parts[0].internal_dim();
+        // Reference: flat left fold.
+        let mut flat = SlotPartial::empty(dim);
+        for p in &parts {
+            flat.merge(p).unwrap();
+        }
+        let flat_wire = flat.to_bytes().unwrap();
+
+        // Deep right-nested tree: p0 + (p1 + (p2 + (...))).
+        let mut right = parts.last().unwrap().clone();
+        for p in parts.iter().rev().skip(1) {
+            let mut node = p.clone();
+            node.merge(&right).unwrap();
+            right = node;
+        }
+        assert_eq!(right, flat, "d={d}: deep right-nested fold diverged");
+
+        // Fan-in-1 chain: each contribution passes through its own
+        // single-child empty node before joining the trunk.
+        let mut chain = SlotPartial::empty(dim);
+        for p in &parts {
+            let mut lone = SlotPartial::empty(dim);
+            lone.merge(p).unwrap();
+            chain.merge(&lone).unwrap();
+        }
+        assert_eq!(chain, flat, "d={d}: fan-in-1 chain diverged");
+
+        // Random pairings: repeatedly merge a random adjacent pair.
+        let mut rng = Pcg64::new(0xfeed + d as u64);
+        let mut pool = parts.clone();
+        while pool.len() > 1 {
+            let i = rng.next_below(pool.len() as u32 - 1) as usize;
+            let other = pool.remove(i + 1);
+            pool[i].merge(&other).unwrap();
+        }
+        assert_eq!(pool[0], flat, "d={d}: random pairing fold diverged");
+
+        // Wire stability: every grouping serializes to the same bytes,
+        // and the bytes round-trip to equal state.
+        assert_eq!(right.to_bytes().unwrap(), flat_wire, "d={d}: wire bytes diverged");
+        assert_eq!(chain.to_bytes().unwrap(), flat_wire, "d={d}: wire bytes diverged");
+        let back = SlotPartial::from_bytes(&flat_wire).unwrap();
+        assert_eq!(back.to_bytes().unwrap(), flat_wire, "d={d}: wire round-trip unstable");
+        assert_eq!(back, flat, "d={d}: deserialized partial diverged");
+    }
+}
+
+#[test]
+fn carry_save_spill_preserves_finish_bits() {
+    // Contributions whose scales differ by hundreds of binary orders of
+    // magnitude force the carry-save window to flush into the dense
+    // spill tier; the finish must still be bit-identical no matter how
+    // the adds are grouped across partials.
+    let d = 24;
+    let proto = ProtocolConfig::parse("float32", d).unwrap().build().unwrap();
+    let ctx = RoundCtx::new(0, 5);
+    let state = proto.prepare(&ctx);
+    let scales: [f32; 7] = [3.0e38, 1.0, 1.0e-44, 2.0e19, 5.0e-20, 1.0e10, 1.0];
+    let mut rng = Pcg64::new(77);
+    let rows: Vec<Vec<f32>> = scales
+        .iter()
+        .map(|&s| {
+            let mut v = vec![0.0f32; d];
+            rng.fill_gaussian_f32(&mut v);
+            for val in v.iter_mut() {
+                *val = (*val * s).clamp(-3.4e38, 3.4e38);
+            }
+            v
+        })
+        .collect();
+    // One partial per row vs all rows in one partial vs two halves.
+    let mut per_row = SlotPartial::empty(d);
+    for row in &rows {
+        let mut p = SlotPartial::empty(d);
+        p.add_decoded(row, 1.0, 1).unwrap();
+        per_row.merge(&p).unwrap();
+    }
+    let mut single = SlotPartial::empty(d);
+    for row in &rows {
+        single.add_decoded(row, 1.0, 1).unwrap();
+    }
+    let mut halves = SlotPartial::empty(d);
+    for chunk in rows.chunks(2) {
+        let mut p = SlotPartial::empty(d);
+        for row in chunk {
+            p.add_decoded(row, 1.0, 1).unwrap();
+        }
+        halves.merge(&p).unwrap();
+    }
+    assert_eq!(per_row, single, "per-row vs single-partial state diverged");
+    assert_eq!(halves, single, "halved grouping diverged");
+    let (a, fa) = single.finish(proto.as_ref(), &state);
+    let (b, fb) = per_row.finish(proto.as_ref(), &state);
+    let (c, fc) = halves.finish(proto.as_ref(), &state);
+    assert_eq!(bits(&a), bits(&b), "finish bits diverged (per-row)");
+    assert_eq!(bits(&a), bits(&c), "finish bits diverged (halves)");
+    assert_eq!(fa.to_bits(), fb.to_bits());
+    assert_eq!(fa.to_bits(), fc.to_bits());
+}
