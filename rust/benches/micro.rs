@@ -5,7 +5,9 @@
 //! (rotated k=16 at d=2^18), the exact carry-save fold vs a plain f64
 //! fold, the encode-scratch allocation audit, the streaming leader
 //! aggregation (n worker uploads, 1 vs N decode threads), PJRT
-//! executable dispatch, and a full coordinator round.
+//! executable dispatch, a full coordinator round, and the transport rows
+//! (reactor hub scale at thousands of multiplexed connections, plus the
+//! same-run threads-vs-reactor per-message broadcast cost pair).
 //!
 //! ```bash
 //! cargo bench --offline --bench micro                 # full run
@@ -728,6 +730,140 @@ fn main() -> anyhow::Result<()> {
         for h in handles {
             h.join().unwrap()?;
         }
+    }
+
+    // ---- transport scale: one reactor hub, thousands of connections ----
+    //
+    // The reactor's raison d'être, measured: a swarm of simulated clients
+    // (multiplexed on one epoll thread — NOT n threads) connects to one
+    // reactor hub, then runs a full broadcast + n-upload round. One-shot
+    // rows (`iters == 1` via `Bench::record`): a 9k-connection accept
+    // storm is not a steady-state measurement. n is clamped to what the
+    // fd rlimit and the ephemeral-port range allow, with a printed note,
+    // so the row names stay honest about what actually ran.
+    #[cfg(target_os = "linux")]
+    {
+        use std::time::Instant;
+
+        use dme::coordinator::reactor::raise_nofile_limit;
+        use dme::coordinator::swarm::Swarm;
+        use dme::coordinator::transport::{HubBinding, Transport, TransportHub};
+
+        let (soft, _hard) = raise_nofile_limit();
+        // Two fds per connection (swarm end + hub end), headroom for the
+        // process, and the loopback ephemeral-port range (~28k).
+        let cap = ((soft.saturating_sub(1024)) / 2).min(24_576) as usize;
+        let scale_ns: &[usize] = if smoke { &[2048] } else { &[8192, 65536] };
+        for &target in scale_ns {
+            let n = target.min(cap);
+            if n < target {
+                println!(
+                    "transport/reactor: clamping n={target} to {n} (nofile soft limit {soft})"
+                );
+            }
+            let t0 = Instant::now();
+            let binding = HubBinding::bind(Transport::Reactor, "127.0.0.1:0")?;
+            let addr = binding.local_addr()?;
+            let swarm = Swarm::spawn(addr, n, move |i, msg| match msg {
+                Message::RoundStart { round, .. } => {
+                    Some(Message::Upload { client: i as u64, round: *round, frames: vec![] })
+                }
+                _ => None,
+            })?;
+            let mut hub = binding.accept(n)?;
+            b.record(&format!("transport/reactor/connect@n={n}"), Some(n as f64), t0.elapsed());
+            let payload: Arc<[f32]> = vec![0.0f32; 16].into();
+            let t0 = Instant::now();
+            hub.broadcast(&Message::RoundStart { round: 0, dim: 16, payload })?;
+            for _ in 0..n {
+                hub.recv()?;
+            }
+            b.record(&format!("transport/reactor/round@n={n}"), Some(n as f64), t0.elapsed());
+            // The scaling contract: n live connections, O(1) threads
+            // (main + reactor + swarm), never a thread per connection.
+            let status = std::fs::read_to_string("/proc/self/status")?;
+            let threads: usize = status
+                .lines()
+                .find_map(|l| l.strip_prefix("Threads:"))
+                .map(|v| v.trim().parse().unwrap_or(usize::MAX))
+                .unwrap_or(usize::MAX);
+            assert!(threads < 64, "thread count {threads} at n={n}: hub is not O(1) threads");
+            println!("transport/reactor n={n}: {threads} process threads while connected");
+            drop(hub); // broadcasts Shutdown; the swarm drains and exits
+            swarm.join()?;
+        }
+    }
+
+    // ---- transport dispatch cost: threads vs reactor, same run ----
+    //
+    // The acceptance pair for the reactor refactor: identical traffic —
+    // BATCH small broadcasts per iteration to n live connections, with
+    // the swarm replying (empty upload) only to the batch's last round
+    // so each iteration ends at a real delivery barrier — through the
+    // thread-per-connection hub and the epoll reactor in one process.
+    // `units` is messages delivered (BATCH × n), so the JSON pair reads
+    // directly as per-message send cost. The reactor wins on syscalls:
+    // BATCH frames coalesce into one writev per connection instead of
+    // BATCH write+flush pairs per connection per round.
+    #[cfg(target_os = "linux")]
+    {
+        use dme::coordinator::swarm::Swarm;
+        use dme::coordinator::transport::{HubBinding, Transport, TransportHub};
+
+        let n = 512usize;
+        const BATCH: u64 = 16;
+        let mut per_msg_ns = Vec::new();
+        for transport in [Transport::Threads, Transport::Reactor] {
+            let binding = HubBinding::bind(transport, "127.0.0.1:0")?;
+            let addr = binding.local_addr()?;
+            let swarm = Swarm::spawn(addr, n, move |i, msg| match msg {
+                Message::RoundStart { round, .. } if *round % BATCH == BATCH - 1 => {
+                    Some(Message::Upload { client: i as u64, round: *round, frames: vec![] })
+                }
+                _ => None,
+            })?;
+            let mut hub = binding.accept(n)?;
+            let payload: Arc<[f32]> = vec![0.0f32; 16].into();
+            let mut round = 0u64;
+            let t = b.run(
+                &format!("transport/{transport} broadcast n={n} batch={BATCH}"),
+                Some(BATCH as f64 * n as f64),
+                || {
+                    for _ in 0..BATCH {
+                        hub.broadcast(&Message::RoundStart {
+                            round,
+                            dim: 16,
+                            payload: payload.clone(),
+                        })
+                        .unwrap();
+                        round += 1;
+                    }
+                    for _ in 0..n {
+                        hub.recv().unwrap();
+                    }
+                },
+            );
+            per_msg_ns.push((
+                transport.to_string(),
+                t.mean.as_nanos() as f64 / (BATCH as f64 * n as f64),
+            ));
+            drop(hub);
+            swarm.join()?;
+        }
+        dme::bench::print_table(
+            &format!("per-message broadcast cost, same run (n={n}, batch={BATCH})"),
+            &["transport", "ns/message", "speedup"],
+            &per_msg_ns
+                .iter()
+                .map(|(name, ns)| {
+                    vec![
+                        name.clone(),
+                        format!("{ns:.0}"),
+                        format!("{:.2}x", per_msg_ns[0].1 / ns.max(1e-9)),
+                    ]
+                })
+                .collect::<Vec<_>>(),
+        );
     }
 
     b.report("microbenchmarks (units/s are elements/s; fwht is bytes/s)");

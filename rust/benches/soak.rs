@@ -1,0 +1,177 @@
+//! Soak: a depth-2 TCP aggregation tree under the reactor transport,
+//! full protocol traffic, hard wall-clock budget.
+//!
+//! Shape: one leader (reactor hub) fans in 16 aggregators; each
+//! aggregator (its own reactor hub) serves its span of simulated
+//! clients, driven by one [`Swarm`] thread per aggregator running real
+//! `Worker::step_with` encodes (spec `binary`, d = 512). At the default
+//! n = 2048 that is 2048 live sockets and ~34 threads (16 aggregators +
+//! 16 swarm drivers + 17 reactors), never a thread per client.
+//!
+//! Knobs (env): `DME_SOAK_N` (default 2048), `DME_SOAK_ROUNDS` (5),
+//! `DME_SOAK_BUDGET_MS` (60000 — the run **asserts** it finishes under
+//! this). `--json out.json` writes round latencies for the CI artifact.
+
+#[cfg(not(target_os = "linux"))]
+fn main() {
+    eprintln!("soak bench requires linux (epoll reactor transport)");
+}
+
+#[cfg(target_os = "linux")]
+fn main() -> anyhow::Result<()> {
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    use dme::coordinator::aggregator::Aggregator;
+    use dme::coordinator::leader::Leader;
+    use dme::coordinator::reactor::raise_nofile_limit;
+    use dme::coordinator::swarm::Swarm;
+    use dme::coordinator::topology::Topology;
+    use dme::coordinator::transport::{
+        DEFAULT_CONNECT_RETRIES, HubBinding, Message, TcpEndpoint, Transport,
+    };
+    use dme::coordinator::worker::{mean_update, Worker};
+    use dme::protocol::config::ProtocolConfig;
+    use dme::protocol::EncodeScratch;
+    use dme::rng::Pcg64;
+
+    let env_num = |key: &str, default: u64| -> u64 {
+        std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+    };
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let json_path = argv
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| argv.get(i + 1))
+        .cloned();
+    let n = env_num("DME_SOAK_N", 2048) as usize;
+    let rounds = env_num("DME_SOAK_ROUNDS", 5);
+    let budget_ms = env_num("DME_SOAK_BUDGET_MS", 60_000);
+    let d = 512usize;
+    let spec = "binary";
+    let seed = 41u64;
+    let n_aggs = 16usize;
+    let fan_in = n.div_ceil(n_aggs).max(1);
+
+    raise_nofile_limit();
+    let topo = Topology::uniform(n as u64, fan_in, 2)?;
+    let tier = &topo.levels()[0];
+    println!(
+        "soak: n={n} clients, {} aggregators (fan-in {fan_in}), d={d} {spec}, {rounds} rounds, \
+         budget {budget_ms} ms",
+        tier.len()
+    );
+
+    let t_start = Instant::now();
+    let leader_binding = HubBinding::bind(Transport::Reactor, "127.0.0.1:0")?;
+    let leader_addr = leader_binding.local_addr()?.to_string();
+
+    // Aggregators: bind a reactor hub for their span, report its
+    // address, accept their children, connect upstream with backoff.
+    let (addr_tx, addr_rx) = mpsc::channel::<(usize, String)>();
+    let mut agg_threads = Vec::new();
+    for (idx, node) in tier.iter().enumerate() {
+        let leader_addr = leader_addr.clone();
+        let addr_tx = addr_tx.clone();
+        let (span, id, n_children) = (node.span, node.id, node.children.len());
+        agg_threads.push(std::thread::spawn(move || -> anyhow::Result<()> {
+            let proto = ProtocolConfig::parse(spec, d)?.build()?;
+            let binding = HubBinding::bind(Transport::Reactor, "127.0.0.1:0")?;
+            addr_tx.send((idx, binding.local_addr()?.to_string())).ok();
+            let hub = binding.accept(n_children)?;
+            let mut up = TcpEndpoint::connect_with_backoff(&leader_addr, DEFAULT_CONNECT_RETRIES)?;
+            Aggregator::new(proto, seed, id, span).with_level(0).run(hub, &mut up)?;
+            Ok(())
+        }));
+    }
+    drop(addr_tx);
+    let mut agg_addrs = vec![String::new(); tier.len()];
+    for _ in 0..tier.len() {
+        let (idx, addr) = addr_rx.recv()?;
+        agg_addrs[idx] = addr;
+    }
+
+    // One swarm per aggregator: its span's clients on one driver thread,
+    // each replying to RoundStart with a real protocol-encoded upload.
+    let mut swarms = Vec::new();
+    for (idx, node) in tier.iter().enumerate() {
+        let span = node.span;
+        let count = node.children.len();
+        let addr: std::net::SocketAddr = agg_addrs[idx].parse()?;
+        let mut workers = Vec::with_capacity(count);
+        let mut scratches = Vec::with_capacity(count);
+        for i in 0..count {
+            let client_id = span.0 + i as u64;
+            let mut shard = vec![0.0f32; d];
+            Pcg64::new(seed ^ client_id).fill_gaussian_f32(&mut shard);
+            workers.push(Worker {
+                client_id,
+                shard: vec![shard],
+                protocol: ProtocolConfig::parse(spec, d)?.build()?,
+                update: mean_update(),
+                seed,
+            });
+            scratches.push(EncodeScratch::default());
+        }
+        swarms.push(Swarm::spawn(addr, count, move |i, msg| match msg {
+            Message::RoundStart { round, dim, payload } => {
+                workers[i].step_with(*round, *dim, payload, &mut scratches[i]).ok()
+            }
+            _ => None,
+        })?);
+    }
+
+    let proto = ProtocolConfig::parse(spec, d)?.build()?;
+    let hub = leader_binding.accept(tier.len())?;
+    let mut leader = Leader::new(proto, hub, seed).with_decode_threads(2);
+    let connect_ms = t_start.elapsed().as_millis();
+    println!("soak: tree up ({} sockets) in {connect_ms} ms", n + tier.len());
+
+    let mut round_ms = Vec::new();
+    for round in 0..rounds {
+        let t0 = Instant::now();
+        let out = leader.round(round, d as u32, &[])?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        anyhow::ensure!(out.n_frames == n, "round {round}: {} of {n} frames", out.n_frames);
+        println!("soak: round {round} closed in {ms:.1} ms ({} frames)", out.n_frames);
+        round_ms.push(ms);
+    }
+    let (down, up) = leader.bytes_moved();
+    leader.shutdown()?;
+    for h in agg_threads {
+        h.join().expect("aggregator thread panicked")?;
+    }
+    for s in swarms {
+        let report = s.join()?;
+        anyhow::ensure!(
+            report.replies_sent == report.connected as u64 * rounds,
+            "swarm under-replied: {report:?}"
+        );
+    }
+    let total_ms = t_start.elapsed().as_millis() as u64;
+    println!("soak: total {total_ms} ms, root traffic down={down} up={up} bytes");
+
+    let rows: Vec<String> = round_ms.iter().map(|ms| format!("{ms:.2}")).collect();
+    let json = format!(
+        "{{\"bench\": \"soak_tree\", \"transport\": \"reactor\", \"n\": {n}, \
+         \"aggregators\": {}, \"dim\": {d}, \"spec\": \"{spec}\", \"rounds\": {rounds}, \
+         \"connect_ms\": {connect_ms}, \"round_ms\": [{}], \"total_ms\": {total_ms}, \
+         \"budget_ms\": {budget_ms}, \"root_down_bytes\": {down}, \"root_up_bytes\": {up}}}\n",
+        tier.len(),
+        rows.join(", "),
+    );
+    if let Some(path) = json_path {
+        std::fs::write(&path, &json)?;
+        println!("wrote {path}");
+    } else {
+        print!("{json}");
+    }
+
+    // The hard budget: a hung barrier, a lost Shutdown, or a reactor
+    // stall shows up here as a failed bench, not a silent slow CI run.
+    anyhow::ensure!(
+        total_ms <= budget_ms,
+        "soak blew its wall-clock budget: {total_ms} ms > {budget_ms} ms"
+    );
+    Ok(())
+}

@@ -126,6 +126,27 @@ impl Bench {
         self.timings.last().unwrap()
     }
 
+    /// Record a single externally-timed measurement as one row. For
+    /// cases the harness cannot re-run at will (a 64k-connection accept
+    /// storm, a one-shot scale round): mean == p50 == p99 == `elapsed`,
+    /// iters == 1, and `units_per_iter` still enables throughput.
+    pub fn record(
+        &mut self,
+        name: &str,
+        units_per_iter: Option<f64>,
+        elapsed: Duration,
+    ) -> &Timing {
+        self.timings.push(Timing {
+            name: name.to_string(),
+            iters: 1,
+            mean: elapsed,
+            p50: elapsed,
+            p99: elapsed,
+            units_per_iter,
+        });
+        self.timings.last().unwrap()
+    }
+
     /// Print all rows with a header.
     pub fn report(&self, title: &str) {
         println!("\n== {title} ==");
@@ -239,6 +260,16 @@ mod tests {
         assert!(json.contains("\"name\": \"spin\""), "{json}");
         assert!(json.contains("\"units_per_sec\""), "{json}");
         assert!(json.trim_end().ends_with(']'), "{json}");
+    }
+
+    #[test]
+    fn record_adds_a_one_shot_row() {
+        let mut b = Bench::new();
+        let t = b.record("one-shot", Some(10.0), Duration::from_millis(2));
+        assert_eq!(t.iters, 1);
+        assert_eq!(t.mean, Duration::from_millis(2));
+        assert_eq!(t.p99, Duration::from_millis(2));
+        assert!(b.to_json().contains("\"one-shot\""));
     }
 
     #[test]

@@ -34,7 +34,17 @@
 //!   accounting rule for both (so loopback and TCP report identical
 //!   `bytes_moved`), `Arc`-shared broadcast payloads, and the
 //!   [`Endpoint`](transport::Endpoint) abstraction every child node
-//!   (worker or aggregator) speaks to its parent through.
+//!   (worker or aggregator) speaks to its parent through. The
+//!   [`transport::Transport`] enum picks which TCP hub serves a
+//!   process: thread-per-connection, or the epoll reactor.
+//! * [`reactor`] (Linux) — the event-driven TCP hub: one thread, n
+//!   non-blocking sockets, per-connection staging queues flushed once
+//!   per readiness wakeup, zero-copy broadcast. The hub that makes
+//!   n = 100k participants per aggregator a transport non-event.
+//! * [`swarm`] (Linux) — synthetic client driver for benches and soak
+//!   tests: thousands of protocol-correct TCP clients multiplexed on
+//!   one thread, so scale tests measure the hub rather than the
+//!   harness.
 //! * [`worker`] — the client side: shard + update function + encoder.
 //! * [`leader`] — the tree root: round barrier (optionally with a
 //!   liveness timeout that names missing children) + the streaming
@@ -52,18 +62,26 @@
 //!   metrics, including the barrier-wait vs decode-work split and the
 //!   per-tier rollup ([`metrics::TierMetrics`]).
 //!
-//! Threading: plain `std::thread` + channels. The round barrier is the
-//! natural synchronization point of the paper's model; an async runtime
-//! would buy nothing here. Every barrier node (leader or aggregator)
-//! owns a per-round set of scoped decode threads fed by its receive
-//! loop — at millions-of-users scale the server's decode path, not the
-//! clients' encode path, is the bottleneck, and the tier spreads that
-//! work across as many nodes as the topology provides without touching
-//! the determinism contract.
+//! Threading: plain `std::thread` + channels for the protocol logic —
+//! the round barrier is the natural synchronization point of the
+//! paper's model, and an async *runtime* would buy nothing here. The
+//! one place concurrency itself was the scaling limit is connection
+//! handling, and that is event-driven instead: the [`reactor`] hub
+//! serves every socket from a single thread, so thread count follows
+//! decode parallelism, never client count. Every barrier node (leader
+//! or aggregator) owns a per-round set of scoped decode threads fed by
+//! its receive loop — at millions-of-users scale the server's decode
+//! path, not the clients' encode path, is the bottleneck, and the tier
+//! spreads that work across as many nodes as the topology provides
+//! without touching the determinism contract.
 
 pub mod aggregator;
 pub mod leader;
 pub mod metrics;
+#[cfg(target_os = "linux")]
+pub mod reactor;
+#[cfg(target_os = "linux")]
+pub mod swarm;
 pub mod topology;
 pub mod transport;
 pub mod worker;
@@ -71,6 +89,10 @@ pub mod worker;
 pub use aggregator::{aggregate_tree, spawn_local_tree, Aggregator, AggregatorReport};
 pub use leader::{ChildKey, Leader, RoundOutcome};
 pub use metrics::{ExperimentMetrics, RoundMetrics, TierMetrics};
+#[cfg(target_os = "linux")]
+pub use reactor::ReactorHub;
 pub use topology::Topology;
-pub use transport::{Endpoint, LoopbackHub, Message, TcpHub, TransportHub};
+pub use transport::{
+    Endpoint, HubBinding, LoopbackHub, Message, TcpEndpoint, TcpHub, Transport, TransportHub,
+};
 pub use worker::{UpdateFn, Worker};

@@ -1,0 +1,1029 @@
+//! Event-driven TCP hub: one reactor thread serves every worker
+//! connection behind the same [`TransportHub`] contract as
+//! [`TcpHub`](super::transport::TcpHub).
+//!
+//! The thread-per-connection hub spends one OS thread and one
+//! `write_all` + `flush` syscall pair per connection per message — fine
+//! at n = 512, dead at n = 100k. This module replaces those internals
+//! with readiness polling over non-blocking sockets (epoll, via the thin
+//! [`sys`] shim below — no new dependencies) while leaving every call
+//! site untouched: `Leader`, `Aggregator`, and `Worker` still speak
+//! `TransportHub`/`Endpoint`.
+//!
+//! # Readiness state machine
+//!
+//! Each accepted connection lives in exactly one of three states, driven
+//! level-triggered from the single reactor thread:
+//!
+//! ```text
+//!             readable (EPOLLIN | EPOLLRDHUP | EPOLLERR | EPOLLHUP)
+//!                │  read until WouldBlock → FrameDecoder → Message
+//!                ▼
+//!   ┌──────── READING ────────┐     stage bytes, partial write
+//!   │ (EPOLLIN only: nothing  │ ─────────────────────────────► WRITING
+//!   │  staged for this conn)  │ ◄───────────────────────────── (EPOLLIN|
+//!   └─────────────────────────┘     out-queue drained            EPOLLOUT)
+//!                │
+//!                ▼ EOF / parse error / write error / staging cap
+//!              DEAD (deregistered, socket closed, counted in `n_dead`)
+//! ```
+//!
+//! `EPOLLOUT` is armed only while a connection has staged bytes the
+//! kernel would not take, so an idle round costs zero wakeups beyond the
+//! uploads themselves.
+//!
+//! # Write batching and the flush contract
+//!
+//! Sends never hit the socket one message at a time. [`ReactorHub::broadcast`]
+//! serializes a message **once**, hands the framed bytes to the reactor,
+//! and the reactor stages them per connection in an [`OutQueue`]:
+//! small frames are memcpy-coalesced into the queue's tail buffer, large
+//! frames (a `RoundStart` payload) are enqueued as `Arc`-shared slices —
+//! zero copies, every connection writes the same allocation. Each queue
+//! is flushed with a single `writev` per readiness wakeup, so k messages
+//! staged between wakeups cost one syscall, not k. The contract is
+//! ordering + completeness, not immediacy: bytes leave in staging order,
+//! and a `Stop` drains every queue (bounded grace) before the reactor
+//! exits, so a final `Shutdown` broadcast is never lost.
+//!
+//! # Backpressure
+//!
+//! A connection whose peer stops reading accumulates staged bytes; at
+//! [`MAX_STAGED_BYTES`] the reactor declares it dead instead of letting
+//! one stalled worker grow an unbounded buffer. This mirrors the
+//! thread-per-connection hub, where a stalled peer eventually errors the
+//! blocking write — here the error is just detected at the staging cap
+//! instead of at the socket buffer.
+//!
+//! # Accounting parity
+//!
+//! Byte accounting is identical to both other transports: every message
+//! counts [`Message::framed_len`] (serialized size + the u32 length
+//! prefix), downlink per live connection at broadcast, uplink per
+//! completed frame. Conformance tests run the same rounds over loopback,
+//! threads, and reactor and assert equal `bytes_moved`.
+
+use std::collections::VecDeque;
+use std::io::{self, IoSlice, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::fd::{AsRawFd, FromRawFd, OwnedFd, RawFd};
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::transport::{Message, TransportHub};
+
+/// Raw epoll / rlimit bindings. `std` already links libc; these are the
+/// five calls the reactor needs, declared directly so no new crate is
+/// pulled in.
+mod sys {
+    use std::os::fd::RawFd;
+
+    /// Mirror of glibc's `struct epoll_event`. On x86-64 the kernel ABI
+    /// packs it to 12 bytes; elsewhere it has natural alignment.
+    #[derive(Clone, Copy)]
+    #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+    #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+
+    pub const EPOLL_CTL_ADD: i32 = 1;
+    pub const EPOLL_CTL_DEL: i32 = 2;
+    pub const EPOLL_CTL_MOD: i32 = 3;
+    pub const EPOLL_CLOEXEC: i32 = 0o2000000;
+
+    pub const RLIMIT_NOFILE: i32 = 7;
+
+    #[repr(C)]
+    pub struct RLimit {
+        pub cur: u64,
+        pub max: u64,
+    }
+
+    extern "C" {
+        pub fn epoll_create1(flags: i32) -> i32;
+        pub fn epoll_ctl(epfd: i32, op: i32, fd: RawFd, event: *mut EpollEvent) -> i32;
+        pub fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+        pub fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+        pub fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+    }
+}
+
+/// Readable-readiness mask (data, peer half-close, or error — all of
+/// which the read path must observe).
+pub const READABLE: u32 = sys::EPOLLIN | sys::EPOLLRDHUP | sys::EPOLLERR | sys::EPOLLHUP;
+/// Writable-readiness bit, for checking returned event masks.
+pub const WRITABLE: u32 = sys::EPOLLOUT;
+/// Base interest for every connection.
+pub const INTEREST_READ: u32 = sys::EPOLLIN | sys::EPOLLRDHUP;
+/// Interest while the out-queue has residual bytes.
+pub const INTEREST_READ_WRITE: u32 = INTEREST_READ | sys::EPOLLOUT;
+
+/// epoll token reserved for the facade's wake pipe.
+const WAKE_TOKEN: u64 = u64::MAX;
+
+/// Same framing cap as the blocking transport's `read_msg`: a length
+/// prefix beyond this is rejected **before** any buffer is grown.
+const MAX_FRAME_LEN: usize = 1 << 30;
+
+/// Per-connection staged-bytes cap (see the module docs on backpressure).
+pub const MAX_STAGED_BYTES: usize = 1 << 30;
+
+/// Raise `RLIMIT_NOFILE`'s soft limit to the hard limit and return
+/// `(soft, hard)` after the attempt. Synthetic-client benches call this
+/// before opening tens of thousands of sockets; failures are non-fatal
+/// (the caller clamps its fan-out to whatever came back).
+pub fn raise_nofile_limit() -> (u64, u64) {
+    let mut rl = sys::RLimit { cur: 0, max: 0 };
+    if unsafe { sys::getrlimit(sys::RLIMIT_NOFILE, &mut rl) } != 0 {
+        return (1024, 1024);
+    }
+    if rl.cur < rl.max {
+        let want = sys::RLimit { cur: rl.max, max: rl.max };
+        if unsafe { sys::setrlimit(sys::RLIMIT_NOFILE, &want) } == 0 {
+            rl.cur = rl.max;
+        }
+    }
+    (rl.cur, rl.max)
+}
+
+/// Thin safe wrapper over an epoll instance. Level-triggered only — the
+/// reactor always drains to `WouldBlock`, so edge-triggering would buy
+/// nothing and cost a starvation class.
+pub struct Epoll {
+    fd: OwnedFd,
+    raw: Vec<sys::EpollEvent>,
+}
+
+impl Epoll {
+    /// Create a close-on-exec epoll instance.
+    pub fn new() -> io::Result<Self> {
+        let fd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        let fd = unsafe { OwnedFd::from_raw_fd(fd) };
+        Ok(Epoll { fd, raw: vec![sys::EpollEvent { events: 0, data: 0 }; 512] })
+    }
+
+    fn ctl(&self, op: i32, fd: RawFd, token: u64, interest: u32) -> io::Result<()> {
+        let mut ev = sys::EpollEvent { events: interest, data: token };
+        let rc = unsafe { sys::epoll_ctl(self.fd.as_raw_fd(), op, fd, &mut ev) };
+        if rc == 0 {
+            Ok(())
+        } else {
+            Err(io::Error::last_os_error())
+        }
+    }
+
+    /// Register `fd` with `token` and the given interest mask.
+    pub fn add(&self, fd: RawFd, token: u64, interest: u32) -> io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_ADD, fd, token, interest)
+    }
+
+    /// Change the interest mask of a registered fd.
+    pub fn modify(&self, fd: RawFd, token: u64, interest: u32) -> io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_MOD, fd, token, interest)
+    }
+
+    /// Deregister a fd.
+    pub fn del(&self, fd: RawFd) -> io::Result<()> {
+        let rc = unsafe {
+            sys::epoll_ctl(self.fd.as_raw_fd(), sys::EPOLL_CTL_DEL, fd, std::ptr::null_mut())
+        };
+        if rc == 0 {
+            Ok(())
+        } else {
+            Err(io::Error::last_os_error())
+        }
+    }
+
+    /// Wait up to `timeout_ms` (`-1` = forever) and append the ready
+    /// `(token, events)` pairs to `out`. EINTR is retried internally.
+    pub fn wait_into(&mut self, out: &mut Vec<(u64, u32)>, timeout_ms: i32) -> io::Result<()> {
+        let n = loop {
+            let rc = unsafe {
+                sys::epoll_wait(
+                    self.fd.as_raw_fd(),
+                    self.raw.as_mut_ptr(),
+                    self.raw.len() as i32,
+                    timeout_ms,
+                )
+            };
+            if rc >= 0 {
+                break rc as usize;
+            }
+            let err = io::Error::last_os_error();
+            if err.kind() != io::ErrorKind::Interrupted {
+                return Err(err);
+            }
+        };
+        out.clear();
+        for ev in &self.raw[..n] {
+            let token = ev.data;
+            let events = ev.events;
+            out.push((token, events));
+        }
+        Ok(())
+    }
+}
+
+/// Incremental frame decoder for the length-prefixed wire format: feed
+/// arbitrary byte slices as the socket delivers them (down to one byte
+/// at a time), take complete frames out. The length prefix is validated
+/// against [`MAX_FRAME_LEN`] as soon as its four bytes are present —
+/// before any frame-sized buffer growth — so a forged prefix cannot
+/// reserve gigabytes.
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    start: usize,
+}
+
+impl FrameDecoder {
+    /// An empty decoder.
+    pub fn new() -> Self {
+        FrameDecoder { buf: Vec::new(), start: 0 }
+    }
+
+    /// Append freshly read bytes.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        if self.start == self.buf.len() {
+            self.buf.clear();
+            self.start = 0;
+        } else if self.start > 0 {
+            // Drop consumed frames before growing; `start` only lags the
+            // buffer while a frame is incomplete, so this is amortized
+            // O(bytes), not O(bytes^2), even under one-byte feeds.
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// The next complete frame body (without its length prefix), if one
+    /// is buffered. `Ok(None)` means "need more bytes"; `Err` means the
+    /// stream is poisoned (oversized prefix) and the connection must die.
+    pub fn next_frame(&mut self) -> Result<Option<&[u8]>> {
+        let avail = self.buf.len() - self.start;
+        if avail < 4 {
+            return Ok(None);
+        }
+        let prefix: [u8; 4] = self.buf[self.start..self.start + 4].try_into().unwrap();
+        let len = u32::from_le_bytes(prefix) as usize;
+        ensure!(len <= MAX_FRAME_LEN, "message too large");
+        if avail < 4 + len {
+            return Ok(None);
+        }
+        let frame = &self.buf[self.start + 4..self.start + 4 + len];
+        self.start += 4 + len;
+        Ok(Some(frame))
+    }
+
+    /// Bytes buffered but not yet consumed as frames.
+    pub fn pending(&self) -> usize {
+        self.buf.len() - self.start
+    }
+}
+
+impl Default for FrameDecoder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+enum Chunk {
+    /// Coalesced small frames — one memcpy in, one writev slice out.
+    Owned(Vec<u8>),
+    /// A large frame shared across every connection (the zero-copy
+    /// broadcast path): all queues point at the same allocation.
+    Shared(Arc<[u8]>),
+}
+
+impl Chunk {
+    fn bytes(&self) -> &[u8] {
+        match self {
+            Chunk::Owned(v) => v,
+            Chunk::Shared(a) => a,
+        }
+    }
+}
+
+/// Frames below this are memcpy-coalesced into the tail [`Chunk::Owned`]
+/// buffer; at or above it they are enqueued `Arc`-shared. The crossover
+/// is where one more writev slice stops being cheaper than the copy.
+const COALESCE_LIMIT: usize = 4096;
+/// Soft cap on the tail coalescing buffer before a new chunk is started
+/// (keeps single chunks from growing unboundedly and re-allocating).
+const TAIL_TARGET: usize = 64 * 1024;
+/// Max slices per writev call (IOV_MAX is 1024 on Linux; 64 keeps the
+/// stack frame small and is already far past the syscall's sweet spot).
+const MAX_IOV: usize = 64;
+
+/// Per-connection staged-write queue: what the batching contract in the
+/// module docs is made of.
+pub struct OutQueue {
+    chunks: VecDeque<Chunk>,
+    /// Bytes of `chunks[0]` already written.
+    head: usize,
+    /// Total unwritten bytes across all chunks.
+    len: usize,
+}
+
+impl OutQueue {
+    /// An empty queue.
+    pub fn new() -> Self {
+        OutQueue { chunks: VecDeque::new(), head: 0, len: 0 }
+    }
+
+    /// Total staged (unwritten) bytes.
+    pub fn staged(&self) -> usize {
+        self.len
+    }
+
+    /// True when nothing is waiting to be written.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Stage one framed message. Small frames coalesce into the tail
+    /// buffer; large ones enqueue the shared allocation as-is. Errors
+    /// when the connection is past [`MAX_STAGED_BYTES`] (backpressure).
+    pub fn stage(&mut self, frame: &Arc<[u8]>) -> Result<()> {
+        ensure!(
+            self.len + frame.len() <= MAX_STAGED_BYTES,
+            "connection stalled: {} bytes staged past the {} byte cap",
+            self.len,
+            MAX_STAGED_BYTES
+        );
+        self.len += frame.len();
+        if frame.len() < COALESCE_LIMIT {
+            if let Some(Chunk::Owned(tail)) = self.chunks.back_mut() {
+                if tail.len() < TAIL_TARGET {
+                    tail.extend_from_slice(frame);
+                    return Ok(());
+                }
+            }
+            let mut v = Vec::with_capacity(frame.len().max(1024));
+            v.extend_from_slice(frame);
+            self.chunks.push_back(Chunk::Owned(v));
+        } else {
+            self.chunks.push_back(Chunk::Shared(frame.clone()));
+        }
+        Ok(())
+    }
+
+    fn consume(&mut self, mut n: usize) {
+        self.len -= n;
+        while n > 0 {
+            let avail = self.chunks[0].bytes().len() - self.head;
+            if n >= avail {
+                n -= avail;
+                self.head = 0;
+                self.chunks.pop_front();
+            } else {
+                self.head += n;
+                n = 0;
+            }
+        }
+    }
+
+    /// Write as much as the sink takes in as few calls as possible
+    /// (vectored). Returns `Ok(true)` when the queue drained, `Ok(false)`
+    /// on `WouldBlock` with residual bytes (arm `EPOLLOUT`).
+    pub fn flush<W: Write>(&mut self, w: &mut W) -> io::Result<bool> {
+        loop {
+            if self.chunks.is_empty() {
+                return Ok(true);
+            }
+            let mut slices: Vec<IoSlice> = Vec::with_capacity(self.chunks.len().min(MAX_IOV));
+            for (i, c) in self.chunks.iter().take(MAX_IOV).enumerate() {
+                let bytes = c.bytes();
+                if i == 0 {
+                    slices.push(IoSlice::new(&bytes[self.head..]));
+                } else {
+                    slices.push(IoSlice::new(bytes));
+                }
+            }
+            let wrote = match w.write_vectored(&slices) {
+                Ok(0) => return Err(io::ErrorKind::WriteZero.into()),
+                Ok(n) => n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Ok(false),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            };
+            self.consume(wrote);
+        }
+    }
+}
+
+impl Default for OutQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+enum Cmd {
+    /// Framed bytes (length prefix included), serialized once by the
+    /// facade; the reactor stages the same `Arc` on every live queue.
+    Broadcast(Arc<[u8]>),
+    Stop,
+}
+
+struct Conn {
+    stream: TcpStream,
+    dec: FrameDecoder,
+    out: OutQueue,
+    interest: u32,
+}
+
+struct Reactor {
+    epoll: Epoll,
+    conns: Vec<Option<Conn>>,
+    live: usize,
+    wake_rx: UnixStream,
+    cmd_rx: Receiver<Cmd>,
+    /// Dropped when the last connection dies, so the facade's `recv`
+    /// fails with "all workers disconnected" exactly like the
+    /// thread-per-connection hub.
+    msg_tx: Option<Sender<Message>>,
+    up: Arc<AtomicU64>,
+    n_dead: Arc<AtomicUsize>,
+    stopping: bool,
+    read_buf: Vec<u8>,
+}
+
+impl Reactor {
+    fn run(mut self) {
+        let mut ready: Vec<(u64, u32)> = Vec::with_capacity(512);
+        let mut stop_deadline: Option<Instant> = None;
+        loop {
+            let timeout = if self.stopping { 20 } else { -1 };
+            if self.epoll.wait_into(&mut ready, timeout).is_err() {
+                return;
+            }
+            for &(token, revents) in &ready {
+                if token == WAKE_TOKEN {
+                    self.drain_wake();
+                } else {
+                    let i = token as usize;
+                    if revents & READABLE != 0 {
+                        self.read_conn(i);
+                    }
+                    if revents & sys::EPOLLOUT != 0 {
+                        self.write_conn(i);
+                    }
+                }
+            }
+            // Drained every pass, not only on wake events: a wake byte
+            // may be consumed by a pass that ran before its command was
+            // queued, and the stop path relies on polling.
+            self.drain_cmds();
+            if self.stopping {
+                let deadline =
+                    *stop_deadline.get_or_insert_with(|| Instant::now() + Duration::from_secs(2));
+                let pending = self.conns.iter().flatten().any(|c| !c.out.is_empty());
+                if self.live == 0 || !pending || Instant::now() >= deadline {
+                    return;
+                }
+            }
+        }
+    }
+
+    fn drain_wake(&mut self) {
+        let mut buf = [0u8; 256];
+        loop {
+            match self.wake_rx.read(&mut buf) {
+                Ok(0) => return, // facade dropped its end
+                Ok(_) => continue,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => return, // WouldBlock: fully drained
+            }
+        }
+    }
+
+    fn drain_cmds(&mut self) {
+        loop {
+            match self.cmd_rx.try_recv() {
+                Ok(Cmd::Broadcast(frame)) => self.stage_broadcast(frame),
+                Ok(Cmd::Stop) => self.stopping = true,
+                Err(_) => return,
+            }
+        }
+    }
+
+    fn stage_broadcast(&mut self, frame: Arc<[u8]>) {
+        for i in 0..self.conns.len() {
+            let staged = match self.conns[i].as_mut() {
+                Some(c) => c.out.stage(&frame).is_ok(),
+                None => continue,
+            };
+            if !staged {
+                // Past the backpressure cap: the connection is stalled
+                // beyond salvage (see module docs).
+                self.kill(i);
+                continue;
+            }
+            // Opportunistic flush: the socket is almost always writable,
+            // so the common case is one writev now and no EPOLLOUT
+            // round-trip at all.
+            self.write_conn(i);
+        }
+    }
+
+    fn read_conn(&mut self, i: usize) {
+        loop {
+            let res = match self.conns[i].as_mut() {
+                Some(c) => c.stream.read(&mut self.read_buf),
+                None => return,
+            };
+            match res {
+                Ok(0) => {
+                    self.kill(i);
+                    return;
+                }
+                Ok(n) => {
+                    // Parse errors kill the connection silently — the
+                    // same contract as the per-connection reader threads,
+                    // which return on the first bad frame.
+                    if self.ingest(i, n).is_err() {
+                        self.kill(i);
+                        return;
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.kill(i);
+                    return;
+                }
+            }
+        }
+    }
+
+    fn ingest(&mut self, i: usize, n: usize) -> Result<()> {
+        let conn = match self.conns[i].as_mut() {
+            Some(c) => c,
+            None => return Ok(()),
+        };
+        conn.dec.feed(&self.read_buf[..n]);
+        while let Some(frame) = conn.dec.next_frame()? {
+            self.up.fetch_add(frame.len() as u64 + 4, Ordering::Relaxed);
+            let msg = Message::from_bytes(frame)?;
+            if let Some(tx) = &self.msg_tx {
+                // A dropped receiver just means the facade is going
+                // away; the stop command follows.
+                let _ = tx.send(msg);
+            }
+        }
+        Ok(())
+    }
+
+    fn write_conn(&mut self, i: usize) {
+        let flushed = match self.conns[i].as_mut() {
+            Some(c) => c.out.flush(&mut c.stream),
+            None => return,
+        };
+        match flushed {
+            Ok(true) => self.set_interest(i, INTEREST_READ),
+            Ok(false) => self.set_interest(i, INTEREST_READ_WRITE),
+            Err(_) => self.kill(i),
+        }
+    }
+
+    fn set_interest(&mut self, i: usize, want: u32) {
+        let (fd, cur) = match self.conns[i].as_ref() {
+            Some(c) => (c.stream.as_raw_fd(), c.interest),
+            None => return,
+        };
+        if want == cur {
+            return;
+        }
+        if self.epoll.modify(fd, i as u64, want).is_ok() {
+            if let Some(c) = self.conns[i].as_mut() {
+                c.interest = want;
+            }
+        } else {
+            self.kill(i);
+        }
+    }
+
+    fn kill(&mut self, i: usize) {
+        if let Some(conn) = self.conns[i].take() {
+            let _ = self.epoll.del(conn.stream.as_raw_fd());
+            self.live -= 1;
+            self.n_dead.fetch_add(1, Ordering::Release);
+            if self.live == 0 {
+                self.msg_tx = None;
+            }
+        }
+    }
+}
+
+/// A bound-but-not-yet-accepting reactor hub, mirroring
+/// [`TcpHubBinding`](super::transport::TcpHubBinding): bind port 0,
+/// read the real address, then accept.
+pub struct ReactorBinding {
+    listener: TcpListener,
+}
+
+impl ReactorBinding {
+    /// Bind `addr` without accepting yet.
+    pub fn bind(addr: &str) -> Result<Self> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        Ok(ReactorBinding { listener })
+    }
+
+    /// The address the listener actually bound.
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Accept exactly `n` worker connections, register them with the
+    /// reactor, and start serving. Peak thread count is 1 (the reactor),
+    /// independent of `n`.
+    pub fn accept(self, n: usize) -> Result<ReactorHub> {
+        let epoll = Epoll::new().context("creating epoll instance")?;
+        let mut conns = Vec::with_capacity(n);
+        for i in 0..n {
+            let (stream, _peer) = self.listener.accept().context("accepting worker")?;
+            stream.set_nodelay(true).ok();
+            stream.set_nonblocking(true).context("setting nonblocking")?;
+            epoll
+                .add(stream.as_raw_fd(), i as u64, INTEREST_READ)
+                .context("registering worker socket")?;
+            conns.push(Some(Conn {
+                stream,
+                dec: FrameDecoder::new(),
+                out: OutQueue::new(),
+                interest: INTEREST_READ,
+            }));
+        }
+        let (wake_tx, wake_rx) = UnixStream::pair().context("creating wake pipe")?;
+        wake_tx.set_nonblocking(true)?;
+        wake_rx.set_nonblocking(true)?;
+        epoll.add(wake_rx.as_raw_fd(), WAKE_TOKEN, sys::EPOLLIN).context("registering wake")?;
+        let (cmd_tx, cmd_rx) = std::sync::mpsc::channel();
+        let (msg_tx, msg_rx) = std::sync::mpsc::channel();
+        let down = Arc::new(AtomicU64::new(0));
+        let up = Arc::new(AtomicU64::new(0));
+        let n_dead = Arc::new(AtomicUsize::new(0));
+        let reactor = Reactor {
+            epoll,
+            conns,
+            live: n,
+            wake_rx,
+            cmd_rx,
+            // Zero workers means zero possible uploads: match the
+            // threads hub, whose upload channel disconnects immediately.
+            msg_tx: if n == 0 { None } else { Some(msg_tx) },
+            up: up.clone(),
+            n_dead: n_dead.clone(),
+            stopping: false,
+            read_buf: vec![0u8; 256 * 1024],
+        };
+        let handle = std::thread::Builder::new()
+            .name("dme-reactor".to_string())
+            .spawn(move || reactor.run())
+            .context("spawning reactor thread")?;
+        Ok(ReactorHub {
+            n,
+            cmd_tx,
+            wake_tx,
+            from_workers: msg_rx,
+            down,
+            up,
+            n_dead,
+            reactor: Some(handle),
+        })
+    }
+}
+
+/// The leader-side facade over the reactor thread: implements
+/// [`TransportHub`] with the exact semantics of
+/// [`TcpHub`](super::transport::TcpHub) — same byte accounting, same
+/// error surface — over one thread instead of one per connection.
+pub struct ReactorHub {
+    n: usize,
+    cmd_tx: Sender<Cmd>,
+    wake_tx: UnixStream,
+    from_workers: Receiver<Message>,
+    down: Arc<AtomicU64>,
+    up: Arc<AtomicU64>,
+    n_dead: Arc<AtomicUsize>,
+    reactor: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ReactorHub {
+    /// Bind `addr` and accept exactly `n` worker connections.
+    pub fn listen(addr: &str, n: usize) -> Result<Self> {
+        ReactorBinding::bind(addr)?.accept(n)
+    }
+
+    fn wake(&self) {
+        // A full pipe already guarantees a pending wakeup, so WouldBlock
+        // (and any other failure: the reactor exiting closes its end) is
+        // fine to ignore.
+        let _ = (&self.wake_tx).write(&[1u8]);
+    }
+}
+
+impl TransportHub for ReactorHub {
+    fn n_workers(&self) -> usize {
+        self.n
+    }
+
+    fn broadcast(&mut self, msg: &Message) -> Result<()> {
+        // Serialize once (validating, like both other hubs); every
+        // connection shares these bytes.
+        let body = msg.to_bytes()?;
+        let mut framed = Vec::with_capacity(body.len() + 4);
+        framed.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        framed.extend_from_slice(&body);
+        let framed: Arc<[u8]> = framed.into();
+        let framed_len = framed.len() as u64;
+        // Account before handing off, against the connections known to
+        // be live: identical to the threads hub in every all-live round,
+        // and `bytes_moved` never lags a completed broadcast.
+        let dead = self.n_dead.load(Ordering::Acquire);
+        self.down.fetch_add(framed_len * (self.n - dead.min(self.n)) as u64, Ordering::Relaxed);
+        self.cmd_tx
+            .send(Cmd::Broadcast(framed))
+            .map_err(|_| anyhow::anyhow!("reactor thread exited"))?;
+        self.wake();
+        // Best-effort like the threads hub: the live connections got the
+        // message staged; a known-dead one is still a send error.
+        ensure!(dead == 0, "worker disconnected");
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Message> {
+        self.from_workers.recv().context("all workers disconnected")
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<Message>> {
+        match self.from_workers.recv_timeout(timeout) {
+            Ok(m) => Ok(Some(m)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => bail!("all workers disconnected"),
+        }
+    }
+
+    fn bytes_moved(&self) -> (u64, u64) {
+        (self.down.load(Ordering::Acquire), self.up.load(Ordering::Acquire))
+    }
+}
+
+impl Drop for ReactorHub {
+    fn drop(&mut self) {
+        // Same teardown as the threads hub: a final Shutdown broadcast,
+        // then stop. The reactor drains staged bytes (bounded grace)
+        // before closing the sockets, so the Shutdown actually lands.
+        let _ = self.broadcast(&Message::Shutdown);
+        let _ = self.cmd_tx.send(Cmd::Stop);
+        self.wake();
+        if let Some(h) = self.reactor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::transport::{TcpEndpoint, WeightedFrame};
+    use super::*;
+    use crate::protocol::Frame;
+
+    fn upload(client: u64) -> Message {
+        Message::Upload {
+            client,
+            round: 1,
+            frames: vec![WeightedFrame {
+                frame: Frame::new(vec![client as u8; 5], 37),
+                weight: 1.0,
+            }],
+        }
+    }
+
+    fn framed(msg: &Message) -> Vec<u8> {
+        let body = msg.to_bytes().unwrap();
+        let mut out = (body.len() as u32).to_le_bytes().to_vec();
+        out.extend_from_slice(&body);
+        out
+    }
+
+    #[test]
+    fn decoder_handles_one_byte_dribble() {
+        // Every legal delivery schedule must produce the same frames; the
+        // worst case is one byte at a time, with splits falling inside
+        // the length prefix itself.
+        let msgs = vec![
+            upload(3),
+            Message::Shutdown,
+            Message::SpecChange { round: 2, spec: "binary".into() },
+        ];
+        let mut wire = Vec::new();
+        for m in &msgs {
+            wire.extend_from_slice(&framed(m));
+        }
+        let mut dec = FrameDecoder::new();
+        let mut got = Vec::new();
+        for b in &wire {
+            dec.feed(std::slice::from_ref(b));
+            while let Some(frame) = dec.next_frame().unwrap() {
+                got.push(Message::from_bytes(frame).unwrap());
+            }
+        }
+        assert_eq!(got.len(), msgs.len());
+        for (sent, back) in msgs.iter().zip(&got) {
+            assert_eq!(sent.to_bytes().unwrap(), back.to_bytes().unwrap());
+        }
+        assert_eq!(dec.pending(), 0);
+    }
+
+    #[test]
+    fn decoder_handles_split_inside_length_prefix() {
+        let wire = framed(&upload(9));
+        for cut in 1..4 {
+            let mut dec = FrameDecoder::new();
+            dec.feed(&wire[..cut]);
+            assert!(dec.next_frame().unwrap().is_none(), "cut {cut}: no full prefix yet");
+            dec.feed(&wire[cut..]);
+            let frame = dec.next_frame().unwrap().expect("complete frame");
+            assert_eq!(Message::from_bytes(frame).unwrap().to_bytes().unwrap(), wire[4..]);
+        }
+    }
+
+    #[test]
+    fn decoder_rejects_oversized_prefix_before_allocating() {
+        let mut dec = FrameDecoder::new();
+        dec.feed(&u32::MAX.to_le_bytes());
+        assert!(dec.next_frame().is_err(), "oversized prefix accepted");
+        // The rejection happened on the 4 header bytes alone: nothing
+        // frame-sized was ever reserved.
+        assert!(dec.buf.capacity() < 1024, "decoder reserved {} bytes", dec.buf.capacity());
+        // Exactly at the cap is still legal (the frame just never
+        // completes here).
+        let mut dec = FrameDecoder::new();
+        dec.feed(&(MAX_FRAME_LEN as u32).to_le_bytes());
+        assert!(dec.next_frame().unwrap().is_none());
+    }
+
+    #[test]
+    fn out_queue_coalesces_small_frames() {
+        let mut q = OutQueue::new();
+        for i in 0..100u8 {
+            let frame: Arc<[u8]> = vec![i; 10].into();
+            q.stage(&frame).unwrap();
+        }
+        assert_eq!(q.staged(), 1000);
+        assert_eq!(q.chunks.len(), 1, "small frames must coalesce into one chunk");
+        let mut sink = Vec::new();
+        assert!(q.flush(&mut sink).unwrap());
+        assert_eq!(sink.len(), 1000);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn out_queue_shares_large_frames() {
+        let big: Arc<[u8]> = vec![7u8; COALESCE_LIMIT * 2].into();
+        let mut queues: Vec<OutQueue> = (0..3).map(|_| OutQueue::new()).collect();
+        for q in &mut queues {
+            q.stage(&big).unwrap();
+        }
+        // One allocation, three queues, zero copies.
+        assert_eq!(Arc::strong_count(&big), 4);
+        for q in &mut queues {
+            let mut sink = Vec::new();
+            assert!(q.flush(&mut sink).unwrap());
+            assert_eq!(sink.len(), big.len());
+        }
+    }
+
+    #[test]
+    fn out_queue_enforces_staging_cap() {
+        let mut q = OutQueue::new();
+        let frame: Arc<[u8]> = vec![0u8; COALESCE_LIMIT].into();
+        q.len = MAX_STAGED_BYTES - COALESCE_LIMIT / 2; // simulate a stalled peer
+        assert!(q.stage(&frame).is_err(), "staging past the cap must error");
+    }
+
+    #[test]
+    fn reactor_hub_round_trip() {
+        let binding = ReactorBinding::bind("127.0.0.1:0").unwrap();
+        let addr = binding.local_addr().unwrap();
+        let hub_thread = std::thread::spawn(move || {
+            let mut hub = binding.accept(2).unwrap();
+            hub.broadcast(&Message::RoundStart {
+                round: 1,
+                dim: 2,
+                payload: vec![9.0, 1.0, 3.5].into(),
+            })
+            .unwrap();
+            let mut clients = Vec::new();
+            for _ in 0..2 {
+                if let Message::Upload { client, .. } = hub.recv().unwrap() {
+                    clients.push(client);
+                }
+            }
+            clients.sort_unstable();
+            let moved = hub.bytes_moved();
+            (clients, moved)
+        });
+        let mut workers = Vec::new();
+        for id in 0..2u64 {
+            workers.push(std::thread::spawn(move || {
+                let mut ep = TcpEndpoint::connect(&addr.to_string()).unwrap();
+                match ep.recv().unwrap() {
+                    Message::RoundStart { round, payload, .. } => {
+                        assert_eq!(round, 1);
+                        assert_eq!(&payload[..], &[9.0, 1.0, 3.5]);
+                    }
+                    other => panic!("expected RoundStart, got {other:?}"),
+                }
+                ep.send(&upload(id)).unwrap();
+                assert!(matches!(ep.recv().unwrap(), Message::Shutdown));
+            }));
+        }
+        let (clients, (down, up)) = hub_thread.join().unwrap();
+        for w in workers {
+            w.join().unwrap();
+        }
+        assert_eq!(clients, vec![0, 1]);
+        // Exact accounting: one RoundStart down to each of 2 workers
+        // (the Shutdown lands after bytes_moved was read), one upload up
+        // from each.
+        let rs = Message::RoundStart { round: 1, dim: 2, payload: vec![9.0, 1.0, 3.5].into() };
+        assert_eq!(down, rs.framed_len() * 2);
+        assert_eq!(up, upload(0).framed_len() + upload(1).framed_len());
+    }
+
+    #[test]
+    fn reactor_survives_one_byte_deliveries_end_to_end() {
+        let binding = ReactorBinding::bind("127.0.0.1:0").unwrap();
+        let addr = binding.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut stream = std::net::TcpStream::connect(addr).unwrap();
+            stream.set_nodelay(true).unwrap();
+            for b in framed(&upload(5)) {
+                stream.write_all(&[b]).unwrap();
+            }
+            stream
+        });
+        let mut hub = binding.accept(1).unwrap();
+        match hub.recv().unwrap() {
+            Message::Upload { client, .. } => assert_eq!(client, 5),
+            other => panic!("expected Upload, got {other:?}"),
+        }
+        drop(client.join().unwrap());
+    }
+
+    #[test]
+    fn reactor_kills_connection_on_oversized_prefix() {
+        let binding = ReactorBinding::bind("127.0.0.1:0").unwrap();
+        let addr = binding.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut stream = std::net::TcpStream::connect(addr).unwrap();
+            stream.write_all(&u32::MAX.to_le_bytes()).unwrap();
+            stream
+        });
+        let mut hub = binding.accept(1).unwrap();
+        // The poisoned connection was the only one, so the upload
+        // channel must disconnect rather than hang.
+        assert!(hub.recv().is_err(), "oversized prefix must kill the stream");
+        drop(client.join().unwrap());
+    }
+
+    #[test]
+    fn reactor_recv_errors_when_all_workers_hang_up() {
+        let binding = ReactorBinding::bind("127.0.0.1:0").unwrap();
+        let addr = binding.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let stream = std::net::TcpStream::connect(addr).unwrap();
+            drop(stream);
+        });
+        let mut hub = binding.accept(1).unwrap();
+        client.join().unwrap();
+        assert!(hub.recv().is_err(), "EOF on the last connection must error recv");
+        // And a subsequent broadcast reports the death.
+        assert!(hub.broadcast(&Message::Shutdown).is_err());
+    }
+
+    #[test]
+    fn raise_nofile_reports_sane_limits() {
+        let (soft, hard) = raise_nofile_limit();
+        assert!(soft >= 256, "soft fd limit {soft} suspiciously low");
+        assert!(hard >= soft);
+    }
+}

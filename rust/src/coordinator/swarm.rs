@@ -1,0 +1,221 @@
+//! Synthetic client swarm: thousands of protocol-correct TCP clients
+//! driven by **one** thread.
+//!
+//! Benches and soak tests need to show a single hub sustaining rounds at
+//! n in the tens of thousands; spawning that many real `Worker` threads
+//! would measure the harness, not the hub. This driver opens `n` real
+//! sockets, multiplexes them over the same epoll/[`FrameDecoder`]/
+//! [`OutQueue`] machinery as the reactor hub, and delegates protocol
+//! behavior to a caller-supplied callback — which may be as cheap as an
+//! empty `Upload` (transport benches) or a full `Worker::step_with`
+//! encode (soak tests).
+//!
+//! Lifecycle: connect all `n` (blocking, sequential — the listener must
+//! already be bound), then serve readiness events until every
+//! connection has been closed by a `Shutdown` message or by the peer.
+
+use std::io::{self, Read};
+use std::net::{SocketAddr, TcpStream};
+use std::os::fd::AsRawFd;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Context, Result};
+
+use super::reactor::{
+    Epoll, FrameDecoder, INTEREST_READ, INTEREST_READ_WRITE, OutQueue, READABLE, WRITABLE,
+};
+use super::transport::Message;
+
+/// What a finished swarm observed, for bench/soak assertions.
+#[derive(Debug, Clone, Copy)]
+pub struct SwarmReport {
+    /// Connections successfully opened (always the requested `n`).
+    pub connected: usize,
+    /// Messages the callback answered with.
+    pub replies_sent: u64,
+    /// Complete frames received across all connections.
+    pub frames_received: u64,
+}
+
+/// Handle to a running swarm driver thread.
+pub struct Swarm {
+    handle: JoinHandle<Result<SwarmReport>>,
+}
+
+impl Swarm {
+    /// Connect `n` clients to `addr` and serve them from one driver
+    /// thread. For each received message, `reply(client_index, &msg)`
+    /// decides the response (`None` = stay silent); `Shutdown` closes
+    /// the connection and is never passed to the callback. The callback
+    /// runs on the driver thread, so heavy work in it serializes the
+    /// swarm — by design, that is still how a 16k-client bench stays at
+    /// two threads instead of 16k.
+    pub fn spawn<F>(addr: SocketAddr, n: usize, reply: F) -> Result<Swarm>
+    where
+        F: FnMut(usize, &Message) -> Option<Message> + Send + 'static,
+    {
+        let handle = std::thread::Builder::new()
+            .name("dme-swarm".to_string())
+            .spawn(move || -> Result<SwarmReport> {
+                let epoll = Epoll::new().context("creating swarm epoll")?;
+                let mut clients = Vec::with_capacity(n);
+                for i in 0..n {
+                    let stream = TcpStream::connect(addr)
+                        .with_context(|| format!("swarm client {i} connecting {addr}"))?;
+                    stream.set_nodelay(true).ok();
+                    stream.set_nonblocking(true).context("setting nonblocking")?;
+                    epoll
+                        .add(stream.as_raw_fd(), i as u64, INTEREST_READ)
+                        .context("registering swarm client")?;
+                    clients.push(Some(Client {
+                        stream,
+                        dec: FrameDecoder::new(),
+                        out: OutQueue::new(),
+                        interest: INTEREST_READ,
+                    }));
+                }
+                let driver = Driver {
+                    epoll,
+                    clients,
+                    live: n,
+                    reply,
+                    read_buf: vec![0u8; 64 * 1024],
+                    replies_sent: 0,
+                    frames_received: 0,
+                };
+                Ok(driver.run())
+            })
+            .context("spawning swarm thread")?;
+        Ok(Swarm { handle })
+    }
+
+    /// Wait for every client to disconnect and return the tally.
+    pub fn join(self) -> Result<SwarmReport> {
+        match self.handle.join() {
+            Ok(report) => report,
+            Err(_) => bail!("swarm thread panicked"),
+        }
+    }
+}
+
+struct Client {
+    stream: TcpStream,
+    dec: FrameDecoder,
+    out: OutQueue,
+    interest: u32,
+}
+
+struct Driver<F> {
+    epoll: Epoll,
+    clients: Vec<Option<Client>>,
+    live: usize,
+    reply: F,
+    read_buf: Vec<u8>,
+    replies_sent: u64,
+    frames_received: u64,
+}
+
+impl<F: FnMut(usize, &Message) -> Option<Message>> Driver<F> {
+    fn run(mut self) -> SwarmReport {
+        let mut ready: Vec<(u64, u32)> = Vec::with_capacity(512);
+        while self.live > 0 {
+            if self.epoll.wait_into(&mut ready, -1).is_err() {
+                break;
+            }
+            for &(token, revents) in &ready {
+                let i = token as usize;
+                if revents & READABLE != 0 {
+                    self.pump(i);
+                }
+                if revents & WRITABLE != 0 {
+                    self.flush(i);
+                }
+            }
+        }
+        SwarmReport {
+            connected: self.clients.len(),
+            replies_sent: self.replies_sent,
+            frames_received: self.frames_received,
+        }
+    }
+
+    /// Read until `WouldBlock`, answering complete messages as they
+    /// appear, then flush whatever the answers staged.
+    fn pump(&mut self, i: usize) {
+        loop {
+            let res = match self.clients[i].as_mut() {
+                Some(c) => c.stream.read(&mut self.read_buf),
+                None => return,
+            };
+            match res {
+                Ok(0) => return self.kill(i),
+                Ok(n) => match self.ingest(i, n) {
+                    Ok(true) => {}
+                    // Shutdown received, or the stream is poisoned:
+                    // either way this client is done.
+                    Ok(false) | Err(_) => return self.kill(i),
+                },
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => return self.kill(i),
+            }
+        }
+        self.flush(i);
+    }
+
+    /// Returns `Ok(false)` when the connection should close (Shutdown).
+    fn ingest(&mut self, i: usize, n: usize) -> Result<bool> {
+        let client = match self.clients[i].as_mut() {
+            Some(c) => c,
+            None => return Ok(true),
+        };
+        client.dec.feed(&self.read_buf[..n]);
+        while let Some(frame) = client.dec.next_frame()? {
+            self.frames_received += 1;
+            let msg = Message::from_bytes(frame)?;
+            if matches!(msg, Message::Shutdown) {
+                return Ok(false);
+            }
+            if let Some(resp) = (self.reply)(i, &msg) {
+                let body = resp.to_bytes()?;
+                let mut framed = Vec::with_capacity(body.len() + 4);
+                framed.extend_from_slice(&(body.len() as u32).to_le_bytes());
+                framed.extend_from_slice(&body);
+                let framed: Arc<[u8]> = framed.into();
+                client.out.stage(&framed)?;
+                self.replies_sent += 1;
+            }
+        }
+        Ok(true)
+    }
+
+    fn flush(&mut self, i: usize) {
+        let (fd, cur, res) = match self.clients[i].as_mut() {
+            Some(c) => (c.stream.as_raw_fd(), c.interest, c.out.flush(&mut c.stream)),
+            None => return,
+        };
+        let want = match res {
+            Ok(true) => INTEREST_READ,
+            Ok(false) => INTEREST_READ_WRITE,
+            Err(_) => return self.kill(i),
+        };
+        if want == cur {
+            return;
+        }
+        if self.epoll.modify(fd, i as u64, want).is_ok() {
+            if let Some(c) = self.clients[i].as_mut() {
+                c.interest = want;
+            }
+        } else {
+            self.kill(i);
+        }
+    }
+
+    fn kill(&mut self, i: usize) {
+        if let Some(c) = self.clients[i].take() {
+            let _ = self.epoll.del(c.stream.as_raw_fd());
+            self.live -= 1;
+        }
+    }
+}

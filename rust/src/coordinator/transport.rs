@@ -1,17 +1,37 @@
 //! Transport: moves [`Message`]s between the leader and its workers with
 //! exact byte accounting.
 //!
-//! Two implementations behind [`TransportHub`]:
+//! Three implementations behind [`TransportHub`]:
 //!
 //! * [`LoopbackHub`] — in-process channels; workers are threads. This is
 //!   the default for experiments: zero copies beyond the frames
 //!   themselves (broadcast payloads are `Arc`-shared, not cloned per
 //!   worker), deterministic, and every byte is still accounted as if it
 //!   had crossed a network.
-//! * [`TcpHub`] — a real socket transport (length-prefixed messages over
-//!   `std::net::TcpStream`), so workers can run as separate `dme worker`
-//!   processes on other machines. [`TcpHub::bind`] exposes the real
-//!   listen address before accepting, so tests can bind port 0.
+//! * [`TcpHub`] — the thread-per-connection socket transport
+//!   (length-prefixed messages over blocking `std::net::TcpStream`, one
+//!   reader thread per worker), so workers can run as separate
+//!   `dme worker` processes on other machines. [`TcpHub::bind`] exposes
+//!   the real listen address before accepting, so tests can bind port 0.
+//! * [`ReactorHub`](super::reactor::ReactorHub) (Linux) — the same
+//!   sockets served by **one** event-driven reactor thread: non-blocking
+//!   I/O behind epoll readiness, per-connection staging queues that
+//!   coalesce small frames and flush once per wakeup (one `writev`, not
+//!   one syscall per message), and a zero-copy broadcast path that
+//!   serializes each message once for all n connections. This is the
+//!   default for `--transport` and the only hub whose thread count does
+//!   not grow with n. The readiness state machine (READING ⇄ WRITING →
+//!   DEAD), the batching/flush contract, and the backpressure rule (a
+//!   stalled connection is killed at a 1 GiB staging cap rather than
+//!   buffering unboundedly — the reactor's analogue of a blocking write
+//!   eventually erroring) are documented in [`super::reactor`].
+//!
+//! [`Transport`] selects between the two TCP hubs at the CLI
+//! (`--transport reactor|threads`); [`HubBinding`] is the
+//! transport-agnostic bind → `local_addr` → accept flow. Both TCP hubs
+//! share the wire format, the validate-on-send rule, the silent-kill
+//! contract for malformed peers, and exact `framed_len` accounting, so
+//! every conformance test runs verbatim against either.
 //!
 //! Wire format (identical for both transports, little-endian):
 //!
@@ -688,6 +708,12 @@ impl TransportHub for TcpHub {
     }
 }
 
+/// Default retry count for [`TcpEndpoint::connect_with_backoff`]: seven
+/// retries at 50 ms → 1.6 s capped doubling ≈ 4.75 s of total waiting,
+/// enough for a leader that is still binding on the other side of a
+/// process launch race.
+pub const DEFAULT_CONNECT_RETRIES: u32 = 7;
+
 /// Worker-side TCP endpoint (used by the `dme worker` process).
 pub struct TcpEndpoint {
     reader: BufReader<TcpStream>,
@@ -695,11 +721,40 @@ pub struct TcpEndpoint {
 }
 
 impl TcpEndpoint {
+    /// Connect once, failing immediately on refusal (tests bind first,
+    /// so a refusal there is a bug, not a race). Process-level commands
+    /// use [`Self::connect_with_backoff`] instead.
     pub fn connect(addr: &str) -> Result<Self> {
-        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
-        stream.set_nodelay(true).ok();
-        let reader = BufReader::new(stream.try_clone()?);
-        Ok(TcpEndpoint { reader, writer: BufWriter::new(stream) })
+        Self::connect_with_backoff(addr, 0)
+    }
+
+    /// Connect with up to `retries` retries under capped exponential
+    /// backoff (50 ms doubling to a 1.6 s ceiling). A worker or mid-tier
+    /// aggregator started moments before its parent listens no longer
+    /// dies with a raw connection refusal; if every attempt fails, the
+    /// error names the address and the attempt count.
+    pub fn connect_with_backoff(addr: &str, retries: u32) -> Result<Self> {
+        let mut delay = Duration::from_millis(50);
+        let mut attempt = 0u32;
+        loop {
+            match TcpStream::connect(addr) {
+                Ok(stream) => {
+                    stream.set_nodelay(true).ok();
+                    let reader = BufReader::new(stream.try_clone()?);
+                    return Ok(TcpEndpoint { reader, writer: BufWriter::new(stream) });
+                }
+                Err(e) => {
+                    attempt += 1;
+                    if attempt > retries {
+                        return Err(e).with_context(|| {
+                            format!("connecting {addr} failed after {attempt} attempt(s)")
+                        });
+                    }
+                    std::thread::sleep(delay);
+                    delay = (delay * 2).min(Duration::from_millis(1600));
+                }
+            }
+        }
     }
 
     pub fn send(&mut self, msg: &Message) -> Result<()> {
@@ -718,6 +773,102 @@ impl Endpoint for TcpEndpoint {
     }
     fn recv_msg(&mut self) -> Result<Message> {
         TcpEndpoint::recv(self)
+    }
+}
+
+/// Which TCP hub implementation serves `dme serve` / `dme aggregate`
+/// (`--transport reactor|threads`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Transport {
+    /// Thread-per-connection blocking hub ([`TcpHub`]): one reader
+    /// thread and one `write`+`flush` syscall pair per message per
+    /// connection. Portable, simple, fine up to a few thousand workers.
+    Threads,
+    /// Single-threaded epoll reactor
+    /// ([`ReactorHub`](super::reactor::ReactorHub)): batched vectored
+    /// writes, zero-copy broadcast, thread count independent of n.
+    #[cfg(target_os = "linux")]
+    Reactor,
+}
+
+impl Default for Transport {
+    /// The reactor where it exists (Linux), threads elsewhere.
+    #[cfg(target_os = "linux")]
+    fn default() -> Self {
+        Transport::Reactor
+    }
+    /// The reactor where it exists (Linux), threads elsewhere.
+    #[cfg(not(target_os = "linux"))]
+    fn default() -> Self {
+        Transport::Threads
+    }
+}
+
+impl std::str::FromStr for Transport {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "threads" => Ok(Transport::Threads),
+            #[cfg(target_os = "linux")]
+            "reactor" => Ok(Transport::Reactor),
+            #[cfg(not(target_os = "linux"))]
+            "reactor" => bail!("the reactor transport requires Linux (epoll)"),
+            other => bail!("unknown transport {other:?} (expected \"reactor\" or \"threads\")"),
+        }
+    }
+}
+
+impl std::fmt::Display for Transport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Transport::Threads => write!(f, "threads"),
+            #[cfg(target_os = "linux")]
+            Transport::Reactor => write!(f, "reactor"),
+        }
+    }
+}
+
+/// Transport-agnostic bind → [`Self::local_addr`] → [`Self::accept`]
+/// flow: what `dme serve`/`dme aggregate` and the parameterized
+/// conformance tests use so the choice of hub is one enum value, not a
+/// code path.
+pub enum HubBinding {
+    /// A pending [`TcpHub`].
+    Threads(TcpHubBinding),
+    /// A pending [`ReactorHub`](super::reactor::ReactorHub).
+    #[cfg(target_os = "linux")]
+    Reactor(super::reactor::ReactorBinding),
+}
+
+impl HubBinding {
+    /// Bind `addr` (port 0 supported) without accepting yet.
+    pub fn bind(transport: Transport, addr: &str) -> Result<Self> {
+        match transport {
+            Transport::Threads => Ok(HubBinding::Threads(TcpHub::bind(addr)?)),
+            #[cfg(target_os = "linux")]
+            Transport::Reactor => {
+                Ok(HubBinding::Reactor(super::reactor::ReactorBinding::bind(addr)?))
+            }
+        }
+    }
+
+    /// The address the listener actually bound.
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        match self {
+            HubBinding::Threads(b) => b.local_addr(),
+            #[cfg(target_os = "linux")]
+            HubBinding::Reactor(b) => b.local_addr(),
+        }
+    }
+
+    /// Accept exactly `n` worker connections and start serving.
+    pub fn accept(self, n: usize) -> Result<Box<dyn TransportHub>> {
+        match self {
+            HubBinding::Threads(b) => Ok(Box::new(b.accept(n)?)),
+            #[cfg(target_os = "linux")]
+            HubBinding::Reactor(b) => Ok(Box::new(b.accept(n)?)),
+        }
     }
 }
 

@@ -140,9 +140,17 @@ impl Worker {
         self.run(&mut ep)
     }
 
-    /// Run the worker loop over TCP (the `dme worker` subcommand).
-    pub fn run_tcp(mut self, addr: &str) -> Result<()> {
-        let mut ep = super::transport::TcpEndpoint::connect(addr)?;
+    /// Run the worker loop over TCP (the `dme worker` subcommand),
+    /// connecting immediately (no retries).
+    pub fn run_tcp(self, addr: &str) -> Result<()> {
+        self.run_tcp_with_retries(addr, 0)
+    }
+
+    /// Run the worker loop over TCP, retrying the initial connect with
+    /// capped exponential backoff — so a worker launched moments before
+    /// its leader listens waits instead of dying with a refusal.
+    pub fn run_tcp_with_retries(mut self, addr: &str, retries: u32) -> Result<()> {
+        let mut ep = super::transport::TcpEndpoint::connect_with_backoff(addr, retries)?;
         self.run(&mut ep)
     }
 }

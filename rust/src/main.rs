@@ -10,11 +10,14 @@
 //! dme serve     --addr 0.0.0.0:7070 --workers 4 --dim 256 --protocol varlen --rounds 10
 //!               [--decode-threads N]   (0 = all cores; any value is bit-identical)
 //!               [--timeout-ms 30000]   (round barrier deadline; 0 = wait forever)
+//!               [--transport reactor|threads]  (TCP hub; default reactor on Linux)
 //!               [--fanout 16 --depth 2]  (single-process loopback tree instead of TCP)
 //!               [--auto-rate --budget-bits 4]  (rate controller picks + retunes the spec)
 //! dme aggregate --parent host:7070 --listen 0.0.0.0:7071 --children 16 --span 0:16
 //!               --dim 256 --protocol varlen [--id N] [--decode-threads N] [--timeout-ms N]
+//!               [--transport reactor|threads] [--connect-retries N]
 //! dme worker    --connect host:7071 --dim 256 --protocol varlen [--points 100]
+//!               [--connect-retries N]  (capped-backoff connect, default ≈5 s total)
 //! dme info
 //! ```
 //!
@@ -32,7 +35,7 @@ use dme::coordinator::aggregator::{spawn_local_tree, Aggregator, LocalTree};
 use dme::coordinator::leader::Leader;
 use dme::coordinator::metrics::format_tier_table;
 use dme::coordinator::topology::Topology;
-use dme::coordinator::transport::{TcpEndpoint, TcpHub};
+use dme::coordinator::transport::{DEFAULT_CONNECT_RETRIES, HubBinding, TcpEndpoint, Transport};
 use dme::coordinator::worker::{mean_update, Worker};
 use dme::data::{synthetic, Dataset};
 use dme::protocol::config::{Kind, ProtocolConfig};
@@ -82,10 +85,13 @@ commands:
              spec under a bit budget (copy-pasteable into --protocol)
   serve      TCP leader (workers/aggregators connect), or a single-process
              loopback aggregation tree with --fanout/--depth; --auto-rate
-             lets the rate controller pick and retune the spec mid-session
+             lets the rate controller pick and retune the spec mid-session;
+             --transport reactor|threads picks the TCP hub (default: the
+             epoll reactor on Linux)
   aggregate  TCP aggregation-tier node: accepts its children's uploads,
              merges them exactly, forwards one PartialUpload upstream
-  worker     TCP worker process (point --connect at a leader or aggregator)
+  worker     TCP worker process (point --connect at a leader or aggregator;
+             --connect-retries N waits with capped backoff for the parent)
   info       show compiled artifacts and available backends
 
 see README.md for all flags.";
@@ -470,17 +476,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         return Ok(());
     }
 
+    let transport: Transport = args.get("transport", Transport::default())?;
     args.reject_unknown()?;
     if let Some(depth) = depth {
         bail!("--depth {depth} only applies with --fanout (the loopback tree)");
     }
     let addr = addr.unwrap_or_else(|| "127.0.0.1:7070".to_string());
     println!(
-        "leader: listening on {addr} for {n_workers} children ({}, {decode_threads} decode threads)",
+        "leader: listening on {addr} for {n_workers} children \
+         ({}, {decode_threads} decode threads, {transport} transport)",
         proto.name()
     );
-    let hub = TcpHub::listen(&addr, n_workers)?;
-    let mut leader = Leader::new(proto, Box::new(hub), seed).with_decode_threads(decode_threads);
+    let hub = HubBinding::bind(transport, &addr)?.accept(n_workers)?;
+    let mut leader = Leader::new(proto, hub, seed).with_decode_threads(decode_threads);
     if let Some(t) = round_timeout {
         leader = leader.with_round_timeout(t);
     }
@@ -499,24 +507,28 @@ fn cmd_aggregate(args: &Args) -> Result<()> {
     let agg_id = args.get("id", span.0)?;
     let decode_threads = resolve_decode_threads(args)?;
     let timeout_ms = args.get("timeout-ms", 0u64)?;
+    let transport: Transport = args.get("transport", Transport::default())?;
+    let retries = args.get("connect-retries", DEFAULT_CONNECT_RETRIES)?;
     let proto = build_protocol(args, dim)?;
     args.reject_unknown()?;
     println!(
         "aggregator {agg_id} [{}..{}): listening on {listen} for {children} children, \
-         parent {parent} ({}, {decode_threads} decode threads)",
+         parent {parent} ({}, {decode_threads} decode threads, {transport} transport)",
         span.0,
         span.1,
         proto.name()
     );
     // Accept our children first, then connect upstream — the parent's
-    // accept loop is what gates round start, so ordering is safe.
-    let hub = TcpHub::listen(&listen, children)?;
-    let mut up = TcpEndpoint::connect(&parent)?;
+    // accept loop is what gates round start, so ordering is safe. The
+    // upstream connect retries with backoff so a tree can be launched
+    // leaves-first without racing the parent's bind.
+    let hub = HubBinding::bind(transport, &listen)?.accept(children)?;
+    let mut up = TcpEndpoint::connect_with_backoff(&parent, retries)?;
     let mut agg = Aggregator::new(proto, seed, agg_id, span).with_decode_threads(decode_threads);
     if timeout_ms > 0 {
         agg = agg.with_round_timeout(Duration::from_millis(timeout_ms));
     }
-    let report = agg.run(Box::new(hub), &mut up)?;
+    let report = agg.run(hub, &mut up)?;
     println!("{}", report.metrics.summary());
     println!(
         "ingress {} bytes from {} children; egress accounted by the parent",
@@ -531,6 +543,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let n_points = args.get("points", 100usize)?;
     let client_id = args.get("id", std::process::id() as u64)?;
     let seed = args.get("seed", 42u64)?;
+    let retries = args.get("connect-retries", DEFAULT_CONNECT_RETRIES)?;
     let proto = build_protocol(args, dim)?;
     let data = load_data(args, n_points, dim, seed ^ client_id)?;
     args.reject_unknown()?;
@@ -542,7 +555,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
         update: mean_update(),
         seed,
     };
-    worker.run_tcp(&addr)
+    worker.run_tcp_with_retries(&addr, retries)
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

@@ -10,7 +10,7 @@
 use std::sync::Arc;
 
 use dme::coordinator::leader::{spawn_local_cluster, Leader};
-use dme::coordinator::transport::{TcpHub, TransportHub};
+use dme::coordinator::transport::{HubBinding, TcpHub, Transport, TransportHub};
 use dme::coordinator::worker::{mean_update, Worker};
 use dme::protocol::config::ProtocolConfig;
 use dme::rng::Pcg64;
@@ -75,21 +75,36 @@ fn loopback_round(
     (out.means, down, up)
 }
 
-/// Run one round of `spec` over real TCP sockets; returns (means, down, up).
+/// Every TCP hub implementation this platform can run: what the
+/// conformance suites sweep so threads and reactor stay interchangeable.
+fn transports_under_test() -> Vec<Transport> {
+    #[cfg(target_os = "linux")]
+    {
+        vec![Transport::Threads, Transport::Reactor]
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        vec![Transport::Threads]
+    }
+}
+
+/// Run one round of `spec` over real TCP sockets on the given transport;
+/// returns (means, down, up).
 fn tcp_round(
+    transport: Transport,
     spec: &str,
     d: usize,
     sh: Vec<Vec<Vec<f32>>>,
     seed: u64,
 ) -> (Vec<Vec<f32>>, u64, u64) {
     let n = sh.len();
-    let binding = TcpHub::bind("127.0.0.1:0").unwrap();
+    let binding = HubBinding::bind(transport, "127.0.0.1:0").unwrap();
     let addr = binding.local_addr().unwrap().to_string();
     let spec_owned = spec.to_string();
     let leader_thread = std::thread::spawn(move || {
         let proto = ProtocolConfig::parse(&spec_owned, d).unwrap().build().unwrap();
         let hub = binding.accept(n).unwrap();
-        let mut leader = Leader::new(proto, Box::new(hub), seed);
+        let mut leader = Leader::new(proto, hub, seed);
         let out = leader.round(0, d as u32, &[]).unwrap();
         let m = leader.metrics().rounds.last().unwrap();
         let bytes = (m.cum_down_bytes, m.cum_up_bytes);
@@ -177,8 +192,10 @@ fn tcp_cluster_end_to_end() {
 fn loopback_and_tcp_bit_identical_all_protocols() {
     // The transport-conformance guarantee: a loopback round and a TCP
     // round with identical seeds and shards produce bit-identical means
-    // AND identical byte accounting (both hubs account framed wire
-    // bytes), for every protocol spec the registry can build.
+    // AND identical byte accounting (all hubs account framed wire
+    // bytes), for every protocol spec the registry can build — on every
+    // TCP transport (thread-per-connection and the epoll reactor), so
+    // the two TCP hubs are also transitively identical to each other.
     let specs = [
         "float32",
         "binary",
@@ -197,17 +214,20 @@ fn loopback_and_tcp_bit_identical_all_protocols() {
     ];
     let d = 32;
     let n = 4;
+    let transports = transports_under_test();
     for spec in specs {
         let sh = shards(n, d, 11);
         let (loop_means, loop_down, loop_up) = loopback_round(spec, d, sh.clone(), 123);
-        let (tcp_means, tcp_down, tcp_up) = tcp_round(spec, d, sh, 123);
-        assert_eq!(
-            bits_of(&loop_means),
-            bits_of(&tcp_means),
-            "{spec}: transports disagree on the decoded mean"
-        );
-        assert_eq!(loop_up, tcp_up, "{spec}: uplink byte accounting diverges");
-        assert_eq!(loop_down, tcp_down, "{spec}: downlink byte accounting diverges");
+        for &transport in &transports {
+            let (tcp_means, tcp_down, tcp_up) = tcp_round(transport, spec, d, sh.clone(), 123);
+            assert_eq!(
+                bits_of(&loop_means),
+                bits_of(&tcp_means),
+                "{spec}/{transport}: transports disagree on the decoded mean"
+            );
+            assert_eq!(loop_up, tcp_up, "{spec}/{transport}: uplink accounting diverges");
+            assert_eq!(loop_down, tcp_down, "{spec}/{transport}: downlink accounting diverges");
+        }
     }
 }
 

@@ -1,0 +1,199 @@
+//! Transport robustness: framing under adversarial delivery schedules,
+//! connect backoff, and the reactor's scaling contract.
+//!
+//! These tests drive the hubs with raw `TcpStream`s (not `TcpEndpoint`)
+//! so the byte boundaries on the wire are exactly what the test says
+//! they are: one byte per `write`, a length prefix split mid-field, a
+//! forged oversized prefix.
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use dme::coordinator::transport::{
+    HubBinding, Message, TcpEndpoint, Transport, TransportHub, WeightedFrame,
+};
+use dme::protocol::Frame;
+
+/// Every TCP hub implementation this platform can run.
+fn transports_under_test() -> Vec<Transport> {
+    #[cfg(target_os = "linux")]
+    {
+        vec![Transport::Threads, Transport::Reactor]
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        vec![Transport::Threads]
+    }
+}
+
+fn upload(client: u64, round: u64) -> Message {
+    Message::Upload {
+        client,
+        round,
+        frames: vec![WeightedFrame { frame: Frame::new(vec![0xA5; 7], 53), weight: 1.0 }],
+    }
+}
+
+fn framed(msg: &Message) -> Vec<u8> {
+    let body = msg.to_bytes().unwrap();
+    let mut out = (body.len() as u32).to_le_bytes().to_vec();
+    out.extend_from_slice(&body);
+    out
+}
+
+#[test]
+fn dribbled_one_byte_writes_survive_both_transports() {
+    // The cruelest legal TCP delivery: every byte in its own segment,
+    // so every message boundary — including the u32 length prefix
+    // itself — is split. Both hubs must reassemble exactly.
+    let msgs = vec![
+        upload(1, 0),
+        Message::SpecChange { round: 1, spec: "binary".into() },
+        upload(2, 1),
+    ];
+    for transport in transports_under_test() {
+        let binding = HubBinding::bind(transport, "127.0.0.1:0").unwrap();
+        let addr = binding.local_addr().unwrap();
+        let wire: Vec<u8> = msgs.iter().flat_map(|m| framed(m)).collect();
+        let client = std::thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            stream.set_nodelay(true).unwrap();
+            for b in wire {
+                stream.write_all(&[b]).unwrap();
+            }
+            stream
+        });
+        let mut hub = binding.accept(1).unwrap();
+        for want in &msgs {
+            let got = hub.recv().unwrap();
+            assert_eq!(
+                got.to_bytes().unwrap(),
+                want.to_bytes().unwrap(),
+                "{transport}: message mangled by dribbled delivery"
+            );
+        }
+        assert_eq!(
+            hub.bytes_moved().1,
+            msgs.iter().map(|m| m.framed_len()).sum::<u64>(),
+            "{transport}: uplink accounting under dribbled delivery"
+        );
+        drop(client.join().unwrap());
+    }
+}
+
+#[test]
+fn oversized_length_prefix_rejected_on_both_transports() {
+    // A forged u32::MAX length prefix must kill the connection before
+    // any frame-sized allocation, on both hubs; with that lone worker
+    // dead, recv reports disconnection instead of hanging.
+    for transport in transports_under_test() {
+        let binding = HubBinding::bind(transport, "127.0.0.1:0").unwrap();
+        let addr = binding.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            stream.write_all(&u32::MAX.to_le_bytes()).unwrap();
+            stream
+        });
+        let mut hub = binding.accept(1).unwrap();
+        assert!(
+            hub.recv().is_err(),
+            "{transport}: oversized length prefix must error recv, not hang or allocate"
+        );
+        drop(client.join().unwrap());
+    }
+}
+
+#[test]
+fn connect_backoff_waits_for_late_listener() {
+    // Reserve a port, drop it, and only rebind 150 ms later — the
+    // worker-starts-before-leader race. Backoff must ride it out.
+    let placeholder = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = placeholder.local_addr().unwrap();
+    drop(placeholder);
+    let server = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(150));
+        let listener = TcpListener::bind(addr).unwrap();
+        let (stream, _) = listener.accept().unwrap();
+        stream
+    });
+    let ep = TcpEndpoint::connect_with_backoff(&addr.to_string(), 8);
+    assert!(ep.is_ok(), "backoff should outlast a 150 ms bind race: {:?}", ep.err());
+    drop(server.join().unwrap());
+}
+
+#[test]
+fn connect_backoff_failure_names_address_and_attempts() {
+    // Nothing ever listens: the final error must say where we tried and
+    // how many times, and the retries must actually have waited.
+    let placeholder = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = placeholder.local_addr().unwrap().to_string();
+    drop(placeholder);
+    let start = Instant::now();
+    let err = TcpEndpoint::connect_with_backoff(&addr, 2).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains(&addr), "error must name the address: {msg}");
+    assert!(msg.contains("3 attempt"), "error must count attempts: {msg}");
+    // Two sleeps happened: 50 ms + 100 ms.
+    assert!(
+        start.elapsed() >= Duration::from_millis(140),
+        "backoff returned too fast: {:?}",
+        start.elapsed()
+    );
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn reactor_sustains_n_2048_round_with_flat_thread_count() {
+    // The scaling contract in one test: a full broadcast + 2048-upload
+    // round through one reactor hub, with the process's thread count
+    // staying O(1) — the swarm multiplexes all 2048 clients on a single
+    // thread, the hub serves them on a single thread.
+    use dme::coordinator::swarm::Swarm;
+
+    dme::coordinator::reactor::raise_nofile_limit();
+    let n = 2048usize;
+    let binding = HubBinding::bind(Transport::Reactor, "127.0.0.1:0").unwrap();
+    let addr = binding.local_addr().unwrap();
+    let swarm = Swarm::spawn(addr, n, move |i, msg| match msg {
+        Message::RoundStart { round, .. } => {
+            Some(Message::Upload { client: i as u64, round: *round, frames: vec![] })
+        }
+        _ => None,
+    })
+    .unwrap();
+    let mut hub = binding.accept(n).unwrap();
+    hub.broadcast(&Message::RoundStart { round: 0, dim: 8, payload: vec![0.5f32; 8].into() })
+        .unwrap();
+    let mut seen = vec![false; n];
+    for _ in 0..n {
+        match hub.recv().unwrap() {
+            Message::Upload { client, .. } => {
+                assert!(!seen[client as usize], "client {client} uploaded twice");
+                seen[client as usize] = true;
+            }
+            other => panic!("expected Upload, got {other:?}"),
+        }
+    }
+    let threads = thread_count();
+    assert!(
+        threads < 64,
+        "thread count {threads} with {n} live connections — the hub is not O(1) threads"
+    );
+    drop(hub); // broadcasts Shutdown; the swarm drains and exits
+    let report = swarm.join().unwrap();
+    assert_eq!(report.connected, n);
+    assert_eq!(report.replies_sent, n as u64);
+}
+
+#[cfg(target_os = "linux")]
+fn thread_count() -> usize {
+    let status = std::fs::read_to_string("/proc/self/status").unwrap();
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .expect("Threads: line in /proc/self/status")
+        .trim()
+        .parse()
+        .unwrap()
+}

@@ -24,7 +24,7 @@ use dme::coordinator::leader::{
 };
 use dme::coordinator::topology::Topology;
 use dme::coordinator::transport::{
-    LoopbackHub, Message, TcpEndpoint, TcpHub, TransportHub, WeightedFrame,
+    HubBinding, LoopbackHub, Message, TcpEndpoint, Transport, TransportHub, WeightedFrame,
 };
 use dme::coordinator::worker::{mean_update, UpdateFn, Worker};
 use dme::protocol::config::ProtocolConfig;
@@ -214,8 +214,10 @@ fn loopback_tree_full_stack_matches_reference() {
 }
 
 /// Run two rounds of `spec` over a real TCP tree (leader + aggregators +
-/// workers as separate sockets); returns outcomes and root ingress bytes.
+/// workers as separate sockets) on the given transport; returns outcomes
+/// and root ingress bytes.
 fn tcp_tree_rounds(
+    transport: Transport,
     spec: &str,
     d: usize,
     shards: &[Vec<Vec<f32>>],
@@ -225,7 +227,7 @@ fn tcp_tree_rounds(
 ) -> (Vec<RoundOutcome>, u64) {
     assert_eq!(topo.depth(), 2, "helper wires one aggregator tier");
     let tier = &topo.levels()[0];
-    let leader_binding = TcpHub::bind("127.0.0.1:0").unwrap();
+    let leader_binding = HubBinding::bind(transport, "127.0.0.1:0").unwrap();
     let leader_addr = leader_binding.local_addr().unwrap().to_string();
 
     // Aggregators: bind, report their worker-facing address, accept
@@ -239,14 +241,14 @@ fn tcp_tree_rounds(
         let (span, id, n_children) = (spec_node.span, spec_node.id, spec_node.children.len());
         agg_threads.push(std::thread::spawn(move || {
             let proto = ProtocolConfig::parse(&spec_s, d).unwrap().build().unwrap();
-            let binding = TcpHub::bind("127.0.0.1:0").unwrap();
+            let binding = HubBinding::bind(transport, "127.0.0.1:0").unwrap();
             addr_tx.send((idx, binding.local_addr().unwrap().to_string())).unwrap();
             let hub = binding.accept(n_children).unwrap();
             let mut up = TcpEndpoint::connect(&leader_addr).unwrap();
             Aggregator::new(proto, seed, id, span)
                 .with_level(0)
                 .with_decode_threads(2)
-                .run(Box::new(hub), &mut up)
+                .run(hub, &mut up)
                 .unwrap()
         }));
     }
@@ -275,7 +277,7 @@ fn tcp_tree_rounds(
 
     let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
     let hub = leader_binding.accept(tier.len()).unwrap();
-    let mut leader = Leader::new(proto, Box::new(hub), seed).with_decode_threads(2);
+    let mut leader = Leader::new(proto, hub, seed).with_decode_threads(2);
     let mut outcomes = Vec::new();
     for round in 0..2u64 {
         outcomes.push(leader.round(round, d as u32, &[]).unwrap());
@@ -291,27 +293,50 @@ fn tcp_tree_rounds(
     (outcomes, root_up)
 }
 
+/// Every TCP hub implementation this platform can run.
+fn transports_under_test() -> Vec<Transport> {
+    #[cfg(target_os = "linux")]
+    {
+        vec![Transport::Threads, Transport::Reactor]
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        vec![Transport::Threads]
+    }
+}
+
 #[test]
 fn tcp_tree_matches_reference_with_identical_accounting() {
-    // Real sockets for every spec at (fan-in 7, depth 2): bit-identical
-    // to the flat reference, AND the root hub's ingress bytes equal the
-    // loopback tree's — both hubs account framed wire bytes.
+    // Real sockets for every spec at (fan-in 7, depth 2), on every TCP
+    // transport (thread-per-connection and the epoll reactor):
+    // bit-identical to the flat reference, AND the root hub's ingress
+    // bytes equal the loopback tree's — all hubs account framed wire
+    // bytes, so the two TCP transports are also identical to each other.
     let d = 32;
     let n = 10;
     let seed = 123;
     let shards = make_shards(n, d, seed);
     let update = multi_slot_update();
     let topo = Topology::uniform(n as u64, 7, 2).unwrap();
+    let transports = transports_under_test();
     for spec in SPECS {
         let mut wants = Vec::new();
         for round in 0..2u64 {
             let (proto, state, uploads) = build_uploads(spec, d, round, &shards, &update, seed);
             wants.push(aggregate_uploads_reference(proto.as_ref(), &state, uploads).unwrap());
         }
-        let (tcp_outcomes, tcp_root_up) =
-            tcp_tree_rounds(spec, d, &shards, &update, seed, &topo);
-        for (round, (got, want)) in tcp_outcomes.iter().zip(&wants).enumerate() {
-            assert_outcomes_bit_identical(got, want, &format!("tcp spec={spec} round={round}"));
+        let mut root_ups = Vec::new();
+        for &transport in &transports {
+            let (tcp_outcomes, tcp_root_up) =
+                tcp_tree_rounds(transport, spec, d, &shards, &update, seed, &topo);
+            for (round, (got, want)) in tcp_outcomes.iter().zip(&wants).enumerate() {
+                assert_outcomes_bit_identical(
+                    got,
+                    want,
+                    &format!("tcp/{transport} spec={spec} round={round}"),
+                );
+            }
+            root_ups.push(tcp_root_up);
         }
         // Loopback twin with identical seeds and shards.
         let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
@@ -325,10 +350,12 @@ fn tcp_tree_matches_reference_with_identical_accounting() {
         let (_, loop_root_up) = leader.bytes_moved();
         leader.shutdown().unwrap();
         tree.join().unwrap();
-        assert_eq!(
-            tcp_root_up, loop_root_up,
-            "{spec}: root ingress accounting diverges between hubs"
-        );
+        for (&transport, &tcp_root_up) in transports.iter().zip(&root_ups) {
+            assert_eq!(
+                tcp_root_up, loop_root_up,
+                "{spec}/{transport}: root ingress accounting diverges between hubs"
+            );
+        }
     }
 }
 
@@ -475,27 +502,34 @@ fn partial_upload_accounting_identical_on_both_hubs() {
     hub.recv().unwrap();
     assert_eq!(hub.bytes_moved().1, framed);
 
-    // TCP: reader-side accounting after a real socket crossing.
-    let binding = TcpHub::bind("127.0.0.1:0").unwrap();
-    let addr = binding.local_addr().unwrap().to_string();
-    let msg2 = msg.clone();
-    let sender = std::thread::spawn(move || {
-        let mut ep = TcpEndpoint::connect(&addr).unwrap();
-        ep.send(&msg2).unwrap();
-        // Wait for shutdown so the hub's reader sees an orderly close.
-        ep.recv().unwrap()
-    });
-    let mut hub = binding.accept(1).unwrap();
-    match hub.recv().unwrap() {
-        Message::PartialUpload { agg_id, slots, .. } => {
-            assert_eq!(agg_id, 5);
-            assert_eq!(slots.len(), 1);
+    // TCP: reader-side accounting after a real socket crossing, on both
+    // TCP hub implementations.
+    for transport in transports_under_test() {
+        let binding = HubBinding::bind(transport, "127.0.0.1:0").unwrap();
+        let addr = binding.local_addr().unwrap().to_string();
+        let msg2 = msg.clone();
+        let sender = std::thread::spawn(move || {
+            let mut ep = TcpEndpoint::connect(&addr).unwrap();
+            ep.send(&msg2).unwrap();
+            // Wait for shutdown so the hub's reader sees an orderly close.
+            ep.recv().unwrap()
+        });
+        let mut hub = binding.accept(1).unwrap();
+        match hub.recv().unwrap() {
+            Message::PartialUpload { agg_id, slots, .. } => {
+                assert_eq!(agg_id, 5);
+                assert_eq!(slots.len(), 1);
+            }
+            other => panic!("expected PartialUpload, got {other:?}"),
         }
-        other => panic!("expected PartialUpload, got {other:?}"),
+        assert_eq!(
+            hub.bytes_moved().1,
+            framed,
+            "{transport}: TCP accounting diverges from loopback"
+        );
+        hub.broadcast(&Message::Shutdown).unwrap();
+        sender.join().unwrap();
     }
-    assert_eq!(hub.bytes_moved().1, framed, "TCP accounting diverges from loopback");
-    hub.broadcast(&Message::Shutdown).unwrap();
-    sender.join().unwrap();
 }
 
 #[test]
