@@ -4,10 +4,13 @@
 //! 1 vs N threads), the same-run vector-vs-forced-scalar dispatch pair
 //! (rotated k=16 at d=2^18), the exact carry-save fold vs a plain f64
 //! fold, the encode-scratch allocation audit, the streaming leader
-//! aggregation (n worker uploads, 1 vs N decode threads), PJRT
-//! executable dispatch, a full coordinator round, and the transport rows
-//! (reactor hub scale at thousands of multiplexed connections, plus the
-//! same-run threads-vs-reactor per-message broadcast cost pair).
+//! aggregation (n worker uploads, 1 vs N decode threads), the
+//! dimension-shard slice/concat rows (`shard/concat@d` up to 2^20), the
+//! multi-tenant session rows (`tenant/mux@t` interleaved rounds over one
+//! tree), PJRT executable dispatch, a full coordinator round, and the
+//! transport rows (reactor hub scale at thousands of multiplexed
+//! connections, plus the same-run threads-vs-reactor per-message
+//! broadcast cost pair).
 //!
 //! ```bash
 //! cargo bench --offline --bench micro                 # full run
@@ -669,6 +672,45 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // ---- dimension sharding: slice + root concat at large d ----
+    //
+    // The root-side cost of the sharded exact fold: slicing one
+    // full-dimension SlotPartial into s contiguous shard partials (what
+    // each aggregator below the root does per slot) and concatenating
+    // them back (what the root does per slot). Bit-identity is asserted
+    // before timing; units are coordinates of the full dimension, so
+    // the rows read directly as coords/s of reassembly overhead.
+    {
+        let shard_dims: &[usize] = if smoke { &[1 << 14] } else { &[1 << 14, 1 << 17, 1 << 20] };
+        for &d in shard_dims {
+            let mut rng = Pcg64::new(51 + d as u64);
+            let mut v = vec![0.0f32; d];
+            rng.fill_gaussian_f32(&mut v);
+            let mut part = SlotPartial::from_decoded(&v, 1.0, 1)?;
+            rng.fill_gaussian_f32(&mut v);
+            part.add_decoded(&v, 2.0, 1)?;
+            let log2d = d.trailing_zeros();
+            let s = 8u32;
+            let ranges = dme::coordinator::topology::split_ranges(d, s);
+            let slices: Vec<SlotPartial> = ranges
+                .iter()
+                .map(|&(lo, hi)| part.slice(lo as usize, hi as usize))
+                .collect::<anyhow::Result<_>>()?;
+            let paired: Vec<((u32, u32), &SlotPartial)> =
+                ranges.iter().copied().zip(slices.iter()).collect();
+            let back = SlotPartial::concat_shards(&paired, d)?;
+            assert!(back == part, "shard round-trip changed the partial");
+            b.run(&format!("shard/slice@d=2^{log2d} s={s}"), Some(d as f64), || {
+                for &(lo, hi) in &ranges {
+                    std::hint::black_box(part.slice(lo as usize, hi as usize).unwrap());
+                }
+            });
+            b.run(&format!("shard/concat@d=2^{log2d} s={s}"), Some(d as f64), || {
+                std::hint::black_box(SlotPartial::concat_shards(&paired, d).unwrap());
+            });
+        }
+    }
+
     // ---- backends: native vs PJRT dispatch ----
     {
         let d = 1024;
@@ -729,6 +771,55 @@ fn main() -> anyhow::Result<()> {
         leader.shutdown()?;
         for h in handles {
             h.join().unwrap()?;
+        }
+    }
+
+    // ---- multi-tenant mux: t interleaved sessions over one tree ----
+    //
+    // The session-multiplexing overhead, measured end to end: t tenants
+    // (same spec, distinct session ids) drive interleaved rounds through
+    // one spawn_mux_tree loopback tree. Units are total client
+    // coordinates folded per iteration (t · n · d), so the rows are
+    // comparable across t: flat units/s means the mux adds no
+    // per-tenant cost beyond the extra tenants' own work.
+    {
+        use dme::coordinator::aggregator::spawn_mux_tree;
+
+        let d = 256;
+        let n = 16usize;
+        let mut rng = Pcg64::new(61);
+        let shards: Vec<Vec<Vec<f32>>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0.0f32; d];
+                rng.fill_gaussian_f32(&mut v);
+                vec![v]
+            })
+            .collect();
+        let tenant_counts: &[usize] = if smoke { &[2] } else { &[1, 2, 4] };
+        for &t in tenant_counts {
+            let tenants: Vec<(u16, Arc<dyn Protocol>)> = (1..=t as u16)
+                .map(|s| -> anyhow::Result<(u16, Arc<dyn Protocol>)> {
+                    Ok((s, ProtocolConfig::parse("klevel:k=16", d)?.build()?))
+                })
+                .collect::<anyhow::Result<_>>()?;
+            let topo = Topology::uniform(n as u64, 4, 2)?;
+            let (_mux, mut leaders, tree) =
+                spawn_mux_tree(&tenants, shards.clone(), mean_update(), 9, &topo, 2, None)?;
+            let mut round = 0u64;
+            b.run(
+                &format!("tenant/mux@t={t} n={n} d={d}"),
+                Some((t * n * d) as f64),
+                || {
+                    for leader in leaders.iter_mut() {
+                        leader.round(round, d as u32, &[]).unwrap();
+                    }
+                    round += 1;
+                },
+            );
+            for leader in &mut leaders {
+                leader.shutdown()?;
+            }
+            tree.join()?;
         }
     }
 

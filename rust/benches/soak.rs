@@ -1,16 +1,20 @@
 //! Soak: a depth-2 TCP aggregation tree under the reactor transport,
-//! full protocol traffic, hard wall-clock budget.
+//! full multi-tenant protocol traffic, hard wall-clock budget.
 //!
-//! Shape: one leader (reactor hub) fans in 16 aggregators; each
-//! aggregator (its own reactor hub) serves its span of simulated
-//! clients, driven by one [`Swarm`] thread per aggregator running real
-//! `Worker::step_with` encodes (spec `binary`, d = 512). At the default
-//! n = 2048 that is 2048 live sockets and ~34 threads (16 aggregators +
-//! 16 swarm drivers + 17 reactors), never a thread per client.
+//! Shape: a `SessionMux` over one root reactor hub hosts one leader per
+//! tenant; the shared tree fans in 16 aggregators (each running every
+//! session); each aggregator (its own reactor hub) serves its span of
+//! simulated clients, driven by one [`Swarm`] thread per aggregator
+//! running real `Worker::step_for` encodes per session (spec `binary`,
+//! d = 512). At the default n = 2048 that is 2048 live sockets and ~34
+//! threads (16 aggregators + 16 swarm drivers + 17 reactors), never a
+//! thread per client — and never a socket per tenant: the envelope's
+//! session id multiplexes every tenant over the same connections.
 //!
-//! Knobs (env): `DME_SOAK_N` (default 2048), `DME_SOAK_ROUNDS` (5),
-//! `DME_SOAK_BUDGET_MS` (60000 — the run **asserts** it finishes under
-//! this). `--json out.json` writes round latencies for the CI artifact.
+//! Knobs (env): `DME_SOAK_N` (default 2048), `DME_SOAK_TENANTS` (2),
+//! `DME_SOAK_ROUNDS` (5), `DME_SOAK_BUDGET_MS` (60000 — the run
+//! **asserts** it finishes under this). `--json out.json` writes round
+//! latencies and per-session byte splits for the CI artifact.
 
 #[cfg(not(target_os = "linux"))]
 fn main() {
@@ -20,19 +24,21 @@ fn main() {
 #[cfg(target_os = "linux")]
 fn main() -> anyhow::Result<()> {
     use std::sync::mpsc;
+    use std::sync::Arc;
     use std::time::Instant;
 
     use dme::coordinator::aggregator::Aggregator;
     use dme::coordinator::leader::Leader;
     use dme::coordinator::reactor::raise_nofile_limit;
+    use dme::coordinator::session::SessionMux;
     use dme::coordinator::swarm::Swarm;
     use dme::coordinator::topology::Topology;
     use dme::coordinator::transport::{
-        DEFAULT_CONNECT_RETRIES, HubBinding, Message, TcpEndpoint, Transport,
+        DEFAULT_CONNECT_RETRIES, Envelope, HubBinding, Message, TcpEndpoint, Transport,
     };
     use dme::coordinator::worker::{mean_update, Worker};
     use dme::protocol::config::ProtocolConfig;
-    use dme::protocol::EncodeScratch;
+    use dme::protocol::{EncodeScratch, Protocol};
     use dme::rng::Pcg64;
 
     let env_num = |key: &str, default: u64| -> u64 {
@@ -45,6 +51,7 @@ fn main() -> anyhow::Result<()> {
         .and_then(|i| argv.get(i + 1))
         .cloned();
     let n = env_num("DME_SOAK_N", 2048) as usize;
+    let n_tenants = env_num("DME_SOAK_TENANTS", 2).clamp(1, u16::MAX as u64) as usize;
     let rounds = env_num("DME_SOAK_ROUNDS", 5);
     let budget_ms = env_num("DME_SOAK_BUDGET_MS", 60_000);
     let d = 512usize;
@@ -52,13 +59,15 @@ fn main() -> anyhow::Result<()> {
     let seed = 41u64;
     let n_aggs = 16usize;
     let fan_in = n.div_ceil(n_aggs).max(1);
+    // Tenant sessions start at 1: session 0 is the root/solo wire id.
+    let sessions: Vec<u16> = (1..=n_tenants as u16).collect();
 
     raise_nofile_limit();
     let topo = Topology::uniform(n as u64, fan_in, 2)?;
     let tier = &topo.levels()[0];
     println!(
-        "soak: n={n} clients, {} aggregators (fan-in {fan_in}), d={d} {spec}, {rounds} rounds, \
-         budget {budget_ms} ms",
+        "soak: n={n} clients x {n_tenants} tenants, {} aggregators (fan-in {fan_in}), d={d} \
+         {spec}, {rounds} rounds, budget {budget_ms} ms",
         tier.len()
     );
 
@@ -73,14 +82,22 @@ fn main() -> anyhow::Result<()> {
     for (idx, node) in tier.iter().enumerate() {
         let leader_addr = leader_addr.clone();
         let addr_tx = addr_tx.clone();
+        let sessions = sessions.clone();
         let (span, id, n_children) = (node.span, node.id, node.children.len());
         agg_threads.push(std::thread::spawn(move || -> anyhow::Result<()> {
-            let proto = ProtocolConfig::parse(spec, d)?.build()?;
+            let tenants: Vec<(u16, Arc<dyn Protocol>)> = sessions
+                .iter()
+                .map(|&s| Ok((s, ProtocolConfig::parse(spec, d)?.build()?)))
+                .collect::<anyhow::Result<_>>()?;
+            let proto = tenants[0].1.clone();
             let binding = HubBinding::bind(Transport::Reactor, "127.0.0.1:0")?;
             addr_tx.send((idx, binding.local_addr()?.to_string())).ok();
             let hub = binding.accept(n_children)?;
             let mut up = TcpEndpoint::connect_with_backoff(&leader_addr, DEFAULT_CONNECT_RETRIES)?;
-            Aggregator::new(proto, seed, id, span).with_level(0).run(hub, &mut up)?;
+            Aggregator::new(proto, seed, id, span)
+                .with_level(0)
+                .with_session_protocols(&tenants)
+                .run(hub, &mut up)?;
             Ok(())
         }));
     }
@@ -92,7 +109,10 @@ fn main() -> anyhow::Result<()> {
     }
 
     // One swarm per aggregator: its span's clients on one driver thread,
-    // each replying to RoundStart with a real protocol-encoded upload.
+    // each replying to every session's RoundStart with a real
+    // protocol-encoded upload keyed to that session (the session id
+    // feeds the private-stream derivation), and hanging up only after
+    // every tenant's Shutdown.
     let mut swarms = Vec::new();
     for (idx, node) in tier.iter().enumerate() {
         let span = node.span;
@@ -113,52 +133,87 @@ fn main() -> anyhow::Result<()> {
             });
             scratches.push(EncodeScratch::default());
         }
-        swarms.push(Swarm::spawn(addr, count, move |i, msg| match msg {
-            Message::RoundStart { round, dim, payload } => {
-                workers[i].step_with(*round, *dim, payload, &mut scratches[i]).ok()
-            }
+        swarms.push(Swarm::spawn_mux(addr, count, n_tenants, move |i, env| match &env.msg {
+            Message::RoundStart { round, dim, payload } => workers[i]
+                .step_for(env.session, *round, *dim, payload, &mut scratches[i])
+                .ok()
+                .map(|msg| Envelope { session: env.session, msg }),
             _ => None,
         })?);
     }
 
-    let proto = ProtocolConfig::parse(spec, d)?.build()?;
-    let hub = leader_binding.accept(tier.len())?;
-    let mut leader = Leader::new(proto, hub, seed).with_decode_threads(2);
+    // One leader per tenant over a shared mux: every session rides the
+    // same 16 root connections.
+    let mux = SessionMux::new(leader_binding.accept(tier.len())?);
+    let mut leaders = Vec::with_capacity(n_tenants);
+    for &s in &sessions {
+        let proto = ProtocolConfig::parse(spec, d)?.build()?;
+        leaders.push(
+            Leader::new(proto, Box::new(mux.view(s)), seed)
+                .with_session(s)
+                .with_decode_threads(2),
+        );
+    }
     let connect_ms = t_start.elapsed().as_millis();
     println!("soak: tree up ({} sockets) in {connect_ms} ms", n + tier.len());
 
     let mut round_ms = Vec::new();
     for round in 0..rounds {
         let t0 = Instant::now();
-        let out = leader.round(round, d as u32, &[])?;
+        // Alternate drive order so each round parks some tenant's
+        // envelopes in the mux at least once.
+        let order: Vec<usize> = if round % 2 == 0 {
+            (0..leaders.len()).collect()
+        } else {
+            (0..leaders.len()).rev().collect()
+        };
+        for i in order {
+            let out = leaders[i].round(round, d as u32, &[])?;
+            anyhow::ensure!(
+                out.n_frames == n,
+                "round {round} session {}: {} of {n} frames",
+                sessions[i],
+                out.n_frames
+            );
+        }
         let ms = t0.elapsed().as_secs_f64() * 1e3;
-        anyhow::ensure!(out.n_frames == n, "round {round}: {} of {n} frames", out.n_frames);
-        println!("soak: round {round} closed in {ms:.1} ms ({} frames)", out.n_frames);
+        println!("soak: round {round} closed across {n_tenants} sessions in {ms:.1} ms");
         round_ms.push(ms);
     }
-    let (down, up) = leader.bytes_moved();
-    leader.shutdown()?;
+    let (down, up) = mux.bytes_moved();
+    let session_bytes: Vec<(u64, u64)> = sessions.iter().map(|&s| mux.session_bytes(s)).collect();
+    for leader in &mut leaders {
+        leader.shutdown()?;
+    }
     for h in agg_threads {
         h.join().expect("aggregator thread panicked")?;
     }
     for s in swarms {
         let report = s.join()?;
         anyhow::ensure!(
-            report.replies_sent == report.connected as u64 * rounds,
+            report.replies_sent == report.connected as u64 * rounds * n_tenants as u64,
             "swarm under-replied: {report:?}"
         );
     }
     let total_ms = t_start.elapsed().as_millis() as u64;
     println!("soak: total {total_ms} ms, root traffic down={down} up={up} bytes");
+    for (&s, &(s_down, s_up)) in sessions.iter().zip(&session_bytes) {
+        println!("soak: session {s} down={s_down} up={s_up} bytes");
+    }
 
     let rows: Vec<String> = round_ms.iter().map(|ms| format!("{ms:.2}")).collect();
+    let downs: Vec<String> = session_bytes.iter().map(|(b, _)| b.to_string()).collect();
+    let ups: Vec<String> = session_bytes.iter().map(|(_, b)| b.to_string()).collect();
     let json = format!(
         "{{\"bench\": \"soak_tree\", \"transport\": \"reactor\", \"n\": {n}, \
-         \"aggregators\": {}, \"dim\": {d}, \"spec\": \"{spec}\", \"rounds\": {rounds}, \
-         \"connect_ms\": {connect_ms}, \"round_ms\": [{}], \"total_ms\": {total_ms}, \
-         \"budget_ms\": {budget_ms}, \"root_down_bytes\": {down}, \"root_up_bytes\": {up}}}\n",
+         \"tenants\": {n_tenants}, \"aggregators\": {}, \"dim\": {d}, \"spec\": \"{spec}\", \
+         \"rounds\": {rounds}, \"connect_ms\": {connect_ms}, \"round_ms\": [{}], \
+         \"total_ms\": {total_ms}, \"budget_ms\": {budget_ms}, \"root_down_bytes\": {down}, \
+         \"root_up_bytes\": {up}, \"session_down_bytes\": [{}], \"session_up_bytes\": [{}]}}\n",
         tier.len(),
         rows.join(", "),
+        downs.join(", "),
+        ups.join(", "),
     );
     if let Some(path) = json_path {
         std::fs::write(&path, &json)?;

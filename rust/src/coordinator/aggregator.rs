@@ -27,19 +27,23 @@
 //! every hop still passes through the real `PartialUpload` wire
 //! serialization.
 
+use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
 
 use super::leader::{
-    collect_round, decode_all, fold_spans, merge_decoded, BarrierTimeout, ChildKey,
-    DecodedUpload, Leader, RoundOutcome,
+    collect_round, decode_all, fold_spans, BarrierTimeout, ChildKey, DecodedUpload, Leader,
+    RoundOutcome, SpanAccum,
 };
 use super::metrics::{ExperimentMetrics, RoundMetrics, TierMetrics};
-use super::topology::{Child, Topology};
-use super::transport::{Endpoint, LoopbackHub, Message, TransportHub, WeightedFrame};
-use crate::protocol::{Protocol, RoundCtx};
+use super::session::SessionMux;
+use super::topology::{split_ranges, Child, Topology};
+use super::transport::{
+    Endpoint, LoopbackHub, Message, TransportHub, WeightedFrame, WireError, ROOT_SESSION,
+};
+use crate::protocol::{Protocol, RoundCtx, SlotPartial};
 
 /// A partial-merging aggregation node.
 pub struct Aggregator {
@@ -54,6 +58,20 @@ pub struct Aggregator {
     level: usize,
     decode_threads: usize,
     round_timeout: Option<Duration>,
+    /// How many dimension shards this node splits its upstream report
+    /// into (1 = one full-dimension `PartialUpload`, the default). With
+    /// `s > 1` every round answers with `s` messages, one exact fold
+    /// per contiguous coordinate range; the parent barrier concatenates
+    /// them, bit-identically to the unsharded report.
+    dim_shards: u32,
+    /// Wire sessions this node serves (default: just [`ROOT_SESSION`]).
+    /// Each session keeps its own protocol handle, so a tenant's
+    /// `SpecChange` rebuilds only that tenant; the node exits when every
+    /// session has been shut down.
+    sessions: Vec<u16>,
+    /// Per-session starting protocols for tenants whose specs differ
+    /// (sessions absent here start on `self.protocol`).
+    session_protocols: HashMap<u16, Arc<dyn Protocol>>,
 }
 
 /// What an aggregator hands back when its tree shuts down: per-round
@@ -68,6 +86,8 @@ pub struct AggregatorReport {
     pub down_bytes: u64,
     /// Bytes this node ingested from its children.
     pub up_bytes: u64,
+    /// Dimension shards this node split its report into (1 = unsharded).
+    pub dim_shards: u32,
 }
 
 impl Aggregator {
@@ -80,7 +100,39 @@ impl Aggregator {
             level: 0,
             decode_threads: 1,
             round_timeout: None,
+            dim_shards: 1,
+            sessions: vec![ROOT_SESSION],
+            session_protocols: HashMap::new(),
         }
+    }
+
+    /// Split this node's upstream report into `shards` dimension slices
+    /// (builder style); see the field docs.
+    pub fn with_dim_shards(mut self, shards: u32) -> Self {
+        self.dim_shards = shards.max(1);
+        self
+    }
+
+    /// Declare the wire sessions this node serves (builder style). The
+    /// default is the sole [`ROOT_SESSION`]; a multiplexed tree lists
+    /// every tenant's session id up front so the node knows when the
+    /// last tenant has shut down.
+    pub fn with_sessions(mut self, sessions: Vec<u16>) -> Self {
+        if !sessions.is_empty() {
+            self.sessions = sessions;
+        }
+        self
+    }
+
+    /// [`Self::with_sessions`], with each tenant starting on its own
+    /// protocol handle — the multiplexed-tree form for tenants running
+    /// different specs over the same tree.
+    pub fn with_session_protocols(mut self, tenants: &[(u16, Arc<dyn Protocol>)]) -> Self {
+        if !tenants.is_empty() {
+            self.sessions = tenants.iter().map(|(s, _)| *s).collect();
+            self.session_protocols = tenants.iter().cloned().collect();
+        }
+        self
     }
 
     /// Tag this node with its topology level (for tier metrics).
@@ -107,41 +159,80 @@ impl Aggregator {
         self
     }
 
-    /// Rebuild this node's protocol handle from a `SpecChange` spec (the
-    /// same total rebuild the workers perform — see
+    /// Rebuild one session's protocol handle from a `SpecChange` spec
+    /// (the same total rebuild the workers perform — see
     /// `Worker::apply_spec`).
-    fn apply_spec(&mut self, spec: &str) -> Result<()> {
-        let dim = self.protocol.dim();
-        self.protocol = crate::protocol::config::ProtocolConfig::parse(spec, dim)
+    fn rebuild_protocol(&self, current: &Arc<dyn Protocol>, spec: &str) -> Result<Arc<dyn Protocol>> {
+        let dim = current.dim();
+        crate::protocol::config::ProtocolConfig::parse(spec, dim)
             .and_then(|cfg| cfg.build())
-            .with_context(|| format!("aggregator {} rebuilding protocol `{spec}`", self.agg_id))?;
-        Ok(())
+            .with_context(|| format!("aggregator {} rebuilding protocol `{spec}`", self.agg_id))
     }
 
-    /// Serve rounds until the parent sends `Shutdown` (which is relayed
-    /// to the children), then return this node's report. On a mid-round
-    /// failure the parent's barrier is woken first (an unexpected
-    /// `Shutdown` upstream) so the tree errors out instead of hanging.
+    /// Serve rounds until the parent has shut down every session (each
+    /// `Shutdown` is relayed to the children on its session), then
+    /// return this node's report. On a mid-round failure the parent's
+    /// barrier is woken first (an unexpected `Shutdown` upstream) so the
+    /// tree errors out instead of hanging.
     pub fn run(
-        mut self,
+        self,
         mut hub: Box<dyn TransportHub>,
         up: &mut dyn Endpoint,
     ) -> Result<AggregatorReport> {
         let mut metrics = ExperimentMetrics::default();
-        let mut expected: Vec<ChildKey> = Vec::new();
+        // Per-session protocol handle and barrier expectation list: a
+        // tenant's SpecChange rebuilds only its own entry.
+        let mut sessions: HashMap<u16, (Arc<dyn Protocol>, Vec<ChildKey>)> = self
+            .sessions
+            .iter()
+            .map(|&s| {
+                let proto = self
+                    .session_protocols
+                    .get(&s)
+                    .cloned()
+                    .unwrap_or_else(|| self.protocol.clone());
+                (s, (proto, Vec::new()))
+            })
+            .collect();
+        let report = |hub: &dyn TransportHub, metrics: ExperimentMetrics| AggregatorReport {
+            agg_id: self.agg_id,
+            level: self.level,
+            span: self.span,
+            metrics,
+            down_bytes: hub.bytes_moved().0,
+            up_bytes: hub.bytes_moved().1,
+            dim_shards: self.dim_shards,
+        };
         loop {
-            match up.recv_msg()? {
+            let env = up.recv_env()?;
+            let session = env.session;
+            if !sessions.contains_key(&session) && !matches!(env.msg, Message::Shutdown) {
+                // A session this node was never told about is a routing
+                // bug: tear down and surface the typed rejection.
+                let _ = hub.broadcast_session(session, &Message::Shutdown);
+                let _ = up.send_env(session, Message::Shutdown);
+                return Err(WireError::UnknownSession(session).into());
+            }
+            match env.msg {
                 Message::RoundStart { round, dim, payload } => {
+                    let (proto, expected) = sessions.get_mut(&session).unwrap();
+                    let proto = proto.clone();
                     let reply = self.one_round(
                         hub.as_mut(),
+                        session,
+                        &proto,
                         round,
                         dim,
                         payload,
-                        &mut expected,
+                        expected,
                         &mut metrics,
                     );
                     match reply {
-                        Ok(msg) => up.send_msg(msg)?,
+                        Ok(msgs) => {
+                            for msg in msgs {
+                                up.send_env(session, msg)?;
+                            }
+                        }
                         Err(e) if e.downcast_ref::<BarrierTimeout>().is_some() => {
                             // A timed-out span is survivable: answer
                             // nothing (the parent's own deadline names
@@ -160,8 +251,8 @@ impl Aggregator {
                             // recv would otherwise wait forever — then
                             // wake the parent's barrier before surfacing
                             // the failure (mirrors the worker loop).
-                            let _ = hub.broadcast(&Message::Shutdown);
-                            let _ = up.send_msg(Message::Shutdown);
+                            let _ = hub.broadcast_session(session, &Message::Shutdown);
+                            let _ = up.send_env(session, Message::Shutdown);
                             return Err(e);
                         }
                     }
@@ -169,28 +260,32 @@ impl Aggregator {
                 Message::SpecChange { round, spec } => {
                     // Relay downstream first — the subtree rebuilds on
                     // receipt, ahead of the RoundStart that follows on
-                    // the same FIFO links — then rebuild this node. Any
-                    // failure takes the mid-round teardown path below.
+                    // the same FIFO links — then rebuild this session's
+                    // handle (the other tenants' protocols are
+                    // untouched). Any failure takes the mid-round
+                    // teardown path below.
                     let relay = hub
-                        .broadcast(&Message::SpecChange { round, spec: spec.clone() })
-                        .and_then(|()| self.apply_spec(&spec));
+                        .broadcast_session(
+                            session,
+                            &Message::SpecChange { round, spec: spec.clone() },
+                        )
+                        .and_then(|()| {
+                            let entry = sessions.get_mut(&session).unwrap();
+                            entry.0 = self.rebuild_protocol(&entry.0, &spec)?;
+                            Ok(())
+                        });
                     if let Err(e) = relay {
-                        let _ = hub.broadcast(&Message::Shutdown);
-                        let _ = up.send_msg(Message::Shutdown);
+                        let _ = hub.broadcast_session(session, &Message::Shutdown);
+                        let _ = up.send_env(session, Message::Shutdown);
                         return Err(e);
                     }
                 }
                 Message::Shutdown => {
-                    hub.broadcast(&Message::Shutdown)?;
-                    let (down_bytes, up_bytes) = hub.bytes_moved();
-                    return Ok(AggregatorReport {
-                        agg_id: self.agg_id,
-                        level: self.level,
-                        span: self.span,
-                        metrics,
-                        down_bytes,
-                        up_bytes,
-                    });
+                    hub.broadcast_session(session, &Message::Shutdown)?;
+                    sessions.remove(&session);
+                    if sessions.is_empty() {
+                        return Ok(report(hub.as_ref(), metrics));
+                    }
                 }
                 Message::Upload { .. } | Message::PartialUpload { .. } => {
                     bail!("aggregator received an upstream-only message from its parent")
@@ -199,27 +294,33 @@ impl Aggregator {
         }
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn one_round(
         &self,
         hub: &mut dyn TransportHub,
+        session: u16,
+        proto: &Arc<dyn Protocol>,
         round: u64,
         dim: u32,
         payload: Arc<[f32]>,
         expected: &mut Vec<ChildKey>,
         metrics: &mut ExperimentMetrics,
-    ) -> Result<Message> {
+    ) -> Result<Vec<Message>> {
         let t0 = Instant::now();
-        hub.broadcast(&Message::RoundStart { round, dim, payload })?;
+        hub.broadcast_session(session, &Message::RoundStart { round, dim, payload })?;
         let ctx = RoundCtx::new(round, self.seed);
-        let state = self.protocol.prepare(&ctx);
+        let state = proto.prepare(&ctx);
+        let n_msgs = hub.n_workers();
         let collected = collect_round(
             hub,
-            self.protocol.as_ref(),
+            proto.as_ref(),
             &state,
+            session,
             round,
             self.decode_threads,
             self.round_timeout,
             expected,
+            n_msgs,
         )?;
         // The barrier checked the children against each other; they must
         // also fit inside the span this node forwards upstream, or a
@@ -251,14 +352,41 @@ impl Aggregator {
             cum_down_bytes: down,
             cum_up_bytes: up,
         });
-        Ok(Message::PartialUpload {
-            agg_id: self.agg_id,
-            round,
-            span: self.span,
-            uplink_bits,
-            n_frames: n_frames as u64,
-            slots,
-        })
+        let internal_dim = proto.internal_dim();
+        if self.dim_shards <= 1 {
+            return Ok(vec![Message::PartialUpload {
+                agg_id: self.agg_id,
+                round,
+                span: self.span,
+                uplink_bits,
+                n_frames: n_frames as u64,
+                shard: (0, internal_dim as u32),
+                slots,
+            }]);
+        }
+        // Sharded report: one message per coordinate range, each an
+        // independent exact fold the parent concatenates. The span's
+        // client-edge accounting rides on the first shard only, so the
+        // root's totals match the unsharded run exactly.
+        split_ranges(internal_dim, self.dim_shards)
+            .into_iter()
+            .enumerate()
+            .map(|(k, (lo, hi))| {
+                let sliced: Vec<SlotPartial> = slots
+                    .iter()
+                    .map(|p| p.slice(lo as usize, hi as usize))
+                    .collect::<Result<_>>()?;
+                Ok(Message::PartialUpload {
+                    agg_id: self.agg_id,
+                    round,
+                    span: self.span,
+                    uplink_bits: if k == 0 { uplink_bits } else { 0 },
+                    n_frames: if k == 0 { n_frames as u64 } else { 0 },
+                    shard: (lo, hi),
+                    slots: sliced,
+                })
+            })
+            .collect()
     }
 }
 
@@ -299,6 +427,7 @@ impl LocalTree {
             up_bytes: leader_bytes.1,
             wait_wall: leader_metrics.total_wait_wall(),
             decode_wall: leader_metrics.total_decode_wall(),
+            dim_shards: 1,
         }];
         for tier in 1..=n_levels {
             let level = n_levels - tier; // topology level for this tier
@@ -309,6 +438,7 @@ impl LocalTree {
                 up_bytes: 0,
                 wait_wall: Duration::ZERO,
                 decode_wall: Duration::ZERO,
+                dim_shards: 1,
             };
             for r in reports.iter().filter(|r| r.level == level) {
                 tm.nodes += 1;
@@ -316,6 +446,7 @@ impl LocalTree {
                 tm.up_bytes += r.up_bytes;
                 tm.wait_wall += r.metrics.total_wait_wall();
                 tm.decode_wall += r.metrics.total_decode_wall();
+                tm.dim_shards = tm.dim_shards.max(r.dim_shards);
             }
             tiers.push(tm);
         }
@@ -353,11 +484,14 @@ pub fn spawn_local_tree(
     };
 
     // Recursive wiring, top-down: creating a node's hub yields the
-    // endpoints its children run on.
+    // endpoints its children run on. Only aggregators directly below
+    // the root shard their reports (`at_root`): the root barrier is
+    // where shard slices concatenate back to full dimension.
     #[allow(clippy::too_many_arguments)]
     fn spawn_child(
         child: &Child,
         ep: super::transport::LoopbackEndpoint,
+        at_root: bool,
         topo: &Topology,
         protocol: &Arc<dyn Protocol>,
         update: &super::worker::UpdateFn,
@@ -391,6 +525,7 @@ pub fn spawn_local_tree(
                     spawn_child(
                         grandchild,
                         gep,
+                        false,
                         topo,
                         protocol,
                         update,
@@ -404,6 +539,9 @@ pub fn spawn_local_tree(
                 let mut agg = Aggregator::new(protocol.clone(), seed, spec.id, spec.span)
                     .with_level(*level)
                     .with_decode_threads(decode_threads);
+                if at_root {
+                    agg = agg.with_dim_shards(topo.dim_shards());
+                }
                 if let Some(t) = round_timeout {
                     agg = agg.with_round_timeout(t);
                 }
@@ -428,6 +566,7 @@ pub fn spawn_local_tree(
         spawn_child(
             child,
             ep,
+            true,
             topo,
             &protocol,
             &update,
@@ -448,13 +587,193 @@ pub fn spawn_local_tree(
             }
         })
         .collect();
+    // Sharded root children answer with one message per shard range;
+    // direct workers (flat topology) always answer once.
+    let barrier_msgs: usize = root_children
+        .iter()
+        .map(|c| match c {
+            Child::Worker(_) => 1,
+            Child::Agg { .. } => topo.dim_shards() as usize,
+        })
+        .sum();
     let mut leader = Leader::new(protocol, Box::new(hub), seed)
         .with_decode_threads(decode_threads)
-        .with_expected_children(expected);
+        .with_expected_children(expected)
+        .with_barrier_messages(barrier_msgs);
     if let Some(t) = round_timeout {
         leader = leader.with_round_timeout(t);
     }
     Ok((leader, tree))
+}
+
+/// [`spawn_local_tree`] for a multi-tenant run: every tenant session in
+/// `tenants` shares the one loopback tree — leaves run a
+/// [`MuxWorker`](super::worker::MuxWorker) hosting one `Worker` per
+/// tenant over each tenant's own protocol, aggregators serve every
+/// session with per-session protocol handles, and the root hub is split
+/// by a [`SessionMux`] into one [`Leader`] per tenant (returned in
+/// `tenants` order, each pinned to its session). Each tenant's rounds
+/// are bit-identical to a solo [`spawn_local_tree`] run of that tenant
+/// at the same session id — the mux multiplexes the wire, never the
+/// math. Drive the leaders from one thread (interleaved rounds); shut
+/// each tenant down with its own leader's `shutdown()`, and `join` the
+/// tree after the last one.
+pub fn spawn_mux_tree(
+    tenants: &[(u16, Arc<dyn Protocol>)],
+    shards: Vec<Vec<Vec<f32>>>,
+    update: super::worker::UpdateFn,
+    seed: u64,
+    topo: &Topology,
+    decode_threads: usize,
+    round_timeout: Option<Duration>,
+) -> Result<(SessionMux, Vec<Leader>, LocalTree)> {
+    ensure!(!tenants.is_empty(), "at least one tenant is required");
+    ensure!(
+        tenants.iter().enumerate().all(|(i, (s, _))| tenants[..i].iter().all(|(t, _)| t != s)),
+        "tenant session ids must be unique"
+    );
+    ensure!(
+        shards.len() as u64 == topo.n_clients(),
+        "topology covers {} clients but {} shards were provided",
+        topo.n_clients(),
+        shards.len()
+    );
+    topo.validate()?;
+    let mut shards: Vec<Option<Vec<Vec<f32>>>> = shards.into_iter().map(Some).collect();
+    let mut tree = LocalTree {
+        workers: Vec::new(),
+        aggregators: Vec::new(),
+        n_levels: topo.levels().len(),
+    };
+
+    #[allow(clippy::too_many_arguments)]
+    fn spawn_child(
+        child: &Child,
+        ep: super::transport::LoopbackEndpoint,
+        at_root: bool,
+        topo: &Topology,
+        tenants: &[(u16, Arc<dyn Protocol>)],
+        update: &super::worker::UpdateFn,
+        seed: u64,
+        decode_threads: usize,
+        round_timeout: Option<Duration>,
+        shards: &mut Vec<Option<Vec<Vec<f32>>>>,
+        tree: &mut LocalTree,
+    ) -> Result<()> {
+        match child {
+            Child::Worker(c) => {
+                let shard = shards[*c as usize].take().expect("shard handed out twice");
+                let mut mux = super::worker::MuxWorker::new();
+                for (session, proto) in tenants {
+                    mux.insert(
+                        *session,
+                        super::worker::Worker {
+                            client_id: *c,
+                            shard: shard.clone(),
+                            protocol: proto.clone(),
+                            update: update.clone(),
+                            seed,
+                        },
+                    );
+                }
+                tree.workers.push(
+                    std::thread::Builder::new()
+                        .name(format!("dme-muxworker-{c}"))
+                        .spawn(move || mux.run_loopback(ep))
+                        .context("spawning mux worker thread")?,
+                );
+            }
+            Child::Agg { level, index } => {
+                let spec = topo.spec(*level, *index);
+                let (hub, endpoints) = LoopbackHub::new(spec.children.len());
+                for (grandchild, gep) in spec.children.iter().zip(endpoints) {
+                    spawn_child(
+                        grandchild,
+                        gep,
+                        false,
+                        topo,
+                        tenants,
+                        update,
+                        seed,
+                        decode_threads,
+                        round_timeout,
+                        shards,
+                        tree,
+                    )?;
+                }
+                let mut agg = Aggregator::new(tenants[0].1.clone(), seed, spec.id, spec.span)
+                    .with_level(*level)
+                    .with_decode_threads(decode_threads)
+                    .with_session_protocols(tenants);
+                if at_root {
+                    agg = agg.with_dim_shards(topo.dim_shards());
+                }
+                if let Some(t) = round_timeout {
+                    agg = agg.with_round_timeout(t);
+                }
+                let name = format!("dme-agg-{}", spec.id);
+                tree.aggregators.push(
+                    std::thread::Builder::new()
+                        .name(name)
+                        .spawn(move || {
+                            let mut ep = ep;
+                            agg.run(Box::new(hub), &mut ep)
+                        })
+                        .context("spawning aggregator thread")?,
+                );
+            }
+        }
+        Ok(())
+    }
+
+    let root_children = topo.root_children();
+    let (hub, endpoints) = LoopbackHub::new(root_children.len());
+    for (child, ep) in root_children.iter().zip(endpoints) {
+        spawn_child(
+            child,
+            ep,
+            true,
+            topo,
+            tenants,
+            &update,
+            seed,
+            decode_threads,
+            round_timeout,
+            &mut shards,
+            &mut tree,
+        )?;
+    }
+    let expected: Vec<ChildKey> = root_children
+        .iter()
+        .map(|c| match c {
+            Child::Worker(id) => ChildKey::Client(*id),
+            Child::Agg { level, index } => {
+                let spec = topo.spec(*level, *index);
+                ChildKey::Aggregator { id: spec.id, span: spec.span }
+            }
+        })
+        .collect();
+    let barrier_msgs: usize = root_children
+        .iter()
+        .map(|c| match c {
+            Child::Worker(_) => 1,
+            Child::Agg { .. } => topo.dim_shards() as usize,
+        })
+        .sum();
+    let mux = SessionMux::new(Box::new(hub));
+    let mut leaders = Vec::with_capacity(tenants.len());
+    for (session, proto) in tenants {
+        let mut leader = Leader::new(proto.clone(), Box::new(mux.view(*session)), seed)
+            .with_session(*session)
+            .with_decode_threads(decode_threads)
+            .with_expected_children(expected.clone())
+            .with_barrier_messages(barrier_msgs);
+        if let Some(t) = round_timeout {
+            leader = leader.with_round_timeout(t);
+        }
+        leaders.push(leader);
+    }
+    Ok((mux, leaders, tree))
 }
 
 /// One round of tree aggregation over already-encoded uploads, without
@@ -484,6 +803,8 @@ pub fn aggregate_tree(
         "upload client id outside the topology's client range"
     );
     let round = state.ctx.round;
+    let internal_dim = proto.internal_dim();
+    let full_range = (0u32, internal_dim as u32);
     // Leaf ingress accounting: what the workers' Upload messages cost on
     // the wire wherever they land (leaf aggregators, or the root when
     // flat).
@@ -491,13 +812,31 @@ pub fn aggregate_tree(
         .iter()
         .map(|(_, frames)| Message::upload_wire_len(frames) + 4) // + u32 frame prefix
         .sum();
-    // Decode once — the same work the leaf tier's pools would do.
-    let mut current = decode_all(proto, state, uploads, decode_threads)?;
+    // Decode once — the same work the leaf tier's pools would do. Each
+    // in-flight child carries the shard range it folded; everything is
+    // full-dimension until the tier below the root slices its reports.
+    let mut current: Vec<((u32, u32), DecodedUpload)> = decode_all(
+        proto,
+        state,
+        uploads,
+        decode_threads,
+    )?
+    .into_iter()
+    .map(|d| (full_range, d))
+    .collect();
     let mut ingress_rev = vec![worker_ingress];
-    for tier in topo.levels() {
+    for (t_idx, tier) in topo.levels().iter().enumerate() {
+        // Only the tier directly below the root shards its report: each
+        // shard is an independent exact fold the root concatenates.
+        let is_top = t_idx + 1 == topo.levels().len();
+        let out_ranges = if is_top && topo.dim_shards() > 1 {
+            topo.shard_ranges(internal_dim)
+        } else {
+            vec![full_range]
+        };
         // Route every child into the aggregator whose span contains it.
         let mut buckets: Vec<Vec<DecodedUpload>> = (0..tier.len()).map(|_| Vec::new()).collect();
-        for d in current.drain(..) {
+        for (_, d) in current.drain(..) {
             let (lo, hi) = d.origin.span();
             let idx = tier.partition_point(|s| s.span.1 <= lo);
             ensure!(
@@ -507,7 +846,7 @@ pub fn aggregate_tree(
             buckets[idx].push(d);
         }
         let mut tier_bytes = 0u64;
-        let mut next = Vec::with_capacity(tier.len());
+        let mut next = Vec::with_capacity(tier.len() * out_ranges.len());
         for (spec, mine) in tier.iter().zip(buckets) {
             if mine.is_empty() {
                 continue; // a span with no uploads present sends nothing
@@ -515,34 +854,78 @@ pub fn aggregate_tree(
             let uplink_bits: u64 = mine.iter().map(|d| d.uplink_bits).sum();
             let n_frames: usize = mine.iter().map(|d| d.n_frames).sum();
             let slots = fold_spans(proto, &mine)?;
-            let msg = Message::PartialUpload {
-                agg_id: spec.id,
-                round,
-                span: spec.span,
-                uplink_bits,
-                n_frames: n_frames as u64,
-                slots,
-            };
-            tier_bytes += msg.framed_len();
-            // The wire round-trip: prove the serialized partials carry
-            // the exact state.
-            let bytes = msg.to_bytes()?;
-            let Message::PartialUpload { agg_id, span, uplink_bits, n_frames, slots, .. } =
-                Message::from_bytes(&bytes)?
-            else {
-                bail!("PartialUpload did not survive the wire")
-            };
-            next.push(DecodedUpload {
-                origin: ChildKey::Aggregator { id: agg_id, span },
-                slots: slots.into_iter().map(Some).collect(),
-                uplink_bits,
-                n_frames: n_frames as usize,
-            });
+            for (k, &(lo, hi)) in out_ranges.iter().enumerate() {
+                let shard_slots: Vec<SlotPartial> = if out_ranges.len() == 1 {
+                    slots.clone()
+                } else {
+                    slots
+                        .iter()
+                        .map(|p| p.slice(lo as usize, hi as usize))
+                        .collect::<Result<_>>()?
+                };
+                let msg = Message::PartialUpload {
+                    agg_id: spec.id,
+                    round,
+                    span: spec.span,
+                    // Client-edge accounting rides on the first shard
+                    // only, so the root totals match the unsharded run.
+                    uplink_bits: if k == 0 { uplink_bits } else { 0 },
+                    n_frames: if k == 0 { n_frames as u64 } else { 0 },
+                    shard: (lo, hi),
+                    slots: shard_slots,
+                };
+                tier_bytes += msg.framed_len();
+                // The wire round-trip: prove the serialized partials
+                // carry the exact state.
+                let bytes = msg.to_bytes()?;
+                let Message::PartialUpload {
+                    agg_id,
+                    span,
+                    uplink_bits,
+                    n_frames,
+                    shard,
+                    slots,
+                    ..
+                } = Message::from_bytes(&bytes)?
+                else {
+                    bail!("PartialUpload did not survive the wire")
+                };
+                next.push((
+                    shard,
+                    DecodedUpload {
+                        origin: ChildKey::Aggregator { id: agg_id, span },
+                        slots: slots.into_iter().map(Some).collect(),
+                        uplink_bits,
+                        n_frames: n_frames as usize,
+                    },
+                ));
+            }
         }
         ingress_rev.push(tier_bytes);
         current = next;
     }
-    let outcome = merge_decoded(proto, state, current)?;
+    // Root fold: full-dimension children merge directly; sharded ones
+    // fold per range and are concatenated back — bit-identical to the
+    // unsharded fold ([`SpanAccum::absorb_sharded`]).
+    let mut main = SpanAccum::new(internal_dim);
+    let mut shard_accs: Vec<((u32, u32), SpanAccum)> = Vec::new();
+    for (range, d) in current {
+        if range == full_range || d.slots.is_empty() {
+            main.fold(&d)?;
+        } else {
+            let width = (range.1 - range.0) as usize;
+            let pos = match shard_accs.iter().position(|(r, _)| *r == range) {
+                Some(p) => p,
+                None => {
+                    shard_accs.push((range, SpanAccum::new(width)));
+                    shard_accs.len() - 1
+                }
+            };
+            shard_accs[pos].1.fold(&d)?;
+        }
+    }
+    main.absorb_sharded(&mut shard_accs)?;
+    let outcome = main.finish(proto, state);
     ingress_rev.reverse(); // root first
     Ok(TreeOutcome { outcome, tier_ingress: ingress_rev })
 }

@@ -43,7 +43,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, ensure, Result};
 
 use super::metrics::{ExperimentMetrics, RoundMetrics};
-use super::transport::{Message, TransportHub, WeightedFrame};
+use super::transport::{Message, TransportHub, WeightedFrame, WireError, ROOT_SESSION};
 use crate::protocol::config::ProtocolConfig;
 use crate::protocol::{Accumulator, Protocol, RoundCtx, RoundState, SlotPartial};
 
@@ -237,6 +237,44 @@ impl SpanAccum {
     /// forwards upstream).
     pub fn into_slots(self) -> Vec<SlotPartial> {
         self.slots
+    }
+
+    /// Absorb a set of per-shard accumulators — independent exact folds
+    /// of disjoint coordinate ranges over the *same* children — by
+    /// concatenating each slot's shard slices back to full dimension
+    /// ([`SlotPartial::concat_shards`]) and merging the result in. The
+    /// ranges must partition `[0, dim)` and every shard must agree on
+    /// the fold counters, or the absorb errors out. Bit-identical to
+    /// having folded the same children unsharded: concatenation moves
+    /// exact per-coordinate sums, never rounds.
+    pub fn absorb_sharded(&mut self, shards: &mut [((u32, u32), SpanAccum)]) -> Result<()> {
+        if shards.is_empty() {
+            return Ok(());
+        }
+        // Pad every shard to the widest slot count seen: a missing slot
+        // is the empty partial, exactly as in the unsharded fold (the
+        // counter-equality check in concat then enforces that the
+        // shards really saw the same children).
+        let n_slots = shards.iter().map(|(_, a)| a.slots.len()).max().unwrap_or(0);
+        for (range, acc) in shards.iter_mut() {
+            while acc.slots.len() < n_slots {
+                acc.slots.push(SlotPartial::empty((range.1 - range.0) as usize));
+            }
+        }
+        while self.slots.len() < n_slots {
+            self.slots.push(SlotPartial::empty(self.dim));
+        }
+        for slot in 0..n_slots {
+            let parts: Vec<((u32, u32), &SlotPartial)> =
+                shards.iter().map(|(r, a)| (*r, &a.slots[slot])).collect();
+            let full = SlotPartial::concat_shards(&parts, self.dim)?;
+            self.slots[slot].merge(&full)?;
+        }
+        for (_, acc) in shards.iter() {
+            self.uplink_bits += acc.uplink_bits;
+            self.n_frames += acc.n_frames;
+        }
+        Ok(())
     }
 
     /// Finish every slot at the root (single rounding + protocol
@@ -440,18 +478,33 @@ fn barrier_timeout_error(
 
 /// Children must speak for disjoint client spans — a duplicate client id
 /// or an overlapping aggregator span is a miswired topology, caught at
-/// the barrier rather than silently double-counted.
-fn check_disjoint_spans(seen: &[ChildKey]) -> Result<()> {
-    let mut spans: Vec<(u64, u64, ChildKey)> =
-        seen.iter().map(|k| (k.span().0, k.span().1, *k)).collect();
-    spans.sort_by_key(|&(lo, hi, _)| (lo, hi));
-    for w in spans.windows(2) {
-        ensure!(
-            w[0].1 <= w[1].0,
-            "children cover overlapping client spans: {} and {}",
-            w[0].2,
-            w[1].2
-        );
+/// the barrier rather than silently double-counted. Under dimension
+/// sharding the check is **per shard range**: siblings folding disjoint
+/// coordinate slices legitimately cover the same clients, so each child
+/// carries the range it folded and only children inside the same range
+/// (plus full-dimension children, which overlap every range) must be
+/// span-disjoint.
+fn check_disjoint_spans(children: &[((u32, u32), ChildKey)], full: (u32, u32)) -> Result<()> {
+    let mut ranges: Vec<(u32, u32)> = children.iter().map(|&(r, _)| r).collect();
+    ranges.sort_unstable();
+    ranges.dedup();
+    for &range in &ranges {
+        let mut spans: Vec<(u64, u64, ChildKey)> = children
+            .iter()
+            .filter(|&&(r, _)| r == range || r == full)
+            .map(|&(_, k)| (k.span().0, k.span().1, k))
+            .collect();
+        spans.sort_by_key(|&(lo, hi, _)| (lo, hi));
+        for w in spans.windows(2) {
+            ensure!(
+                w[0].1 <= w[1].0,
+                "children cover overlapping client spans in shard [{}, {}): {} and {}",
+                range.0,
+                range.1,
+                w[0].2,
+                w[1].2
+            );
+        }
     }
     Ok(())
 }
@@ -460,25 +513,50 @@ fn check_disjoint_spans(seen: &[ChildKey]) -> Result<()> {
 /// per child, streaming worker uploads through a decode pool and
 /// absorbing aggregation-tier `PartialUpload`s directly. Shared by
 /// [`Leader::round`] and the aggregation-tier node loop.
+///
+/// `session` is the wire session this barrier belongs to: every
+/// envelope must carry it, and one that does not is a **typed**
+/// [`WireError::UnknownSession`] rejection — under session multiplexing
+/// a stray tenant's message is a routing bug to surface, never a frame
+/// to silently drop.
+///
+/// Dimension-sharded children (a `PartialUpload` whose shard range is a
+/// strict slice of the internal dimension) fold into one accumulator
+/// per range; at the barrier the ranges are concatenated back to full
+/// dimension ([`SpanAccum::absorb_sharded`]) — bit-identical to the
+/// unsharded fold.
+///
+/// `n_msgs` is how many messages close the barrier. It equals the child
+/// connection count except under dimension sharding, where a sharded
+/// child sends one `PartialUpload` per shard range over its single
+/// connection.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn collect_round(
     hub: &mut dyn TransportHub,
     proto: &dyn Protocol,
     round_state: &RoundState,
+    session: u16,
     round: u64,
     decode_threads: usize,
     timeout: Option<Duration>,
     expected: &[ChildKey],
+    n_msgs: usize,
 ) -> Result<CollectedRound> {
-    let n_children = hub.n_workers();
+    let n_children = n_msgs;
     ensure!(n_children > 0, "no children connected");
     let decode_threads = decode_threads.clamp(1, n_children);
     let decode_ns = AtomicU64::new(0);
     let mut wait_wall = Duration::ZERO;
     let mut seen: Vec<ChildKey> = Vec::with_capacity(n_children);
+    // Each child paired with the shard range it folded (workers cover
+    // the full dimension) — the unit of the span-disjointness check.
+    let mut ranged: Vec<((u32, u32), ChildKey)> = Vec::with_capacity(n_children);
     // Duplicate detection stays O(1) per arrival; `seen` keeps arrival
     // order for diagnostics.
     let mut seen_clients: HashSet<u64> = HashSet::with_capacity(n_children);
-    let mut seen_aggs: HashSet<u64> = HashSet::new();
+    // Keyed by (agg_id, shard): one node legitimately answers once per
+    // shard range, but twice for the same range is a duplicate.
+    let mut seen_aggs: HashSet<(u64, (u32, u32))> = HashSet::new();
     let deadline = timeout.map(|t| Instant::now() + t);
 
     // Streaming barrier: this thread owns the transport and hands each
@@ -490,6 +568,7 @@ pub(crate) fn collect_round(
     // outside the scope: scoped threads may only borrow data that
     // outlives the scope itself.
     let internal_dim = proto.internal_dim();
+    let full_range = (0u32, internal_dim as u32);
     let (task_tx, task_rx) = mpsc::channel::<(u64, Vec<WeightedFrame>)>();
     let (out_tx, out_rx) = mpsc::channel::<Result<SpanAccum>>();
     let task_rx = Mutex::new(task_rx);
@@ -507,19 +586,22 @@ pub(crate) fn collect_round(
         // complete. Without a deadline no round can have timed out, so a
         // stale answer is a protocol violation worth failing fast on.
         let mut main_acc = SpanAccum::new(internal_dim);
+        // One accumulator per strict shard range seen this round,
+        // concatenated back to full dimension at the barrier.
+        let mut shard_accs: Vec<((u32, u32), SpanAccum)> = Vec::new();
         let mut n_accepted = 0usize;
         while n_accepted < n_children {
             let t = Instant::now();
-            let msg = match deadline {
-                None => hub.recv()?,
+            let env = match deadline {
+                None => hub.recv_env()?,
                 Some(dl) => {
                     let remain = dl.checked_duration_since(Instant::now());
-                    let msg = match remain {
+                    let env = match remain {
                         None => None,
-                        Some(remain) => hub.recv_timeout(remain)?,
+                        Some(remain) => hub.recv_env_timeout(remain)?,
                     };
-                    match msg {
-                        Some(m) => m,
+                    match env {
+                        Some(e) => e,
                         None => {
                             return Err(barrier_timeout_error(
                                 round,
@@ -533,7 +615,10 @@ pub(crate) fn collect_round(
                 }
             };
             wait_wall += t.elapsed();
-            match msg {
+            if env.session != session {
+                return Err(WireError::UnknownSession(env.session).into());
+            }
+            match env.msg {
                 Message::Upload { client, round: r, frames } => {
                     if r < round && timeout.is_some() {
                         continue; // late answer to a timed-out round
@@ -544,6 +629,7 @@ pub(crate) fn collect_round(
                         "duplicate upload from client {client}"
                     );
                     seen.push(ChildKey::Client(client));
+                    ranged.push((full_range, ChildKey::Client(client)));
                     if !pool_started {
                         pool_started = true;
                         n_pool_threads = decode_threads;
@@ -591,7 +677,15 @@ pub(crate) fn collect_round(
                     task_tx.send((client, frames)).expect("decode pool hung up");
                     n_accepted += 1;
                 }
-                Message::PartialUpload { agg_id, round: r, span, uplink_bits, n_frames, slots } => {
+                Message::PartialUpload {
+                    agg_id,
+                    round: r,
+                    span,
+                    uplink_bits,
+                    n_frames,
+                    shard,
+                    slots,
+                } => {
                     if r < round && timeout.is_some() {
                         continue; // late answer to a timed-out round
                     }
@@ -600,19 +694,47 @@ pub(crate) fn collect_round(
                         "aggregator {agg_id} answered round {r}, expected {round}"
                     );
                     ensure!(
-                        seen_aggs.insert(agg_id),
-                        "duplicate partial upload from aggregator {agg_id}"
+                        seen_aggs.insert((agg_id, shard)),
+                        "duplicate partial upload from aggregator {agg_id} for shard \
+                         [{}, {})",
+                        shard.0,
+                        shard.1
+                    );
+                    ensure!(
+                        shard.1 as usize <= internal_dim,
+                        "aggregator {agg_id} shard [{}, {}) exceeds internal dimension \
+                         {internal_dim}",
+                        shard.0,
+                        shard.1
                     );
                     let key = ChildKey::Aggregator { id: agg_id, span };
                     seen.push(key);
-                    // Pre-merged spans fold straight into the barrier
-                    // thread's accumulator — no decode pool involved.
-                    main_acc.fold(&DecodedUpload {
+                    ranged.push((shard, key));
+                    let d = DecodedUpload {
                         origin: key,
                         slots: slots.into_iter().map(Some).collect(),
                         uplink_bits,
                         n_frames: n_frames as usize,
-                    })?;
+                    };
+                    if shard == full_range || d.slots.is_empty() {
+                        // Full-dimension (or slotless, counters-only)
+                        // spans fold straight into the barrier thread's
+                        // accumulator — no decode pool involved.
+                        main_acc.fold(&d)?;
+                    } else {
+                        // A strict dimension slice: fold into that
+                        // range's own accumulator, concatenated back to
+                        // full dimension once the barrier closes.
+                        let width = (shard.1 - shard.0) as usize;
+                        let pos = match shard_accs.iter().position(|(r, _)| *r == shard) {
+                            Some(p) => p,
+                            None => {
+                                shard_accs.push((shard, SpanAccum::new(width)));
+                                shard_accs.len() - 1
+                            }
+                        };
+                        shard_accs[pos].1.fold(&d)?;
+                    }
                     n_accepted += 1;
                 }
                 Message::RoundStart { .. } | Message::SpecChange { .. } | Message::Shutdown => {
@@ -630,10 +752,14 @@ pub(crate) fn collect_round(
             let acc = out_rx.recv().expect("decode pool died")?;
             main_acc.absorb(acc)?;
         }
+        // Concatenate the shard-range folds back to full dimension and
+        // merge them in (errors if the ranges fail to partition the
+        // dimension or disagree on fold counters).
+        main_acc.absorb_sharded(&mut shard_accs)?;
         Ok(main_acc)
     })?;
 
-    check_disjoint_spans(&seen)?;
+    check_disjoint_spans(&ranged, full_range)?;
     Ok(CollectedRound {
         folded,
         seen,
@@ -647,6 +773,10 @@ pub struct Leader {
     protocol: Arc<dyn Protocol>,
     hub: Box<dyn TransportHub>,
     seed: u64,
+    /// Wire session every broadcast goes out on and every barrier
+    /// envelope must carry — [`ROOT_SESSION`] unless this leader drives
+    /// one tenant of a multiplexed deployment.
+    session: u16,
     metrics: ExperimentMetrics,
     decode_threads: usize,
     round_timeout: Option<Duration>,
@@ -654,6 +784,11 @@ pub struct Leader {
     /// (or [`Leader::with_expected_children`]) and refreshed from each
     /// completed round, so a timeout can name exactly who is missing.
     expected_children: Vec<ChildKey>,
+    /// Messages that close the barrier; defaults to the connection
+    /// count. Dimension-sharded children send one `PartialUpload` per
+    /// shard range over one connection, so a sharded tree sets this to
+    /// `workers + aggregators × dim_shards`.
+    barrier_msgs: Option<usize>,
 }
 
 impl Leader {
@@ -662,11 +797,38 @@ impl Leader {
             protocol,
             hub,
             seed,
+            session: ROOT_SESSION,
             metrics: ExperimentMetrics::default(),
             decode_threads: 1,
             round_timeout: None,
             expected_children: Vec::new(),
+            barrier_msgs: None,
         }
+    }
+
+    /// Override how many messages close each round's barrier (builder
+    /// style) — required when direct children are dimension-sharded and
+    /// answer with one `PartialUpload` per shard range.
+    pub fn with_barrier_messages(mut self, n: usize) -> Self {
+        self.barrier_msgs = Some(n);
+        self
+    }
+
+    /// Pin this leader to a wire session (builder style): broadcasts go
+    /// out tagged `session`, and a barrier envelope on any other session
+    /// is a typed [`WireError::UnknownSession`] rejection. The session
+    /// id also feeds every worker's private stream derivation, so a
+    /// tenant's estimates depend on `(session, seed, round, spec, data)`
+    /// alone — solo and multiplexed runs of the same tenant agree bit
+    /// for bit.
+    pub fn with_session(mut self, session: u16) -> Self {
+        self.session = session;
+        self
+    }
+
+    /// The wire session this leader drives.
+    pub fn session(&self) -> u16 {
+        self.session
     }
 
     /// Set the decode-pool width (builder style). Any value produces
@@ -734,7 +896,10 @@ impl Leader {
         ensure!(self.hub.n_workers() > 0, "no workers connected");
         // The payload is Arc-shared: one allocation for the whole
         // broadcast instead of one clone per worker.
-        self.hub.broadcast(&Message::RoundStart { round, dim, payload: Arc::from(state) })?;
+        self.hub.broadcast_session(
+            self.session,
+            &Message::RoundStart { round, dim, payload: Arc::from(state) },
+        )?;
 
         let ctx = RoundCtx::new(round, self.seed);
         let proto = self.protocol.clone();
@@ -742,14 +907,17 @@ impl Leader {
         // prepared once and reused by every decode thread and the merge.
         let round_state = proto.prepare(&ctx);
         let expected = std::mem::take(&mut self.expected_children);
+        let n_msgs = self.barrier_msgs.unwrap_or_else(|| self.hub.n_workers());
         let collected = collect_round(
             self.hub.as_mut(),
             proto.as_ref(),
             &round_state,
+            self.session,
             round,
             self.decode_threads,
             self.round_timeout,
             &expected,
+            n_msgs,
         );
         let collected = match collected {
             Ok(c) => c,
@@ -806,10 +974,10 @@ impl Leader {
     pub fn switch_spec(&mut self, spec: &str, effective_round: u64) -> Result<()> {
         let dim = self.protocol.dim();
         let proto = ProtocolConfig::parse(spec, dim)?.build()?;
-        self.hub.broadcast(&Message::SpecChange {
-            round: effective_round,
-            spec: spec.to_string(),
-        })?;
+        self.hub.broadcast_session(
+            self.session,
+            &Message::SpecChange { round: effective_round, spec: spec.to_string() },
+        )?;
         self.protocol = proto;
         self.metrics.note_spec_change(effective_round, spec);
         Ok(())
@@ -817,7 +985,7 @@ impl Leader {
 
     /// Broadcast shutdown to all children (aggregators forward it down).
     pub fn shutdown(&mut self) -> Result<()> {
-        self.hub.broadcast(&Message::Shutdown)
+        self.hub.broadcast_session(self.session, &Message::Shutdown)
     }
 }
 

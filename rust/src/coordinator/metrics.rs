@@ -143,20 +143,73 @@ pub struct TierMetrics {
     pub wait_wall: Duration,
     /// Summed decode+merge CPU time across the tier's nodes.
     pub decode_wall: Duration,
+    /// Dimension shards each node in this tier splits its upstream report
+    /// into (1 everywhere except the tier directly below a sharded root).
+    pub dim_shards: u32,
+}
+
+/// One tenant session of a multiplexed run, rolled up across its rounds.
+/// Printed by `dme serve --tenants`: the per-tenant split of a wire every
+/// tenant shares, plus how the realized uplink compares to the bits the
+/// rate planner allocated.
+#[derive(Clone, Debug)]
+pub struct TenantMetrics {
+    /// The tenant's wire session id.
+    pub session: u16,
+    /// The spec the tenant ended the run on.
+    pub spec: String,
+    /// Rounds this tenant completed.
+    pub rounds: usize,
+    /// Framed bytes broadcast down on this session (across all workers).
+    pub down_bytes: u64,
+    /// Framed bytes received up on this session.
+    pub up_bytes: u64,
+    /// Realized protocol payload bits per round (averaged).
+    pub realized_bits: f64,
+    /// Bits per round the rate planner allocated to this tenant
+    /// (0 when no planner ran).
+    pub allocated_bits: f64,
+    /// Analytic MSE proxy of the tenant's operating point (the planner's
+    /// model, not an empirical residual; 0 when no planner ran).
+    pub mse_proxy: f64,
+}
+
+/// Human-readable table of a multiplexed run's tenants.
+pub fn format_tenant_table(tenants: &[TenantMetrics]) -> String {
+    let mut s = format!(
+        "{:<8} {:<24} {:>6} {:>12} {:>12} {:>14} {:>14} {:>12}\n",
+        "tenant", "spec", "rounds", "down bytes", "up bytes", "realized b/r", "allocated b/r",
+        "mse proxy"
+    );
+    for t in tenants {
+        s.push_str(&format!(
+            "{:<8} {:<24} {:>6} {:>12} {:>12} {:>14.0} {:>14.0} {:>12.3e}\n",
+            t.session,
+            t.spec,
+            t.rounds,
+            t.down_bytes,
+            t.up_bytes,
+            t.realized_bits,
+            t.allocated_bits,
+            t.mse_proxy,
+        ));
+    }
+    s
 }
 
 /// Human-readable table of a tree run's tiers.
 pub fn format_tier_table(tiers: &[TierMetrics]) -> String {
     let mut s = format!(
-        "{:<6} {:>6} {:>14} {:>14} {:>12} {:>12}\n",
-        "tier", "nodes", "ingress bytes", "egress bytes", "wait ms", "decode ms"
+        "{:<6} {:>6} {:>7} {:>14} {:>14} {:>12} {:>12}\n",
+        "tier", "nodes", "shards", "ingress bytes", "egress bytes", "wait ms", "decode ms"
     );
     for t in tiers {
         let label = if t.tier == 0 { "root".to_string() } else { format!("agg-{}", t.tier) };
         s.push_str(&format!(
-            "{:<6} {:>6} {:>14} {:>14} {:>12.1} {:>12.1}\n",
+            "{:<6} {:>6} {:>7} {:>14} {:>14} {:>12.1} {:>12.1}\n",
             label,
             t.nodes,
+            t.dim_shards,
             t.up_bytes,
             t.down_bytes,
             t.wait_wall.as_secs_f64() * 1e3,
@@ -216,6 +269,7 @@ mod tests {
                 up_bytes: 2_000,
                 wait_wall: Duration::from_millis(4),
                 decode_wall: Duration::from_millis(2),
+                dim_shards: 1,
             },
             TierMetrics {
                 tier: 1,
@@ -224,11 +278,44 @@ mod tests {
                 up_bytes: 64_000,
                 wait_wall: Duration::from_millis(9),
                 decode_wall: Duration::from_millis(31),
+                dim_shards: 4,
             },
         ];
         let table = format_tier_table(&tiers);
         assert!(table.contains("root"));
         assert!(table.contains("agg-1"));
         assert!(table.contains("64000"));
+        assert!(table.contains("shards"));
+    }
+
+    #[test]
+    fn tenant_table_renders_every_tenant() {
+        let tenants = vec![
+            TenantMetrics {
+                session: 1,
+                spec: "klevel:k=4".into(),
+                rounds: 10,
+                down_bytes: 1_000,
+                up_bytes: 52_000,
+                realized_bits: 4096.0,
+                allocated_bits: 5000.0,
+                mse_proxy: 1.25e-3,
+            },
+            TenantMetrics {
+                session: 2,
+                spec: "rotated:k=2".into(),
+                rounds: 10,
+                down_bytes: 1_000,
+                up_bytes: 26_000,
+                realized_bits: 2048.0,
+                allocated_bits: 2048.0,
+                mse_proxy: 4.0e-3,
+            },
+        ];
+        let table = format_tenant_table(&tenants);
+        assert!(table.contains("klevel:k=4"));
+        assert!(table.contains("rotated:k=2"));
+        assert!(table.contains("52000"));
+        assert!(table.contains("tenant"));
     }
 }

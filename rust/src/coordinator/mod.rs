@@ -45,7 +45,14 @@
 //!   tests: thousands of protocol-correct TCP clients multiplexed on
 //!   one thread, so scale tests measure the hub rather than the
 //!   harness.
-//! * [`worker`] — the client side: shard + update function + encoder.
+//! * [`session`] — session multiplexing: a [`session::SessionMux`]
+//!   splits one hub into per-tenant [`TransportHub`] views, demuxing
+//!   upstream envelopes by session id with per-tenant byte accounting —
+//!   the piece that lets several concurrent sessions (different specs,
+//!   different rate budgets) share one transport and one tree.
+//! * [`worker`] — the client side: shard + update function + encoder,
+//!   plus the multi-tenant [`worker::MuxWorker`] hosting one `Worker`
+//!   per session over a single endpoint.
 //! * [`leader`] — the tree root: round barrier (optionally with a
 //!   liveness timeout that names missing children) + the streaming
 //!   decode pipeline, with
@@ -80,19 +87,24 @@ pub mod leader;
 pub mod metrics;
 #[cfg(target_os = "linux")]
 pub mod reactor;
+pub mod session;
 #[cfg(target_os = "linux")]
 pub mod swarm;
 pub mod topology;
 pub mod transport;
 pub mod worker;
 
-pub use aggregator::{aggregate_tree, spawn_local_tree, Aggregator, AggregatorReport};
+pub use aggregator::{
+    aggregate_tree, spawn_local_tree, spawn_mux_tree, Aggregator, AggregatorReport,
+};
 pub use leader::{ChildKey, Leader, RoundOutcome};
-pub use metrics::{ExperimentMetrics, RoundMetrics, TierMetrics};
+pub use metrics::{ExperimentMetrics, RoundMetrics, TenantMetrics, TierMetrics};
 #[cfg(target_os = "linux")]
 pub use reactor::ReactorHub;
+pub use session::{SessionHubView, SessionMux};
 pub use topology::Topology;
 pub use transport::{
-    Endpoint, HubBinding, LoopbackHub, Message, TcpEndpoint, TcpHub, Transport, TransportHub,
+    Endpoint, Envelope, HubBinding, LoopbackHub, Message, TcpEndpoint, TcpHub, Transport,
+    TransportHub, WireError, ROOT_SESSION,
 };
-pub use worker::{UpdateFn, Worker};
+pub use worker::{MuxWorker, UpdateFn, Worker};

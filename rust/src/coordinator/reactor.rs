@@ -75,7 +75,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
 
-use super::transport::{Message, TransportHub};
+use super::transport::{Envelope, Message, TransportHub, WireError};
 
 /// Raw epoll / rlimit bindings. `std` already links libc; these are the
 /// five calls the reactor needs, declared directly so no new crate is
@@ -456,8 +456,9 @@ struct Reactor {
     cmd_rx: Receiver<Cmd>,
     /// Dropped when the last connection dies, so the facade's `recv`
     /// fails with "all workers disconnected" exactly like the
-    /// thread-per-connection hub.
-    msg_tx: Option<Sender<Message>>,
+    /// thread-per-connection hub. Carries `Result` so typed envelope
+    /// rejections (bad magic / unknown version) reach the facade too.
+    msg_tx: Option<Sender<Result<Envelope>>>,
     up: Arc<AtomicU64>,
     n_dead: Arc<AtomicUsize>,
     stopping: bool,
@@ -554,9 +555,11 @@ impl Reactor {
                     return;
                 }
                 Ok(n) => {
-                    // Parse errors kill the connection silently — the
-                    // same contract as the per-connection reader threads,
-                    // which return on the first bad frame.
+                    // Parse errors kill the connection — after `ingest`
+                    // forwarded any *typed* envelope rejection (bad magic
+                    // or unknown version) to the facade, matching the
+                    // per-connection reader threads. Everything else
+                    // keeps the silent-kill contract.
                     if self.ingest(i, n).is_err() {
                         self.kill(i);
                         return;
@@ -580,11 +583,27 @@ impl Reactor {
         conn.dec.feed(&self.read_buf[..n]);
         while let Some(frame) = conn.dec.next_frame()? {
             self.up.fetch_add(frame.len() as u64 + 4, Ordering::Relaxed);
-            let msg = Message::from_bytes(frame)?;
-            if let Some(tx) = &self.msg_tx {
-                // A dropped receiver just means the facade is going
-                // away; the stop command follows.
-                let _ = tx.send(msg);
+            match Envelope::from_bytes(frame) {
+                Ok(env) => {
+                    if let Some(tx) = &self.msg_tx {
+                        // A dropped receiver just means the facade is
+                        // going away; the stop command follows.
+                        let _ = tx.send(Ok(env));
+                    }
+                }
+                Err(e) => {
+                    // A protocol-identity failure is *reported* before
+                    // the connection dies — typed rejection, never a
+                    // silent kill. Other parse errors stay silent.
+                    let typed = e.downcast_ref::<WireError>().is_some();
+                    if typed {
+                        if let Some(tx) = &self.msg_tx {
+                            let _ = tx.send(Err(e));
+                        }
+                        bail!("typed envelope rejection");
+                    }
+                    return Err(e);
+                }
             }
         }
         Ok(())
@@ -718,7 +737,7 @@ pub struct ReactorHub {
     n: usize,
     cmd_tx: Sender<Cmd>,
     wake_tx: UnixStream,
-    from_workers: Receiver<Message>,
+    from_workers: Receiver<Result<Envelope>>,
     down: Arc<AtomicU64>,
     up: Arc<AtomicU64>,
     n_dead: Arc<AtomicUsize>,
@@ -744,10 +763,10 @@ impl TransportHub for ReactorHub {
         self.n
     }
 
-    fn broadcast(&mut self, msg: &Message) -> Result<()> {
+    fn broadcast_session(&mut self, session: u16, msg: &Message) -> Result<()> {
         // Serialize once (validating, like both other hubs); every
         // connection shares these bytes.
-        let body = msg.to_bytes()?;
+        let body = msg.to_bytes_for(session)?;
         let mut framed = Vec::with_capacity(body.len() + 4);
         framed.extend_from_slice(&(body.len() as u32).to_le_bytes());
         framed.extend_from_slice(&body);
@@ -768,13 +787,13 @@ impl TransportHub for ReactorHub {
         Ok(())
     }
 
-    fn recv(&mut self) -> Result<Message> {
-        self.from_workers.recv().context("all workers disconnected")
+    fn recv_env(&mut self) -> Result<Envelope> {
+        self.from_workers.recv().context("all workers disconnected")?
     }
 
-    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<Message>> {
+    fn recv_env_timeout(&mut self, timeout: Duration) -> Result<Option<Envelope>> {
         match self.from_workers.recv_timeout(timeout) {
-            Ok(m) => Ok(Some(m)),
+            Ok(m) => Ok(Some(m?)),
             Err(RecvTimeoutError::Timeout) => Ok(None),
             Err(RecvTimeoutError::Disconnected) => bail!("all workers disconnected"),
         }
@@ -1002,6 +1021,53 @@ mod tests {
         // The poisoned connection was the only one, so the upload
         // channel must disconnect rather than hang.
         assert!(hub.recv().is_err(), "oversized prefix must kill the stream");
+        drop(client.join().unwrap());
+    }
+
+    #[test]
+    fn reactor_surfaces_typed_envelope_errors() {
+        // A peer speaking a future wire version is a *reported* typed
+        // rejection at the facade — not a silent connection kill.
+        let binding = ReactorBinding::bind("127.0.0.1:0").unwrap();
+        let addr = binding.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut stream = std::net::TcpStream::connect(addr).unwrap();
+            let mut bytes = Message::Shutdown.to_bytes().unwrap();
+            bytes[2] = bytes[2].wrapping_add(1); // future wire version
+            let mut framed = (bytes.len() as u32).to_le_bytes().to_vec();
+            framed.extend_from_slice(&bytes);
+            stream.write_all(&framed).unwrap();
+            stream
+        });
+        let mut hub = binding.accept(1).unwrap();
+        let err = hub.recv_env().unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<WireError>(), Some(WireError::UnknownVersion(_))),
+            "expected typed UnknownVersion, got {err:?}"
+        );
+        drop(client.join().unwrap());
+    }
+
+    #[test]
+    fn reactor_preserves_envelope_sessions() {
+        let binding = ReactorBinding::bind("127.0.0.1:0").unwrap();
+        let addr = binding.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut ep = TcpEndpoint::connect(&addr.to_string()).unwrap();
+            let env = ep.recv_envelope().unwrap();
+            assert_eq!(env.session, 11, "downlink session must survive the reactor");
+            ep.send_session(23, upload(1)).unwrap();
+            ep
+        });
+        let mut hub = binding.accept(1).unwrap();
+        hub.broadcast_session(11, &Message::RoundStart {
+            round: 0,
+            dim: 1,
+            payload: vec![1.0].into(),
+        })
+        .unwrap();
+        let env = hub.recv_env().unwrap();
+        assert_eq!(env.session, 23, "uplink session must survive the reactor");
         drop(client.join().unwrap());
     }
 

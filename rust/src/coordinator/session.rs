@@ -1,0 +1,298 @@
+//! Session multiplexing: several concurrent tenant sessions over ONE
+//! transport hub and one aggregation tree.
+//!
+//! A [`SessionMux`] wraps any [`TransportHub`] and hands out per-session
+//! [`SessionHubView`]s, each of which *is* a `TransportHub` — so a
+//! [`Leader`](super::leader::Leader) built on a view runs unmodified,
+//! believing it owns the wire. The mux demultiplexes upstream envelopes
+//! by their session id: a view's `recv_env` pops its own queue first,
+//! then pulls from the shared hub, parking envelopes addressed to other
+//! registered sessions on their queues. An envelope for a session nobody
+//! registered is a typed [`WireError::UnknownSession`] — the envelope
+//! contract: never silently dropped, never misattributed.
+//!
+//! Byte accounting is per tenant: every framed envelope that crosses the
+//! mux is charged to the session in its header, so `dme serve --tenants`
+//! can print an honest per-tenant bytes column even though the tenants
+//! share every socket.
+//!
+//! Concurrency: views serialize on one mutex, and the lock is held
+//! across the blocking `recv_env` on the underlying hub. That is safe —
+//! a blocked holder routes other tenants' envelopes to their queues
+//! before returning, so their views drain without touching the hub — but
+//! it means tenant *drivers* make progress one wire-read at a time. The
+//! intended pattern is the one `dme serve --tenants` uses: a single
+//! driver thread interleaving tenant rounds, which needs no concurrency
+//! at all.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::transport::{Envelope, Message, TransportHub, WireError};
+
+struct MuxInner {
+    hub: Box<dyn TransportHub>,
+    /// Parked upstream envelopes, per registered session.
+    queues: HashMap<u16, VecDeque<Envelope>>,
+    /// Framed bytes broadcast down, per session (across all workers).
+    down_bytes: HashMap<u16, u64>,
+    /// Framed bytes received up, per session.
+    up_bytes: HashMap<u16, u64>,
+}
+
+/// Multiplexes one [`TransportHub`] across many tenant sessions.
+pub struct SessionMux {
+    inner: Arc<Mutex<MuxInner>>,
+}
+
+impl SessionMux {
+    /// Take ownership of `hub`; tenants attach via [`Self::view`].
+    pub fn new(hub: Box<dyn TransportHub>) -> Self {
+        SessionMux {
+            inner: Arc::new(Mutex::new(MuxInner {
+                hub,
+                queues: HashMap::new(),
+                down_bytes: HashMap::new(),
+                up_bytes: HashMap::new(),
+            })),
+        }
+    }
+
+    /// Register `session` and return its hub view. Registration is what
+    /// makes inbound envelopes for the session parkable: envelopes for
+    /// unregistered sessions are typed errors, so register every tenant
+    /// *before* the first round starts.
+    pub fn view(&self, session: u16) -> SessionHubView {
+        let mut g = self.inner.lock().unwrap();
+        g.queues.entry(session).or_default();
+        g.down_bytes.entry(session).or_default();
+        g.up_bytes.entry(session).or_default();
+        SessionHubView { session, inner: Arc::clone(&self.inner) }
+    }
+
+    /// Framed `(down, up)` bytes attributed to `session` so far.
+    pub fn session_bytes(&self, session: u16) -> (u64, u64) {
+        let g = self.inner.lock().unwrap();
+        (
+            g.down_bytes.get(&session).copied().unwrap_or(0),
+            g.up_bytes.get(&session).copied().unwrap_or(0),
+        )
+    }
+
+    /// Registered session ids, ascending.
+    pub fn sessions(&self) -> Vec<u16> {
+        let g = self.inner.lock().unwrap();
+        let mut out: Vec<u16> = g.queues.keys().copied().collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// Total `(down, up)` bytes the underlying hub has moved — including
+    /// traffic charged to no registered tenant (e.g. pre-mux rounds).
+    pub fn bytes_moved(&self) -> (u64, u64) {
+        self.inner.lock().unwrap().hub.bytes_moved()
+    }
+}
+
+/// A per-session facade over the shared hub. Implements [`TransportHub`]
+/// so leaders and aggregators drive it unchanged; `bytes_moved` reports
+/// only this session's share.
+pub struct SessionHubView {
+    session: u16,
+    inner: Arc<Mutex<MuxInner>>,
+}
+
+impl SessionHubView {
+    /// The session this view speaks for.
+    pub fn session(&self) -> u16 {
+        self.session
+    }
+
+    /// Pop a parked envelope, else pull one from the hub via `pull`,
+    /// parking strangers. `Ok(None)` only when `pull` returns it.
+    fn next_from(
+        &self,
+        g: &mut MuxInner,
+        pull: impl Fn(&mut dyn TransportHub) -> Result<Option<Envelope>>,
+    ) -> Result<Option<Envelope>> {
+        loop {
+            if let Some(env) = g.queues.get_mut(&self.session).and_then(|q| q.pop_front()) {
+                return Ok(Some(env));
+            }
+            let env = match pull(g.hub.as_mut())? {
+                Some(env) => env,
+                None => return Ok(None),
+            };
+            *g.up_bytes.entry(env.session).or_insert(0) += env.framed_len();
+            if env.session == self.session {
+                return Ok(Some(env));
+            }
+            match g.queues.get_mut(&env.session) {
+                Some(q) => q.push_back(env),
+                // A session nobody registered: surface the typed error
+                // instead of guessing an owner or dropping the bytes.
+                None => return Err(WireError::UnknownSession(env.session).into()),
+            }
+        }
+    }
+}
+
+impl TransportHub for SessionHubView {
+    fn n_workers(&self) -> usize {
+        self.inner.lock().unwrap().hub.n_workers()
+    }
+
+    fn broadcast_session(&mut self, session: u16, msg: &Message) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        let fanout = g.hub.n_workers() as u64;
+        g.hub.broadcast_session(session, msg)?;
+        *g.down_bytes.entry(session).or_insert(0) += msg.framed_len() * fanout;
+        Ok(())
+    }
+
+    fn recv_env(&mut self) -> Result<Envelope> {
+        let mut g = self.inner.lock().unwrap();
+        match self.next_from(&mut g, |hub| hub.recv_env().map(Some))? {
+            Some(env) => Ok(env),
+            None => unreachable!("blocking pull never yields None"),
+        }
+    }
+
+    fn recv_env_timeout(&mut self, timeout: Duration) -> Result<Option<Envelope>> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        self.next_from(&mut g, |hub| {
+            let left = deadline.saturating_duration_since(Instant::now());
+            hub.recv_env_timeout(left)
+        })
+    }
+
+    fn bytes_moved(&self) -> (u64, u64) {
+        let g = self.inner.lock().unwrap();
+        (
+            g.down_bytes.get(&self.session).copied().unwrap_or(0),
+            g.up_bytes.get(&self.session).copied().unwrap_or(0),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::transport::{LoopbackHub, ROOT_SESSION};
+
+    fn upload(client: u64) -> Message {
+        Message::Upload { client, round: 0, frames: vec![] }
+    }
+
+    #[test]
+    fn views_demux_by_session() {
+        let (hub, eps) = LoopbackHub::new(2);
+        let mux = SessionMux::new(Box::new(hub));
+        let mut a = mux.view(1);
+        let mut b = mux.view(2);
+
+        // Interleave arrivals: b's envelope lands first, then a's.
+        eps[0].send_session(2, upload(20)).unwrap();
+        eps[1].send_session(1, upload(10)).unwrap();
+
+        // a pulls: parks the session-2 envelope, returns its own.
+        let env = a.recv_env().unwrap();
+        assert_eq!(env.session, 1);
+        assert!(matches!(env.msg, Message::Upload { client: 10, .. }));
+        // b drains its parked envelope without touching the hub.
+        let env = b.recv_env().unwrap();
+        assert_eq!(env.session, 2);
+        assert!(matches!(env.msg, Message::Upload { client: 20, .. }));
+    }
+
+    #[test]
+    fn broadcast_goes_out_on_the_view_session() {
+        let (hub, eps) = LoopbackHub::new(2);
+        let mux = SessionMux::new(Box::new(hub));
+        let mut a = mux.view(7);
+        a.broadcast_session(7, &Message::Shutdown).unwrap();
+        for ep in &eps {
+            let env = ep.recv_envelope().unwrap();
+            assert_eq!(env.session, 7);
+            assert!(matches!(env.msg, Message::Shutdown));
+        }
+    }
+
+    #[test]
+    fn unregistered_session_is_a_typed_error() {
+        let (hub, eps) = LoopbackHub::new(1);
+        let mux = SessionMux::new(Box::new(hub));
+        let mut a = mux.view(1);
+        eps[0].send_session(9, upload(0)).unwrap();
+        let err = a.recv_env().unwrap_err();
+        match err.downcast_ref::<WireError>() {
+            Some(WireError::UnknownSession(9)) => {}
+            other => panic!("expected UnknownSession(9), got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn per_session_byte_accounting_splits_the_wire() {
+        let (hub, eps) = LoopbackHub::new(1);
+        let mux = SessionMux::new(Box::new(hub));
+        let mut a = mux.view(1);
+        let mut b = mux.view(2);
+
+        let down = Message::RoundStart { round: 0, dim: 2, payload: vec![].into() };
+        a.broadcast_session(1, &down).unwrap();
+        a.broadcast_session(1, &down).unwrap();
+        b.broadcast_session(2, &down).unwrap();
+        // Drain the worker side so the channel doesn't pile up.
+        for _ in 0..3 {
+            eps[0].recv_envelope().unwrap();
+        }
+
+        eps[0].send_session(1, upload(0)).unwrap();
+        eps[0].send_session(2, upload(0)).unwrap();
+        a.recv_env().unwrap();
+        b.recv_env().unwrap();
+
+        let per_msg = down.framed_len();
+        let per_up = upload(0).framed_len();
+        assert_eq!(mux.session_bytes(1), (2 * per_msg, per_up));
+        assert_eq!(mux.session_bytes(2), (per_msg, per_up));
+        assert_eq!(a.bytes_moved(), (2 * per_msg, per_up));
+        assert_eq!(b.bytes_moved(), (per_msg, per_up));
+        // The hub's own tally covers both tenants.
+        let (hub_down, hub_up) = mux.bytes_moved();
+        assert_eq!(hub_down, 3 * per_msg);
+        assert_eq!(hub_up, 2 * per_up);
+    }
+
+    #[test]
+    fn timeout_elapses_without_eating_other_sessions() {
+        let (hub, eps) = LoopbackHub::new(1);
+        let mux = SessionMux::new(Box::new(hub));
+        let mut a = mux.view(1);
+        let mut b = mux.view(2);
+        eps[0].send_session(2, upload(5)).unwrap();
+        // a times out but must have parked b's envelope, not dropped it.
+        assert!(a.recv_env_timeout(Duration::from_millis(20)).unwrap().is_none());
+        let env = b.recv_env_timeout(Duration::from_millis(20)).unwrap().unwrap();
+        assert_eq!(env.session, 2);
+    }
+
+    #[test]
+    fn root_session_muxes_like_any_other() {
+        // ROOT_SESSION is not special to the mux: a view on it coexists
+        // with tenant views.
+        let (hub, eps) = LoopbackHub::new(1);
+        let mux = SessionMux::new(Box::new(hub));
+        let mut root = mux.view(ROOT_SESSION);
+        let mut t = mux.view(3);
+        eps[0].send(upload(1)).unwrap(); // plain send = root session
+        eps[0].send_session(3, upload(2)).unwrap();
+        assert_eq!(root.recv_env().unwrap().session, ROOT_SESSION);
+        assert_eq!(t.recv_env().unwrap().session, 3);
+        assert_eq!(mux.sessions(), vec![ROOT_SESSION, 3]);
+    }
+}

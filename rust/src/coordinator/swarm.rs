@@ -25,7 +25,7 @@ use anyhow::{bail, Context, Result};
 use super::reactor::{
     Epoll, FrameDecoder, INTEREST_READ, INTEREST_READ_WRITE, OutQueue, READABLE, WRITABLE,
 };
-use super::transport::Message;
+use super::transport::{Envelope, Message};
 
 /// What a finished swarm observed, for bench/soak assertions.
 #[derive(Debug, Clone, Copy)]
@@ -51,9 +51,36 @@ impl Swarm {
     /// runs on the driver thread, so heavy work in it serializes the
     /// swarm — by design, that is still how a 16k-client bench stays at
     /// two threads instead of 16k.
-    pub fn spawn<F>(addr: SocketAddr, n: usize, reply: F) -> Result<Swarm>
+    pub fn spawn<F>(addr: SocketAddr, n: usize, mut reply: F) -> Result<Swarm>
     where
         F: FnMut(usize, &Message) -> Option<Message> + Send + 'static,
+    {
+        // Message-level replies answer on the session they were asked
+        // on — exactly what a protocol-correct client does, including
+        // under session multiplexing.
+        Self::spawn_env(addr, n, move |i, env: &Envelope| {
+            reply(i, &env.msg).map(|msg| Envelope { session: env.session, msg })
+        })
+    }
+
+    /// [`Self::spawn`], with full envelope visibility: the callback sees
+    /// each message's session id and chooses the session of its reply.
+    pub fn spawn_env<F>(addr: SocketAddr, n: usize, reply: F) -> Result<Swarm>
+    where
+        F: FnMut(usize, &Envelope) -> Option<Envelope> + Send + 'static,
+    {
+        Self::spawn_mux(addr, n, 1, reply)
+    }
+
+    /// [`Self::spawn_env`] for multi-tenant links: each client serves
+    /// `sessions` concurrent sessions over its one connection and hangs
+    /// up only after a `Shutdown` has arrived for every one of them. A
+    /// protocol-correct multiplexed client never closes the shared
+    /// socket while a co-tenant is still live — the parent's reactor
+    /// treats a broadcast into a dead connection as a worker loss.
+    pub fn spawn_mux<F>(addr: SocketAddr, n: usize, sessions: usize, reply: F) -> Result<Swarm>
+    where
+        F: FnMut(usize, &Envelope) -> Option<Envelope> + Send + 'static,
     {
         let handle = std::thread::Builder::new()
             .name("dme-swarm".to_string())
@@ -73,6 +100,7 @@ impl Swarm {
                         dec: FrameDecoder::new(),
                         out: OutQueue::new(),
                         interest: INTEREST_READ,
+                        shutdowns_seen: 0,
                     }));
                 }
                 let driver = Driver {
@@ -81,6 +109,7 @@ impl Swarm {
                     live: n,
                     reply,
                     read_buf: vec![0u8; 64 * 1024],
+                    shutdowns_to_close: sessions.max(1),
                     replies_sent: 0,
                     frames_received: 0,
                 };
@@ -104,6 +133,9 @@ struct Client {
     dec: FrameDecoder,
     out: OutQueue,
     interest: u32,
+    /// Shutdowns received so far; the connection closes at
+    /// `Driver::shutdowns_to_close` (one per hosted session).
+    shutdowns_seen: usize,
 }
 
 struct Driver<F> {
@@ -112,11 +144,12 @@ struct Driver<F> {
     live: usize,
     reply: F,
     read_buf: Vec<u8>,
+    shutdowns_to_close: usize,
     replies_sent: u64,
     frames_received: u64,
 }
 
-impl<F: FnMut(usize, &Message) -> Option<Message>> Driver<F> {
+impl<F: FnMut(usize, &Envelope) -> Option<Envelope>> Driver<F> {
     fn run(mut self) -> SwarmReport {
         let mut ready: Vec<(u64, u32)> = Vec::with_capacity(512);
         while self.live > 0 {
@@ -173,11 +206,15 @@ impl<F: FnMut(usize, &Message) -> Option<Message>> Driver<F> {
         client.dec.feed(&self.read_buf[..n]);
         while let Some(frame) = client.dec.next_frame()? {
             self.frames_received += 1;
-            let msg = Message::from_bytes(frame)?;
-            if matches!(msg, Message::Shutdown) {
-                return Ok(false);
+            let env = Envelope::from_bytes(frame)?;
+            if matches!(env.msg, Message::Shutdown) {
+                client.shutdowns_seen += 1;
+                if client.shutdowns_seen >= self.shutdowns_to_close {
+                    return Ok(false);
+                }
+                continue;
             }
-            if let Some(resp) = (self.reply)(i, &msg) {
+            if let Some(resp) = (self.reply)(i, &env) {
                 let body = resp.to_bytes()?;
                 let mut framed = Vec::with_capacity(body.len() + 4);
                 framed.extend_from_slice(&(body.len() as u32).to_le_bytes());

@@ -45,12 +45,44 @@ pub struct Topology {
     /// `levels[0]` is the tier directly above the workers; the last
     /// entry is the tier directly below the leader. Empty = flat.
     levels: Vec<Vec<AggSpec>>,
+    /// How many contiguous dimension shards the aggregation state is
+    /// split into (1 = unsharded). Orthogonal to the client-span tree:
+    /// with `s` shards, each barrier child is logically replicated `s`
+    /// times, one replica folding only its slice of the coordinates, and
+    /// the root concatenates the slices (see `Topology::shard_ranges`).
+    dim_shards: u32,
 }
 
 impl Topology {
     /// The flat topology: every worker reports straight to the leader.
     pub fn flat(n_clients: u64) -> Self {
-        Topology { n_clients, levels: Vec::new() }
+        Topology { n_clients, levels: Vec::new(), dim_shards: 1 }
+    }
+
+    /// Split the aggregation state into `shards` contiguous dimension
+    /// slices (1 = unsharded, the default). The estimate is bit-identical
+    /// for every shard count — coordinate sums are independent — so this
+    /// is purely a capacity decision: it bounds per-aggregator slot state
+    /// to `internal_dim / shards` coordinates.
+    pub fn with_dim_shards(mut self, shards: u32) -> Result<Self> {
+        ensure!(shards >= 1, "dim_shards must be at least 1");
+        ensure!(shards <= 1 << 16, "dim_shards {shards} is absurdly large");
+        self.dim_shards = shards;
+        Ok(self)
+    }
+
+    /// How many dimension shards the aggregation state is split into.
+    pub fn dim_shards(&self) -> u32 {
+        self.dim_shards
+    }
+
+    /// The contiguous coordinate ranges `[lo, hi)` the shards cover at a
+    /// given protocol-internal dimension: balanced slices (sizes differ
+    /// by at most one, larger slices first), partitioning
+    /// `[0, internal_dim)` in order. Shards beyond `internal_dim` are
+    /// empty ranges — legal, they just hold no coordinates.
+    pub fn shard_ranges(&self, internal_dim: usize) -> Vec<(u32, u32)> {
+        split_ranges(internal_dim, self.dim_shards)
     }
 
     /// A uniform tree: `depth` barrier tiers (1 = flat, 2 = one
@@ -83,7 +115,7 @@ impl Topology {
                 .collect();
             levels.push(tier);
         }
-        let topo = Topology { n_clients, levels };
+        let topo = Topology { n_clients, levels, dim_shards: 1 };
         topo.validate()?;
         Ok(topo)
     }
@@ -184,6 +216,22 @@ impl Topology {
     }
 }
 
+/// Balanced contiguous partition of `[0, dim)` into `shards` ranges:
+/// the first `dim % shards` ranges get one extra coordinate.
+pub fn split_ranges(dim: usize, shards: u32) -> Vec<(u32, u32)> {
+    let shards = shards.max(1) as usize;
+    let base = dim / shards;
+    let extra = dim % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut lo = 0usize;
+    for s in 0..shards {
+        let hi = lo + base + usize::from(s < extra);
+        out.push((lo as u32, hi as u32));
+        lo = hi;
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -246,5 +294,30 @@ mod tests {
         assert!(Topology::uniform(4, 0, 2).is_err());
         assert!(Topology::uniform(4, 4, 0).is_err());
         assert!(Topology::uniform(4, 4, 17).is_err());
+        assert!(Topology::flat(4).with_dim_shards(0).is_err());
+    }
+
+    #[test]
+    fn shard_ranges_partition_the_dimension() {
+        // Default is the unsharded identity range.
+        assert_eq!(Topology::flat(4).shard_ranges(10), vec![(0, 10)]);
+        for (dim, shards) in
+            [(10usize, 1u32), (10, 3), (10, 10), (7, 4), (1, 5), (0, 3), (1 << 20, 7)]
+        {
+            let ranges = Topology::flat(4).with_dim_shards(shards).unwrap().shard_ranges(dim);
+            assert_eq!(ranges.len(), shards as usize);
+            let mut cursor = 0u32;
+            for &(lo, hi) in &ranges {
+                assert_eq!(lo, cursor, "gap/overlap at dim={dim} shards={shards}");
+                assert!(hi >= lo);
+                cursor = hi;
+            }
+            assert_eq!(cursor as usize, dim, "ranges must cover [0, dim)");
+            // Balanced: sizes differ by at most one, larger first.
+            let sizes: Vec<u32> = ranges.iter().map(|&(lo, hi)| hi - lo).collect();
+            let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1);
+            assert!(sizes.windows(2).all(|w| w[0] >= w[1]));
+        }
     }
 }

@@ -33,10 +33,12 @@
 //! contract for malformed peers, and exact `framed_len` accounting, so
 //! every conformance test runs verbatim against either.
 //!
-//! Wire format (identical for both transports, little-endian):
+//! Wire format (identical for every transport, little-endian). Every
+//! message body starts with the **versioned envelope header**:
 //!
 //! ```text
-//! u8 tag | payload
+//! magic "DM" (2 bytes) | u8 version (= 1) | u16 session_id | u8 tag | payload
+//!
 //! tag 1 RoundStart: u64 round, u32 n_floats, u32 dim (> 0),
 //!                   then n_floats f32 (the flattened broadcast payload;
 //!                   its length is serialized directly, so ragged
@@ -46,9 +48,11 @@
 //!                   then per frame: u64 bit_len, u32 n_bytes, f32 weight, bytes
 //! tag 3 Shutdown
 //! tag 4 PartialUpload: u64 agg_id, u64 round, u64 span.0, u64 span.1,
-//!                   u64 uplink_bits, u64 n_frames, u32 n_slots, then per
-//!                   slot: u32 n_bytes + a versioned SlotPartial
-//!                   serialization (see `SlotPartial::to_bytes`)
+//!                   u64 uplink_bits, u64 n_frames, u32 shard.0,
+//!                   u32 shard.1 (the dimension shard `[shard.0, shard.1)`
+//!                   the slots cover; `(0, internal_dim)` when unsharded),
+//!                   u32 n_slots, then per slot: u32 n_bytes + a versioned
+//!                   SlotPartial serialization (see `SlotPartial::to_bytes`)
 //! tag 5 SpecChange: u64 round, u32 n_bytes, then the UTF-8 protocol spec
 //!                   string (the `ProtocolConfig` grammar, ≤ 1024 bytes;
 //!                   both ends re-validate it through the spec parser, so
@@ -56,11 +60,23 @@
 //!                   of poisoning a protocol rebuild)
 //! ```
 //!
+//! The envelope fields are checked *first* on every parse: a wrong magic
+//! or an unsupported version is a **typed rejection**
+//! ([`WireError::BadMagic`] / [`WireError::UnknownVersion`], downcastable
+//! from the returned error) that hubs surface to their receiver instead
+//! of silently killing the connection; an envelope whose `session_id`
+//! names a session the receiver does not host is likewise rejected as
+//! [`WireError::UnknownSession`] by the session router (see
+//! `coordinator::session`). The session id is how one transport and one
+//! aggregator tree serve many concurrent estimation sessions (tenants):
+//! every hop preserves it verbatim, and `session 0` is the root session
+//! single-tenant deployments use implicitly.
+//!
 //! On the wire every message is preceded by a u32 length prefix
-//! ([`Message::framed_len`] = serialized size + 4). *Both* hubs account
-//! `framed_len` per message, so a loopback run and a TCP run of the same
-//! experiment report identical `bytes_moved` — conformance-tested in
-//! `tests/coordinator_integration.rs`.
+//! ([`Message::framed_len`] = serialized size + 4, header included).
+//! *Both* hubs account `framed_len` per message, so a loopback run and a
+//! TCP run of the same experiment report identical `bytes_moved` —
+//! conformance-tested in `tests/coordinator_integration.rs`.
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -78,6 +94,104 @@ use crate::protocol::{Frame, SlotPartial};
 pub struct WeightedFrame {
     pub frame: Frame,
     pub weight: f32,
+}
+
+/// The two magic bytes every wire message starts with. Framing bugs and
+/// foreign protocols speaking to our port fail here, as a typed
+/// [`WireError::BadMagic`], before any length field is trusted.
+pub const WIRE_MAGIC: [u8; 2] = *b"DM";
+
+/// The envelope version this build speaks. Bumped when the grammar
+/// changes incompatibly; a peer from the future is rejected as
+/// [`WireError::UnknownVersion`] instead of being misparsed.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Envelope header size: magic (2) + version (1) + session id (2) +
+/// tag (1).
+pub const ENVELOPE_HEADER_LEN: u64 = 6;
+
+/// The implicit session id of single-tenant deployments. Every
+/// `Message`-level (non-envelope) send addresses this session.
+pub const ROOT_SESSION: u16 = 0;
+
+/// Typed envelope rejections. Surfaced as the error cause (downcastable
+/// via `anyhow::Error::downcast_ref::<WireError>`) so receivers can tell
+/// a protocol-identity failure apart from a merely truncated or forged
+/// payload — the former is *reported* to the hub's consumer, never a
+/// silent connection kill.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireError {
+    /// The first two bytes were not [`WIRE_MAGIC`].
+    BadMagic([u8; 2]),
+    /// The version byte named a grammar this build does not speak.
+    UnknownVersion(u8),
+    /// The envelope addressed a session this node does not host. Raised
+    /// by the session router (`coordinator::session`), not the parser —
+    /// the wire cannot know which sessions exist.
+    UnknownSession(u16),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::BadMagic(m) => {
+                write!(f, "bad envelope magic {m:02x?} (expected {WIRE_MAGIC:02x?})")
+            }
+            WireError::UnknownVersion(v) => {
+                write!(f, "unknown wire version {v} (this build speaks {WIRE_VERSION})")
+            }
+            WireError::UnknownSession(s) => write!(f, "envelope addresses unknown session {s}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// A [`Message`] addressed to a session: what actually crosses the wire.
+/// Every hop — worker, aggregator tier, hub — preserves the session id
+/// verbatim, which is what lets one transport and one aggregator tree
+/// serve many concurrent estimation sessions.
+#[derive(Clone, Debug)]
+pub struct Envelope {
+    pub session: u16,
+    pub msg: Message,
+}
+
+impl Envelope {
+    /// Wrap a message for the root (single-tenant) session.
+    pub fn root(msg: Message) -> Self {
+        Envelope { session: ROOT_SESSION, msg }
+    }
+
+    /// Serialize (header + payload). Errors on whatever
+    /// [`Message::validate`] rejects.
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        self.msg.to_bytes_for(self.session)
+    }
+
+    /// On-the-wire size including the u32 length prefix.
+    pub fn framed_len(&self) -> u64 {
+        self.msg.framed_len()
+    }
+
+    /// Parse a full envelope (header checks first: magic, then version —
+    /// both typed rejections — then the session id and tag).
+    pub fn from_bytes(buf: &[u8]) -> Result<Self> {
+        let mut c = Cursor { buf, pos: 0 };
+        let magic: [u8; 2] = c.take(2).context("message too short for envelope magic")?
+            .try_into()
+            .unwrap();
+        if magic != WIRE_MAGIC {
+            return Err(WireError::BadMagic(magic).into());
+        }
+        let version = c.u8()?;
+        if version != WIRE_VERSION {
+            return Err(WireError::UnknownVersion(version).into());
+        }
+        let session = c.u16()?;
+        let msg = Message::parse_body(&mut c)?;
+        Ok(Envelope { session, msg })
+    }
 }
 
 /// Coordinator messages.
@@ -102,6 +216,12 @@ pub enum Message {
         span: (u64, u64),
         uplink_bits: u64,
         n_frames: u64,
+        /// The dimension shard `[shard.0, shard.1)` (in protocol-internal
+        /// coordinates) the slots cover: `(0, internal_dim)` when the
+        /// tree is unsharded. A dimension-sharded subtree folds only its
+        /// slice; the root concatenates sibling shards back into the
+        /// full vector, so each partial must carry which slice it is.
+        shard: (u32, u32),
         slots: Vec<SlotPartial>,
     },
     /// Leader → children (relayed down every aggregation tier): switch
@@ -162,10 +282,11 @@ impl Message {
                     );
                 }
             }
-            Message::PartialUpload { span, slots, .. } => {
+            Message::PartialUpload { span, shard, slots, .. } => {
                 ensure!(span.0 <= span.1, "PartialUpload span is inverted");
                 ensure_u32(slots.len())?;
                 check_partial_holders(*span, slots)?;
+                check_partial_shard(*shard, slots)?;
                 for s in slots {
                     ensure_u32(s.wire_len())?;
                 }
@@ -180,12 +301,23 @@ impl Message {
         Ok(())
     }
 
-    /// Serialize to the wire format. Used by the TCP transport and by
-    /// tests; the loopback transport accounts the same bytes via
-    /// [`Self::wire_len`]. Errors on whatever [`Self::validate`] rejects.
+    /// Serialize to the wire format addressed to the root session. Used
+    /// by the TCP transport and by tests; the loopback transport accounts
+    /// the same bytes via [`Self::wire_len`]. Errors on whatever
+    /// [`Self::validate`] rejects.
     pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        self.to_bytes_for(ROOT_SESSION)
+    }
+
+    /// Serialize to the wire format addressed to `session`: the envelope
+    /// header (magic, version, session id) followed by the tag byte and
+    /// the tag's payload.
+    pub fn to_bytes_for(&self, session: u16) -> Result<Vec<u8>> {
         self.validate()?;
-        let mut out = Vec::new();
+        let mut out = Vec::with_capacity(self.wire_len() as usize);
+        out.extend_from_slice(&WIRE_MAGIC);
+        out.push(WIRE_VERSION);
+        out.extend_from_slice(&session.to_le_bytes());
         match self {
             Message::RoundStart { round, dim, payload } => {
                 out.push(1u8);
@@ -208,7 +340,7 @@ impl Message {
                     out.extend_from_slice(&wf.frame.bytes);
                 }
             }
-            Message::PartialUpload { agg_id, round, span, uplink_bits, n_frames, slots } => {
+            Message::PartialUpload { agg_id, round, span, uplink_bits, n_frames, shard, slots } => {
                 out.push(4u8);
                 out.extend_from_slice(&agg_id.to_le_bytes());
                 out.extend_from_slice(&round.to_le_bytes());
@@ -216,6 +348,8 @@ impl Message {
                 out.extend_from_slice(&span.1.to_le_bytes());
                 out.extend_from_slice(&uplink_bits.to_le_bytes());
                 out.extend_from_slice(&n_frames.to_le_bytes());
+                out.extend_from_slice(&shard.0.to_le_bytes());
+                out.extend_from_slice(&shard.1.to_le_bytes());
                 out.extend_from_slice(&(slots.len() as u32).to_le_bytes());
                 for s in slots {
                     let bytes = s.to_bytes()?;
@@ -238,14 +372,15 @@ impl Message {
     /// loopback transport accounts bytes on every send; building the full
     /// serialization just to measure it dominated small-round profiles).
     pub fn wire_len(&self) -> u64 {
+        const H: u64 = ENVELOPE_HEADER_LEN; // magic + version + session + tag
         match self {
-            Message::RoundStart { payload, .. } => 1 + 8 + 4 + 4 + payload.len() as u64 * 4,
+            Message::RoundStart { payload, .. } => H + 8 + 4 + 4 + payload.len() as u64 * 4,
             Message::Upload { frames, .. } => Self::upload_wire_len(frames),
             Message::PartialUpload { slots, .. } => {
-                1 + 8 * 6 + 4 + slots.iter().map(|s| 4 + s.wire_len() as u64).sum::<u64>()
+                H + 8 * 6 + 4 * 2 + 4 + slots.iter().map(|s| 4 + s.wire_len() as u64).sum::<u64>()
             }
-            Message::SpecChange { spec, .. } => 1 + 8 + 4 + spec.len() as u64,
-            Message::Shutdown => 1,
+            Message::SpecChange { spec, .. } => H + 8 + 4 + spec.len() as u64,
+            Message::Shutdown => H,
         }
     }
 
@@ -260,7 +395,8 @@ impl Message {
     /// accounting paths (the tree simulator) measure what a message
     /// *would* cost without cloning the payload into one.
     pub fn upload_wire_len(frames: &[WeightedFrame]) -> u64 {
-        1 + 8
+        ENVELOPE_HEADER_LEN
+            + 8
             + 8
             + 4
             + frames
@@ -269,9 +405,17 @@ impl Message {
                 .sum::<u64>()
     }
 
-    /// Parse from the wire format.
+    /// Parse from the wire format, discarding the session id (the
+    /// single-tenant convenience — session-aware receivers use
+    /// [`Envelope::from_bytes`]). Envelope header checks still run:
+    /// bad magic or version is a typed [`WireError`].
     pub fn from_bytes(buf: &[u8]) -> Result<Self> {
-        let mut c = Cursor { buf, pos: 0 };
+        Ok(Envelope::from_bytes(buf)?.msg)
+    }
+
+    /// Parse a message body (tag + payload) from a cursor positioned
+    /// just past the envelope's session id.
+    fn parse_body(c: &mut Cursor<'_>) -> Result<Self> {
         let tag = c.u8()?;
         match tag {
             1 => {
@@ -326,6 +470,8 @@ impl Message {
                 ensure!(span.0 <= span.1, "PartialUpload span is inverted");
                 let uplink_bits = c.u64()?;
                 let n_frames = c.u64()?;
+                let shard = (c.u32()?, c.u32()?);
+                ensure!(shard.0 <= shard.1, "PartialUpload shard range is inverted");
                 let n = c.u32()? as usize;
                 // Validate before allocating (as for Upload): every slot
                 // needs at least a 4-byte length prefix.
@@ -343,7 +489,16 @@ impl Message {
                 }
                 c.done()?;
                 check_partial_holders(span, &slots)?;
-                Ok(Message::PartialUpload { agg_id, round, span, uplink_bits, n_frames, slots })
+                check_partial_shard(shard, &slots)?;
+                Ok(Message::PartialUpload {
+                    agg_id,
+                    round,
+                    span,
+                    uplink_bits,
+                    n_frames,
+                    shard,
+                    slots,
+                })
             }
             5 => {
                 let round = c.u64()?;
@@ -377,6 +532,25 @@ fn check_partial_holders(span: (u64, u64), slots: &[SlotPartial]) -> Result<()> 
     Ok(())
 }
 
+/// A `PartialUpload`'s slots must actually be the dimension slice its
+/// shard range claims: every slot's internal dim equals the range width.
+/// Checked on send (validate) and on parse, so a forged shard range
+/// cannot make the root concatenate misaligned slices.
+fn check_partial_shard(shard: (u32, u32), slots: &[SlotPartial]) -> Result<()> {
+    ensure!(shard.0 <= shard.1, "PartialUpload shard range is inverted");
+    let width = (shard.1 - shard.0) as usize;
+    for s in slots {
+        ensure!(
+            s.internal_dim() == width,
+            "PartialUpload slot spans {} dims but its shard range [{}, {}) spans {width}",
+            s.internal_dim(),
+            shard.0,
+            shard.1
+        );
+    }
+    Ok(())
+}
+
 /// Checked narrowing for wire-format length fields: an oversized frame is
 /// a serialization error the caller can surface, never a worker-thread
 /// panic.
@@ -403,6 +577,9 @@ impl<'a> Cursor<'a> {
     fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
     }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
     fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
@@ -425,16 +602,30 @@ impl<'a> Cursor<'a> {
 pub trait TransportHub: Send {
     /// Number of connected workers.
     fn n_workers(&self) -> usize;
-    /// Send a message to every worker.
-    fn broadcast(&mut self, msg: &Message) -> Result<()>;
-    /// Block for the next upload.
-    fn recv(&mut self) -> Result<Message>;
+    /// Send a message to every worker, addressed to `session`.
+    fn broadcast_session(&mut self, session: u16, msg: &Message) -> Result<()>;
+    /// Block for the next upload, with its envelope session.
+    fn recv_env(&mut self) -> Result<Envelope>;
     /// Block for the next upload, up to `timeout`: `Ok(None)` means the
     /// deadline passed with no message (the barrier-liveness path —
     /// callers turn it into an error naming the missing children).
-    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<Message>>;
+    fn recv_env_timeout(&mut self, timeout: Duration) -> Result<Option<Envelope>>;
     /// Cumulative (downlink, uplink) bytes moved so far.
     fn bytes_moved(&self) -> (u64, u64);
+
+    /// Send a message to every worker on the root session (the
+    /// single-tenant convenience every pre-envelope caller uses).
+    fn broadcast(&mut self, msg: &Message) -> Result<()> {
+        self.broadcast_session(ROOT_SESSION, msg)
+    }
+    /// Block for the next upload, discarding the session id.
+    fn recv(&mut self) -> Result<Message> {
+        Ok(self.recv_env()?.msg)
+    }
+    /// [`Self::recv_env_timeout`], discarding the session id.
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<Message>> {
+        Ok(self.recv_env_timeout(timeout)?.map(|e| e.msg))
+    }
 }
 
 /// Child-side view of a transport link to the parent node: what a worker
@@ -442,10 +633,19 @@ pub trait TransportHub: Send {
 /// abstraction for both the in-process and the TCP endpoint, so the
 /// worker/aggregator loops are written once.
 pub trait Endpoint: Send {
-    /// Send a message upstream.
-    fn send_msg(&mut self, msg: Message) -> Result<()>;
-    /// Block for the next downstream message.
-    fn recv_msg(&mut self) -> Result<Message>;
+    /// Send a message upstream, addressed to `session`.
+    fn send_env(&mut self, session: u16, msg: Message) -> Result<()>;
+    /// Block for the next downstream message, with its envelope session.
+    fn recv_env(&mut self) -> Result<Envelope>;
+
+    /// Send a message upstream on the root session.
+    fn send_msg(&mut self, msg: Message) -> Result<()> {
+        self.send_env(ROOT_SESSION, msg)
+    }
+    /// Block for the next downstream message, discarding the session id.
+    fn recv_msg(&mut self) -> Result<Message> {
+        Ok(self.recv_env()?.msg)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -454,38 +654,44 @@ pub trait Endpoint: Send {
 
 /// In-process hub: workers are threads holding [`LoopbackEndpoint`]s.
 pub struct LoopbackHub {
-    to_workers: Vec<Sender<Message>>,
-    from_workers: Receiver<Message>,
+    to_workers: Vec<Sender<Envelope>>,
+    from_workers: Receiver<Envelope>,
     down_bytes: u64,
     up_bytes: Arc<Mutex<u64>>,
 }
 
 /// Worker-side endpoint of a loopback hub.
 pub struct LoopbackEndpoint {
-    pub rx: Receiver<Message>,
-    tx: Sender<Message>,
+    pub rx: Receiver<Envelope>,
+    tx: Sender<Envelope>,
     up_bytes: Arc<Mutex<u64>>,
 }
 
 impl LoopbackEndpoint {
     pub fn send(&self, msg: Message) -> Result<()> {
+        self.send_session(ROOT_SESSION, msg)
+    }
+    pub fn send_session(&self, session: u16, msg: Message) -> Result<()> {
         // Same legality as TCP: a message the wire format cannot carry
         // must not slip through in-process either.
         msg.validate()?;
         *self.up_bytes.lock().unwrap() += msg.framed_len();
-        self.tx.send(msg).context("leader hung up")
+        self.tx.send(Envelope { session, msg }).context("leader hung up")
     }
     pub fn recv(&self) -> Result<Message> {
+        Ok(self.recv_envelope()?.msg)
+    }
+    pub fn recv_envelope(&self) -> Result<Envelope> {
         self.rx.recv().context("leader hung up")
     }
 }
 
 impl Endpoint for LoopbackEndpoint {
-    fn send_msg(&mut self, msg: Message) -> Result<()> {
-        LoopbackEndpoint::send(self, msg)
+    fn send_env(&mut self, session: u16, msg: Message) -> Result<()> {
+        LoopbackEndpoint::send_session(self, session, msg)
     }
-    fn recv_msg(&mut self) -> Result<Message> {
-        LoopbackEndpoint::recv(self)
+    fn recv_env(&mut self) -> Result<Envelope> {
+        LoopbackEndpoint::recv_envelope(self)
     }
 }
 
@@ -517,7 +723,7 @@ impl TransportHub for LoopbackHub {
         self.to_workers.len()
     }
 
-    fn broadcast(&mut self, msg: &Message) -> Result<()> {
+    fn broadcast_session(&mut self, session: u16, msg: &Message) -> Result<()> {
         // Account the broadcast once per worker (the paper's footnote 4
         // notes broadcast downlink can be cheaper; metrics report both).
         // The clone itself is cheap: RoundStart payloads are Arc-shared,
@@ -531,7 +737,7 @@ impl TransportHub for LoopbackHub {
         // failure afterwards.
         let mut any_dead = false;
         for tx in &self.to_workers {
-            if tx.send(msg.clone()).is_ok() {
+            if tx.send(Envelope { session, msg: msg.clone() }).is_ok() {
                 self.down_bytes += msg.framed_len();
             } else {
                 any_dead = true;
@@ -541,11 +747,11 @@ impl TransportHub for LoopbackHub {
         Ok(())
     }
 
-    fn recv(&mut self) -> Result<Message> {
+    fn recv_env(&mut self) -> Result<Envelope> {
         self.from_workers.recv().context("all workers hung up")
     }
 
-    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<Message>> {
+    fn recv_env_timeout(&mut self, timeout: Duration) -> Result<Option<Envelope>> {
         match self.from_workers.recv_timeout(timeout) {
             Ok(m) => Ok(Some(m)),
             Err(RecvTimeoutError::Timeout) => Ok(None),
@@ -562,22 +768,22 @@ impl TransportHub for LoopbackHub {
 // TCP
 // ---------------------------------------------------------------------------
 
-fn write_msg(stream: &mut impl Write, msg: &Message) -> Result<u64> {
-    let bytes = msg.to_bytes()?;
+fn write_msg(stream: &mut impl Write, session: u16, msg: &Message) -> Result<u64> {
+    let bytes = msg.to_bytes_for(session)?;
     stream.write_all(&(bytes.len() as u32).to_le_bytes())?;
     stream.write_all(&bytes)?;
     stream.flush()?;
     Ok(bytes.len() as u64 + 4)
 }
 
-fn read_msg(stream: &mut impl Read) -> Result<(Message, u64)> {
+fn read_msg(stream: &mut impl Read) -> Result<(Envelope, u64)> {
     let mut len_buf = [0u8; 4];
     stream.read_exact(&mut len_buf)?;
     let len = u32::from_le_bytes(len_buf) as usize;
     ensure!(len <= 1 << 30, "message too large");
     let mut buf = vec![0u8; len];
     stream.read_exact(&mut buf)?;
-    Ok((Message::from_bytes(&buf)?, len as u64 + 4))
+    Ok((Envelope::from_bytes(&buf)?, len as u64 + 4))
 }
 
 /// A bound-but-not-yet-accepting TCP hub: created by [`TcpHub::bind`].
@@ -615,13 +821,26 @@ impl TcpHubBinding {
                         let mut r = BufReader::new(reader);
                         loop {
                             match read_msg(&mut r) {
-                                Ok((msg, n)) => {
+                                Ok((env, n)) => {
                                     *up.lock().unwrap() += n;
-                                    if tx.send(Ok(msg)).is_err() {
+                                    if tx.send(Ok(env)).is_err() {
                                         return;
                                     }
                                 }
-                                Err(_) => return, // peer closed
+                                // A protocol-identity failure (bad magic
+                                // or unknown version) is *reported* to
+                                // the hub's consumer — a typed rejection,
+                                // never a silent kill. Anything else (a
+                                // closed socket, a truncated or forged
+                                // payload) keeps the silent-kill
+                                // contract: drop the connection, let the
+                                // barrier name the missing child.
+                                Err(e) => {
+                                    if e.downcast_ref::<WireError>().is_some() {
+                                        let _ = tx.send(Err(e));
+                                    }
+                                    return;
+                                }
                             }
                         }
                     })
@@ -635,7 +854,7 @@ impl TcpHubBinding {
 /// TCP hub: listens, accepts `n` workers, then serves rounds.
 pub struct TcpHub {
     writers: Vec<BufWriter<TcpStream>>,
-    from_workers: Receiver<Result<Message>>,
+    from_workers: Receiver<Result<Envelope>>,
     reader_threads: Vec<std::thread::JoinHandle<()>>,
     down_bytes: u64,
     up_bytes: Arc<Mutex<u64>>,
@@ -670,13 +889,13 @@ impl TransportHub for TcpHub {
         self.writers.len()
     }
 
-    fn broadcast(&mut self, msg: &Message) -> Result<()> {
+    fn broadcast_session(&mut self, session: u16, msg: &Message) -> Result<()> {
         // Best-effort like the loopback hub: write to every live worker
         // before surfacing the first failure, so one dead connection
         // cannot starve the others of Shutdown.
         let mut first_err = None;
         for w in &mut self.writers {
-            match write_msg(w, msg) {
+            match write_msg(w, session, msg) {
                 Ok(n) => self.down_bytes += n,
                 Err(e) => {
                     if first_err.is_none() {
@@ -691,11 +910,11 @@ impl TransportHub for TcpHub {
         }
     }
 
-    fn recv(&mut self) -> Result<Message> {
+    fn recv_env(&mut self) -> Result<Envelope> {
         self.from_workers.recv().context("all workers disconnected")?
     }
 
-    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<Message>> {
+    fn recv_env_timeout(&mut self, timeout: Duration) -> Result<Option<Envelope>> {
         match self.from_workers.recv_timeout(timeout) {
             Ok(m) => Ok(Some(m?)),
             Err(RecvTimeoutError::Timeout) => Ok(None),
@@ -758,21 +977,29 @@ impl TcpEndpoint {
     }
 
     pub fn send(&mut self, msg: &Message) -> Result<()> {
-        write_msg(&mut self.writer, msg)?;
+        self.send_session(ROOT_SESSION, msg)
+    }
+
+    pub fn send_session(&mut self, session: u16, msg: &Message) -> Result<()> {
+        write_msg(&mut self.writer, session, msg)?;
         Ok(())
     }
 
     pub fn recv(&mut self) -> Result<Message> {
+        Ok(self.recv_envelope()?.msg)
+    }
+
+    pub fn recv_envelope(&mut self) -> Result<Envelope> {
         Ok(read_msg(&mut self.reader)?.0)
     }
 }
 
 impl Endpoint for TcpEndpoint {
-    fn send_msg(&mut self, msg: Message) -> Result<()> {
-        TcpEndpoint::send(self, &msg)
+    fn send_env(&mut self, session: u16, msg: Message) -> Result<()> {
+        TcpEndpoint::send_session(self, session, &msg)
     }
-    fn recv_msg(&mut self) -> Result<Message> {
-        TcpEndpoint::recv(self)
+    fn recv_env(&mut self) -> Result<Envelope> {
+        TcpEndpoint::recv_envelope(self)
     }
 }
 
@@ -910,6 +1137,7 @@ mod tests {
                     span: s1,
                     uplink_bits: u1,
                     n_frames: n1,
+                    shard: sh1,
                     slots: sl1,
                 },
                 Message::PartialUpload {
@@ -918,10 +1146,11 @@ mod tests {
                     span: s2,
                     uplink_bits: u2,
                     n_frames: n2,
+                    shard: sh2,
                     slots: sl2,
                 },
             ) => {
-                assert_eq!((a1, r1, s1, u1, n1), (a2, r2, s2, u2, n2));
+                assert_eq!((a1, r1, s1, u1, n1, sh1), (a2, r2, s2, u2, n2, sh2));
                 assert_eq!(sl1, sl2, "slots must round-trip exactly");
             }
             (
@@ -948,8 +1177,19 @@ mod tests {
             span: (16, 48),
             uplink_bits: 12345,
             n_frames: 2,
+            shard: (0, 3),
             slots: vec![merged, uniform, SlotPartial::silent(3)],
         }
+    }
+
+    /// The envelope header a legal root-session message of tag `tag`
+    /// starts with — prefix for handcrafted adversarial payloads.
+    fn raw(tag: u8) -> Vec<u8> {
+        let mut v = WIRE_MAGIC.to_vec();
+        v.push(WIRE_VERSION);
+        v.extend_from_slice(&ROOT_SESSION.to_le_bytes());
+        v.push(tag);
+        v
     }
 
     /// Every message shape the leader (or a worker) can legally build:
@@ -980,7 +1220,19 @@ mod tests {
                 span: (5, 5),
                 uplink_bits: 0,
                 n_frames: 0,
+                shard: (0, 0),
                 slots: vec![],
+            },
+            // A dimension-sharded partial: the slice [4, 7) of a larger
+            // vector — its slots span 3 dims starting at offset 4.
+            Message::PartialUpload {
+                agg_id: 2,
+                round: 1,
+                span: (0, 4),
+                uplink_bits: 99,
+                n_frames: 4,
+                shard: (4, 7),
+                slots: vec![SlotPartial::from_decoded(&[0.5, -1.0, 2.0], 2.0, 2).unwrap()],
             },
             Message::SpecChange { round: 4, spec: "rotated:k=16".into() },
             Message::SpecChange {
@@ -1021,8 +1273,7 @@ mod tests {
         assert!(eps[0].send(m).is_err());
         // And a handcrafted dim-0 header must not parse (it used to
         // divide by zero before reaching any check).
-        let mut bytes = Vec::new();
-        bytes.push(1u8);
+        let mut bytes = raw(1);
         bytes.extend_from_slice(&0u64.to_le_bytes()); // round
         bytes.extend_from_slice(&1u32.to_le_bytes()); // n_floats
         bytes.extend_from_slice(&0u32.to_le_bytes()); // dim = 0
@@ -1103,7 +1354,8 @@ mod tests {
         long.push(b'x');
         assert!(Message::from_bytes(&long).is_err(), "trailing byte accepted");
         let mut huge_len = good.clone();
-        huge_len[9..13].copy_from_slice(&u32::MAX.to_le_bytes());
+        // Spec length field sits after header (6) + round (8).
+        huge_len[14..18].copy_from_slice(&u32::MAX.to_le_bytes());
         assert!(Message::from_bytes(&huge_len).is_err(), "oversized length accepted");
     }
 
@@ -1117,22 +1369,50 @@ mod tests {
             span: (8, 4),
             uplink_bits: 0,
             n_frames: 0,
+            shard: (0, 0),
             slots: vec![],
         };
         assert!(inverted.validate().is_err());
         assert!(inverted.to_bytes().is_err());
+        // Inverted shard range: same three gates.
+        let bad_shard = Message::PartialUpload {
+            agg_id: 1,
+            round: 0,
+            span: (0, 4),
+            uplink_bits: 0,
+            n_frames: 0,
+            shard: (7, 4),
+            slots: vec![],
+        };
+        assert!(bad_shard.validate().is_err());
+        assert!(bad_shard.to_bytes().is_err());
+        // Shard range whose width disagrees with the slots' dim: a
+        // forged slice must not reach the root's concatenation.
+        let misaligned = Message::PartialUpload {
+            agg_id: 1,
+            round: 0,
+            span: (0, 4),
+            uplink_bits: 0,
+            n_frames: 0,
+            shard: (0, 2),
+            slots: vec![SlotPartial::silent(3)],
+        };
+        assert!(misaligned.validate().is_err());
+        assert!(misaligned.to_bytes().is_err());
         let (mut hub, eps) = LoopbackHub::new(1);
         assert!(hub.broadcast(&inverted).is_err());
         assert!(eps[0].send(inverted).is_err());
         // Slot count larger than the message could hold: rejected before
         // any allocation.
-        let mut bytes = vec![4u8];
+        let mut bytes = raw(4);
         bytes.extend_from_slice(&0u64.to_le_bytes()); // agg_id
         bytes.extend_from_slice(&0u64.to_le_bytes()); // round
         bytes.extend_from_slice(&0u64.to_le_bytes()); // span.0
         bytes.extend_from_slice(&9u64.to_le_bytes()); // span.1
         bytes.extend_from_slice(&0u64.to_le_bytes()); // uplink_bits
         bytes.extend_from_slice(&0u64.to_le_bytes()); // n_frames
+        bytes.extend_from_slice(&0u32.to_le_bytes()); // shard.0
+        bytes.extend_from_slice(&3u32.to_le_bytes()); // shard.1
         bytes.extend_from_slice(&u32::MAX.to_le_bytes()); // n_slots
         assert!(Message::from_bytes(&bytes).is_err());
         // Truncations of a valid message are rejected at every cut the
@@ -1179,7 +1459,7 @@ mod tests {
         assert!(Message::from_bytes(&bytes).is_err());
         // Upload frame count larger than the message could possibly hold
         // (must be rejected before any allocation happens).
-        let mut bytes = vec![2u8];
+        let mut bytes = raw(2);
         bytes.extend_from_slice(&0u64.to_le_bytes()); // client
         bytes.extend_from_slice(&0u64.to_le_bytes()); // round
         bytes.extend_from_slice(&u32::MAX.to_le_bytes()); // n_frames
@@ -1194,7 +1474,7 @@ mod tests {
             }],
         };
         assert!(bad.to_bytes().is_err());
-        let mut bytes = vec![2u8];
+        let mut bytes = raw(2);
         bytes.extend_from_slice(&0u64.to_le_bytes()); // client
         bytes.extend_from_slice(&0u64.to_le_bytes()); // round
         bytes.extend_from_slice(&1u32.to_le_bytes()); // n_frames
@@ -1312,14 +1592,14 @@ mod tests {
             let mut r = BufReader::new(stream.try_clone().unwrap());
             let mut received = Vec::new();
             for _ in 0..n_msgs {
-                received.push(read_msg(&mut r).unwrap().0);
+                received.push(read_msg(&mut r).unwrap().0.msg);
             }
             received
         });
         let stream = TcpStream::connect(addr).unwrap();
         let mut w = BufWriter::new(stream);
         for m in &msgs {
-            write_msg(&mut w, m).unwrap();
+            write_msg(&mut w, ROOT_SESSION, m).unwrap();
         }
         drop(w);
         let received = echo.join().unwrap();
@@ -1328,5 +1608,97 @@ mod tests {
             // Compare via the canonical serialization.
             assert_eq!(sent.to_bytes().unwrap(), got.to_bytes().unwrap());
         }
+    }
+
+    #[test]
+    fn envelope_session_round_trips_every_variant() {
+        for m in legal_messages() {
+            for session in [0u16, 1, 7, u16::MAX] {
+                let bytes = m.to_bytes_for(session).unwrap();
+                assert_eq!(bytes.len() as u64, m.wire_len(), "wire_len is session-independent");
+                let env = Envelope::from_bytes(&bytes).unwrap();
+                assert_eq!(env.session, session);
+                // The body is byte-identical whatever the session.
+                assert_eq!(env.msg.to_bytes().unwrap(), m.to_bytes().unwrap());
+            }
+        }
+    }
+
+    #[test]
+    fn bad_magic_and_unknown_version_are_typed_rejections() {
+        let good = Message::Shutdown.to_bytes().unwrap();
+        assert_eq!(good.len() as u64, ENVELOPE_HEADER_LEN);
+
+        let mut bad_magic = good.clone();
+        bad_magic[0] = b'X';
+        let err = Message::from_bytes(&bad_magic).unwrap_err();
+        match err.downcast_ref::<WireError>() {
+            Some(WireError::BadMagic(m)) => assert_eq!(m, &[b'X', b'M']),
+            other => panic!("expected typed BadMagic, got {other:?}"),
+        }
+
+        let mut future = good.clone();
+        future[2] = WIRE_VERSION + 1;
+        let err = Message::from_bytes(&future).unwrap_err();
+        match err.downcast_ref::<WireError>() {
+            Some(WireError::UnknownVersion(v)) => assert_eq!(*v, WIRE_VERSION + 1),
+            other => panic!("expected typed UnknownVersion, got {other:?}"),
+        }
+
+        // A merely truncated or forged payload is NOT a WireError: the
+        // typed channel is reserved for protocol-identity failures.
+        let err = Message::from_bytes(&good[..3]).unwrap_err();
+        assert!(err.downcast_ref::<WireError>().is_none());
+        let mut bad_tag = good.clone();
+        bad_tag[5] = 99;
+        let err = Message::from_bytes(&bad_tag).unwrap_err();
+        assert!(err.downcast_ref::<WireError>().is_none());
+    }
+
+    #[test]
+    fn loopback_preserves_sessions_in_both_directions() {
+        let (mut hub, eps) = LoopbackHub::new(2);
+        hub.broadcast_session(9, &Message::Shutdown).unwrap();
+        for ep in &eps {
+            let env = ep.recv_envelope().unwrap();
+            assert_eq!(env.session, 9);
+        }
+        eps[0]
+            .send_session(3, Message::Upload { client: 1, round: 0, frames: vec![] })
+            .unwrap();
+        eps[1]
+            .send_session(5, Message::Upload { client: 2, round: 0, frames: vec![] })
+            .unwrap();
+        let mut sessions = vec![
+            hub.recv_env().unwrap().session,
+            hub.recv_env().unwrap().session,
+        ];
+        sessions.sort_unstable();
+        assert_eq!(sessions, vec![3, 5]);
+    }
+
+    #[test]
+    fn tcp_hub_surfaces_typed_envelope_errors() {
+        // A peer speaking a future wire version must produce a *reported*
+        // typed rejection at the hub, not a silent connection kill.
+        let binding = TcpHub::bind("127.0.0.1:0").unwrap();
+        let addr = binding.local_addr().unwrap();
+        let peer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let mut bytes = Message::Shutdown.to_bytes().unwrap();
+            bytes[2] = WIRE_VERSION + 1; // future version
+            s.write_all(&(bytes.len() as u32).to_le_bytes()).unwrap();
+            s.write_all(&bytes).unwrap();
+            s.flush().unwrap();
+            // Hold the socket open so EOF cannot race the parse error.
+            s
+        });
+        let mut hub = binding.accept(1).unwrap();
+        let err = hub.recv_env().unwrap_err();
+        match err.downcast_ref::<WireError>() {
+            Some(WireError::UnknownVersion(v)) => assert_eq!(*v, WIRE_VERSION + 1),
+            other => panic!("expected typed UnknownVersion from the hub, got {other:?}"),
+        }
+        drop(peer.join().unwrap());
     }
 }

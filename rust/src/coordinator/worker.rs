@@ -6,7 +6,9 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use super::transport::{Endpoint, LoopbackEndpoint, Message, WeightedFrame};
+use super::transport::{
+    Endpoint, LoopbackEndpoint, Message, WeightedFrame, WireError, ROOT_SESSION,
+};
 use crate::protocol::config::ProtocolConfig;
 use crate::protocol::{EncodeScratch, Frame, Protocol, RoundCtx};
 use crate::rng;
@@ -30,9 +32,10 @@ pub struct Worker {
 }
 
 impl Worker {
-    /// Compute and encode this round's upload. Errors if the client id
-    /// cannot be combined with a slot index into a collision-free
-    /// private-stream id (see [`rng::client_slot_stream_id`]).
+    /// Compute and encode this round's upload on the root session.
+    /// Errors if the client id cannot be combined with a slot index into
+    /// a collision-free private-stream id (see
+    /// [`rng::client_slot_stream_id`]).
     pub fn step(&self, round: u64, dim: u32, broadcast: &[f32]) -> Result<Message> {
         self.step_with(round, dim, broadcast, &mut EncodeScratch::default())
     }
@@ -44,6 +47,22 @@ impl Worker {
     /// (Frames still allocate: they are moved into the upload message.)
     pub fn step_with(
         &self,
+        round: u64,
+        dim: u32,
+        broadcast: &[f32],
+        scratch: &mut EncodeScratch,
+    ) -> Result<Message> {
+        self.step_for(ROOT_SESSION, round, dim, broadcast, scratch)
+    }
+
+    /// [`Worker::step_with`] on an explicit session: the session id joins
+    /// the private-stream derivation, so the same client and slot encode
+    /// with *different* rounding noise under different tenants — and with
+    /// *identical* noise whenever the session id matches, which is what
+    /// makes a muxed tenant bit-identical to its solo run.
+    pub fn step_for(
+        &self,
+        session: u16,
         round: u64,
         dim: u32,
         broadcast: &[f32],
@@ -62,7 +81,7 @@ impl Worker {
             // so rounding noise is independent across slots. The packing
             // is checked: an out-of-range client id is an explicit error,
             // never a silent merge of two clients' randomness streams.
-            let stream_id = rng::client_slot_stream_id(self.client_id, slot as u64)?;
+            let stream_id = rng::client_slot_stream_id(session, self.client_id, slot as u64)?;
             let mut frame = Frame::empty();
             if self.protocol.encode_with(&state, scratch, stream_id, &vec, &mut frame) {
                 frames.push(WeightedFrame { frame, weight });
@@ -92,16 +111,21 @@ impl Worker {
 
     /// Run the worker loop over any endpoint until Shutdown: the one
     /// loop both transports (and both parents — leader or aggregator)
-    /// share.
+    /// share. Session-transparent: every reply goes out on the session
+    /// the request arrived on, and that session feeds the private-stream
+    /// derivation — so the same worker serves a solo leader and a muxed
+    /// one identically.
     pub fn run(&mut self, ep: &mut dyn Endpoint) -> Result<()> {
         // One encode scratch for the worker's lifetime; encoders resize
         // it per call, so it survives SpecChange rebuilds unchanged.
         let mut scratch = EncodeScratch::default();
         loop {
-            match ep.recv_msg()? {
+            let env = ep.recv_env()?;
+            let session = env.session;
+            match env.msg {
                 Message::RoundStart { round, dim, payload } => {
-                    match self.step_with(round, dim, &payload, &mut scratch) {
-                        Ok(reply) => ep.send_msg(reply)?,
+                    match self.step_for(session, round, dim, &payload, &mut scratch) {
+                        Ok(reply) => ep.send_env(session, reply)?,
                         Err(e) => {
                             // Wake the parent's barrier before dying: an
                             // unexpected Shutdown from a worker makes the
@@ -110,7 +134,7 @@ impl Worker {
                             // TCP this matters even more: a lone dead
                             // worker does not close the parent's upload
                             // channel — other readers keep it open.)
-                            let _ = ep.send_msg(Message::Shutdown);
+                            let _ = ep.send_env(session, Message::Shutdown);
                             return Err(e);
                         }
                     }
@@ -122,7 +146,7 @@ impl Worker {
                     if let Err(e) = self.apply_spec(&spec) {
                         // Same dying courtesy as a failed step: wake the
                         // parent's next barrier instead of hanging it.
-                        let _ = ep.send_msg(Message::Shutdown);
+                        let _ = ep.send_env(session, Message::Shutdown);
                         return Err(e);
                     }
                 }
@@ -152,6 +176,83 @@ impl Worker {
     pub fn run_tcp_with_retries(mut self, addr: &str, retries: u32) -> Result<()> {
         let mut ep = super::transport::TcpEndpoint::connect_with_backoff(addr, retries)?;
         self.run(&mut ep)
+    }
+}
+
+/// A multi-tenant worker: one endpoint (one socket, one thread), many
+/// per-session [`Worker`] states. Each tenant session owns its protocol
+/// handle, shard, and update hook, so a `SpecChange` addressed to tenant
+/// A rebuilds only A's protocol — tenant B's encoding is untouched (the
+/// isolation the multi-tenant conformance tests pin bit-identically).
+pub struct MuxWorker {
+    sessions: std::collections::HashMap<u16, Worker>,
+}
+
+impl MuxWorker {
+    /// An empty mux; add tenants with [`Self::insert`].
+    pub fn new() -> Self {
+        MuxWorker { sessions: std::collections::HashMap::new() }
+    }
+
+    /// Host `worker` on `session`. Replaces any previous tenant there.
+    pub fn insert(&mut self, session: u16, worker: Worker) {
+        self.sessions.insert(session, worker);
+    }
+
+    /// Run until every hosted session has been shut down. A message
+    /// addressed to a session this worker does not host is a typed
+    /// [`WireError::UnknownSession`] — the router contract: never
+    /// silently dropped, never misattributed to another tenant.
+    /// `Shutdown` is per-session: it retires that tenant, and the loop
+    /// ends when the last one is gone.
+    pub fn run(&mut self, ep: &mut dyn Endpoint) -> Result<()> {
+        let mut scratch = EncodeScratch::default();
+        while !self.sessions.is_empty() {
+            let env = ep.recv_env()?;
+            let session = env.session;
+            if matches!(env.msg, Message::Shutdown) {
+                self.sessions.remove(&session);
+                continue;
+            }
+            let worker = match self.sessions.get_mut(&session) {
+                Some(w) => w,
+                None => return Err(WireError::UnknownSession(session).into()),
+            };
+            match env.msg {
+                Message::RoundStart { round, dim, payload } => {
+                    match worker.step_for(session, round, dim, &payload, &mut scratch) {
+                        Ok(reply) => ep.send_env(session, reply)?,
+                        Err(e) => {
+                            let _ = ep.send_env(session, Message::Shutdown);
+                            return Err(e);
+                        }
+                    }
+                }
+                Message::SpecChange { spec, .. } => {
+                    if let Err(e) = worker.apply_spec(&spec) {
+                        let _ = ep.send_env(session, Message::Shutdown);
+                        return Err(e);
+                    }
+                }
+                Message::Shutdown => unreachable!("handled above"),
+                Message::Upload { .. } | Message::PartialUpload { .. } => {
+                    bail!("worker received an upstream-only message")
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Run over a loopback endpoint until every session shuts down.
+    pub fn run_loopback(mut self, ep: LoopbackEndpoint) -> Result<()> {
+        let mut ep = ep;
+        self.run(&mut ep)
+    }
+}
+
+impl Default for MuxWorker {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
@@ -237,6 +338,33 @@ mod tests {
             seed: 1,
         };
         assert!(w.step(0, 8, &[]).is_err());
+    }
+
+    #[test]
+    fn sessions_use_distinct_private_streams() {
+        // The same client, slot, round, and vector must encode with
+        // different rounding noise under different tenant sessions — and
+        // identically when the session matches (solo-vs-mux identity).
+        let proto = ProtocolConfig::parse("klevel:k=4", 8).unwrap().build().unwrap();
+        let update: UpdateFn = Arc::new(|_, _, _| {
+            let v: Vec<f32> = (0..8).map(|i| i as f32 * 0.23).collect();
+            vec![(v, 1.0)]
+        });
+        let w = Worker { client_id: 6, shard: vec![], protocol: proto, update, seed: 5 };
+        let bytes_of = |session: u16| {
+            let mut scratch = EncodeScratch::default();
+            match w.step_for(session, 0, 8, &[], &mut scratch).unwrap() {
+                Message::Upload { frames, .. } => frames[0].frame.bytes.clone(),
+                _ => panic!("expected Upload"),
+            }
+        };
+        assert_eq!(bytes_of(1), bytes_of(1), "same session must reproduce bits");
+        assert_ne!(bytes_of(1), bytes_of(2), "tenants must not share rounding noise");
+        // The root session is what the session-less step() aliases.
+        assert_eq!(bytes_of(ROOT_SESSION), match w.step(0, 8, &[]).unwrap() {
+            Message::Upload { frames, .. } => frames[0].frame.bytes.clone(),
+            _ => panic!("expected Upload"),
+        });
     }
 
     #[test]

@@ -12,7 +12,13 @@
 //!               [--timeout-ms 30000]   (round barrier deadline; 0 = wait forever)
 //!               [--transport reactor|threads]  (TCP hub; default reactor on Linux)
 //!               [--fanout 16 --depth 2]  (single-process loopback tree instead of TCP)
-//!               [--auto-rate --budget-bits 4]  (rate controller picks + retunes the spec)
+//!               [--shards 4]   (root-child aggregators report one exact fold per
+//!                               dimension range; bit-identical to unsharded)
+//!               [--tenants 2]  (multiplex T concurrent sessions over one loopback
+//!                               tree; prints the per-tenant table)
+//!               [--auto-rate --budget-bits 4]  (rate controller picks + retunes the spec;
+//!                               with --tenants the pool is water-filled across tenants
+//!                               and each tenant gets its own controller)
 //! dme aggregate --parent host:7070 --listen 0.0.0.0:7071 --children 16 --span 0:16
 //!               --dim 256 --protocol varlen [--id N] [--decode-threads N] [--timeout-ms N]
 //!               [--transport reactor|threads] [--connect-retries N]
@@ -27,20 +33,24 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use dme::apps::{kmeans, power_iteration};
 use dme::cli::{parse_span, Args};
-use dme::coordinator::aggregator::{spawn_local_tree, Aggregator, LocalTree};
+use dme::coordinator::aggregator::{spawn_local_tree, spawn_mux_tree, Aggregator, LocalTree};
 use dme::coordinator::leader::Leader;
-use dme::coordinator::metrics::format_tier_table;
+use dme::coordinator::metrics::{
+    format_tenant_table, format_tier_table, ExperimentMetrics, TenantMetrics,
+};
 use dme::coordinator::topology::Topology;
 use dme::coordinator::transport::{DEFAULT_CONNECT_RETRIES, HubBinding, TcpEndpoint, Transport};
 use dme::coordinator::worker::{mean_update, Worker};
 use dme::data::{synthetic, Dataset};
 use dme::protocol::config::{Kind, ProtocolConfig};
 use dme::protocol::{run_round, RoundCtx};
-use dme::rate::{Calibration, Objective, Plan, RateController};
+use dme::rate::{
+    Calibration, MultiTenantPlan, Objective, Plan, RateController, TenantDemand,
+};
 use dme::runtime::{artifacts::Manifest, ComputeBackend, PjrtBackend};
 use dme::stats;
 
@@ -84,10 +94,14 @@ commands:
   tune       rate planner: the predicted MSE-vs-bits frontier and the best
              spec under a bit budget (copy-pasteable into --protocol)
   serve      TCP leader (workers/aggregators connect), or a single-process
-             loopback aggregation tree with --fanout/--depth; --auto-rate
-             lets the rate controller pick and retune the spec mid-session;
-             --transport reactor|threads picks the TCP hub (default: the
-             epoll reactor on Linux)
+             loopback aggregation tree with --fanout/--depth; --shards S
+             splits each root-child aggregator's report into S dimension
+             ranges (bit-identical); --tenants T multiplexes T concurrent
+             sessions over the one tree and prints the per-tenant table
+             (--budget-bits water-fills the shared pool across tenants);
+             --auto-rate lets the rate controller pick and retune the spec
+             mid-session; --transport reactor|threads picks the TCP hub
+             (default: the epoll reactor on Linux)
   aggregate  TCP aggregation-tier node: accepts its children's uploads,
              merges them exactly, forwards one PartialUpload upstream
   worker     TCP worker process (point --connect at a leader or aggregator;
@@ -399,6 +413,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // only means anything there.
     let fanout = args.get("fanout", 0usize)?;
     let depth = args.opt("depth");
+    // --shards S splits each root-child aggregator's report into S
+    // dimension ranges (independent exact folds the root concatenates
+    // bit-identically); --tenants T multiplexes T concurrent sessions
+    // over the one loopback tree.
+    let dim_shards: u32 = args.get("shards", 1u32)?;
+    if dim_shards > 1 && fanout == 0 {
+        bail!(
+            "--shards {dim_shards} needs --fanout: only an aggregator tier can shard the \
+             dimension (flat workers upload full-width frames)"
+        );
+    }
+    let tenants = args.get("tenants", 1usize)?;
+    if tenants > 1 {
+        if let Some(addr) = addr {
+            bail!(
+                "--addr {addr} makes no sense with --tenants: the multiplexed session runs \
+                 entirely in-process over loopback"
+            );
+        }
+        return cmd_serve_tenants(args, tenants);
+    }
     // --auto-rate: the rate controller picks the starting spec under
     // --budget-bits (bits/dim) and may broadcast tag-5 spec switches
     // between rounds as realized bits come in.
@@ -454,7 +489,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             None => 2,
             Some(s) => s.parse().with_context(|| format!("--depth {s}"))?,
         };
-        let topo = Topology::uniform(n_workers as u64, fanout, depth)?;
+        let topo = Topology::uniform(n_workers as u64, fanout, depth)?
+            .with_dim_shards(dim_shards)?;
         println!("loopback tree: {} ({})", topo.describe(), proto.name());
         let shards: Vec<Vec<Vec<f32>>> = data.rows.into_iter().map(|row| vec![row]).collect();
         let (mut leader, tree) = spawn_local_tree(
@@ -493,6 +529,173 @@ fn cmd_serve(args: &Args) -> Result<()> {
         leader = leader.with_round_timeout(t);
     }
     run_rounds(&mut leader, rounds, dim, n_workers, controller)
+}
+
+/// `dme serve --tenants T`: T concurrent sessions multiplexed over one
+/// loopback tree (or a flat loopback cluster when `--fanout` is absent).
+/// With `--budget-bits` the multi-tenant allocator water-fills the
+/// shared uplink pool over the tenants' Pareto frontiers to pick each
+/// tenant's starting spec; `--auto-rate` additionally gives each tenant
+/// its own `RateController`, retuning within its allocated share.
+/// Prints the per-tenant table (bytes, realized vs allocated bits, MSE
+/// proxy) and the per-tier rollup.
+fn cmd_serve_tenants(args: &Args, tenants: usize) -> Result<()> {
+    let n_workers = args.get("workers", 2usize)?;
+    let dim = args.get("dim", 256usize)?;
+    let rounds = args.get("rounds", 10u64)?;
+    let seed = args.get("seed", 42u64)?;
+    let decode_threads = resolve_decode_threads(args)?;
+    let timeout_ms = args.get("timeout-ms", 0u64)?;
+    let round_timeout = (timeout_ms > 0).then(|| Duration::from_millis(timeout_ms));
+    let fanout = args.get("fanout", 0usize)?;
+    let depth: usize = match args.opt("depth") {
+        None => 2,
+        Some(s) => s.parse().with_context(|| format!("--depth {s}"))?,
+    };
+    let dim_shards: u32 = args.get("shards", 1u32)?;
+    let auto_rate = args.bool("auto-rate")?;
+    let budget = args.get_opt::<f64>("budget-bits")?;
+    ensure!(tenants <= u16::MAX as usize, "--tenants caps at {}", u16::MAX);
+    if auto_rate && budget.is_none() {
+        bail!("--auto-rate needs --budget-bits (bits/dim, the shared tenant pool)");
+    }
+    if budget.is_some() {
+        if let Some(spec) = args.opt("protocol") {
+            bail!(
+                "--protocol {spec} conflicts with --budget-bits under --tenants (the \
+                 allocator picks each tenant's spec; drop one of the two)"
+            );
+        }
+        if args.opt("backend").is_some() {
+            bail!("--backend is not available with the tenant allocator (spec builds are native)");
+        }
+    }
+
+    // Tenant wire sessions 1..=T (0 is the single-tenant root session).
+    let sessions: Vec<u16> = (1..=tenants as u16).collect();
+    let mut tenant_protos: Vec<(u16, Arc<dyn dme::Protocol>)> = Vec::with_capacity(tenants);
+    let mut controllers: Vec<Option<RateController>> = Vec::with_capacity(tenants);
+    // Planner view per tenant: (allocated bits/client, predicted MSE).
+    let mut planned: Vec<(f64, f64)> = Vec::with_capacity(tenants);
+    if let Some(b) = budget {
+        let demands: Vec<TenantDemand> = sessions
+            .iter()
+            .map(|&s| TenantDemand { session: s, dim, n: n_workers, weight: 1.0 })
+            .collect();
+        let pool = b * dim as f64;
+        let mt = MultiTenantPlan::solve(pool, &demands)?;
+        println!(
+            "tenant pool: {b} bits/dim shared by {tenants} tenants -> \
+             {:.0}/{:.0} bits/client allocated",
+            mt.spent_bits_per_client, pool
+        );
+        for &s in &sessions {
+            let alloc = mt.for_session(s).expect("every demanded session is allocated");
+            println!(
+                "  tenant {s}: `{}` (predicted {:.3e} MSE, {:.1} bits/client)",
+                alloc.spec.spec, alloc.spec.predicted_mse, alloc.spec.bits_per_client
+            );
+            tenant_protos.push((s, alloc.spec.cfg.build()?));
+            planned.push((alloc.spec.bits_per_client, alloc.spec.predicted_mse));
+            controllers.push(if auto_rate {
+                // Each tenant retunes inside its own allocated share.
+                let solo =
+                    Plan::solve(alloc.spec.bits_per_client, dim, n_workers, Objective::MinMse)?;
+                Some(RateController::new(solo)?)
+            } else {
+                None
+            });
+        }
+    } else {
+        for &s in &sessions {
+            tenant_protos.push((s, build_protocol(args, dim)?));
+            planned.push((0.0, 0.0));
+            controllers.push(None);
+        }
+    }
+
+    let data = load_data(args, n_workers, dim, seed)?;
+    args.reject_unknown()?;
+    if data.dim != dim {
+        bail!("--data {} has dim {}, but --dim is {dim}", data.name, data.dim);
+    }
+    let topo = if fanout > 0 {
+        Topology::uniform(n_workers as u64, fanout, depth)?.with_dim_shards(dim_shards)?
+    } else {
+        // Flat multiplexed cluster: every MuxWorker reports to the root.
+        Topology::uniform(n_workers as u64, n_workers.max(1), 1)?
+    };
+    println!("multiplexed loopback tree: {} x {tenants} tenants", topo.describe());
+    let shards: Vec<Vec<Vec<f32>>> = data.rows.into_iter().map(|row| vec![row]).collect();
+    let (mux, mut leaders, tree) = spawn_mux_tree(
+        &tenant_protos,
+        shards,
+        mean_update(),
+        seed,
+        &topo,
+        decode_threads,
+        round_timeout,
+    )?;
+    // One driver thread interleaves the tenants' rounds; the mux parks
+    // any envelope that arrives while another tenant holds the barrier.
+    for r in 0..rounds {
+        for (i, leader) in leaders.iter_mut().enumerate() {
+            let out = leader.round(r, dim as u32, &[])?;
+            println!(
+                "round {r} tenant {}: {} frames, {:.1} kbit uplink",
+                sessions[i],
+                out.n_frames,
+                out.uplink_bits as f64 / 1e3
+            );
+            if let Some(ctl) = controllers[i].as_mut() {
+                let est = out.means.first().map(|m| m.as_slice()).unwrap_or(&[]);
+                if let Some(spec) = ctl.observe(r, out.uplink_bits, n_workers, est) {
+                    if r + 1 < rounds {
+                        println!(
+                            "  tenant {} auto-rate: switching to `{spec}` from round {}",
+                            sessions[i],
+                            r + 1
+                        );
+                        leader.switch_spec(&spec, r + 1)?;
+                    }
+                }
+            }
+        }
+    }
+    for leader in leaders.iter_mut() {
+        leader.shutdown()?;
+    }
+    let rows: Vec<TenantMetrics> = leaders
+        .iter()
+        .enumerate()
+        .map(|(i, leader)| {
+            let (down, up) = mux.session_bytes(sessions[i]);
+            TenantMetrics {
+                session: sessions[i],
+                spec: leader.protocol_name(),
+                rounds: leader.metrics().rounds.len(),
+                down_bytes: down,
+                up_bytes: up,
+                realized_bits: leader.metrics().avg_bits_per_round(),
+                allocated_bits: planned[i].0 * n_workers as f64,
+                mse_proxy: planned[i].1,
+            }
+        })
+        .collect();
+    print!("{}", format_tenant_table(&rows));
+    // Per-tier rollup: the root row carries every tenant's rounds and
+    // the hub's full (all-tenant) byte tally.
+    let mut root_metrics = ExperimentMetrics::default();
+    for leader in &leaders {
+        for m in &leader.metrics().rounds {
+            root_metrics.push(m.clone());
+        }
+    }
+    let n_levels = tree.n_levels;
+    let reports = tree.join()?;
+    let tiers = LocalTree::tier_metrics(n_levels, &root_metrics, mux.bytes_moved(), &reports);
+    print!("{}", format_tier_table(&tiers));
+    Ok(())
 }
 
 fn cmd_aggregate(args: &Args) -> Result<()> {

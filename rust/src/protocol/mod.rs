@@ -677,6 +677,84 @@ impl SlotPartial {
         Ok(())
     }
 
+    /// Restrict this partial to the contiguous coordinate slice
+    /// `[lo, hi)`, keeping every fold counter (frames, holders, weight,
+    /// acc_frames, uniformity) — a shard is the same set of folded
+    /// contributions seen through fewer coordinates, so
+    /// [`Self::concat_shards`] over any partition of
+    /// `[0, internal_dim)` rebuilds the original partial bit-identically.
+    pub fn slice(&self, lo: usize, hi: usize) -> Result<Self> {
+        ensure!(
+            lo <= hi && hi <= self.sums.len(),
+            "slice [{lo}, {hi}) out of bounds for dimension {}",
+            self.sums.len()
+        );
+        let mut sums = exact::CarryVec::new(hi - lo);
+        for j in lo..hi {
+            sums.add_fixed(j - lo, &self.sums.canonical(j));
+        }
+        Ok(SlotPartial {
+            sums,
+            weight: self.weight,
+            frames: self.frames,
+            holders: self.holders,
+            acc_frames: self.acc_frames,
+            uniform: self.uniform,
+        })
+    }
+
+    /// Reassemble a full-dimension partial from shard slices produced by
+    /// [`Self::slice`]-style folds. Each entry pairs a partial with the
+    /// coordinate range it covers; the ranges must partition
+    /// `[0, internal_dim)` (any order), and every shard must agree on
+    /// the fold counters — they describe the same set of frames — or
+    /// the concat errors out rather than fabricating a mixed estimate.
+    pub fn concat_shards(
+        shards: &[((u32, u32), &SlotPartial)],
+        internal_dim: usize,
+    ) -> Result<Self> {
+        ensure!(!shards.is_empty(), "cannot concatenate zero shards");
+        let (_, first) = shards[0];
+        let mut out = Self::empty(internal_dim);
+        out.weight = first.weight;
+        out.frames = first.frames;
+        out.holders = first.holders;
+        out.acc_frames = first.acc_frames;
+        out.uniform = first.uniform;
+        let mut ordered: Vec<&((u32, u32), &SlotPartial)> = shards.iter().collect();
+        ordered.sort_by_key(|((lo, _), _)| *lo);
+        let mut cursor = 0u32;
+        for &&((lo, hi), part) in &ordered {
+            ensure!(
+                lo == cursor && hi >= lo,
+                "shard ranges do not partition [0, {internal_dim}): gap or overlap at {cursor}"
+            );
+            ensure!(
+                part.internal_dim() == (hi - lo) as usize,
+                "shard [{lo}, {hi}) carries {} coordinates",
+                part.internal_dim()
+            );
+            ensure!(
+                part.frames == out.frames
+                    && part.holders == out.holders
+                    && part.acc_frames == out.acc_frames
+                    && part.uniform == out.uniform
+                    && part.weight == out.weight,
+                "shard [{lo}, {hi}) disagrees on fold counters — \
+                 shards must cover the same set of frames"
+            );
+            for j in 0..part.internal_dim() {
+                out.sums.add_fixed(lo as usize + j, &part.sums.canonical(j));
+            }
+            cursor = hi;
+        }
+        ensure!(
+            cursor as usize == internal_dim,
+            "shard ranges cover [0, {cursor}) but the dimension is {internal_dim}"
+        );
+        Ok(out)
+    }
+
     /// Finish the slot at the root: round each exact sum once, divide,
     /// and run the protocol's postprocessing (e.g. π_srk's inverse
     /// rotation). Returns `(mean, total_weight)` where `total_weight` is
@@ -1292,6 +1370,58 @@ mod tests {
         dense.merge(&SlotPartial::silent(3)).unwrap();
         sparse.add_silent_holder();
         assert_eq!(dense, sparse);
+    }
+
+    #[test]
+    fn slice_concat_roundtrips_bit_identically() {
+        // Slicing a partial into any contiguous partition and
+        // concatenating the slices must rebuild the exact same state —
+        // the invariant dimension-sharded aggregation trees rely on.
+        let mut part = SlotPartial::from_decoded(&[1.5, -2.0, 0.25, 8.0, -0.125], 2.0, 1).unwrap();
+        part.merge(&SlotPartial::from_decoded(&[0.5, 3.0, -1.0, 2.0, 7.5], 0.75, 1).unwrap())
+            .unwrap();
+        part.add_silent_holder();
+        for shards in 1u32..=7 {
+            let ranges = crate::coordinator::topology::split_ranges(5, shards);
+            let slices: Vec<SlotPartial> = ranges
+                .iter()
+                .map(|&(lo, hi)| part.slice(lo as usize, hi as usize).unwrap())
+                .collect();
+            let paired: Vec<((u32, u32), &SlotPartial)> =
+                ranges.iter().copied().zip(slices.iter()).collect();
+            let back = SlotPartial::concat_shards(&paired, 5).unwrap();
+            assert_eq!(back, part, "shards={shards}");
+            // Arrival order must not matter either.
+            let mut reversed = paired.clone();
+            reversed.reverse();
+            assert_eq!(SlotPartial::concat_shards(&reversed, 5).unwrap(), part);
+        }
+        assert!(part.slice(3, 2).is_err(), "inverted slice accepted");
+        assert!(part.slice(0, 6).is_err(), "out-of-bounds slice accepted");
+    }
+
+    #[test]
+    fn concat_rejects_inconsistent_shards() {
+        let part = SlotPartial::from_decoded(&[1.0, 2.0, 3.0, 4.0], 1.0, 1).unwrap();
+        let a = part.slice(0, 2).unwrap();
+        let b = part.slice(2, 4).unwrap();
+        // Gap, overlap, wrong total, counter disagreement.
+        assert!(SlotPartial::concat_shards(&[((0, 2), &a)], 4).is_err(), "gap accepted");
+        assert!(
+            SlotPartial::concat_shards(&[((0, 2), &a), ((1, 3), &a)], 4).is_err(),
+            "overlap accepted"
+        );
+        assert!(
+            SlotPartial::concat_shards(&[((0, 2), &a), ((2, 4), &b)], 5).is_err(),
+            "short cover accepted"
+        );
+        let mut extra = b.clone();
+        extra.add_silent_holder();
+        assert!(
+            SlotPartial::concat_shards(&[((0, 2), &a), ((2, 4), &extra)], 4).is_err(),
+            "counter mismatch accepted"
+        );
+        assert!(SlotPartial::concat_shards(&[], 0).is_err(), "zero shards accepted");
     }
 
     #[test]

@@ -20,7 +20,11 @@
 //!   spec space (kind × k grid × coder × sampling p/q), returns the
 //!   Pareto frontier and the arg-min spec under the budget as a
 //!   replayable [`ProtocolConfig`], exportable as JSON
-//!   (`dme tune`).
+//!   (`dme tune`); [`planner::MultiTenantPlan::solve`] water-fills a
+//!   shared uplink budget over several tenants' frontiers (`dme serve
+//!   --tenants`), funding the steepest weighted ΔMSE/Δbits step until
+//!   the pool is dry — with an explicit error, never a silent starve,
+//!   when even the cheapest specs don't fit.
 //! * [`controller`] — a per-session [`controller::RateController`] that
 //!   observes realized `RoundMetrics::uplink_bits` and a decode-side
 //!   MSE proxy each round and switches the active spec between rounds
@@ -52,7 +56,9 @@ pub mod planner;
 
 pub use controller::{ControllerStep, RateController};
 pub use model::{predicted_mse, predicted_uplink_bits, Calibration, SpecCalibration};
-pub use planner::{Objective, Plan, PlannedSpec};
+pub use planner::{
+    MultiTenantPlan, Objective, Plan, PlannedSpec, TenantAllocation, TenantDemand,
+};
 
 #[allow(unused_imports)] // doc links
 use crate::protocol::config::{Kind, ProtocolConfig};

@@ -266,6 +266,132 @@ impl Plan {
     }
 }
 
+/// One tenant's ask for the multi-tenant allocator: the scope its
+/// frontier is solved at, and how much one unit of its MSE is worth
+/// relative to the other tenants.
+#[derive(Clone, Debug)]
+pub struct TenantDemand {
+    /// Wire session id (must be unique across the demand set).
+    pub session: u16,
+    pub dim: usize,
+    pub n: usize,
+    /// Relative importance weight (> 0, finite): scales the tenant's
+    /// marginal MSE reduction when bidding for the next bit.
+    pub weight: f64,
+}
+
+/// One tenant's slice of a solved [`MultiTenantPlan`].
+#[derive(Clone, Debug)]
+pub struct TenantAllocation {
+    pub session: u16,
+    /// The operating point the allocator landed on — always a point of
+    /// this tenant's own Pareto frontier.
+    pub spec: PlannedSpec,
+}
+
+/// A solved multi-tenant allocation: every tenant sits on its own
+/// frontier, the floor was feasible, and no tenant can advance one more
+/// frontier step within the leftover budget (greedy water-filling
+/// optimality for discrete frontiers).
+#[derive(Clone, Debug)]
+pub struct MultiTenantPlan {
+    /// The shared per-client uplink pool (bits per client per round,
+    /// summed across tenants).
+    pub budget_bits_per_client: f64,
+    /// Per-tenant operating points, sorted by session id.
+    pub allocations: Vec<TenantAllocation>,
+    /// Σ allocated bits per client across tenants (≤ budget).
+    pub spent_bits_per_client: f64,
+}
+
+impl MultiTenantPlan {
+    /// Water-fill a shared uplink budget over per-tenant Pareto
+    /// frontiers. Every tenant starts at its frontier's cheapest point
+    /// (an error if even those floors overflow the budget — a tenant
+    /// must never be silently starved below its cheapest legal spec);
+    /// then, while budget remains, the tenant with the steepest weighted
+    /// marginal gain `weight · ΔMSE / Δbits` advances one frontier step.
+    /// Ties break to the lowest session id, so the allocation is fully
+    /// deterministic in the demand set.
+    pub fn solve(budget_bits_per_client: f64, tenants: &[TenantDemand]) -> Result<MultiTenantPlan> {
+        ensure!(!tenants.is_empty(), "at least one tenant is required");
+        ensure!(
+            budget_bits_per_client > 0.0 && budget_bits_per_client.is_finite(),
+            "budget must be positive and finite"
+        );
+        for (i, t) in tenants.iter().enumerate() {
+            ensure!(t.weight > 0.0 && t.weight.is_finite(), "tenant {} weight invalid", t.session);
+            ensure!(
+                tenants[..i].iter().all(|u| u.session != t.session),
+                "duplicate tenant session {}",
+                t.session
+            );
+        }
+        // Each tenant's full frontier, cheapest first (budget-independent).
+        let mut fronts: Vec<Vec<PlannedSpec>> = Vec::with_capacity(tenants.len());
+        for t in tenants {
+            let plan = Plan::solve(f64::MAX, t.dim, t.n, Objective::MinMse)?;
+            fronts.push(plan.frontier_specs().cloned().collect());
+        }
+        // Floor: everyone at their cheapest point, or the pool is too
+        // small to host this tenant set at all.
+        let mut idx = vec![0usize; tenants.len()];
+        let mut spent: f64 = fronts.iter().map(|f| f[0].bits_per_client).sum();
+        ensure!(
+            spent <= budget_bits_per_client,
+            "infeasible floor: the tenants' cheapest specs already need {:.1} bits/client \
+             against a budget of {:.1}",
+            spent,
+            budget_bits_per_client
+        );
+        // Greedy water-filling: repeatedly fund the steepest affordable
+        // marginal improvement.
+        loop {
+            let mut best: Option<(f64, u16, usize)> = None; // (gain rate, session, tenant idx)
+            for (i, t) in tenants.iter().enumerate() {
+                let cur = &fronts[i][idx[i]];
+                let Some(next) = fronts[i].get(idx[i] + 1) else { continue };
+                let dbits = next.bits_per_client - cur.bits_per_client;
+                if spent + dbits > budget_bits_per_client {
+                    continue;
+                }
+                let dmse = cur.predicted_mse - next.predicted_mse; // > 0 on a frontier
+                let rate = t.weight * dmse / dbits.max(f64::MIN_POSITIVE);
+                let wins = match best {
+                    None => true,
+                    Some((r, s, _)) => rate > r || (rate == r && t.session < s),
+                };
+                if wins {
+                    best = Some((rate, t.session, i));
+                }
+            }
+            let Some((_, _, i)) = best else { break };
+            spent += fronts[i][idx[i] + 1].bits_per_client - fronts[i][idx[i]].bits_per_client;
+            idx[i] += 1;
+        }
+        let mut allocations: Vec<TenantAllocation> = tenants
+            .iter()
+            .zip(&fronts)
+            .zip(&idx)
+            .map(|((t, front), &k)| TenantAllocation {
+                session: t.session,
+                spec: front[k].clone(),
+            })
+            .collect();
+        allocations.sort_by_key(|a| a.session);
+        Ok(MultiTenantPlan {
+            budget_bits_per_client,
+            allocations,
+            spent_bits_per_client: spent,
+        })
+    }
+
+    /// The allocation for `session`, if that tenant was in the demand set.
+    pub fn for_session(&self, session: u16) -> Option<&TenantAllocation> {
+        self.allocations.iter().find(|a| a.session == session)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -327,5 +453,87 @@ mod tests {
         let plan = Plan::solve(0.5, 1024, 64, Objective::MinMse).unwrap();
         assert!(plan.chosen_spec().is_none(), "half a bit per client fits nothing");
         assert!(!plan.frontier.is_empty(), "the frontier is budget-independent");
+    }
+
+    fn demand(session: u16, weight: f64) -> TenantDemand {
+        TenantDemand { session, dim: 256, n: 32, weight }
+    }
+
+    #[test]
+    fn equal_tenants_split_the_pool_symmetrically() {
+        let budget = 2.0 * 2.0 * 256.0; // 2 bits/dim each
+        let mt = MultiTenantPlan::solve(budget, &[demand(1, 1.0), demand(2, 1.0)]).unwrap();
+        assert_eq!(mt.allocations.len(), 2);
+        assert!(mt.spent_bits_per_client <= budget);
+        // Identical demands end within one greedy step of each other
+        // (the budget can run out mid-alternation, never further apart).
+        let plan = Plan::solve(f64::MAX, 256, 32, Objective::MinMse).unwrap();
+        let front: Vec<_> = plan.frontier_specs().collect();
+        let pos = |spec: &str| front.iter().position(|c| c.spec == spec).unwrap();
+        let i = pos(&mt.allocations[0].spec.spec);
+        let j = pos(&mt.allocations[1].spec.spec);
+        assert!(i.abs_diff(j) <= 1, "equal tenants drifted apart: {i} vs {j}");
+        // And the result replays bit-for-bit (deterministic tie-breaks).
+        let again = MultiTenantPlan::solve(budget, &[demand(1, 1.0), demand(2, 1.0)]).unwrap();
+        for (a, b) in mt.allocations.iter().zip(&again.allocations) {
+            assert_eq!(a.spec.spec, b.spec.spec);
+        }
+    }
+
+    #[test]
+    fn allocation_is_maximal_within_budget() {
+        let budget = 3.0 * 256.0; // tight: forces the greedy loop to stop mid-frontier
+        let demands = [demand(1, 1.0), demand(2, 0.25)];
+        let mt = MultiTenantPlan::solve(budget, &demands).unwrap();
+        assert!(mt.spent_bits_per_client <= budget);
+        // No tenant can take one more frontier step in the leftover
+        // (mirrors the solver's own affordability expression exactly).
+        for (t, alloc) in demands.iter().zip(&mt.allocations) {
+            let plan = Plan::solve(f64::MAX, t.dim, t.n, Objective::MinMse).unwrap();
+            let front: Vec<_> = plan.frontier_specs().collect();
+            let k = front
+                .iter()
+                .position(|c| c.spec == alloc.spec.spec)
+                .expect("allocation must sit on the tenant's own frontier");
+            if let Some(next) = front.get(k + 1) {
+                let step = next.bits_per_client - front[k].bits_per_client;
+                assert!(
+                    mt.spent_bits_per_client + step > budget,
+                    "tenant {} left a fundable step unfunded",
+                    t.session
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn weight_buys_accuracy() {
+        // A tenant that values accuracy 100x more must end at least as
+        // far along its frontier (never behind) as its light peer.
+        let budget = 4.0 * 256.0;
+        let mt = MultiTenantPlan::solve(budget, &[demand(1, 100.0), demand(2, 1.0)]).unwrap();
+        let heavy = mt.for_session(1).unwrap();
+        let light = mt.for_session(2).unwrap();
+        assert!(heavy.spec.predicted_mse <= light.spec.predicted_mse);
+        assert!(heavy.spec.bits_per_client >= light.spec.bits_per_client);
+    }
+
+    #[test]
+    fn infeasible_floor_is_an_error_not_a_starved_tenant() {
+        // Three tenants cannot share half a bit per dim: the cheapest
+        // legal specs already overflow, and that is a typed refusal.
+        let budget = 0.5 * 256.0;
+        let err = MultiTenantPlan::solve(budget, &[demand(1, 1.0), demand(2, 1.0), demand(3, 1.0)]);
+        assert!(err.is_err());
+        assert!(format!("{:#}", err.unwrap_err()).contains("infeasible floor"));
+    }
+
+    #[test]
+    fn invalid_demand_sets_are_rejected() {
+        assert!(MultiTenantPlan::solve(1024.0, &[]).is_err());
+        assert!(MultiTenantPlan::solve(1024.0, &[demand(1, 0.0)]).is_err());
+        assert!(MultiTenantPlan::solve(1024.0, &[demand(1, f64::NAN)]).is_err());
+        assert!(MultiTenantPlan::solve(1024.0, &[demand(1, 1.0), demand(1, 2.0)]).is_err());
+        assert!(MultiTenantPlan::solve(f64::INFINITY, &[demand(1, 1.0)]).is_err());
     }
 }

@@ -76,19 +76,25 @@ pub fn private_stream(seed: u64, round: u64, client: u64) -> Pcg64 {
 }
 
 /// Bits of a combined stream id reserved for the client id (the low
-/// field); the remaining high bits carry the upload slot index. See
-/// [`client_slot_stream_id`].
-pub const CLIENT_ID_BITS: u32 = 40;
-/// Bits of a combined stream id reserved for the slot index.
-pub const SLOT_BITS: u32 = 64 - CLIENT_ID_BITS;
+/// field). See [`client_slot_stream_id`].
+pub const CLIENT_ID_BITS: u32 = 32;
+/// Bits of a combined stream id reserved for the slot index (the middle
+/// field, above the client id).
+pub const SLOT_BITS: u32 = 16;
+/// Bits of a combined stream id reserved for the session (tenant) id —
+/// the high field. A `u16` session id always fits by construction, so
+/// only the client and slot fields can overflow.
+pub const SESSION_BITS: u32 = 64 - CLIENT_ID_BITS - SLOT_BITS;
 
-/// Pack a client id and an upload slot index into a single private-stream
-/// id with disjoint bit fields, so every `(client, slot)` pair owns a
-/// distinct randomness stream. The packing is *checked*: a field that
-/// overflows its budget is an explicit error, never a silent collision
-/// that would merge two clients' (or two slots') private streams — a
-/// correctness and privacy bug, not just noise.
-pub fn client_slot_stream_id(client: u64, slot: u64) -> anyhow::Result<u64> {
+/// Pack a session id, a client id, and an upload slot index into a single
+/// private-stream id with disjoint bit fields, so every
+/// `(session, client, slot)` triple owns a distinct randomness stream.
+/// Without the session field, two tenants' clients with equal client ids
+/// would share private rounding noise — a cross-tenant correctness and
+/// privacy bug. The packing is *checked*: a field that overflows its
+/// budget is an explicit error, never a silent collision that would merge
+/// two streams.
+pub fn client_slot_stream_id(session: u16, client: u64, slot: u64) -> anyhow::Result<u64> {
     anyhow::ensure!(
         client < 1u64 << CLIENT_ID_BITS,
         "client id {client} does not fit the {CLIENT_ID_BITS}-bit stream-id field; \
@@ -98,7 +104,9 @@ pub fn client_slot_stream_id(client: u64, slot: u64) -> anyhow::Result<u64> {
         slot < 1u64 << SLOT_BITS,
         "slot index {slot} does not fit the {SLOT_BITS}-bit stream-id field"
     );
-    Ok(client | (slot << CLIENT_ID_BITS))
+    // session: u16 == SESSION_BITS bits; cannot overflow by construction.
+    const _: () = assert!(SESSION_BITS == 16);
+    Ok(client | (slot << CLIENT_ID_BITS) | ((session as u64) << (CLIENT_ID_BITS + SLOT_BITS)))
 }
 
 #[cfg(test)]
@@ -140,28 +148,51 @@ mod tests {
 
     #[test]
     fn client_slot_stream_ids_are_injective() {
-        // Distinct (client, slot) pairs map to distinct ids — including
-        // the pairs the old unchecked `client | slot << 40` packing
-        // collided on (client ids with bits at or above position 40).
+        // Distinct (session, client, slot) triples map to distinct ids —
+        // including the triples an unchecked `client | slot << k` packing
+        // would collide on (client ids with bits at or above position k),
+        // and equal (client, slot) pairs under different sessions.
         let mut seen = std::collections::HashSet::new();
-        for client in [0u64, 1, 2, (1 << 40) - 1] {
-            for slot in [0u64, 1, 2, (1 << SLOT_BITS) - 1] {
-                assert!(
-                    seen.insert(client_slot_stream_id(client, slot).unwrap()),
-                    "collision at client={client} slot={slot}"
-                );
+        for session in [0u16, 1, u16::MAX] {
+            for client in [0u64, 1, 2, (1 << CLIENT_ID_BITS) - 1] {
+                for slot in [0u64, 1, 2, (1 << SLOT_BITS) - 1] {
+                    assert!(
+                        seen.insert(client_slot_stream_id(session, client, slot).unwrap()),
+                        "collision at session={session} client={client} slot={slot}"
+                    );
+                }
             }
         }
     }
 
     #[test]
     fn client_slot_stream_id_overflow_is_an_error() {
-        // The regression case: client_id = 2^40 used to silently alias
-        // (client 0, slot 1).
-        assert!(client_slot_stream_id(1 << CLIENT_ID_BITS, 0).is_err());
-        assert!(client_slot_stream_id(0, 1 << SLOT_BITS).is_err());
-        // Boundary values are fine.
-        assert_eq!(client_slot_stream_id(0, 0).unwrap(), 0);
-        assert!(client_slot_stream_id((1 << CLIENT_ID_BITS) - 1, (1 << SLOT_BITS) - 1).is_ok());
+        // The original regression case: an overflowing client id used to
+        // silently alias (client 0, slot 1); still rejected at the new
+        // (narrower) field boundary, as is an overflowing slot.
+        assert!(client_slot_stream_id(0, 1 << CLIENT_ID_BITS, 0).is_err());
+        assert!(client_slot_stream_id(0, 1 << 40, 0).is_err());
+        assert!(client_slot_stream_id(0, 0, 1 << SLOT_BITS).is_err());
+        // Boundary values are fine, for every session id.
+        assert_eq!(client_slot_stream_id(0, 0, 0).unwrap(), 0);
+        assert!(client_slot_stream_id(
+            u16::MAX,
+            (1 << CLIENT_ID_BITS) - 1,
+            (1 << SLOT_BITS) - 1
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn session_field_separates_equal_client_slot_pairs() {
+        // Two tenants' clients with equal (client, slot) must not share a
+        // stream id: the session field occupies its own disjoint bits.
+        let a = client_slot_stream_id(1, 7, 3).unwrap();
+        let b = client_slot_stream_id(2, 7, 3).unwrap();
+        assert_ne!(a, b);
+        // The low fields are untouched by the session: masking the
+        // session bits off recovers the same (client, slot) packing.
+        let mask = (1u64 << (CLIENT_ID_BITS + SLOT_BITS)) - 1;
+        assert_eq!(a & mask, b & mask);
     }
 }

@@ -1,0 +1,243 @@
+//! Multi-tenant session conformance: one transport, one aggregator
+//! tree, several concurrent estimation sessions.
+//!
+//! The contract under test: a tenant hosted by a `SessionMux`-backed
+//! tree is **bit-identical** to the same session run solo over its own
+//! flat cluster — the encoder's RNG streams are keyed by (client, slot,
+//! session), the per-slot folds are exact, and nothing a co-tenant does
+//! (interleaved rounds, a different spec, a mid-session `SpecChange`)
+//! may leak into another session's estimate. Per-session byte
+//! accounting must partition the shared wire exactly.
+
+use std::sync::Arc;
+
+use dme::coordinator::aggregator::spawn_mux_tree;
+use dme::coordinator::leader::{ChildKey, Leader, RoundOutcome};
+use dme::coordinator::topology::Topology;
+use dme::coordinator::transport::LoopbackHub;
+use dme::coordinator::worker::{mean_update, UpdateFn, Worker};
+use dme::protocol::config::ProtocolConfig;
+use dme::protocol::Protocol;
+use dme::rng::Pcg64;
+
+const D: usize = 16;
+const N: usize = 6;
+const SEED: u64 = 29;
+const ROUNDS: u64 = 3;
+
+fn gaussian_shards(n: usize, d: usize, seed: u64) -> Vec<Vec<Vec<f32>>> {
+    let mut rng = Pcg64::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut x = vec![0.0f32; d];
+            rng.fill_gaussian_f32(&mut x);
+            vec![x]
+        })
+        .collect()
+}
+
+fn proto_for(spec: &str) -> Arc<dyn Protocol> {
+    ProtocolConfig::parse(spec, D).unwrap().build().unwrap()
+}
+
+fn assert_outcomes_bit_identical(a: &RoundOutcome, b: &RoundOutcome, what: &str) {
+    assert_eq!(a.uplink_bits, b.uplink_bits, "{what}: uplink_bits");
+    assert_eq!(a.n_frames, b.n_frames, "{what}: n_frames");
+    assert_eq!(a.weights, b.weights, "{what}: weights");
+    assert_eq!(a.means.len(), b.means.len(), "{what}: slot count");
+    for (slot, (x, y)) in a.means.iter().zip(&b.means).enumerate() {
+        assert_eq!(
+            x.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            y.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "{what}: slot {slot} means diverge"
+        );
+    }
+}
+
+/// Run `session` solo: a flat loopback cluster of plain workers with a
+/// leader pinned to that session id, optionally switching to `switch`
+/// before round 1 — the single-tenant reference every muxed tenant must
+/// reproduce bit for bit.
+fn solo_outcomes(
+    session: u16,
+    spec: &str,
+    shards: &[Vec<Vec<f32>>],
+    update: &UpdateFn,
+    switch: Option<&str>,
+) -> Vec<RoundOutcome> {
+    let (hub, endpoints) = LoopbackHub::new(N);
+    let mut handles = Vec::new();
+    for (i, ep) in endpoints.into_iter().enumerate() {
+        let worker = Worker {
+            client_id: i as u64,
+            shard: shards[i].clone(),
+            protocol: proto_for(spec),
+            update: update.clone(),
+            seed: SEED,
+        };
+        handles.push(std::thread::spawn(move || worker.run_loopback(ep)));
+    }
+    let mut leader = Leader::new(proto_for(spec), Box::new(hub), SEED)
+        .with_session(session)
+        .with_expected_children((0..N as u64).map(ChildKey::Client).collect());
+    let mut out = Vec::new();
+    for r in 0..ROUNDS {
+        if r == 1 {
+            if let Some(to) = switch {
+                leader.switch_spec(to, r).unwrap();
+            }
+        }
+        out.push(leader.round(r, D as u32, &[]).unwrap());
+    }
+    leader.shutdown().unwrap();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+    out
+}
+
+#[test]
+fn muxed_tenants_are_bit_identical_to_solo_sessions() {
+    // Two tenants with different specs share one depth-2 tree; rounds
+    // are interleaved with alternating drive order so every round parks
+    // the other tenant's envelopes at least once. Each tenant must be
+    // bit-identical to its solo flat run, and the per-session byte
+    // accounting must partition the hub's totals exactly.
+    let update = mean_update();
+    let shards = gaussian_shards(N, D, SEED ^ 0xABCD);
+    let specs = [(1u16, "klevel:k=16"), (2u16, "rotated:k=16")];
+    let solo: Vec<Vec<RoundOutcome>> = specs
+        .iter()
+        .map(|(s, spec)| solo_outcomes(*s, spec, &shards, &update, None))
+        .collect();
+
+    let tenants: Vec<(u16, Arc<dyn Protocol>)> =
+        specs.iter().map(|(s, spec)| (*s, proto_for(spec))).collect();
+    let topo = Topology::uniform(N as u64, 3, 2).unwrap();
+    let (mux, mut leaders, tree) =
+        spawn_mux_tree(&tenants, shards, update.clone(), SEED, &topo, 2, None).unwrap();
+    let mut got: Vec<Vec<RoundOutcome>> = vec![Vec::new(); leaders.len()];
+    for r in 0..ROUNDS {
+        let order: Vec<usize> = if r % 2 == 0 {
+            (0..leaders.len()).collect()
+        } else {
+            (0..leaders.len()).rev().collect()
+        };
+        for i in order {
+            got[i].push(leaders[i].round(r, D as u32, &[]).unwrap());
+        }
+    }
+    for leader in &mut leaders {
+        leader.shutdown().unwrap();
+    }
+    tree.join().unwrap();
+
+    for (i, (s, spec)) in specs.iter().enumerate() {
+        for (r, (g, w)) in got[i].iter().zip(&solo[i]).enumerate() {
+            assert_outcomes_bit_identical(
+                g,
+                w,
+                &format!("tenant {s} ({spec}) round {r} diverges from its solo run"),
+            );
+        }
+    }
+
+    // The shared wire splits exactly: per-session bytes are non-zero
+    // and sum to the underlying hub's totals.
+    let (total_down, total_up) = mux.bytes_moved();
+    let mut sum_down = 0u64;
+    let mut sum_up = 0u64;
+    for (s, _) in &specs {
+        let (down, up) = mux.session_bytes(*s);
+        assert!(down > 0 && up > 0, "session {s} moved no bytes");
+        sum_down += down;
+        sum_up += up;
+    }
+    assert_eq!(sum_down, total_down, "downlink bytes must partition by session");
+    assert_eq!(sum_up, total_up, "uplink bytes must partition by session");
+}
+
+#[test]
+fn muxed_tenants_survive_a_sharded_root() {
+    // Session multiplexing composes with dimension sharding: the same
+    // two-tenant contract over a tree whose root children each answer
+    // with one PartialUpload per shard range, per session.
+    let update = mean_update();
+    let shards = gaussian_shards(N, D, SEED ^ 0x5111);
+    let specs = [(1u16, "klevel:k=16"), (2u16, "varlen:k=17")];
+    let solo: Vec<Vec<RoundOutcome>> = specs
+        .iter()
+        .map(|(s, spec)| solo_outcomes(*s, spec, &shards, &update, None))
+        .collect();
+    let tenants: Vec<(u16, Arc<dyn Protocol>)> =
+        specs.iter().map(|(s, spec)| (*s, proto_for(spec))).collect();
+    let topo = Topology::uniform(N as u64, 3, 2).unwrap().with_dim_shards(3).unwrap();
+    let (_mux, mut leaders, tree) =
+        spawn_mux_tree(&tenants, shards, update, SEED, &topo, 2, None).unwrap();
+    let mut got: Vec<Vec<RoundOutcome>> = vec![Vec::new(); leaders.len()];
+    for r in 0..ROUNDS {
+        for (i, leader) in leaders.iter_mut().enumerate() {
+            got[i].push(leader.round(r, D as u32, &[]).unwrap());
+        }
+    }
+    for leader in &mut leaders {
+        leader.shutdown().unwrap();
+    }
+    tree.join().unwrap();
+    for (i, (s, spec)) in specs.iter().enumerate() {
+        for (r, (g, w)) in got[i].iter().zip(&solo[i]).enumerate() {
+            assert_outcomes_bit_identical(
+                g,
+                w,
+                &format!("sharded mux tenant {s} ({spec}) round {r}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn spec_change_on_one_tenant_leaves_the_other_bit_identical() {
+    // The isolation contract for mid-session retuning: tenant 1 switches
+    // spec before round 1 (the rate controller's move), tenant 2 keeps
+    // its spec — and tenant 2's every round stays bit-identical to a
+    // solo run that never saw any SpecChange, while tenant 1 matches a
+    // solo run that made the same switch.
+    let update = mean_update();
+    let shards = gaussian_shards(N, D, SEED ^ 0xABCD);
+    let from = "klevel:k=16";
+    let to = "klevel:k=4";
+    let bystander = "rotated:k=16";
+    let want_switched = solo_outcomes(1, from, &shards, &update, Some(to));
+    let want_bystander = solo_outcomes(2, bystander, &shards, &update, None);
+
+    let tenants: Vec<(u16, Arc<dyn Protocol>)> =
+        vec![(1u16, proto_for(from)), (2u16, proto_for(bystander))];
+    let topo = Topology::uniform(N as u64, 3, 2).unwrap();
+    let (_mux, mut leaders, tree) =
+        spawn_mux_tree(&tenants, shards, update, SEED, &topo, 2, None).unwrap();
+    let mut got: Vec<Vec<RoundOutcome>> = vec![Vec::new(); 2];
+    for r in 0..ROUNDS {
+        if r == 1 {
+            leaders[0].switch_spec(to, r).unwrap();
+        }
+        for (i, leader) in leaders.iter_mut().enumerate() {
+            got[i].push(leader.round(r, D as u32, &[]).unwrap());
+        }
+    }
+    for leader in &mut leaders {
+        leader.shutdown().unwrap();
+    }
+    tree.join().unwrap();
+
+    for (r, (g, w)) in got[0].iter().zip(&want_switched).enumerate() {
+        assert_outcomes_bit_identical(g, w, &format!("switched tenant round {r}"));
+    }
+    for (r, (g, w)) in got[1].iter().zip(&want_bystander).enumerate() {
+        assert_outcomes_bit_identical(
+            g,
+            w,
+            &format!("bystander tenant round {r} — the co-tenant's SpecChange leaked"),
+        );
+    }
+    assert_eq!(leaders[0].protocol_name(), proto_for(to).name());
+}

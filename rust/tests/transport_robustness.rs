@@ -1,19 +1,31 @@
 //! Transport robustness: framing under adversarial delivery schedules,
-//! connect backoff, and the reactor's scaling contract.
+//! the versioned envelope's rejection contract, connect backoff, and the
+//! reactor's scaling contract.
 //!
-//! These tests drive the hubs with raw `TcpStream`s (not `TcpEndpoint`)
-//! so the byte boundaries on the wire are exactly what the test says
-//! they are: one byte per `write`, a length prefix split mid-field, a
-//! forged oversized prefix.
+//! The adversarial tests drive the hubs with raw `TcpStream`s (not
+//! `TcpEndpoint`) so the byte boundaries on the wire are exactly what
+//! the test says they are: one byte per `write`, a length prefix split
+//! mid-field, a forged oversized prefix, a corrupted envelope header.
+//!
+//! The envelope contract under test: every tag round-trips with its
+//! session id preserved verbatim on every transport; truncation and
+//! trailing garbage are parse errors at every byte boundary; a wrong
+//! magic or a future version is a **typed** [`WireError`] surfaced to
+//! the hub's consumer (never a silent connection kill); an envelope
+//! addressed to a session the receiver does not host is a typed
+//! [`WireError::UnknownSession`] from the session router, after which
+//! the link keeps working.
 
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};
 use std::time::{Duration, Instant};
 
+use dme::coordinator::session::SessionMux;
 use dme::coordinator::transport::{
-    HubBinding, Message, TcpEndpoint, Transport, TransportHub, WeightedFrame,
+    Envelope, HubBinding, LoopbackHub, Message, TcpEndpoint, Transport, TransportHub,
+    WeightedFrame, WireError, WIRE_VERSION,
 };
-use dme::protocol::Frame;
+use dme::protocol::{Frame, SlotPartial};
 
 /// Every TCP hub implementation this platform can run.
 fn transports_under_test() -> Vec<Transport> {
@@ -40,6 +52,192 @@ fn framed(msg: &Message) -> Vec<u8> {
     let mut out = (body.len() as u32).to_le_bytes().to_vec();
     out.extend_from_slice(&body);
     out
+}
+
+/// One message of every wire tag (1 = RoundStart, 2 = Upload,
+/// 3 = Shutdown, 4 = PartialUpload, 5 = SpecChange).
+fn all_tags() -> Vec<Message> {
+    let slot = SlotPartial::from_decoded(&[1.0, -2.0, 0.5], 1.0, 1).unwrap();
+    vec![
+        Message::RoundStart { round: 3, dim: 8, payload: vec![0.5f32; 8].into() },
+        upload(1, 3),
+        Message::Shutdown,
+        Message::PartialUpload {
+            agg_id: 9,
+            round: 4,
+            span: (0, 8),
+            uplink_bits: 321,
+            n_frames: 1,
+            shard: (0, 3),
+            slots: vec![slot],
+        },
+        Message::SpecChange { round: 5, spec: "klevel:k=16".into() },
+    ]
+}
+
+#[test]
+fn envelope_sessions_round_trip_for_every_tag_on_every_transport() {
+    let sessions = [0u16, 1, 0xBEEF, u16::MAX];
+    // Byte level: the envelope header carries the session verbatim and
+    // framed_len matches the serialized size plus the length prefix.
+    for msg in all_tags() {
+        for &s in &sessions {
+            let env = Envelope { session: s, msg: msg.clone() };
+            let bytes = env.to_bytes().unwrap();
+            assert_eq!(bytes.len() as u64 + 4, env.framed_len());
+            let back = Envelope::from_bytes(&bytes).unwrap();
+            assert_eq!(back.session, s);
+            assert_eq!(back.msg.to_bytes().unwrap(), msg.to_bytes().unwrap());
+        }
+    }
+    // Loopback: endpoint → hub preserves the session for every tag.
+    let (mut hub, eps) = LoopbackHub::new(1);
+    for msg in all_tags() {
+        for &s in &sessions {
+            eps[0].send_session(s, msg.clone()).unwrap();
+            let env = hub.recv_env().unwrap();
+            assert_eq!(env.session, s);
+            assert_eq!(env.msg.to_bytes().unwrap(), msg.to_bytes().unwrap());
+        }
+    }
+    // Both TCP hubs: upstream for every tag × session, then one
+    // downstream broadcast on a non-root session.
+    for transport in transports_under_test() {
+        let binding = HubBinding::bind(transport, "127.0.0.1:0").unwrap();
+        let addr = binding.local_addr().unwrap().to_string();
+        let client = std::thread::spawn(move || {
+            let mut ep = TcpEndpoint::connect(&addr).unwrap();
+            for msg in all_tags() {
+                for s in [0u16, 1, 0xBEEF, u16::MAX] {
+                    ep.send_session(s, &msg).unwrap();
+                }
+            }
+            let env = ep.recv_envelope().unwrap();
+            (env.session, env.msg.to_bytes().unwrap())
+        });
+        let mut hub = binding.accept(1).unwrap();
+        for msg in all_tags() {
+            for &s in &sessions {
+                let env = hub.recv_env().unwrap();
+                assert_eq!(env.session, s, "{transport}: session mangled upstream");
+                assert_eq!(
+                    env.msg.to_bytes().unwrap(),
+                    msg.to_bytes().unwrap(),
+                    "{transport}: message mangled upstream"
+                );
+            }
+        }
+        let down = Message::RoundStart { round: 9, dim: 4, payload: vec![1.0f32; 4].into() };
+        hub.broadcast_session(7, &down).unwrap();
+        let (s, bytes) = client.join().unwrap();
+        assert_eq!(s, 7, "{transport}: session mangled downstream");
+        assert_eq!(bytes, down.to_bytes().unwrap(), "{transport}: message mangled downstream");
+    }
+}
+
+#[test]
+fn truncated_envelopes_rejected_at_every_boundary_for_every_tag() {
+    // Truncation anywhere — inside the envelope header, inside the tag
+    // payload — and trailing garbage are both parse errors for every
+    // tag; the untouched serialization still parses.
+    for msg in all_tags() {
+        let env = Envelope { session: 3, msg };
+        let bytes = env.to_bytes().unwrap();
+        for cut in 0..bytes.len() {
+            assert!(
+                Envelope::from_bytes(&bytes[..cut]).is_err(),
+                "truncation at {cut}/{} parsed",
+                bytes.len()
+            );
+        }
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(Envelope::from_bytes(&long).is_err(), "trailing garbage parsed");
+        assert!(Envelope::from_bytes(&bytes).is_ok());
+    }
+}
+
+#[test]
+fn bad_magic_and_future_version_are_typed_rejections_on_every_transport() {
+    // Byte level: the parser names the exact failure for every tag.
+    for msg in all_tags() {
+        let good = Envelope::root(msg).to_bytes().unwrap();
+        let mut alien = good.clone();
+        alien[0] = b'X';
+        match Envelope::from_bytes(&alien).unwrap_err().downcast_ref::<WireError>() {
+            Some(WireError::BadMagic(m)) => assert_eq!(m[0], b'X'),
+            other => panic!("expected BadMagic, got {other:?}"),
+        }
+        let mut future = good.clone();
+        future[2] = WIRE_VERSION + 1;
+        match Envelope::from_bytes(&future).unwrap_err().downcast_ref::<WireError>() {
+            Some(WireError::UnknownVersion(v)) => assert_eq!(*v, WIRE_VERSION + 1),
+            other => panic!("expected UnknownVersion, got {other:?}"),
+        }
+    }
+    // Both TCP hubs: a correctly framed but corrupted envelope must
+    // surface the typed error to recv — reported, not a silent kill.
+    for transport in transports_under_test() {
+        for (corrupt, want_magic) in [(0usize, true), (2usize, false)] {
+            let binding = HubBinding::bind(transport, "127.0.0.1:0").unwrap();
+            let addr = binding.local_addr().unwrap();
+            let client = std::thread::spawn(move || {
+                let mut stream = TcpStream::connect(addr).unwrap();
+                let mut wire = framed(&upload(4, 0));
+                // Offset 4 skips the length prefix; the envelope header
+                // starts there (magic at +0, version at +2).
+                if want_magic {
+                    wire[4 + corrupt] = b'Z';
+                } else {
+                    wire[4 + corrupt] = WIRE_VERSION + 7;
+                }
+                stream.write_all(&wire).unwrap();
+                stream
+            });
+            let mut hub = binding.accept(1).unwrap();
+            let err = hub.recv().unwrap_err();
+            match err.downcast_ref::<WireError>() {
+                Some(WireError::BadMagic(_)) => {
+                    assert!(want_magic, "{transport}: wrong rejection kind")
+                }
+                Some(WireError::UnknownVersion(v)) => {
+                    assert!(!want_magic, "{transport}: wrong rejection kind");
+                    assert_eq!(*v, WIRE_VERSION + 7, "{transport}");
+                }
+                other => panic!("{transport}: expected a typed WireError, got {other:?}"),
+            }
+            drop(client.join().unwrap());
+        }
+    }
+}
+
+#[test]
+fn unknown_session_is_a_typed_rejection_and_the_link_survives() {
+    // The session router's half of the contract, over a real socket: an
+    // envelope addressed to an unhosted session surfaces as a typed
+    // UnknownSession to the receiving view, and the connection keeps
+    // delivering — the very next message on a hosted session arrives.
+    for transport in transports_under_test() {
+        let binding = HubBinding::bind(transport, "127.0.0.1:0").unwrap();
+        let addr = binding.local_addr().unwrap().to_string();
+        let client = std::thread::spawn(move || {
+            let mut ep = TcpEndpoint::connect(&addr).unwrap();
+            ep.send_session(9, &upload(0, 0)).unwrap();
+            ep.send_session(1, &upload(0, 0)).unwrap();
+            ep
+        });
+        let hub = binding.accept(1).unwrap();
+        let mux = SessionMux::new(hub);
+        let mut view = mux.view(1);
+        let err = view.recv_env().unwrap_err();
+        match err.downcast_ref::<WireError>() {
+            Some(WireError::UnknownSession(s)) => assert_eq!(*s, 9, "{transport}"),
+            other => panic!("{transport}: expected UnknownSession, got {other:?}"),
+        }
+        let env = view.recv_env().unwrap();
+        assert_eq!(env.session, 1, "{transport}: link must survive the rejection");
+        drop(client.join().unwrap());
+    }
 }
 
 #[test]

@@ -8,11 +8,14 @@
 //! tests prove the whole pipeline (decode pools, wire serialization,
 //! barrier mixing of `Upload`/`PartialUpload`, both hubs) preserves it.
 //!
-//! Also covered: silent (sampled-out) frames interleaved across tiers,
-//! per-tier byte accounting (root ingress strictly below flat at
-//! n = 4096 simulated clients), hub-identical accounting for
-//! `PartialUpload` traffic, adversarial wire payloads, and the barrier
-//! timeout naming missing children.
+//! Also covered: dimension sharding (the tier below the root splits its
+//! exact fold into per-range `PartialUpload`s the root concatenates —
+//! same bit-identity contract for every shard count × tree shape ×
+//! arrival order × thread count), silent (sampled-out) frames
+//! interleaved across tiers, per-tier byte accounting (root ingress
+//! strictly below flat at n = 4096 simulated clients), hub-identical
+//! accounting for `PartialUpload` traffic, adversarial wire payloads,
+//! and the barrier timeout naming missing children.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -156,6 +159,117 @@ fn tree_matches_flat_reference_full_grid() {
                         &format!("spec={spec} fan_in={fan_in} depth={depth} threads={threads}"),
                     );
                     assert_eq!(got.tier_ingress.len(), depth);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_tree_matches_flat_reference_full_grid() {
+    // The dimension-sharding acceptance grid: for every shard count ×
+    // tree shape × upload arrival order × decode thread count, the
+    // root's concatenation of the per-shard exact folds is bit-identical
+    // to the unsharded flat reference. Shard counts deliberately include
+    // values that do not divide the dimension.
+    let d = 32;
+    let n = 36;
+    let seed = 77;
+    let shards = make_shards(n, d, seed);
+    let update = multi_slot_update();
+    for spec in ["klevel:k=16", "rotated:k=16", "varlen:k=17", "klevel:k=16,p=0.5"] {
+        let (proto, state, uploads) = build_uploads(spec, d, 0, &shards, &update, seed);
+        let want =
+            aggregate_uploads_reference(proto.as_ref(), &state, uploads.clone()).unwrap();
+        // Arrival orders: as-built, reversed, odd client ids first.
+        let mut reversed = uploads.clone();
+        reversed.reverse();
+        let mut odds_first = uploads.clone();
+        odds_first.sort_by_key(|(c, _)| (c % 2 == 0, *c));
+        for (o_idx, order) in [&uploads, &reversed, &odds_first].into_iter().enumerate() {
+            for n_shards in [2u32, 3, 5, 8] {
+                for (fan_in, depth) in [(7usize, 2usize), (32, 2), (7, 3)] {
+                    let topo = Topology::uniform(n as u64, fan_in, depth)
+                        .unwrap()
+                        .with_dim_shards(n_shards)
+                        .unwrap();
+                    for threads in [1usize, 4] {
+                        let got = aggregate_tree(proto.as_ref(), &state, order, &topo, threads)
+                            .unwrap();
+                        assert_outcomes_bit_identical(
+                            &got.outcome,
+                            &want,
+                            &format!(
+                                "spec={spec} shards={n_shards} fan_in={fan_in} depth={depth} \
+                                 order={o_idx} threads={threads}"
+                            ),
+                        );
+                        assert_eq!(got.tier_ingress.len(), depth);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_loopback_tree_full_stack_matches_reference() {
+    // Live threads over loopback hubs with a sharded root: each
+    // root-child aggregator slices its exact fold into `n_shards`
+    // PartialUploads on its single upstream connection, the root
+    // barrier counts messages rather than children, and the
+    // concatenated estimate stays bit-identical across two rounds.
+    let d = 32;
+    let n = 14;
+    let seed = 91;
+    let shards = make_shards(n, d, seed);
+    let update = multi_slot_update();
+    for spec in ["klevel:k=16", "rotated:k=16"] {
+        let mut wants = Vec::new();
+        for round in 0..2u64 {
+            let (proto, state, uploads) = build_uploads(spec, d, round, &shards, &update, seed);
+            wants.push(aggregate_uploads_reference(proto.as_ref(), &state, uploads).unwrap());
+        }
+        for n_shards in [2u32, 3, 5] {
+            for (fan_in, depth) in [(7usize, 2usize), (7, 3)] {
+                let topo = Topology::uniform(n as u64, fan_in, depth)
+                    .unwrap()
+                    .with_dim_shards(n_shards)
+                    .unwrap();
+                let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+                let (mut leader, tree) = spawn_local_tree(
+                    proto,
+                    shards.clone(),
+                    update.clone(),
+                    seed,
+                    &topo,
+                    2,
+                    None,
+                )
+                .unwrap();
+                for (round, want) in wants.iter().enumerate() {
+                    let got = leader.round(round as u64, d as u32, &[]).unwrap();
+                    assert_outcomes_bit_identical(
+                        &got,
+                        want,
+                        &format!(
+                            "sharded loopback spec={spec} shards={n_shards} fan_in={fan_in} \
+                             depth={depth} round={round}"
+                        ),
+                    );
+                }
+                leader.shutdown().unwrap();
+                let reports = tree.join().unwrap();
+                assert_eq!(reports.len(), topo.n_aggregators());
+                // Only the tier feeding the root shards its report.
+                let top = topo.levels().len() - 1;
+                for r in &reports {
+                    let want_shards = if r.level == top { n_shards } else { 1 };
+                    assert_eq!(
+                        r.dim_shards, want_shards,
+                        "aggregator {} at level {} reports wrong shard count",
+                        r.agg_id, r.level
+                    );
                 }
             }
         }
@@ -491,6 +605,7 @@ fn partial_upload_accounting_identical_on_both_hubs() {
         span: (0, 64),
         uplink_bits: 4096,
         n_frames: 2,
+        shard: (0, 3),
         slots: vec![slot],
     };
     let framed = msg.framed_len();
@@ -556,6 +671,7 @@ fn adversarial_partial_upload_payloads() {
             span: (4, 4 + n_parts as u64 + g.rng().next_u64() % 64),
             uplink_bits: g.rng().next_u64() % (1 << 40),
             n_frames: n_parts as u64,
+            shard: (0, dim as u32),
             slots: vec![slot.clone(), SlotPartial::silent(dim)],
         };
         let bytes = msg.to_bytes().map_err(|e| e.to_string())?;
@@ -579,6 +695,7 @@ fn adversarial_partial_upload_payloads() {
             span: (9, 3),
             uplink_bits: 0,
             n_frames: 0,
+            shard: (0, 0),
             slots: vec![],
         };
         check(bad.validate().is_err(), "validate accepted inverted span")?;
@@ -594,15 +711,24 @@ fn adversarial_partial_upload_payloads() {
             span: (7, 7),
             uplink_bits: 0,
             n_frames: n_parts as u64,
+            shard: (0, dim as u32),
             slots: vec![slot.clone()],
         };
         check(forged.validate().is_err(), "validate accepted holders beyond span")?;
         // ...and on parse: narrow a valid message's span bytes (offsets
-        // 17..25 = span.0, 25..33 = span.1) down to an empty span.
+        // after the 6-byte envelope header: 22..30 = span.0,
+        // 30..38 = span.1) down to an empty span.
         let mut narrowed = bytes.clone();
-        let lo: [u8; 8] = narrowed[17..25].try_into().unwrap();
-        narrowed[25..33].copy_from_slice(&lo);
-        check(Message::from_bytes(&narrowed).is_err(), "parser accepted holders beyond span")
+        let lo: [u8; 8] = narrowed[22..30].try_into().unwrap();
+        narrowed[30..38].copy_from_slice(&lo);
+        check(Message::from_bytes(&narrowed).is_err(), "parser accepted holders beyond span")?;
+        // A shard range that disagrees with the slot dims must be
+        // refused on parse too: widen shard.1 (bytes 58..62, after
+        // span and the two u64 counters) by one coordinate.
+        let mut widened = bytes.clone();
+        let hi = u32::from_le_bytes(widened[58..62].try_into().unwrap());
+        widened[58..62].copy_from_slice(&(hi + 1).to_le_bytes());
+        check(Message::from_bytes(&widened).is_err(), "parser accepted misaligned shard range")
     });
 }
 
