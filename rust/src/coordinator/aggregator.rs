@@ -34,8 +34,8 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, ensure, Context, Result};
 
 use super::leader::{
-    collect_round, decode_all, fold_spans, BarrierTimeout, ChildKey, DecodedUpload, Leader,
-    RoundOutcome, SpanAccum,
+    collect_round, decode_all, fold_spans, BarrierPolicy, BarrierTimeout, ChildKey, DecodedUpload,
+    Leader, RoundOutcome, SpanAccum,
 };
 use super::metrics::{ExperimentMetrics, RoundMetrics, TierMetrics};
 use super::session::SessionMux;
@@ -72,6 +72,12 @@ pub struct Aggregator {
     /// Per-session starting protocols for tenants whose specs differ
     /// (sessions absent here start on `self.protocol`).
     session_protocols: HashMap<u16, Arc<dyn Protocol>>,
+    /// What a timed-out barrier over this node's span does: skip the
+    /// round entirely ([`BarrierPolicy::Strict`], the default) or
+    /// forward a partial fold of the surviving children
+    /// ([`BarrierPolicy::Partial`]) so the root can still finalize with
+    /// the Lemma 8 rescale.
+    barrier_policy: BarrierPolicy,
 }
 
 /// What an aggregator hands back when its tree shuts down: per-round
@@ -103,7 +109,17 @@ impl Aggregator {
             dim_shards: 1,
             sessions: vec![ROOT_SESSION],
             session_protocols: HashMap::new(),
+            barrier_policy: BarrierPolicy::default(),
         }
+    }
+
+    /// Choose this node's barrier-timeout behavior (builder style); see
+    /// the field docs. Requires [`Self::with_round_timeout`] to ever
+    /// trigger. A round in which *no* child of this node answered still
+    /// takes the skip path — there is no partial fold to forward.
+    pub fn with_barrier_policy(mut self, policy: BarrierPolicy) -> Self {
+        self.barrier_policy = policy;
+        self
     }
 
     /// Split this node's upstream report into `shards` dimension slices
@@ -281,7 +297,21 @@ impl Aggregator {
                     }
                 }
                 Message::Shutdown => {
-                    hub.broadcast_session(session, &Message::Shutdown)?;
+                    let relay = hub.broadcast_session(session, &Message::Shutdown);
+                    if let Err(e) = relay {
+                        // Children that already hung up (scenario
+                        // disconnect faults) cannot block the live
+                        // ones' shutdown: the hubs stage to every live
+                        // child before surfacing the dead.
+                        if self.barrier_policy == BarrierPolicy::Partial {
+                            eprintln!(
+                                "aggregator {} shutdown: broadcast saw departed children ({e:#})",
+                                self.agg_id
+                            );
+                        } else {
+                            return Err(e);
+                        }
+                    }
                     sessions.remove(&session);
                     if sessions.is_empty() {
                         return Ok(report(hub.as_ref(), metrics));
@@ -307,7 +337,21 @@ impl Aggregator {
         metrics: &mut ExperimentMetrics,
     ) -> Result<Vec<Message>> {
         let t0 = Instant::now();
-        hub.broadcast_session(session, &Message::RoundStart { round, dim, payload })?;
+        let bcast = hub.broadcast_session(session, &Message::RoundStart { round, dim, payload });
+        if let Err(e) = bcast {
+            // Hubs stage to every live child before surfacing dead
+            // ones; under the partial policy a dead child is exactly
+            // what the barrier finalizes around, so carry on and let
+            // the survivors answer.
+            if self.barrier_policy == BarrierPolicy::Partial {
+                eprintln!(
+                    "aggregator {} round {round}: broadcast saw departed children ({e:#})",
+                    self.agg_id
+                );
+            } else {
+                return Err(e);
+            }
+        }
         let ctx = RoundCtx::new(round, self.seed);
         let state = proto.prepare(&ctx);
         let n_msgs = hub.n_workers();
@@ -321,6 +365,7 @@ impl Aggregator {
             self.round_timeout,
             expected,
             n_msgs,
+            self.barrier_policy,
         )?;
         // The barrier checked the children against each other; they must
         // also fit inside the span this node forwards upstream, or a
@@ -335,7 +380,29 @@ impl Aggregator {
                 self.span.1,
             );
         }
-        *expected = collected.seen.clone();
+        match self.barrier_policy {
+            BarrierPolicy::Strict => *expected = collected.seen.clone(),
+            BarrierPolicy::Partial => {
+                // Union, never replacement: children missing from a
+                // partial round stay expected for the next one.
+                for k in &collected.seen {
+                    if !expected.contains(k) {
+                        expected.push(*k);
+                    }
+                }
+            }
+        }
+        // This node's observed participation over its own span: the
+        // fold's holder counts are the survivor total |S| (silent
+        // sampled-out frames included).
+        let span_width = (self.span.1 - self.span.0).max(1);
+        let holders = collected.folded.max_holders();
+        let participation = if holders > 0 {
+            (holders as f64 / span_width as f64).min(1.0)
+        } else {
+            let answered: u64 = collected.seen.iter().map(|k| k.span().1 - k.span().0).sum();
+            (answered as f64 / span_width as f64).min(1.0)
+        };
         let t_merge = Instant::now();
         let uplink_bits = collected.folded.uplink_bits();
         let n_frames = collected.folded.n_frames() as usize;
@@ -351,6 +418,8 @@ impl Aggregator {
             decode_wall,
             cum_down_bytes: down,
             cum_up_bytes: up,
+            participation,
+            duplicate_uploads: collected.duplicate_uploads,
         });
         let internal_dim = proto.internal_dim();
         if self.dim_shards <= 1 {

@@ -34,6 +34,29 @@
 //! barrier explicitly. For TCP deployments, [`Leader::with_round_timeout`]
 //! arms a deadline; an expired round fails with an error that names the
 //! missing children instead of hanging.
+//!
+//! # Partial rounds (Lemma 8)
+//!
+//! [`BarrierPolicy::Partial`] turns an expired deadline from an error
+//! into an *estimate*: the round finalizes from the surviving client
+//! set S. The paper's Lemma 8 analyzes exactly this — uniform client
+//! sampling at rate p wraps any protocol π into π_p with
+//! `E(π_p, X) = E(π, X)/p + (1−p)/(n·p) · (Σ‖Xᵢ‖² / n)` and cost
+//! `C(π_p) = p · C(π)` — with the estimator dividing the surviving sum
+//! by the sampling divisor `n·p`. Instantiated at the *observed* rate
+//! p̂ = |S|/n, that divisor is `n·p̂ = |S|`, and the exact fold
+//! produces it for free: every slot's `holders` counter counts the
+//! clients whose contribution reached the fold (including silent
+//! sampled-out frames), so in a partial round `holders = |S|` and the
+//! plain-mean finish divides by precisely the Lemma 8 divisor at p̂ —
+//! bit-for-bit the `protocol::sampling` wrapper's estimate for the
+//! same surviving set (conformance-tested in
+//! `tests/partial_rounds.rs`). Weighted (non-uniform)
+//! slots divide by the survivors' exact weight sum — the natural
+//! weighted extension of the same estimator. Each round's p̂ is
+//! recorded in [`RoundMetrics::participation`] for the rate
+//! controller, which re-ranks its frontier under the same
+//! sampling-wrapper MSE model (`rate::model`).
 
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -233,6 +256,17 @@ impl SpanAccum {
         self.n_frames
     }
 
+    /// Maximum per-slot holder count across the fold — the number of
+    /// clients whose contribution (including silent, sampled-out frames)
+    /// reached this accumulator. In a partial round this is |S|, the
+    /// numerator of the observed participation rate p̂ = |S| / n:
+    /// aggregation-tier `PartialUpload`s carry their surviving holder
+    /// counts transparently, so the root reads true survivor totals even
+    /// through a tree. 0 when nothing folded yet.
+    pub fn max_holders(&self) -> u64 {
+        self.slots.iter().map(|s| s.holders).max().unwrap_or(0)
+    }
+
     /// The merged per-slot partials (what an aggregation-tier node
     /// forwards upstream).
     pub fn into_slots(self) -> Vec<SlotPartial> {
@@ -426,6 +460,32 @@ pub(crate) struct CollectedRound {
     pub seen: Vec<ChildKey>,
     pub wait_wall: Duration,
     pub decode_wall: Duration,
+    /// Current-round uploads from clients the barrier had already
+    /// counted — dropped, never folded twice.
+    pub duplicate_uploads: u64,
+    /// True when the barrier deadline expired and
+    /// [`BarrierPolicy::Partial`] finalized the round from the children
+    /// that had answered.
+    pub timed_out: bool,
+}
+
+/// What the barrier does when its deadline expires with children still
+/// missing.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BarrierPolicy {
+    /// A timed-out round is an error ([`BarrierTimeout`]) naming the
+    /// missing children; nothing is estimated. The pre-scenario
+    /// behavior, and still the default.
+    #[default]
+    Strict,
+    /// Finalize the round from the children that did answer. The exact
+    /// fold's per-slot holder counts then equal |S|, the survivor
+    /// count, so the plain-mean finish divides by n·p̂ instead of n —
+    /// precisely the Lemma 8 client-sampling estimator at the observed
+    /// participation rate p̂ = |S| / n (see the module docs). A round
+    /// in which *no* child answered still errors with
+    /// [`BarrierTimeout`]: there is nothing to rescale.
+    Partial,
 }
 
 /// Marker at the root of every barrier-timeout error chain, so callers
@@ -541,12 +601,15 @@ pub(crate) fn collect_round(
     timeout: Option<Duration>,
     expected: &[ChildKey],
     n_msgs: usize,
+    policy: BarrierPolicy,
 ) -> Result<CollectedRound> {
     let n_children = n_msgs;
     ensure!(n_children > 0, "no children connected");
     let decode_threads = decode_threads.clamp(1, n_children);
     let decode_ns = AtomicU64::new(0);
     let mut wait_wall = Duration::ZERO;
+    let mut duplicate_uploads = 0u64;
+    let mut timed_out = false;
     let mut seen: Vec<ChildKey> = Vec::with_capacity(n_children);
     // Each child paired with the shard range it folded (workers cover
     // the full dimension) — the unit of the span-disjointness check.
@@ -603,13 +666,26 @@ pub(crate) fn collect_round(
                     match env {
                         Some(e) => e,
                         None => {
+                            // Partial policy: if anyone answered, close
+                            // the barrier on the survivors and finalize
+                            // — the drain below folds exactly what was
+                            // accepted, and the holder counts carry |S|
+                            // (the Lemma 8 rescale) into the finish. An
+                            // empty round still errors: nothing to
+                            // rescale, and the flap path (aggregator
+                            // skip-and-recover) depends on the typed
+                            // [`BarrierTimeout`].
+                            if policy == BarrierPolicy::Partial && n_accepted > 0 {
+                                timed_out = true;
+                                break;
+                            }
                             return Err(barrier_timeout_error(
                                 round,
                                 timeout.unwrap_or_default(),
                                 &seen,
                                 expected,
                                 n_children,
-                            ))
+                            ));
                         }
                     }
                 }
@@ -624,10 +700,18 @@ pub(crate) fn collect_round(
                         continue; // late answer to a timed-out round
                     }
                     ensure!(r == round, "client {client} answered round {r}, expected {round}");
-                    ensure!(
-                        seen_clients.insert(client),
-                        "duplicate upload from client {client}"
-                    );
+                    if !seen_clients.insert(client) {
+                        // With a deadline armed, a client may legitimately
+                        // answer twice: its first answer raced the previous
+                        // round's timeout, or a reconnect re-sent the
+                        // current round. The barrier already counted this
+                        // client, so fold the first copy only and account
+                        // for the drop. Without a deadline a duplicate is
+                        // a protocol violation worth failing fast on.
+                        ensure!(timeout.is_some(), "duplicate upload from client {client}");
+                        duplicate_uploads += 1;
+                        continue;
+                    }
                     seen.push(ChildKey::Client(client));
                     ranged.push((full_range, ChildKey::Client(client)));
                     if !pool_started {
@@ -765,6 +849,8 @@ pub(crate) fn collect_round(
         seen,
         wait_wall,
         decode_wall: Duration::from_nanos(decode_ns.load(Ordering::Relaxed)),
+        duplicate_uploads,
+        timed_out,
     })
 }
 
@@ -789,6 +875,10 @@ pub struct Leader {
     /// shard range over one connection, so a sharded tree sets this to
     /// `workers + aggregators × dim_shards`.
     barrier_msgs: Option<usize>,
+    /// What a timed-out barrier does: error ([`BarrierPolicy::Strict`],
+    /// the default) or finalize from the survivors with the Lemma 8
+    /// participation rescale ([`BarrierPolicy::Partial`]).
+    barrier_policy: BarrierPolicy,
 }
 
 impl Leader {
@@ -803,7 +893,22 @@ impl Leader {
             round_timeout: None,
             expected_children: Vec::new(),
             barrier_msgs: None,
+            barrier_policy: BarrierPolicy::default(),
         }
+    }
+
+    /// Choose the barrier's timeout behavior (builder style). Partial
+    /// rounds require an armed [`Leader::with_round_timeout`] deadline
+    /// to ever trigger; without one the barrier waits forever exactly as
+    /// before.
+    pub fn with_barrier_policy(mut self, policy: BarrierPolicy) -> Self {
+        self.barrier_policy = policy;
+        self
+    }
+
+    /// Change the barrier's timeout behavior on a live leader.
+    pub fn set_barrier_policy(&mut self, policy: BarrierPolicy) {
+        self.barrier_policy = policy;
     }
 
     /// Override how many messages close each round's barrier (builder
@@ -886,6 +991,29 @@ impl Leader {
         self.hub.bytes_moved()
     }
 
+    /// Observed participation p̂ = |S| / n for a collected round. |S|
+    /// comes from the fold's per-slot holder counts — aggregation-tier
+    /// `PartialUpload`s carry their surviving holder totals, so the
+    /// number is honest through a tree even when an aggregator answered
+    /// for only part of its span. n is the expected-children span
+    /// width (the enrolled population), falling back to the hub's
+    /// connection count when no expectation list was ever seeded.
+    fn participation_of(&self, collected: &CollectedRound) -> f64 {
+        let mut num = collected.folded.max_holders();
+        if num == 0 {
+            // Counters-only edge (zero-slot uploads): fall back to the
+            // client-span coverage of whoever answered.
+            num = collected.seen.iter().map(|k| k.span().1 - k.span().0).sum();
+        }
+        let denom: u64 = self.expected_children.iter().map(|k| k.span().1 - k.span().0).sum();
+        let denom = if denom > 0 { denom } else { self.hub.n_workers() as u64 };
+        if denom == 0 {
+            1.0
+        } else {
+            (num as f64 / denom as f64).min(1.0)
+        }
+    }
+
     /// Run one synchronous round: broadcast `state` (`n_slots × dim`
     /// flattened — what the workers need to compute their updates), then
     /// stream uploads through the decode pool as they arrive and merge
@@ -896,10 +1024,23 @@ impl Leader {
         ensure!(self.hub.n_workers() > 0, "no workers connected");
         // The payload is Arc-shared: one allocation for the whole
         // broadcast instead of one clone per worker.
-        self.hub.broadcast_session(
+        let bcast = self.hub.broadcast_session(
             self.session,
             &Message::RoundStart { round, dim, payload: Arc::from(state) },
-        )?;
+        );
+        if let Err(e) = bcast {
+            // Every hub stages the message to its live children before
+            // surfacing dead ones, so under the partial policy a failed
+            // broadcast just means some children have left — exactly the
+            // situation the partial barrier finalizes around. (If *all*
+            // children are gone, the barrier's receive fails and the
+            // round errors as before.)
+            if self.barrier_policy == BarrierPolicy::Partial {
+                eprintln!("[leader] round {round}: broadcast saw departed children ({e:#})");
+            } else {
+                return Err(e);
+            }
+        }
 
         let ctx = RoundCtx::new(round, self.seed);
         let proto = self.protocol.clone();
@@ -918,6 +1059,7 @@ impl Leader {
             self.round_timeout,
             &expected,
             n_msgs,
+            self.barrier_policy,
         );
         let collected = match collected {
             Ok(c) => c,
@@ -932,7 +1074,24 @@ impl Leader {
                 return Err(e);
             }
         };
-        self.expected_children = collected.seen.clone();
+        match self.barrier_policy {
+            BarrierPolicy::Strict => self.expected_children = collected.seen.clone(),
+            BarrierPolicy::Partial => {
+                // Union, never replacement: a child missing from a
+                // partial round stays expected (it may recover next
+                // round), and the participation denominator stays the
+                // enrolled population rather than shrinking to whoever
+                // answered last.
+                let mut expected = expected;
+                for k in &collected.seen {
+                    if !expected.contains(k) {
+                        expected.push(*k);
+                    }
+                }
+                self.expected_children = expected;
+            }
+        }
+        let participation = self.participation_of(&collected);
 
         let t_merge = Instant::now();
         let outcome = collected.folded.finish(proto.as_ref(), &round_state);
@@ -948,6 +1107,8 @@ impl Leader {
             decode_wall,
             cum_down_bytes: down,
             cum_up_bytes: up,
+            participation,
+            duplicate_uploads: collected.duplicate_uploads,
         });
         Ok(outcome)
     }

@@ -28,6 +28,16 @@ pub struct RoundMetrics {
     /// Cumulative transport-level bytes after this round.
     pub cum_down_bytes: u64,
     pub cum_up_bytes: u64,
+    /// Fraction of enrolled clients whose contribution made this round's
+    /// fold: p̂ = |S| / n. 1.0 for a full round; < 1.0 when a
+    /// partial-round barrier (`BarrierPolicy::Partial`) finalized from
+    /// the survivors — the Lemma 8 sampling rate the estimate was
+    /// rescaled by.
+    pub participation: f64,
+    /// Duplicate `Upload`s for the *current* round that arrived after
+    /// the barrier had already counted that client — dropped, not folded
+    /// twice.
+    pub duplicate_uploads: u64,
 }
 
 /// Whole-experiment metrics.
@@ -67,6 +77,20 @@ impl ExperimentMetrics {
     /// Total decode CPU time across rounds (summed over decode threads).
     pub fn total_decode_wall(&self) -> Duration {
         self.rounds.iter().map(|m| m.decode_wall).sum()
+    }
+
+    /// Mean per-round participation p̂ (1.0 when every round was full).
+    pub fn avg_participation(&self) -> f64 {
+        if self.rounds.is_empty() {
+            1.0
+        } else {
+            self.rounds.iter().map(|m| m.participation).sum::<f64>() / self.rounds.len() as f64
+        }
+    }
+
+    /// Total duplicate uploads dropped across rounds.
+    pub fn total_duplicate_uploads(&self) -> u64 {
+        self.rounds.iter().map(|m| m.duplicate_uploads).sum()
     }
 
     /// Average bits per round.
@@ -233,6 +257,8 @@ mod tests {
             decode_wall: Duration::from_millis(3),
             cum_down_bytes: 100,
             cum_up_bytes: up,
+            participation: 1.0,
+            duplicate_uploads: 0,
         }
     }
 
@@ -248,6 +274,8 @@ mod tests {
         assert!((em.uplink_overhead() - 1.4).abs() < 1e-9);
         assert_eq!(em.total_wait_wall(), Duration::from_millis(12));
         assert_eq!(em.total_decode_wall(), Duration::from_millis(6));
+        assert_eq!(em.avg_participation(), 1.0);
+        assert_eq!(em.total_duplicate_uploads(), 0);
         assert!(em.summary().contains("2 rounds"));
     }
 

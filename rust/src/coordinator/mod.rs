@@ -97,7 +97,7 @@ pub mod worker;
 pub use aggregator::{
     aggregate_tree, spawn_local_tree, spawn_mux_tree, Aggregator, AggregatorReport,
 };
-pub use leader::{ChildKey, Leader, RoundOutcome};
+pub use leader::{BarrierPolicy, ChildKey, Leader, RoundOutcome};
 pub use metrics::{ExperimentMetrics, RoundMetrics, TenantMetrics, TierMetrics};
 #[cfg(target_os = "linux")]
 pub use reactor::ReactorHub;

@@ -27,6 +27,20 @@ use super::reactor::{
 };
 use super::transport::{Envelope, Message};
 
+/// What one swarm client does with one received message — the scenario
+/// engine's fault-injection surface ([`Swarm::spawn_actions`]).
+#[derive(Debug, Clone)]
+pub enum SwarmAction {
+    /// Answer with this envelope (the protocol-correct path).
+    Reply(Envelope),
+    /// Say nothing: a per-round dropout. The connection stays open, so
+    /// the parent's barrier has to time out on this client.
+    Silent,
+    /// Close the connection immediately: a mid-round disconnect. The
+    /// parent's hub discovers a dead child on its next broadcast.
+    Hangup,
+}
+
 /// What a finished swarm observed, for bench/soak assertions.
 #[derive(Debug, Clone, Copy)]
 pub struct SwarmReport {
@@ -78,9 +92,23 @@ impl Swarm {
     /// protocol-correct multiplexed client never closes the shared
     /// socket while a co-tenant is still live — the parent's reactor
     /// treats a broadcast into a dead connection as a worker loss.
-    pub fn spawn_mux<F>(addr: SocketAddr, n: usize, sessions: usize, reply: F) -> Result<Swarm>
+    pub fn spawn_mux<F>(addr: SocketAddr, n: usize, sessions: usize, mut reply: F) -> Result<Swarm>
     where
         F: FnMut(usize, &Envelope) -> Option<Envelope> + Send + 'static,
+    {
+        Self::spawn_actions(addr, n, sessions, move |i, env| match reply(i, env) {
+            Some(resp) => SwarmAction::Reply(resp),
+            None => SwarmAction::Silent,
+        })
+    }
+
+    /// [`Self::spawn_mux`] with the full fault-injection surface: the
+    /// callback may answer, stay silent, or hang up the connection —
+    /// what the scenario engine uses to turn one driver thread into a
+    /// deterministic churn/straggler population.
+    pub fn spawn_actions<F>(addr: SocketAddr, n: usize, sessions: usize, reply: F) -> Result<Swarm>
+    where
+        F: FnMut(usize, &Envelope) -> SwarmAction + Send + 'static,
     {
         let handle = std::thread::Builder::new()
             .name("dme-swarm".to_string())
@@ -149,7 +177,7 @@ struct Driver<F> {
     frames_received: u64,
 }
 
-impl<F: FnMut(usize, &Envelope) -> Option<Envelope>> Driver<F> {
+impl<F: FnMut(usize, &Envelope) -> SwarmAction> Driver<F> {
     fn run(mut self) -> SwarmReport {
         let mut ready: Vec<(u64, u32)> = Vec::with_capacity(512);
         while self.live > 0 {
@@ -214,14 +242,19 @@ impl<F: FnMut(usize, &Envelope) -> Option<Envelope>> Driver<F> {
                 }
                 continue;
             }
-            if let Some(resp) = (self.reply)(i, &env) {
-                let body = resp.to_bytes()?;
-                let mut framed = Vec::with_capacity(body.len() + 4);
-                framed.extend_from_slice(&(body.len() as u32).to_le_bytes());
-                framed.extend_from_slice(&body);
-                let framed: Arc<[u8]> = framed.into();
-                client.out.stage(&framed)?;
-                self.replies_sent += 1;
+            match (self.reply)(i, &env) {
+                SwarmAction::Reply(resp) => {
+                    let body = resp.to_bytes()?;
+                    let mut framed = Vec::with_capacity(body.len() + 4);
+                    framed.extend_from_slice(&(body.len() as u32).to_le_bytes());
+                    framed.extend_from_slice(&body);
+                    let framed: Arc<[u8]> = framed.into();
+                    client.out.stage(&framed)?;
+                    self.replies_sent += 1;
+                }
+                SwarmAction::Silent => {}
+                // Mid-round disconnect: close like a Shutdown would.
+                SwarmAction::Hangup => return Ok(false),
             }
         }
         Ok(true)

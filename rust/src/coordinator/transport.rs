@@ -933,6 +933,19 @@ impl TransportHub for TcpHub {
 /// process launch race.
 pub const DEFAULT_CONNECT_RETRIES: u32 = 7;
 
+/// Multiplicative jitter for one backoff sleep, in `[0.5, 1.5)`: ±50%
+/// around the nominal delay, derived from `salt` by one splitmix64
+/// step (uniform over the 53-bit mantissa grid). Pure, so the bounds
+/// are unit-testable; callers feed a per-process random salt mixed
+/// with the attempt number so that thousands of swarm clients kicked
+/// off by the same flapping aggregator fan their reconnect storm out
+/// instead of thundering in lockstep at every doubled interval.
+pub fn backoff_jitter_factor(salt: u64) -> f64 {
+    let mut s = salt;
+    let z = crate::rng::splitmix64(&mut s);
+    0.5 + (z >> 11) as f64 / (1u64 << 53) as f64
+}
+
 /// Worker-side TCP endpoint (used by the `dme worker` process).
 pub struct TcpEndpoint {
     reader: BufReader<TcpStream>,
@@ -948,11 +961,21 @@ impl TcpEndpoint {
     }
 
     /// Connect with up to `retries` retries under capped exponential
-    /// backoff (50 ms doubling to a 1.6 s ceiling). A worker or mid-tier
-    /// aggregator started moments before its parent listens no longer
-    /// dies with a raw connection refusal; if every attempt fails, the
-    /// error names the address and the attempt count.
+    /// backoff (50 ms doubling to a 1.6 s ceiling), each sleep jittered
+    /// by ±50% ([`backoff_jitter_factor`]) so a reconnect storm against
+    /// a flapping parent desynchronizes instead of re-arriving in the
+    /// same doubled waves. A worker or mid-tier aggregator started
+    /// moments before its parent listens no longer dies with a raw
+    /// connection refusal; if every attempt fails, the error names the
+    /// address and the attempt count.
     pub fn connect_with_backoff(addr: &str, retries: u32) -> Result<Self> {
+        // Per-process/per-call entropy: distinct clients must jitter
+        // differently, which is exactly what the seeded-determinism
+        // contract does NOT cover (sleeps never reach the estimate).
+        let salt = std::hash::BuildHasher::hash_one(
+            &std::collections::hash_map::RandomState::new(),
+            std::thread::current().id(),
+        );
         let mut delay = Duration::from_millis(50);
         let mut attempt = 0u32;
         loop {
@@ -969,7 +992,8 @@ impl TcpEndpoint {
                             format!("connecting {addr} failed after {attempt} attempt(s)")
                         });
                     }
-                    std::thread::sleep(delay);
+                    let factor = backoff_jitter_factor(salt ^ u64::from(attempt));
+                    std::thread::sleep(delay.mul_f64(factor));
                     delay = (delay * 2).min(Duration::from_millis(1600));
                 }
             }
@@ -1105,6 +1129,23 @@ mod tests {
 
     fn frame(bytes: Vec<u8>, bits: u64) -> WeightedFrame {
         WeightedFrame { frame: Frame::new(bytes, bits), weight: 2.5 }
+    }
+
+    #[test]
+    fn backoff_jitter_stays_within_half_to_three_halves() {
+        let mut sum = 0.0;
+        let mut distinct = std::collections::HashSet::new();
+        for salt in 0..10_000u64 {
+            let f = backoff_jitter_factor(salt);
+            assert!((0.5..1.5).contains(&f), "salt {salt}: factor {f} out of [0.5, 1.5)");
+            sum += f;
+            distinct.insert(f.to_bits());
+        }
+        // Uniform over [0.5, 1.5): the mean sits near 1 and the factors
+        // actually vary (a constant factor would keep the storm in sync).
+        let mean = sum / 10_000.0;
+        assert!((mean - 1.0).abs() < 0.02, "mean jitter {mean} far from 1.0");
+        assert!(distinct.len() > 9_000, "only {} distinct factors", distinct.len());
     }
 
     fn assert_roundtrip(m: &Message) {

@@ -82,6 +82,14 @@
 //! Root ingest drops from O(n · frames) to O(root-fan-in · slots) while
 //! the root estimate stays **bit-identical to the flat topology for
 //! every tree shape** — see `coordinator` for the tier model.
+//!
+//! ## Stress-testing the theory: the scenario engine
+//!
+//! [`scenario`] replays deterministic, seeded churn / straggler /
+//! disconnect / flap fault plans over the real stack (`dme simulate`):
+//! partial-round barriers finalize from the surviving clients as the
+//! Lemma 8 estimator at the observed participation p̂, and every round's
+//! measured error is recorded against the calibrated Lemma 8 prediction.
 
 pub mod apps;
 pub mod bench;
@@ -96,6 +104,7 @@ pub mod report;
 pub mod rng;
 pub mod rotation;
 pub mod runtime;
+pub mod scenario;
 pub mod simd;
 pub mod stats;
 pub mod testkit;

@@ -19,6 +19,12 @@
 //!               [--auto-rate --budget-bits 4]  (rate controller picks + retunes the spec;
 //!                               with --tenants the pool is water-filled across tenants
 //!                               and each tenant gets its own controller)
+//! dme simulate  --seed 7 --matrix [--json BENCH_scenarios.json]   (built-in CI matrix)
+//! dme simulate  --seed 7 --workers 24 --dim 64 --fanout 3 --rounds 4 --timeout-ms 200
+//!               --faults drop=0.2,straggle=0.1:80ms,flap=2 --data clustered
+//!               [--protocol rotated:k=16] [--transport reactor|threads]
+//!               (deterministic fault scenarios over the real stack, Lemma 8
+//!                partial rounds; --seed is REQUIRED so every run replays)
 //! dme aggregate --parent host:7070 --listen 0.0.0.0:7071 --children 16 --span 0:16
 //!               --dim 256 --protocol varlen [--id N] [--decode-threads N] [--timeout-ms N]
 //!               [--transport reactor|threads] [--connect-retries N]
@@ -69,13 +75,14 @@ fn real_main() -> Result<()> {
         Some("power") => cmd_power(&args),
         Some("tune") => cmd_tune(&args),
         Some("serve") => cmd_serve(&args),
+        Some("simulate") => cmd_simulate(&args),
         Some("aggregate") => cmd_aggregate(&args),
         Some("worker") => cmd_worker(&args),
         Some("info") => cmd_info(&args),
         Some(other) => {
             bail!(
                 "unknown command `{other}` \
-                 (try: estimate kmeans power tune serve aggregate worker info)"
+                 (try: estimate kmeans power tune serve simulate aggregate worker info)"
             )
         }
         None => {
@@ -102,6 +109,12 @@ commands:
              --auto-rate lets the rate controller pick and retune the spec
              mid-session; --transport reactor|threads picks the TCP hub
              (default: the epoll reactor on Linux)
+  simulate   deterministic fault scenarios (churn, stragglers, mid-round
+             disconnects, flapping aggregators, non-IID data) over the real
+             transports, with Lemma 8 partial-round recovery; --seed is
+             required (every fault coin and client vector is keyed by it),
+             --matrix runs the built-in CI matrix, --json writes the
+             trajectory document (Linux only: the swarm driver is epoll)
   aggregate  TCP aggregation-tier node: accepts its children's uploads,
              merges them exactly, forwards one PartialUpload upstream
   worker     TCP worker process (point --connect at a leader or aggregator;
@@ -357,7 +370,12 @@ fn run_rounds(
         );
         if let Some(ctl) = controller.as_mut() {
             let est = out.means.first().map(|m| m.as_slice()).unwrap_or(&[]);
-            if let Some(spec) = ctl.observe(r, out.uplink_bits, n_clients, est) {
+            // Partial rounds report p̂ < 1; the controller re-prices its
+            // frontier with the Lemma 8 sampling model at that rate.
+            let p_hat = leader.metrics().rounds.last().map(|m| m.participation).unwrap_or(1.0);
+            if let Some(spec) =
+                ctl.observe_with_participation(r, out.uplink_bits, n_clients, est, p_hat)
+            {
                 if r + 1 < rounds {
                     println!("  auto-rate: switching to `{spec}` from round {}", r + 1);
                     leader.switch_spec(&spec, r + 1)?;
@@ -376,6 +394,7 @@ fn run_rounds(
                     s.round.to_string(),
                     s.spec.clone(),
                     format!("{:.1}", s.bits_per_client),
+                    format!("{:.2}", s.participation),
                     s.mse_proxy.map(|p| format!("{p:.3e}")).unwrap_or_else(|| "--".into()),
                     s.switched_to.clone().unwrap_or_default(),
                 ]
@@ -383,7 +402,7 @@ fn run_rounds(
             .collect();
         dme::bench::print_table(
             "auto-rate trajectory (proxy = est. round MSE from estimate dispersion)",
-            &["round", "spec", "bits/client", "mse proxy", "switched to"],
+            &["round", "spec", "bits/client", "p̂", "mse proxy", "switched to"],
             &rows,
         );
     }
@@ -696,6 +715,92 @@ fn cmd_serve_tenants(args: &Args, tenants: usize) -> Result<()> {
     let tiers = LocalTree::tier_metrics(n_levels, &root_metrics, mux.bytes_moved(), &reports);
     print!("{}", format_tier_table(&tiers));
     Ok(())
+}
+
+/// `dme simulate`: deterministic fault scenarios over the real stack
+/// (see `dme::scenario`). `--seed` is *required*: every fault coin and
+/// client vector is keyed by it, so a scenario without a seed could
+/// never replay — exactly what the flag contract forbids.
+#[cfg(target_os = "linux")]
+fn cmd_simulate(args: &Args) -> Result<()> {
+    use dme::scenario::{self, DataPlan, FaultPlan, ScenarioSpec};
+    let seed: u64 = args
+        .require("seed")
+        .context(
+            "dme simulate needs --seed: fault plans and client data are keyed by it, \
+             and an unseeded scenario could not replay",
+        )?
+        .parse()
+        .map_err(|e| anyhow::anyhow!("--seed must be an unsigned integer: {e}"))?;
+    let matrix = args.bool("matrix")?;
+    let json_path = args.opt("json");
+    let specs = if matrix {
+        scenario::builtin_matrix(seed)?
+    } else {
+        let timeout_ms = args.get("timeout-ms", 200u64)?;
+        ensure!(timeout_ms > 0, "scenarios need a barrier deadline (--timeout-ms > 0)");
+        let faults_spec = args.get("faults", String::new())?;
+        vec![ScenarioSpec {
+            name: args.get("name", "adhoc".to_string())?,
+            protocol: args.get("protocol", "rotated:k=16".to_string())?,
+            n_clients: args.get("workers", 16usize)?,
+            dim: args.get("dim", 64usize)?,
+            fanout: args.get("fanout", 0usize)?,
+            rounds: args.get("rounds", 5u64)?,
+            timeout: Duration::from_millis(timeout_ms),
+            transport: args.get("transport", Transport::default())?,
+            decode_threads: resolve_decode_threads(args)?,
+            faults: FaultPlan::parse(&faults_spec, seed)?,
+            data: DataPlan::parse(&args.get("data", "iid".to_string())?)?,
+            seed,
+        }]
+    };
+    args.reject_unknown()?;
+    let trajectories = scenario::run_matrix(&specs)?;
+    for t in &trajectories {
+        let rows: Vec<Vec<String>> = t
+            .rows
+            .iter()
+            .zip(&t.wall_ms)
+            .map(|(r, &wall)| {
+                vec![
+                    r.round.to_string(),
+                    format!("{:.2}", r.participation),
+                    r.duplicate_uploads.to_string(),
+                    format!("{:.3e}", r.sq_error),
+                    format!("{:.3e}", r.predicted_mse),
+                    format!("{:.1}", r.uplink_bits as f64 / 1e3),
+                    format!("{wall:.0}"),
+                ]
+            })
+            .collect();
+        dme::bench::print_table(
+            &format!(
+                "scenario {} ({}, n={}, fanout={}, {}, data={}, faults={})",
+                t.name, t.protocol, t.n_clients, t.fanout, t.transport, t.data, t.faults
+            ),
+            &["round", "p̂", "dups", "sq error", "Lemma 8 pred", "kbit up", "wall ms"],
+            &rows,
+        );
+        println!(
+            "  mean p̂ {:.2}; measured MSE {:.3e} vs {:.3e} predicted (slack {}x)",
+            t.mean_participation(),
+            t.mean_measured_mse(),
+            t.mean_predicted_mse(),
+            t.slack
+        );
+        t.check_slack()?;
+    }
+    if let Some(path) = json_path {
+        scenario::write_scenarios_json(&path, &trajectories)?;
+        println!("trajectories written to {path}");
+    }
+    Ok(())
+}
+
+#[cfg(not(target_os = "linux"))]
+fn cmd_simulate(_args: &Args) -> Result<()> {
+    bail!("dme simulate needs Linux: the scenario engine drives the epoll swarm client driver")
 }
 
 fn cmd_aggregate(args: &Args) -> Result<()> {

@@ -9,6 +9,7 @@ use std::collections::HashMap;
 
 use anyhow::{ensure, Result};
 
+use super::model;
 use super::planner::{Plan, PlannedSpec};
 
 /// One observed round in the controller's log.
@@ -28,6 +29,8 @@ pub struct ControllerStep {
     pub mse_proxy: Option<f64>,
     /// Spec switched to *after* this round, if the controller retuned.
     pub switched_to: Option<String>,
+    /// Observed participation p̂ this round (1.0 for a full round).
+    pub participation: f64,
 }
 
 /// Per-session rate controller over a solved [`Plan`].
@@ -54,6 +57,9 @@ pub struct RateController {
     history: Vec<ControllerStep>,
     /// Required relative predicted-MSE improvement before switching.
     min_gain: f64,
+    /// EMA of observed participation p̂ (α = 1/2; the first observation
+    /// replaces the default outright). `None` until a round reports.
+    participation: Option<f64>,
 }
 
 impl RateController {
@@ -76,6 +82,7 @@ impl RateController {
             est_rounds: 0,
             history: Vec::new(),
             min_gain: 0.05,
+            participation: None,
         })
     }
 
@@ -89,8 +96,39 @@ impl RateController {
         &self.history
     }
 
+    /// The controller's current participation estimate (EMA of observed
+    /// p̂; 1.0 before any round reported).
+    pub fn participation(&self) -> f64 {
+        self.participation.unwrap_or(1.0)
+    }
+
+    /// Effective bits/client of candidate `i` at the current
+    /// participation estimate. Observed specs report what the wire
+    /// actually carried — churn already priced in. Unobserved specs'
+    /// predictions assume full participation, so Lemma 8's cost side
+    /// (`C(π_p̂) = p̂·C(π)`) scales them down: under churn, more of the
+    /// frontier fits the budget.
     fn effective_bits(&self, i: usize) -> f64 {
-        *self.observed_bits.get(&i).unwrap_or(&self.plan.candidates[i].bits_per_client)
+        match self.observed_bits.get(&i) {
+            Some(&b) => b,
+            None => self.plan.candidates[i].bits_per_client * self.participation(),
+        }
+    }
+
+    /// Candidate `i`'s predicted MSE with the Lemma 8 participation
+    /// penalty at the current p̂ estimate (the plan's predictions are
+    /// normalized to avg ‖X‖² = 1, so the wrapper is applied the same
+    /// way). The transform `x ↦ x/p̂ + c` is order-preserving, so the
+    /// re-ranking story is really about the bits side — but the gain
+    /// hysteresis compares MSE magnitudes, and those must be priced at
+    /// the participation the session actually gets.
+    fn effective_mse(&self, i: usize) -> f64 {
+        model::mse_with_participation(
+            self.plan.candidates[i].predicted_mse,
+            self.plan.n,
+            1.0,
+            self.participation(),
+        )
     }
 
     /// Feed one completed round. Returns the spec string to switch to
@@ -102,6 +140,26 @@ impl RateController {
         n_clients: usize,
         estimate: &[f32],
     ) -> Option<String> {
+        self.observe_with_participation(round, uplink_bits, n_clients, estimate, 1.0)
+    }
+
+    /// [`Self::observe`] with the round's observed participation rate
+    /// p̂ (from `RoundMetrics::participation`): partial rounds feed the
+    /// Lemma 8 sampling model back into the frontier, so the plan
+    /// re-solves for the population that actually answers.
+    pub fn observe_with_participation(
+        &mut self,
+        round: u64,
+        uplink_bits: u64,
+        n_clients: usize,
+        estimate: &[f32],
+        p_hat: f64,
+    ) -> Option<String> {
+        let p_hat = p_hat.clamp(f64::MIN_POSITIVE, 1.0);
+        self.participation = Some(match self.participation {
+            Some(prev) => 0.5 * prev + 0.5 * p_hat,
+            None => p_hat,
+        });
         let ran_spec = self.active_spec().spec.clone();
         let realized = uplink_bits as f64 / n_clients.max(1) as f64;
         // Blend realized into the active spec's bits (EMA, α = 1/2; the
@@ -134,14 +192,14 @@ impl RateController {
             *m += (e as f64 - *m) * inv;
         }
 
-        // Re-run the objective with observed bits in place of predictions.
+        // Re-run the objective with observed bits in place of
+        // predictions, both sides priced at the participation EMA.
         let budget = self.plan.budget_bits_per_client;
         let best = (0..self.plan.candidates.len())
             .filter(|&i| self.effective_bits(i) <= budget)
             .min_by(|&a, &b| {
-                self.plan.candidates[a]
-                    .predicted_mse
-                    .total_cmp(&self.plan.candidates[b].predicted_mse)
+                self.effective_mse(a)
+                    .total_cmp(&self.effective_mse(b))
                     .then(self.effective_bits(a).total_cmp(&self.effective_bits(b)))
                     .then(self.plan.candidates[a].spec.cmp(&self.plan.candidates[b].spec))
             });
@@ -149,8 +207,8 @@ impl RateController {
         let switched_to = match best {
             Some(best) if best != self.active => {
                 let gain = 1.0
-                    - self.plan.candidates[best].predicted_mse
-                        / self.plan.candidates[self.active].predicted_mse.max(f64::MIN_POSITIVE);
+                    - self.effective_mse(best)
+                        / self.effective_mse(self.active).max(f64::MIN_POSITIVE);
                 if active_over_budget || gain > self.min_gain {
                     self.active = best;
                     Some(self.plan.candidates[best].spec.clone())
@@ -166,6 +224,7 @@ impl RateController {
             bits_per_client: realized,
             mse_proxy: proxy,
             switched_to: switched_to.clone(),
+            participation: p_hat,
         });
         switched_to
     }
@@ -214,6 +273,29 @@ mod tests {
         for r in 1..4 {
             assert!(ctl.observe(r, ok, 32, &est).is_none(), "flapped at round {r}");
         }
+    }
+
+    #[test]
+    fn participation_ema_tracks_partial_rounds() {
+        let mut ctl = RateController::new(plan(4.0)).unwrap();
+        let est = vec![0.3f32; 8];
+        let bits = ctl.active_spec().bits_per_client;
+        assert_eq!(ctl.participation(), 1.0);
+        // Half the clients answered: realized bits halve with them
+        // (Lemma 8's cost side), and the EMA's first observation
+        // replaces the default outright.
+        ctl.observe_with_participation(0, (bits * 0.5 * 32.0) as u64, 32, &est, 0.5);
+        assert!((ctl.participation() - 0.5).abs() < 1e-12);
+        // A recovered full round blends halfway back (α = 1/2).
+        let bits = ctl.active_spec().bits_per_client;
+        ctl.observe_with_participation(1, (bits * 32.0) as u64, 32, &est, 1.0);
+        assert!((ctl.participation() - 0.75).abs() < 1e-12);
+        assert_eq!(ctl.history()[0].participation, 0.5);
+        assert_eq!(ctl.history()[1].participation, 1.0);
+        // The plain observe path is the p̂ = 1 special case.
+        let bits = ctl.active_spec().bits_per_client;
+        ctl.observe(2, (bits * 32.0) as u64, 32, &est);
+        assert_eq!(ctl.history()[2].participation, 1.0);
     }
 
     #[test]

@@ -137,6 +137,34 @@ pub fn predicted_mse(cfg: &ProtocolConfig, n: usize, avg_norm_sq: f64) -> f64 {
     }
 }
 
+/// Lemma 8's sampling wrapper applied to an already-computed MSE
+/// prediction, at an *observed* participation rate p̂ rather than a
+/// planned sampling rate: `base/p̂ + (1−p̂)/(n·p̂) · avg_norm_sq`.
+/// This is what a partial round (`coordinator::leader`,
+/// `BarrierPolicy::Partial`) does to any protocol's error — churn is
+/// client sampling the scheduler didn't ask for — so the controller
+/// re-ranks its frontier by pushing every candidate's full-participation
+/// prediction through this at the EMA of observed p̂.
+pub fn mse_with_participation(base: f64, n: usize, avg_norm_sq: f64, p_hat: f64) -> f64 {
+    if p_hat >= 1.0 || p_hat <= 0.0 {
+        return base;
+    }
+    let nf = (n as f64).max(1.0);
+    base / p_hat + (1.0 - p_hat) / (nf * p_hat) * avg_norm_sq
+}
+
+/// [`predicted_mse`] composed with [`mse_with_participation`]: the
+/// analytic worst-case MSE of `cfg` when only a p̂ fraction of the `n`
+/// enrolled clients answers each round.
+pub fn predicted_mse_at_participation(
+    cfg: &ProtocolConfig,
+    n: usize,
+    avg_norm_sq: f64,
+    p_hat: f64,
+) -> f64 {
+    mse_with_participation(predicted_mse(cfg, n, avg_norm_sq), n, avg_norm_sq, p_hat)
+}
+
 /// Per-spec multiplicative corrections fitted by [`Calibration::fit`]:
 /// `calibrated = analytic × factor`. Both MSE and its analytic bound
 /// scale exactly as 1/n, and the bit formulas are per-client, so a

@@ -1,0 +1,87 @@
+//! The fault-injecting swarm client: protocol-correct [`Worker`]
+//! encodes driven through [`Swarm::spawn_actions`], with the
+//! [`FaultPlan`] deciding per `(round, client)` whether to answer,
+//! stay silent, hang up, or straggle.
+//!
+//! One driver thread hosts the whole population (the swarm design), so
+//! an injected straggler delay blocks that thread — which is exactly
+//! the observable effect wanted: the *entire* cohort behind that swarm
+//! arrives late, racing the parent's barrier deadline. Delays are
+//! bounded by the plan's `straggle_max`, so a scenario's wall clock
+//! stays bounded too.
+
+use std::net::SocketAddr;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::swarm::{Swarm, SwarmAction};
+use crate::coordinator::transport::{Envelope, Message};
+use crate::coordinator::worker::{mean_update, Worker};
+use crate::protocol::{EncodeScratch, Protocol};
+
+use super::data::{client_vector, DataPlan};
+use super::plan::{FaultAction, FaultPlan};
+
+/// Spawn the swarm for clients `[base_id, base_id + n)` against `addr`,
+/// each holding its scenario data vector and answering rounds through
+/// the real `Worker` encode path under `faults`. `SpecChange` rebuilds
+/// every client's protocol (the tag-5 contract); `Shutdown` closes the
+/// connection (handled by the swarm driver itself).
+#[allow(clippy::too_many_arguments)]
+pub fn spawn_fault_swarm(
+    addr: SocketAddr,
+    base_id: u64,
+    n: usize,
+    protocol: Arc<dyn Protocol>,
+    seed: u64,
+    dim: usize,
+    faults: FaultPlan,
+    data: DataPlan,
+) -> Result<Swarm> {
+    // Per-client worker state, indexed by swarm slot (client id is
+    // base_id + slot). Shard = the client's one scenario vector; the
+    // mean update transmits it with weight 1 — plain distributed mean
+    // estimation, the paper's core task.
+    let mut workers: Vec<Worker> = (0..n as u64)
+        .map(|i| Worker {
+            client_id: base_id + i,
+            shard: vec![client_vector(data, seed, base_id + i, dim)],
+            protocol: protocol.clone(),
+            update: mean_update(),
+            seed,
+        })
+        .collect();
+    let mut scratch = EncodeScratch::default();
+    Swarm::spawn_actions(addr, n, 1, move |slot, env: &Envelope| {
+        let worker = &mut workers[slot];
+        match &env.msg {
+            Message::RoundStart { round, dim, payload } => {
+                let verdict = faults.decide(*round, worker.client_id);
+                if verdict == FaultAction::Drop {
+                    return SwarmAction::Silent;
+                }
+                if verdict == FaultAction::Disconnect {
+                    return SwarmAction::Hangup;
+                }
+                if let FaultAction::Straggle(delay) = verdict {
+                    // Serializes the driver thread on purpose: the
+                    // whole cohort behind this swarm straggles.
+                    std::thread::sleep(delay);
+                }
+                match worker.step_for(env.session, *round, *dim, payload, &mut scratch) {
+                    Ok(reply) => SwarmAction::Reply(Envelope { session: env.session, msg: reply }),
+                    // An encode failure is a scenario bug; hanging up
+                    // surfaces it at the parent instead of deadlocking.
+                    Err(_) => SwarmAction::Hangup,
+                }
+            }
+            Message::SpecChange { spec, .. } => match worker.apply_spec(spec) {
+                Ok(()) => SwarmAction::Silent,
+                Err(_) => SwarmAction::Hangup,
+            },
+            // Upstream-only (or driver-handled) messages: ignore.
+            _ => SwarmAction::Silent,
+        }
+    })
+}

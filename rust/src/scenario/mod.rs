@@ -1,0 +1,70 @@
+//! Scenario engine: deterministic churn, stragglers, and Lemma 8
+//! partial rounds over the **real** stack (`dme simulate`).
+//!
+//! The paper's analysis assumes every client reports every round. Real
+//! federated cohorts do not: clients drop, disconnect, straggle, and
+//! whole aggregation subtrees flap. This module turns those failure
+//! modes into *replayable experiments* — no mocks, no simulated
+//! transport: scenarios run swarm TCP clients against the same
+//! `HubBinding` → [`Leader`](crate::coordinator::Leader) /
+//! [`Aggregator`](crate::coordinator::Aggregator) machinery `dme serve`
+//! deploys, with faults injected at the client edge.
+//!
+//! # The pieces
+//!
+//! * [`plan`] — the seeded fault plan: a pure function
+//!   `(round, client) → {Answer, Drop, Disconnect, Straggle(delay)}`
+//!   parsed from the grammar `drop=P,disconnect=P,straggle=P:MSms,
+//!   flap=K`. Same seed, same churn, bit for bit.
+//! * [`data`] — deterministic client populations: `iid`, `shifted`,
+//!   `scaled`, `clustered` — the non-IID shapes that make losing
+//!   clients *cost* something.
+//! * [`inject`] (Linux) — the fault-injecting swarm: protocol-correct
+//!   `Worker` encodes driven through `Swarm::spawn_actions`, with the
+//!   plan's verdict deciding answer / silence / hangup / delay.
+//! * [`run`] (Linux) — the runner: builds flat or depth-2 trees with
+//!   [`BarrierPolicy::Partial`](crate::coordinator::BarrierPolicy) at
+//!   every barrier node, and emits one trajectory row per round.
+//!
+//! # Lemma 8, operationally
+//!
+//! When a partial-round barrier finalizes from the surviving set `S`,
+//! the estimate is the Lemma 8 sampled-mean estimator instantiated at
+//! the *observed* rate p̂ = |S|/n (the exact fold divides by the
+//! per-slot contributor count, which **is** n·p̂ = |S| — see
+//! `coordinator::leader`'s module docs). Each trajectory row therefore
+//! carries both the measured squared error and the calibrated Lemma 8
+//! prediction at that round's p̂
+//! (`rate::model::mse_with_participation`):
+//!
+//! ```text
+//! E(π_p̂) = E(π)/p̂ + (1 − p̂)/(n·p̂) · avg‖X‖²      (PAPER.md, Lemma 8)
+//! ```
+//!
+//! so a scenario is simultaneously a robustness test (every round
+//! completes) and a conformance test (the error stays within
+//! [`run::MSE_SLACK`] of the theory).
+//!
+//! # Determinism
+//!
+//! Everything a scenario draws — fault coins, client vectors, protocol
+//! randomness — is keyed by the one `--seed`, which is why `dme
+//! simulate` refuses to run without it. Trajectory `rows` replay bit
+//! for bit for drop/disconnect/flap plans; straggler survival races the
+//! real barrier deadline by design (see [`run`]'s module docs), and
+//! per-round wall clock is reported outside the replay contract.
+
+pub mod data;
+#[cfg(target_os = "linux")]
+pub mod inject;
+pub mod plan;
+#[cfg(target_os = "linux")]
+pub mod run;
+
+pub use data::DataPlan;
+pub use plan::{FaultAction, FaultPlan};
+#[cfg(target_os = "linux")]
+pub use run::{
+    builtin_matrix, run_matrix, run_scenario, scenarios_json, write_scenarios_json, ScenarioSpec,
+    Trajectory, TrajectoryRow,
+};

@@ -1,0 +1,248 @@
+//! Deterministic, seeded fault plans: who misbehaves, how, and when.
+//!
+//! A [`FaultPlan`] is a pure function `(round, client) → FaultAction`
+//! derived from the experiment seed alone — no wall clock, no OS
+//! entropy — so the same `--seed` replays the same churn bit for bit.
+//! The grammar is a comma-separated list of clauses:
+//!
+//! ```text
+//! drop=0.2                 # per-round dropout probability
+//! disconnect=0.05          # per-round mid-round hangup probability
+//! straggle=0.1:80ms        # straggler probability : max injected delay
+//! flap=3                   # every 3rd round one whole aggregator span
+//!                          # goes dark (BarrierTimeout skip + recovery)
+//! ```
+//!
+//! e.g. `--faults drop=0.2,straggle=0.1:80ms,flap=3`.
+
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::rng::{self, Pcg64};
+
+/// Domain-separation tag for fault coins (vs data/protocol streams).
+const FAULT_TAG: u64 = 0xFA17_7C01;
+
+/// What one client does with one round's `RoundStart`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Encode and upload normally.
+    Answer,
+    /// Stay silent this round (the connection survives): the barrier
+    /// must time out on this client — per-round churn.
+    Drop,
+    /// Hang up the connection: a mid-round disconnect. Permanent for
+    /// the scenario's swarm clients (no reconnect), so disconnects
+    /// accumulate across rounds.
+    Disconnect,
+    /// Sleep this long, then answer — a straggler racing the barrier
+    /// deadline. Bounded by the plan's `straggle_max`.
+    Straggle(Duration),
+}
+
+/// A seeded fault plan over `(round, client)`.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    /// Per-round probability a client stays silent.
+    pub dropout: f64,
+    /// Per-round probability a client hangs up instead of answering.
+    pub disconnect: f64,
+    /// Per-round probability a client straggles.
+    pub straggle: f64,
+    /// Upper bound of the injected straggler delay; the realized delay
+    /// is uniform in `[straggle_max/2, straggle_max)`.
+    pub straggle_max: Duration,
+    /// Every `flap_every`-th round, one whole aggregator span goes dark
+    /// (rotating through the spans); 0 disables flapping.
+    pub flap_every: u64,
+    /// Seed for the fault coins (the scenario's `--seed`).
+    pub seed: u64,
+    /// The aggregator spans a flap can black out, set by the runner
+    /// from the topology (empty = flat, flapping has no spans to kill).
+    flap_spans: Vec<(u64, u64)>,
+}
+
+impl FaultPlan {
+    /// A plan with no faults at all (every client answers).
+    pub fn none(seed: u64) -> Self {
+        FaultPlan {
+            dropout: 0.0,
+            disconnect: 0.0,
+            straggle: 0.0,
+            straggle_max: Duration::ZERO,
+            flap_every: 0,
+            seed,
+            flap_spans: Vec::new(),
+        }
+    }
+
+    /// Parse the fault-plan grammar (see the module docs).
+    pub fn parse(spec: &str, seed: u64) -> Result<Self> {
+        let mut plan = FaultPlan::none(seed);
+        for clause in spec.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            let (key, value) = clause
+                .split_once('=')
+                .with_context(|| format!("fault clause `{clause}` is not key=value"))?;
+            match key {
+                "drop" => plan.dropout = parse_prob(value, "drop")?,
+                "disconnect" => plan.disconnect = parse_prob(value, "disconnect")?,
+                "straggle" => {
+                    let (p, delay) = value.split_once(':').with_context(|| {
+                        format!("straggle clause `{value}` wants prob:delay, e.g. 0.1:80ms")
+                    })?;
+                    plan.straggle = parse_prob(p, "straggle")?;
+                    plan.straggle_max = parse_millis(delay)?;
+                }
+                "flap" => {
+                    plan.flap_every = value
+                        .parse()
+                        .with_context(|| format!("flap period `{value}` is not an integer"))?;
+                    ensure!(plan.flap_every > 0, "flap period must be >= 1");
+                }
+                other => bail!(
+                    "unknown fault clause `{other}` (expected drop, disconnect, straggle, flap)"
+                ),
+            }
+        }
+        ensure!(
+            plan.dropout + plan.disconnect + plan.straggle <= 1.0 + 1e-9,
+            "fault probabilities sum to {:.3} > 1",
+            plan.dropout + plan.disconnect + plan.straggle
+        );
+        Ok(plan)
+    }
+
+    /// Tell the plan which aggregator spans exist, so `flap=K` has
+    /// something to black out (the runner calls this from the topology).
+    pub fn with_flap_spans(mut self, spans: Vec<(u64, u64)>) -> Self {
+        self.flap_spans = spans;
+        self
+    }
+
+    /// The deterministic verdict for `(round, client)`. Coins are drawn
+    /// in a fixed order (disconnect, drop, straggle — disjoint slices
+    /// of one uniform draw) from a stream keyed by
+    /// `(seed, FAULT_TAG, round, client)`, so verdicts are independent
+    /// across clients and rounds yet bit-reproducible for a seed.
+    pub fn decide(&self, round: u64, client: u64) -> FaultAction {
+        // A flapped span drops wholesale — its aggregator sees an empty
+        // barrier, takes the BarrierTimeout skip, and recovers next
+        // round. Spans rotate so every aggregator gets its turn.
+        if self.flap_every > 0 && !self.flap_spans.is_empty() && round % self.flap_every == 0 {
+            let idx = (round / self.flap_every) as usize % self.flap_spans.len();
+            let (lo, hi) = self.flap_spans[idx];
+            if (lo..hi).contains(&client) {
+                return FaultAction::Drop;
+            }
+        }
+        let mut coins = Pcg64::new(rng::mix(&[self.seed, FAULT_TAG, round, client]));
+        let u = coins.next_f64();
+        if u < self.disconnect {
+            return FaultAction::Disconnect;
+        }
+        if u < self.disconnect + self.dropout {
+            return FaultAction::Drop;
+        }
+        if u < self.disconnect + self.dropout + self.straggle {
+            // Uniform in [max/2, max): long enough to matter, bounded
+            // so the scenario's wall clock stays bounded too.
+            let frac = 0.5 + 0.5 * coins.next_f64();
+            return FaultAction::Straggle(self.straggle_max.mul_f64(frac));
+        }
+        FaultAction::Answer
+    }
+}
+
+fn parse_prob(s: &str, what: &str) -> Result<f64> {
+    let p: f64 =
+        s.parse().with_context(|| format!("{what} probability `{s}` is not a number"))?;
+    ensure!((0.0..=1.0).contains(&p), "{what} probability {p} outside [0, 1]");
+    Ok(p)
+}
+
+fn parse_millis(s: &str) -> Result<Duration> {
+    let digits = s.strip_suffix("ms").unwrap_or(s);
+    let ms: u64 = digits
+        .parse()
+        .with_context(|| format!("delay `{s}` is not of the form <millis>ms"))?;
+    Ok(Duration::from_millis(ms))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grammar_round_trips() {
+        let p = FaultPlan::parse("drop=0.2, disconnect=0.05,straggle=0.1:80ms,flap=3", 7).unwrap();
+        assert_eq!(p.dropout, 0.2);
+        assert_eq!(p.disconnect, 0.05);
+        assert_eq!(p.straggle, 0.1);
+        assert_eq!(p.straggle_max, Duration::from_millis(80));
+        assert_eq!(p.flap_every, 3);
+        assert_eq!(p.seed, 7);
+    }
+
+    #[test]
+    fn grammar_rejects_nonsense() {
+        assert!(FaultPlan::parse("drop=1.5", 0).is_err());
+        assert!(FaultPlan::parse("straggle=0.1", 0).is_err());
+        assert!(FaultPlan::parse("flap=0", 0).is_err());
+        assert!(FaultPlan::parse("warp=0.1", 0).is_err());
+        assert!(FaultPlan::parse("drop=0.6,disconnect=0.6", 0).is_err());
+    }
+
+    #[test]
+    fn decisions_are_seed_deterministic() {
+        let p = FaultPlan::parse("drop=0.3,straggle=0.2:40ms", 42).unwrap();
+        let q = FaultPlan::parse("drop=0.3,straggle=0.2:40ms", 42).unwrap();
+        let r = FaultPlan::parse("drop=0.3,straggle=0.2:40ms", 43).unwrap();
+        let mut differs = false;
+        for round in 0..8 {
+            for client in 0..64 {
+                assert_eq!(p.decide(round, client), q.decide(round, client));
+                differs |= p.decide(round, client) != r.decide(round, client);
+            }
+        }
+        assert!(differs, "seed must change the plan");
+    }
+
+    #[test]
+    fn dropout_rate_is_roughly_honored() {
+        let p = FaultPlan::parse("drop=0.2", 11).unwrap();
+        let n = 2000u64;
+        let dropped = (0..n).filter(|&c| p.decide(0, c) == FaultAction::Drop).count();
+        let rate = dropped as f64 / n as f64;
+        assert!((rate - 0.2).abs() < 0.05, "dropout rate {rate} far from 0.2");
+    }
+
+    #[test]
+    fn flap_blacks_out_whole_spans_in_rotation() {
+        let p = FaultPlan::parse("flap=2", 5)
+            .unwrap()
+            .with_flap_spans(vec![(0, 8), (8, 16)]);
+        // Round 0 flaps span 0, round 2 flaps span 1, odd rounds none.
+        for c in 0..8 {
+            assert_eq!(p.decide(0, c), FaultAction::Drop);
+            assert_eq!(p.decide(1, c), FaultAction::Answer);
+        }
+        for c in 8..16 {
+            assert_eq!(p.decide(0, c), FaultAction::Answer);
+            assert_eq!(p.decide(2, c), FaultAction::Drop);
+        }
+    }
+
+    #[test]
+    fn straggle_delays_stay_bounded() {
+        let p = FaultPlan::parse("straggle=1.0:100ms", 3).unwrap();
+        for c in 0..200 {
+            match p.decide(0, c) {
+                FaultAction::Straggle(d) => {
+                    assert!(d >= Duration::from_millis(50) && d < Duration::from_millis(100));
+                }
+                other => panic!("client {c}: expected a straggle, got {other:?}"),
+            }
+        }
+    }
+}

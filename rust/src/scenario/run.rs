@@ -1,0 +1,544 @@
+//! The scenario runner: real transports, real barriers, injected
+//! faults, and a per-round trajectory against the Lemma 8 prediction.
+//!
+//! A [`ScenarioSpec`] names a topology (flat, or depth-2 with `fanout`
+//! aggregators over contiguous client spans), a TCP transport, a
+//! protocol spec, a [`FaultPlan`], and a [`DataPlan`] — all keyed by
+//! one seed. [`run_scenario`] stands the tree up exactly the way
+//! `dme serve`/`dme aggregate` would (swarm clients → `HubBinding` →
+//! `Leader`/`Aggregator`), runs it with
+//! [`BarrierPolicy::Partial`] at every barrier node, and records one
+//! [`TrajectoryRow`] per round: observed participation p̂, squared
+//! error of the partial-round estimate against the *full* population's
+//! true mean, and the calibrated Lemma 8 prediction at that p̂
+//! ([`model::mse_with_participation`]).
+//!
+//! # Determinism contract
+//!
+//! `rows` replays bit for bit for a given spec + seed when the fault
+//! plan is made of `drop`/`disconnect`/`flap` clauses: the survivor set
+//! is a pure function of the seed, and the exact fold makes the
+//! estimate independent of arrival order and decode-thread count.
+//! `straggle` clauses intentionally race the barrier deadline, so a
+//! straggler's survival is a wall-clock fact, not a seeded one — keep
+//! `straggle_max` well under the round timeout when replay matters.
+//! `wall_ms` is measured wall clock and is *never* part of the replay
+//! contract, which is why it lives beside `rows`, not inside them.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::coordinator::transport::{HubBinding, TcpEndpoint, Transport};
+use crate::coordinator::{Aggregator, BarrierPolicy, ChildKey, Leader};
+use crate::protocol::config::ProtocolConfig;
+use crate::rate::model::{self, Calibration};
+use crate::stats;
+
+use super::data::{self, DataPlan};
+use super::inject::spawn_fault_swarm;
+use super::plan::FaultPlan;
+
+/// Slack factor for [`Trajectory::check_slack`]: the mean measured MSE
+/// across a scenario's rounds must stay within this multiple of the
+/// mean calibrated Lemma 8 prediction. The predictions are upper
+/// bounds, so measured values usually sit *below* 1x; the slack absorbs
+/// the chi-square noise of averaging a handful of rounds.
+pub const MSE_SLACK: f64 = 3.0;
+
+/// Env var holding a hard wall-clock budget (milliseconds) for a whole
+/// [`run_matrix`] call — the CI leg sets it so a hung scenario fails
+/// loudly instead of eating the job's timeout.
+pub const BUDGET_ENV: &str = "DME_SCENARIO_BUDGET_MS";
+
+/// Everything one scenario needs, all derived from CLI flags + seed.
+#[derive(Clone, Debug)]
+pub struct ScenarioSpec {
+    /// Scenario name (trajectory key in the JSON output).
+    pub name: String,
+    /// Protocol spec string, e.g. `rotated:k=16`.
+    pub protocol: String,
+    pub n_clients: usize,
+    pub dim: usize,
+    /// 0 or 1 = flat (clients connect straight to the leader);
+    /// otherwise the number of depth-2 aggregators over uniform
+    /// contiguous spans.
+    pub fanout: usize,
+    pub rounds: u64,
+    /// Barrier deadline at the tier closest to the clients. In depth-2
+    /// mode the leader waits `2 * timeout + 250ms` so a child tier's
+    /// partial finalization (or flap skip) resolves before the root
+    /// gives up on that span.
+    pub timeout: Duration,
+    pub transport: Transport,
+    pub decode_threads: usize,
+    pub faults: FaultPlan,
+    pub data: DataPlan,
+    pub seed: u64,
+}
+
+/// One round of a scenario: the deterministic part of the trajectory.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrajectoryRow {
+    pub round: u64,
+    /// Observed participation p̂ = |S| / n for this round.
+    pub participation: f64,
+    /// Late same-round duplicates dropped by the barrier.
+    pub duplicate_uploads: u64,
+    /// Squared error of the (p̂-rescaled) estimate against the full
+    /// population's true mean.
+    pub sq_error: f64,
+    /// Calibrated Lemma 8 prediction at the observed p̂.
+    pub predicted_mse: f64,
+    /// Exact uplink payload bits the surviving clients spent.
+    pub uplink_bits: u64,
+}
+
+/// A finished scenario: config echo + per-round rows + wall clock.
+#[derive(Clone, Debug)]
+pub struct Trajectory {
+    pub name: String,
+    pub protocol: String,
+    pub seed: u64,
+    pub n_clients: usize,
+    pub dim: usize,
+    pub fanout: usize,
+    pub transport: String,
+    pub data: String,
+    pub faults: String,
+    pub slack: f64,
+    pub rows: Vec<TrajectoryRow>,
+    /// Per-round wall clock (ms). Measured, excluded from the replay
+    /// determinism contract — deliberately kept out of `rows`.
+    pub wall_ms: Vec<f64>,
+}
+
+impl Trajectory {
+    /// Mean measured squared error over rounds (NaN rows excluded).
+    pub fn mean_measured_mse(&self) -> f64 {
+        mean_of(self.rows.iter().map(|r| r.sq_error))
+    }
+
+    /// Mean calibrated Lemma 8 prediction over rounds.
+    pub fn mean_predicted_mse(&self) -> f64 {
+        mean_of(self.rows.iter().map(|r| r.predicted_mse))
+    }
+
+    /// Mean observed participation over rounds.
+    pub fn mean_participation(&self) -> f64 {
+        mean_of(self.rows.iter().map(|r| r.participation))
+    }
+
+    /// Fail if the measured MSE blew past `slack` times the calibrated
+    /// Lemma 8 prediction. Lossless specs predict ~0 and are exempt —
+    /// there is no meaningful bound to hold them to.
+    pub fn check_slack(&self) -> Result<()> {
+        let measured = self.mean_measured_mse();
+        let predicted = self.mean_predicted_mse();
+        if !measured.is_finite() || !predicted.is_finite() || predicted < 1e-12 {
+            return Ok(());
+        }
+        ensure!(
+            measured <= self.slack * predicted,
+            "scenario `{}`: measured MSE {measured:.3e} exceeds {}x the calibrated \
+             Lemma 8 prediction {predicted:.3e}",
+            self.name,
+            self.slack
+        );
+        Ok(())
+    }
+}
+
+fn mean_of(vals: impl Iterator<Item = f64>) -> f64 {
+    let mut sum = 0.0;
+    let mut n = 0usize;
+    for v in vals {
+        if v.is_finite() {
+            sum += v;
+            n += 1;
+        }
+    }
+    if n == 0 {
+        f64::NAN
+    } else {
+        sum / n as f64
+    }
+}
+
+/// Run one scenario over the real stack and return its trajectory.
+pub fn run_scenario(spec: &ScenarioSpec) -> Result<Trajectory> {
+    ensure!(spec.n_clients >= 1, "scenario `{}` needs at least one client", spec.name);
+    ensure!(spec.rounds >= 1, "scenario `{}` needs at least one round", spec.name);
+    ensure!(
+        spec.fanout <= spec.n_clients,
+        "scenario `{}`: fanout {} exceeds {} clients",
+        spec.name,
+        spec.fanout,
+        spec.n_clients
+    );
+    let cfg = ProtocolConfig::parse(&spec.protocol, spec.dim)
+        .with_context(|| format!("scenario `{}` protocol spec", spec.name))?;
+    let protocol = cfg.build()?;
+
+    // The measurement frame: the same deterministic population the
+    // swarm clients hold, so `sq_error` is against the true full-cohort
+    // mean — partial rounds are charged for the clients they lost.
+    let population = data::population(spec.data, spec.seed, spec.n_clients, spec.dim);
+    let truth = stats::true_mean(&population);
+    let avg_sq = stats::avg_norm_sq(&population);
+    let mut cal = Calibration::new(spec.seed);
+    cal.fit(&cfg)
+        .with_context(|| format!("scenario `{}` calibration", spec.name))?;
+    let base_pred = cal.predicted_mse(&cfg, spec.n_clients, avg_sq);
+
+    // Stand the tree up. `agg_threads` keeps the depth-2 plumbing alive
+    // until shutdown; `swarms` are joined last, after every Shutdown
+    // has propagated.
+    let n = spec.n_clients;
+    let mut swarms = Vec::new();
+    let mut agg_threads = Vec::new();
+    let mut leader = if spec.fanout <= 1 {
+        let binding = HubBinding::bind(spec.transport, "127.0.0.1:0")?;
+        let addr = binding.local_addr()?;
+        swarms.push(spawn_fault_swarm(
+            addr,
+            0,
+            n,
+            protocol.clone(),
+            spec.seed,
+            spec.dim,
+            spec.faults.clone(),
+            spec.data,
+        )?);
+        let hub = binding.accept(n)?;
+        let expected = (0..n as u64).map(ChildKey::Client).collect();
+        Leader::new(protocol.clone(), hub, spec.seed)
+            .with_decode_threads(spec.decode_threads)
+            .with_round_timeout(spec.timeout)
+            .with_expected_children(expected)
+            .with_barrier_policy(BarrierPolicy::Partial)
+    } else {
+        ensure!(
+            n % spec.fanout == 0,
+            "scenario `{}`: {} clients do not split into {} uniform spans",
+            spec.name,
+            n,
+            spec.fanout
+        );
+        let span_len = n / spec.fanout;
+        let spans: Vec<(u64, u64)> = (0..spec.fanout)
+            .map(|i| ((i * span_len) as u64, ((i + 1) * span_len) as u64))
+            .collect();
+        // Flap faults black out whole spans; the plan needs to know the
+        // topology to aim at one.
+        let faults = spec.faults.clone().with_flap_spans(spans.clone());
+        let leader_binding = HubBinding::bind(spec.transport, "127.0.0.1:0")?;
+        let leader_addr = leader_binding.local_addr()?.to_string();
+        for (agg_id, &(lo, hi)) in spans.iter().enumerate() {
+            let child_binding = HubBinding::bind(spec.transport, "127.0.0.1:0")?;
+            let child_addr = child_binding.local_addr()?;
+            swarms.push(spawn_fault_swarm(
+                child_addr,
+                lo,
+                (hi - lo) as usize,
+                protocol.clone(),
+                spec.seed,
+                spec.dim,
+                faults.clone(),
+                spec.data,
+            )?);
+            let proto = protocol.clone();
+            let up_addr = leader_addr.clone();
+            let (seed, threads, agg_timeout) = (spec.seed, spec.decode_threads, spec.timeout);
+            let handle = std::thread::Builder::new()
+                .name(format!("dme-scenario-agg{agg_id}"))
+                .spawn(move || -> Result<()> {
+                    let hub = child_binding.accept((hi - lo) as usize)?;
+                    let mut up = TcpEndpoint::connect(&up_addr)?;
+                    Aggregator::new(proto, seed, agg_id as u64, (lo, hi))
+                        .with_level(0)
+                        .with_decode_threads(threads)
+                        .with_round_timeout(agg_timeout)
+                        .with_barrier_policy(BarrierPolicy::Partial)
+                        .run(hub, &mut up)?;
+                    Ok(())
+                })
+                .context("spawning scenario aggregator")?;
+            agg_threads.push(handle);
+        }
+        let hub = leader_binding.accept(spec.fanout)?;
+        let expected = spans
+            .iter()
+            .enumerate()
+            .map(|(i, &span)| ChildKey::Aggregator { id: i as u64, span })
+            .collect();
+        // The root waits out a full child-tier partial finalization (or
+        // flap skip) plus margin before declaring a span gone.
+        Leader::new(protocol.clone(), hub, spec.seed)
+            .with_decode_threads(spec.decode_threads)
+            .with_round_timeout(spec.timeout * 2 + Duration::from_millis(250))
+            .with_expected_children(expected)
+            .with_barrier_policy(BarrierPolicy::Partial)
+    };
+
+    let mut rows = Vec::with_capacity(spec.rounds as usize);
+    let mut wall_ms = Vec::with_capacity(spec.rounds as usize);
+    for r in 0..spec.rounds {
+        let t0 = Instant::now();
+        let out = leader
+            .round(r, spec.dim as u32, &[])
+            .with_context(|| format!("scenario `{}` round {r}", spec.name))?;
+        wall_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        let m = leader.metrics().rounds.last().expect("round() pushes metrics");
+        let sq_error = match out.means.first() {
+            Some(est) => stats::sq_error(est, &truth),
+            None => f64::NAN,
+        };
+        rows.push(TrajectoryRow {
+            round: r,
+            participation: m.participation,
+            duplicate_uploads: m.duplicate_uploads,
+            sq_error,
+            predicted_mse: model::mse_with_participation(
+                base_pred,
+                spec.n_clients,
+                avg_sq,
+                m.participation,
+            ),
+            uplink_bits: m.uplink_bits,
+        });
+    }
+
+    // Teardown, leniently: disconnect faults leave dead connections the
+    // shutdown broadcast will trip over, but every hub stages Shutdown
+    // to its live children before surfacing the dead ones — so the live
+    // tree still winds down and the joins below terminate.
+    if let Err(e) = leader.shutdown() {
+        eprintln!("[scenario {}] shutdown saw departed children: {e:#}", spec.name);
+    }
+    for handle in agg_threads {
+        match handle.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => eprintln!("[scenario {}] aggregator exited early: {e:#}", spec.name),
+            Err(_) => eprintln!("[scenario {}] aggregator thread panicked", spec.name),
+        }
+    }
+    for swarm in swarms {
+        if let Err(e) = swarm.join() {
+            eprintln!("[scenario {}] swarm: {e:#}", spec.name);
+        }
+    }
+
+    Ok(Trajectory {
+        name: spec.name.clone(),
+        protocol: spec.protocol.clone(),
+        seed: spec.seed,
+        n_clients: spec.n_clients,
+        dim: spec.dim,
+        fanout: spec.fanout,
+        transport: spec.transport.to_string(),
+        data: spec.data.name().to_string(),
+        faults: format!(
+            "drop={},disconnect={},straggle={}:{}ms,flap={}",
+            spec.faults.dropout,
+            spec.faults.disconnect,
+            spec.faults.straggle,
+            spec.faults.straggle_max.as_millis(),
+            spec.faults.flap_every,
+        ),
+        slack: MSE_SLACK,
+        rows,
+        wall_ms,
+    })
+}
+
+/// Run a list of scenarios under the optional [`BUDGET_ENV`] wall-clock
+/// budget, failing loudly (instead of silently truncating) if the
+/// budget runs out before the matrix does.
+pub fn run_matrix(specs: &[ScenarioSpec]) -> Result<Vec<Trajectory>> {
+    let budget = match std::env::var(BUDGET_ENV) {
+        Ok(v) => Some(Duration::from_millis(
+            v.trim().parse().with_context(|| format!("{BUDGET_ENV}=`{v}` is not milliseconds"))?,
+        )),
+        Err(_) => None,
+    };
+    let t0 = Instant::now();
+    let mut out = Vec::with_capacity(specs.len());
+    for spec in specs {
+        if let Some(b) = budget {
+            ensure!(
+                t0.elapsed() < b,
+                "scenario budget {BUDGET_ENV}={}ms exhausted after {} of {} scenarios",
+                b.as_millis(),
+                out.len(),
+                specs.len()
+            );
+        }
+        out.push(run_scenario(spec)?);
+    }
+    Ok(out)
+}
+
+/// The built-in churn + straggler + flap + non-IID matrix `dme simulate
+/// --matrix` (and the CI scenario leg) runs. Small on purpose: every
+/// faulty round costs a barrier timeout, so wall clock scales with
+/// `rounds * timeout`, not with work.
+pub fn builtin_matrix(seed: u64) -> Result<Vec<ScenarioSpec>> {
+    struct Row {
+        name: &'static str,
+        protocol: &'static str,
+        n_clients: usize,
+        fanout: usize,
+        rounds: u64,
+        timeout_ms: u64,
+        transport: Transport,
+        decode_threads: usize,
+        faults: &'static str,
+        data: &'static str,
+    }
+    let rows = [
+        Row {
+            name: "churn20-depth2-reactor",
+            protocol: "rotated:k=16",
+            n_clients: 24,
+            fanout: 3,
+            rounds: 4,
+            timeout_ms: 200,
+            transport: Transport::Reactor,
+            decode_threads: 2,
+            faults: "drop=0.2",
+            data: "iid",
+        },
+        Row {
+            name: "stragglers-flat-threads",
+            protocol: "rotated:k=16",
+            n_clients: 16,
+            fanout: 0,
+            rounds: 3,
+            timeout_ms: 400,
+            transport: Transport::Threads,
+            decode_threads: 1,
+            faults: "straggle=0.3:60ms",
+            data: "iid",
+        },
+        Row {
+            name: "flap-depth2-reactor",
+            protocol: "klevel:k=8",
+            n_clients: 24,
+            fanout: 3,
+            rounds: 4,
+            timeout_ms: 150,
+            transport: Transport::Reactor,
+            decode_threads: 4,
+            faults: "flap=2",
+            data: "iid",
+        },
+        Row {
+            name: "disconnect-flat-reactor",
+            protocol: "rotated:k=16",
+            n_clients: 16,
+            fanout: 0,
+            rounds: 3,
+            timeout_ms: 200,
+            transport: Transport::Reactor,
+            decode_threads: 2,
+            faults: "disconnect=0.1",
+            data: "scaled",
+        },
+        Row {
+            name: "noniid-churn-flat-threads",
+            protocol: "binary",
+            n_clients: 16,
+            fanout: 0,
+            rounds: 3,
+            timeout_ms: 200,
+            transport: Transport::Threads,
+            decode_threads: 1,
+            faults: "drop=0.25",
+            data: "clustered",
+        },
+    ];
+    rows.iter()
+        .map(|r| {
+            Ok(ScenarioSpec {
+                name: r.name.to_string(),
+                protocol: r.protocol.to_string(),
+                n_clients: r.n_clients,
+                dim: 64,
+                fanout: r.fanout,
+                rounds: r.rounds,
+                timeout: Duration::from_millis(r.timeout_ms),
+                transport: r.transport,
+                decode_threads: r.decode_threads,
+                faults: FaultPlan::parse(r.faults, seed)?,
+                data: DataPlan::parse(r.data)?,
+                seed,
+            })
+        })
+        .collect()
+}
+
+/// Serialize trajectories as the `BENCH_scenarios.json` document —
+/// hand-rolled like `bench::Bench::to_json`, stable field order, `{:?}`
+/// float formatting so identical runs produce identical bytes.
+pub fn scenarios_json(trajectories: &[Trajectory]) -> String {
+    let mut s = String::from("{\n  \"scenarios\": [\n");
+    for (i, t) in trajectories.iter().enumerate() {
+        s.push_str("    {\n");
+        s.push_str(&format!("      \"name\": \"{}\",\n", esc(&t.name)));
+        s.push_str(&format!("      \"protocol\": \"{}\",\n", esc(&t.protocol)));
+        s.push_str(&format!("      \"seed\": {},\n", t.seed));
+        s.push_str(&format!("      \"n_clients\": {},\n", t.n_clients));
+        s.push_str(&format!("      \"dim\": {},\n", t.dim));
+        s.push_str(&format!("      \"fanout\": {},\n", t.fanout));
+        s.push_str(&format!("      \"transport\": \"{}\",\n", esc(&t.transport)));
+        s.push_str(&format!("      \"data\": \"{}\",\n", esc(&t.data)));
+        s.push_str(&format!("      \"faults\": \"{}\",\n", esc(&t.faults)));
+        s.push_str(&format!("      \"slack\": {},\n", json_f64(t.slack)));
+        s.push_str(&format!(
+            "      \"mean_measured_mse\": {},\n",
+            json_f64(t.mean_measured_mse())
+        ));
+        s.push_str(&format!(
+            "      \"mean_predicted_mse\": {},\n",
+            json_f64(t.mean_predicted_mse())
+        ));
+        s.push_str("      \"rows\": [\n");
+        for (j, r) in t.rows.iter().enumerate() {
+            s.push_str(&format!(
+                "        {{\"round\": {}, \"participation\": {}, \"duplicate_uploads\": {}, \
+                 \"sq_error\": {}, \"predicted_mse\": {}, \"uplink_bits\": {}}}{}\n",
+                r.round,
+                json_f64(r.participation),
+                r.duplicate_uploads,
+                json_f64(r.sq_error),
+                json_f64(r.predicted_mse),
+                r.uplink_bits,
+                if j + 1 < t.rows.len() { "," } else { "" },
+            ));
+        }
+        s.push_str("      ],\n");
+        let walls: Vec<String> = t.wall_ms.iter().map(|&w| json_f64(w)).collect();
+        s.push_str(&format!("      \"wall_ms\": [{}]\n", walls.join(", ")));
+        s.push_str(&format!("    }}{}\n", if i + 1 < trajectories.len() { "," } else { "" }));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Write [`scenarios_json`] to `path`.
+pub fn write_scenarios_json(path: &str, trajectories: &[Trajectory]) -> Result<()> {
+    std::fs::write(path, scenarios_json(trajectories)).with_context(|| format!("writing {path}"))
+}
+
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn json_f64(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:?}")
+    } else {
+        "null".to_string()
+    }
+}

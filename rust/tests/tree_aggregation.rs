@@ -23,7 +23,7 @@ use std::time::Duration;
 
 use dme::coordinator::aggregator::{aggregate_tree, spawn_local_tree, Aggregator};
 use dme::coordinator::leader::{
-    aggregate_uploads_reference, ChildKey, Leader, RoundOutcome,
+    aggregate_uploads_reference, BarrierPolicy, ChildKey, Leader, RoundOutcome,
 };
 use dme::coordinator::topology::Topology;
 use dme::coordinator::transport::{
@@ -816,6 +816,59 @@ fn barrier_recovers_after_timeout_when_late_upload_arrives() {
     leader.shutdown().unwrap();
     h_slow.join().unwrap();
     h_live.join().unwrap().unwrap();
+}
+
+#[test]
+fn duplicate_same_round_upload_is_dropped_and_counted() {
+    // The same-round sibling of the stale-upload contract above: a
+    // client that answers the *current* round twice (a reconnect
+    // re-send, or a retry racing its own first answer) must be folded
+    // exactly once — the barrier drops the copy, counts it in
+    // `duplicate_uploads`, and the estimate stays bit-identical to the
+    // fold-each-client-once reference.
+    let d = 8;
+    let seed = 11;
+    let proto = ProtocolConfig::parse("klevel:k=4", d).unwrap().build().unwrap();
+    let (hub, eps) = LoopbackHub::new(3);
+    let w = |id: u64, fill: f32| Worker {
+        client_id: id,
+        shard: vec![vec![fill; d]],
+        protocol: proto.clone(),
+        update: mean_update(),
+        seed,
+    };
+    // Clients 0 and 1 answer round 0 before the barrier even opens —
+    // client 1 twice (the two `step` calls are bit-identical). Client 2
+    // stays silent so the deadline must expire, which forces the barrier
+    // to read every queued message: the duplicate cannot dodge it by
+    // arriving after the barrier has filled.
+    eps[0].send(w(0, 1.0).step(0, d as u32, &[]).unwrap()).unwrap();
+    eps[1].send(w(1, 2.0).step(0, d as u32, &[]).unwrap()).unwrap();
+    eps[1].send(w(1, 2.0).step(0, d as u32, &[]).unwrap()).unwrap();
+    let expected = (0..3u64).map(ChildKey::Client).collect();
+    let mut leader = Leader::new(proto.clone(), Box::new(hub), seed)
+        .with_round_timeout(Duration::from_millis(200))
+        .with_barrier_policy(BarrierPolicy::Partial)
+        .with_expected_children(expected);
+    let out = leader.round(0, d as u32, &[]).unwrap();
+    let m = leader.metrics().rounds.last().unwrap();
+    assert_eq!(m.duplicate_uploads, 1, "the dropped copy must be counted");
+    assert_eq!(m.participation, 2.0 / 3.0, "duplicates must not inflate participation");
+    assert_eq!(out.n_frames, 2, "exactly two distinct children folded");
+    // Bit for bit: the round equals folding each distinct client once.
+    let ctx = RoundCtx::new(0, seed);
+    let state = proto.prepare(&ctx);
+    let mut uploads = Vec::new();
+    for worker in [w(0, 1.0), w(1, 2.0)] {
+        match worker.step(0, d as u32, &[]).unwrap() {
+            Message::Upload { client, frames, .. } => uploads.push((client, frames)),
+            other => panic!("expected an Upload, got {other:?}"),
+        }
+    }
+    let want = aggregate_uploads_reference(proto.as_ref(), &state, uploads).unwrap();
+    assert_eq!(out.means, want.means, "the duplicate copy must not shift the estimate");
+    drop(eps);
+    let _ = leader.shutdown();
 }
 
 #[test]
