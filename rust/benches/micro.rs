@@ -216,6 +216,9 @@ fn main() -> anyhow::Result<()> {
             "rotated:k=16",
             "varlen:k=33",
             "qsgd:k=8",
+            "drive",
+            "correlated:k=16",
+            "correlated:base=rotated,k=16",
         ];
         for spec in specs {
             let proto = ProtocolConfig::parse(spec, d)?.build()?;
@@ -865,7 +868,7 @@ fn main() -> anyhow::Result<()> {
             b.record(&format!("transport/reactor/connect@n={n}"), Some(n as f64), t0.elapsed());
             let payload: Arc<[f32]> = vec![0.0f32; 16].into();
             let t0 = Instant::now();
-            hub.broadcast(&Message::RoundStart { round: 0, dim: 16, payload })?;
+            hub.broadcast(&Message::RoundStart { round: 0, shared_seed: 1, dim: 16, payload })?;
             for _ in 0..n {
                 hub.recv()?;
             }
@@ -923,6 +926,7 @@ fn main() -> anyhow::Result<()> {
                     for _ in 0..BATCH {
                         hub.broadcast(&Message::RoundStart {
                             round,
+                            shared_seed: 1,
                             dim: 16,
                             payload: payload.clone(),
                         })

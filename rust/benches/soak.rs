@@ -134,8 +134,8 @@ fn main() -> anyhow::Result<()> {
             scratches.push(EncodeScratch::default());
         }
         swarms.push(Swarm::spawn_mux(addr, count, n_tenants, move |i, env| match &env.msg {
-            Message::RoundStart { round, dim, payload } => workers[i]
-                .step_for(env.session, *round, *dim, payload, &mut scratches[i])
+            Message::RoundStart { round, shared_seed, dim, payload } => workers[i]
+                .step_seeded(env.session, *round, *shared_seed, *dim, payload, &mut scratches[i])
                 .ok()
                 .map(|msg| Envelope { session: env.session, msg }),
             _ => None,

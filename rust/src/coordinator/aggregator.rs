@@ -48,8 +48,12 @@ use crate::protocol::{Protocol, RoundCtx, SlotPartial};
 /// A partial-merging aggregation node.
 pub struct Aggregator {
     protocol: Arc<dyn Protocol>,
-    /// Experiment seed — must match the leader's and the workers' so the
-    /// round's public randomness (e.g. the π_srk rotation) agrees.
+    /// Locally-configured experiment seed. Since wire v2, each round's
+    /// public randomness (the π_srk rotation, correlated offsets) comes
+    /// from the `shared_seed` the incoming `RoundStart` carries — the
+    /// handshake makes the tree agree by construction — so this field is
+    /// informational (see [`Self::seed`]), retained for constructor
+    /// stability and diagnostics.
     seed: u64,
     agg_id: u64,
     span: (u64, u64),
@@ -111,6 +115,14 @@ impl Aggregator {
             session_protocols: HashMap::new(),
             barrier_policy: BarrierPolicy::default(),
         }
+    }
+
+    /// The locally-configured experiment seed. Rounds no longer consume
+    /// it — decode randomness is rooted in each `RoundStart`'s
+    /// `shared_seed` — but it still names the experiment this node was
+    /// launched for.
+    pub fn seed(&self) -> u64 {
+        self.seed
     }
 
     /// Choose this node's barrier-timeout behavior (builder style); see
@@ -230,7 +242,7 @@ impl Aggregator {
                 return Err(WireError::UnknownSession(session).into());
             }
             match env.msg {
-                Message::RoundStart { round, dim, payload } => {
+                Message::RoundStart { round, shared_seed, dim, payload } => {
                     let (proto, expected) = sessions.get_mut(&session).unwrap();
                     let proto = proto.clone();
                     let reply = self.one_round(
@@ -238,6 +250,7 @@ impl Aggregator {
                         session,
                         &proto,
                         round,
+                        shared_seed,
                         dim,
                         payload,
                         expected,
@@ -331,13 +344,19 @@ impl Aggregator {
         session: u16,
         proto: &Arc<dyn Protocol>,
         round: u64,
+        shared_seed: u64,
         dim: u32,
         payload: Arc<[f32]>,
         expected: &mut Vec<ChildKey>,
         metrics: &mut ExperimentMetrics,
     ) -> Result<Vec<Message>> {
         let t0 = Instant::now();
-        let bcast = hub.broadcast_session(session, &Message::RoundStart { round, dim, payload });
+        // Relay the round's shared_seed verbatim: every tier of the tree
+        // decodes against the same public randomness the leader chose.
+        let bcast = hub.broadcast_session(
+            session,
+            &Message::RoundStart { round, shared_seed, dim, payload },
+        );
         if let Err(e) = bcast {
             // Hubs stage to every live child before surfacing dead
             // ones; under the partial policy a dead child is exactly
@@ -352,7 +371,7 @@ impl Aggregator {
                 return Err(e);
             }
         }
-        let ctx = RoundCtx::new(round, self.seed);
+        let ctx = RoundCtx::new(round, shared_seed);
         let state = proto.prepare(&ctx);
         let n_msgs = hub.n_workers();
         let collected = collect_round(

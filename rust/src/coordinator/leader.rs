@@ -1023,10 +1023,13 @@ impl Leader {
         let t0 = Instant::now();
         ensure!(self.hub.n_workers() > 0, "no workers connected");
         // The payload is Arc-shared: one allocation for the whole
-        // broadcast instead of one clone per worker.
+        // broadcast instead of one clone per worker. The leader's seed is
+        // broadcast as the round's `shared_seed` — the shared-randomness
+        // handshake: children derive the rotation and correlated rounding
+        // offsets from the wire, not from local configuration.
         let bcast = self.hub.broadcast_session(
             self.session,
-            &Message::RoundStart { round, dim, payload: Arc::from(state) },
+            &Message::RoundStart { round, shared_seed: self.seed, dim, payload: Arc::from(state) },
         );
         if let Err(e) = bcast {
             // Every hub stages the message to its live children before

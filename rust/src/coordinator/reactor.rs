@@ -946,6 +946,7 @@ mod tests {
             let mut hub = binding.accept(2).unwrap();
             hub.broadcast(&Message::RoundStart {
                 round: 1,
+                shared_seed: 77,
                 dim: 2,
                 payload: vec![9.0, 1.0, 3.5].into(),
             })
@@ -983,7 +984,12 @@ mod tests {
         // Exact accounting: one RoundStart down to each of 2 workers
         // (the Shutdown lands after bytes_moved was read), one upload up
         // from each.
-        let rs = Message::RoundStart { round: 1, dim: 2, payload: vec![9.0, 1.0, 3.5].into() };
+        let rs = Message::RoundStart {
+            round: 1,
+            shared_seed: 77,
+            dim: 2,
+            payload: vec![9.0, 1.0, 3.5].into(),
+        };
         assert_eq!(down, rs.framed_len() * 2);
         assert_eq!(up, upload(0).framed_len() + upload(1).framed_len());
     }
@@ -1062,6 +1068,7 @@ mod tests {
         let mut hub = binding.accept(1).unwrap();
         hub.broadcast_session(11, &Message::RoundStart {
             round: 0,
+            shared_seed: 0,
             dim: 1,
             payload: vec![1.0].into(),
         })

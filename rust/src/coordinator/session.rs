@@ -242,7 +242,8 @@ mod tests {
         let mut a = mux.view(1);
         let mut b = mux.view(2);
 
-        let down = Message::RoundStart { round: 0, dim: 2, payload: vec![].into() };
+        let down =
+            Message::RoundStart { round: 0, shared_seed: 3, dim: 2, payload: vec![].into() };
         a.broadcast_session(1, &down).unwrap();
         a.broadcast_session(1, &down).unwrap();
         b.broadcast_session(2, &down).unwrap();

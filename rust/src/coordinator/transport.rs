@@ -37,9 +37,14 @@
 //! message body starts with the **versioned envelope header**:
 //!
 //! ```text
-//! magic "DM" (2 bytes) | u8 version (= 1) | u16 session_id | u8 tag | payload
+//! magic "DM" (2 bytes) | u8 version (= 2) | u16 session_id | u8 tag | payload
 //!
-//! tag 1 RoundStart: u64 round, u32 n_floats, u32 dim (> 0),
+//! tag 1 RoundStart: u64 round, u64 shared_seed (the round's shared
+//!                   randomness root: rotation sampling and the
+//!                   correlated-quantization offsets derive from it, so
+//!                   every client and every aggregation hop agree on the
+//!                   round's public state by construction),
+//!                   u32 n_floats, u32 dim (> 0),
 //!                   then n_floats f32 (the flattened broadcast payload;
 //!                   its length is serialized directly, so ragged
 //!                   payloads — n_floats not a multiple of dim — survive
@@ -104,7 +109,10 @@ pub const WIRE_MAGIC: [u8; 2] = *b"DM";
 /// The envelope version this build speaks. Bumped when the grammar
 /// changes incompatibly; a peer from the future is rejected as
 /// [`WireError::UnknownVersion`] instead of being misparsed.
-pub const WIRE_VERSION: u8 = 1;
+/// Version history: 1 = original envelope; 2 = `RoundStart` carries the
+/// round's `shared_seed` (the shared-randomness handshake the
+/// correlated-quantization family requires).
+pub const WIRE_VERSION: u8 = 2;
 
 /// Envelope header size: magic (2) + version (1) + session id (2) +
 /// tag (1).
@@ -200,8 +208,12 @@ pub enum Message {
     /// Leader → workers: new round with the broadcast state
     /// (`n_slots` vectors of `dim` f32s, flattened). The payload is
     /// `Arc`-shared so broadcasting to n loopback workers clones a
-    /// pointer, not `n_slots × dim` floats per worker.
-    RoundStart { round: u64, dim: u32, payload: Arc<[f32]> },
+    /// pointer, not `n_slots × dim` floats per worker. `shared_seed` is
+    /// the round's shared-randomness root: every client derives the
+    /// rotation and its correlated rounding offsets from it (not from
+    /// local configuration), so a whole tree agrees on the round's
+    /// public state by construction — the shared-randomness handshake.
+    RoundStart { round: u64, shared_seed: u64, dim: u32, payload: Arc<[f32]> },
     /// Worker → leader: the round's encoded updates. A worker that the
     /// sampling layer silenced still uploads an empty frame list (the
     /// leader needs the barrier).
@@ -319,9 +331,10 @@ impl Message {
         out.push(WIRE_VERSION);
         out.extend_from_slice(&session.to_le_bytes());
         match self {
-            Message::RoundStart { round, dim, payload } => {
+            Message::RoundStart { round, shared_seed, dim, payload } => {
                 out.push(1u8);
                 out.extend_from_slice(&round.to_le_bytes());
+                out.extend_from_slice(&shared_seed.to_le_bytes());
                 out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
                 out.extend_from_slice(&dim.to_le_bytes());
                 for v in payload.iter() {
@@ -374,7 +387,7 @@ impl Message {
     pub fn wire_len(&self) -> u64 {
         const H: u64 = ENVELOPE_HEADER_LEN; // magic + version + session + tag
         match self {
-            Message::RoundStart { payload, .. } => H + 8 + 4 + 4 + payload.len() as u64 * 4,
+            Message::RoundStart { payload, .. } => H + 8 + 8 + 4 + 4 + payload.len() as u64 * 4,
             Message::Upload { frames, .. } => Self::upload_wire_len(frames),
             Message::PartialUpload { slots, .. } => {
                 H + 8 * 6 + 4 * 2 + 4 + slots.iter().map(|s| 4 + s.wire_len() as u64).sum::<u64>()
@@ -420,6 +433,7 @@ impl Message {
         match tag {
             1 => {
                 let round = c.u64()?;
+                let shared_seed = c.u64()?;
                 let n_floats = c.u32()? as usize;
                 let dim = c.u32()?;
                 ensure!(dim > 0, "RoundStart dim must be > 0");
@@ -434,7 +448,7 @@ impl Message {
                     payload.push(c.f32()?);
                 }
                 c.done()?;
-                Ok(Message::RoundStart { round, dim, payload: payload.into() })
+                Ok(Message::RoundStart { round, shared_seed, dim, payload: payload.into() })
             }
             2 => {
                 let client = c.u64()?;
@@ -1153,10 +1167,10 @@ mod tests {
         let back = Message::from_bytes(&bytes).unwrap();
         match (m, &back) {
             (
-                Message::RoundStart { round: r1, dim: d1, payload: p1 },
-                Message::RoundStart { round: r2, dim: d2, payload: p2 },
+                Message::RoundStart { round: r1, shared_seed: s1, dim: d1, payload: p1 },
+                Message::RoundStart { round: r2, shared_seed: s2, dim: d2, payload: p2 },
             ) => {
-                assert_eq!((r1, d1), (r2, d2));
+                assert_eq!((r1, s1, d1), (r2, s2, d2));
                 assert_eq!(&p1[..], &p2[..]);
             }
             (
@@ -1237,15 +1251,31 @@ mod tests {
     /// the wire format must round-trip each of them exactly.
     fn legal_messages() -> Vec<Message> {
         vec![
-            Message::RoundStart { round: 7, dim: 2, payload: vec![1.0, -2.0, 3.5, 0.0].into() },
+            Message::RoundStart {
+                round: 7,
+                shared_seed: 0xdead_beef_1234_5678,
+                dim: 2,
+                payload: vec![1.0, -2.0, 3.5, 0.0].into(),
+            },
             // Ragged payload: length not a multiple of dim. The leader
             // sends these legally (e.g. a single d-vector broadcast with
             // protocol-internal dim); the header counts floats, not
             // vectors, so nothing is truncated or rejected.
-            Message::RoundStart { round: 1, dim: 2, payload: vec![9.0, 1.0, 3.5].into() },
-            // Payload shorter than one vector, and an empty payload.
-            Message::RoundStart { round: 2, dim: 7, payload: vec![4.0].into() },
-            Message::RoundStart { round: 3, dim: 64, payload: Vec::new().into() },
+            Message::RoundStart {
+                round: 1,
+                shared_seed: 42,
+                dim: 2,
+                payload: vec![9.0, 1.0, 3.5].into(),
+            },
+            // Payload shorter than one vector, and an empty payload. A
+            // zero shared_seed is legal (it is a seed, not a sentinel).
+            Message::RoundStart { round: 2, shared_seed: 0, dim: 7, payload: vec![4.0].into() },
+            Message::RoundStart {
+                round: 3,
+                shared_seed: u64::MAX,
+                dim: 64,
+                payload: Vec::new().into(),
+            },
             Message::Upload {
                 client: 3,
                 round: 7,
@@ -1298,13 +1328,18 @@ mod tests {
         // than the header admitted and from_bytes failed with "trailing
         // bytes" — fine over loopback (which never serializes), broken
         // over TCP.
-        let m = Message::RoundStart { round: 5, dim: 3, payload: vec![1.0, 2.0, 3.0, 4.0].into() };
+        let m = Message::RoundStart {
+            round: 5,
+            shared_seed: 11,
+            dim: 3,
+            payload: vec![1.0, 2.0, 3.0, 4.0].into(),
+        };
         assert_roundtrip(&m);
     }
 
     #[test]
     fn round_start_dim_zero_rejected() {
-        let m = Message::RoundStart { round: 0, dim: 0, payload: vec![1.0].into() };
+        let m = Message::RoundStart { round: 0, shared_seed: 1, dim: 0, payload: vec![1.0].into() };
         assert!(m.to_bytes().is_err(), "dim == 0 must not serialize");
         // Loopback enforces the same legality as TCP: the invalid
         // message is rejected by both hub directions, not just by
@@ -1316,6 +1351,7 @@ mod tests {
         // divide by zero before reaching any check).
         let mut bytes = raw(1);
         bytes.extend_from_slice(&0u64.to_le_bytes()); // round
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // shared_seed
         bytes.extend_from_slice(&1u32.to_le_bytes()); // n_floats
         bytes.extend_from_slice(&0u32.to_le_bytes()); // dim = 0
         bytes.extend_from_slice(&1.0f32.to_le_bytes());
@@ -1337,8 +1373,13 @@ mod tests {
     #[test]
     fn wire_len_matches_serialization() {
         let msgs = vec![
-            Message::RoundStart { round: 7, dim: 3, payload: vec![1.0; 9].into() },
-            Message::RoundStart { round: 7, dim: 3, payload: vec![1.0; 10].into() },
+            Message::RoundStart { round: 7, shared_seed: 5, dim: 3, payload: vec![1.0; 9].into() },
+            Message::RoundStart {
+                round: 7,
+                shared_seed: 5,
+                dim: 3,
+                payload: vec![1.0; 10].into(),
+            },
             Message::Upload {
                 client: 3,
                 round: 7,
@@ -1493,8 +1534,12 @@ mod tests {
         ok.push(0);
         assert!(Message::from_bytes(&ok).is_err());
         // RoundStart header/payload length mismatch (one float missing)
-        let full =
-            Message::RoundStart { round: 0, dim: 1, payload: vec![1.0, 2.0].into() };
+        let full = Message::RoundStart {
+            round: 0,
+            shared_seed: 0,
+            dim: 1,
+            payload: vec![1.0, 2.0].into(),
+        };
         let mut bytes = full.to_bytes().unwrap();
         bytes.truncate(bytes.len() - 4);
         assert!(Message::from_bytes(&bytes).is_err());
@@ -1529,7 +1574,8 @@ mod tests {
     #[test]
     fn loopback_accounts_framed_bytes_exactly() {
         let (mut hub, eps) = LoopbackHub::new(3);
-        let msg = Message::RoundStart { round: 0, dim: 4, payload: vec![0.0; 4].into() };
+        let msg =
+            Message::RoundStart { round: 0, shared_seed: 0, dim: 4, payload: vec![0.0; 4].into() };
         let msg_len = msg.framed_len();
         assert_eq!(msg_len, msg.to_bytes().unwrap().len() as u64 + 4);
         hub.broadcast(&msg).unwrap();
@@ -1550,7 +1596,8 @@ mod tests {
     fn broadcast_payload_is_shared_not_cloned() {
         let (mut hub, eps) = LoopbackHub::new(4);
         let payload: Arc<[f32]> = vec![1.0f32; 64].into();
-        let msg = Message::RoundStart { round: 0, dim: 8, payload: payload.clone() };
+        let msg =
+            Message::RoundStart { round: 0, shared_seed: 0, dim: 8, payload: payload.clone() };
         hub.broadcast(&msg).unwrap();
         for ep in &eps {
             match ep.recv().unwrap() {
@@ -1578,6 +1625,7 @@ mod tests {
             // n_vecs-based header.
             hub.broadcast(&Message::RoundStart {
                 round: 1,
+                shared_seed: 123,
                 dim: 2,
                 payload: vec![9.0, 1.0, 3.5].into(),
             })
@@ -1684,6 +1732,17 @@ mod tests {
         match err.downcast_ref::<WireError>() {
             Some(WireError::UnknownVersion(v)) => assert_eq!(*v, WIRE_VERSION + 1),
             other => panic!("expected typed UnknownVersion, got {other:?}"),
+        }
+
+        // A *stale* peer is rejected the same way: version 1 predates the
+        // RoundStart shared_seed field, so parsing its tag-1 bodies with
+        // the v2 grammar would misread every field after `round`.
+        let mut stale = good.clone();
+        stale[2] = 1;
+        let err = Message::from_bytes(&stale).unwrap_err();
+        match err.downcast_ref::<WireError>() {
+            Some(WireError::UnknownVersion(v)) => assert_eq!(*v, 1),
+            other => panic!("expected typed UnknownVersion for v1, got {other:?}"),
         }
 
         // A merely truncated or forged payload is NOT a WireError: the

@@ -68,7 +68,27 @@ impl Worker {
         broadcast: &[f32],
         scratch: &mut EncodeScratch,
     ) -> Result<Message> {
-        let ctx = RoundCtx::new(round, self.seed);
+        self.step_seeded(session, round, self.seed, dim, broadcast, scratch)
+    }
+
+    /// [`Worker::step_for`] with an explicit round seed — the wire
+    /// handshake entry point. The worker loops pass the `shared_seed`
+    /// carried in `RoundStart`, so the round's public randomness (the
+    /// rotation, and the correlated rounding offsets of
+    /// [`crate::protocol::correlated`]) is rooted in what the leader
+    /// *broadcast*, not in local configuration: a whole tree agrees on
+    /// the round's shared state by construction, and a worker with a
+    /// stale `seed` field cannot silently desynchronize the rotation.
+    pub fn step_seeded(
+        &self,
+        session: u16,
+        round: u64,
+        shared_seed: u64,
+        dim: u32,
+        broadcast: &[f32],
+        scratch: &mut EncodeScratch,
+    ) -> Result<Message> {
+        let ctx = RoundCtx::new(round, shared_seed);
         // One round session per step: the shared state (the rotation for
         // π_srk) is prepared once and reused across every slot, and the
         // scratch buffers are reused across slots (and rounds).
@@ -123,8 +143,9 @@ impl Worker {
             let env = ep.recv_env()?;
             let session = env.session;
             match env.msg {
-                Message::RoundStart { round, dim, payload } => {
-                    match self.step_for(session, round, dim, &payload, &mut scratch) {
+                Message::RoundStart { round, shared_seed, dim, payload } => {
+                    match self.step_seeded(session, round, shared_seed, dim, &payload, &mut scratch)
+                    {
                         Ok(reply) => ep.send_env(session, reply)?,
                         Err(e) => {
                             // Wake the parent's barrier before dying: an
@@ -219,8 +240,10 @@ impl MuxWorker {
                 None => return Err(WireError::UnknownSession(session).into()),
             };
             match env.msg {
-                Message::RoundStart { round, dim, payload } => {
-                    match worker.step_for(session, round, dim, &payload, &mut scratch) {
+                Message::RoundStart { round, shared_seed, dim, payload } => {
+                    match worker
+                        .step_seeded(session, round, shared_seed, dim, &payload, &mut scratch)
+                    {
                         Ok(reply) => ep.send_env(session, reply)?,
                         Err(e) => {
                             let _ = ep.send_env(session, Message::Shutdown);

@@ -302,9 +302,11 @@ fn cmd_tune(args: &Args) -> Result<()> {
         &["spec", "bits/client", "bits/dim", "predicted MSE"],
         &rows,
     );
-    // The paper's ordering at this budget: π_sb ≻ π_srk ≻ π_svk in MSE.
+    // The paper's ordering at this budget (π_sb ≻ π_srk ≻ π_svk), now
+    // over *every* enumerated family: derived from Kind::ALL so a new
+    // protocol family can never be silently missing from this table.
     let mut fam = Vec::new();
-    for kind in [Kind::Binary, Kind::Rotated, Kind::Varlen] {
+    for kind in Kind::ALL {
         if let Some(best) = plan.best_in_kind(kind) {
             fam.push(vec![
                 kind.name().to_string(),
@@ -315,9 +317,42 @@ fn cmd_tune(args: &Args) -> Result<()> {
         }
     }
     dme::bench::print_table(
-        "Family bests under the budget (Thm 1 vs Thm 3 vs Thm 4)",
+        "Family bests under the budget (one row per protocol family)",
         &["family", "best spec", "bits/dim", "predicted MSE"],
         &fam,
+    );
+    // Budget regimes: sweep a bits/dim ladder and collapse consecutive
+    // budgets won by the same family — the planner's answer to "which
+    // family should I run at *my* budget?". The winner at each rung is
+    // the last feasible frontier point (min predicted MSE within budget).
+    let ladder = [0.5, 0.75, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0, 8.0, 12.0, 16.0, 24.0, 32.0];
+    let mut regimes: Vec<(String, f64, f64, String)> = Vec::new();
+    for b in ladder {
+        let budget = b * dim as f64;
+        let Some(win) = plan.frontier_specs().filter(|c| c.bits_per_client <= budget).last()
+        else {
+            continue;
+        };
+        let family = win.cfg.kind.name().to_string();
+        match regimes.last_mut() {
+            Some((f, _, hi, spec)) if *f == family => {
+                *hi = b;
+                *spec = win.spec.clone();
+            }
+            _ => regimes.push((family, b, b, win.spec.clone())),
+        }
+    }
+    let regime_rows: Vec<Vec<String>> = regimes
+        .into_iter()
+        .map(|(family, lo, hi, spec)| {
+            let span = if lo == hi { format!("{lo}") } else { format!("{lo} .. {hi}") };
+            vec![family, span, spec]
+        })
+        .collect();
+    dme::bench::print_table(
+        "Budget regimes (bits/dim ladder -> winning family)",
+        &["family", "bits/dim regime", "winning spec at regime top"],
+        &regime_rows,
     );
     match plan.chosen_spec() {
         Some(c) => {

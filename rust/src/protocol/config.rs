@@ -12,6 +12,9 @@
 //! varlen:k=33,coder=huffman
 //! varlen                      # k defaults to sqrt(d)+1
 //! klevel:k=16,p=0.25          # any protocol + client sampling
+//! drive                       # 1 sign bit/coord + per-client scale
+//! correlated:k=4,strata=16    # anti-correlated rounding offsets
+//! correlated:base=rotated,k=4 # ... over the rotated quantizer
 //! ```
 
 use std::sync::Arc;
@@ -20,6 +23,8 @@ use anyhow::{bail, ensure, Context, Result};
 
 use super::binary::BinaryProtocol;
 use super::coordsample::CoordSampledProtocol;
+use super::correlated::{CorrBase, CorrelatedProtocol};
+use super::drive::DriveProtocol;
 use super::float32::Float32Protocol;
 use super::klevel::KLevelProtocol;
 use super::quantizer::Span;
@@ -30,34 +35,51 @@ use super::varlen::{Coder, VarlenProtocol};
 use super::Protocol;
 use crate::runtime::engine::ComputeBackend;
 
-/// Which base protocol to build.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Kind {
-    Float32,
-    Binary,
-    KLevel,
-    Rotated,
-    Varlen,
-    Qsgd,
+/// Defines [`Kind`], its canonical spec-grammar names, and the derived
+/// exhaustive [`Kind::ALL`] list from one variant table. Adding a
+/// protocol kind is a one-line change here; the list, its length, and
+/// `name()` can never fall out of sync with the enum (the compile-guard
+/// test below pins the uniqueness of the names).
+macro_rules! kinds {
+    ($($(#[$meta:meta])* $variant:ident => $name:literal),+ $(,)?) => {
+        /// Which base protocol to build.
+        #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+        pub enum Kind {
+            $($(#[$meta])* $variant,)+
+        }
+
+        impl Kind {
+            /// How many base protocol kinds exist.
+            pub const COUNT: usize = [$($name),+].len();
+
+            /// Every base protocol kind (the rate planner enumerates
+            /// these). Derived from the variant table, so it is
+            /// exhaustive by construction.
+            pub const ALL: [Kind; Self::COUNT] = [$(Kind::$variant),+];
+
+            /// The canonical spec-grammar name (the one
+            /// [`ProtocolConfig::parse`] documents; aliases parse but
+            /// are never emitted).
+            pub fn name(&self) -> &'static str {
+                match self {
+                    $(Kind::$variant => $name,)+
+                }
+            }
+        }
+    };
 }
 
-impl Kind {
-    /// Every base protocol kind (the rate planner enumerates these).
-    pub const ALL: [Kind; 6] =
-        [Kind::Float32, Kind::Binary, Kind::KLevel, Kind::Rotated, Kind::Varlen, Kind::Qsgd];
-
-    /// The canonical spec-grammar name (the one [`ProtocolConfig::parse`]
-    /// documents; aliases parse but are never emitted).
-    pub fn name(&self) -> &'static str {
-        match self {
-            Kind::Float32 => "float32",
-            Kind::Binary => "binary",
-            Kind::KLevel => "klevel",
-            Kind::Rotated => "rotated",
-            Kind::Varlen => "varlen",
-            Kind::Qsgd => "qsgd",
-        }
-    }
+kinds! {
+    Float32 => "float32",
+    Binary => "binary",
+    KLevel => "klevel",
+    Rotated => "rotated",
+    Varlen => "varlen",
+    Qsgd => "qsgd",
+    /// DRIVE: 1 sign bit/coord after rotation + per-client scale.
+    Drive => "drive",
+    /// Correlated quantization: stratified shared rounding offsets.
+    Correlated => "correlated",
 }
 
 /// Declarative protocol description.
@@ -76,6 +98,11 @@ pub struct ProtocolConfig {
     /// Coordinate sampling probability (1.0 = no wrapper). Incompatible
     /// with `rotated` (the rotation mixes coordinates before quantization).
     pub q: f64,
+    /// Base quantizer family for `correlated` (ignored by other kinds).
+    pub base: CorrBase,
+    /// Offset strata `m` for `correlated` (power of two; plan `m ≥ n`).
+    /// Ignored by other kinds.
+    pub strata: u32,
     /// Numeric backend (None = native).
     pub backend: Option<Arc<dyn ComputeBackend>>,
 }
@@ -104,6 +131,8 @@ impl PartialEq for ProtocolConfig {
             && self.span == other.span
             && self.p == other.p
             && self.q == other.q
+            && self.base == other.base
+            && self.strata == other.strata
     }
 }
 
@@ -125,6 +154,12 @@ impl std::fmt::Display for ProtocolConfig {
         };
         if self.k != default_k {
             arg(f, format_args!("k={}", self.k))?;
+        }
+        if self.base != CorrBase::KLevel {
+            arg(f, format_args!("base={}", self.base.name()))?;
+        }
+        if self.strata != 16 {
+            arg(f, format_args!("strata={}", self.strata))?;
         }
         if self.coder != Coder::Arithmetic {
             arg(f, format_args!("coder=huffman"))?;
@@ -152,6 +187,8 @@ impl ProtocolConfig {
             span: Span::MinMax,
             p: 1.0,
             q: 1.0,
+            base: CorrBase::KLevel,
+            strata: 16,
             backend: None,
         }
     }
@@ -223,7 +260,12 @@ impl ProtocolConfig {
             "rotated" | "rotation" | "srk" => Kind::Rotated,
             "varlen" | "variable" | "svk" => Kind::Varlen,
             "qsgd" | "elias" => Kind::Qsgd,
-            other => bail!("unknown protocol `{other}` (try float32|binary|klevel|rotated|varlen)"),
+            "drive" | "sign" => Kind::Drive,
+            "correlated" | "corr" => Kind::Correlated,
+            other => bail!(
+                "unknown protocol `{other}` \
+                 (try float32|binary|klevel|rotated|varlen|qsgd|drive|correlated)"
+            ),
         };
         let mut cfg = Self::new(kind, dim);
         if kind == Kind::Varlen {
@@ -251,11 +293,23 @@ impl ProtocolConfig {
                         other => bail!("unknown span `{other}`"),
                     }
                 }
+                "base" => {
+                    cfg.base = match val {
+                        "klevel" => CorrBase::KLevel,
+                        "rotated" => CorrBase::Rotated,
+                        other => bail!("unknown correlated base `{other}` (try klevel|rotated)"),
+                    }
+                }
+                "strata" => cfg.strata = val.parse().context("bad strata")?,
                 other => bail!("unknown protocol arg `{other}`"),
             }
         }
         ensure!(cfg.p > 0.0 && cfg.p <= 1.0, "p must be in (0, 1]");
         ensure!(cfg.q > 0.0 && cfg.q <= 1.0, "q must be in (0, 1]");
+        ensure!(
+            cfg.strata >= 2 && cfg.strata.is_power_of_two(),
+            "strata must be a power of two >= 2"
+        );
         Ok(cfg)
     }
 
@@ -293,12 +347,41 @@ impl ProtocolConfig {
                 Arc::new(p)
             }
             Kind::Qsgd => Arc::new(QsgdProtocol::new(self.dim, k)),
+            Kind::Drive => {
+                let mut p = DriveProtocol::new(self.dim);
+                if let Some(b) = &self.backend {
+                    p = p.with_backend(b.clone());
+                }
+                Arc::new(p)
+            }
+            Kind::Correlated => {
+                ensure!(
+                    self.strata >= 2 && self.strata.is_power_of_two(),
+                    "strata must be a power of two >= 2"
+                );
+                ensure!(
+                    self.base == CorrBase::KLevel || self.span == Span::MinMax,
+                    "correlated:base=rotated always quantizes with the min-max span"
+                );
+                let mut p = CorrelatedProtocol::new(self.dim, k, self.strata, self.base);
+                if self.base == CorrBase::KLevel {
+                    p = p.with_span(self.span);
+                }
+                if let Some(b) = &self.backend {
+                    p = p.with_backend(b.clone());
+                }
+                Arc::new(p)
+            }
         };
+        let rotates = self.kind == Kind::Rotated
+            || self.kind == Kind::Drive
+            || (self.kind == Kind::Correlated && self.base == CorrBase::Rotated);
         let base = if self.q < 1.0 {
             ensure!(
-                self.kind != Kind::Rotated,
-                "coordinate sampling (q<1) is incompatible with `rotated`: \
-                 the rotation mixes coordinates before quantization"
+                !rotates,
+                "coordinate sampling (q<1) is incompatible with `{}`: \
+                 the rotation mixes coordinates before quantization",
+                self.kind.name()
             );
             Arc::new(CoordSampledProtocol::new(base, self.q)) as Arc<dyn Protocol>
         } else {
@@ -324,9 +407,38 @@ mod tests {
             ("klevel:k=8", "klevel(k=8)"),
             ("rotated:k=32", "rotated(k=32)"),
             ("varlen:k=12,coder=huffman", "varlen(k=12, huff)"),
+            ("drive", "drive"),
+            ("correlated:k=4", "correlated(base=klevel,k=4,m=16)"),
+            ("correlated:base=rotated,k=4,strata=8", "correlated(base=rotated,k=4,m=8)"),
         ] {
             let proto = ProtocolConfig::parse(spec, 64).unwrap().build().unwrap();
             assert_eq!(proto.name(), want_name, "spec={spec}");
+        }
+    }
+
+    #[test]
+    fn kind_all_is_exhaustive_and_names_are_unique() {
+        // Compile guard: the match must cover every variant, so adding a
+        // kind outside the `kinds!` table cannot compile, and a kind
+        // added to the table automatically joins `Kind::ALL` (whose
+        // length is derived, never hand-counted).
+        assert_eq!(Kind::ALL.len(), Kind::COUNT);
+        let mut seen = std::collections::HashSet::new();
+        for kind in Kind::ALL {
+            let name = match kind {
+                Kind::Float32 => "float32",
+                Kind::Binary => "binary",
+                Kind::KLevel => "klevel",
+                Kind::Rotated => "rotated",
+                Kind::Varlen => "varlen",
+                Kind::Qsgd => "qsgd",
+                Kind::Drive => "drive",
+                Kind::Correlated => "correlated",
+            };
+            assert_eq!(name, kind.name());
+            assert!(seen.insert(name), "duplicate kind name `{name}`");
+            // Every canonical name parses back to its own kind.
+            assert_eq!(ProtocolConfig::parse(name, 8).unwrap().kind, kind);
         }
     }
 
@@ -385,9 +497,12 @@ mod tests {
     #[test]
     fn display_parse_roundtrip_property() {
         // parse(cfg.to_string()) == cfg over the whole discrete config
-        // space the planner enumerates, plus awkward float values whose
-        // Display must survive the grammar (Rust float formatting is
-        // shortest-round-trip, so `p={}` re-parses to the same bits).
+        // space the planner enumerates — every kind crossed with the
+        // wrapper compositions (client sampling × coordinate sampling ×
+        // coder/span × correlated's base/strata args), plus awkward
+        // float values whose Display must survive the grammar (Rust
+        // float formatting is shortest-round-trip, so `p={}` re-parses
+        // to the same bits).
         use crate::protocol::quantizer::Span;
         use crate::protocol::varlen::Coder;
         let mut n_checked = 0usize;
@@ -398,19 +513,27 @@ mod tests {
                         for span in [Span::MinMax, Span::Norm] {
                             for p in [1.0f64, 0.5, 1.0 / 3.0, 0.1234567891234, 1e-9] {
                                 for q in [1.0f64, 0.25, 2.0 / 3.0] {
-                                    let mut cfg = ProtocolConfig::new(kind, dim);
-                                    cfg.k = k;
-                                    cfg.coder = coder;
-                                    cfg.span = span;
-                                    cfg.p = p;
-                                    cfg.q = q;
-                                    let s = cfg.to_string();
-                                    let back = ProtocolConfig::parse(&s, dim)
-                                        .unwrap_or_else(|e| {
-                                            panic!("`{s}` failed to re-parse: {e}")
-                                        });
-                                    assert_eq!(back, cfg, "spec `{s}` round-trip diverged");
-                                    n_checked += 1;
+                                    for (base, strata) in [
+                                        (CorrBase::KLevel, 16u32),
+                                        (CorrBase::KLevel, 64),
+                                        (CorrBase::Rotated, 2),
+                                    ] {
+                                        let mut cfg = ProtocolConfig::new(kind, dim);
+                                        cfg.k = k;
+                                        cfg.coder = coder;
+                                        cfg.span = span;
+                                        cfg.p = p;
+                                        cfg.q = q;
+                                        cfg.base = base;
+                                        cfg.strata = strata;
+                                        let s = cfg.to_string();
+                                        let back = ProtocolConfig::parse(&s, dim)
+                                            .unwrap_or_else(|e| {
+                                                panic!("`{s}` failed to re-parse: {e}")
+                                            });
+                                        assert_eq!(back, cfg, "spec `{s}` round-trip diverged");
+                                        n_checked += 1;
+                                    }
                                 }
                             }
                         }
@@ -425,12 +548,41 @@ mod tests {
     fn all_kinds_build_and_run() {
         use crate::protocol::{run_round, RoundCtx};
         let xs: Vec<Vec<f32>> = (0..4).map(|i| vec![i as f32 * 0.1; 32]).collect();
-        for spec in ["float32", "binary", "klevel:k=4", "rotated:k=4", "varlen:k=6", "qsgd:k=8"] {
-            let proto = ProtocolConfig::parse(spec, 32).unwrap().build().unwrap();
+        // Derived from Kind::ALL so a new kind joins automatically (a
+        // kind whose defaults cannot build at small dims would fail here).
+        for kind in Kind::ALL {
+            let cfg = ProtocolConfig::new(kind, 32).with_k(4);
+            let spec = cfg.to_string();
+            let proto = cfg.build().unwrap();
             let ctx = RoundCtx::new(0, 7);
             let (est, bits) = run_round(proto.as_ref(), &ctx, &xs).unwrap();
             assert_eq!(est.len(), 32, "spec={spec}");
             assert!(bits > 0, "spec={spec}");
         }
+    }
+
+    #[test]
+    fn correlated_spec_arguments_validated() {
+        // strata must be a power of two ≥ 2, at parse and at build.
+        assert!(ProtocolConfig::parse("correlated:strata=3", 8).is_err());
+        assert!(ProtocolConfig::parse("correlated:strata=0", 8).is_err());
+        assert!(ProtocolConfig::parse("correlated:base=zip", 8).is_err());
+        // base=rotated mixes coordinates: q<1 must be rejected, span is
+        // pinned to minmax.
+        assert!(ProtocolConfig::parse("correlated:base=rotated,q=0.5", 16)
+            .unwrap()
+            .build()
+            .is_err());
+        assert!(ProtocolConfig::parse("correlated:base=rotated,span=norm", 16)
+            .unwrap()
+            .build()
+            .is_err());
+        assert!(ProtocolConfig::parse("drive:q=0.5", 16).unwrap().build().is_err());
+        // klevel base composes with both sampling wrappers.
+        let proto = ProtocolConfig::parse("correlated:k=4,q=0.5,p=0.5", 16)
+            .unwrap()
+            .build()
+            .unwrap();
+        assert!(proto.name().starts_with("sampled(p=0.5, coordsampled"));
     }
 }

@@ -11,6 +11,8 @@
 //! | [`coordsample`] | coordinate-sampling wrapper    | §5 (remark) |
 //! | [`qsgd`]     | QSGD-style Elias comparator       | ref [2] |
 //! | [`float32`]  | uncompressed f32 baseline         | —    |
+//! | [`drive`]    | DRIVE 1-bit sign + per-client scale | arXiv 2105.08339 |
+//! | [`correlated`] | anti-correlated rounding offsets | arXiv 2203.04925 |
 //!
 //! # Lifecycle: prepare → encode → accumulate → finish
 //!
@@ -78,6 +80,8 @@
 pub mod binary;
 pub mod config;
 pub mod coordsample;
+pub mod correlated;
+pub mod drive;
 pub mod exact;
 pub mod float32;
 pub mod klevel;
@@ -1093,7 +1097,17 @@ mod tests {
     fn session_encoder_matches_oneshot_encode() {
         let d = 60;
         let xs = gaussian_clients(6, d, 3);
-        for spec in ["float32", "binary", "klevel:k=16", "rotated:k=16", "varlen:k=8", "qsgd:k=8"] {
+        for spec in [
+            "float32",
+            "binary",
+            "klevel:k=16",
+            "rotated:k=16",
+            "varlen:k=8",
+            "qsgd:k=8",
+            "drive",
+            "correlated:k=8,strata=8",
+            "correlated:base=rotated,k=8",
+        ] {
             let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
             let ctx = RoundCtx::new(5, 11);
             let state = proto.prepare(&ctx);
@@ -1122,6 +1136,8 @@ mod tests {
             ("klevel:k=16,p=0.5", 64, 64),
             ("varlen:k=8", 48, 3),
             ("qsgd:k=8", 200, 9),
+            ("drive", 90, 6),
+            ("correlated:k=4,strata=8,p=0.5", 40, 12),
             ("float32", 7, 1),
             ("binary", 12, 0),
         ] {
@@ -1210,7 +1226,16 @@ mod tests {
         // on (see the module docs on exact folds).
         let d = 48;
         let xs = gaussian_clients(6, d, 17);
-        for spec in ["float32", "binary", "klevel:k=16", "rotated:k=16", "varlen:k=8", "qsgd:k=8"] {
+        for spec in [
+            "float32",
+            "binary",
+            "klevel:k=16",
+            "rotated:k=16",
+            "varlen:k=8",
+            "qsgd:k=8",
+            "drive",
+            "correlated:k=8,strata=8",
+        ] {
             let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
             let ctx = RoundCtx::new(3, 29);
             let state = proto.prepare(&ctx);
@@ -1277,7 +1302,7 @@ mod tests {
         let d = 32;
         let xs = gaussian_clients(5, d, 23);
         let ws = [1.0f32, 3.0, 0.5, 2.0, 1.0];
-        for spec in ["float32", "klevel:k=64", "rotated:k=64"] {
+        for spec in ["float32", "klevel:k=64", "rotated:k=64", "drive", "correlated:k=64"] {
             let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
             let ctx = RoundCtx::new(1, 7);
             let state = proto.prepare(&ctx);
@@ -1306,7 +1331,7 @@ mod tests {
     fn slot_partial_wire_roundtrip_is_exact() {
         let d = 40;
         let xs = gaussian_clients(4, d, 31);
-        for spec in ["float32", "rotated:k=16", "varlen:k=8"] {
+        for spec in ["float32", "rotated:k=16", "varlen:k=8", "drive", "correlated:k=16"] {
             let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
             let ctx = RoundCtx::new(2, 13);
             let state = proto.prepare(&ctx);

@@ -41,6 +41,10 @@
 //! | bits `d⌈log₂k⌉ + 64` | π_sk | Lemma 5 |
 //! | bits `d(2 + log₂((k−1)²/2d + 1.25)) + k-hist + 64` | π_svk | Theorem 4's entropy-coded rate: O(1) bits/dim at k = √d |
 //! | MSE `E/p + (1−p)/(np)·B̄` | π_p sampling wrapper | Lemma 8 (bits scale by p) |
+//! | MSE `(π/2 − 1)(1 + 8/√d̃)·B̄` | drive (padded dim d̃) | DRIVE Thm 5.4 (arXiv 2105.08339): constant NMSE at 1 bit/dim; n-free because clients share one rotation |
+//! | bits `d̃ + 32` | drive | one sign bit per padded coordinate + a single scale header |
+//! | MSE = base family's bound | correlated (over klevel or rotated) | arXiv 2203.04925: anti-correlated offsets are marginally uniform with non-positive pairwise covariance — never worse than the independent twin; the measured gain surfaces through `Calibration` |
+//! | bits = base family's frame | correlated | shared offsets cost zero wire bits |
 //!
 //! `B̄` is the clients' average squared norm. The coordinate-sampling
 //! wrapper mirrors Lemma 8 coordinate-wise, and the QSGD comparator uses

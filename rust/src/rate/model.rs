@@ -19,6 +19,7 @@ use anyhow::{ensure, Result};
 use crate::coding::histogram;
 use crate::data::synthetic;
 use crate::protocol::config::{Kind, ProtocolConfig};
+use crate::protocol::correlated::CorrBase;
 use crate::protocol::varlen::Coder;
 use crate::protocol::{run_round_with_scratch, EncodeScratch, Frame, RoundCtx};
 use crate::stats;
@@ -43,8 +44,11 @@ fn h2(q: f64) -> f64 {
 ///
 /// Exact for the fixed-width protocols (Lemma 1: π_sb = d + 64; Lemma 5:
 /// π_sk = d⌈log₂k⌉ + 64; π_srk pays the padded dimension; float32 =
-/// 32d). π_svk uses Theorem 4's entropy-coded rate plus the histogram
-/// side information; QSGD uses a Gaussian-heuristic Elias-γ length.
+/// 32d; DRIVE = d̃ + 32 — one sign bit per padded coordinate plus a
+/// single scale header; correlated pays exactly its base quantizer's
+/// frame, offsets cost zero wire bits). π_svk uses Theorem 4's
+/// entropy-coded rate plus the histogram side information; QSGD uses a
+/// Gaussian-heuristic Elias-γ length.
 /// Client sampling (π_p) scales the expectation by p; coordinate
 /// sampling changes nothing for fixed-width frames (the encoder still
 /// transmits every coordinate of the zeroed vector) and shrinks only
@@ -61,6 +65,22 @@ pub fn predicted_uplink_bits(cfg: &ProtocolConfig) -> f64 {
         Kind::Rotated => {
             let padded = cfg.dim.next_power_of_two() as f64;
             padded * bits_per_coord(k) + header
+        }
+        Kind::Drive => {
+            // One sign bit per padded coordinate + a single 32-bit scale
+            // (half the header of the k-level frames: no xmin scalar).
+            let padded = cfg.dim.next_power_of_two() as f64;
+            padded + 32.0
+        }
+        Kind::Correlated => {
+            // The correlated offsets change *where* coordinates round,
+            // not how many bits the frame carries: the cost is exactly
+            // the base quantizer's fixed-width frame.
+            let idim = match cfg.base {
+                CorrBase::KLevel => d,
+                CorrBase::Rotated => cfg.dim.next_power_of_two() as f64,
+            };
+            idim * bits_per_coord(k) + header
         }
         Kind::Varlen => {
             // Entropy-coded rate per coordinate, 2 + log₂(ρ² + 1.25)
@@ -120,6 +140,29 @@ pub fn predicted_mse(cfg: &ProtocolConfig, n: usize, avg_norm_sq: f64) -> f64 {
         Kind::Rotated => {
             let padded = cfg.dim.next_power_of_two() as f64;
             (2.0 * padded.ln() + 2.0) / (nf * km1 * km1) * avg_norm_sq
+        }
+        Kind::Drive => {
+            // DRIVE Thm 5.4 regime with the finite-d Hadamard slack —
+            // intentionally n-free (clients share one rotation, so the
+            // worst case gets no 1/n averaging); must stay byte-identical
+            // to `DriveProtocol::mse_bound`.
+            let padded = cfg.dim.next_power_of_two() as f64;
+            (std::f64::consts::FRAC_PI_2 - 1.0) * (1.0 + 8.0 / padded.sqrt()) * avg_norm_sq
+        }
+        Kind::Correlated => {
+            // Honest base-family worst case: anti-correlated offsets are
+            // marginally uniform with non-positive pairwise covariance,
+            // so the family is never *worse* than its independent twin —
+            // the measured gain surfaces through `Calibration`, not the
+            // bound. Must stay byte-identical to
+            // `CorrelatedProtocol::mse_bound`.
+            match cfg.base {
+                CorrBase::KLevel => d / (2.0 * nf * km1 * km1) * avg_norm_sq,
+                CorrBase::Rotated => {
+                    let padded = cfg.dim.next_power_of_two() as f64;
+                    (2.0 * padded.ln() + 2.0) / (nf * km1 * km1) * avg_norm_sq
+                }
+            }
         }
         Kind::Qsgd => d / (4.0 * nf * km1 * km1) * avg_norm_sq,
     };
@@ -350,6 +393,11 @@ mod tests {
             ("klevel:k=17", 100),
             ("rotated:k=16", 100), // pads to 128
             ("rotated:k=4", 256),
+            ("drive", 100), // pads to 128: 128 + 32 bits
+            ("drive", 256),
+            ("correlated:k=4", 64),
+            ("correlated:k=16,strata=8", 100),
+            ("correlated:base=rotated,k=16", 100), // pads to 128
         ] {
             let cfg = ProtocolConfig::parse(spec, d).unwrap();
             let proto = cfg.build().unwrap();

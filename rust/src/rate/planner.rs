@@ -7,6 +7,7 @@ use anyhow::{ensure, Result};
 
 use super::model::{self, Calibration};
 use crate::protocol::config::{Kind, ProtocolConfig};
+use crate::protocol::correlated::CorrBase;
 use crate::protocol::quantizer::Span;
 use crate::protocol::varlen::Coder;
 
@@ -95,9 +96,22 @@ fn candidate_grid(dim: usize) -> Vec<ProtocolConfig> {
         };
         out.push(base(Kind::Float32));
         out.push(base(Kind::Binary));
+        // DRIVE has no k knob: one sign bit per padded coordinate. Its
+        // p-ladder populates the extreme sub-bit-per-dim regime nothing
+        // else reaches with constant (rather than Θ(d/n)) NMSE.
+        out.push(base(Kind::Drive));
         for &k in &ks {
             out.push(base(Kind::Rotated).with_k(k));
             out.push(base(Kind::Qsgd).with_k(k));
+            // Correlated quantization over both base quantizers, at the
+            // default stratification: same frame cost as the base, never
+            // worse MSE (calibration reveals the measured gain).
+            out.push(base(Kind::Correlated).with_k(k));
+            out.push({
+                let mut c = base(Kind::Correlated).with_k(k);
+                c.base = CorrBase::Rotated;
+                c
+            });
             for q in Q_GRID {
                 let mut c = base(Kind::KLevel).with_k(k);
                 c.q = q;
@@ -432,6 +446,37 @@ mod tests {
         // float32 wins any budget that fits it (MSE 0), and needs 32/dim.
         let rich = Plan::solve(33.0 * 1024.0, 1024, 64, Objective::MinMse).unwrap();
         assert_eq!(rich.chosen_spec().unwrap().cfg.kind, Kind::Float32);
+    }
+
+    #[test]
+    fn one_bit_per_dim_budget_reaches_the_drive_family() {
+        // At 1 bit/dim no full-participation frame fits: π_sb needs
+        // d + 64, every k-level family d⌈log₂k⌉ + 64, DRIVE itself
+        // d̃ + 32. The pre-frontier grid could only offer Lemma-8-sampled
+        // variants, whose (1−p)/(np) penalty dwarfs a small cohort —
+        // DRIVE's constant-NMSE point at p = 0.75 is the analytic winner
+        // there (closed forms, fully deterministic).
+        let d = 1024usize;
+        let plan = Plan::solve(d as f64, d, 2, Objective::MinMse).unwrap();
+        let chosen = plan.chosen_spec().expect("1 bit/dim must be feasible");
+        assert_eq!(chosen.cfg.kind, Kind::Drive, "expected drive, got {}", chosen.spec);
+        // The correlated family is enumerated right alongside it.
+        let has_corr = |b: CorrBase| {
+            plan.candidates.iter().any(|c| c.cfg.kind == Kind::Correlated && c.cfg.base == b)
+        };
+        assert!(has_corr(CorrBase::Rotated));
+        assert!(has_corr(CorrBase::KLevel));
+        // At large n aggressive sampling may out-predict the worst-case
+        // n-free DRIVE bound, but DRIVE stays the only family whose
+        // full-participation point fits just above 1 bit/dim.
+        let plan64 = Plan::solve(1.05 * d as f64, d, 64, Objective::MinMse).unwrap();
+        let best_drive = plan64.best_in_kind(Kind::Drive).expect("drive must fit 1.05 bits/dim");
+        assert_eq!(best_drive.cfg.p, 1.0, "full participation fits: {}", best_drive.spec);
+        for kind in [Kind::Binary, Kind::KLevel, Kind::Rotated, Kind::Correlated] {
+            if let Some(best) = plan64.best_in_kind(kind) {
+                assert!(best.cfg.p < 1.0, "{kind:?} full frames cannot fit 1.05 bits/dim");
+            }
+        }
     }
 
     #[test]

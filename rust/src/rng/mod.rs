@@ -22,6 +22,12 @@ pub use pcg::Pcg64;
 pub const PUBLIC_TAG: u64 = 0x9e37_79b9_7f4a_7c15;
 /// Domain tag for private (per-client) randomness streams.
 pub const PRIVATE_TAG: u64 = 0xbf58_476d_1ce4_e5b9;
+/// Domain tag for the correlated-quantization offset stream: shared
+/// randomness that all clients of a round derive identically (from the
+/// `shared_seed` the wire's `RoundStart` carries) and then *partition*
+/// among themselves, so their stochastic-rounding offsets are
+/// anti-correlated rather than independent (arXiv 2203.04925).
+pub const CORRELATED_TAG: u64 = 0x94d0_49bb_1331_11eb;
 
 /// SplitMix64 step: the standard 64-bit finalizer used both as a tiny PRNG
 /// and as the mixing function for key derivation.
@@ -73,6 +79,17 @@ pub fn public_stream(seed: u64, round: u64) -> Pcg64 {
 /// the server never observes it (it only sees the transmitted bits).
 pub fn private_stream(seed: u64, round: u64, client: u64) -> Pcg64 {
     Pcg64::new(mix(&[seed, PRIVATE_TAG, round, client]))
+}
+
+/// The round's shared correlated-offset stream: every client derives it
+/// identically from the `shared_seed` carried in `RoundStart`, then takes
+/// its own stratum of the partition (see
+/// [`crate::protocol::correlated`]). Deliberately *not* routed through
+/// [`public_stream`]: it must not perturb the public draw counter the
+/// rotation-sampled-exactly-once tests observe, and the server never
+/// needs it (decode only sees the transmitted bins).
+pub fn correlated_stream(seed: u64, round: u64) -> Pcg64 {
+    Pcg64::new(mix(&[seed, CORRELATED_TAG, round]))
 }
 
 /// Bits of a combined stream id reserved for the client id (the low
@@ -137,6 +154,24 @@ mod tests {
         let mut p1 = private_stream(7, 3, 0);
         let mut p2 = private_stream(7, 3, 1);
         assert_ne!(p1.next_u64(), p2.next_u64());
+    }
+
+    #[test]
+    fn correlated_stream_is_shared_and_does_not_count_as_public_draw() {
+        let before = public_stream_draws();
+        let mut a = correlated_stream(7, 3);
+        let mut b = correlated_stream(7, 3);
+        assert_eq!(public_stream_draws(), before, "must not perturb the public draw counter");
+        assert_eq!(a.next_u64(), b.next_u64());
+        // Domain-separated from the public and private streams of the
+        // same (seed, round), and round-scoped.
+        let mut p = public_stream(7, 3);
+        let mut q = private_stream(7, 3, 0);
+        let mut c = correlated_stream(7, 4);
+        let x = correlated_stream(7, 3).next_u64();
+        assert_ne!(x, p.next_u64());
+        assert_ne!(x, q.next_u64());
+        assert_ne!(x, c.next_u64());
     }
 
     #[test]

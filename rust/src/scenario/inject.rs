@@ -56,7 +56,7 @@ pub fn spawn_fault_swarm(
     Swarm::spawn_actions(addr, n, 1, move |slot, env: &Envelope| {
         let worker = &mut workers[slot];
         match &env.msg {
-            Message::RoundStart { round, dim, payload } => {
+            Message::RoundStart { round, shared_seed, dim, payload } => {
                 let verdict = faults.decide(*round, worker.client_id);
                 if verdict == FaultAction::Drop {
                     return SwarmAction::Silent;
@@ -69,7 +69,9 @@ pub fn spawn_fault_swarm(
                     // whole cohort behind this swarm straggles.
                     std::thread::sleep(delay);
                 }
-                match worker.step_for(env.session, *round, *dim, payload, &mut scratch) {
+                match worker
+                    .step_seeded(env.session, *round, *shared_seed, *dim, payload, &mut scratch)
+                {
                     Ok(reply) => SwarmAction::Reply(Envelope { session: env.session, msg: reply }),
                     // An encode failure is a scenario bug; hanging up
                     // surfaces it at the parent instead of deadlocking.

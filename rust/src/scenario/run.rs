@@ -457,6 +457,33 @@ pub fn builtin_matrix(seed: u64) -> Result<Vec<ScenarioSpec>> {
             faults: "drop=0.25",
             data: "clustered",
         },
+        // Frontier families under churn: DRIVE's shared rotation and the
+        // correlated offset stream must survive partial rounds (dropped
+        // clients leave their shared offsets unused, never mis-applied).
+        Row {
+            name: "churn-drive-flat-threads",
+            protocol: "drive",
+            n_clients: 16,
+            fanout: 0,
+            rounds: 3,
+            timeout_ms: 200,
+            transport: Transport::Threads,
+            decode_threads: 1,
+            faults: "drop=0.2",
+            data: "iid",
+        },
+        Row {
+            name: "correlated-churn-depth2-reactor",
+            protocol: "correlated:k=8",
+            n_clients: 24,
+            fanout: 3,
+            rounds: 3,
+            timeout_ms: 200,
+            transport: Transport::Reactor,
+            decode_threads: 2,
+            faults: "drop=0.2",
+            data: "iid",
+        },
     ];
     rows.iter()
         .map(|r| {

@@ -133,12 +133,13 @@ fn spawn_survivor_swarm(
         .collect();
     let mut scratch = EncodeScratch::default();
     Swarm::spawn_actions(addr, n, 1, move |slot, env: &Envelope| match &env.msg {
-        Message::RoundStart { round, dim, payload } => {
+        Message::RoundStart { round, shared_seed, dim, payload } => {
             let worker = &mut workers[slot];
             if !survivors.contains(&worker.client_id) {
                 return SwarmAction::Silent;
             }
-            match worker.step_for(env.session, *round, *dim, payload, &mut scratch) {
+            match worker.step_seeded(env.session, *round, *shared_seed, *dim, payload, &mut scratch)
+            {
                 Ok(reply) => SwarmAction::Reply(Envelope { session: env.session, msg: reply }),
                 Err(_) => SwarmAction::Hangup,
             }
@@ -270,6 +271,37 @@ fn partial_round_matches_lemma8_sampled_reference() {
             assert_eq!(tree.means, want.means, "depth2/{transport}/t={dt}: != Lemma 8 ref");
             assert_eq!(p_tree, p_hat, "depth2/{transport}: participation != |S|/n");
         }
+    }
+}
+
+#[test]
+fn partial_round_correlated_offsets_stay_unbiased_under_churn() {
+    // The frontier families under churn. For correlated quantization the
+    // claim is that dropped clients' *unused* shared rounding offsets
+    // cannot bias (or even perturb) the partial estimator — and
+    // bit-equality with the Lemma 8 sampled reference is the strongest
+    // form of it: the surviving ranks draw exactly the offsets a
+    // fresh sampled run at p̂ = |S|/n would give them, no matter which
+    // ranks went silent, and the estimator stays the (unbiased)
+    // sampled mean. DRIVE rides along: its round-shared rotation must
+    // survive churn the same way.
+    for spec in ["correlated:k=8", "correlated:base=rotated,k=8", "drive"] {
+        let seed = 2025;
+        let inner = ProtocolConfig::parse(spec, DIM).unwrap().build().unwrap();
+        let xs = population(seed);
+        let (round, s, survivors) = survivor_fixed_point(&inner, seed, &xs);
+        let p_hat = s as f64 / N as f64;
+        let want = sampled_reference(inner.clone(), seed, round, p_hat, &xs);
+        assert_eq!(want.n_frames, s, "{spec}: reference must transmit the fixed-point set");
+        let (flat, p_flat) =
+            run_flat_partial(Transport::Threads, 2, &inner, seed, round, &xs, &survivors);
+        assert_eq!(flat.means, want.means, "{spec} flat: != Lemma 8 reference");
+        assert_eq!(flat.n_frames, s, "{spec} flat: wrong survivor count");
+        assert_eq!(p_flat, p_hat, "{spec} flat: participation != |S|/n");
+        let (tree, p_tree) =
+            run_depth2_partial(Transport::Threads, 2, &inner, seed, round, &xs, &survivors);
+        assert_eq!(tree.means, want.means, "{spec} depth2: != Lemma 8 reference");
+        assert_eq!(p_tree, p_hat, "{spec} depth2: participation != |S|/n");
     }
 }
 

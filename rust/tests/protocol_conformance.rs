@@ -18,6 +18,12 @@ const SPECS: &[&str] = &[
     "varlen:k=17",
     "varlen:k=17,coder=huffman",
     "qsgd:k=8",
+    "drive",
+    "drive:p=0.5",
+    "correlated:k=4",
+    "correlated:k=16,strata=8",
+    "correlated:base=rotated,k=16",
+    "correlated:k=4,p=0.5",
     "klevel:k=8,q=0.5",
     "klevel:k=16,p=0.5",
     "varlen:k=17,p=0.25",
@@ -189,7 +195,7 @@ fn rotation_sampled_exactly_once_per_round() {
     // the calling thread, so concurrent tests don't interfere.
     let d = 96;
     let xs = clients(32, d, 9);
-    for spec in ["rotated:k=2", "rotated:k=16"] {
+    for spec in ["rotated:k=2", "rotated:k=16", "drive", "correlated:base=rotated,k=16"] {
         let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
         let ctx = RoundCtx::new(1, 13);
         let before = dme::rng::public_stream_draws();
@@ -207,11 +213,15 @@ fn rotation_sampled_exactly_once_per_round() {
             "spec={spec}: parallel round should sample the rotation once"
         );
     }
-    // Protocols without shared randomness draw none at all.
-    let proto = ProtocolConfig::parse("klevel:k=16", d).unwrap().build().unwrap();
-    let before = dme::rng::public_stream_draws();
-    run_round(proto.as_ref(), &RoundCtx::new(0, 5), &xs).unwrap();
-    assert_eq!(dme::rng::public_stream_draws() - before, 0);
+    // Protocols without a shared rotation draw none at all — including
+    // correlated-over-klevel, whose shared offsets come from the
+    // dedicated correlated stream, not the public rotation stream.
+    for spec in ["klevel:k=16", "correlated:k=16"] {
+        let proto = ProtocolConfig::parse(spec, d).unwrap().build().unwrap();
+        let before = dme::rng::public_stream_draws();
+        run_round(proto.as_ref(), &RoundCtx::new(0, 5), &xs).unwrap();
+        assert_eq!(dme::rng::public_stream_draws() - before, 0, "spec={spec}");
+    }
 }
 
 #[test]

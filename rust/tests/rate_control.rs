@@ -48,13 +48,18 @@ fn drive(leader: &mut Leader, lo: u64, hi: u64, dim: usize) -> Vec<Vec<Vec<u32>>
 }
 
 /// The spec pairs every topology is checked over: fixed-width →
-/// rotated, entropy-coded → fixed-width, and a switch *into* a sampled
+/// rotated, entropy-coded → fixed-width, a switch *into* a sampled
 /// wrapper (private sampling streams must come up exactly as a fresh
-/// session's would).
-const SWITCHES: [(&str, &str); 3] = [
+/// session's would), and switches into/out of each frontier family
+/// (the round-scoped correlated offset stream and DRIVE's rotation
+/// must come up exactly as a fresh session's would, too).
+const SWITCHES: [(&str, &str); 6] = [
     ("klevel:k=16", "rotated:k=8"),
     ("varlen:k=8", "binary"),
     ("rotated:k=4", "klevel:k=4,p=0.5"),
+    ("klevel:k=16", "drive"),
+    ("rotated:k=8", "correlated:base=rotated,k=16"),
+    ("drive", "correlated:k=4"),
 ];
 
 #[test]

@@ -90,6 +90,9 @@ const SPECS: &[&str] = &[
     "varlen:k=17",
     "varlen:k=17,coder=huffman",
     "qsgd:k=8",
+    "drive",
+    "correlated:k=16",
+    "correlated:base=rotated,k=16",
     "klevel:k=8,q=0.5",
     "klevel:k=16,p=0.5",
 ];

@@ -59,7 +59,7 @@ fn framed(msg: &Message) -> Vec<u8> {
 fn all_tags() -> Vec<Message> {
     let slot = SlotPartial::from_decoded(&[1.0, -2.0, 0.5], 1.0, 1).unwrap();
     vec![
-        Message::RoundStart { round: 3, dim: 8, payload: vec![0.5f32; 8].into() },
+        Message::RoundStart { round: 3, shared_seed: 17, dim: 8, payload: vec![0.5f32; 8].into() },
         upload(1, 3),
         Message::Shutdown,
         Message::PartialUpload {
@@ -127,7 +127,12 @@ fn envelope_sessions_round_trip_for_every_tag_on_every_transport() {
                 );
             }
         }
-        let down = Message::RoundStart { round: 9, dim: 4, payload: vec![1.0f32; 4].into() };
+        let down = Message::RoundStart {
+            round: 9,
+            shared_seed: 17,
+            dim: 4,
+            payload: vec![1.0f32; 4].into(),
+        };
         hub.broadcast_session(7, &down).unwrap();
         let (s, bytes) = client.join().unwrap();
         assert_eq!(s, 7, "{transport}: session mangled downstream");
@@ -208,6 +213,44 @@ fn bad_magic_and_future_version_are_typed_rejections_on_every_transport() {
             }
             drop(client.join().unwrap());
         }
+    }
+}
+
+#[test]
+fn round_start_shared_seed_survives_the_wire_and_rejects_stale_peers() {
+    // The shared-randomness handshake rides tag 1: the seed must come
+    // back verbatim; a forged byte inside the seed field lands *in the
+    // seed* (it cannot shift the fields after it); and a v1 peer — whose
+    // tag-1 layout has no seed at all — is a typed version rejection,
+    // never a misparse of the seed bytes as the float count.
+    let seed = 0x0102_0304_0506_0708u64;
+    let m = Message::RoundStart {
+        round: 3,
+        shared_seed: seed,
+        dim: 8,
+        payload: vec![0.5f32; 8].into(),
+    };
+    let bytes = m.to_bytes().unwrap();
+    match Message::from_bytes(&bytes).unwrap() {
+        Message::RoundStart { shared_seed, .. } => assert_eq!(shared_seed, seed),
+        other => panic!("expected RoundStart, got {other:?}"),
+    }
+    // The seed field sits after the envelope header (6) and round (8).
+    let mut forged = bytes.clone();
+    forged[6 + 8] ^= 0xff;
+    match Message::from_bytes(&forged).unwrap() {
+        Message::RoundStart { round, shared_seed, dim, payload } => {
+            assert_eq!((round, dim), (3, 8));
+            assert_eq!(&payload[..], &[0.5f32; 8]);
+            assert_ne!(shared_seed, seed, "forgery must land in the seed field");
+        }
+        other => panic!("expected RoundStart, got {other:?}"),
+    }
+    let mut stale = bytes;
+    stale[2] = 1;
+    match Envelope::from_bytes(&stale).unwrap_err().downcast_ref::<WireError>() {
+        Some(WireError::UnknownVersion(v)) => assert_eq!(*v, 1),
+        other => panic!("expected UnknownVersion for the v1 layout, got {other:?}"),
     }
 }
 
@@ -361,8 +404,13 @@ fn reactor_sustains_n_2048_round_with_flat_thread_count() {
     })
     .unwrap();
     let mut hub = binding.accept(n).unwrap();
-    hub.broadcast(&Message::RoundStart { round: 0, dim: 8, payload: vec![0.5f32; 8].into() })
-        .unwrap();
+    hub.broadcast(&Message::RoundStart {
+        round: 0,
+        shared_seed: 17,
+        dim: 8,
+        payload: vec![0.5f32; 8].into(),
+    })
+    .unwrap();
     let mut seen = vec![false; n];
     for _ in 0..n {
         match hub.recv().unwrap() {

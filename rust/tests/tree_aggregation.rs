@@ -35,8 +35,9 @@ use dme::protocol::{Protocol, RoundCtx, RoundState, SlotPartial};
 use dme::rng::Pcg64;
 use dme::testkit::{check, run_prop};
 
-/// The eight protocol families of the paper's table (§2–§5 + baselines):
-/// fixed-width, rotated, entropy-coded, comparator, and both sampling
+/// The protocol families of the paper's table (§2–§5 + baselines) plus
+/// the frontier families: fixed-width, rotated, entropy-coded,
+/// comparator, DRIVE, correlated quantization, and both sampling
 /// wrappers.
 const SPECS: &[&str] = &[
     "float32",
@@ -45,6 +46,9 @@ const SPECS: &[&str] = &[
     "rotated:k=16",
     "varlen:k=17",
     "qsgd:k=8",
+    "drive",
+    "correlated:k=16",
+    "correlated:base=rotated,k=16",
     "klevel:k=16,p=0.5",
     "klevel:k=8,q=0.5",
 ];
